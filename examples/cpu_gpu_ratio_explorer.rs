@@ -1,0 +1,93 @@
+//! Design-space exploration over the paper's *CPU/GPU ratio* metric
+//! (Conclusion 3): sweep CPU hardware threads x GPU SMs on the
+//! calibrated system model and report throughput, utilization, and
+//! energy-per-step for each design point — including the DGX-1 (1/16)
+//! and DGX-A100 (1/4) corners the paper calls out.
+//!
+//!     cargo run --release --example cpu_gpu_ratio_explorer
+
+use rlarch::cli::Cli;
+use rlarch::report::figure::Table;
+use rlarch::simarch::{default_system, TraceSet};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new(
+        "cpu_gpu_ratio_explorer",
+        "sweep CPU threads x GPU SMs over the CPU/GPU-ratio design space",
+    )
+    .flag("threads", "10,20,40,80,160", "CPU hardware-thread counts")
+    .flag("sms", "20,40,80,160", "GPU SM counts")
+    .flag("actors-per-thread", "4", "actor oversubscription factor")
+    .flag("artifacts", "artifacts", "artifact directory");
+    let parsed = cli.parse_env().map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let ts = TraceSet::load(Path::new(parsed.get("artifacts")))?;
+    let base = default_system(
+        ts.find("infer_paper_scale").expect("run `make artifacts`").clone(),
+        ts.find("train_paper_scale").expect("train trace").clone(),
+    );
+    let threads = parsed.get_usize_list("threads")?;
+    let sms = parsed.get_usize_list("sms")?;
+    let ovs = parsed.get_usize("actors-per-thread")?;
+
+    let mut t = Table::new(&[
+        "threads", "SMs", "CPU/GPU", "env steps/s", "GPU util", "power W",
+        "energy mJ/step",
+    ]);
+    let mut best: Option<(f64, String)> = None;
+    for &th in &threads {
+        for &sm in &sms {
+            let m = base.with_threads(th).with_sms(sm);
+            let p = m.steady_state(th * ovs);
+            let energy_mj = p.power_w / p.env_rate * 1e3;
+            let ratio = th as f64 / sm as f64;
+            t.row(&[
+                th.to_string(),
+                sm.to_string(),
+                format!("{ratio:.3}"),
+                format!("{:.0}", p.env_rate),
+                format!("{:.2}", p.gpu_util),
+                format!("{:.0}", p.power_w),
+                format!("{energy_mj:.3}"),
+            ]);
+            let score = p.env_rate / p.power_w;
+            if best.as_ref().map(|(s, _)| score > *s).unwrap_or(true) {
+                best = Some((score, format!("{th} threads / {sm} SMs (ratio {ratio:.2})")));
+            }
+        }
+    }
+    println!("{}", t.to_markdown());
+
+    // The named systems from the paper's Conclusion 3.
+    let mut named = Table::new(&["system", "threads", "SMs", "ratio", "env steps/s",
+                                 "energy mJ/step"]);
+    for (name, th, sm) in [
+        ("DGX-1 (8xV100)", 40usize, 640usize),
+        ("DGX-A100", 256, 864),
+        ("ratio-1 design", 80, 80),
+        ("paper recommendation (>=1)", 160, 80),
+    ] {
+        let m = base.with_threads(th).with_sms(sm);
+        let p = m.steady_state(th * ovs);
+        named.row(&[
+            name.into(),
+            th.to_string(),
+            sm.to_string(),
+            format!("{:.3}", th as f64 / sm as f64),
+            format!("{:.0}", p.env_rate),
+            format!("{:.3}", p.power_w / p.env_rate * 1e3),
+        ]);
+    }
+    println!("{}", named.to_markdown());
+    if let Some((_, b)) = best {
+        println!("best perf/W in sweep: {b}");
+    }
+    println!(
+        "paper Conclusion 3: CPU/GPU ratio should be >= 1 — DGX-1 is 1/16 \
+         (16x short), DGX-A100 1/4 (4x short)."
+    );
+    let path = rlarch::report::write_csv("cpu_gpu_ratio_explorer", &t.to_csv());
+    println!("csv: {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Power/efficiency profile (the Fig. 3 right-axis story): sweep actor
+//! counts on the calibrated system model and report GPU power,
+//! perf-per-Watt, and energy to generate a fixed frame budget —
+//! demonstrating the paper's observation that perf/W keeps improving
+//! with actor count because idle GPU power (~70 W) dominates at low
+//! utilization.
+
+use rlarch::cli::Cli;
+use rlarch::report::figure::{ascii_bar, Table};
+use rlarch::simarch::{default_system, TraceSet};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new("power_profile", "GPU power & efficiency vs actor count")
+        .flag("actors", "4,8,16,32,40,64,128,256", "actor counts")
+        .flag("frames", "10000000", "frame budget for the energy column")
+        .flag("artifacts", "artifacts", "artifact directory");
+    let parsed = cli.parse_env().map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let ts = TraceSet::load(Path::new(parsed.get("artifacts")))?;
+    let m = default_system(
+        ts.find("infer_paper_scale").expect("run `make artifacts`").clone(),
+        ts.find("train_paper_scale").expect("train trace").clone(),
+    );
+    let actors = parsed.get_usize_list("actors")?;
+    let frames = parsed.get_u64("frames")?;
+
+    let mut t = Table::new(&[
+        "actors", "GPU util", "power W", "perf/W", "", "energy kJ / 10M frames",
+    ]);
+    for &n in &actors {
+        let p = m.steady_state(n);
+        let seconds = frames as f64 / p.env_rate;
+        let energy_kj = p.power_w * seconds / 1e3;
+        t.row(&[
+            n.to_string(),
+            format!("{:.2}", p.gpu_util),
+            format!("{:.0}", p.power_w),
+            format!("{:.1}", p.perf_per_watt),
+            ascii_bar(p.perf_per_watt / 600.0, 20),
+            format!("{energy_kj:.1}"),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    println!(
+        "idle floor {:.0} W; TDP {:.0} W. Energy per task falls monotonically \
+         with actor count — the paper's power-efficiency conclusion.",
+        m.power.cfg.idle_w, m.power.cfg.max_w
+    );
+    let path = rlarch::report::write_csv("power_profile", &t.to_csv());
+    println!("csv: {}", path.display());
+    Ok(())
+}

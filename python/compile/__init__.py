@@ -1,0 +1,6 @@
+"""rlarch build-time Python package (L1 Pallas kernels + L2 JAX model).
+
+Nothing in this package runs on the request path: `aot.py` lowers
+everything to HLO text once (`make artifacts`), and the Rust coordinator
+executes the artifacts through PJRT.
+"""

@@ -1,0 +1,424 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts + manifest + kernel trace.
+
+Run once by `make artifacts`; the Rust binary is self-contained afterwards.
+
+Interchange format is HLO TEXT, not serialized HloModuleProto: the image's
+xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction ids), but
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md. Lowering path:
+
+    jax.jit(fn).lower(*specs)
+      -> compiler_ir("stablehlo")
+      -> xla_client mlir_module_to_xla_computation (return_tuple=True)
+      -> .as_hlo_text()
+
+Artifacts written to --out-dir (default ../artifacts):
+  infer_b{B}.hlo.txt        central-inference forward, B in --infer-batches
+  train.hlo.txt             R2D2 learner step (loss + Adam, donated state)
+  vtrace_train.hlo.txt      IMPALA baseline learner step
+  init_params.npz           initial parameter/optimizer literals (seeded)
+  kernel_trace.json         per-kernel FLOPs/bytes for rlarch::simarch
+  manifest.json             parameter ABI + artifact I/O signatures
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import hlo_cost, loss, model, nn, optim
+
+DEFAULT_SEED = 20200831  # EMC^2 2020 workshop date.
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec_of(x) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+TENSOR_BUNDLE_MAGIC = b"RLTENSORBUNDLE1\n"
+
+
+def write_tensor_bundle(path: str, named: "list[tuple[str, np.ndarray]]"):
+    """Self-describing tensor container the Rust runtime can read without
+    numpy: magic, u64-LE header length, JSON header
+    [{name, shape, dtype, offset, nbytes}], raw little-endian payload."""
+    header = []
+    payload = bytearray()
+    for name, arr in named:
+        arr = np.ascontiguousarray(arr)
+        raw = arr.tobytes()
+        header.append({
+            "name": name,
+            "shape": list(arr.shape),
+            "dtype": arr.dtype.name,
+            "offset": len(payload),
+            "nbytes": len(raw),
+        })
+        payload.extend(raw)
+    hjson = json.dumps(header).encode()
+    with open(path, "wb") as f:
+        f.write(TENSOR_BUNDLE_MAGIC)
+        f.write(len(hjson).to_bytes(8, "little"))
+        f.write(hjson)
+        f.write(bytes(payload))
+
+
+def _sig(tree) -> list:
+    """JSON signature ([{name, shape, dtype}]) of a flat arg list."""
+    out = []
+    for i, leaf in enumerate(jax.tree_util.tree_leaves(tree)):
+        out.append({"index": i, "shape": list(leaf.shape),
+                    "dtype": str(leaf.dtype)})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Artifact builders — each returns (fn_flat, example_flat_args, meta)
+# ---------------------------------------------------------------------------
+
+def build_inference(params, agent_cfg: model.AgentConfig, batch: int,
+                    static_unroll_trace: bool = False):
+    """Central-inference graph over a [B, S, S, C] observation batch."""
+    _, treedef = jax.tree_util.tree_flatten(params)
+    n_params = treedef.num_leaves
+
+    def fn(*flat):
+        p = jax.tree_util.tree_unflatten(treedef, flat[:n_params])
+        h, c, obs = flat[n_params:]
+        q, h2, c2 = model.apply_inference(p, h, c, obs, agent_cfg)
+        return q, h2, c2
+
+    h0, c0 = model.initial_state(batch, agent_cfg)
+    obs = jnp.zeros((batch,) + agent_cfg.obs_shape, jnp.float32)
+    flat_args = jax.tree_util.tree_leaves(params) + [h0, c0, obs]
+    return fn, flat_args
+
+
+def build_train(params, opt_state, agent_cfg: model.AgentConfig,
+                cfg: loss.R2d2Config, batch: int, trace_unroll: bool = False):
+    """R2D2 learner step. Flat ABI:
+
+      inputs:  [params..., target_params..., opt_step, opt_m..., opt_v...,
+                obs, actions, rewards, discounts, h0, c0]
+      outputs: (params'..., opt_step', opt_m'..., opt_v'..., loss,
+                priorities, grad_norm)
+    """
+    _, p_def = jax.tree_util.tree_flatten(params)
+    n_p = p_def.num_leaves
+    _, o_def = jax.tree_util.tree_flatten(opt_state)
+    n_o = o_def.num_leaves
+
+    unroll_fn = model.unroll_static if trace_unroll else model.unroll
+
+    def fn(*flat):
+        p = jax.tree_util.tree_unflatten(p_def, flat[:n_p])
+        tp = jax.tree_util.tree_unflatten(p_def, flat[n_p: 2 * n_p])
+        opt = jax.tree_util.tree_unflatten(o_def,
+                                           flat[2 * n_p: 2 * n_p + n_o])
+        obs, actions, rewards, discounts, h0, c0 = flat[2 * n_p + n_o:]
+        orig_unroll = model.unroll
+        model.unroll = unroll_fn
+        try:
+            new_p, new_opt, l, prio, gnorm = loss.r2d2_train_step(
+                p, tp, opt, obs, actions, rewards, discounts, h0, c0,
+                agent_cfg, cfg)
+        finally:
+            model.unroll = orig_unroll
+        return (tuple(jax.tree_util.tree_leaves(new_p)) +
+                tuple(jax.tree_util.tree_leaves(new_opt)) +
+                (l, prio, gnorm))
+
+    t = cfg.seq_len
+    obs = jnp.zeros((batch, t) + agent_cfg.obs_shape, jnp.float32)
+    actions = jnp.zeros((batch, t), jnp.int32)
+    rewards = jnp.zeros((batch, t), jnp.float32)
+    discounts = jnp.zeros((batch, t), jnp.float32)
+    h0, c0 = model.initial_state(batch, agent_cfg)
+    flat_args = (jax.tree_util.tree_leaves(params) * 2 +
+                 jax.tree_util.tree_leaves(opt_state) +
+                 [obs, actions, rewards, discounts, h0, c0])
+    return fn, flat_args
+
+
+def build_vtrace_train(vparams, vopt, agent_cfg: model.AgentConfig,
+                       cfg: loss.VtraceConfig, batch: int):
+    """IMPALA learner step. Flat ABI mirrors build_train (no target net)."""
+    _, p_def = jax.tree_util.tree_flatten(vparams)
+    n_p = p_def.num_leaves
+    _, o_def = jax.tree_util.tree_flatten(vopt)
+    n_o = o_def.num_leaves
+
+    def fn(*flat):
+        p = jax.tree_util.tree_unflatten(p_def, flat[:n_p])
+        opt = jax.tree_util.tree_unflatten(o_def, flat[n_p: n_p + n_o])
+        obs, actions, rewards, discounts, blogits, h0, c0 = flat[n_p + n_o:]
+        new_p, new_opt, l, gnorm = loss.vtrace_train_step(
+            p, opt, obs, actions, rewards, discounts, blogits, h0, c0,
+            agent_cfg, cfg)
+        return (tuple(jax.tree_util.tree_leaves(new_p)) +
+                tuple(jax.tree_util.tree_leaves(new_opt)) + (l, gnorm))
+
+    t = cfg.unroll_len
+    obs = jnp.zeros((batch, t) + agent_cfg.obs_shape, jnp.float32)
+    actions = jnp.zeros((batch, t), jnp.int32)
+    rewards = jnp.zeros((batch, t), jnp.float32)
+    discounts = jnp.zeros((batch, t), jnp.float32)
+    blogits = jnp.zeros((batch, t, agent_cfg.num_actions), jnp.float32)
+    h0, c0 = model.initial_state(batch, agent_cfg)
+    flat_args = (jax.tree_util.tree_leaves(vparams) +
+                 jax.tree_util.tree_leaves(vopt) +
+                 [obs, actions, rewards, discounts, blogits, h0, c0])
+    return fn, flat_args
+
+
+# ---------------------------------------------------------------------------
+# Kernel trace extraction
+# ---------------------------------------------------------------------------
+
+def extract_trace(fn, flat_args, name: str) -> dict:
+    """Compile with XLA:CPU, parse optimized HLO into a kernel trace."""
+    specs = [spec_of(a) for a in flat_args]
+    compiled = jax.jit(fn).lower(*specs).compile()
+    opt_hlo = compiled.as_text()
+    kernels = hlo_cost.kernel_trace(opt_hlo)
+    summary = hlo_cost.trace_summary(kernels)
+    # Cross-check against XLA's own analysis when available.
+    xla_flops = None
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        xla_flops = float(ca.get("flops", -1.0))
+    except Exception:
+        pass
+    return {
+        "artifact": name,
+        "kernels": [k.to_json() for k in kernels],
+        "summary": summary,
+        "xla_cost_analysis_flops": xla_flops,
+    }
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--seed", type=int, default=DEFAULT_SEED)
+    ap.add_argument("--infer-batches", type=int, nargs="+",
+                    default=[1, 8, 32, 64])
+    ap.add_argument("--train-batch", type=int, default=16)
+    ap.add_argument("--vtrace-batch", type=int, default=16)
+    ap.add_argument("--obs-size", type=int, default=10)
+    ap.add_argument("--obs-channels", type=int, default=4)
+    ap.add_argument("--num-actions", type=int, default=4)
+    ap.add_argument("--lstm-hidden", type=int, default=128)
+    ap.add_argument("--torso-dim", type=int, default=128)
+    ap.add_argument("--burn-in", type=int, default=5)
+    ap.add_argument("--unroll-len", type=int, default=15)
+    ap.add_argument("--n-step", type=int, default=3)
+    ap.add_argument("--gamma", type=float, default=0.997)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--skip-vtrace", action="store_true")
+    ap.add_argument("--scan-train", action="store_true",
+                    help="lower the train step with lax.scan instead of "
+                         "the (faster-running) static unroll")
+    ap.add_argument("--skip-trace", action="store_true",
+                    help="skip kernel_trace.json (slow: compiles the "
+                         "statically-unrolled graphs)")
+    ap.add_argument("--skip-paper-trace", action="store_true",
+                    help="skip the Atari-scale R2D2 trace extraction")
+    ap.add_argument("--paper-unroll", type=int, default=40,
+                    help="timesteps in the paper-scale trace graph")
+    ap.add_argument("--paper-train-batch", type=int, default=64)
+    args = ap.parse_args()
+
+    agent_cfg = model.AgentConfig(
+        obs_size=args.obs_size, obs_channels=args.obs_channels,
+        num_actions=args.num_actions, lstm_hidden=args.lstm_hidden,
+        torso_dim=args.torso_dim)
+    r2d2_cfg = loss.R2d2Config(
+        burn_in=args.burn_in, unroll_len=args.unroll_len,
+        n_step=args.n_step, gamma=args.gamma,
+        adam=optim.AdamConfig(lr=args.lr))
+    vtrace_cfg = loss.VtraceConfig(unroll_len=args.unroll_len,
+                                   adam=optim.AdamConfig(lr=args.lr))
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    key = jax.random.PRNGKey(args.seed)
+    pkey, vkey = jax.random.split(key)
+    params = model.init_params(pkey, agent_cfg)
+    opt_state = optim.init_opt_state(params)
+    vparams = model.init_vtrace_params(vkey, agent_cfg)
+    vopt = optim.init_opt_state(vparams)
+
+    manifest = {
+        "seed": args.seed,
+        "agent": {
+            "obs_size": agent_cfg.obs_size,
+            "obs_channels": agent_cfg.obs_channels,
+            "num_actions": agent_cfg.num_actions,
+            "lstm_hidden": agent_cfg.lstm_hidden,
+            "torso_dim": agent_cfg.torso_dim,
+            "param_count": nn.param_count(params),
+        },
+        "r2d2": {
+            "burn_in": r2d2_cfg.burn_in,
+            "unroll_len": r2d2_cfg.unroll_len,
+            "seq_len": r2d2_cfg.seq_len,
+            "n_step": r2d2_cfg.n_step,
+            "gamma": r2d2_cfg.gamma,
+            "train_batch": args.train_batch,
+            "lr": args.lr,
+        },
+        "vtrace": {
+            "unroll_len": vtrace_cfg.unroll_len,
+            "batch": args.vtrace_batch,
+        },
+        "param_specs": [
+            {"name": n, "shape": list(s), "dtype": d}
+            for n, s, d in nn.flat_param_specs(params)
+        ],
+        "vtrace_param_specs": [
+            {"name": n, "shape": list(s), "dtype": d}
+            for n, s, d in nn.flat_param_specs(vparams)
+        ],
+        "artifacts": {},
+    }
+
+    traces = []
+
+    def emit(name: str, fn, flat_args, trace: bool = False):
+        t0 = time.time()
+        specs = [spec_of(a) for a in flat_args]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, name + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "path": os.path.basename(path),
+            "inputs": _sig(flat_args),
+            "lower_seconds": round(time.time() - t0, 2),
+        }
+        print(f"[aot] {name}: {len(text)} chars, "
+              f"{len(flat_args)} inputs, {time.time() - t0:.1f}s")
+        if trace and not args.skip_trace:
+            t0 = time.time()
+            traces.append(extract_trace(fn, flat_args, name))
+            print(f"[aot] {name}: trace ({time.time() - t0:.1f}s)")
+
+    # Inference graphs (one per batcher size).
+    for b in args.infer_batches:
+        fn, flat = build_inference(params, agent_cfg, b)
+        emit(f"infer_b{b}", fn, flat, trace=(b == max(args.infer_batches)))
+
+    # R2D2 learner step. Runtime artifact uses the statically-unrolled
+    # graph: XLA fuses across timesteps, measured 2.2x faster than the
+    # lax.scan lowering at T=20 (EXPERIMENTS.md §Perf L2); scan remains
+    # available via --scan-train for compile-time-sensitive builds.
+    fn, flat = build_train(params, opt_state, agent_cfg, r2d2_cfg,
+                           args.train_batch,
+                           trace_unroll=not args.scan_train)
+    emit("train", fn, flat)
+
+    # Kernel trace from the statically-unrolled learner graph (per-step
+    # kernels visible; see model.unroll_static).
+    if not args.skip_trace:
+        tfn, tflat = build_train(params, opt_state, agent_cfg, r2d2_cfg,
+                                 args.train_batch, trace_unroll=True)
+        t0 = time.time()
+        traces.append(extract_trace(tfn, tflat, "train_unrolled"))
+        print(f"[aot] train_unrolled trace ({time.time() - t0:.1f}s)")
+
+    # Paper-scale traces: SEED-RL's R2D2 is Atari-sized (84x84x4 obs,
+    # stride-4/2 conv stack, LSTM 512, 18 actions, ~6.5M params). We do
+    # not execute this graph on the CPU testbed — we lower it (statically
+    # unrolled, unoptimized HLO: one op per kernel launch, like the
+    # largely-unfused TF1 graph the paper profiled) and extract the
+    # kernel trace for the simulator's Fig. 2 / Fig. 4 experiments.
+    if not args.skip_trace and not args.skip_paper_trace:
+        t0 = time.time()
+        pcfg = model.AgentConfig(
+            obs_size=84, obs_channels=4, num_actions=18,
+            conv1_filters=32, conv2_filters=64,
+            conv1_stride=4, conv2_stride=2,
+            torso_dim=512, lstm_hidden=512, head_dim=512)
+        pr2d2 = loss.R2d2Config(burn_in=0, unroll_len=args.paper_unroll,
+                                n_step=5, adam=optim.AdamConfig(lr=args.lr))
+        pkey2, _ = jax.random.split(pkey)
+        pparams = model.init_params(pkey2, pcfg)
+        popt = optim.init_opt_state(pparams)
+
+        def unoptimized_trace(fn, flat, name):
+            lowered = jax.jit(fn).lower(*[spec_of(a) for a in flat])
+            text = to_hlo_text(lowered)
+            kernels = hlo_cost.kernel_trace(text, coalesce=True)
+            return {
+                "artifact": name,
+                "kernels": [k.to_json() for k in kernels],
+                "summary": hlo_cost.trace_summary(kernels),
+                "xla_cost_analysis_flops": None,
+            }
+
+        tfn, tflat = build_train(pparams, popt, pcfg, pr2d2,
+                                 args.paper_train_batch, trace_unroll=True)
+        traces.append(unoptimized_trace(tfn, tflat, "train_paper_scale"))
+        ifn, iflat = build_inference(pparams, pcfg, 64)
+        traces.append(unoptimized_trace(ifn, iflat, "infer_paper_scale"))
+        print(f"[aot] paper-scale traces ({time.time() - t0:.1f}s, "
+              f"{nn.param_count(pparams)} params)")
+
+    if not args.skip_vtrace:
+        fn, flat = build_vtrace_train(vparams, vopt, agent_cfg, vtrace_cfg,
+                                      args.vtrace_batch)
+        emit("vtrace_train", fn, flat)
+
+    # Initial literals for the Rust ParamStore.
+    flat_p = jax.tree_util.tree_leaves(params)
+    flat_o = jax.tree_util.tree_leaves(opt_state)
+    flat_vp = jax.tree_util.tree_leaves(vparams)
+    flat_vo = jax.tree_util.tree_leaves(vopt)
+    write_tensor_bundle(
+        os.path.join(args.out_dir, "init_params.bin"),
+        [(f"p{i}", np.asarray(x)) for i, x in enumerate(flat_p)]
+        + [(f"o{i}", np.asarray(x)) for i, x in enumerate(flat_o)]
+        + [(f"vp{i}", np.asarray(x)) for i, x in enumerate(flat_vp)]
+        + [(f"vo{i}", np.asarray(x)) for i, x in enumerate(flat_vo)],
+    )
+    manifest["init"] = {
+        "params": len(flat_p), "opt": len(flat_o),
+        "vtrace_params": len(flat_vp), "vtrace_opt": len(flat_vo),
+    }
+
+    with open(os.path.join(args.out_dir, "kernel_trace.json"), "w") as f:
+        json.dump({"traces": traces}, f, indent=1)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(manifest['artifacts'])} artifacts + manifest + "
+          f"trace to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+All kernels run in interpret mode so the AOT'd HLO executes on the CPU
+PJRT plugin; real-TPU performance is analyzed statically (VMEM footprint,
+MXU utilization) in DESIGN.md / EXPERIMENTS.md.
+"""
+
+from .dueling import dueling_head
+from .lstm_cell import lstm_cell, lstm_vmem_bytes
+from .ref import (
+    FORGET_BIAS,
+    GATE_ORDER,
+    dueling_head_ref,
+    lstm_cell_ref,
+    value_rescale_inv_ref,
+    value_rescale_ref,
+)
+
+__all__ = [
+    "FORGET_BIAS",
+    "GATE_ORDER",
+    "dueling_head",
+    "dueling_head_ref",
+    "lstm_cell",
+    "lstm_cell_ref",
+    "lstm_vmem_bytes",
+    "value_rescale_inv_ref",
+    "value_rescale_ref",
+]

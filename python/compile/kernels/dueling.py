@@ -1,0 +1,88 @@
+"""Fused dueling-head Pallas kernel.
+
+The dueling aggregation q = v + a - mean(a) is a small pointwise+reduce
+epilogue that XLA would otherwise emit as a separate fusion after the two
+head matmuls; fusing it keeps the advantage tile in VMEM. The kernel also
+demonstrates a reduction inside a Pallas body (mean over the action axis).
+
+Like every kernel in this package it runs with interpret=True (CPU PJRT)
+and is validated against ``ref.dueling_head_ref`` by pytest/hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dueling_kernel(v_ref, a_ref, q_ref):
+    v = v_ref[...].astype(jnp.float32)          # [bb, 1]
+    a = a_ref[...].astype(jnp.float32)          # [bb, A]
+    mean_a = jnp.mean(a, axis=-1, keepdims=True)
+    q_ref[...] = (v + a - mean_a).astype(q_ref.dtype)
+
+
+def _dueling_pallas(value, advantage, block_b: int):
+    """Dueling Q aggregation: q = v + a - mean_a(a).
+
+    Args:
+      value:     [B, 1] state-value stream.
+      advantage: [B, A] advantage stream.
+      block_b:   batch tile size.
+
+    Returns:
+      q: [B, A] with advantage's dtype.
+    """
+    batch, actions = advantage.shape
+    assert value.shape == (batch, 1), (value.shape, batch)
+
+    block_b = max(1, min(block_b, batch))
+    padded = -(-batch // block_b) * block_b
+    if padded != batch:
+        pad = [(0, padded - batch), (0, 0)]
+        value, advantage = jnp.pad(value, pad), jnp.pad(advantage, pad)
+
+    q = pl.pallas_call(
+        _dueling_kernel,
+        grid=(padded // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, actions), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, actions), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, actions), advantage.dtype),
+        interpret=True,
+    )(value, advantage)
+
+    if padded != batch:
+        q = q[:batch]
+    return q
+
+
+# custom_vjp: Pallas forward, pure-jnp reference backward (same math; see
+# lstm_cell.py for the rationale).
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _dueling_cv(value, advantage, block_b):
+    return _dueling_pallas(value, advantage, block_b)
+
+
+def _dueling_fwd(value, advantage, block_b):
+    return _dueling_pallas(value, advantage, block_b), (value, advantage)
+
+
+def _dueling_bwd(block_b, residuals, g):
+    from .ref import dueling_head_ref
+
+    _, vjp = jax.vjp(dueling_head_ref, *residuals)
+    return vjp(g)
+
+
+_dueling_cv.defvjp(_dueling_fwd, _dueling_bwd)
+
+
+def dueling_head(value, advantage, *, block_b: int = 32):
+    """Fused dueling aggregation: Pallas forward, reference-vjp backward."""
+    return _dueling_cv(value, advantage, block_b)

@@ -1,0 +1,161 @@
+"""Fused LSTM-cell Pallas kernel — the L1 compute hot-spot.
+
+R2D2's recurrent core dominates both the inference and training graphs
+(two [B,H]x[H,4H] matmuls plus four gate nonlinearities per timestep).
+On the paper's V100 these run as separate cuBLAS + elementwise kernels;
+re-expressed for a TPU-style memory hierarchy we fuse the whole cell so
+the [B,4H] gate pre-activations never round-trip through HBM:
+
+  * grid over batch tiles only; each program instance holds a
+    [block_b, I] activation tile plus the full weight panels in VMEM.
+  * both matmuls (x@Wx and h@Wh) accumulate in fp32 inside the kernel
+    (``preferred_element_type``) so bf16 inputs keep MXU-friendly
+    accumulation semantics.
+  * gate split + sigmoid/tanh + state update are fused pointwise ops on
+    the VMEM-resident tile.
+
+VMEM budget (fp32): block_b*(I+9H) + 4H*(I+H+1) words. With the default
+agent sizes (I=128, H=128, block_b=8) that is ~135 KiB — comfortably
+under a TPU core's ~16 MiB VMEM; see EXPERIMENTS.md §Perf for the
+footprint/utilization table across tile choices.
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and the whole library runs AOT HLO on CPU. The
+kernel still exercises the real BlockSpec/grid machinery.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import FORGET_BIAS
+
+
+def _lstm_cell_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref,
+                      h_out_ref, c_out_ref, *, hidden: int):
+    """Kernel body: one [block_b, *] batch tile, full weight panels."""
+    x = x_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    # Accumulate in fp32 regardless of input dtype (MXU-style accumulation).
+    gates = jnp.dot(x, wx_ref[...], preferred_element_type=jnp.float32)
+    gates += jnp.dot(h, wh_ref[...], preferred_element_type=jnp.float32)
+    gates += b_ref[...].astype(jnp.float32)
+
+    i = gates[:, 0 * hidden : 1 * hidden]
+    f = gates[:, 1 * hidden : 2 * hidden]
+    g = gates[:, 2 * hidden : 3 * hidden]
+    o = gates[:, 3 * hidden : 4 * hidden]
+
+    c32 = c.astype(jnp.float32)
+    c_new = jax.nn.sigmoid(f + FORGET_BIAS) * c32 + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+
+    h_out_ref[...] = h_new.astype(h_out_ref.dtype)
+    c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+
+
+def _lstm_cell_pallas(x, h, c, wx, wh, b, block_b: int):
+    """One fused LSTM cell step via Pallas.
+
+    Args:
+      x:  [B, I]  input activations.
+      h:  [B, H]  previous hidden state.
+      c:  [B, H]  previous cell state.
+      wx: [I, 4H] input->gates weights (gate order i,f,g,o).
+      wh: [H, 4H] hidden->gates weights.
+      b:  [4H]    gate biases.
+      block_b: batch tile size (grid dimension). Batches that are not a
+        multiple are zero-padded and sliced back, so any B >= 1 works.
+
+    Returns:
+      (h_new [B, H], c_new [B, H]) with the dtypes of (h, c).
+    """
+    batch, in_dim = x.shape
+    hidden = h.shape[-1]
+    assert wx.shape == (in_dim, 4 * hidden), (wx.shape, in_dim, hidden)
+    assert wh.shape == (hidden, 4 * hidden)
+    assert b.shape == (4 * hidden,)
+
+    block_b = max(1, min(block_b, batch))
+    padded = -(-batch // block_b) * block_b  # ceil to tile multiple
+    if padded != batch:
+        pad = [(0, padded - batch), (0, 0)]
+        x, h, c = jnp.pad(x, pad), jnp.pad(h, pad), jnp.pad(c, pad)
+
+    grid = (padded // block_b,)
+    kernel = functools.partial(_lstm_cell_kernel, hidden=hidden)
+    h_new, c_new = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, in_dim), lambda i: (i, 0)),   # x tile
+            pl.BlockSpec((block_b, hidden), lambda i: (i, 0)),   # h tile
+            pl.BlockSpec((block_b, hidden), lambda i: (i, 0)),   # c tile
+            pl.BlockSpec((in_dim, 4 * hidden), lambda i: (0, 0)),  # Wx panel
+            pl.BlockSpec((hidden, 4 * hidden), lambda i: (0, 0)),  # Wh panel
+            pl.BlockSpec((4 * hidden,), lambda i: (0,)),           # bias
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, hidden), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded, hidden), h.dtype),
+            jax.ShapeDtypeStruct((padded, hidden), c.dtype),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(x, h, c, wx, wh, b)
+
+    if padded != batch:
+        h_new, c_new = h_new[:batch], c_new[:batch]
+    return h_new, c_new
+
+
+# Pallas bodies have no automatic reverse-mode rule; the backward pass is
+# supplied via custom_vjp using the pure-jnp reference (same math — the
+# oracle pytest asserts kernel == ref to float tolerance). The ref forward
+# is rematerialized inside the vjp, which is also what a fused TPU kernel
+# would do rather than spilling gate pre-activations to HBM.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _lstm_cell_cv(x, h, c, wx, wh, b, block_b):
+    return _lstm_cell_pallas(x, h, c, wx, wh, b, block_b)
+
+
+def _lstm_cell_fwd(x, h, c, wx, wh, b, block_b):
+    out = _lstm_cell_pallas(x, h, c, wx, wh, b, block_b)
+    return out, (x, h, c, wx, wh, b)
+
+
+def _lstm_cell_bwd(block_b, residuals, cotangents):
+    from .ref import lstm_cell_ref
+
+    _, vjp = jax.vjp(lstm_cell_ref, *residuals)
+    return vjp(cotangents)
+
+
+_lstm_cell_cv.defvjp(_lstm_cell_fwd, _lstm_cell_bwd)
+
+
+def lstm_cell(x, h, c, wx, wh, b, *, block_b: int = 8):
+    """Fused LSTM cell: Pallas forward, reference-vjp backward (see above)."""
+    return _lstm_cell_cv(x, h, c, wx, wh, b, block_b)
+
+
+def lstm_vmem_bytes(block_b: int, in_dim: int, hidden: int,
+                    bytes_per_el: int = 4) -> int:
+    """Static VMEM footprint estimate for one program instance.
+
+    Used by DESIGN.md / EXPERIMENTS.md §Perf tables and unit-tested against
+    a hand computation; interpret-mode wallclock is NOT a TPU proxy, so
+    tiles are chosen on this analytic model instead.
+    """
+    act = block_b * (in_dim + 2 * hidden)          # x, h, c tiles
+    gates = block_b * 4 * hidden                   # fused gate tile (fp32)
+    outs = block_b * 2 * hidden                    # h', c'
+    weights = 4 * hidden * (in_dim + hidden + 1)   # Wx, Wh, b panels
+    return (act + gates + outs + weights) * bytes_per_el

@@ -1,0 +1,225 @@
+"""R2D2 and V-trace (IMPALA) losses + the full AOT'd train steps.
+
+R2D2 (Kapturowski et al., ICLR'19), as run by SEED RL and profiled by the
+paper: recurrent double-Q learning over length-T sequences with
+  * LSTM burn-in (stop-gradient prefix to refresh stale recurrent state),
+  * n-step returns,
+  * invertible value rescaling h / h^-1 instead of reward clipping,
+  * per-sequence priorities  eta*max|td| + (1-eta)*mean|td|.
+
+V-trace (Espeholt et al., ICML'18) is the off-policy actor-critic baseline
+the paper contrasts architecturally (actor-side inference); implemented on
+the same torso/LSTM so the two systems are compute-comparable.
+
+Tensor-time convention in this file: sequences enter as [B, T, ...]
+(Rust's replay layout) and are transposed to [T, B, ...] for lax.scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import model, optim
+from .kernels.ref import value_rescale_inv_ref as h_inv
+from .kernels.ref import value_rescale_ref as h
+
+
+@dataclasses.dataclass(frozen=True)
+class R2d2Config:
+    """Loss/optimizer hyper-parameters for the R2D2 learner."""
+
+    burn_in: int = 5          # stop-gradient prefix steps
+    unroll_len: int = 15      # trained steps (sequence length = burn_in+unroll)
+    n_step: int = 3
+    gamma: float = 0.997
+    priority_eta: float = 0.9
+    adam: optim.AdamConfig = dataclasses.field(default_factory=optim.AdamConfig)
+
+    @property
+    def seq_len(self) -> int:
+        return self.burn_in + self.unroll_len
+
+
+def _shift_time(x, k: int):
+    """x[t] -> x[t+k] along axis 0, zero-padded at the tail. x: [T, ...]."""
+    if k == 0:
+        return x
+    pad = jnp.zeros((k,) + x.shape[1:], x.dtype)
+    return jnp.concatenate([x[k:], pad], axis=0)
+
+
+def n_step_targets(q_online, q_target, actions, rewards, discounts,
+                   n_step: int):
+    """Rescaled n-step double-Q targets and TD errors.
+
+    All inputs are time-major over the *training* window:
+      q_online, q_target: [T, B, A]; actions: [T, B] (a_t taken at s_t);
+      rewards, discounts: [T, B] (r_t, gamma*(1-done_t) after a_t).
+
+    Returns (td_error [T, B], valid_mask [T]) where entries with
+    t >= T - n_step are invalid (no bootstrap available in-window).
+    """
+    t_len = q_online.shape[0]
+    q_sel = jnp.take_along_axis(q_online, actions[..., None], axis=-1)[..., 0]
+
+    # Double-Q bootstrap value in un-rescaled space.
+    a_star = jnp.argmax(q_online, axis=-1)
+    boot = h_inv(jnp.take_along_axis(q_target, a_star[..., None], -1)[..., 0])
+
+    ret = jnp.zeros_like(rewards)
+    cum = jnp.ones_like(discounts)
+    for k in range(n_step):
+        ret = ret + cum * _shift_time(rewards, k)
+        cum = cum * _shift_time(discounts, k)
+    ret = ret + cum * _shift_time(boot, n_step)
+
+    td = h(ret) - q_sel
+    valid = (jnp.arange(t_len) < t_len - n_step).astype(td.dtype)
+    return td * valid[:, None], valid
+
+
+def r2d2_loss(params, target_params, obs, actions, rewards, discounts,
+              h0, c0, agent_cfg: model.AgentConfig, cfg: R2d2Config):
+    """Scalar loss + per-sequence priorities.
+
+    Args (batch-major, B sequences of length T = burn_in + unroll_len):
+      obs:       [B, T, S, S, C] float32 in [0, 1].
+      actions:   [B, T] int32.
+      rewards:   [B, T] float32.
+      discounts: [B, T] float32 (gamma * (1 - done)).
+      h0, c0:    [B, H] recurrent state stored at sequence start.
+
+    Returns (loss, (priorities [B], mean_abs_td)).
+    """
+    obs_t = jnp.transpose(obs, (1, 0) + tuple(range(2, obs.ndim)))  # [T,B,...]
+
+    # Burn-in: refresh recurrent state, no gradient.
+    if cfg.burn_in > 0:
+        _, (h_b, c_b) = model.unroll(params, h0, c0, obs_t[: cfg.burn_in],
+                                     agent_cfg)
+        h_b, c_b = jax.lax.stop_gradient(h_b), jax.lax.stop_gradient(c_b)
+    else:
+        h_b, c_b = h0, c0
+
+    train_obs = obs_t[cfg.burn_in:]
+    q_online, _ = model.unroll(params, h_b, c_b, train_obs, agent_cfg)
+    q_target, _ = model.unroll(target_params, h_b, c_b, train_obs, agent_cfg)
+    q_target = jax.lax.stop_gradient(q_target)
+
+    acts = jnp.transpose(actions, (1, 0))[cfg.burn_in:]
+    rews = jnp.transpose(rewards, (1, 0))[cfg.burn_in:]
+    disc = jnp.transpose(discounts, (1, 0))[cfg.burn_in:]
+
+    td, valid = n_step_targets(q_online, q_target, acts, rews, disc,
+                               cfg.n_step)
+    n_valid = jnp.maximum(jnp.sum(valid), 1.0)
+
+    loss = 0.5 * jnp.sum(jnp.square(td)) / (n_valid * td.shape[1])
+
+    abs_td = jnp.abs(td)                                   # [T, B]
+    max_td = jnp.max(abs_td, axis=0)
+    mean_td = jnp.sum(abs_td, axis=0) / n_valid
+    priorities = cfg.priority_eta * max_td + (1 - cfg.priority_eta) * mean_td
+    return loss, (priorities, jnp.sum(abs_td) / (n_valid * td.shape[1]))
+
+
+def r2d2_train_step(params, target_params, opt_state, obs, actions, rewards,
+                    discounts, h0, c0, agent_cfg: model.AgentConfig,
+                    cfg: R2d2Config):
+    """Full learner step: loss grad + Adam. AOT'd as train.hlo.txt.
+
+    Returns (new_params, new_opt_state, loss, priorities, grad_norm).
+    """
+    (loss, (priorities, _)), grads = jax.value_and_grad(
+        r2d2_loss, has_aux=True)(params, target_params, obs, actions,
+                                 rewards, discounts, h0, c0, agent_cfg, cfg)
+    new_params, new_opt, gnorm = optim.adam_update(params, grads, opt_state,
+                                                   cfg.adam)
+    return new_params, new_opt, loss, priorities, gnorm
+
+
+# ---------------------------------------------------------------------------
+# V-trace (IMPALA baseline)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class VtraceConfig:
+    unroll_len: int = 20      # T; transitions trained: T-1
+    gamma: float = 0.99
+    rho_clip: float = 1.0
+    c_clip: float = 1.0
+    baseline_cost: float = 0.5
+    entropy_cost: float = 0.01
+    adam: optim.AdamConfig = dataclasses.field(default_factory=optim.AdamConfig)
+
+
+def vtrace_returns(values, rewards, discounts, rhos, cs, bootstrap):
+    """V-trace value targets vs (Espeholt et al., eq. 1), time-major.
+
+    values, rewards, discounts, rhos, cs: [T, B]; bootstrap: [B].
+    Returns vs: [T, B].
+    """
+    deltas = rhos * (rewards + discounts * jnp.concatenate(
+        [values[1:], bootstrap[None]], axis=0) - values)
+
+    def backward(acc, xs):
+        delta_t, disc_t, c_t = xs
+        acc = delta_t + disc_t * c_t * acc
+        return acc, acc
+
+    _, dvs = jax.lax.scan(backward, jnp.zeros_like(bootstrap),
+                          (deltas, discounts, cs), reverse=True)
+    return values + dvs
+
+
+def vtrace_loss(params, obs, actions, rewards, discounts, behavior_logits,
+                h0, c0, agent_cfg: model.AgentConfig, cfg: VtraceConfig):
+    """IMPALA actor-critic loss over [B, T] trajectories (last step = boot)."""
+    obs_t = jnp.transpose(obs, (1, 0) + tuple(range(2, obs.ndim)))
+    logits, values, _ = model.vtrace_unroll(params, h0, c0, obs_t, agent_cfg)
+
+    acts = jnp.transpose(actions, (1, 0))[:-1]          # [T-1, B]
+    rews = jnp.transpose(rewards, (1, 0))[:-1]
+    disc = jnp.transpose(discounts, (1, 0))[:-1]
+    blogits = jnp.transpose(behavior_logits, (1, 0, 2))[:-1]  # [T-1, B, A]
+
+    logp = jax.nn.log_softmax(logits[:-1])
+    blogp = jax.nn.log_softmax(blogits)
+    logp_a = jnp.take_along_axis(logp, acts[..., None], -1)[..., 0]
+    blogp_a = jnp.take_along_axis(blogp, acts[..., None], -1)[..., 0]
+
+    log_rho = logp_a - blogp_a
+    rhos = jnp.minimum(jnp.exp(log_rho), cfg.rho_clip)
+    cs = jnp.minimum(jnp.exp(log_rho), cfg.c_clip)
+
+    v = values[:-1]
+    vs = jax.lax.stop_gradient(
+        vtrace_returns(jax.lax.stop_gradient(v), rews, disc, rhos, cs,
+                       jax.lax.stop_gradient(values[-1])))
+    vs_next = jnp.concatenate([vs[1:], values[-1:]], axis=0)
+    pg_adv = jax.lax.stop_gradient(rhos * (rews + disc * vs_next - v))
+
+    pg_loss = -jnp.mean(logp_a * pg_adv)
+    baseline_loss = 0.5 * jnp.mean(jnp.square(vs - v))
+    entropy = -jnp.mean(jnp.sum(jax.nn.softmax(logits[:-1]) * logp, axis=-1))
+
+    total = (pg_loss + cfg.baseline_cost * baseline_loss
+             - cfg.entropy_cost * entropy)
+    return total, (pg_loss, baseline_loss, entropy)
+
+
+def vtrace_train_step(params, opt_state, obs, actions, rewards, discounts,
+                      behavior_logits, h0, c0, agent_cfg: model.AgentConfig,
+                      cfg: VtraceConfig):
+    """AOT'd as vtrace_train.hlo.txt. Returns (params', opt', loss, gnorm)."""
+    (loss, _), grads = jax.value_and_grad(vtrace_loss, has_aux=True)(
+        params, obs, actions, rewards, discounts, behavior_logits, h0, c0,
+        agent_cfg, cfg)
+    new_params, new_opt, gnorm = optim.adam_update(params, grads, opt_state,
+                                                   cfg.adam)
+    return new_params, new_opt, loss, gnorm

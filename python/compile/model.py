@@ -1,0 +1,184 @@
+"""L2: the R2D2 agent network (conv torso + Pallas LSTM core + dueling head).
+
+This is the compute graph the paper profiles: SEED RL's central-inference
+R2D2 agent. Sizes default to the small arcade suite in `rust/src/env`
+(10x10x4 observations, 4 actions, ~260k parameters — the Atari-class
+regime scaled to a CPU PJRT backend; all dims configurable).
+
+Everything here is pure-functional: `params` is a nested dict (see
+nn.flat_param_specs for the ABI order) and the two public graphs are
+
+  apply_inference(params, h, c, obs)          -> (q, h', c')
+  unroll(params, h0, c0, obs_seq)             -> (q_seq, h', c')   (scan)
+
+The LSTM cell is the fused Pallas kernel from `kernels/lstm_cell.py`
+(interpret=True), so it lowers into the same HLO module as the rest of
+the graph and runs on the CPU PJRT client from Rust.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .kernels import dueling_head, lstm_cell
+
+
+@dataclasses.dataclass(frozen=True)
+class AgentConfig:
+    """Shapes of the R2D2 agent. The defaults match the Rust env suite."""
+
+    obs_size: int = 10          # square observation, S x S
+    obs_channels: int = 4       # frame-stack depth
+    num_actions: int = 4
+    conv1_filters: int = 16
+    conv2_filters: int = 32
+    conv1_stride: int = 1
+    conv2_stride: int = 2
+    torso_dim: int = 128        # dense after flatten
+    lstm_hidden: int = 128
+    head_dim: int = 64
+    lstm_block_b: int = 32      # Pallas batch tile: 4x the MXU row
+                                # utilization of 8 for +0.1 MiB VMEM
+                                # (EXPERIMENTS.md §Perf L1)
+
+    @property
+    def obs_shape(self) -> Tuple[int, int, int]:
+        return (self.obs_size, self.obs_size, self.obs_channels)
+
+    @property
+    def conv_out_dim(self) -> int:
+        # Two SAME convs with configurable strides.
+        s1 = -(-self.obs_size // self.conv1_stride)
+        s2 = -(-s1 // self.conv2_stride)
+        return s2 * s2 * self.conv2_filters
+
+
+def init_params(key, cfg: AgentConfig):
+    """Initialize the full parameter pytree (nested dicts, sorted keys)."""
+    ks = jax.random.split(key, 7)
+    return {
+        "conv1": nn.init_conv(ks[0], 3, 3, cfg.obs_channels, cfg.conv1_filters),
+        "conv2": nn.init_conv(ks[1], 3, 3, cfg.conv1_filters, cfg.conv2_filters),
+        "torso": nn.init_dense(ks[2], cfg.conv_out_dim, cfg.torso_dim),
+        "lstm": nn.init_lstm(ks[3], cfg.torso_dim, cfg.lstm_hidden),
+        "head": nn.init_dense(ks[4], cfg.lstm_hidden, cfg.head_dim),
+        "value": nn.init_dense(ks[5], cfg.head_dim, 1),
+        "advantage": nn.init_dense(ks[6], cfg.head_dim, cfg.num_actions),
+    }
+
+
+def initial_state(batch: int, cfg: AgentConfig):
+    z = jnp.zeros((batch, cfg.lstm_hidden), jnp.float32)
+    return z, z
+
+
+def torso(params, obs, cfg: AgentConfig):
+    """Conv torso: [B,S,S,C] float obs (already /255 scaled) -> [B,torso]."""
+    x = nn.relu(nn.conv2d(params["conv1"], obs, stride=cfg.conv1_stride))
+    x = nn.relu(nn.conv2d(params["conv2"], x, stride=cfg.conv2_stride))
+    x = x.reshape((x.shape[0], -1))
+    return nn.relu(nn.dense(params["torso"], x))
+
+
+def q_head(params, h):
+    """Dueling Q-head over LSTM output h: [B,H] -> [B,A] (Pallas epilogue)."""
+    z = nn.relu(nn.dense(params["head"], h))
+    v = nn.dense(params["value"], z)        # [B, 1]
+    a = nn.dense(params["advantage"], z)    # [B, A]
+    return dueling_head(v, a)
+
+
+def apply_inference(params, h, c, obs, cfg: AgentConfig):
+    """Single-step batched inference — the SEED central-inference graph.
+
+    Args:
+      params: agent pytree.
+      h, c: [B, H] recurrent state (owned by the Rust coordinator, one slot
+        per actor, gathered into the batch by the inference batcher).
+      obs: [B, S, S, C] float32 observation (pre-scaled to [0,1]).
+
+    Returns:
+      (q [B, A], h' [B, H], c' [B, H])
+    """
+    x = torso(params, obs, cfg)
+    h2, c2 = lstm_cell(x, h, c, params["lstm"]["wx"], params["lstm"]["wh"],
+                       params["lstm"]["b"], block_b=cfg.lstm_block_b)
+    return q_head(params, h2), h2, c2
+
+
+def unroll(params, h0, c0, obs_seq, cfg: AgentConfig):
+    """Unroll the agent over a [T, B, S, S, C] observation sequence.
+
+    Uses lax.scan over time (compiled once, not unrolled T times — see
+    EXPERIMENTS.md §Perf L2 for the scan-vs-unroll measurement).
+
+    Returns:
+      (q_seq [T, B, A], (h_T, c_T))
+    """
+
+    def step(state, obs_t):
+        h, c = state
+        x = torso(params, obs_t, cfg)
+        h2, c2 = lstm_cell(x, h, c, params["lstm"]["wx"],
+                           params["lstm"]["wh"], params["lstm"]["b"],
+                           block_b=cfg.lstm_block_b)
+        return (h2, c2), q_head(params, h2)
+
+    (h_t, c_t), q_seq = jax.lax.scan(step, (h0, c0), obs_seq)
+    return q_seq, (h_t, c_t)
+
+
+def unroll_static(params, h0, c0, obs_seq, cfg: AgentConfig):
+    """Python-loop unroll (T copies of the cell in the graph).
+
+    Used only for kernel-trace extraction: the per-timestep kernels appear
+    individually in the optimized HLO entry computation, matching what an
+    nvprof-style GPU profile of the unrolled recurrent net would record
+    (lax.scan lowers to a `while`, hiding the per-step launches).
+    """
+    h, c = h0, c0
+    qs = []
+    for t in range(obs_seq.shape[0]):
+        x = torso(params, obs_seq[t], cfg)
+        h, c = lstm_cell(x, h, c, params["lstm"]["wx"], params["lstm"]["wh"],
+                         params["lstm"]["b"], block_b=cfg.lstm_block_b)
+        qs.append(q_head(params, h))
+    return jnp.stack(qs), (h, c)
+
+
+# ---------------------------------------------------------------------------
+# IMPALA (V-trace) baseline agent: same torso+LSTM, policy+value heads.
+# ---------------------------------------------------------------------------
+
+def init_vtrace_params(key, cfg: AgentConfig):
+    ks = jax.random.split(key, 6)
+    return {
+        "conv1": nn.init_conv(ks[0], 3, 3, cfg.obs_channels, cfg.conv1_filters),
+        "conv2": nn.init_conv(ks[1], 3, 3, cfg.conv1_filters, cfg.conv2_filters),
+        "torso": nn.init_dense(ks[2], cfg.conv_out_dim, cfg.torso_dim),
+        "lstm": nn.init_lstm(ks[3], cfg.torso_dim, cfg.lstm_hidden),
+        "policy": nn.init_dense(ks[4], cfg.lstm_hidden, cfg.num_actions),
+        "value": nn.init_dense(ks[5], cfg.lstm_hidden, 1),
+    }
+
+
+def vtrace_unroll(params, h0, c0, obs_seq, cfg: AgentConfig):
+    """[T,B,...] -> (logits [T,B,A], values [T,B], final state)."""
+
+    def step(state, obs_t):
+        h, c = state
+        x = torso(params, obs_t, cfg)
+        h2, c2 = lstm_cell(x, h, c, params["lstm"]["wx"],
+                           params["lstm"]["wh"], params["lstm"]["b"],
+                           block_b=cfg.lstm_block_b)
+        logits = nn.dense(params["policy"], h2)
+        value = nn.dense(params["value"], h2)[:, 0]
+        return (h2, c2), (logits, value)
+
+    (h_t, c_t), (logits, values) = jax.lax.scan(step, (h0, c0), obs_seq)
+    return logits, values, (h_t, c_t)

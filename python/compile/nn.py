@@ -1,0 +1,101 @@
+"""Minimal functional NN layer library for the L2 JAX model.
+
+Deliberately dependency-free (no flax/haiku/optax in the build image):
+parameters are nested dicts of jnp arrays, initializers are explicit, and
+every layer is a pure function. The flattened parameter order (sorted by
+dict key, depth-first — jax's dict pytree order) is the ABI between the
+AOT artifacts and the Rust `ParamStore`; `flat_param_specs` below is the
+single source of truth recorded into `manifest.json`.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, object]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def glorot_uniform(key, shape, fan_in, fan_out, dtype=jnp.float32):
+    limit = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, dtype, minval=-limit, maxval=limit)
+
+
+def init_dense(key, in_dim: int, out_dim: int) -> Params:
+    wkey, _ = jax.random.split(key)
+    return {
+        "w": glorot_uniform(wkey, (in_dim, out_dim), in_dim, out_dim),
+        "b": jnp.zeros((out_dim,), jnp.float32),
+    }
+
+
+def init_conv(key, kh: int, kw: int, cin: int, cout: int) -> Params:
+    fan_in, fan_out = kh * kw * cin, kh * kw * cout
+    wkey, _ = jax.random.split(key)
+    return {
+        "w": glorot_uniform(wkey, (kh, kw, cin, cout), fan_in, fan_out),
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def init_lstm(key, in_dim: int, hidden: int) -> Params:
+    """LSTM weights in the fused [i,f,g,o] layout the Pallas kernel expects."""
+    kx, kh = jax.random.split(key)
+    return {
+        "wx": glorot_uniform(kx, (in_dim, 4 * hidden), in_dim, 4 * hidden),
+        "wh": glorot_uniform(kh, (hidden, 4 * hidden), hidden, 4 * hidden),
+        "b": jnp.zeros((4 * hidden,), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Layers (pure functions)
+# ---------------------------------------------------------------------------
+
+def dense(p: Params, x):
+    return x @ p["w"] + p["b"]
+
+
+def conv2d(p: Params, x, stride: int = 1):
+    """NHWC conv with SAME padding (HWIO kernel layout)."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        p["w"],
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def relu(x):
+    return jax.nn.relu(x)
+
+
+# ---------------------------------------------------------------------------
+# Parameter ABI helpers
+# ---------------------------------------------------------------------------
+
+def flat_param_specs(params) -> List[Tuple[str, Tuple[int, ...], str]]:
+    """[(dotted-path, shape, dtype)] in jax pytree flatten order.
+
+    This order is what `aot.py` writes to manifest.json and what the Rust
+    runtime uses to feed/collect parameter literals — keep deterministic.
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        name = ".".join(str(getattr(k, "key", k)) for k in path)
+        specs.append((name, tuple(leaf.shape), str(leaf.dtype)))
+    return specs
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))

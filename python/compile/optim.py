@@ -1,0 +1,62 @@
+"""Adam optimizer, dependency-free (no optax in the build image).
+
+Optimizer state is `(step: i32[], m: pytree, v: pytree)`; all three travel
+through the AOT train-step artifact as flat literals, so the Rust learner
+just feeds the previous outputs back in (donated buffers — see aot.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    grad_clip: float = 40.0  # global-norm clip (R2D2 uses 40)
+
+
+def init_opt_state(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return (jnp.zeros((), jnp.int32), zeros,
+            jax.tree_util.tree_map(jnp.zeros_like, params))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Scale grads so their global l2 norm is at most max_norm."""
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gnorm
+
+
+def adam_update(params, grads, opt_state, cfg: AdamConfig):
+    """One Adam step with bias correction and global-norm clipping.
+
+    Returns (new_params, new_opt_state, grad_norm).
+    """
+    step, m, v = opt_state
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    m = jax.tree_util.tree_map(lambda mi, g: cfg.b1 * mi + (1 - cfg.b1) * g,
+                               m, grads)
+    v = jax.tree_util.tree_map(
+        lambda vi, g: cfg.b2 * vi + (1 - cfg.b2) * jnp.square(g), v, grads)
+
+    def upd(p, mi, vi):
+        mhat = mi / bc1
+        vhat = vi / bc2
+        return p - cfg.lr * mhat / (jnp.sqrt(vhat) + cfg.eps)
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, (step, m, v), gnorm

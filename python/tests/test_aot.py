@@ -1,0 +1,134 @@
+"""AOT pipeline: flat ABI, HLO-text lowering, tensor-bundle format."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, loss, model, optim
+
+SMALL = model.AgentConfig(obs_size=6, obs_channels=2, num_actions=3,
+                          conv1_filters=4, conv2_filters=8, torso_dim=16,
+                          lstm_hidden=16, head_dim=8)
+LCFG = loss.R2d2Config(burn_in=1, unroll_len=4, n_step=1)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0), SMALL)
+
+
+class TestFlatAbi:
+    def test_inference_flat_matches_tree_call(self, params):
+        fn, flat = aot.build_inference(params, SMALL, 4)
+        rng = np.random.default_rng(0)
+        flat = list(flat)
+        flat[-1] = jnp.asarray(rng.random(flat[-1].shape), jnp.float32)
+        q_flat, h_flat, c_flat = fn(*flat)
+        h0, c0 = model.initial_state(4, SMALL)
+        q, h, c = model.apply_inference(params, h0, c0, flat[-1], SMALL)
+        np.testing.assert_allclose(q_flat, q, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(h_flat, h, rtol=1e-5, atol=1e-6)
+
+    def test_train_flat_roundtrip(self, params):
+        opt = optim.init_opt_state(params)
+        fn, flat = aot.build_train(params, opt, SMALL, LCFG, batch=2)
+        outs = fn(*flat)
+        n_p = len(jax.tree_util.tree_leaves(params))
+        n_o = len(jax.tree_util.tree_leaves(opt))
+        # outputs: params' + opt' + (loss, priorities, gnorm)
+        assert len(outs) == n_p + n_o + 3
+        assert outs[n_p + n_o].shape == ()       # loss
+        assert outs[n_p + n_o + 1].shape == (2,)  # priorities
+        # param shapes preserved in ABI order.
+        for a, b in zip(outs[:n_p], jax.tree_util.tree_leaves(params)):
+            assert a.shape == b.shape
+
+    def test_train_abi_input_count(self, params):
+        opt = optim.init_opt_state(params)
+        fn, flat = aot.build_train(params, opt, SMALL, LCFG, batch=2)
+        n_p = len(jax.tree_util.tree_leaves(params))
+        n_o = len(jax.tree_util.tree_leaves(opt))
+        assert len(flat) == 2 * n_p + n_o + 6
+
+
+class TestHloText:
+    def test_lowering_produces_parseable_hlo(self, params):
+        fn, flat = aot.build_inference(params, SMALL, 2)
+        lowered = jax.jit(fn).lower(*[aot.spec_of(a) for a in flat])
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text
+        assert "HloModule" in text
+        # return_tuple=True -> root is a tuple.
+        from compile import hlo_cost
+        comps = hlo_cost.parse_hlo_computations(text)
+        assert "__entry__" in comps
+
+
+class TestTensorBundle:
+    def test_roundtrip_layout(self, tmp_path):
+        path = os.path.join(tmp_path, "t.bin")
+        a = np.arange(6, dtype=np.float32).reshape(2, 3)
+        b = np.asarray([7], dtype=np.int32)
+        aot.write_tensor_bundle(path, [("a", a), ("b", b)])
+        with open(path, "rb") as f:
+            raw = f.read()
+        assert raw[:16] == aot.TENSOR_BUNDLE_MAGIC
+        hlen = int.from_bytes(raw[16:24], "little")
+        header = json.loads(raw[24: 24 + hlen])
+        assert [h["name"] for h in header] == ["a", "b"]
+        payload = raw[24 + hlen:]
+        a2 = np.frombuffer(
+            payload[header[0]["offset"]: header[0]["offset"]
+                    + header[0]["nbytes"]], np.float32).reshape(2, 3)
+        np.testing.assert_array_equal(a2, a)
+        b2 = np.frombuffer(
+            payload[header[1]["offset"]: header[1]["offset"]
+                    + header[1]["nbytes"]], np.int32)
+        assert int(b2[0]) == 7
+
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..",
+                            "artifacts")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACT_DIR, "manifest.json")),
+    reason="run `make artifacts` first")
+class TestEmittedArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ARTIFACT_DIR, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_lists_all_artifacts(self, manifest):
+        for name, meta in manifest["artifacts"].items():
+            assert os.path.exists(os.path.join(ARTIFACT_DIR, meta["path"])), name
+
+    def test_param_specs_match_init_bundle(self, manifest):
+        with open(os.path.join(ARTIFACT_DIR, "init_params.bin"), "rb") as f:
+            raw = f.read()
+        hlen = int.from_bytes(raw[16:24], "little")
+        header = json.loads(raw[24: 24 + hlen])
+        n_p = manifest["init"]["params"]
+        bundle_p = [h for h in header if h["name"].startswith("p")
+                    and not h["name"].startswith(("vp",))][:n_p]
+        for spec, h in zip(manifest["param_specs"], bundle_p):
+            assert spec["shape"] == h["shape"], (spec, h)
+
+    def test_kernel_trace_has_train_and_infer(self):
+        with open(os.path.join(ARTIFACT_DIR, "kernel_trace.json")) as f:
+            traces = json.load(f)["traces"]
+        names = {t["artifact"] for t in traces}
+        assert any(n.startswith("infer") for n in names)
+        assert "train_unrolled" in names
+
+    def test_train_inputs_match_r2d2_config(self, manifest):
+        train = manifest["artifacts"]["train"]
+        t = manifest["r2d2"]["seq_len"]
+        b = manifest["r2d2"]["train_batch"]
+        obs_like = [i for i in train["inputs"] if len(i["shape"]) == 5]
+        assert obs_like and obs_like[0]["shape"][:2] == [b, t]

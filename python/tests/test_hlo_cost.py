@@ -1,0 +1,109 @@
+"""hlo_cost parser: synthetic HLO snippets + real compiled graphs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, hlo_cost, model
+
+SYNTHETIC = """\
+HloModule test
+
+%fused_computation (param_0: f32[8,16], param_1: f32[16]) -> f32[8,16] {
+  %param_0 = f32[8,16]{1,0} parameter(0)
+  %param_1 = f32[16]{0} parameter(1)
+  %broadcast.1 = f32[8,16]{1,0} broadcast(%param_1), dimensions={1}
+  ROOT %add.1 = f32[8,16]{1,0} add(%param_0, %broadcast.1)
+}
+
+ENTRY %main (a: f32[8,32], w: f32[32,16], b: f32[16]) -> f32[8,16] {
+  %a = f32[8,32]{1,0} parameter(0)
+  %w = f32[32,16]{1,0} parameter(1)
+  %b = f32[16]{0} parameter(2)
+  %dot.1 = f32[8,16]{1,0} dot(%a, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %fusion.1 = f32[8,16]{1,0} fusion(%dot.1, %b), kind=kLoop, calls=%fused_computation
+}
+"""
+
+
+class TestSyntheticParse:
+    def test_computations_found(self):
+        comps = hlo_cost.parse_hlo_computations(SYNTHETIC)
+        assert "__entry__" in comps
+        assert "fused_computation" in comps
+        assert len(comps["__entry__"]) == 5
+
+    def test_dot_flops(self):
+        comps = hlo_cost.parse_hlo_computations(SYNTHETIC)
+        dot = next(i for i in comps["__entry__"] if i.opcode == "dot")
+        # 2 * (8*16) * 32
+        assert hlo_cost.instr_flops(dot, comps) == 2 * 8 * 16 * 32
+
+    def test_operand_resolution(self):
+        comps = hlo_cost.parse_hlo_computations(SYNTHETIC)
+        dot = next(i for i in comps["__entry__"] if i.opcode == "dot")
+        assert dot.in_bytes == (8 * 32 + 32 * 16) * 4
+        assert dot.out_bytes == 8 * 16 * 4
+
+    def test_fusion_flops_sum_body(self):
+        comps = hlo_cost.parse_hlo_computations(SYNTHETIC)
+        fusion = next(i for i in comps["__entry__"] if i.opcode == "fusion")
+        # broadcast is movement (0) + add is 8*16.
+        assert hlo_cost.instr_flops(fusion, comps) == 8 * 16
+
+    def test_kernel_trace_excludes_parameters(self):
+        kernels = hlo_cost.kernel_trace(SYNTHETIC)
+        names = {k.opcode for k in kernels}
+        assert "parameter" not in names
+        assert {"dot", "fusion"} <= names
+
+    def test_shape_helpers(self):
+        s = hlo_cost.Shape("f32", (8, 16))
+        assert s.elems == 128 and s.bytes == 512
+        assert hlo_cost.Shape("pred", ()).bytes == 1
+        assert hlo_cost.Shape("bf16", (4,)).bytes == 8
+
+
+class TestRealGraphs:
+    @pytest.fixture(scope="class")
+    def inference_trace(self):
+        cfg = model.AgentConfig(obs_size=6, obs_channels=2, num_actions=3,
+                                conv1_filters=4, conv2_filters=8,
+                                torso_dim=16, lstm_hidden=16, head_dim=8)
+        params = model.init_params(jax.random.PRNGKey(0), cfg)
+        fn, flat = aot.build_inference(params, cfg, 4)
+        return aot.extract_trace(fn, flat, "test_infer")
+
+    def test_trace_nonempty(self, inference_trace):
+        assert inference_trace["summary"]["num_kernels"] > 3
+
+    def test_parsed_flops_close_to_xla(self, inference_trace):
+        xla = inference_trace["xla_cost_analysis_flops"]
+        parsed = inference_trace["summary"]["total_flops"]
+        if xla and xla > 0:
+            # Same order of magnitude (transcendental weights differ).
+            assert 0.5 * xla <= parsed <= 2.5 * xla
+
+    def test_bytes_nonzero(self, inference_trace):
+        assert inference_trace["summary"]["total_bytes_read"] > 0
+        assert inference_trace["summary"]["total_bytes_written"] > 0
+
+    def test_kernels_have_required_fields(self, inference_trace):
+        for k in inference_trace["kernels"]:
+            assert set(k) == {"name", "op", "flops", "bytes_read",
+                              "bytes_written", "out_elems"}
+            assert k["flops"] >= 0
+
+
+class TestWhileTripCount:
+    def test_default_is_one(self):
+        instr = hlo_cost.Instr("w", "while", [], [], "body=%b", ["b"])
+        assert hlo_cost._while_trip_count(instr) == 1
+
+    def test_reads_backend_config(self):
+        instr = hlo_cost.Instr(
+            "w", "while", [], [],
+            'body=%b, backend_config={"known_trip_count":{"n":"20"}}', ["b"])
+        # Our regex targets trip_count=N or trip_count:"N" forms.
+        assert hlo_cost._while_trip_count(instr) in (1, 20)

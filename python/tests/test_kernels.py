@@ -1,0 +1,171 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    dueling_head,
+    dueling_head_ref,
+    lstm_cell,
+    lstm_cell_ref,
+    lstm_vmem_bytes,
+    value_rescale_inv_ref,
+    value_rescale_ref,
+)
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, *shape, scale=1.0, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+def _lstm_inputs(rng, b, i, h, dtype=np.float32):
+    return (
+        _rand(rng, b, i, dtype=dtype),
+        _rand(rng, b, h, dtype=dtype),
+        _rand(rng, b, h, dtype=dtype),
+        _rand(rng, i, 4 * h, scale=0.2, dtype=dtype),
+        _rand(rng, h, 4 * h, scale=0.2, dtype=dtype),
+        _rand(rng, 4 * h, scale=0.2, dtype=dtype),
+    )
+
+
+class TestLstmCell:
+    @settings(**_SETTINGS)
+    @given(
+        b=st.integers(1, 17),
+        i=st.integers(1, 24),
+        h=st.integers(1, 24),
+        block_b=st.integers(1, 9),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_across_shapes(self, b, i, h, block_b, seed):
+        rng = np.random.default_rng(seed)
+        args = _lstm_inputs(rng, b, i, h)
+        h1, c1 = lstm_cell(*args, block_b=block_b)
+        h2, c2 = lstm_cell_ref(*args)
+        np.testing.assert_allclose(h1, h2, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(c1, c2, rtol=1e-5, atol=1e-5)
+
+    def test_agent_sized(self):
+        rng = np.random.default_rng(0)
+        args = _lstm_inputs(rng, 32, 128, 128)
+        h1, c1 = lstm_cell(*args)
+        h2, c2 = lstm_cell_ref(*args)
+        np.testing.assert_allclose(h1, h2, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(c1, c2, rtol=1e-5, atol=1e-5)
+
+    def test_batch_not_multiple_of_block(self):
+        rng = np.random.default_rng(1)
+        args = _lstm_inputs(rng, 7, 16, 16)
+        h1, c1 = lstm_cell(*args, block_b=4)
+        h2, c2 = lstm_cell_ref(*args)
+        np.testing.assert_allclose(h1, h2, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(c1, c2, rtol=1e-5, atol=1e-5)
+
+    def test_bf16_inputs(self):
+        rng = np.random.default_rng(2)
+        args = _lstm_inputs(rng, 8, 16, 16, dtype=jnp.bfloat16)
+        h1, c1 = lstm_cell(*args)
+        h2, c2 = lstm_cell_ref(*args)
+        np.testing.assert_allclose(
+            np.asarray(h1, np.float32), np.asarray(h2, np.float32),
+            rtol=5e-2, atol=5e-2)
+        np.testing.assert_allclose(
+            np.asarray(c1, np.float32), np.asarray(c2, np.float32),
+            rtol=5e-2, atol=5e-2)
+
+    def test_state_bounded(self):
+        # |h| <= 1 always (tanh(sigmoid-gated cell)); catches gate-order bugs.
+        rng = np.random.default_rng(3)
+        args = _lstm_inputs(rng, 16, 32, 32)
+        h1, _ = lstm_cell(*args)
+        assert float(jnp.max(jnp.abs(h1))) <= 1.0 + 1e-6
+
+    def test_grad_matches_ref(self):
+        rng = np.random.default_rng(4)
+        args = _lstm_inputs(rng, 4, 8, 8)
+
+        def loss_kernel(*a):
+            h, c = lstm_cell(*a)
+            return jnp.sum(h * h) + jnp.sum(jnp.abs(c))
+
+        def loss_ref(*a):
+            h, c = lstm_cell_ref(*a)
+            return jnp.sum(h * h) + jnp.sum(jnp.abs(c))
+
+        g1 = jax.grad(loss_kernel, argnums=(0, 3, 4, 5))(*args)
+        g2 = jax.grad(loss_ref, argnums=(0, 3, 4, 5))(*args)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+    def test_vmem_estimate_matches_hand_computation(self):
+        # block_b=8, I=128, H=128 fp32: hand-derived footprint.
+        act = 8 * (128 + 2 * 128)
+        gates = 8 * 512
+        outs = 8 * 256
+        weights = 512 * (128 + 128 + 1)
+        assert lstm_vmem_bytes(8, 128, 128) == 4 * (act + gates + outs + weights)
+
+    def test_vmem_under_tpu_budget(self):
+        # Default agent tile must fit comfortably in a ~16 MiB VMEM core.
+        assert lstm_vmem_bytes(8, 128, 128) < 1 << 21  # < 2 MiB
+
+
+class TestDuelingHead:
+    @settings(**_SETTINGS)
+    @given(
+        b=st.integers(1, 33),
+        a=st.integers(1, 18),
+        block_b=st.integers(1, 16),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_across_shapes(self, b, a, block_b, seed):
+        rng = np.random.default_rng(seed)
+        v = _rand(rng, b, 1)
+        adv = _rand(rng, b, a)
+        np.testing.assert_allclose(
+            dueling_head(v, adv, block_b=block_b),
+            dueling_head_ref(v, adv),
+            rtol=1e-5, atol=1e-6)
+
+    def test_identifiability(self):
+        # Adding a constant to the advantage stream must not change q.
+        rng = np.random.default_rng(5)
+        v, adv = _rand(rng, 8, 1), _rand(rng, 8, 4)
+        q1 = dueling_head(v, adv)
+        q2 = dueling_head(v, adv + 3.7)
+        np.testing.assert_allclose(q1, q2, rtol=1e-4, atol=1e-5)
+
+    def test_grad_matches_ref(self):
+        rng = np.random.default_rng(6)
+        v, adv = _rand(rng, 4, 1), _rand(rng, 4, 5)
+        g1 = jax.grad(lambda a, b: jnp.sum(dueling_head(a, b) ** 2),
+                      argnums=(0, 1))(v, adv)
+        g2 = jax.grad(lambda a, b: jnp.sum(dueling_head_ref(a, b) ** 2),
+                      argnums=(0, 1))(v, adv)
+        for x, y in zip(g1, g2):
+            np.testing.assert_allclose(x, y, rtol=1e-4, atol=1e-5)
+
+
+class TestValueRescale:
+    @settings(**_SETTINGS)
+    @given(st.lists(st.floats(-1e4, 1e4), min_size=1, max_size=64))
+    def test_inverse_roundtrip(self, xs):
+        x = jnp.asarray(xs, jnp.float32)
+        y = value_rescale_inv_ref(value_rescale_ref(x))
+        np.testing.assert_allclose(y, x, rtol=1e-3, atol=1e-3)
+
+    def test_monotonic_and_compressive(self):
+        x = jnp.linspace(-100.0, 100.0, 201)
+        y = value_rescale_ref(x)
+        assert bool(jnp.all(jnp.diff(y) > 0))
+        assert float(jnp.max(jnp.abs(y))) < float(jnp.max(jnp.abs(x)))
+
+    def test_zero_fixed_point(self):
+        assert float(value_rescale_ref(jnp.float32(0.0))) == 0.0
+        assert float(value_rescale_inv_ref(jnp.float32(0.0))) == 0.0

@@ -1,0 +1,187 @@
+"""R2D2 / V-trace loss semantics + optimizer behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import loss, model, optim
+
+SMALL = model.AgentConfig(obs_size=6, obs_channels=2, num_actions=3,
+                          conv1_filters=4, conv2_filters=8, torso_dim=16,
+                          lstm_hidden=16, head_dim=8)
+LCFG = loss.R2d2Config(burn_in=2, unroll_len=6, n_step=2)
+
+
+def _batch(rng, b, t, cfg):
+    return (
+        jnp.asarray(rng.random((b, t) + cfg.obs_shape), jnp.float32),
+        jnp.asarray(rng.integers(0, cfg.num_actions, (b, t)), jnp.int32),
+        jnp.asarray(rng.standard_normal((b, t)), jnp.float32),
+        jnp.full((b, t), 0.99, jnp.float32),
+    )
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = model.init_params(jax.random.PRNGKey(0), SMALL)
+    target = jax.tree_util.tree_map(lambda x: x.copy(), params)
+    opt = optim.init_opt_state(params)
+    return params, target, opt
+
+
+class TestNStepTargets:
+    def test_zero_td_when_consistent(self):
+        # If q_online == q_target == h(const/(1-gamma)) and reward==const
+        # with no rescale (check in raw space via n=1, gamma through
+        # discounts), td should be ~0 for a self-consistent value fn.
+        t, b, a = 6, 2, 3
+        gamma = 0.9
+        r = 1.0
+        v = r / (1.0 - gamma)  # un-rescaled fixed point
+        from compile.kernels.ref import value_rescale_ref as h
+        q = jnp.full((t, b, a), float(h(jnp.float32(v))))
+        actions = jnp.zeros((t, b), jnp.int32)
+        rewards = jnp.full((t, b), r)
+        discounts = jnp.full((t, b), gamma)
+        td, valid = loss.n_step_targets(q, q, actions, rewards, discounts, 1)
+        assert valid.shape == (t,)
+        np.testing.assert_allclose(np.asarray(td[:-1]), 0.0, atol=1e-4)
+
+    def test_tail_masked(self):
+        t, b, a, n = 8, 3, 4, 3
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.standard_normal((t, b, a)), jnp.float32)
+        actions = jnp.zeros((t, b), jnp.int32)
+        rewards = jnp.ones((t, b), jnp.float32)
+        discounts = jnp.full((t, b), 0.9, jnp.float32)
+        td, valid = loss.n_step_targets(q, q, actions, rewards, discounts, n)
+        assert np.asarray(valid)[-n:].sum() == 0
+        np.testing.assert_array_equal(np.asarray(td[-n:]), 0.0)
+
+    def test_terminal_cuts_bootstrap(self):
+        # discount 0 at t means the target for t is just the reward sum up
+        # to the terminal — changing q beyond it must not change td[t].
+        t, b, a, n = 6, 1, 2, 2
+        rng = np.random.default_rng(1)
+        q1 = jnp.asarray(rng.standard_normal((t, b, a)), jnp.float32)
+        q2 = q1.at[3:].add(5.0)  # perturb after the terminal at t=2
+        actions = jnp.zeros((t, b), jnp.int32)
+        rewards = jnp.ones((t, b), jnp.float32)
+        discounts = jnp.asarray(
+            [[0.9], [0.9], [0.0], [0.9], [0.9], [0.9]], jnp.float32)
+        td1, _ = loss.n_step_targets(q1, q1, actions, rewards, discounts, n)
+        td2, _ = loss.n_step_targets(q2, q2, actions, rewards, discounts, n)
+        # t=1: bootstrap at t=3 is cut by discount[2]=0 -> td equal even
+        # though q at t=3 changed (selected q at t=1 unchanged).
+        np.testing.assert_allclose(td1[1], td2[1], atol=1e-5)
+
+
+class TestR2d2Loss:
+    def test_loss_finite_and_priorities_shape(self, setup):
+        params, target, _ = setup
+        rng = np.random.default_rng(2)
+        obs, acts, rews, disc = _batch(rng, 3, LCFG.seq_len, SMALL)
+        h0, c0 = model.initial_state(3, SMALL)
+        l, (prio, mean_td) = loss.r2d2_loss(
+            params, target, obs, acts, rews, disc, h0, c0, SMALL, LCFG)
+        assert np.isfinite(float(l))
+        assert prio.shape == (3,)
+        assert bool(jnp.all(prio >= 0))
+
+    def test_train_step_reduces_loss_on_fixed_batch(self, setup):
+        params, target, opt = setup
+        rng = np.random.default_rng(3)
+        obs, acts, rews, disc = _batch(rng, 4, LCFG.seq_len, SMALL)
+        h0, c0 = model.initial_state(4, SMALL)
+        step = jax.jit(lambda p, t, o, *a: loss.r2d2_train_step(
+            p, t, o, *a, agent_cfg=SMALL, cfg=LCFG))
+        out = step(params, target, opt, obs, acts, rews, disc, h0, c0)
+        first = float(out[2])
+        for _ in range(10):
+            out = step(out[0], target, out[1], obs, acts, rews, disc, h0, c0)
+        assert float(out[2]) < first
+
+    def test_burn_in_gradient_isolation(self, setup):
+        # Gradients must not flow through burn-in: perturbing burn-in-only
+        # rewards changes nothing (rewards before burn_in are unused).
+        params, target, _ = setup
+        rng = np.random.default_rng(4)
+        obs, acts, rews, disc = _batch(rng, 2, LCFG.seq_len, SMALL)
+        h0, c0 = model.initial_state(2, SMALL)
+        l1, _ = loss.r2d2_loss(params, target, obs, acts, rews, disc,
+                               h0, c0, SMALL, LCFG)
+        rews2 = rews.at[:, : LCFG.burn_in].add(10.0)
+        l2, _ = loss.r2d2_loss(params, target, obs, acts, rews2, disc,
+                               h0, c0, SMALL, LCFG)
+        np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+class TestAdam:
+    def test_descends_quadratic(self):
+        p = {"w": jnp.asarray([5.0, -3.0])}
+        opt = optim.init_opt_state(p)
+        cfg = optim.AdamConfig(lr=0.1)
+        for _ in range(200):
+            g = jax.tree_util.tree_map(lambda x: 2 * x, p)
+            p, opt, _ = optim.adam_update(p, g, opt, cfg)
+        np.testing.assert_allclose(np.asarray(p["w"]), 0.0, atol=1e-2)
+
+    def test_step_counter_increments(self):
+        p = {"w": jnp.ones((2,))}
+        opt = optim.init_opt_state(p)
+        g = {"w": jnp.ones((2,))}
+        _, opt, _ = optim.adam_update(p, g, opt, optim.AdamConfig())
+        assert int(opt[0]) == 1
+
+    def test_global_norm_clip(self):
+        g = {"a": jnp.asarray([30.0, 40.0])}  # norm 50
+        clipped, norm = optim.clip_by_global_norm(g, 5.0)
+        assert abs(float(norm) - 50.0) < 1e-4
+        np.testing.assert_allclose(
+            np.asarray(clipped["a"]), [3.0, 4.0], rtol=1e-4)
+
+    def test_clip_noop_below_threshold(self):
+        g = {"a": jnp.asarray([0.3, 0.4])}
+        clipped, _ = optim.clip_by_global_norm(g, 5.0)
+        np.testing.assert_allclose(np.asarray(clipped["a"]), [0.3, 0.4],
+                                   rtol=1e-6)
+
+
+class TestVtrace:
+    def test_returns_match_onpolicy_td_lambda1(self):
+        # With rho = c = 1 (on-policy), vs is the lambda=1 return.
+        t, b = 5, 2
+        rng = np.random.default_rng(5)
+        values = jnp.asarray(rng.standard_normal((t, b)), jnp.float32)
+        rewards = jnp.asarray(rng.standard_normal((t, b)), jnp.float32)
+        discounts = jnp.full((t, b), 0.9, jnp.float32)
+        boot = jnp.asarray(rng.standard_normal((b,)), jnp.float32)
+        ones = jnp.ones((t, b), jnp.float32)
+        vs = loss.vtrace_returns(values, rewards, discounts, ones, ones, boot)
+        # Explicit Monte-Carlo + bootstrap computation.
+        expected = np.zeros((t, b), np.float32)
+        vnp, rnp, dnp = map(np.asarray, (values, rewards, discounts))
+        bootnp = np.asarray(boot)
+        for bi in range(b):
+            acc = bootnp[bi]
+            for ti in reversed(range(t)):
+                acc = rnp[ti, bi] + dnp[ti, bi] * acc
+                expected[ti, bi] = acc
+        np.testing.assert_allclose(np.asarray(vs), expected, rtol=1e-4,
+                                   atol=1e-4)
+
+    def test_train_step_runs_and_descends(self):
+        vcfg = loss.VtraceConfig(unroll_len=5)
+        vp = model.init_vtrace_params(jax.random.PRNGKey(2), SMALL)
+        vopt = optim.init_opt_state(vp)
+        rng = np.random.default_rng(6)
+        obs, acts, rews, disc = _batch(rng, 3, 5, SMALL)
+        blog = jnp.zeros((3, 5, SMALL.num_actions), jnp.float32)
+        h0, c0 = model.initial_state(3, SMALL)
+        step = jax.jit(lambda p, o, *a: loss.vtrace_train_step(
+            p, o, *a, agent_cfg=SMALL, cfg=vcfg))
+        out = step(vp, vopt, obs, acts, rews, disc, blog, h0, c0)
+        assert np.isfinite(float(out[2]))
+        out2 = step(out[0], out[1], obs, acts, rews, disc, blog, h0, c0)
+        assert np.isfinite(float(out2[2]))

@@ -1,0 +1,131 @@
+"""L2 model: shapes, determinism, scan-vs-static-unroll equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, nn
+
+CFG = model.AgentConfig()
+SMALL = model.AgentConfig(obs_size=6, obs_channels=2, num_actions=3,
+                          conv1_filters=4, conv2_filters=8, torso_dim=16,
+                          lstm_hidden=16, head_dim=8)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def small_params():
+    return model.init_params(jax.random.PRNGKey(0), SMALL)
+
+
+def _obs(rng, b, cfg, t=None):
+    shape = (b,) + cfg.obs_shape if t is None else (t, b) + cfg.obs_shape
+    return jnp.asarray(rng.random(shape), jnp.float32)
+
+
+class TestInference:
+    def test_shapes(self, params):
+        rng = np.random.default_rng(0)
+        b = 8
+        h, c = model.initial_state(b, CFG)
+        q, h2, c2 = model.apply_inference(params, h, c, _obs(rng, b, CFG), CFG)
+        assert q.shape == (b, CFG.num_actions)
+        assert h2.shape == (b, CFG.lstm_hidden)
+        assert c2.shape == (b, CFG.lstm_hidden)
+
+    def test_deterministic(self, params):
+        rng = np.random.default_rng(1)
+        obs = _obs(rng, 4, CFG)
+        h, c = model.initial_state(4, CFG)
+        q1, _, _ = model.apply_inference(params, h, c, obs, CFG)
+        q2, _, _ = model.apply_inference(params, h, c, obs, CFG)
+        np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+    def test_batch_elements_independent(self, params):
+        # q for element 0 must not depend on element 1's observation.
+        rng = np.random.default_rng(2)
+        obs_a, obs_b = _obs(rng, 2, CFG), _obs(rng, 2, CFG)
+        obs_b = obs_b.at[0].set(obs_a[0])
+        h, c = model.initial_state(2, CFG)
+        qa, _, _ = model.apply_inference(params, h, c, obs_a, CFG)
+        qb, _, _ = model.apply_inference(params, h, c, obs_b, CFG)
+        np.testing.assert_allclose(qa[0], qb[0], rtol=1e-5, atol=1e-6)
+
+    def test_state_carries_information(self, params):
+        # Same obs, different states -> different q (recurrence is live).
+        rng = np.random.default_rng(3)
+        obs = _obs(rng, 1, CFG)
+        h0, c0 = model.initial_state(1, CFG)
+        h1 = h0 + 0.5
+        qa, _, _ = model.apply_inference(params, h0, c0, obs, CFG)
+        qb, _, _ = model.apply_inference(params, h1, c0, obs, CFG)
+        assert not np.allclose(np.asarray(qa), np.asarray(qb))
+
+
+class TestUnroll:
+    def test_scan_matches_static(self, small_params):
+        rng = np.random.default_rng(4)
+        t, b = 6, 3
+        obs = _obs(rng, b, SMALL, t=t)
+        h0, c0 = model.initial_state(b, SMALL)
+        q1, (h1, c1) = model.unroll(small_params, h0, c0, obs, SMALL)
+        q2, (h2, c2) = model.unroll_static(small_params, h0, c0, obs, SMALL)
+        np.testing.assert_allclose(q1, q2, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(h1, h2, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(c1, c2, rtol=1e-4, atol=1e-5)
+
+    def test_unroll_equals_stepwise_inference(self, small_params):
+        rng = np.random.default_rng(5)
+        t, b = 4, 2
+        obs = _obs(rng, b, SMALL, t=t)
+        h, c = model.initial_state(b, SMALL)
+        q_seq, _ = model.unroll(small_params, h, c, obs, SMALL)
+        for i in range(t):
+            q, h, c = model.apply_inference(small_params, h, c, obs[i], SMALL)
+            np.testing.assert_allclose(q_seq[i], q, rtol=1e-4, atol=1e-5)
+
+
+class TestParams:
+    def test_param_count_formula(self, params):
+        # Hand-derived for the default config.
+        expected = (
+            3 * 3 * 4 * 16 + 16            # conv1
+            + 3 * 3 * 16 * 32 + 32          # conv2
+            + 800 * 128 + 128               # torso dense
+            + 128 * 512 + 128 * 512 + 512   # lstm
+            + 128 * 64 + 64                 # head
+            + 64 * 1 + 1                    # value
+            + 64 * 4 + 4                    # advantage
+        )
+        assert nn.param_count(params) == expected
+
+    def test_flat_specs_sorted_and_stable(self, params):
+        specs = nn.flat_param_specs(params)
+        names = [s[0] for s in specs]
+        assert names == sorted(names)
+        assert len(names) == len(set(names))
+        # jax dict-pytree order must match tree_leaves order.
+        leaves = jax.tree_util.tree_leaves(params)
+        assert [tuple(l.shape) for l in leaves] == [s[1] for s in specs]
+
+    def test_conv_out_dim(self):
+        assert CFG.conv_out_dim == 5 * 5 * 32
+        assert model.AgentConfig(obs_size=9).conv_out_dim == 5 * 5 * 32
+
+
+class TestVtraceAgent:
+    def test_unroll_shapes(self):
+        vp = model.init_vtrace_params(jax.random.PRNGKey(1), SMALL)
+        rng = np.random.default_rng(6)
+        t, b = 5, 3
+        obs = _obs(rng, b, SMALL, t=t)
+        h0, c0 = model.initial_state(b, SMALL)
+        logits, values, (h, c) = model.vtrace_unroll(vp, h0, c0, obs, SMALL)
+        assert logits.shape == (t, b, SMALL.num_actions)
+        assert values.shape == (t, b)
+        assert h.shape == (b, SMALL.lstm_hidden)

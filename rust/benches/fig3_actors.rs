@@ -1,0 +1,93 @@
+//! Figure 3: impact of the number of actors on runtime, GPU power
+//! (left), and performance per GPU Watt (right).
+//!
+//! Paper reference points: 4→40 actors = 5.8x speedup; 40→256 = only 2x
+//! more (knee at the 40 hardware threads); GPU power grows with actors
+//! from a ~70 W idle-heavy floor; perf/W improves monotonically.
+//! Both the analytic steady-state model and the tick-DES are reported.
+
+use rlarch::report::figure::{ascii_bar, Table};
+use rlarch::report::write_csv;
+use rlarch::simarch::{
+    default_system, des, synthetic_paper_train_trace, synthetic_paper_trace,
+    TraceSet,
+};
+use std::path::Path;
+
+fn main() {
+    let (infer, train) = match TraceSet::load(Path::new("artifacts")) {
+        Ok(ts) => (
+            ts.find("infer_paper_scale").expect("infer trace").clone(),
+            ts.find("train_paper_scale").expect("train trace").clone(),
+        ),
+        Err(_) => {
+            eprintln!("(artifacts missing: using synthetic paper-scale traces)");
+            (
+                synthetic_paper_trace(1, 1, 64),
+                synthetic_paper_train_trace(2, 80, 16),
+            )
+        }
+    };
+    let m = default_system(infer, train);
+    let actors = [1usize, 2, 4, 8, 16, 32, 40, 64, 128, 256];
+    let fixed_frames = 1_000_000u64;
+
+    println!("# Fig. 3 — actor sweep (normalized runtime, GPU power, perf/W)\n");
+    let base_runtime = m.runtime_for(fixed_frames, actors[0]);
+    let mut t = Table::new(&[
+        "actors",
+        "norm runtime",
+        "",
+        "power W",
+        "perf/W",
+        "batch",
+        "GPU util",
+    ]);
+    let mut csv = String::from("actors,norm_runtime,power_w,perf_per_watt,gpu_util\n");
+    for &n in &actors {
+        let p = m.steady_state(n);
+        let rt = m.runtime_for(fixed_frames, n) / base_runtime;
+        t.row(&[
+            n.to_string(),
+            format!("{rt:.3}"),
+            ascii_bar(rt, 24),
+            format!("{:.0}", p.power_w),
+            format!("{:.1}", p.perf_per_watt),
+            format!("{:.1}", p.batch_size),
+            format!("{:.2}", p.gpu_util),
+        ]);
+        csv.push_str(&format!(
+            "{n},{rt},{},{},{}\n",
+            p.power_w, p.perf_per_watt, p.gpu_util
+        ));
+    }
+    println!("{}", t.to_markdown());
+
+    let r4 = m.steady_state(4).env_rate;
+    let r40 = m.steady_state(40).env_rate;
+    let r256 = m.steady_state(256).env_rate;
+    println!(
+        "4→40 actors: {:.2}x speedup (paper: 5.8x); 40→256: {:.2}x more \
+         (paper: 2x). Knee at the CPU hardware-thread count.\n",
+        r40 / r4,
+        r256 / r40
+    );
+
+    // DES cross-check on three points.
+    println!("## tick-DES cross-check");
+    let mut dt = Table::new(&["actors", "DES steps/s", "analytic steps/s", "ratio"]);
+    for n in [8usize, 40, 128] {
+        let d = des::simulate(&m, n, 0.3, 20e-6);
+        let a = m.steady_state(n);
+        dt.row(&[
+            n.to_string(),
+            format!("{:.0}", d.env_rate),
+            format!("{:.0}", a.env_rate),
+            format!("{:.2}", d.env_rate / a.env_rate),
+        ]);
+    }
+    println!("{}", dt.to_markdown());
+
+    let p = write_csv("fig3_actors", &csv);
+    println!("csv: {}", p.display());
+}

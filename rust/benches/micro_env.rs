@@ -1,0 +1,90 @@
+//! Micro-bench: environment suite step rates (the CPU-side workload the
+//! paper's actor sweep is made of), per game, with and without the
+//! frame-stack wrapper, plus the step-cost calibration knob.
+
+use rlarch::config::EnvConfig;
+use rlarch::env::wrappers::Wrapped;
+use rlarch::env::{make_env, new_frame, registered_envs};
+use rlarch::report::figure::Table;
+use rlarch::report::write_csv;
+use rlarch::util::prng::Pcg32;
+use std::time::Instant;
+
+fn main() {
+    println!("# micro_env — environment step rates\n");
+    let steps = 200_000;
+    let mut t = Table::new(&["env", "raw steps/s", "wrapped steps/s (stack=4)"]);
+    let mut csv = String::from("env,raw_rate,wrapped_rate\n");
+    for name in registered_envs() {
+        // Raw env.
+        let mut env = make_env(name, 1).unwrap();
+        let mut frame = new_frame();
+        let mut rng = Pcg32::seeded(2);
+        env.reset(&mut frame);
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            if env.step(rng.index(4), &mut frame).done {
+                env.reset(&mut frame);
+            }
+        }
+        let raw = steps as f64 / t0.elapsed().as_secs_f64();
+
+        // Wrapped (sticky + stack + episode bookkeeping).
+        let cfg = EnvConfig {
+            name: name.to_string(),
+            ..Default::default()
+        };
+        let mut w = Wrapped::from_config(&cfg, 0).unwrap();
+        let mut obs = vec![0.0f32; w.obs_len()];
+        w.reset(&mut obs);
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            w.step(rng.index(4), &mut obs);
+        }
+        let wrapped = steps as f64 / t0.elapsed().as_secs_f64();
+
+        t.row(&[
+            name.to_string(),
+            format!("{raw:.0}"),
+            format!("{wrapped:.0}"),
+        ]);
+        csv.push_str(&format!("{name},{raw},{wrapped}\n"));
+    }
+    println!("{}", t.to_markdown());
+
+    // Step-cost calibration: the knob that emulates ALE-weight envs.
+    let mut ct = Table::new(&["step_cost_us", "measured steps/s", "target steps/s"]);
+    for cost in [0u64, 50, 125, 500] {
+        let cfg = EnvConfig {
+            name: "catch".into(),
+            step_cost_us: cost,
+            ..Default::default()
+        };
+        let mut w = Wrapped::from_config(&cfg, 0).unwrap();
+        let mut obs = vec![0.0f32; w.obs_len()];
+        w.reset(&mut obs);
+        let n = if cost == 0 { 100_000 } else { 2_000 };
+        let t0 = Instant::now();
+        for i in 0..n {
+            w.step(i % 3, &mut obs);
+        }
+        let rate = n as f64 / t0.elapsed().as_secs_f64();
+        let target = if cost == 0 {
+            f64::NAN
+        } else {
+            1e6 / cost as f64
+        };
+        ct.row(&[
+            cost.to_string(),
+            format!("{rate:.0}"),
+            if target.is_nan() {
+                "—".into()
+            } else {
+                format!("{target:.0}")
+            },
+        ]);
+    }
+    println!("{}", ct.to_markdown());
+    let p = write_csv("micro_env", &csv);
+    println!("csv: {}", p.display());
+}

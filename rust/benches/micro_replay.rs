@@ -1,0 +1,71 @@
+//! Micro-bench: prioritized sequence replay hot paths (add / sample /
+//! update-priorities) — the learner-side substrate (Reverb-equivalent).
+
+use rlarch::replay::{ReplayConfig, SequenceReplay};
+use rlarch::report::{bench, BenchResult};
+use rlarch::rl::Sequence;
+use rlarch::util::prng::Pcg32;
+
+fn seq(obs_len: usize, t: usize, hidden: usize, tag: f32) -> Sequence {
+    Sequence {
+        obs: vec![tag; t * obs_len],
+        actions: vec![0; t],
+        rewards: vec![tag; t],
+        discounts: vec![0.99; t],
+        h0: vec![0.0; hidden],
+        c0: vec![0.0; hidden],
+        actor_id: 0,
+        valid_len: t,
+    }
+}
+
+fn main() {
+    println!("# micro_replay — R2D2 sequence replay (obs 400, T=20, H=128)\n");
+    let cfg = || ReplayConfig {
+        capacity: 4_096,
+        alpha: 0.9,
+        min_priority: 1e-3,
+    };
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // add (ring insert at max priority)
+    let r = SequenceReplay::new(cfg());
+    let template = seq(400, 20, 128, 1.0);
+    results.push(bench("replay.add", 100, 2_000, || {
+        r.add(template.clone());
+    }));
+
+    // sample batch of 16
+    let r = SequenceReplay::new(cfg());
+    for i in 0..4_096 {
+        r.add(seq(400, 20, 128, i as f32));
+    }
+    let mut rng = Pcg32::seeded(1);
+    results.push(bench("replay.sample_b16", 20, 500, || {
+        std::hint::black_box(r.sample(16, &mut rng).unwrap());
+    }));
+
+    // update priorities for 16 slots
+    let batch = r.sample(16, &mut rng).unwrap();
+    let prios = vec![0.5f32; 16];
+    results.push(bench("replay.update_prio_16", 100, 5_000, || {
+        r.update_priorities(&batch.slots, &prios);
+    }));
+
+    // end-to-end learner-side cycle: sample + update
+    results.push(bench("replay.cycle_b16", 20, 500, || {
+        let b = r.sample(16, &mut rng).unwrap();
+        r.update_priorities(&b.slots, &prios);
+    }));
+
+    println!("{}", BenchResult::markdown_header());
+    for r in &results {
+        println!("{}", r.to_markdown_row());
+    }
+    let csv: String = std::iter::once("name,mean_s,p95_s".to_string())
+        .chain(results.iter().map(|r| format!("{},{},{}", r.name, r.mean_s, r.p95_s)))
+        .collect::<Vec<_>>()
+        .join("\n");
+    let p = rlarch::report::write_csv("micro_replay", &csv);
+    println!("\ncsv: {}", p.display());
+}

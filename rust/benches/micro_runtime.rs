@@ -1,0 +1,74 @@
+//! Micro-bench: PJRT runtime hot paths on the real artifacts — batched
+//! inference latency per compiled batch size (the quantity the central
+//! batcher amortizes) and the full R2D2 train step. Skips gracefully
+//! when artifacts are absent.
+
+use rlarch::report::figure::Table;
+use rlarch::report::{bench, write_csv, BenchResult};
+use rlarch::runtime::{InferRequest, TrainBatch, XlaRuntime};
+use rlarch::util::prng::Pcg32;
+use std::path::Path;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("micro_runtime: run `make artifacts` first (skipping)");
+        return;
+    }
+    println!("# micro_runtime — PJRT execution on the real artifacts\n");
+    let mut rt = XlaRuntime::load(dir, None, true).unwrap();
+    let d = rt.dims();
+
+    // Inference latency per batch size + per-row cost.
+    let mut t = Table::new(&["batch", "latency", "per-row", "rows/s"]);
+    let mut csv = String::from("batch,latency_s,per_row_s\n");
+    for b in rt.manifest.infer_batch_sizes() {
+        let req = InferRequest {
+            n: b,
+            h: vec![0.1; b * d.hidden],
+            c: vec![0.1; b * d.hidden],
+            obs: vec![0.4; b * d.obs_len],
+        };
+        let r = bench(&format!("infer_b{b}"), 5, 40, || {
+            std::hint::black_box(rt.infer(&req).unwrap());
+        });
+        t.row(&[
+            b.to_string(),
+            rlarch::report::bench::fmt_time(r.mean_s),
+            rlarch::report::bench::fmt_time(r.mean_s / b as f64),
+            format!("{:.0}", b as f64 / r.mean_s),
+        ]);
+        csv.push_str(&format!("{b},{},{}\n", r.mean_s, r.mean_s / b as f64));
+    }
+    println!("{}", t.to_markdown());
+    println!(
+        "batching amortization is the SEED central-inference premise: \
+         per-row cost falls with batch size.\n"
+    );
+
+    // Train step.
+    let bt = d.train_batch * d.seq_len;
+    let mut rng = Pcg32::seeded(3);
+    let batch = TrainBatch {
+        batch: d.train_batch,
+        obs: (0..bt * d.obs_len).map(|_| rng.next_f32()).collect(),
+        actions: (0..bt).map(|_| rng.index(d.num_actions) as i32).collect(),
+        rewards: (0..bt).map(|_| rng.next_f32() - 0.5).collect(),
+        discounts: vec![0.997; bt],
+        h0: vec![0.0; d.train_batch * d.hidden],
+        c0: vec![0.0; d.train_batch * d.hidden],
+    };
+    let r = bench("train_step", 2, 10, || {
+        std::hint::black_box(rt.train(&batch).unwrap());
+    });
+    println!("{}", BenchResult::markdown_header());
+    println!("{}", r.to_markdown_row());
+    println!(
+        "\n(train graph: B={} T={} — {} params through Adam per step)",
+        d.train_batch,
+        d.seq_len,
+        rt.manifest.param_count
+    );
+    let p = write_csv("micro_runtime", &csv);
+    println!("csv: {}", p.display());
+}

@@ -1,0 +1,274 @@
+//! Declarative CLI flag parser (clap is not in the offline crate set).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments; generates `--help` text from the declarations.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag `--{0}` (see --help)")]
+    Unknown(String),
+    #[error("flag `--{0}` expects a value")]
+    MissingValue(String),
+    #[error("flag `--{0}`: cannot parse `{1}` as {2}")]
+    BadValue(String, String, &'static str),
+    #[error("missing required positional `{0}`")]
+    MissingPositional(&'static str),
+}
+
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Builder + parser.
+pub struct Cli {
+    program: &'static str,
+    about: &'static str,
+    flags: Vec<FlagSpec>,
+    positionals: Vec<(&'static str, &'static str)>,
+}
+
+#[derive(Debug, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Self {
+            program,
+            about,
+            flags: Vec::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default.to_string()),
+        });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
+        for (p, _) in &self.positionals {
+            out.push_str(&format!(" <{p}>"));
+        }
+        out.push_str(" [flags]\n\nFLAGS:\n");
+        for f in &self.flags {
+            let default = f
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            out.push_str(&format!("  --{:<24} {}{}\n", f.name, f.help, default));
+        }
+        if !self.positionals.is_empty() {
+            out.push_str("\nPOSITIONALS:\n");
+            for (p, h) in &self.positionals {
+                out.push_str(&format!("  {p:<26} {h}\n"));
+            }
+        }
+        out
+    }
+
+    /// Parse; on `--help` prints help and exits the process.
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, CliError> {
+        let mut parsed = Parsed::default();
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                parsed.values.insert(f.name.to_string(), d.clone());
+            }
+            if !f.takes_value {
+                parsed.bools.insert(f.name.to_string(), false);
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                println!("{}", self.help_text());
+                std::process::exit(0);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(name.clone()))?
+                        }
+                    };
+                    parsed.values.insert(name, v);
+                } else {
+                    parsed.bools.insert(name, true);
+                }
+            } else {
+                parsed.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        if parsed.positionals.len() < self.positionals.len() {
+            return Err(CliError::MissingPositional(
+                self.positionals[parsed.positionals.len()].0,
+            ));
+        }
+        Ok(parsed)
+    }
+
+    /// Parse from the process environment (skipping argv[0]).
+    pub fn parse_env(&self) -> Result<Parsed, CliError> {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        self.parse(&args)
+    }
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .map(|s| s.as_str())
+            .unwrap_or_default()
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError::BadValue(name.into(), self.get(name).into(), "usize"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError::BadValue(name.into(), self.get(name).into(), "u64"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError::BadValue(name.into(), self.get(name).into(), "f64"))
+    }
+
+    pub fn get_switch(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    /// Parse a comma-separated list of usizes (sweep specs like "4,8,40").
+    pub fn get_usize_list(&self, name: &str) -> Result<Vec<usize>, CliError> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim().parse().map_err(|_| {
+                    CliError::BadValue(name.into(), s.into(), "usize list")
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("test", "test tool")
+            .flag("actors", "8", "number of actors")
+            .flag("mode", "central", "inference mode")
+            .switch("verbose", "chatty output")
+            .positional("config", "config path")
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = cli().parse(&sv(&["conf.toml"])).unwrap();
+        assert_eq!(p.get("actors"), "8");
+        assert_eq!(p.get_usize("actors").unwrap(), 8);
+        assert!(!p.get_switch("verbose"));
+        assert_eq!(p.positional(0), Some("conf.toml"));
+    }
+
+    #[test]
+    fn equals_and_space_forms() {
+        let p = cli()
+            .parse(&sv(&["c", "--actors=32", "--mode", "local", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.get_usize("actors").unwrap(), 32);
+        assert_eq!(p.get("mode"), "local");
+        assert!(p.get_switch("verbose"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(
+            cli().parse(&sv(&["c", "--nope"])),
+            Err(CliError::Unknown(_))
+        ));
+        assert!(matches!(
+            cli().parse(&sv(&["c", "--actors"])),
+            Err(CliError::MissingValue(_))
+        ));
+        assert!(matches!(cli().parse(&sv(&[])), Err(CliError::MissingPositional(_))));
+        let p = cli().parse(&sv(&["c", "--actors=abc"])).unwrap();
+        assert!(p.get_usize("actors").is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let c = Cli::new("t", "t").flag("sweep", "4,8,40", "sweep");
+        let p = c.parse(&[]).unwrap();
+        assert_eq!(p.get_usize_list("sweep").unwrap(), vec![4, 8, 40]);
+    }
+
+    #[test]
+    fn help_mentions_flags() {
+        let h = cli().help_text();
+        assert!(h.contains("--actors"));
+        assert!(h.contains("config"));
+    }
+}

@@ -1,0 +1,21 @@
+//! Configuration: TOML-subset parser + typed config structs with
+//! validation. `SystemConfig::from_toml` is the single entrypoint the CLI
+//! and examples use; benches construct configs programmatically.
+
+pub mod toml;
+pub mod types;
+
+pub use types::{
+    ActorConfig, BatcherConfig, ConfigError, CpuModelConfig, EnvConfig,
+    GpuModelConfig, InferenceMode, LearnerConfig, PowerModelConfig,
+    SystemConfig,
+};
+
+use std::path::Path;
+
+/// Load a SystemConfig from a TOML file.
+pub fn load(path: &Path) -> Result<SystemConfig, ConfigError> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| ConfigError::Invalid(format!("read {path:?}: {e}")))?;
+    SystemConfig::from_toml(&text)
+}

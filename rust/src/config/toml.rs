@@ -1,0 +1,294 @@
+//! TOML-subset parser for run configuration files.
+//!
+//! Supports the subset our configs use: `[section]` and `[a.b]` tables,
+//! `key = value` with string / integer / float / bool / array values,
+//! comments, and blank lines. Values land in a `util::json::Value` tree so
+//! the typed config layer (config::types) shares one accessor API with the
+//! JSON artifacts. Unsupported TOML (multi-line strings, dates, inline
+//! tables, arrays-of-tables) is rejected with a line-numbered error.
+
+use crate::util::json::Value;
+
+#[derive(Debug, thiserror::Error)]
+pub enum TomlError {
+    #[error("line {0}: {1}")]
+    Syntax(usize, String),
+}
+
+pub fn parse(text: &str) -> Result<Value, TomlError> {
+    let mut root: Vec<(String, Value)> = Vec::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if line.starts_with("[[") {
+                return Err(TomlError::Syntax(
+                    lineno + 1,
+                    "arrays of tables are not supported".into(),
+                ));
+            }
+            let inner = line
+                .strip_prefix('[')
+                .and_then(|s| s.strip_suffix(']'))
+                .ok_or_else(|| {
+                    TomlError::Syntax(lineno + 1, "malformed table header".into())
+                })?;
+            current_path = inner
+                .split('.')
+                .map(|s| s.trim().to_string())
+                .collect();
+            if current_path.iter().any(|s| s.is_empty()) {
+                return Err(TomlError::Syntax(
+                    lineno + 1,
+                    "empty table-name segment".into(),
+                ));
+            }
+            ensure_table(&mut root, &current_path, lineno + 1)?;
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| {
+            TomlError::Syntax(lineno + 1, "expected `key = value`".into())
+        })?;
+        let key = line[..eq].trim().trim_matches('"').to_string();
+        if key.is_empty() {
+            return Err(TomlError::Syntax(lineno + 1, "empty key".into()));
+        }
+        let value = parse_value(line[eq + 1..].trim(), lineno + 1)?;
+        insert(&mut root, &current_path, key, value, lineno + 1)?;
+    }
+    Ok(Value::Obj(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<Value, TomlError> {
+    let t = text.trim();
+    if t.is_empty() {
+        return Err(TomlError::Syntax(lineno, "missing value".into()));
+    }
+    if t.starts_with('"') {
+        let inner = t
+            .strip_prefix('"')
+            .and_then(|s| s.strip_suffix('"'))
+            .ok_or_else(|| TomlError::Syntax(lineno, "unterminated string".into()))?;
+        return Ok(Value::Str(unescape(inner)));
+    }
+    if t.starts_with('[') {
+        let inner = t
+            .strip_prefix('[')
+            .and_then(|s| s.strip_suffix(']'))
+            .ok_or_else(|| TomlError::Syntax(lineno, "unterminated array".into()))?;
+        let mut items = Vec::new();
+        for part in split_array_items(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part, lineno)?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    match t {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let cleaned = t.replace('_', "");
+    if let Ok(x) = cleaned.parse::<f64>() {
+        return Ok(Value::Num(x));
+    }
+    Err(TomlError::Syntax(lineno, format!("cannot parse value `{t}`")))
+}
+
+fn split_array_items(inner: &str) -> Vec<String> {
+    let mut items = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in inner.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                items.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        items.push(cur);
+    }
+    items
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::new();
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+fn ensure_table(
+    root: &mut Vec<(String, Value)>,
+    path: &[String],
+    lineno: usize,
+) -> Result<(), TomlError> {
+    let mut cur = root;
+    for seg in path {
+        let pos = cur.iter().position(|(k, _)| k == seg);
+        let idx = match pos {
+            Some(i) => i,
+            None => {
+                cur.push((seg.clone(), Value::Obj(Vec::new())));
+                cur.len() - 1
+            }
+        };
+        cur = match &mut cur[idx].1 {
+            Value::Obj(kvs) => kvs,
+            _ => {
+                return Err(TomlError::Syntax(
+                    lineno,
+                    format!("`{seg}` is both a value and a table"),
+                ))
+            }
+        };
+    }
+    Ok(())
+}
+
+fn insert(
+    root: &mut Vec<(String, Value)>,
+    path: &[String],
+    key: String,
+    value: Value,
+    lineno: usize,
+) -> Result<(), TomlError> {
+    let mut cur = root;
+    for seg in path {
+        let idx = cur
+            .iter()
+            .position(|(k, _)| k == seg)
+            .expect("table created by ensure_table");
+        cur = match &mut cur[idx].1 {
+            Value::Obj(kvs) => kvs,
+            _ => {
+                return Err(TomlError::Syntax(
+                    lineno,
+                    format!("`{seg}` is not a table"),
+                ))
+            }
+        };
+    }
+    if cur.iter().any(|(k, _)| *k == key) {
+        return Err(TomlError::Syntax(lineno, format!("duplicate key `{key}`")));
+    }
+    cur.push((key, value));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_and_sections() {
+        let v = parse(
+            r#"
+# comment
+name = "run1"
+actors = 40          # trailing comment
+ratio = 0.5
+flag = true
+
+[gpu]
+sms = 80
+mem_bw_gbps = 900.0
+
+[sim.cpu]
+threads = 40
+"#,
+        )
+        .unwrap();
+        assert_eq!(v.path("name").unwrap().as_str(), Some("run1"));
+        assert_eq!(v.path("actors").unwrap().as_u64(), Some(40));
+        assert_eq!(v.path("gpu.sms").unwrap().as_u64(), Some(80));
+        assert_eq!(v.path("sim.cpu.threads").unwrap().as_u64(), Some(40));
+        assert_eq!(v.path("flag").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let v = parse("xs = [1, 2, 3]\nnames = [\"a\", \"b\"]\n").unwrap();
+        let xs = v.path("xs").unwrap().as_arr().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[2].as_u64(), Some(3));
+        assert_eq!(
+            v.path("names").unwrap().idx(1).unwrap().as_str(),
+            Some("b")
+        );
+    }
+
+    #[test]
+    fn underscore_numbers() {
+        let v = parse("big = 1_000_000\n").unwrap();
+        assert_eq!(v.path("big").unwrap().as_u64(), Some(1_000_000));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let v = parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(v.path("s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(parse("a = 1\na = 2\n").is_err());
+        assert!(parse("novalue =\n").is_err());
+        assert!(parse("[[t]]\n").is_err());
+        assert!(parse("x ~ 3\n").is_err());
+    }
+
+    #[test]
+    fn value_table_conflict() {
+        assert!(parse("a = 1\n[a]\nb = 2\n").is_err());
+    }
+}

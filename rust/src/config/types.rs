@@ -1,0 +1,596 @@
+//! Typed configuration for the whole stack, parsed from TOML (or built
+//! programmatically by examples/benches). Every struct has defaults that
+//! match DESIGN.md §9 (DGX-1 / V100 machine model + the paper's R2D2
+//! hyper-parameters scaled to the CPU testbed).
+
+use crate::util::json::Value;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("config: {0}")]
+    Invalid(String),
+}
+
+fn get_f64(v: &Value, path: &str, default: f64) -> f64 {
+    v.path(path).and_then(|x| x.as_f64()).unwrap_or(default)
+}
+
+fn get_usize(v: &Value, path: &str, default: usize) -> usize {
+    v.path(path).and_then(|x| x.as_usize()).unwrap_or(default)
+}
+
+fn get_str(v: &Value, path: &str, default: &str) -> String {
+    v.path(path)
+        .and_then(|x| x.as_str())
+        .unwrap_or(default)
+        .to_string()
+}
+
+// ---------------------------------------------------------------------------
+// Environment
+// ---------------------------------------------------------------------------
+
+/// Environment suite settings (shared by real execution and the DES model).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EnvConfig {
+    /// Registered environment name: grid_pong | breakout | catch | nav_maze.
+    pub name: String,
+    /// Frame-stack depth (channels of the observation).
+    pub frame_stack: usize,
+    /// ALE-style sticky-action probability.
+    pub sticky_action_prob: f64,
+    /// Maximum episode length before truncation.
+    pub max_episode_len: usize,
+    /// Artificial per-step CPU cost in microseconds (0 = raw env speed).
+    /// Calibrates actor-side load to the Atari-frame regime on this host.
+    pub step_cost_us: u64,
+    /// Environment RNG base seed.
+    pub seed: u64,
+}
+
+impl Default for EnvConfig {
+    fn default() -> Self {
+        Self {
+            name: "grid_pong".into(),
+            frame_stack: 4,
+            sticky_action_prob: 0.25,
+            max_episode_len: 2_000,
+            step_cost_us: 0,
+            seed: 2020,
+        }
+    }
+}
+
+impl EnvConfig {
+    pub fn from_value(v: &Value) -> Self {
+        let d = Self::default();
+        Self {
+            name: get_str(v, "env.name", &d.name),
+            frame_stack: get_usize(v, "env.frame_stack", d.frame_stack),
+            sticky_action_prob: get_f64(
+                v,
+                "env.sticky_action_prob",
+                d.sticky_action_prob,
+            ),
+            max_episode_len: get_usize(v, "env.max_episode_len", d.max_episode_len),
+            step_cost_us: get_f64(v, "env.step_cost_us", d.step_cost_us as f64)
+                as u64,
+            seed: get_f64(v, "env.seed", d.seed as f64) as u64,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator (SEED-style central inference)
+// ---------------------------------------------------------------------------
+
+/// Inference batcher policy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatcherConfig {
+    /// Hard upper bound on a batch (must match an AOT'd infer_b{N}).
+    pub max_batch: usize,
+    /// Flush a partial batch after this timeout.
+    pub timeout_us: u64,
+    /// Available AOT batch sizes (ascending); requests are padded up to the
+    /// smallest size >= the pending count.
+    pub batch_sizes: Vec<usize>,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 64,
+            timeout_us: 500,
+            batch_sizes: vec![1, 8, 32, 64],
+        }
+    }
+}
+
+impl BatcherConfig {
+    pub fn from_value(v: &Value) -> Self {
+        let d = Self::default();
+        let batch_sizes = v
+            .path("batcher.batch_sizes")
+            .and_then(|x| x.as_arr())
+            .map(|xs| xs.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or(d.batch_sizes.clone());
+        Self {
+            max_batch: get_usize(v, "batcher.max_batch", d.max_batch),
+            timeout_us: get_f64(v, "batcher.timeout_us", d.timeout_us as f64)
+                as u64,
+            batch_sizes,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.batch_sizes.is_empty() {
+            return Err(ConfigError::Invalid("batch_sizes empty".into()));
+        }
+        if !self.batch_sizes.windows(2).all(|w| w[0] < w[1]) {
+            return Err(ConfigError::Invalid(
+                "batch_sizes must be strictly ascending".into(),
+            ));
+        }
+        if *self.batch_sizes.last().unwrap() != self.max_batch {
+            return Err(ConfigError::Invalid(
+                "max_batch must equal the largest batch size".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Actor pool settings.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ActorConfig {
+    pub num_actors: usize,
+    /// Ape-X/R2D2 per-actor epsilon: eps_i = base^(1 + i/(N-1) * alpha).
+    pub epsilon_base: f64,
+    pub epsilon_alpha: f64,
+    /// Evaluation actors use epsilon 0 (not used in training flow).
+    pub num_eval_actors: usize,
+}
+
+impl Default for ActorConfig {
+    fn default() -> Self {
+        Self {
+            num_actors: 8,
+            epsilon_base: 0.4,
+            epsilon_alpha: 7.0,
+            num_eval_actors: 0,
+        }
+    }
+}
+
+impl ActorConfig {
+    pub fn from_value(v: &Value) -> Self {
+        let d = Self::default();
+        Self {
+            num_actors: get_usize(v, "actors.num_actors", d.num_actors),
+            epsilon_base: get_f64(v, "actors.epsilon_base", d.epsilon_base),
+            epsilon_alpha: get_f64(v, "actors.epsilon_alpha", d.epsilon_alpha),
+            num_eval_actors: get_usize(
+                v,
+                "actors.num_eval_actors",
+                d.num_eval_actors,
+            ),
+        }
+    }
+}
+
+/// Learner / replay settings (R2D2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LearnerConfig {
+    pub train_batch: usize,
+    pub replay_capacity: usize,
+    /// Minimum sequences buffered before training starts.
+    pub min_replay: usize,
+    /// Copy online -> target params every N learner steps.
+    pub target_update_interval: usize,
+    /// Priority-sampling exponent (0 = uniform).
+    pub priority_exponent: f64,
+    /// Max learner steps for a run (examples override).
+    pub max_steps: usize,
+    /// Sequence replay: burn-in + unroll must match the AOT'd train graph.
+    pub burn_in: usize,
+    pub unroll_len: usize,
+    /// Adjacent-sequence overlap when slicing trajectories.
+    pub seq_overlap: usize,
+    pub gamma: f64,
+    pub n_step: usize,
+}
+
+impl Default for LearnerConfig {
+    fn default() -> Self {
+        Self {
+            train_batch: 16,
+            replay_capacity: 4_096,
+            min_replay: 64,
+            target_update_interval: 100,
+            priority_exponent: 0.9,
+            max_steps: 200,
+            burn_in: 5,
+            unroll_len: 15,
+            seq_overlap: 10,
+            gamma: 0.997,
+            n_step: 3,
+        }
+    }
+}
+
+impl LearnerConfig {
+    pub fn seq_len(&self) -> usize {
+        self.burn_in + self.unroll_len
+    }
+
+    pub fn from_value(v: &Value) -> Self {
+        let d = Self::default();
+        Self {
+            train_batch: get_usize(v, "learner.train_batch", d.train_batch),
+            replay_capacity: get_usize(
+                v,
+                "learner.replay_capacity",
+                d.replay_capacity,
+            ),
+            min_replay: get_usize(v, "learner.min_replay", d.min_replay),
+            target_update_interval: get_usize(
+                v,
+                "learner.target_update_interval",
+                d.target_update_interval,
+            ),
+            priority_exponent: get_f64(
+                v,
+                "learner.priority_exponent",
+                d.priority_exponent,
+            ),
+            max_steps: get_usize(v, "learner.max_steps", d.max_steps),
+            burn_in: get_usize(v, "learner.burn_in", d.burn_in),
+            unroll_len: get_usize(v, "learner.unroll_len", d.unroll_len),
+            seq_overlap: get_usize(v, "learner.seq_overlap", d.seq_overlap),
+            gamma: get_f64(v, "learner.gamma", d.gamma),
+            n_step: get_usize(v, "learner.n_step", d.n_step),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.seq_overlap >= self.seq_len() {
+            return Err(ConfigError::Invalid(
+                "seq_overlap must be < seq_len".into(),
+            ));
+        }
+        if self.min_replay < self.train_batch {
+            return Err(ConfigError::Invalid(
+                "min_replay must be >= train_batch".into(),
+            ));
+        }
+        if self.replay_capacity < self.min_replay {
+            return Err(ConfigError::Invalid(
+                "replay_capacity must be >= min_replay".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// simarch machine model (DESIGN.md §9)
+// ---------------------------------------------------------------------------
+
+/// V100-class GPU timing model parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GpuModelConfig {
+    pub num_sms: usize,
+    pub clock_ghz: f64,
+    /// FP32 FLOPs per SM per clock (V100: 64 FMA lanes x 2).
+    pub flops_per_sm_clk: f64,
+    /// HBM2 bandwidth, GB/s.
+    pub dram_bw_gbps: f64,
+    /// DRAM load-to-use latency, ns.
+    pub dram_latency_ns: f64,
+    /// L2 size (bytes) and bandwidth (GB/s).
+    pub l2_bytes: usize,
+    pub l2_bw_gbps: f64,
+    /// Kernel launch overhead, us (CUDA ~3-8us; visible at small batches).
+    pub launch_overhead_us: f64,
+    /// Max thread-blocks' worth of parallelism one SM can overlap (used by
+    /// the occupancy/tail model).
+    pub threads_per_sm: usize,
+}
+
+impl Default for GpuModelConfig {
+    fn default() -> Self {
+        // NVIDIA V100 (SXM2): 80 SMs @ 1.53 GHz, 15.7 TF fp32, 900 GB/s.
+        Self {
+            num_sms: 80,
+            clock_ghz: 1.53,
+            flops_per_sm_clk: 128.0,
+            dram_bw_gbps: 900.0,
+            dram_latency_ns: 450.0,
+            l2_bytes: 6 << 20,
+            l2_bw_gbps: 2_200.0,
+            launch_overhead_us: 2.5,
+            threads_per_sm: 2_048,
+        }
+    }
+}
+
+impl GpuModelConfig {
+    /// Peak fp32 throughput in FLOP/s.
+    pub fn peak_flops(&self) -> f64 {
+        self.num_sms as f64 * self.clock_ghz * 1e9 * self.flops_per_sm_clk
+    }
+
+    pub fn from_value(v: &Value) -> Self {
+        let d = Self::default();
+        Self {
+            num_sms: get_usize(v, "gpu.num_sms", d.num_sms),
+            clock_ghz: get_f64(v, "gpu.clock_ghz", d.clock_ghz),
+            flops_per_sm_clk: get_f64(v, "gpu.flops_per_sm_clk", d.flops_per_sm_clk),
+            dram_bw_gbps: get_f64(v, "gpu.dram_bw_gbps", d.dram_bw_gbps),
+            dram_latency_ns: get_f64(v, "gpu.dram_latency_ns", d.dram_latency_ns),
+            l2_bytes: get_usize(v, "gpu.l2_bytes", d.l2_bytes),
+            l2_bw_gbps: get_f64(v, "gpu.l2_bw_gbps", d.l2_bw_gbps),
+            launch_overhead_us: get_f64(
+                v,
+                "gpu.launch_overhead_us",
+                d.launch_overhead_us,
+            ),
+            threads_per_sm: get_usize(v, "gpu.threads_per_sm", d.threads_per_sm),
+        }
+    }
+}
+
+/// Host CPU model (actor-side).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CpuModelConfig {
+    /// Hardware threads (DGX-1: 20 cores x 2 SMT = 40).
+    pub hw_threads: usize,
+    /// Mean env-step latency on one dedicated thread, microseconds.
+    pub env_step_us: f64,
+    /// Agent-side non-env work per step (obs encode, queueing), us.
+    pub actor_overhead_us: f64,
+    /// Context-switch penalty when actors oversubscribe threads, us.
+    pub ctx_switch_us: f64,
+    /// SMT efficiency: throughput factor of 2 threads sharing a core.
+    pub smt_efficiency: f64,
+}
+
+impl Default for CpuModelConfig {
+    fn default() -> Self {
+        // E5-2698 v4 running ALE-class envs: ~125 us per 4-frame env step
+        // (≈8k env-frames/s/core), measured regime from the SEED-RL paper.
+        Self {
+            hw_threads: 40,
+            env_step_us: 125.0,
+            actor_overhead_us: 15.0,
+            ctx_switch_us: 5.0,
+            smt_efficiency: 0.65,
+        }
+    }
+}
+
+impl CpuModelConfig {
+    pub fn from_value(v: &Value) -> Self {
+        let d = Self::default();
+        Self {
+            hw_threads: get_usize(v, "cpu.hw_threads", d.hw_threads),
+            env_step_us: get_f64(v, "cpu.env_step_us", d.env_step_us),
+            actor_overhead_us: get_f64(
+                v,
+                "cpu.actor_overhead_us",
+                d.actor_overhead_us,
+            ),
+            ctx_switch_us: get_f64(v, "cpu.ctx_switch_us", d.ctx_switch_us),
+            smt_efficiency: get_f64(v, "cpu.smt_efficiency", d.smt_efficiency),
+        }
+    }
+}
+
+/// GPU power model (Fig. 3 right axis).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PowerModelConfig {
+    /// Idle draw, W (paper: ≈70 W at low utilization).
+    pub idle_w: f64,
+    /// TDP, W (V100: 300).
+    pub max_w: f64,
+    /// Fraction of dynamic power attributed to SM activity (rest: memory).
+    pub sm_dynamic_frac: f64,
+    /// Exponent of the utilization->power curve (measured GPUs are
+    /// sub-linear: high power at moderate utilization).
+    pub util_exponent: f64,
+}
+
+impl Default for PowerModelConfig {
+    fn default() -> Self {
+        Self {
+            idle_w: 70.0,
+            max_w: 300.0,
+            sm_dynamic_frac: 0.6,
+            util_exponent: 0.8,
+        }
+    }
+}
+
+impl PowerModelConfig {
+    pub fn from_value(v: &Value) -> Self {
+        let d = Self::default();
+        Self {
+            idle_w: get_f64(v, "power.idle_w", d.idle_w),
+            max_w: get_f64(v, "power.max_w", d.max_w),
+            sm_dynamic_frac: get_f64(v, "power.sm_dynamic_frac", d.sm_dynamic_frac),
+            util_exponent: get_f64(v, "power.util_exponent", d.util_exponent),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Top-level
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum InferenceMode {
+    /// SEED-style: observations travel to a central batched inference
+    /// engine colocated with the learner (GPU-side).
+    Central,
+    /// IMPALA-style: each actor runs its own (CPU) inference locally.
+    Local,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemConfig {
+    pub run_name: String,
+    pub seed: u64,
+    pub mode: InferenceMode,
+    pub artifacts_dir: String,
+    pub env: EnvConfig,
+    pub actors: ActorConfig,
+    pub batcher: BatcherConfig,
+    pub learner: LearnerConfig,
+    pub gpu: GpuModelConfig,
+    pub cpu: CpuModelConfig,
+    pub power: PowerModelConfig,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self {
+            run_name: "rlarch".into(),
+            seed: 2020,
+            mode: InferenceMode::Central,
+            artifacts_dir: "artifacts".into(),
+            env: EnvConfig::default(),
+            actors: ActorConfig::default(),
+            batcher: BatcherConfig::default(),
+            learner: LearnerConfig::default(),
+            gpu: GpuModelConfig::default(),
+            cpu: CpuModelConfig::default(),
+            power: PowerModelConfig::default(),
+        }
+    }
+}
+
+impl SystemConfig {
+    pub fn from_value(v: &Value) -> Result<Self, ConfigError> {
+        let d = Self::default();
+        let mode = match get_str(v, "mode", "central").as_str() {
+            "central" => InferenceMode::Central,
+            "local" => InferenceMode::Local,
+            other => {
+                return Err(ConfigError::Invalid(format!(
+                    "mode must be central|local, got `{other}`"
+                )))
+            }
+        };
+        let cfg = Self {
+            run_name: get_str(v, "run_name", &d.run_name),
+            seed: get_f64(v, "seed", d.seed as f64) as u64,
+            mode,
+            artifacts_dir: get_str(v, "artifacts_dir", &d.artifacts_dir),
+            env: EnvConfig::from_value(v),
+            actors: ActorConfig::from_value(v),
+            batcher: BatcherConfig::from_value(v),
+            learner: LearnerConfig::from_value(v),
+            gpu: GpuModelConfig::from_value(v),
+            cpu: CpuModelConfig::from_value(v),
+            power: PowerModelConfig::from_value(v),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_toml(text: &str) -> Result<Self, ConfigError> {
+        let v = super::toml::parse(text)
+            .map_err(|e| ConfigError::Invalid(e.to_string()))?;
+        Self::from_value(&v)
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        self.batcher.validate()?;
+        self.learner.validate()?;
+        if self.actors.num_actors == 0 {
+            return Err(ConfigError::Invalid("num_actors must be > 0".into()));
+        }
+        if self.gpu.num_sms == 0 || self.cpu.hw_threads == 0 {
+            return Err(ConfigError::Invalid(
+                "gpu.num_sms and cpu.hw_threads must be > 0".into(),
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.env.sticky_action_prob) {
+            return Err(ConfigError::Invalid(
+                "sticky_action_prob must be in [0,1]".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// The paper's system design metric: CPU hardware threads / GPU SMs.
+    pub fn cpu_gpu_ratio(&self) -> f64 {
+        self.cpu.hw_threads as f64 / self.gpu.num_sms as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid_and_dgx1_like() {
+        let cfg = SystemConfig::default();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.gpu.num_sms, 80);
+        assert_eq!(cfg.cpu.hw_threads, 40);
+        // Single-V100 slice of a DGX-1: ratio 1/2 (paper Fig. 4 baseline).
+        assert!((cfg.cpu_gpu_ratio() - 0.5).abs() < 1e-12);
+        // Peak fp32 ≈ 15.7 TFLOP/s.
+        assert!((cfg.gpu.peak_flops() / 1e12 - 15.67).abs() < 0.1);
+    }
+
+    #[test]
+    fn from_toml_overrides() {
+        let cfg = SystemConfig::from_toml(
+            r#"
+run_name = "sweep"
+mode = "local"
+[actors]
+num_actors = 64
+[gpu]
+num_sms = 40
+[cpu]
+hw_threads = 40
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.run_name, "sweep");
+        assert_eq!(cfg.mode, InferenceMode::Local);
+        assert_eq!(cfg.actors.num_actors, 64);
+        assert!((cfg.cpu_gpu_ratio() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_mode_and_bounds() {
+        assert!(SystemConfig::from_toml("mode = \"hybrid\"\n").is_err());
+        assert!(SystemConfig::from_toml("[env]\nsticky_action_prob = 1.5\n")
+            .is_err());
+        assert!(SystemConfig::from_toml("[actors]\nnum_actors = 0\n").is_err());
+    }
+
+    #[test]
+    fn batcher_validation() {
+        let mut b = BatcherConfig::default();
+        b.validate().unwrap();
+        b.batch_sizes = vec![8, 1];
+        assert!(b.validate().is_err());
+        b.batch_sizes = vec![1, 8];
+        b.max_batch = 64;
+        assert!(b.validate().is_err());
+    }
+
+    #[test]
+    fn learner_validation() {
+        let mut l = LearnerConfig::default();
+        l.validate().unwrap();
+        assert_eq!(l.seq_len(), 20);
+        l.seq_overlap = 25;
+        assert!(l.validate().is_err());
+    }
+}

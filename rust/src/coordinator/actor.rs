@@ -1,0 +1,260 @@
+//! Actor threads: environment interaction (the CPU side of the paper).
+//!
+//! Each actor owns one wrapped environment and its recurrent state. In
+//! central mode (SEED) the actor's policy step is a blocking round-trip
+//! through the inference batcher; in local mode (IMPALA baseline) the
+//! actor calls the backend directly with a batch of 1, modelling
+//! actor-side inference. Completed sequences flow into the shared
+//! prioritized replay.
+
+use super::batcher::BatcherHandle;
+use crate::config::SystemConfig;
+use crate::env::wrappers::Wrapped;
+use crate::exec::ShutdownToken;
+use crate::metrics::Registry;
+use crate::replay::SequenceReplay;
+use crate::rl::{actor_epsilon, epsilon_greedy, SequenceBuilder, Transition};
+use crate::runtime::{Backend, InferRequest, ModelDims};
+use crate::util::prng::Pcg32;
+use std::sync::Arc;
+
+/// How an actor obtains q-values for an observation.
+pub enum PolicyPath {
+    /// SEED: round-trip through the central inference batcher.
+    Central(BatcherHandle),
+    /// IMPALA baseline: direct per-actor inference (batch of 1).
+    Local(Backend),
+}
+
+pub struct ActorArgs {
+    pub id: usize,
+    pub cfg: SystemConfig,
+    pub dims: ModelDims,
+    pub path: PolicyPath,
+    pub replay: Arc<SequenceReplay>,
+    pub metrics: Registry,
+    pub shutdown: ShutdownToken,
+}
+
+/// Per-actor terminal statistics, returned at join time.
+#[derive(Clone, Debug, Default)]
+pub struct ActorStats {
+    pub id: usize,
+    pub env_steps: u64,
+    pub episodes: u64,
+    pub mean_return: f64,
+    pub epsilon: f64,
+}
+
+/// The actor main loop. Runs until shutdown is signalled.
+pub fn run_actor(args: ActorArgs) -> anyhow::Result<ActorStats> {
+    let ActorArgs {
+        id,
+        cfg,
+        dims,
+        path,
+        replay,
+        metrics,
+        shutdown,
+    } = args;
+
+    let mut env = Wrapped::from_config(&cfg.env, id as u64 + 1)?;
+    anyhow::ensure!(
+        env.obs_len() == dims.obs_len,
+        "env obs_len {} != model obs_len {} (frame_stack vs obs_channels?)",
+        env.obs_len(),
+        dims.obs_len
+    );
+    let epsilon = actor_epsilon(
+        id,
+        cfg.actors.num_actors,
+        cfg.actors.epsilon_base,
+        cfg.actors.epsilon_alpha,
+    );
+    let mut rng = Pcg32::seeded(cfg.seed ^ (0xAC70 + id as u64));
+    let mut builder = SequenceBuilder::new(
+        cfg.learner.seq_len(),
+        cfg.learner.seq_overlap,
+        dims.obs_len,
+        dims.hidden,
+        id,
+    );
+
+    let steps = metrics.counter("actor.env_steps");
+    let episodes_c = metrics.counter("actor.episodes");
+    let seqs = metrics.counter("actor.sequences");
+    let step_time = metrics.timer("actor.step_seconds");
+    let return_gauge = metrics.gauge("actor.last_return");
+
+    let mut obs = vec![0.0f32; dims.obs_len];
+    let mut h = vec![0.0f32; dims.hidden];
+    let mut c = vec![0.0f32; dims.hidden];
+    env.reset(&mut obs);
+
+    let mut return_sum = 0.0f64;
+    let mut return_count = 0u64;
+
+    while !shutdown.is_signalled() {
+        let t0 = std::time::Instant::now();
+        // Policy step: obtain q and next recurrent state.
+        let (q, h2, c2) = match &path {
+            PolicyPath::Central(handle) => {
+                match handle.infer(id, obs.clone(), h.clone(), c.clone()) {
+                    Ok(r) => (r.q, r.h, r.c),
+                    Err(_) => break, // batcher shut down
+                }
+            }
+            PolicyPath::Local(backend) => {
+                let r = backend.infer(InferRequest {
+                    n: 1,
+                    h: h.clone(),
+                    c: c.clone(),
+                    obs: obs.clone(),
+                })?;
+                (r.q, r.h, r.c)
+            }
+        };
+        let action = epsilon_greedy(&q, epsilon, &mut rng);
+
+        // Environment step (the CPU-bound work the paper sweeps).
+        let prev_obs = obs.clone();
+        let step = env.step(action, &mut obs);
+        let discount = if step.done && !step.truncated {
+            0.0
+        } else {
+            cfg.learner.gamma as f32
+        };
+
+        if step.done {
+            episodes_c.inc();
+            return_gauge.set(env.last_return as f64);
+            return_sum += env.last_return as f64;
+            return_count += 1;
+        }
+
+        // Record the transition with the pre-step state.
+        let done = step.done;
+        if let Some(seq) = builder.push(Transition {
+            obs: prev_obs,
+            action: action as i32,
+            reward: step.reward,
+            discount,
+            h: h.clone(),
+            c: c.clone(),
+        }) {
+            replay.add(seq);
+            seqs.inc();
+        }
+
+        // Advance recurrent state; reset it at episode boundaries.
+        if done {
+            h.fill(0.0);
+            c.fill(0.0);
+        } else {
+            h = h2;
+            c = c2;
+        }
+
+        steps.inc();
+        step_time.record(t0.elapsed().as_secs_f64());
+    }
+
+    if let Some(seq) = builder.flush() {
+        replay.add(seq);
+        seqs.inc();
+    }
+
+    Ok(ActorStats {
+        id,
+        env_steps: env.total_steps,
+        episodes: env.episodes_completed,
+        mean_return: if return_count > 0 {
+            return_sum / return_count as f64
+        } else {
+            0.0
+        },
+        epsilon,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replay::{ReplayConfig, SequenceReplay};
+    use crate::runtime::MockModel;
+
+    fn test_cfg() -> (SystemConfig, ModelDims) {
+        let mut cfg = SystemConfig::default();
+        cfg.env.name = "catch".into();
+        cfg.env.step_cost_us = 0;
+        cfg.env.frame_stack = 4;
+        cfg.learner.burn_in = 2;
+        cfg.learner.unroll_len = 4;
+        cfg.learner.seq_overlap = 2;
+        cfg.actors.num_actors = 2;
+        let dims = ModelDims {
+            obs_len: 400,
+            hidden: 8,
+            num_actions: 4,
+            seq_len: 6,
+            train_batch: 2,
+        };
+        (cfg, dims)
+    }
+
+    #[test]
+    fn local_actor_fills_replay_and_stops_on_shutdown() {
+        let (cfg, dims) = test_cfg();
+        let replay = Arc::new(SequenceReplay::new(ReplayConfig {
+            capacity: 256,
+            ..Default::default()
+        }));
+        let backend = Backend::Mock(Arc::new(MockModel::new(dims, 3)));
+        let shutdown = ShutdownToken::new();
+        let metrics = Registry::new();
+        let stats = std::thread::scope(|s| {
+            let h = s.spawn({
+                let replay = replay.clone();
+                let shutdown = shutdown.clone();
+                let metrics = metrics.clone();
+                move || {
+                    run_actor(ActorArgs {
+                        id: 0,
+                        cfg,
+                        dims,
+                        path: PolicyPath::Local(backend),
+                        replay,
+                        metrics,
+                        shutdown,
+                    })
+                    .unwrap()
+                }
+            });
+            std::thread::sleep(std::time::Duration::from_millis(150));
+            shutdown.signal();
+            h.join().unwrap()
+        });
+        assert!(stats.env_steps > 50, "steps {}", stats.env_steps);
+        assert!(stats.episodes > 0);
+        assert!(replay.len() > 0, "sequences should reach replay");
+        assert!(metrics.counter("actor.sequences").get() > 0);
+    }
+
+    #[test]
+    fn obs_len_mismatch_is_rejected() {
+        let (mut cfg, dims) = test_cfg();
+        cfg.env.frame_stack = 2; // obs_len becomes 200 != dims.obs_len 400
+        let replay = Arc::new(SequenceReplay::new(ReplayConfig::default()));
+        let backend = Backend::Mock(Arc::new(MockModel::new(dims, 3)));
+        let r = run_actor(ActorArgs {
+            id: 0,
+            cfg,
+            dims,
+            path: PolicyPath::Local(backend),
+            replay,
+            metrics: Registry::new(),
+            shutdown: ShutdownToken::new(),
+        });
+        assert!(r.is_err());
+    }
+}

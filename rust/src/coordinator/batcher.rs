@@ -1,0 +1,289 @@
+//! The central-inference batcher — the core of the SEED-RL dataflow.
+//!
+//! Actors submit single observations (+ their recurrent state) through a
+//! channel; the batcher thread greedily coalesces them into batches of up
+//! to `max_batch`, flushing a partial batch after `timeout_us` so tail
+//! latency stays bounded when few actors are running. Each flushed batch
+//! becomes one `Backend::infer` call (one padded AOT executable launch),
+//! and the replies are routed back to the submitting actors.
+//!
+//! Policy trade-off (paper Fig. 3 territory): a larger max_batch raises
+//! GPU efficiency; a longer timeout raises occupancy at low actor counts
+//! but adds latency to every actor's step. `micro_batcher` benches the
+//! policy surface.
+
+use crate::config::BatcherConfig;
+use crate::metrics::Registry;
+use crate::runtime::{Backend, InferRequest};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One actor's inference submission.
+pub struct InferItem {
+    pub actor: usize,
+    pub obs: Vec<f32>,
+    pub h: Vec<f32>,
+    pub c: Vec<f32>,
+    pub reply: mpsc::Sender<ActorReply>,
+}
+
+/// Per-actor inference result.
+#[derive(Clone, Debug)]
+pub struct ActorReply {
+    pub q: Vec<f32>,
+    pub h: Vec<f32>,
+    pub c: Vec<f32>,
+}
+
+/// Handle used by actors to submit observations.
+#[derive(Clone)]
+pub struct BatcherHandle {
+    tx: mpsc::Sender<InferItem>,
+}
+
+impl BatcherHandle {
+    /// Blocking round-trip: submit and wait for the routed reply.
+    pub fn infer(
+        &self,
+        actor: usize,
+        obs: Vec<f32>,
+        h: Vec<f32>,
+        c: Vec<f32>,
+    ) -> anyhow::Result<ActorReply> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(InferItem {
+                actor,
+                obs,
+                h,
+                c,
+                reply: rtx,
+            })
+            .map_err(|_| anyhow::anyhow!("batcher gone"))?;
+        rrx.recv().map_err(|_| anyhow::anyhow!("batcher dropped reply"))
+    }
+}
+
+/// The batcher thread. Exits when every `BatcherHandle` is dropped.
+pub struct Batcher {
+    join: Option<JoinHandle<()>>,
+}
+
+impl Batcher {
+    pub fn spawn(
+        cfg: BatcherConfig,
+        backend: Backend,
+        metrics: Registry,
+    ) -> (Batcher, BatcherHandle) {
+        let (tx, rx) = mpsc::channel::<InferItem>();
+        let join = std::thread::Builder::new()
+            .name("rlarch-batcher".into())
+            .spawn(move || run_batcher(cfg, backend, metrics, rx))
+            .expect("spawn batcher");
+        (Batcher { join: Some(join) }, BatcherHandle { tx })
+    }
+
+    /// Wait for the batcher thread to exit (after all handles drop).
+    pub fn join(mut self) {
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn run_batcher(
+    cfg: BatcherConfig,
+    backend: Backend,
+    metrics: Registry,
+    rx: mpsc::Receiver<InferItem>,
+) {
+    let dims = backend.dims();
+    let timeout = Duration::from_micros(cfg.timeout_us);
+    let batches = metrics.counter("batcher.batches");
+    let items = metrics.counter("batcher.items");
+    let flush_timeout = metrics.counter("batcher.flush_timeout");
+    let flush_full = metrics.counter("batcher.flush_full");
+    let occupancy = metrics.gauge("batcher.last_batch_size");
+    let infer_time = metrics.timer("batcher.infer_seconds");
+    let wait_time = metrics.timer("batcher.collect_seconds");
+
+    loop {
+        // Block for the first item of the next batch.
+        let first = match rx.recv() {
+            Ok(item) => item,
+            Err(_) => return, // all handles dropped
+        };
+        let t_collect = Instant::now();
+        let mut pending = vec![first];
+        let deadline = t_collect + timeout;
+        while pending.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                flush_timeout.inc();
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(item) => pending.push(item),
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    flush_timeout.inc();
+                    break;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        if pending.len() == cfg.max_batch {
+            flush_full.inc();
+        }
+        wait_time.record(t_collect.elapsed().as_secs_f64());
+
+        // Assemble the batched request.
+        let n = pending.len();
+        let mut req = InferRequest {
+            n,
+            h: Vec::with_capacity(n * dims.hidden),
+            c: Vec::with_capacity(n * dims.hidden),
+            obs: Vec::with_capacity(n * dims.obs_len),
+        };
+        for item in &pending {
+            req.h.extend_from_slice(&item.h);
+            req.c.extend_from_slice(&item.c);
+            req.obs.extend_from_slice(&item.obs);
+        }
+
+        let reply = infer_time.time(|| backend.infer(req));
+        batches.inc();
+        items.add(n as u64);
+        occupancy.set(n as f64);
+
+        match reply {
+            Ok(out) => {
+                for (i, item) in pending.into_iter().enumerate() {
+                    let a = dims.num_actions;
+                    let h = dims.hidden;
+                    let _ = item.reply.send(ActorReply {
+                        q: out.q[i * a..(i + 1) * a].to_vec(),
+                        h: out.h[i * h..(i + 1) * h].to_vec(),
+                        c: out.c[i * h..(i + 1) * h].to_vec(),
+                    });
+                }
+            }
+            Err(e) => {
+                // Inference failure: drop the replies; actors see a closed
+                // channel and shut down. Log once per batch.
+                log::error!("batcher inference failed: {e}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{MockModel, ModelDims};
+    use std::sync::Arc;
+
+    fn mock_backend() -> (Backend, ModelDims) {
+        let dims = ModelDims {
+            obs_len: 8,
+            hidden: 4,
+            num_actions: 3,
+            seq_len: 4,
+            train_batch: 2,
+        };
+        (Backend::Mock(Arc::new(MockModel::new(dims, 1))), dims)
+    }
+
+    fn cfg(max_batch: usize, timeout_us: u64) -> BatcherConfig {
+        BatcherConfig {
+            max_batch,
+            timeout_us,
+            batch_sizes: vec![max_batch],
+        }
+    }
+
+    #[test]
+    fn single_item_flushes_on_timeout() {
+        let (backend, dims) = mock_backend();
+        let m = Registry::new();
+        let (batcher, handle) = Batcher::spawn(cfg(8, 500), backend, m.clone());
+        let out = handle
+            .infer(0, vec![0.5; dims.obs_len], vec![0.0; 4], vec![0.0; 4])
+            .unwrap();
+        assert_eq!(out.q.len(), 3);
+        drop(handle);
+        batcher.join();
+        assert_eq!(m.counter("batcher.batches").get(), 1);
+        assert_eq!(m.counter("batcher.items").get(), 1);
+        assert!(m.counter("batcher.flush_timeout").get() >= 1);
+    }
+
+    #[test]
+    fn concurrent_actors_get_their_own_rows() {
+        let (backend, dims) = mock_backend();
+        let m = Registry::new();
+        let (batcher, handle) = Batcher::spawn(cfg(16, 2_000), backend.clone(), m.clone());
+        let results: Vec<(usize, ActorReply)> = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for a in 0..12usize {
+                let h = handle.clone();
+                handles.push(s.spawn(move || {
+                    let fill = a as f32 / 12.0;
+                    let out = h
+                        .infer(a, vec![fill; dims.obs_len], vec![0.0; 4], vec![0.0; 4])
+                        .unwrap();
+                    (a, out)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // Each actor's reply must equal a direct single-row mock call.
+        for (a, out) in results {
+            let fill = a as f32 / 12.0;
+            let direct = backend
+                .infer(crate::runtime::InferRequest {
+                    n: 1,
+                    h: vec![0.0; 4],
+                    c: vec![0.0; 4],
+                    obs: vec![fill; dims.obs_len],
+                })
+                .unwrap();
+            assert_eq!(out.q, direct.q, "actor {a} got someone else's row");
+        }
+        drop(handle);
+        batcher.join();
+        // Batching really happened (fewer batches than items).
+        assert!(m.counter("batcher.batches").get() < 12);
+        assert_eq!(m.counter("batcher.items").get(), 12);
+    }
+
+    #[test]
+    fn never_exceeds_max_batch() {
+        let (backend, dims) = mock_backend();
+        let m = Registry::new();
+        let (batcher, handle) = Batcher::spawn(cfg(4, 50_000), backend, m.clone());
+        std::thread::scope(|s| {
+            for a in 0..16usize {
+                let h = handle.clone();
+                s.spawn(move || {
+                    h.infer(a, vec![0.1; dims.obs_len], vec![0.0; 4], vec![0.0; 4])
+                        .unwrap();
+                });
+            }
+        });
+        drop(handle);
+        batcher.join();
+        // 16 items / cap 4 => at least 4 batches, all full-or-smaller.
+        assert!(m.counter("batcher.batches").get() >= 4);
+        assert_eq!(m.counter("batcher.items").get(), 16);
+        assert!(m.gauge("batcher.last_batch_size").get() <= 4.0);
+    }
+}

@@ -1,0 +1,263 @@
+//! Learner loop: sample prioritized sequences, run the AOT train step,
+//! refresh priorities, periodically sync the target network.
+
+use crate::config::LearnerConfig;
+use crate::exec::ShutdownToken;
+use crate::metrics::Registry;
+use crate::replay::SequenceReplay;
+use crate::runtime::{Backend, ModelDims, TrainBatch};
+use crate::util::prng::Pcg32;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Summary of a learner run.
+#[derive(Clone, Debug, Default)]
+pub struct LearnerStats {
+    pub steps: u64,
+    pub final_loss: f32,
+    pub first_loss: f32,
+    pub mean_loss: f64,
+    pub target_syncs: u64,
+    /// Loss curve sampled every `loss_every` steps.
+    pub loss_curve: Vec<(u64, f32)>,
+}
+
+pub struct LearnerArgs {
+    pub cfg: LearnerConfig,
+    pub dims: ModelDims,
+    pub backend: Backend,
+    pub replay: Arc<SequenceReplay>,
+    pub metrics: Registry,
+    pub shutdown: ShutdownToken,
+    /// Record a loss-curve point every N steps.
+    pub loss_every: u64,
+    pub seed: u64,
+}
+
+/// Assemble a `TrainBatch` from sampled sequences (batch-major layout,
+/// matching the AOT ABI).
+pub fn assemble_batch<S: std::ops::Deref<Target = crate::rl::Sequence>>(
+    sequences: &[S],
+    dims: &ModelDims,
+) -> TrainBatch {
+    let b = sequences.len();
+    let t = dims.seq_len;
+    let mut batch = TrainBatch {
+        batch: b,
+        obs: Vec::with_capacity(b * t * dims.obs_len),
+        actions: Vec::with_capacity(b * t),
+        rewards: Vec::with_capacity(b * t),
+        discounts: Vec::with_capacity(b * t),
+        h0: Vec::with_capacity(b * dims.hidden),
+        c0: Vec::with_capacity(b * dims.hidden),
+    };
+    for seq in sequences {
+        let seq: &crate::rl::Sequence = seq;
+        debug_assert_eq!(seq.seq_len(), t, "sequence length mismatch");
+        batch.obs.extend_from_slice(&seq.obs);
+        batch.actions.extend_from_slice(&seq.actions);
+        batch.rewards.extend_from_slice(&seq.rewards);
+        batch.discounts.extend_from_slice(&seq.discounts);
+        batch.h0.extend_from_slice(&seq.h0);
+        batch.c0.extend_from_slice(&seq.c0);
+    }
+    batch
+}
+
+/// Run the learner until `cfg.max_steps` or shutdown. Returns stats and
+/// signals `shutdown` on exit so actors stop with it.
+pub fn run_learner(args: LearnerArgs) -> anyhow::Result<LearnerStats> {
+    let LearnerArgs {
+        cfg,
+        dims,
+        backend,
+        replay,
+        metrics,
+        shutdown,
+        loss_every,
+        seed,
+    } = args;
+    let mut rng = Pcg32::seeded(seed ^ 0x1EA8);
+    let steps_c = metrics.counter("learner.steps");
+    let waits_c = metrics.counter("learner.replay_waits");
+    let train_time = metrics.timer("learner.train_seconds");
+    let sample_time = metrics.timer("learner.sample_seconds");
+    let loss_gauge = metrics.gauge("learner.loss");
+
+    let mut stats = LearnerStats::default();
+    let mut loss_sum = 0.0f64;
+
+    // Wait for the minimum replay fill.
+    while replay.len() < cfg.min_replay {
+        waits_c.inc();
+        if shutdown.sleep_interruptible(Duration::from_millis(2)) {
+            return Ok(stats);
+        }
+    }
+
+    while stats.steps < cfg.max_steps as u64 && !shutdown.is_signalled() {
+        let sampled = sample_time.time(|| replay.sample(cfg.train_batch, &mut rng));
+        let Some(sampled) = sampled else {
+            waits_c.inc();
+            if shutdown.sleep_interruptible(Duration::from_millis(1)) {
+                break;
+            }
+            continue;
+        };
+        let batch = assemble_batch(&sampled.sequences, &dims);
+        let reply = train_time.time(|| backend.train(batch))?;
+        replay.update_priorities(&sampled.slots, &reply.priorities);
+
+        stats.steps = reply.step;
+        if stats.first_loss == 0.0 {
+            stats.first_loss = reply.loss;
+        }
+        stats.final_loss = reply.loss;
+        loss_sum += reply.loss as f64;
+        loss_gauge.set(reply.loss as f64);
+        steps_c.inc();
+        if loss_every > 0 && stats.steps % loss_every == 0 {
+            stats.loss_curve.push((stats.steps, reply.loss));
+        }
+
+        if stats.steps % cfg.target_update_interval as u64 == 0 {
+            backend.sync_target()?;
+            stats.target_syncs += 1;
+        }
+    }
+
+    if stats.steps > 0 {
+        stats.mean_loss = loss_sum / stats.steps as f64;
+    }
+    shutdown.signal();
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replay::{ReplayConfig, SequenceReplay};
+    use crate::rl::Sequence;
+    use crate::runtime::MockModel;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            obs_len: 8,
+            hidden: 4,
+            num_actions: 3,
+            seq_len: 5,
+            train_batch: 4,
+        }
+    }
+
+    fn seq(d: &ModelDims, reward: f32) -> Sequence {
+        Sequence {
+            obs: vec![0.1; d.seq_len * d.obs_len],
+            actions: vec![0; d.seq_len],
+            rewards: vec![reward; d.seq_len],
+            discounts: vec![0.9; d.seq_len],
+            h0: vec![0.0; d.hidden],
+            c0: vec![0.0; d.hidden],
+            actor_id: 0,
+            valid_len: d.seq_len,
+        }
+    }
+
+    #[test]
+    fn assemble_batch_layout() {
+        let d = dims();
+        let seqs = vec![Box::new(seq(&d, 1.0)), Box::new(seq(&d, 2.0))];
+        let b = assemble_batch(&seqs, &d);
+        assert_eq!(b.batch, 2);
+        assert_eq!(b.obs.len(), 2 * 5 * 8);
+        assert_eq!(b.rewards[0], 1.0);
+        assert_eq!(b.rewards[5], 2.0); // second sequence starts at B-major offset
+        b.validate(&ModelDims {
+            train_batch: 2,
+            ..d
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn learner_runs_to_max_steps_and_signals_shutdown() {
+        let d = dims();
+        let replay = Arc::new(SequenceReplay::new(ReplayConfig {
+            capacity: 64,
+            ..Default::default()
+        }));
+        for i in 0..16 {
+            replay.add(seq(&d, i as f32));
+        }
+        let backend = Backend::Mock(Arc::new(MockModel::new(d, 5)));
+        let shutdown = ShutdownToken::new();
+        let cfg = LearnerConfig {
+            train_batch: 4,
+            min_replay: 8,
+            max_steps: 25,
+            target_update_interval: 10,
+            ..Default::default()
+        };
+        let stats = run_learner(LearnerArgs {
+            cfg,
+            dims: d,
+            backend,
+            replay,
+            metrics: Registry::new(),
+            shutdown: shutdown.clone(),
+            loss_every: 5,
+            seed: 0,
+        })
+        .unwrap();
+        assert_eq!(stats.steps, 25);
+        assert_eq!(stats.target_syncs, 2);
+        assert!(stats.final_loss < stats.first_loss);
+        assert_eq!(stats.loss_curve.len(), 5);
+        assert!(shutdown.is_signalled());
+    }
+
+    #[test]
+    fn learner_waits_for_min_replay() {
+        let d = dims();
+        let replay = Arc::new(SequenceReplay::new(ReplayConfig {
+            capacity: 64,
+            ..Default::default()
+        }));
+        let backend = Backend::Mock(Arc::new(MockModel::new(d, 6)));
+        let shutdown = ShutdownToken::new();
+        let metrics = Registry::new();
+        let cfg = LearnerConfig {
+            train_batch: 4,
+            min_replay: 8,
+            max_steps: 5,
+            ..Default::default()
+        };
+        let stats = std::thread::scope(|s| {
+            let h = s.spawn({
+                let replay = replay.clone();
+                let shutdown = shutdown.clone();
+                let metrics = metrics.clone();
+                move || {
+                    run_learner(LearnerArgs {
+                        cfg,
+                        dims: d,
+                        backend,
+                        replay,
+                        metrics,
+                        shutdown,
+                        loss_every: 0,
+                        seed: 1,
+                    })
+                    .unwrap()
+                }
+            });
+            std::thread::sleep(Duration::from_millis(30));
+            for i in 0..12 {
+                replay.add(seq(&d, i as f32));
+            }
+            h.join().unwrap()
+        });
+        assert_eq!(stats.steps, 5);
+        assert!(metrics.counter("learner.replay_waits").get() > 0);
+    }
+}

@@ -1,0 +1,248 @@
+//! L3 coordinator — the paper's system under study.
+//!
+//! Wires the SEED-RL dataflow: N actor threads step environments (CPU
+//! side), a central inference batcher coalesces their observations into
+//! batched accelerator calls, completed sequences land in prioritized
+//! replay, and the learner thread trains the AOT'd R2D2 graph and
+//! refreshes priorities. The IMPALA-style `Local` mode skips the batcher
+//! and performs per-actor inference — the architectural baseline the
+//! paper contrasts (Fig. 1).
+//!
+//! ```text
+//!  actors (env CPU) ──obs──► batcher ──batched──► Backend (PJRT thread)
+//!     ▲                                            │ q, h', c'
+//!     └── actions ◄──────────── routed replies ◄───┘
+//!  actors ──sequences──► SequenceReplay ◄──sample── learner ──► train()
+//! ```
+
+pub mod actor;
+pub mod batcher;
+pub mod learner;
+
+pub use actor::{ActorStats, PolicyPath};
+pub use batcher::{ActorReply, Batcher, BatcherHandle, InferItem};
+pub use learner::{LearnerStats, assemble_batch};
+
+use crate::config::{InferenceMode, SystemConfig};
+use crate::exec::ShutdownToken;
+use crate::metrics::Registry;
+use crate::replay::{ReplayConfig, SequenceReplay};
+use crate::runtime::Backend;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Outcome of a coordinated training run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub learner: LearnerStats,
+    pub actors: Vec<ActorStats>,
+    pub elapsed_seconds: f64,
+    pub env_steps: u64,
+    pub env_steps_per_sec: f64,
+    pub episodes: u64,
+    /// Mean completed-episode return across actors (exploration included).
+    pub mean_return: f64,
+    pub sequences: u64,
+    pub inference_batches: u64,
+    pub mean_batch_occupancy: f64,
+}
+
+/// Run the full system: actors + (batcher) + learner, until the learner
+/// completes `cfg.learner.max_steps` steps.
+pub fn run(cfg: &SystemConfig, backend: Backend, metrics: Registry) -> anyhow::Result<RunReport> {
+    cfg.validate()
+        .map_err(|e| anyhow::anyhow!("config: {e}"))?;
+    let dims = backend.dims();
+    anyhow::ensure!(
+        dims.seq_len == cfg.learner.seq_len(),
+        "learner seq_len {} != model seq_len {} (burn_in+unroll must match the AOT graph)",
+        cfg.learner.seq_len(),
+        dims.seq_len
+    );
+    anyhow::ensure!(
+        dims.train_batch == cfg.learner.train_batch,
+        "learner train_batch {} != model train_batch {}",
+        cfg.learner.train_batch,
+        dims.train_batch
+    );
+
+    let replay = Arc::new(SequenceReplay::new(ReplayConfig {
+        capacity: cfg.learner.replay_capacity,
+        alpha: cfg.learner.priority_exponent,
+        min_priority: 1e-3,
+    }));
+    let shutdown = ShutdownToken::new();
+    let t0 = Instant::now();
+
+    // Central mode: one batcher in front of the backend.
+    let (batcher, batcher_handle) = match cfg.mode {
+        InferenceMode::Central => {
+            let (b, h) = Batcher::spawn(cfg.batcher.clone(), backend.clone(), metrics.clone());
+            (Some(b), Some(h))
+        }
+        InferenceMode::Local => (None, None),
+    };
+
+    let (learner_stats, actor_stats) = std::thread::scope(|s| -> anyhow::Result<_> {
+        let mut actor_joins = Vec::new();
+        for id in 0..cfg.actors.num_actors {
+            let path = match (&cfg.mode, &batcher_handle) {
+                (InferenceMode::Central, Some(h)) => PolicyPath::Central(h.clone()),
+                _ => PolicyPath::Local(backend.clone()),
+            };
+            let args = actor::ActorArgs {
+                id,
+                cfg: cfg.clone(),
+                dims,
+                path,
+                replay: replay.clone(),
+                metrics: metrics.clone(),
+                shutdown: shutdown.clone(),
+            };
+            actor_joins.push(
+                std::thread::Builder::new()
+                    .name(format!("rlarch-actor-{id}"))
+                    .spawn_scoped(s, move || actor::run_actor(args))
+                    .expect("spawn actor"),
+            );
+        }
+
+        let learner_stats = learner::run_learner(learner::LearnerArgs {
+            cfg: cfg.learner.clone(),
+            dims,
+            backend: backend.clone(),
+            replay: replay.clone(),
+            metrics: metrics.clone(),
+            shutdown: shutdown.clone(),
+            loss_every: 10,
+            seed: cfg.seed,
+        })?;
+        // run_learner signals shutdown on exit; actors drain out.
+        let mut actor_stats = Vec::new();
+        for j in actor_joins {
+            actor_stats.push(j.join().expect("actor panicked")?);
+        }
+        Ok((learner_stats, actor_stats))
+    })?;
+
+    // Drop our handle so the batcher thread can exit, then join it.
+    drop(batcher_handle);
+    if let Some(b) = batcher {
+        b.join();
+    }
+
+    let elapsed = t0.elapsed().as_secs_f64();
+    let env_steps: u64 = actor_stats.iter().map(|a| a.env_steps).sum();
+    let episodes: u64 = actor_stats.iter().map(|a| a.episodes).sum();
+    let returns: Vec<f64> = actor_stats
+        .iter()
+        .filter(|a| a.episodes > 0)
+        .map(|a| a.mean_return)
+        .collect();
+    let batches = metrics.counter("batcher.batches").get();
+    let items = metrics.counter("batcher.items").get();
+
+    Ok(RunReport {
+        learner: learner_stats,
+        actors: actor_stats,
+        elapsed_seconds: elapsed,
+        env_steps,
+        env_steps_per_sec: env_steps as f64 / elapsed.max(1e-9),
+        episodes,
+        mean_return: if returns.is_empty() {
+            0.0
+        } else {
+            returns.iter().sum::<f64>() / returns.len() as f64
+        },
+        sequences: replay.inserts(),
+        inference_batches: batches,
+        mean_batch_occupancy: if batches > 0 {
+            items as f64 / batches as f64
+        } else {
+            0.0
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{MockModel, ModelDims};
+
+    fn mock_system(actors: usize, mode: InferenceMode) -> (SystemConfig, Backend) {
+        let mut cfg = SystemConfig::default();
+        cfg.mode = mode;
+        cfg.env.name = "catch".into();
+        cfg.env.frame_stack = 4;
+        cfg.actors.num_actors = actors;
+        cfg.learner.burn_in = 2;
+        cfg.learner.unroll_len = 4;
+        cfg.learner.seq_overlap = 2;
+        cfg.learner.train_batch = 4;
+        cfg.learner.min_replay = 8;
+        cfg.learner.max_steps = 30;
+        cfg.learner.replay_capacity = 512;
+        cfg.learner.target_update_interval = 10;
+        cfg.batcher.max_batch = 8;
+        cfg.batcher.batch_sizes = vec![1, 8];
+        cfg.batcher.timeout_us = 1_000;
+        let dims = ModelDims {
+            obs_len: 400,
+            hidden: 8,
+            num_actions: 4,
+            seq_len: 6,
+            train_batch: 4,
+        };
+        (cfg, Backend::Mock(Arc::new(MockModel::new(dims, 11))))
+    }
+
+    #[test]
+    fn central_mode_end_to_end_with_mock() {
+        let (cfg, backend) = mock_system(4, InferenceMode::Central);
+        let metrics = Registry::new();
+        let report = run(&cfg, backend, metrics.clone()).unwrap();
+        assert_eq!(report.learner.steps, 30);
+        assert!(report.env_steps > 0);
+        assert!(report.episodes > 0);
+        assert!(report.inference_batches > 0);
+        assert!(report.mean_batch_occupancy >= 1.0);
+        assert!(report.sequences > 0);
+        // Central mode must actually batch with 4 actors.
+        assert!(
+            report.mean_batch_occupancy > 1.05,
+            "occupancy {}",
+            report.mean_batch_occupancy
+        );
+    }
+
+    #[test]
+    fn local_mode_end_to_end_with_mock() {
+        let (cfg, backend) = mock_system(2, InferenceMode::Local);
+        let report = run(&cfg, backend, Registry::new()).unwrap();
+        assert_eq!(report.learner.steps, 30);
+        assert!(report.env_steps > 0);
+        // No batcher in local mode.
+        assert_eq!(report.inference_batches, 0);
+    }
+
+    #[test]
+    fn seq_len_mismatch_rejected() {
+        let (mut cfg, backend) = mock_system(1, InferenceMode::Local);
+        cfg.learner.unroll_len = 9; // seq_len 11 != dims 6
+        assert!(run(&cfg, backend, Registry::new()).is_err());
+    }
+
+    #[test]
+    fn more_actors_increase_batch_occupancy() {
+        let (cfg1, b1) = mock_system(1, InferenceMode::Central);
+        let (cfg8, b8) = mock_system(8, InferenceMode::Central);
+        let r1 = run(&cfg1, b1, Registry::new()).unwrap();
+        let r8 = run(&cfg8, b8, Registry::new()).unwrap();
+        assert!(
+            r8.mean_batch_occupancy > r1.mean_batch_occupancy,
+            "8 actors {} <= 1 actor {}",
+            r8.mean_batch_occupancy,
+            r1.mean_batch_occupancy
+        );
+    }
+}

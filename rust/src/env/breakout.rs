@@ -1,0 +1,266 @@
+//! Breakout-lite: three brick rows, a paddle, one ball, three lives.
+//!
+//! Actions: 0 = noop, 1 = left, 2 = right, 3 = fire (serves the ball when
+//! it is dead; otherwise noop — mirroring ALE Breakout's FIRE semantics).
+//! Reward: +1 per brick; -1 on a lost life. Episode ends when bricks are
+//! cleared or lives run out.
+
+use super::{new_frame, put, Environment, Frame, Step, GRID};
+use crate::util::prng::Pcg32;
+
+const LIVES: u32 = 3;
+const PADDLE_W: usize = 3;
+const BRICK_ROWS: usize = 3;
+
+pub struct Breakout {
+    rng: Pcg32,
+    bricks: [[bool; GRID]; BRICK_ROWS], // rows 1..=BRICK_ROWS
+    ball_r: i32,
+    ball_c: i32,
+    vel_r: i32,
+    vel_c: i32,
+    ball_live: bool,
+    paddle: usize,
+    lives: u32,
+}
+
+impl Breakout {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Pcg32::seeded(seed),
+            bricks: [[true; GRID]; BRICK_ROWS],
+            ball_r: 0,
+            ball_c: 0,
+            vel_r: 0,
+            vel_c: 0,
+            ball_live: false,
+            paddle: GRID / 2 - 1,
+            lives: LIVES,
+        }
+    }
+
+    fn serve(&mut self) {
+        self.ball_r = (BRICK_ROWS + 2) as i32;
+        self.ball_c = self.rng.index(GRID) as i32;
+        self.vel_r = 1;
+        self.vel_c = if self.rng.chance(0.5) { 1 } else { -1 };
+        self.ball_live = true;
+    }
+
+    fn bricks_left(&self) -> usize {
+        self.bricks
+            .iter()
+            .map(|row| row.iter().filter(|&&b| b).count())
+            .sum()
+    }
+
+    fn render(&self, frame: &mut Frame) {
+        frame.iter_mut().for_each(|v| *v = 0.0);
+        for (i, row) in self.bricks.iter().enumerate() {
+            for (c, &b) in row.iter().enumerate() {
+                if b {
+                    put(frame, i + 1, c, 0.75);
+                }
+            }
+        }
+        if self.ball_live {
+            put(frame, self.ball_r as usize, self.ball_c as usize, 1.0);
+        }
+        for i in 0..PADDLE_W {
+            put(frame, GRID - 1, (self.paddle + i).min(GRID - 1), 0.5);
+        }
+    }
+
+    fn paddle_covers(&self, col: i32) -> bool {
+        col >= self.paddle as i32 && col < (self.paddle + PADDLE_W) as i32
+    }
+}
+
+impl Environment for Breakout {
+    fn reset(&mut self, frame: &mut Frame) {
+        self.bricks = [[true; GRID]; BRICK_ROWS];
+        self.lives = LIVES;
+        self.paddle = GRID / 2 - 1;
+        self.ball_live = false;
+        self.serve();
+        if frame.len() != GRID * GRID {
+            *frame = new_frame();
+        }
+        self.render(frame);
+    }
+
+    fn step(&mut self, action: usize, frame: &mut Frame) -> Step {
+        if self.lives == 0 || self.bricks_left() == 0 {
+            // Stepping a finished episode (caller should reset): no-op.
+            return Step::terminal(0.0);
+        }
+        match action {
+            1 => self.paddle = self.paddle.saturating_sub(1),
+            2 => self.paddle = (self.paddle + 1).min(GRID - PADDLE_W),
+            3 if !self.ball_live => self.serve(),
+            _ => {}
+        }
+        if !self.ball_live {
+            self.render(frame);
+            return Step::cont(0.0);
+        }
+
+        let mut reward = 0.0;
+        // Move with wall bounces.
+        let mut nr = self.ball_r + self.vel_r;
+        let mut nc = self.ball_c + self.vel_c;
+        if nc < 0 {
+            nc = 1;
+            self.vel_c = 1;
+        } else if nc >= GRID as i32 {
+            nc = GRID as i32 - 2;
+            self.vel_c = -1;
+        }
+        if nr <= 0 {
+            nr = 1;
+            self.vel_r = 1;
+        }
+
+        // Brick collision.
+        if (1..=BRICK_ROWS as i32).contains(&nr) {
+            let (ri, ci) = ((nr - 1) as usize, nc as usize);
+            if self.bricks[ri][ci] {
+                self.bricks[ri][ci] = false;
+                reward += 1.0;
+                self.vel_r = -self.vel_r;
+                nr = self.ball_r; // bounce back the way it came
+            }
+        }
+
+        let mut done = false;
+        if nr >= (GRID - 1) as i32 {
+            if self.paddle_covers(nc) {
+                self.vel_r = -1;
+                nr = (GRID - 2) as i32;
+                // English: paddle edge redirects the ball.
+                if nc == self.paddle as i32 {
+                    self.vel_c = -1;
+                } else if nc == (self.paddle + PADDLE_W - 1) as i32 {
+                    self.vel_c = 1;
+                }
+            } else {
+                reward -= 1.0;
+                self.lives -= 1;
+                self.ball_live = false;
+                if self.lives == 0 {
+                    done = true;
+                }
+            }
+        }
+        if self.ball_live {
+            self.ball_r = nr;
+            self.ball_c = nc;
+        }
+        if self.bricks_left() == 0 {
+            done = true;
+        }
+        self.render(frame);
+        Step {
+            reward,
+            done,
+            truncated: false,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "breakout"
+    }
+
+    fn real_actions(&self) -> usize {
+        4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::testutil::*;
+
+    #[test]
+    fn starts_with_full_bricks() {
+        let env = Breakout::new(0);
+        assert_eq!(env.bricks_left(), BRICK_ROWS * GRID);
+    }
+
+    #[test]
+    fn fire_required_after_life_loss() {
+        let mut env = Breakout::new(1);
+        let mut frame = new_frame();
+        env.reset(&mut frame);
+        // Park the paddle far left, let the ball drop.
+        for _ in 0..200 {
+            let s = env.step(1, &mut frame);
+            if s.reward < 0.0 {
+                break;
+            }
+        }
+        assert!(!env.ball_live);
+        // Without FIRE nothing moves.
+        let before = frame.clone();
+        env.step(0, &mut frame);
+        assert_eq!(before, frame);
+        env.step(3, &mut frame);
+        assert!(env.ball_live);
+    }
+
+    #[test]
+    fn tracking_play_clears_bricks() {
+        let mut env = Breakout::new(4);
+        let mut frame = new_frame();
+        env.reset(&mut frame);
+        let mut bricks_broken = 0.0;
+        for _ in 0..5_000 {
+            let action = if !env.ball_live {
+                3
+            } else {
+                let bc = env.ball_c;
+                let centre = env.paddle as i32 + 1;
+                if bc < centre {
+                    1
+                } else if bc > centre {
+                    2
+                } else {
+                    0
+                }
+            };
+            let s = env.step(action, &mut frame);
+            if s.reward > 0.0 {
+                bricks_broken += s.reward;
+            }
+            assert_frame_valid(&frame);
+            if s.done {
+                break;
+            }
+        }
+        assert!(bricks_broken >= 5.0, "broke {bricks_broken}");
+    }
+
+    #[test]
+    fn episode_terminates_for_any_policy() {
+        for seed in 0..4 {
+            let mut env = Breakout::new(seed);
+            let (_, episodes) = drive(&mut env, 3, 20_000);
+            assert!(episodes > 0, "seed {seed} never terminated");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let mut env = Breakout::new(seed);
+            let mut frame = new_frame();
+            env.reset(&mut frame);
+            let mut out = Vec::new();
+            for i in 0..300 {
+                out.push(env.step(i % 4, &mut frame).reward as i32);
+            }
+            out
+        };
+        assert_eq!(run(77), run(77));
+    }
+}

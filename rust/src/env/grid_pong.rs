@@ -1,0 +1,232 @@
+//! GridPong: single-player Pong against a wall (serve → rally → miss).
+//!
+//! The ball bounces off the top wall and both side walls; the player's
+//! 2-cell paddle guards the bottom row. Each paddle contact scores +1 and
+//! speeds nothing up (constant dynamics keep the timing model clean);
+//! a miss costs one of three lives and -1 reward. Episode ends when all
+//! lives are gone.
+//!
+//! Actions: 0 = noop, 1 = left, 2 = right, 3 = noop.
+
+use super::{new_frame, put, Environment, Frame, Step, GRID};
+use crate::util::prng::Pcg32;
+
+const LIVES: u32 = 3;
+const PADDLE_W: usize = 2;
+
+pub struct GridPong {
+    rng: Pcg32,
+    ball_r: i32,
+    ball_c: i32,
+    vel_r: i32,
+    vel_c: i32,
+    paddle: usize, // left cell of the paddle
+    lives: u32,
+}
+
+impl GridPong {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Pcg32::seeded(seed),
+            ball_r: 0,
+            ball_c: 0,
+            vel_r: 1,
+            vel_c: 1,
+            paddle: GRID / 2,
+            lives: LIVES,
+        }
+    }
+
+    fn serve(&mut self) {
+        self.ball_r = 1;
+        self.ball_c = 1 + self.rng.index(GRID - 2) as i32;
+        self.vel_r = 1;
+        self.vel_c = if self.rng.chance(0.5) { 1 } else { -1 };
+    }
+
+    fn render(&self, frame: &mut Frame) {
+        frame.iter_mut().for_each(|v| *v = 0.0);
+        if self.ball_r >= 0 {
+            put(frame, self.ball_r as usize, self.ball_c as usize, 1.0);
+        }
+        for i in 0..PADDLE_W {
+            put(frame, GRID - 1, (self.paddle + i).min(GRID - 1), 0.5);
+        }
+        // Lives indicator in the top-left corner (dimmer).
+        for l in 0..self.lives as usize {
+            put(frame, 0, l, 0.25_f32.max(frame[l]));
+        }
+    }
+
+    fn paddle_covers(&self, col: i32) -> bool {
+        col >= self.paddle as i32 && col < (self.paddle + PADDLE_W) as i32
+    }
+}
+
+impl Environment for GridPong {
+    fn reset(&mut self, frame: &mut Frame) {
+        self.lives = LIVES;
+        self.paddle = GRID / 2;
+        self.serve();
+        if frame.len() != GRID * GRID {
+            *frame = new_frame();
+        }
+        self.render(frame);
+    }
+
+    fn step(&mut self, action: usize, frame: &mut Frame) -> Step {
+        match action {
+            1 => self.paddle = self.paddle.saturating_sub(1),
+            2 => self.paddle = (self.paddle + 1).min(GRID - PADDLE_W),
+            _ => {}
+        }
+
+        // Ball dynamics with wall bounces.
+        let mut nr = self.ball_r + self.vel_r;
+        let mut nc = self.ball_c + self.vel_c;
+        if nc < 0 {
+            nc = 1;
+            self.vel_c = 1;
+        } else if nc >= GRID as i32 {
+            nc = GRID as i32 - 2;
+            self.vel_c = -1;
+        }
+        if nr < 0 {
+            nr = 1;
+            self.vel_r = 1;
+        }
+
+        let mut reward = 0.0;
+        let mut done = false;
+        if nr >= (GRID - 1) as i32 {
+            // Reached the paddle row.
+            if self.paddle_covers(nc) {
+                reward = 1.0;
+                self.vel_r = -1;
+                nr = (GRID - 2) as i32;
+            } else {
+                reward = -1.0;
+                self.lives -= 1;
+                if self.lives == 0 {
+                    done = true;
+                } else {
+                    self.serve();
+                    self.render(frame);
+                    return Step::cont(reward);
+                }
+            }
+        }
+        self.ball_r = nr;
+        self.ball_c = nc;
+        self.render(frame);
+        Step {
+            reward,
+            done,
+            truncated: false,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "grid_pong"
+    }
+
+    fn real_actions(&self) -> usize {
+        3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::testutil::*;
+
+    #[test]
+    fn static_paddle_loses_all_lives() {
+        let mut env = GridPong::new(3);
+        let mut frame = new_frame();
+        env.reset(&mut frame);
+        let mut steps = 0;
+        let mut misses = 0;
+        loop {
+            let s = env.step(0, &mut frame);
+            steps += 1;
+            if s.reward < 0.0 {
+                misses += 1;
+            }
+            assert_frame_valid(&frame);
+            if s.done {
+                break;
+            }
+            assert!(steps < 10_000, "episode must terminate");
+        }
+        assert_eq!(misses, LIVES);
+    }
+
+    #[test]
+    fn tracking_player_rallies() {
+        // Follow the ball column with the paddle: should score many hits
+        // before any plausible miss.
+        let mut env = GridPong::new(9);
+        let mut frame = new_frame();
+        env.reset(&mut frame);
+        let mut hits = 0;
+        let mut prev_bc: Option<i32> = None;
+        for _ in 0..600 {
+            let ball = frame.iter().position(|&v| v == 1.0);
+            let action = match ball {
+                Some(i) => {
+                    let bc = (i % GRID) as i32;
+                    // Anticipate the diagonal motion: aim at bc + velocity.
+                    let vel = prev_bc.map(|p| (bc - p).signum()).unwrap_or(0);
+                    prev_bc = Some(bc);
+                    let target = (bc + vel).clamp(0, GRID as i32 - 1);
+                    let pc = frame
+                        .iter()
+                        .rposition(|&v| v == 0.5)
+                        .map(|p| (p % GRID) as i32 - 1)
+                        .unwrap_or(target);
+                    if target < pc {
+                        1
+                    } else if target > pc + 1 {
+                        2
+                    } else {
+                        0
+                    }
+                }
+                None => 0,
+            };
+            let s = env.step(action, &mut frame);
+            if s.reward > 0.0 {
+                hits += 1;
+            }
+            if s.done {
+                env.reset(&mut frame);
+            }
+        }
+        assert!(hits > 20, "tracking play should rally (hits = {hits})");
+    }
+
+    #[test]
+    fn ball_stays_in_bounds() {
+        let mut env = GridPong::new(1);
+        let mut frame = new_frame();
+        env.reset(&mut frame);
+        for i in 0..2_000 {
+            let a = i % 3;
+            let s = env.step(a, &mut frame);
+            assert!((0..GRID as i32).contains(&env.ball_c), "col {}", env.ball_c);
+            assert!(env.ball_r >= 0 && env.ball_r < GRID as i32);
+            if s.done {
+                env.reset(&mut frame);
+            }
+        }
+    }
+
+    #[test]
+    fn reward_only_at_paddle_row_events() {
+        let mut env = GridPong::new(5);
+        let (total, episodes) = drive(&mut env, 2, 3_000);
+        assert!(episodes > 0);
+        assert!(total.abs() <= 3_000.0);
+    }
+}

@@ -1,0 +1,120 @@
+//! ALE-like environment substrate.
+//!
+//! The paper's workload is SEED-RL's R2D2 on the Arcade Learning
+//! Environment. Atari ROMs are not redistributable, so this module
+//! provides a suite of small deterministic arcade games with the same
+//! interface contract (pixel-ish observations, small discrete action set,
+//! episodic reward, sticky actions, frame stacking) and a calibrated
+//! per-step CPU cost knob so actor-side load matches the ALE regime on
+//! this host (see `config::EnvConfig::step_cost_us`).
+//!
+//! All games render to a GRID x GRID single-channel float frame in [0,1];
+//! wrappers stack the last K frames into the [S, S, K] observation the
+//! agent network consumes.
+
+pub mod breakout;
+pub mod catch;
+pub mod grid_pong;
+pub mod nav_maze;
+pub mod registry;
+pub mod wrappers;
+
+pub use registry::{make_env, registered_envs};
+pub use wrappers::{FrameStack, StepCost, StickyActions, Wrapped};
+
+/// Grid side length shared by the whole suite (matches the AOT'd agent's
+/// `obs_size`).
+pub const GRID: usize = 10;
+
+/// Number of discrete actions shared by the whole suite (matches the
+/// AOT'd agent's `num_actions`). Games that need fewer map extras to noop.
+pub const NUM_ACTIONS: usize = 4;
+
+/// One environment step's outcome.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Step {
+    pub reward: f32,
+    /// Episode ended (terminal state reached or truncated).
+    pub done: bool,
+    /// True when `done` came from truncation (time limit), not a terminal.
+    pub truncated: bool,
+}
+
+impl Step {
+    pub fn cont(reward: f32) -> Self {
+        Self {
+            reward,
+            done: false,
+            truncated: false,
+        }
+    }
+
+    pub fn terminal(reward: f32) -> Self {
+        Self {
+            reward,
+            done: true,
+            truncated: false,
+        }
+    }
+}
+
+/// A single-channel frame: GRID*GRID floats in [0,1], row-major.
+pub type Frame = Vec<f32>;
+
+/// The environment contract (ALE-shaped).
+pub trait Environment: Send {
+    /// Reset to a fresh episode; render the initial frame into `frame`.
+    fn reset(&mut self, frame: &mut Frame);
+
+    /// Apply `action`, advance one step, render into `frame`.
+    fn step(&mut self, action: usize, frame: &mut Frame) -> Step;
+
+    /// Human-readable name.
+    fn name(&self) -> &'static str;
+
+    /// Actions this game actually distinguishes (<= NUM_ACTIONS).
+    fn real_actions(&self) -> usize;
+}
+
+/// Allocate a zeroed frame of the suite's size.
+pub fn new_frame() -> Frame {
+    vec![0.0; GRID * GRID]
+}
+
+/// Set cell (row, col) to `v` (bounds-checked in debug).
+#[inline]
+pub(crate) fn put(frame: &mut Frame, row: usize, col: usize, v: f32) {
+    debug_assert!(row < GRID && col < GRID);
+    frame[row * GRID + col] = v;
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// Drive `env` for `steps` steps with a fixed action; return total
+    /// reward and number of episode boundaries crossed.
+    pub fn drive(env: &mut dyn Environment, action: usize, steps: usize) -> (f32, usize) {
+        let mut frame = new_frame();
+        env.reset(&mut frame);
+        let mut total = 0.0;
+        let mut episodes = 0;
+        for _ in 0..steps {
+            let s = env.step(action, &mut frame);
+            total += s.reward;
+            if s.done {
+                episodes += 1;
+                env.reset(&mut frame);
+            }
+        }
+        (total, episodes)
+    }
+
+    /// Frames must always be in [0,1].
+    pub fn assert_frame_valid(frame: &Frame) {
+        assert_eq!(frame.len(), GRID * GRID);
+        for &v in frame {
+            assert!((0.0..=1.0).contains(&v), "frame value {v} out of range");
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Environment registry: name -> constructor, so configs and CLIs select
+//! games by string (ALE-style).
+
+use super::breakout::Breakout;
+use super::catch::Catch;
+use super::grid_pong::GridPong;
+use super::nav_maze::NavMaze;
+use super::Environment;
+
+/// Names accepted by `make_env`, in display order.
+pub fn registered_envs() -> &'static [&'static str] {
+    &["grid_pong", "breakout", "catch", "nav_maze"]
+}
+
+/// Construct a base environment by registered name.
+pub fn make_env(name: &str, seed: u64) -> anyhow::Result<Box<dyn Environment>> {
+    match name {
+        "grid_pong" => Ok(Box::new(GridPong::new(seed))),
+        "breakout" => Ok(Box::new(Breakout::new(seed))),
+        "catch" => Ok(Box::new(Catch::new(seed))),
+        "nav_maze" => Ok(Box::new(NavMaze::new(seed))),
+        other => anyhow::bail!(
+            "unknown env `{other}` (registered: {:?})",
+            registered_envs()
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::{new_frame, NUM_ACTIONS};
+
+    #[test]
+    fn all_registered_names_construct() {
+        for name in registered_envs() {
+            let mut env = make_env(name, 0).unwrap();
+            let mut f = new_frame();
+            env.reset(&mut f);
+            assert_eq!(env.name(), *name);
+            assert!(env.real_actions() <= NUM_ACTIONS);
+        }
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(make_env("space_invaders", 0).is_err());
+    }
+
+    #[test]
+    fn extra_actions_are_safe_noops() {
+        // Every game must tolerate the full shared action space.
+        for name in registered_envs() {
+            let mut env = make_env(name, 1).unwrap();
+            let mut f = new_frame();
+            env.reset(&mut f);
+            for a in 0..NUM_ACTIONS {
+                let s = env.step(a, &mut f);
+                if s.done {
+                    env.reset(&mut f);
+                }
+            }
+        }
+    }
+}

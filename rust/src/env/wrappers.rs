@@ -1,0 +1,373 @@
+//! ALE-style wrappers: sticky actions, frame stacking, per-step CPU cost,
+//! and episode bookkeeping, composed into `Wrapped` (the type the actor
+//! threads drive).
+
+use super::{new_frame, Environment, Frame, Step, GRID};
+use crate::config::EnvConfig;
+use crate::util::prng::Pcg32;
+use std::time::{Duration, Instant};
+
+/// Sticky actions (Machado et al.): with probability p, repeat the
+/// previous action instead of the requested one. The standard ALE
+/// stochasticity device — prevents open-loop policies.
+pub struct StickyActions<E: Environment> {
+    inner: E,
+    prob: f64,
+    rng: Pcg32,
+    last_action: usize,
+}
+
+impl<E: Environment> StickyActions<E> {
+    pub fn new(inner: E, prob: f64, seed: u64) -> Self {
+        Self {
+            inner,
+            prob,
+            rng: Pcg32::seeded(seed),
+            last_action: 0,
+        }
+    }
+}
+
+impl<E: Environment> Environment for StickyActions<E> {
+    fn reset(&mut self, frame: &mut Frame) {
+        self.last_action = 0;
+        self.inner.reset(frame);
+    }
+
+    fn step(&mut self, action: usize, frame: &mut Frame) -> Step {
+        let effective = if self.rng.chance(self.prob) {
+            self.last_action
+        } else {
+            action
+        };
+        self.last_action = effective;
+        self.inner.step(effective, frame)
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn real_actions(&self) -> usize {
+        self.inner.real_actions()
+    }
+}
+
+/// Burns CPU for a configured duration per step, emulating heavier
+/// environment simulators (the knob that calibrates actor-side load to
+/// the ALE regime; see DESIGN.md §2). Spin-waits below 50us (sleep
+/// granularity), sleeps above.
+pub struct StepCost<E: Environment> {
+    inner: E,
+    cost: Duration,
+}
+
+impl<E: Environment> StepCost<E> {
+    pub fn new(inner: E, cost_us: u64) -> Self {
+        Self {
+            inner,
+            cost: Duration::from_micros(cost_us),
+        }
+    }
+
+    fn burn(&self) {
+        if self.cost.is_zero() {
+            return;
+        }
+        if self.cost < Duration::from_micros(50) {
+            let t0 = Instant::now();
+            while t0.elapsed() < self.cost {
+                std::hint::spin_loop();
+            }
+        } else {
+            std::thread::sleep(self.cost);
+        }
+    }
+}
+
+impl<E: Environment> Environment for StepCost<E> {
+    fn reset(&mut self, frame: &mut Frame) {
+        self.inner.reset(frame);
+    }
+
+    fn step(&mut self, action: usize, frame: &mut Frame) -> Step {
+        self.burn();
+        self.inner.step(action, frame)
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn real_actions(&self) -> usize {
+        self.inner.real_actions()
+    }
+}
+
+/// Stacks the last K frames into a [S, S, K] channel-last observation
+/// (the layout `model.AgentConfig.obs_shape` expects). On reset the stack
+/// is filled with copies of the initial frame.
+pub struct FrameStack {
+    k: usize,
+    history: Vec<Frame>, // most recent last
+}
+
+impl FrameStack {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        Self {
+            k,
+            history: Vec::with_capacity(k),
+        }
+    }
+
+    pub fn reset(&mut self, frame: &Frame) {
+        self.history.clear();
+        for _ in 0..self.k {
+            self.history.push(frame.clone());
+        }
+    }
+
+    pub fn push(&mut self, frame: &Frame) {
+        if self.history.len() == self.k {
+            self.history.remove(0);
+        }
+        self.history.push(frame.clone());
+    }
+
+    /// Write the stacked observation into `out` ([S*S*K] floats,
+    /// channel-last: out[(r*S + c)*K + ch], ch 0 = oldest).
+    pub fn observe(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), GRID * GRID * self.k);
+        for (ch, frame) in self.history.iter().enumerate() {
+            for (i, &v) in frame.iter().enumerate() {
+                out[i * self.k + ch] = v;
+            }
+        }
+    }
+
+    pub fn obs_len(&self) -> usize {
+        GRID * GRID * self.k
+    }
+}
+
+/// Fully wrapped environment with episode bookkeeping: the unit an actor
+/// thread owns. Observations come out stacked and channel-last.
+pub struct Wrapped {
+    env: Box<dyn Environment>,
+    stack: FrameStack,
+    frame: Frame,
+    max_episode_len: usize,
+    pub episode_return: f32,
+    pub episode_len: usize,
+    pub episodes_completed: u64,
+    pub total_steps: u64,
+    /// Return of the last *completed* episode.
+    pub last_return: f32,
+}
+
+impl Wrapped {
+    pub fn from_config(cfg: &EnvConfig, instance_seed: u64) -> anyhow::Result<Self> {
+        let base = super::registry::make_env(&cfg.name, cfg.seed ^ instance_seed)?;
+        let sticky = StickyActions::new(
+            BoxedEnv(base),
+            cfg.sticky_action_prob,
+            cfg.seed.wrapping_add(instance_seed).wrapping_mul(0x9E37),
+        );
+        let costed = StepCost::new(sticky, cfg.step_cost_us);
+        Ok(Self {
+            env: Box::new(costed),
+            stack: FrameStack::new(cfg.frame_stack),
+            frame: new_frame(),
+            max_episode_len: cfg.max_episode_len,
+            episode_return: 0.0,
+            episode_len: 0,
+            episodes_completed: 0,
+            total_steps: 0,
+            last_return: 0.0,
+        })
+    }
+
+    pub fn obs_len(&self) -> usize {
+        self.stack.obs_len()
+    }
+
+    /// Reset and write the initial stacked observation.
+    pub fn reset(&mut self, obs: &mut [f32]) {
+        self.env.reset(&mut self.frame);
+        self.stack.reset(&self.frame);
+        self.stack.observe(obs);
+        self.episode_return = 0.0;
+        self.episode_len = 0;
+    }
+
+    /// Step; on episode end auto-resets (returning done=true for the
+    /// transition) so actors never stall. Observation written is the
+    /// *post-step* stacked obs (initial obs of the next episode if done).
+    pub fn step(&mut self, action: usize, obs: &mut [f32]) -> Step {
+        let mut step = self.env.step(action, &mut self.frame);
+        self.episode_return += step.reward;
+        self.episode_len += 1;
+        self.total_steps += 1;
+        if !step.done && self.episode_len >= self.max_episode_len {
+            step.done = true;
+            step.truncated = true;
+        }
+        if step.done {
+            self.episodes_completed += 1;
+            self.last_return = self.episode_return;
+            self.env.reset(&mut self.frame);
+            self.stack.reset(&self.frame);
+            self.episode_return = 0.0;
+            self.episode_len = 0;
+        } else {
+            self.stack.push(&self.frame);
+        }
+        self.stack.observe(obs);
+        step
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.env.name()
+    }
+}
+
+/// Adapter so `Box<dyn Environment>` can feed the generic wrappers.
+struct BoxedEnv(Box<dyn Environment>);
+
+impl Environment for BoxedEnv {
+    fn reset(&mut self, frame: &mut Frame) {
+        self.0.reset(frame)
+    }
+
+    fn step(&mut self, action: usize, frame: &mut Frame) -> Step {
+        self.0.step(action, frame)
+    }
+
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn real_actions(&self) -> usize {
+        self.0.real_actions()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::catch::Catch;
+
+    #[test]
+    fn sticky_actions_repeat_sometimes() {
+        // With prob 1.0 every action after the first is the first action.
+        struct Recorder {
+            seen: Vec<usize>,
+        }
+        impl Environment for Recorder {
+            fn reset(&mut self, _f: &mut Frame) {}
+            fn step(&mut self, a: usize, _f: &mut Frame) -> Step {
+                self.seen.push(a);
+                Step::cont(0.0)
+            }
+            fn name(&self) -> &'static str {
+                "rec"
+            }
+            fn real_actions(&self) -> usize {
+                4
+            }
+        }
+        let mut env = StickyActions::new(Recorder { seen: vec![] }, 1.0, 0);
+        let mut f = new_frame();
+        env.reset(&mut f);
+        for a in [2, 3, 1, 0] {
+            env.step(a, &mut f);
+        }
+        // prob=1.0: always repeat last (initially 0).
+        assert_eq!(env.inner.seen, vec![0, 0, 0, 0]);
+
+        let mut env = StickyActions::new(Recorder { seen: vec![] }, 0.0, 0);
+        env.reset(&mut f);
+        for a in [2, 3, 1, 0] {
+            env.step(a, &mut f);
+        }
+        assert_eq!(env.inner.seen, vec![2, 3, 1, 0]);
+    }
+
+    #[test]
+    fn step_cost_burns_time() {
+        let mut env = StepCost::new(Catch::new(0), 200);
+        let mut f = new_frame();
+        env.reset(&mut f);
+        let t0 = Instant::now();
+        for _ in 0..10 {
+            env.step(0, &mut f);
+        }
+        assert!(t0.elapsed() >= Duration::from_micros(1_500));
+    }
+
+    #[test]
+    fn frame_stack_layout_channel_last() {
+        let mut fs = FrameStack::new(2);
+        let f1 = vec![0.1; GRID * GRID];
+        let mut f2 = vec![0.2; GRID * GRID];
+        f2[0] = 0.9;
+        fs.reset(&f1);
+        fs.push(&f2);
+        let mut obs = vec![0.0; GRID * GRID * 2];
+        fs.observe(&mut obs);
+        // Cell 0: channel 0 = old frame (0.1), channel 1 = new frame (0.9).
+        assert_eq!(obs[0], 0.1);
+        assert_eq!(obs[1], 0.9);
+        assert_eq!(obs[2], 0.1);
+        assert_eq!(obs[3], 0.2);
+    }
+
+    #[test]
+    fn wrapped_auto_resets_and_counts_episodes() {
+        let cfg = EnvConfig {
+            name: "catch".into(),
+            frame_stack: 4,
+            sticky_action_prob: 0.0,
+            max_episode_len: 50,
+            step_cost_us: 0,
+            seed: 1,
+        };
+        let mut w = Wrapped::from_config(&cfg, 0).unwrap();
+        let mut obs = vec![0.0; w.obs_len()];
+        w.reset(&mut obs);
+        let mut dones = 0;
+        for _ in 0..100 {
+            if w.step(0, &mut obs).done {
+                dones += 1;
+            }
+        }
+        assert!(dones >= 9, "catch episodes are 9 steps: got {dones}");
+        assert_eq!(w.episodes_completed, dones as u64);
+        assert_eq!(w.total_steps, 100);
+    }
+
+    #[test]
+    fn wrapped_truncates_long_episodes() {
+        let cfg = EnvConfig {
+            name: "nav_maze".into(),
+            frame_stack: 2,
+            sticky_action_prob: 0.0,
+            max_episode_len: 10,
+            step_cost_us: 0,
+            seed: 3,
+        };
+        let mut w = Wrapped::from_config(&cfg, 0).unwrap();
+        let mut obs = vec![0.0; w.obs_len()];
+        w.reset(&mut obs);
+        let mut steps_to_done = 0;
+        loop {
+            steps_to_done += 1;
+            if w.step(0, &mut obs).done {
+                break;
+            }
+            assert!(steps_to_done <= 10);
+        }
+        assert_eq!(steps_to_done, 10);
+    }
+}

@@ -1,0 +1,14 @@
+//! Execution substrate: thread pool, shutdown tokens, rate limiting.
+//!
+//! Tokio is not in the offline crate set; the coordinator's event loop is
+//! built on std threads + mpsc channels, which is also the honest model
+//! of SEED-RL's actor/learner processes (blocking env steps, a central
+//! batched inference service, and a learner thread).
+
+pub mod pool;
+pub mod rate;
+pub mod shutdown;
+
+pub use pool::ThreadPool;
+pub use rate::RateLimiter;
+pub use shutdown::ShutdownToken;

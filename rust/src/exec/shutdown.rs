@@ -1,0 +1,70 @@
+//! Cooperative shutdown signalling for actor/learner/batcher threads.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Cloneable token; `signal()` flips all clones.
+#[derive(Clone, Debug, Default)]
+pub struct ShutdownToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl ShutdownToken {
+    pub fn new() -> Self {
+        Self {
+            flag: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    pub fn signal(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    pub fn is_signalled(&self) -> bool {
+        self.flag.load(Ordering::Acquire)
+    }
+
+    /// Sleep in small slices so shutdown latency stays bounded.
+    /// Returns true if shutdown was signalled during the wait.
+    pub fn sleep_interruptible(&self, total: Duration) -> bool {
+        let deadline = Instant::now() + total;
+        let slice = Duration::from_millis(5).min(total);
+        while Instant::now() < deadline {
+            if self.is_signalled() {
+                return true;
+            }
+            std::thread::sleep(slice);
+        }
+        self.is_signalled()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clones_share_state() {
+        let t = ShutdownToken::new();
+        let t2 = t.clone();
+        assert!(!t2.is_signalled());
+        t.signal();
+        assert!(t2.is_signalled());
+    }
+
+    #[test]
+    fn interruptible_sleep_returns_early() {
+        let t = ShutdownToken::new();
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            t2.signal();
+        });
+        let start = Instant::now();
+        let interrupted = t.sleep_interruptible(Duration::from_secs(5));
+        assert!(interrupted);
+        assert!(start.elapsed() < Duration::from_secs(1));
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,31 @@
+//! # rlarch — Distributed RL on CPU-GPU systems, reproduced.
+//!
+//! Library reproduction of *"The Architectural Implications of Distributed
+//! Reinforcement Learning on CPU-GPU Systems"* (Inci et al., EMC² 2020):
+//! a SEED-RL-style central-inference R2D2 training framework (Rust
+//! coordinator + AOT JAX/Pallas compute via PJRT) plus an NVArchSim-style
+//! CPU-GPU architectural simulator that regenerates the paper's Figures
+//! 2-4. See DESIGN.md for the system inventory and per-experiment index.
+//!
+//! Layer map:
+//! * [`coordinator`] — L3: actors, central inference batcher, learner.
+//! * [`runtime`] — PJRT loading/execution of the AOT HLO artifacts.
+//! * [`env`], [`replay`], [`rl`] — RL substrates (ALE-like suite, R2D2
+//!   prioritized sequence replay, epsilon/return utilities).
+//! * [`simarch`] — the architectural simulator (GPU/CPU/power models).
+//! * [`util`], [`exec`], [`config`], [`cli`], [`metrics`], [`report`] —
+//!   dependency-free infrastructure (the offline crate set has no
+//!   tokio/serde/clap/criterion).
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod env;
+pub mod exec;
+pub mod metrics;
+pub mod replay;
+pub mod report;
+pub mod simarch;
+pub mod rl;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,298 @@
+//! `rlarch` — the launcher. Subcommands:
+//!
+//! ```text
+//! rlarch train     [--config cfg.toml] [--actors N] [--steps K] ...
+//!                  run the real SEED coordinator on the AOT artifacts
+//! rlarch sweep     [--actors 4,8,...,256]      Fig. 3 on the simulator
+//! rlarch smsweep   [--sms 80,60,...,2]         Fig. 4 on the simulator
+//! rlarch breakdown                              Fig. 2 on the simulator
+//! rlarch info                                   artifact + config summary
+//! ```
+//!
+//! Python never runs here: `train` loads `artifacts/*.hlo.txt` through
+//! PJRT; the simulator subcommands consume `artifacts/kernel_trace.json`.
+
+use rlarch::cli::Cli;
+use rlarch::config::{InferenceMode, SystemConfig};
+use rlarch::coordinator;
+use rlarch::metrics::Registry;
+use rlarch::report::figure::{ascii_bar, Table};
+use rlarch::runtime::{Backend, XlaServer};
+use rlarch::simarch::{default_system, GpuModel, TraceSet};
+use std::path::Path;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let sub = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest: &[String] = if args.is_empty() { &[] } else { &args[1..] };
+    let code = match sub {
+        "train" => cmd_train(rest),
+        "sweep" => cmd_sweep(rest),
+        "smsweep" => cmd_smsweep(rest),
+        "breakdown" => cmd_breakdown(rest),
+        "info" => cmd_info(rest),
+        _ => {
+            eprintln!(
+                "usage: rlarch <train|sweep|smsweep|breakdown|info> [flags]\n\
+                 run `rlarch <subcommand> --help` for flags"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn load_config(parsed: &rlarch::cli::Parsed) -> anyhow::Result<SystemConfig> {
+    let mut cfg = match parsed.get("config") {
+        "" => SystemConfig::default(),
+        path => rlarch::config::load(Path::new(path))
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+    };
+    if let Ok(n) = parsed.get_usize("actors") {
+        if n > 0 {
+            cfg.actors.num_actors = n;
+        }
+    }
+    if let Ok(k) = parsed.get_usize("steps") {
+        if k > 0 {
+            cfg.learner.max_steps = k;
+        }
+    }
+    match parsed.get("env") {
+        "" => {}
+        e => cfg.env.name = e.to_string(),
+    }
+    if parsed.get("mode") == "local" {
+        cfg.mode = InferenceMode::Local;
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &[String]) -> i32 {
+    let cli = Cli::new("rlarch train", "run the SEED coordinator (real PJRT)")
+        .flag("config", "", "TOML config path (default: built-in)")
+        .flag("actors", "0", "override actor count")
+        .flag("steps", "0", "override learner steps")
+        .flag("env", "", "override env (grid_pong|breakout|catch|nav_maze)")
+        .flag("mode", "central", "central (SEED) or local (IMPALA-style)")
+        .flag("artifacts", "artifacts", "artifact directory");
+    let parsed = match cli.parse(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let run = || -> anyhow::Result<()> {
+        let cfg = load_config(&parsed)?;
+        let dir = Path::new(parsed.get("artifacts"));
+        let (_server, handle) = XlaServer::spawn(dir, None, true)?;
+        let backend = Backend::Xla(handle);
+        let metrics = Registry::new();
+        println!(
+            "rlarch train: env={} actors={} steps={} mode={:?}",
+            cfg.env.name, cfg.actors.num_actors, cfg.learner.max_steps, cfg.mode
+        );
+        let report = coordinator::run(&cfg, backend, metrics.clone())?;
+        println!(
+            "done in {:.1}s: {} env steps ({:.0}/s), {} episodes, mean return {:.2}",
+            report.elapsed_seconds,
+            report.env_steps,
+            report.env_steps_per_sec,
+            report.episodes,
+            report.mean_return
+        );
+        println!(
+            "learner: {} steps, loss {:.4} -> {:.4}, {} target syncs; \
+             batcher occupancy {:.1}",
+            report.learner.steps,
+            report.learner.first_loss,
+            report.learner.final_loss,
+            report.learner.target_syncs,
+            report.mean_batch_occupancy
+        );
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn load_traces(dir: &str) -> anyhow::Result<rlarch::simarch::SystemModel> {
+    let ts = TraceSet::load(Path::new(dir))?;
+    Ok(default_system(
+        ts.find("infer_paper_scale")
+            .ok_or_else(|| anyhow::anyhow!("no infer_paper_scale trace"))?
+            .clone(),
+        ts.find("train_paper_scale")
+            .ok_or_else(|| anyhow::anyhow!("no train_paper_scale trace"))?
+            .clone(),
+    ))
+}
+
+fn cmd_sweep(args: &[String]) -> i32 {
+    let cli = Cli::new("rlarch sweep", "Fig. 3: actor sweep on the simulator")
+        .flag("actors", "1,2,4,8,16,32,40,64,128,256", "actor counts")
+        .flag("artifacts", "artifacts", "artifact directory");
+    let parsed = match cli.parse(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let run = || -> anyhow::Result<()> {
+        let m = load_traces(parsed.get("artifacts"))?;
+        let actors = parsed.get_usize_list("actors")?;
+        let base = m.steady_state(actors[0]).env_rate;
+        let mut t = Table::new(&[
+            "actors", "env steps/s", "speedup", "batch", "GPU util", "power W",
+            "perf/W",
+        ]);
+        for &n in &actors {
+            let p = m.steady_state(n);
+            t.row(&[
+                n.to_string(),
+                format!("{:.0}", p.env_rate),
+                format!("{:.2}x", p.env_rate / base),
+                format!("{:.1}", p.batch_size),
+                format!("{:.2}", p.gpu_util),
+                format!("{:.0}", p.power_w),
+                format!("{:.1}", p.perf_per_watt),
+            ]);
+        }
+        println!("{}", t.to_markdown());
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_smsweep(args: &[String]) -> i32 {
+    let cli = Cli::new("rlarch smsweep", "Fig. 4: SM sweep on the simulator")
+        .flag("sms", "80,60,40,20,10,4,2", "SM counts")
+        .flag("actors", "40", "actor count at the operating point")
+        .flag("artifacts", "artifacts", "artifact directory");
+    let parsed = match cli.parse(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let run = || -> anyhow::Result<()> {
+        let m = load_traces(parsed.get("artifacts"))?;
+        let n = parsed.get_usize("actors")?;
+        let sms = parsed.get_usize_list("sms")?;
+        let base = m.steady_state(n).env_rate;
+        let mut t = Table::new(&["SMs", "CPU/GPU ratio", "slowdown", ""]);
+        for &s in &sms {
+            let p = m.with_sms(s).steady_state(n);
+            let slow = base / p.env_rate;
+            t.row(&[
+                s.to_string(),
+                format!("{:.3}", 40.0 / s as f64),
+                format!("{slow:.3}x"),
+                ascii_bar((slow - 1.0) / 10.0, 24),
+            ]);
+        }
+        println!("{}", t.to_markdown());
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_breakdown(args: &[String]) -> i32 {
+    let cli = Cli::new("rlarch breakdown", "Fig. 2: GPU component breakdown")
+        .flag("artifacts", "artifacts", "artifact directory");
+    let parsed = match cli.parse(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let run = || -> anyhow::Result<()> {
+        let ts = TraceSet::load(Path::new(parsed.get("artifacts")))?;
+        let gpu = GpuModel::new(rlarch::config::GpuModelConfig::default());
+        let trace = ts
+            .find("train_paper_scale")
+            .ok_or_else(|| anyhow::anyhow!("no train_paper_scale trace"))?;
+        let b = gpu.breakdown(trace);
+        let mut t = Table::new(&["component", "share", "", "paper"]);
+        for (name, share, paper) in [
+            ("Math", b.math, "57%"),
+            ("SM utilization", b.sm_util, "15%"),
+            ("DRAM bandwidth", b.dram_bw, "12%"),
+            ("DRAM latency", b.dram_latency, "~8%"),
+            ("L2", b.l2, "~8%"),
+        ] {
+            t.row(&[
+                name.to_string(),
+                format!("{:.1}%", share * 100.0),
+                ascii_bar(share, 30),
+                paper.to_string(),
+            ]);
+        }
+        println!("{}", t.to_markdown());
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info(args: &[String]) -> i32 {
+    let cli = Cli::new("rlarch info", "artifact + config summary")
+        .flag("artifacts", "artifacts", "artifact directory");
+    let parsed = match cli.parse(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let dir = Path::new(parsed.get("artifacts"));
+    match rlarch::runtime::Manifest::load(dir) {
+        Ok(m) => {
+            println!(
+                "agent: obs {s}x{s}x{c}, {a} actions, LSTM {h}, {p} params",
+                s = m.obs_size,
+                c = m.obs_channels,
+                a = m.num_actions,
+                h = m.lstm_hidden,
+                p = m.param_count
+            );
+            println!(
+                "r2d2: seq {} (burn-in {}), n-step {}, gamma {}, batch {}",
+                m.seq_len, m.burn_in, m.n_step, m.gamma, m.train_batch
+            );
+            println!("artifacts: {:?}", m.artifacts.keys().collect::<Vec<_>>());
+            println!("infer batches: {:?}", m.infer_batch_sizes());
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e} (run `make artifacts`)");
+            1
+        }
+    }
+}

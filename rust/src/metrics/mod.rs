@@ -1,0 +1,224 @@
+//! Metrics registry: counters, gauges, timers; CSV/markdown reporting.
+//!
+//! The coordinator and simulator publish into a shared `Registry`
+//! (lock-per-metric, cheap enough for the hot path at our rates); benches
+//! snapshot it for their reports.
+
+use crate::util::stats::Summary;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Monotonic counter.
+#[derive(Clone, Debug, Default)]
+pub struct Counter {
+    v: Arc<AtomicU64>,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge (bit-cast f64).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge {
+    v: Arc<AtomicU64>,
+}
+
+impl Gauge {
+    pub fn set(&self, x: f64) {
+        self.v.store(x.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.v.load(Ordering::Relaxed))
+    }
+}
+
+/// Aggregating timer/summary (mean/std/min/max over recorded values).
+#[derive(Clone, Debug, Default)]
+pub struct Timer {
+    s: Arc<Mutex<Summary>>,
+}
+
+impl Timer {
+    pub fn record(&self, seconds: f64) {
+        self.s.lock().unwrap().add(seconds);
+    }
+
+    /// Time a closure and record its duration.
+    pub fn time<R>(&self, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.record(t0.elapsed().as_secs_f64());
+        r
+    }
+
+    pub fn snapshot(&self) -> Summary {
+        self.s.lock().unwrap().clone()
+    }
+}
+
+/// Registry of named metrics. Cloning shares the underlying maps.
+#[derive(Clone, Default)]
+pub struct Registry {
+    counters: Arc<Mutex<BTreeMap<String, Counter>>>,
+    gauges: Arc<Mutex<BTreeMap<String, Gauge>>>,
+    timers: Arc<Mutex<BTreeMap<String, Timer>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Counter {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        self.gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn timer(&self, name: &str) -> Timer {
+        self.timers
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Flat snapshot of every metric for reports.
+    pub fn snapshot(&self) -> BTreeMap<String, f64> {
+        let mut out = BTreeMap::new();
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            out.insert(k.clone(), c.get() as f64);
+        }
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            out.insert(k.clone(), g.get());
+        }
+        for (k, t) in self.timers.lock().unwrap().iter() {
+            let s = t.snapshot();
+            if s.count() > 0 {
+                out.insert(format!("{k}.mean"), s.mean());
+                out.insert(format!("{k}.max"), s.max());
+                out.insert(format!("{k}.count"), s.count() as f64);
+            }
+        }
+        out
+    }
+
+    /// Render a two-column markdown table of the snapshot.
+    pub fn to_markdown(&self) -> String {
+        let snap = self.snapshot();
+        let mut out = String::from("| metric | value |\n|---|---|\n");
+        for (k, v) in snap {
+            out.push_str(&format!("| {k} | {v:.6} |\n"));
+        }
+        out
+    }
+
+    /// Render `name,value` CSV of the snapshot.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("metric,value\n");
+        for (k, v) in self.snapshot() {
+            out.push_str(&format!("{k},{v}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_shared_across_clones() {
+        let r = Registry::new();
+        let a = r.counter("steps");
+        let b = r.counter("steps");
+        a.add(3);
+        b.inc();
+        assert_eq!(r.counter("steps").get(), 4);
+    }
+
+    #[test]
+    fn gauge_overwrites() {
+        let r = Registry::new();
+        r.gauge("power_w").set(70.0);
+        r.gauge("power_w").set(250.5);
+        assert_eq!(r.gauge("power_w").get(), 250.5);
+    }
+
+    #[test]
+    fn timer_aggregates() {
+        let r = Registry::new();
+        let t = r.timer("step");
+        t.record(0.1);
+        t.record(0.3);
+        let s = t.snapshot();
+        assert_eq!(s.count(), 2);
+        assert!((s.mean() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timer_time_closure() {
+        let r = Registry::new();
+        let out = r.timer("work").time(|| 21 * 2);
+        assert_eq!(out, 42);
+        assert_eq!(r.timer("work").snapshot().count(), 1);
+    }
+
+    #[test]
+    fn snapshot_and_render() {
+        let r = Registry::new();
+        r.counter("a").add(7);
+        r.gauge("b").set(1.5);
+        r.timer("t").record(2.0);
+        let snap = r.snapshot();
+        assert_eq!(snap["a"], 7.0);
+        assert_eq!(snap["b"], 1.5);
+        assert_eq!(snap["t.count"], 1.0);
+        assert!(r.to_markdown().contains("| a |"));
+        assert!(r.to_csv().starts_with("metric,value\n"));
+    }
+
+    #[test]
+    fn concurrent_counting() {
+        let r = Registry::new();
+        let c = r.counter("x");
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 8000);
+    }
+}

@@ -1,0 +1,10 @@
+//! Prioritized sequence replay (R2D2 / Ape-X style): sum-tree sampling
+//! over fixed-length recurrent sequences with learner-refreshed
+//! priorities. This is the Reverb-equivalent substrate (the paper's
+//! reference stack uses DeepMind Reverb [3]).
+
+pub mod sequence;
+pub mod sum_tree;
+
+pub use sequence::{ReplayConfig, SampledBatch, SequenceReplay};
+pub use sum_tree::SumTree;

@@ -1,0 +1,284 @@
+//! R2D2 prioritized sequence replay buffer.
+//!
+//! Stores fixed-length sequences in a ring; samples with probability
+//! proportional to priority^alpha through a sum tree; priorities are
+//! refreshed from the learner's TD-error output after every train step.
+//! New sequences enter at the current max priority (so nothing starves
+//! before its first update) — the standard Ape-X/R2D2 scheme.
+
+use super::sum_tree::SumTree;
+use crate::rl::Sequence;
+use crate::util::prng::Pcg32;
+use std::sync::{Arc, Mutex};
+
+pub struct ReplayConfig {
+    pub capacity: usize,
+    /// Priority exponent alpha (0 = uniform sampling).
+    pub alpha: f64,
+    /// Floor added to updated priorities so nothing becomes unsampleable.
+    pub min_priority: f64,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        Self {
+            capacity: 4_096,
+            alpha: 0.9,
+            min_priority: 1e-3,
+        }
+    }
+}
+
+struct Inner {
+    slots: Vec<Option<Arc<Sequence>>>,
+    tree: SumTree,
+    write: usize,
+    len: usize,
+    inserts: u64,
+    /// Raw (pre-alpha) max priority seen, for new-sequence initialization.
+    max_raw_priority: f64,
+}
+
+/// Thread-safe prioritized sequence buffer (actors insert, learner
+/// samples + updates). A single mutex is sufficient at our rates; see
+/// EXPERIMENTS.md §Perf for the contention measurement.
+pub struct SequenceReplay {
+    cfg: ReplayConfig,
+    inner: Mutex<Inner>,
+}
+
+/// A sampled batch: shared sequence handles + slot ids for the priority
+/// refresh. `Arc` keeps sampling allocation-free on the sequence payload
+/// (a clone of a 32 KiB obs sequence per row dominated the sample path;
+/// see EXPERIMENTS.md §Perf).
+pub struct SampledBatch {
+    pub sequences: Vec<Arc<Sequence>>,
+    pub slots: Vec<usize>,
+}
+
+impl SequenceReplay {
+    pub fn new(cfg: ReplayConfig) -> Self {
+        let capacity = cfg.capacity;
+        Self {
+            cfg,
+            inner: Mutex::new(Inner {
+                slots: (0..capacity).map(|_| None).collect(),
+                tree: SumTree::new(capacity),
+                write: 0,
+                len: 0,
+                inserts: 0,
+                max_raw_priority: 1.0,
+            }),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn inserts(&self) -> u64 {
+        self.inner.lock().unwrap().inserts
+    }
+
+    /// Insert at max priority; overwrites the oldest slot when full.
+    pub fn add(&self, seq: Sequence) {
+        let mut g = self.inner.lock().unwrap();
+        let idx = g.write;
+        let raw = g.max_raw_priority;
+        let prio = self.shaped(raw);
+        g.slots[idx] = Some(Arc::new(seq));
+        g.tree.set(idx, prio);
+        g.write = (g.write + 1) % self.cfg.capacity;
+        g.len = (g.len + 1).min(self.cfg.capacity);
+        g.inserts += 1;
+    }
+
+    /// Sample `batch` sequences (with replacement across the priority
+    /// distribution; stratified over equal mass segments, the standard
+    /// PER scheme). Returns None until the buffer holds >= batch items.
+    pub fn sample(&self, batch: usize, rng: &mut Pcg32) -> Option<SampledBatch> {
+        let g = self.inner.lock().unwrap();
+        if g.len < batch || g.tree.total() <= 0.0 {
+            return None;
+        }
+        let total = g.tree.total();
+        let seg = total / batch as f64;
+        let mut sequences = Vec::with_capacity(batch);
+        let mut slots = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let u = (i as f64 + rng.next_f64()) * seg;
+            let slot = g.tree.sample(u);
+            match &g.slots[slot] {
+                Some(seq) => {
+                    sequences.push(seq.clone());
+                    slots.push(slot);
+                }
+                None => {
+                    // Tree/slot mismatch is a bug: priorities for empty
+                    // slots must be zero.
+                    unreachable!("sampled an empty slot {slot}");
+                }
+            }
+        }
+        Some(SampledBatch { sequences, slots })
+    }
+
+    /// Refresh priorities (raw TD-error magnitudes) after a train step.
+    /// Slots overwritten since sampling are skipped (stale update).
+    pub fn update_priorities(&self, slots: &[usize], raw_priorities: &[f32]) {
+        let mut g = self.inner.lock().unwrap();
+        for (&slot, &p) in slots.iter().zip(raw_priorities) {
+            if g.slots[slot].is_none() {
+                continue;
+            }
+            let raw = (p as f64).max(self.cfg.min_priority);
+            g.max_raw_priority = g.max_raw_priority.max(raw);
+            let shaped = self.shaped(raw);
+            g.tree.set(slot, shaped);
+        }
+    }
+
+    /// Mean raw insert-time priority currently in the tree (diagnostic).
+    pub fn total_priority(&self) -> f64 {
+        self.inner.lock().unwrap().tree.total()
+    }
+
+    fn shaped(&self, raw: f64) -> f64 {
+        raw.max(self.cfg.min_priority).powf(self.cfg.alpha)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(tag: f32) -> Sequence {
+        Sequence {
+            obs: vec![tag; 8],
+            actions: vec![0; 2],
+            rewards: vec![tag; 2],
+            discounts: vec![0.9; 2],
+            h0: vec![0.0; 2],
+            c0: vec![0.0; 2],
+            actor_id: 0,
+            valid_len: 2,
+        }
+    }
+
+    #[test]
+    fn sample_requires_min_fill() {
+        let r = SequenceReplay::new(ReplayConfig {
+            capacity: 8,
+            ..Default::default()
+        });
+        let mut rng = Pcg32::seeded(0);
+        assert!(r.sample(4, &mut rng).is_none());
+        for i in 0..4 {
+            r.add(seq(i as f32));
+        }
+        let b = r.sample(4, &mut rng).unwrap();
+        assert_eq!(b.sequences.len(), 4);
+        assert_eq!(b.slots.len(), 4);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let r = SequenceReplay::new(ReplayConfig {
+            capacity: 4,
+            ..Default::default()
+        });
+        for i in 0..6 {
+            r.add(seq(i as f32));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.inserts(), 6);
+        let mut rng = Pcg32::seeded(1);
+        let b = r.sample(4, &mut rng).unwrap();
+        // Tags 0 and 1 must be gone.
+        for s in &b.sequences {
+            assert!(s.rewards[0] >= 2.0);
+        }
+    }
+
+    #[test]
+    fn priority_update_shifts_sampling() {
+        let r = SequenceReplay::new(ReplayConfig {
+            capacity: 8,
+            alpha: 1.0,
+            min_priority: 1e-3,
+        });
+        for i in 0..8 {
+            r.add(seq(i as f32));
+        }
+        // Depress every slot except slot 5.
+        let slots: Vec<usize> = (0..8).collect();
+        let mut prios = vec![1e-3f32; 8];
+        prios[5] = 100.0;
+        r.update_priorities(&slots, &prios);
+        let mut rng = Pcg32::seeded(2);
+        let mut hits5 = 0;
+        let n = 200;
+        for _ in 0..n {
+            let b = r.sample(1, &mut rng).unwrap();
+            if b.slots[0] == 5 {
+                hits5 += 1;
+            }
+        }
+        assert!(hits5 > n * 9 / 10, "slot 5 sampled {hits5}/{n}");
+    }
+
+    #[test]
+    fn alpha_zero_is_uniform() {
+        let r = SequenceReplay::new(ReplayConfig {
+            capacity: 4,
+            alpha: 0.0,
+            min_priority: 1e-3,
+        });
+        for i in 0..4 {
+            r.add(seq(i as f32));
+        }
+        r.update_priorities(&[0, 1, 2, 3], &[100.0, 1.0, 1.0, 1.0]);
+        let mut rng = Pcg32::seeded(3);
+        let mut counts = [0u32; 4];
+        for _ in 0..8_000 {
+            counts[r.sample(1, &mut rng).unwrap().slots[0]] += 1;
+        }
+        for c in counts {
+            assert!((1_500..2_500).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn concurrent_add_and_sample() {
+        let r = std::sync::Arc::new(SequenceReplay::new(ReplayConfig {
+            capacity: 128,
+            ..Default::default()
+        }));
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let r = r.clone();
+                s.spawn(move || {
+                    for i in 0..200 {
+                        r.add(seq((t * 1000 + i) as f32));
+                    }
+                });
+            }
+            let r2 = r.clone();
+            s.spawn(move || {
+                let mut rng = Pcg32::seeded(4);
+                let mut sampled = 0;
+                while sampled < 50 {
+                    if let Some(b) = r2.sample(8, &mut rng) {
+                        r2.update_priorities(&b.slots, &vec![0.5; 8]);
+                        sampled += 1;
+                    }
+                }
+            });
+        });
+        assert_eq!(r.inserts(), 800);
+    }
+}

@@ -1,0 +1,180 @@
+//! Sum tree (segment tree over priorities) — the prioritized-replay
+//! sampling structure. O(log n) update and prefix-sum sampling.
+
+#[derive(Clone, Debug)]
+pub struct SumTree {
+    /// Complete binary tree in an array; leaves are the last `cap` slots.
+    tree: Vec<f64>,
+    cap: usize,
+}
+
+impl SumTree {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        let cap = capacity.next_power_of_two();
+        Self {
+            tree: vec![0.0; 2 * cap],
+            cap,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn total(&self) -> f64 {
+        self.tree[1]
+    }
+
+    pub fn get(&self, idx: usize) -> f64 {
+        assert!(idx < self.cap);
+        self.tree[self.cap + idx]
+    }
+
+    /// Set leaf `idx` to `priority` (>= 0), updating ancestors.
+    pub fn set(&mut self, idx: usize, priority: f64) {
+        assert!(idx < self.cap, "index {idx} out of capacity {}", self.cap);
+        assert!(priority >= 0.0 && priority.is_finite());
+        let mut i = self.cap + idx;
+        self.tree[i] = priority;
+        i /= 2;
+        while i >= 1 {
+            self.tree[i] = self.tree[2 * i] + self.tree[2 * i + 1];
+            if i == 1 {
+                break;
+            }
+            i /= 2;
+        }
+    }
+
+    /// Find the leaf whose cumulative range contains `prefix`
+    /// (0 <= prefix < total). Returns the leaf index.
+    pub fn sample(&self, mut prefix: f64) -> usize {
+        debug_assert!(self.total() > 0.0, "sampling an empty tree");
+        prefix = prefix.clamp(0.0, self.total() * (1.0 - 1e-12));
+        let mut i = 1;
+        while i < self.cap {
+            let left = self.tree[2 * i];
+            if prefix < left {
+                i = 2 * i;
+            } else {
+                prefix -= left;
+                i = 2 * i + 1;
+            }
+        }
+        i - self.cap
+    }
+
+    /// Max leaf priority (for new-sample initialization).
+    pub fn max_priority(&self) -> f64 {
+        self.tree[self.cap..]
+            .iter()
+            .copied()
+            .fold(0.0f64, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::quickcheck::{forall, prop_assert, prop_close};
+
+    #[test]
+    fn total_is_sum_of_leaves() {
+        let mut t = SumTree::new(5); // rounds to 8
+        t.set(0, 1.0);
+        t.set(3, 2.5);
+        t.set(4, 0.5);
+        assert!((t.total() - 4.0).abs() < 1e-12);
+        t.set(3, 0.0);
+        assert!((t.total() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_respects_ranges() {
+        let mut t = SumTree::new(4);
+        t.set(0, 1.0);
+        t.set(1, 3.0);
+        t.set(2, 0.0);
+        t.set(3, 6.0);
+        assert_eq!(t.sample(0.5), 0);
+        assert_eq!(t.sample(1.0), 1);
+        assert_eq!(t.sample(3.9), 1);
+        assert_eq!(t.sample(4.0), 3);
+        assert_eq!(t.sample(9.99), 3);
+    }
+
+    #[test]
+    fn zero_priority_never_sampled() {
+        let mut t = SumTree::new(8);
+        t.set(2, 5.0);
+        t.set(6, 5.0);
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..1_000 {
+            let i = t.sample(rng.next_f64() * t.total());
+            assert!(i == 2 || i == 6);
+        }
+    }
+
+    #[test]
+    fn sampling_frequency_tracks_priorities() {
+        let mut t = SumTree::new(4);
+        t.set(0, 1.0);
+        t.set(1, 2.0);
+        t.set(2, 3.0);
+        t.set(3, 4.0);
+        let mut rng = Pcg32::seeded(9);
+        let mut counts = [0u32; 4];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[t.sample(rng.next_f64() * t.total())] += 1;
+        }
+        for (i, c) in counts.iter().enumerate() {
+            let expect = (i + 1) as f64 / 10.0;
+            let got = *c as f64 / n as f64;
+            assert!((got - expect).abs() < 0.01, "leaf {i}: {got} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn max_priority_tracks_updates() {
+        let mut t = SumTree::new(4);
+        assert_eq!(t.max_priority(), 0.0);
+        t.set(1, 7.0);
+        t.set(2, 3.0);
+        assert_eq!(t.max_priority(), 7.0);
+        t.set(1, 0.5);
+        assert_eq!(t.max_priority(), 3.0);
+    }
+
+    #[test]
+    fn property_total_and_sample_consistent() {
+        forall(100, |g| {
+            let cap = g.usize(1..64);
+            let mut t = SumTree::new(cap);
+            let mut shadow = vec![0.0f64; t.capacity()];
+            for _ in 0..g.usize(1..128) {
+                let idx = g.usize(0..t.capacity());
+                let p = g.f64(0.0..10.0);
+                t.set(idx, p);
+                shadow[idx] = p;
+            }
+            let total: f64 = shadow.iter().sum();
+            prop_close(t.total(), total, 1e-9)?;
+            if total > 0.0 {
+                let u = g.f64(0.0..1.0) * total;
+                let leaf = t.sample(u);
+                prop_assert(shadow[leaf] > 0.0, "sampled zero-priority leaf")?;
+                // Check the prefix invariant: sum of leaves before `leaf`
+                // <= u < prefix + leaf priority.
+                let prefix: f64 = shadow[..leaf].iter().sum();
+                prop_assert(
+                    u >= prefix - 1e-9 && u < prefix + shadow[leaf] + 1e-9,
+                    "prefix range violated",
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

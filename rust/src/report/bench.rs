@@ -1,0 +1,98 @@
+//! Minimal benchmark harness: warmup + timed iterations with summary
+//! statistics. Used by every `[[bench]]` target (criterion is not in the
+//! offline crate set).
+
+use crate::util::stats::{mean, percentile};
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    /// Iterations per second (1/mean).
+    pub rate: f64,
+}
+
+impl BenchResult {
+    pub fn markdown_header() -> &'static str {
+        "| bench | iters | mean | p50 | p95 | min | rate |\n|---|---|---|---|---|---|---|"
+    }
+
+    pub fn to_markdown_row(&self) -> String {
+        format!(
+            "| {} | {} | {} | {} | {} | {} | {:.1}/s |",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p95_s),
+            fmt_time(self.min_s),
+            self.rate
+        )
+    }
+}
+
+/// Human-friendly duration formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Run `f` for `warmup` + `iters` iterations, timing each.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let m = mean(&samples);
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: m,
+        p50_s: percentile(&samples, 50.0),
+        p95_s: percentile(&samples, 95.0),
+        min_s: samples.iter().copied().fold(f64::INFINITY, f64::min),
+        rate: if m > 0.0 { 1.0 / m } else { f64::INFINITY },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut count = 0u64;
+        let r = bench("noop", 2, 10, || {
+            count += 1;
+        });
+        assert_eq!(count, 12);
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s >= 0.0 && r.p95_s >= r.p50_s * 0.5);
+        assert!(r.to_markdown_row().contains("noop"));
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2.5).ends_with('s'));
+        assert!(fmt_time(2.5e-3).ends_with("ms"));
+        assert!(fmt_time(2.5e-6).ends_with("us"));
+        assert!(fmt_time(2.5e-9).ends_with("ns"));
+    }
+}

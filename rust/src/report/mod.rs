@@ -1,0 +1,28 @@
+//! Reporting: the mini-bench harness (criterion is not in the offline
+//! crate set) and figure/table renderers shared by `rust/benches/*` and
+//! the examples. Benches print markdown to stdout and drop CSVs under
+//! `target/bench_reports/`.
+
+pub mod bench;
+pub mod figure;
+
+pub use bench::{bench, BenchResult};
+pub use figure::{ascii_bar, Series, Table};
+
+use std::path::PathBuf;
+
+/// Directory for CSV outputs (created on demand).
+pub fn report_dir() -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target")
+        .join("bench_reports");
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Write a CSV report; returns the path written.
+pub fn write_csv(name: &str, contents: &str) -> PathBuf {
+    let path = report_dir().join(format!("{name}.csv"));
+    let _ = std::fs::write(&path, contents);
+    path
+}

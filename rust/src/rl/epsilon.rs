@@ -1,0 +1,80 @@
+//! Per-actor exploration schedules (Ape-X / R2D2 form).
+//!
+//! Actor i of N uses a fixed epsilon
+//!     eps_i = base^(1 + alpha * i / (N - 1))
+//! so the pool spans a spectrum from greedy-ish (i=0) to exploratory.
+//! R2D2 uses base = 0.4, alpha = 7 over 256 actors; we keep the same
+//! functional form at any pool size.
+
+/// Epsilon for actor `i` in a pool of `n`.
+pub fn actor_epsilon(i: usize, n: usize, base: f64, alpha: f64) -> f64 {
+    debug_assert!(i < n.max(1));
+    if n <= 1 {
+        return base;
+    }
+    let exponent = 1.0 + alpha * i as f64 / (n - 1) as f64;
+    base.powf(exponent)
+}
+
+/// Linearly decaying epsilon (used by single-actor examples).
+#[derive(Clone, Debug)]
+pub struct LinearDecay {
+    pub start: f64,
+    pub end: f64,
+    pub steps: u64,
+}
+
+impl LinearDecay {
+    pub fn at(&self, step: u64) -> f64 {
+        if step >= self.steps {
+            return self.end;
+        }
+        let frac = step as f64 / self.steps as f64;
+        self.start + (self.end - self.start) * frac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spectrum_is_monotone_decreasing() {
+        let n = 64;
+        let eps: Vec<f64> = (0..n).map(|i| actor_epsilon(i, n, 0.4, 7.0)).collect();
+        for w in eps.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+        // First actor: base^1 = 0.4; last: base^8 ≈ 0.00066.
+        assert!((eps[0] - 0.4).abs() < 1e-12);
+        assert!((eps[n - 1] - 0.4f64.powf(8.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_actor_uses_base() {
+        assert_eq!(actor_epsilon(0, 1, 0.4, 7.0), 0.4);
+    }
+
+    #[test]
+    fn all_epsilons_in_unit_interval() {
+        for n in [1, 2, 8, 256] {
+            for i in 0..n {
+                let e = actor_epsilon(i, n, 0.4, 7.0);
+                assert!((0.0..=1.0).contains(&e), "n={n} i={i} e={e}");
+            }
+        }
+    }
+
+    #[test]
+    fn linear_decay_endpoints() {
+        let d = LinearDecay {
+            start: 1.0,
+            end: 0.05,
+            steps: 100,
+        };
+        assert_eq!(d.at(0), 1.0);
+        assert!((d.at(50) - 0.525).abs() < 1e-12);
+        assert_eq!(d.at(100), 0.05);
+        assert_eq!(d.at(10_000), 0.05);
+    }
+}

@@ -1,0 +1,70 @@
+//! RL algorithm utilities: exploration schedules, return math, and the
+//! trajectory -> sequence slicing that feeds R2D2's replay.
+//!
+//! The learner's loss itself lives in the AOT'd JAX graph (L2); this
+//! module is the Rust-side mirror used by actors, tests, and diagnostics.
+
+pub mod epsilon;
+pub mod returns;
+pub mod trajectory;
+
+pub use epsilon::{actor_epsilon, LinearDecay};
+pub use returns::{episode_return, n_step_return, value_rescale, value_rescale_inv};
+pub use trajectory::{Sequence, SequenceBuilder, Transition};
+
+/// Greedy argmax over a q-row; ties break to the lowest index.
+pub fn argmax(q: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in q.iter().enumerate() {
+        if v > q[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Epsilon-greedy action selection.
+pub fn epsilon_greedy(
+    q: &[f32],
+    epsilon: f64,
+    rng: &mut crate::util::prng::Pcg32,
+) -> usize {
+    if rng.chance(epsilon) {
+        rng.index(q.len())
+    } else {
+        argmax(q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn argmax_basic_and_ties() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[0.5, 0.5]), 0);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn epsilon_zero_is_greedy() {
+        let mut rng = Pcg32::seeded(0);
+        for _ in 0..100 {
+            assert_eq!(epsilon_greedy(&[0.0, 1.0, 0.5], 0.0, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn epsilon_one_is_uniform() {
+        let mut rng = Pcg32::seeded(1);
+        let mut counts = [0u32; 3];
+        for _ in 0..30_000 {
+            counts[epsilon_greedy(&[9.0, 0.0, 0.0], 1.0, &mut rng)] += 1;
+        }
+        for c in counts {
+            assert!((8_000..12_000).contains(&c), "{counts:?}");
+        }
+    }
+}

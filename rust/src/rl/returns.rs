@@ -1,0 +1,80 @@
+//! Return/value utilities mirrored from the L2 loss (Rust side is used
+//! for actor-side diagnostics and tests; the learner math runs in the AOT
+//! graph). Mirroring lets integration tests cross-check the two layers.
+
+/// R2D2 invertible value rescaling h(x) = sign(x)(sqrt(|x|+1)-1) + eps*x.
+pub fn value_rescale(x: f64, eps: f64) -> f64 {
+    x.signum() * ((x.abs() + 1.0).sqrt() - 1.0) + eps * x
+}
+
+/// Inverse of `value_rescale` (closed form from the R2D2 paper).
+pub fn value_rescale_inv(x: f64, eps: f64) -> f64 {
+    let a = (1.0 + 4.0 * eps * (x.abs() + 1.0 + eps)).sqrt();
+    x.signum() * (((a - 1.0) / (2.0 * eps)).powi(2) - 1.0)
+}
+
+/// Discounted n-step return over a window:
+/// G_t = sum_{k<n} (prod_{j<k} d_{t+j}) r_{t+k} + (prod_{j<n} d_{t+j}) * boot
+/// where `d` are per-step discounts (gamma * (1-done)) and `boot` the
+/// bootstrap value at t+n. Inputs index from t; panics if the window is
+/// shorter than n.
+pub fn n_step_return(rewards: &[f32], discounts: &[f32], n: usize, bootstrap: f64) -> f64 {
+    assert!(rewards.len() >= n && discounts.len() >= n);
+    let mut ret = 0.0;
+    let mut cum = 1.0;
+    for k in 0..n {
+        ret += cum * rewards[k] as f64;
+        cum *= discounts[k] as f64;
+    }
+    ret + cum * bootstrap
+}
+
+/// Monte-Carlo episode return (diagnostics).
+pub fn episode_return(rewards: &[f32]) -> f64 {
+    rewards.iter().map(|&r| r as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{forall, prop_close};
+
+    #[test]
+    fn rescale_roundtrip_property() {
+        forall(300, |g| {
+            let x = g.f64(-1e4..1e4);
+            let y = value_rescale_inv(value_rescale(x, 1e-3), 1e-3);
+            prop_close(y, x, 1e-6)
+        });
+    }
+
+    #[test]
+    fn rescale_compresses() {
+        assert!(value_rescale(100.0, 1e-3) < 100.0);
+        assert!(value_rescale(0.0, 1e-3) == 0.0);
+        assert!(value_rescale(-100.0, 1e-3) > -100.0);
+    }
+
+    #[test]
+    fn n_step_matches_hand_computation() {
+        let r = [1.0f32, 2.0, 3.0];
+        let d = [0.9f32, 0.9, 0.9];
+        // G = 1 + .9*2 + .81*3 + .729*10 = 1+1.8+2.43+7.29
+        let g = n_step_return(&r, &d, 3, 10.0);
+        assert!((g - (1.0 + 1.8 + 2.43 + 7.29)).abs() < 1e-5); // f32 discounts
+    }
+
+    #[test]
+    fn terminal_cuts_bootstrap() {
+        let r = [1.0f32, 1.0];
+        let d = [0.0f32, 0.9]; // terminal after first step
+        let g = n_step_return(&r, &d, 2, 100.0);
+        assert!((g - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn n_one_is_td_target() {
+        let g = n_step_return(&[2.0], &[0.5], 1, 8.0);
+        assert!((g - (2.0 + 0.5 * 8.0)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,216 @@
+//! Trajectory types and the R2D2 sequence slicer.
+//!
+//! Actors produce transitions; the learner consumes fixed-length
+//! sequences (burn_in + unroll) with the recurrent state snapshotted at
+//! the sequence start and adjacent sequences overlapping (R2D2 uses
+//! 80/40; our AOT default is 20/10, same ratio). Episode ends are
+//! zero-padded (discount 0 masks the pad in the loss).
+
+/// One actor transition: the observation fed to inference, the action
+/// taken, and the immediate outcome.
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub obs: Vec<f32>,
+    pub action: i32,
+    pub reward: f32,
+    /// gamma * (1 - done): 0 at terminals.
+    pub discount: f32,
+    /// Recurrent state *before* this observation was processed.
+    pub h: Vec<f32>,
+    pub c: Vec<f32>,
+}
+
+/// A fixed-length training sequence (the replay/learner unit).
+#[derive(Clone, Debug)]
+pub struct Sequence {
+    /// [T * obs_len], time-major.
+    pub obs: Vec<f32>,
+    pub actions: Vec<i32>,
+    pub rewards: Vec<f32>,
+    pub discounts: Vec<f32>,
+    /// Recurrent state at sequence start.
+    pub h0: Vec<f32>,
+    pub c0: Vec<f32>,
+    pub actor_id: usize,
+    /// Real (non-padded) steps.
+    pub valid_len: usize,
+}
+
+impl Sequence {
+    pub fn seq_len(&self) -> usize {
+        self.actions.len()
+    }
+
+    /// Undiscounted reward sum over valid steps (diagnostics).
+    pub fn reward_sum(&self) -> f64 {
+        self.rewards[..self.valid_len]
+            .iter()
+            .map(|&r| r as f64)
+            .sum()
+    }
+}
+
+/// Slices one actor's transition stream into overlapping sequences.
+pub struct SequenceBuilder {
+    seq_len: usize,
+    overlap: usize,
+    obs_len: usize,
+    hidden: usize,
+    actor_id: usize,
+    buf: Vec<Transition>,
+}
+
+impl SequenceBuilder {
+    pub fn new(
+        seq_len: usize,
+        overlap: usize,
+        obs_len: usize,
+        hidden: usize,
+        actor_id: usize,
+    ) -> Self {
+        assert!(overlap < seq_len, "overlap must be < seq_len");
+        Self {
+            seq_len,
+            overlap,
+            obs_len,
+            hidden,
+            actor_id,
+            buf: Vec::with_capacity(seq_len),
+        }
+    }
+
+    /// Feed one transition; returns a completed sequence when available.
+    pub fn push(&mut self, t: Transition) -> Option<Sequence> {
+        debug_assert_eq!(t.obs.len(), self.obs_len);
+        debug_assert_eq!(t.h.len(), self.hidden);
+        let terminal = t.discount == 0.0;
+        self.buf.push(t);
+        if self.buf.len() == self.seq_len {
+            let seq = self.emit(self.seq_len);
+            // Keep the overlap tail for the next sequence.
+            self.buf.drain(..self.seq_len - self.overlap);
+            return Some(seq);
+        }
+        if terminal {
+            // Pad out the remainder and start fresh.
+            let seq = self.emit(self.buf.len());
+            self.buf.clear();
+            return Some(seq);
+        }
+        None
+    }
+
+    /// Flush a partial buffer at shutdown (None if empty).
+    pub fn flush(&mut self) -> Option<Sequence> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let seq = self.emit(self.buf.len());
+        self.buf.clear();
+        Some(seq)
+    }
+
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    fn emit(&self, valid: usize) -> Sequence {
+        let t_len = self.seq_len;
+        let mut obs = vec![0.0f32; t_len * self.obs_len];
+        let mut actions = vec![0i32; t_len];
+        let mut rewards = vec![0.0f32; t_len];
+        let mut discounts = vec![0.0f32; t_len];
+        for (i, tr) in self.buf.iter().take(valid).enumerate() {
+            obs[i * self.obs_len..(i + 1) * self.obs_len].copy_from_slice(&tr.obs);
+            actions[i] = tr.action;
+            rewards[i] = tr.reward;
+            discounts[i] = tr.discount;
+        }
+        Sequence {
+            obs,
+            actions,
+            rewards,
+            discounts,
+            h0: self.buf[0].h.clone(),
+            c0: self.buf[0].c.clone(),
+            actor_id: self.actor_id,
+            valid_len: valid,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(v: f32, discount: f32) -> Transition {
+        Transition {
+            obs: vec![v; 4],
+            action: v as i32,
+            reward: v,
+            discount,
+            h: vec![v; 2],
+            c: vec![-v; 2],
+        }
+    }
+
+    #[test]
+    fn emits_full_sequences_with_overlap() {
+        let mut b = SequenceBuilder::new(4, 2, 4, 2, 0);
+        let mut seqs = Vec::new();
+        for i in 0..10 {
+            if let Some(s) = b.push(tr(i as f32, 0.99)) {
+                seqs.push(s);
+            }
+        }
+        // Starts at 0, 2, 4, 6: 4 sequences from 10 steps.
+        assert_eq!(seqs.len(), 4);
+        assert_eq!(seqs[0].actions, vec![0, 1, 2, 3]);
+        assert_eq!(seqs[1].actions, vec![2, 3, 4, 5]);
+        assert_eq!(seqs[1].h0, vec![2.0, 2.0]);
+        assert_eq!(seqs[0].valid_len, 4);
+    }
+
+    #[test]
+    fn terminal_pads_and_resets() {
+        let mut b = SequenceBuilder::new(5, 2, 4, 2, 1);
+        assert!(b.push(tr(1.0, 0.99)).is_none());
+        let s = b.push(tr(2.0, 0.0)).expect("terminal flush");
+        assert_eq!(s.valid_len, 2);
+        assert_eq!(s.actions, vec![1, 2, 0, 0, 0]);
+        assert_eq!(s.discounts, vec![0.99, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(s.rewards[2], 0.0);
+        assert_eq!(b.buffered(), 0);
+        // Next sequence starts from scratch.
+        assert!(b.push(tr(3.0, 0.99)).is_none());
+    }
+
+    #[test]
+    fn terminal_exactly_at_boundary_not_double_emitted() {
+        let mut b = SequenceBuilder::new(3, 1, 4, 2, 0);
+        assert!(b.push(tr(1.0, 0.9)).is_none());
+        assert!(b.push(tr(2.0, 0.9)).is_none());
+        let s = b.push(tr(3.0, 0.0)).unwrap();
+        assert_eq!(s.valid_len, 3);
+        // Overlap tail retained (terminal transition carried into overlap
+        // is acceptable: its discount 0 cuts bootstrap).
+        assert_eq!(b.buffered(), 1);
+    }
+
+    #[test]
+    fn flush_returns_partial() {
+        let mut b = SequenceBuilder::new(4, 1, 4, 2, 0);
+        b.push(tr(1.0, 0.9));
+        let s = b.flush().unwrap();
+        assert_eq!(s.valid_len, 1);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn reward_sum_ignores_padding() {
+        let mut b = SequenceBuilder::new(5, 1, 4, 2, 0);
+        b.push(tr(2.0, 0.9));
+        let s = b.push(tr(3.0, 0.0)).unwrap();
+        assert_eq!(s.reward_sum(), 5.0);
+    }
+}

@@ -1,0 +1,143 @@
+//! Reader for the tensor-bundle container `aot.py` writes
+//! (`init_params.bin`): magic, u64-LE header length, JSON header
+//! [{name, shape, dtype, offset, nbytes}], raw little-endian payload.
+
+use super::tensor::{DType, Tensor};
+use crate::util::json::Value;
+use std::path::Path;
+
+pub const MAGIC: &[u8; 16] = b"RLTENSORBUNDLE1\n";
+
+pub struct Bundle {
+    pub tensors: Vec<(String, Tensor)>,
+}
+
+impl Bundle {
+    pub fn read(path: &Path) -> anyhow::Result<Self> {
+        let raw = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("read {path:?}: {e}"))?;
+        Self::parse(&raw)
+    }
+
+    pub fn parse(raw: &[u8]) -> anyhow::Result<Self> {
+        anyhow::ensure!(raw.len() > 24, "bundle too short");
+        anyhow::ensure!(&raw[..16] == MAGIC, "bad bundle magic");
+        let hlen = u64::from_le_bytes(raw[16..24].try_into().unwrap()) as usize;
+        anyhow::ensure!(raw.len() >= 24 + hlen, "truncated bundle header");
+        let header = std::str::from_utf8(&raw[24..24 + hlen])?;
+        let header = Value::parse(header)
+            .map_err(|e| anyhow::anyhow!("bundle header json: {e}"))?;
+        let payload = &raw[24 + hlen..];
+
+        let mut tensors = Vec::new();
+        for entry in header.as_arr().unwrap_or(&[]) {
+            let name = entry
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("bundle entry missing name"))?
+                .to_string();
+            let shape: Vec<usize> = entry
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .map(|xs| xs.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default();
+            let dtype = DType::from_name(
+                entry.get("dtype").and_then(|v| v.as_str()).unwrap_or(""),
+            )?;
+            let offset = entry
+                .get("offset")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("missing offset"))?;
+            let nbytes = entry
+                .get("nbytes")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("missing nbytes"))?;
+            anyhow::ensure!(
+                offset + nbytes <= payload.len(),
+                "tensor {name} outside payload"
+            );
+            tensors.push((
+                name,
+                Tensor::from_le_bytes(dtype, shape, &payload[offset..offset + nbytes])?,
+            ));
+        }
+        Ok(Self { tensors })
+    }
+
+    /// Tensors whose name starts with `prefix`, in bundle order, with the
+    /// prefix requirement that the remainder is numeric (so "p" does not
+    /// match "vp0" but matches "p0".."p13").
+    pub fn with_prefix(&self, prefix: &str) -> Vec<Tensor> {
+        self.tensors
+            .iter()
+            .filter(|(n, _)| {
+                n.strip_prefix(prefix)
+                    .map(|rest| !rest.is_empty() && rest.bytes().all(|b| b.is_ascii_digit()))
+                    .unwrap_or(false)
+            })
+            .map(|(_, t)| t.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{obj, Value};
+
+    fn make_bundle(entries: &[(&str, &[f32])]) -> Vec<u8> {
+        let mut payload = Vec::new();
+        let mut header = Vec::new();
+        for (name, data) in entries {
+            let offset = payload.len();
+            for v in *data {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+            header.push(obj(&[
+                ("name", Value::from(*name)),
+                ("shape", Value::from(vec![data.len()])),
+                ("dtype", Value::from("float32")),
+                ("offset", Value::from(offset)),
+                ("nbytes", Value::from(data.len() * 4)),
+            ]));
+        }
+        let hjson = Value::Arr(header).to_string().into_bytes();
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(hjson.len() as u64).to_le_bytes());
+        out.extend_from_slice(&hjson);
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let raw = make_bundle(&[("p0", &[1.0, 2.0]), ("p1", &[3.0])]);
+        let b = Bundle::parse(&raw).unwrap();
+        assert_eq!(b.tensors.len(), 2);
+        assert_eq!(b.tensors[0].0, "p0");
+        assert_eq!(b.tensors[0].1.as_f32(), &[1.0, 2.0]);
+        assert_eq!(b.tensors[1].1.as_f32(), &[3.0]);
+    }
+
+    #[test]
+    fn prefix_filter_is_exact() {
+        let raw = make_bundle(&[("p0", &[1.0]), ("p1", &[2.0]), ("vp0", &[9.0]), ("o0", &[4.0])]);
+        let b = Bundle::parse(&raw).unwrap();
+        let ps = b.with_prefix("p");
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[1].as_f32(), &[2.0]);
+        assert_eq!(b.with_prefix("vp").len(), 1);
+        assert_eq!(b.with_prefix("o").len(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(Bundle::parse(b"nope").is_err());
+        let mut raw = make_bundle(&[("p0", &[1.0])]);
+        raw[0] = b'X';
+        assert!(Bundle::parse(&raw).is_err());
+        let raw = make_bundle(&[("p0", &[1.0])]);
+        assert!(Bundle::parse(&raw[..raw.len() - 2]).is_err());
+    }
+}

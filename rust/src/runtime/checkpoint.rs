@@ -1,0 +1,115 @@
+//! Checkpointing: write/read parameter snapshots in the same
+//! tensor-bundle container `aot.py` emits (`bundle.rs` reads), so
+//! checkpoints interop with the Python tooling.
+
+use super::bundle::{Bundle, MAGIC};
+use super::tensor::{Tensor, TensorData};
+use crate::util::json::{obj, Value};
+use std::io::Write;
+use std::path::Path;
+
+/// Serialize named tensors into the tensor-bundle format.
+pub fn to_bundle_bytes(named: &[(String, &Tensor)]) -> Vec<u8> {
+    let mut payload: Vec<u8> = Vec::new();
+    let mut header = Vec::new();
+    for (name, t) in named {
+        let offset = payload.len();
+        match &t.data {
+            TensorData::F32(v) => {
+                for x in v {
+                    payload.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            TensorData::I32(v) => {
+                for x in v {
+                    payload.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        let dtype = match t.data {
+            TensorData::F32(_) => "float32",
+            TensorData::I32(_) => "int32",
+        };
+        header.push(obj(&[
+            ("name", Value::from(name.as_str())),
+            (
+                "shape",
+                Value::Arr(t.shape.iter().map(|&d| Value::from(d)).collect()),
+            ),
+            ("dtype", Value::from(dtype)),
+            ("offset", Value::from(offset)),
+            ("nbytes", Value::from(payload.len() - offset)),
+        ]));
+    }
+    let hjson = Value::Arr(header).to_string().into_bytes();
+    let mut out = Vec::with_capacity(24 + hjson.len() + payload.len());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(hjson.len() as u64).to_le_bytes());
+    out.extend_from_slice(&hjson);
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Write a checkpoint of `params` (named `p0..pN` like init_params.bin).
+pub fn save_params(path: &Path, params: &[Tensor]) -> anyhow::Result<()> {
+    let named: Vec<(String, &Tensor)> = params
+        .iter()
+        .enumerate()
+        .map(|(i, t)| (format!("p{i}"), t))
+        .collect();
+    let bytes = to_bundle_bytes(&named);
+    let mut f = std::fs::File::create(path)
+        .map_err(|e| anyhow::anyhow!("create {path:?}: {e}"))?;
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Load a checkpoint written by `save_params` (or aot.py's initializer).
+pub fn load_params(path: &Path) -> anyhow::Result<Vec<Tensor>> {
+    let bundle = Bundle::read(path)?;
+    let params = bundle.with_prefix("p");
+    anyhow::ensure!(!params.is_empty(), "no `p*` tensors in {path:?}");
+    Ok(params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("rlarch_ckpt_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("ckpt.bin");
+        let params = vec![
+            Tensor::from_f32(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 7.25, -8.0]),
+            Tensor::from_f32(vec![4], vec![0.1, 0.2, 0.3, 0.4]),
+        ];
+        save_params(&path, &params).unwrap();
+        let loaded = load_params(&path).unwrap();
+        assert_eq!(loaded, params);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bundle_bytes_parse_with_reader() {
+        let t = Tensor::from_i32(vec![3], vec![7, -1, 2]);
+        let bytes = to_bundle_bytes(&[("x".into(), &t)]);
+        let b = Bundle::parse(&bytes).unwrap();
+        assert_eq!(b.tensors.len(), 1);
+        assert_eq!(b.tensors[0].0, "x");
+        assert_eq!(b.tensors[0].1.as_i32(), &[7, -1, 2]);
+    }
+
+    #[test]
+    fn load_rejects_bundles_without_params() {
+        let t = Tensor::from_f32(vec![1], vec![0.5]);
+        let bytes = to_bundle_bytes(&[("weird".into(), &t)]);
+        let dir = std::env::temp_dir().join("rlarch_ckpt_test2");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, bytes).unwrap();
+        assert!(load_params(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,370 @@
+//! The PJRT engine: compiles HLO-text artifacts and executes them.
+//!
+//! Owns the parameter state (online params, target params, Adam state) as
+//! XLA literals; the train step's output literals become the next step's
+//! input literals directly, so parameters never round-trip through Rust
+//! buffers on the hot path (they only do so on `sync_target`, every
+//! `target_update_interval` steps).
+//!
+//! Not `Send` (the xla crate wraps raw PJRT pointers) — see
+//! `server::XlaServer` for the thread that owns one of these.
+
+use super::manifest::Manifest;
+use super::tensor::Tensor;
+use super::{InferReply, InferRequest, ModelDims, TrainBatch, TrainReply};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+pub struct XlaRuntime {
+    pub manifest: Manifest,
+    artifact_dir: PathBuf,
+    client: xla::PjRtClient,
+    infer_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    train_exe: Option<xla::PjRtLoadedExecutable>,
+    /// Lazily-compiled artifacts outside the R2D2 ABI (execute_raw).
+    raw_exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    params: Vec<xla::Literal>,
+    target: Vec<xla::Literal>,
+    opt: Vec<xla::Literal>,
+    n_params: usize,
+    n_opt: usize,
+    step: u64,
+    dims: ModelDims,
+}
+
+fn clone_literal(l: &xla::Literal) -> anyhow::Result<xla::Literal> {
+    // The crate exposes no Literal::clone; round-trip through host bytes.
+    Tensor::from_literal(l)?.to_literal()
+}
+
+impl XlaRuntime {
+    /// Load manifest + initial parameters + compile artifacts from `dir`.
+    ///
+    /// `infer_batches`: which infer_b{N} artifacts to compile (None = all).
+    /// `with_train`: compile the train step (examples that only serve can
+    /// skip it to save startup time).
+    pub fn load(
+        dir: &Path,
+        infer_batches: Option<&[usize]>,
+        with_train: bool,
+    ) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("pjrt cpu client: {e}"))?;
+
+        let compile = |name: &str| -> anyhow::Result<xla::PjRtLoadedExecutable> {
+            let sig = manifest
+                .artifacts
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("artifact `{name}` not in manifest"))?;
+            let path: PathBuf = dir.join(&sig.path);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))
+        };
+
+        let mut infer_exes = BTreeMap::new();
+        let available = manifest.infer_batch_sizes();
+        let wanted: Vec<usize> = match infer_batches {
+            Some(bs) => bs.to_vec(),
+            None => available.clone(),
+        };
+        for b in wanted {
+            anyhow::ensure!(
+                available.contains(&b),
+                "no infer_b{b} artifact (available: {available:?})"
+            );
+            infer_exes.insert(b, compile(&format!("infer_b{b}"))?);
+        }
+        let train_exe = if with_train {
+            Some(compile("train")?)
+        } else {
+            None
+        };
+
+        // Initial parameter/optimizer literals.
+        let bundle = super::Bundle::read(&dir.join("init_params.bin"))?;
+        let p_tensors = bundle.with_prefix("p");
+        let o_tensors = bundle.with_prefix("o");
+        anyhow::ensure!(
+            p_tensors.len() == manifest.param_specs.len(),
+            "bundle params ({}) != manifest specs ({})",
+            p_tensors.len(),
+            manifest.param_specs.len()
+        );
+        let to_lits = |ts: &[Tensor]| -> anyhow::Result<Vec<xla::Literal>> {
+            ts.iter().map(|t| t.to_literal()).collect()
+        };
+        let params = to_lits(&p_tensors)?;
+        let target = to_lits(&p_tensors)?;
+        let opt = to_lits(&o_tensors)?;
+        let n_params = params.len();
+        let n_opt = opt.len();
+
+        let dims = ModelDims {
+            obs_len: manifest.obs_len(),
+            hidden: manifest.lstm_hidden,
+            num_actions: manifest.num_actions,
+            seq_len: manifest.seq_len,
+            train_batch: manifest.train_batch,
+        };
+        Ok(Self {
+            manifest,
+            artifact_dir: dir.to_path_buf(),
+            client,
+            infer_exes,
+            train_exe,
+            raw_exes: BTreeMap::new(),
+            params,
+            target,
+            opt,
+            n_params,
+            n_opt,
+            step: 0,
+            dims,
+        })
+    }
+
+    pub fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Smallest compiled batch size >= n (or the largest available).
+    pub fn pick_batch(&self, n: usize) -> usize {
+        for &b in self.infer_exes.keys() {
+            if b >= n {
+                return b;
+            }
+        }
+        *self.infer_exes.keys().last().expect("no infer artifacts")
+    }
+
+    /// Batched inference; requests are zero-padded to a compiled size.
+    pub fn infer(&self, req: &InferRequest) -> anyhow::Result<InferReply> {
+        req.validate(&self.dims)?;
+        let d = &self.dims;
+        let b = self.pick_batch(req.n);
+        anyhow::ensure!(
+            req.n <= b,
+            "request of {} exceeds largest compiled batch {b}",
+            req.n
+        );
+        let exe = &self.infer_exes[&b];
+
+        let pad = |src: &[f32], row: usize| -> Vec<f32> {
+            let mut v = vec![0.0f32; b * row];
+            v[..src.len()].copy_from_slice(src);
+            v
+        };
+        let obs_dims = vec![
+            b,
+            self.manifest.obs_size,
+            self.manifest.obs_size,
+            self.manifest.obs_channels,
+        ];
+        let h = Tensor::from_f32(vec![b, d.hidden], pad(&req.h, d.hidden));
+        let c = Tensor::from_f32(vec![b, d.hidden], pad(&req.c, d.hidden));
+        let obs = Tensor::from_f32(obs_dims, pad(&req.obs, d.obs_len));
+
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        let (hl, cl, ol) = (h.to_literal()?, c.to_literal()?, obs.to_literal()?);
+        inputs.push(&hl);
+        inputs.push(&cl);
+        inputs.push(&ol);
+
+        let result = exe
+            .execute::<&xla::Literal>(&inputs)
+            .map_err(|e| anyhow::anyhow!("infer execute: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("infer readback: {e}"))?;
+        let mut parts = out
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("infer tuple: {e}"))?;
+        anyhow::ensure!(parts.len() == 3, "infer outputs: {}", parts.len());
+        let c_out = Tensor::from_literal(&parts.pop().unwrap())?;
+        let h_out = Tensor::from_literal(&parts.pop().unwrap())?;
+        let q_out = Tensor::from_literal(&parts.pop().unwrap())?;
+
+        Ok(InferReply {
+            q: q_out.as_f32()[..req.n * d.num_actions].to_vec(),
+            h: h_out.as_f32()[..req.n * d.hidden].to_vec(),
+            c: c_out.as_f32()[..req.n * d.hidden].to_vec(),
+        })
+    }
+
+    /// One learner step: runs the AOT train graph, adopts the returned
+    /// parameter/optimizer literals as current state.
+    pub fn train(&mut self, batch: &TrainBatch) -> anyhow::Result<TrainReply> {
+        batch.validate(&self.dims)?;
+        let exe = self
+            .train_exe
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("runtime loaded without train artifact"))?;
+        let d = &self.dims;
+        let (b, t) = (batch.batch, d.seq_len);
+        let s = self.manifest.obs_size;
+        let ch = self.manifest.obs_channels;
+
+        let obs = Tensor::from_f32(vec![b, t, s, s, ch], batch.obs.clone());
+        let actions = Tensor::from_i32(vec![b, t], batch.actions.clone());
+        let rewards = Tensor::from_f32(vec![b, t], batch.rewards.clone());
+        let discounts = Tensor::from_f32(vec![b, t], batch.discounts.clone());
+        let h0 = Tensor::from_f32(vec![b, d.hidden], batch.h0.clone());
+        let c0 = Tensor::from_f32(vec![b, d.hidden], batch.c0.clone());
+
+        let data_lits = [
+            obs.to_literal()?,
+            actions.to_literal()?,
+            rewards.to_literal()?,
+            discounts.to_literal()?,
+            h0.to_literal()?,
+            c0.to_literal()?,
+        ];
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(
+            2 * self.n_params + self.n_opt + data_lits.len(),
+        );
+        inputs.extend(self.params.iter());
+        inputs.extend(self.target.iter());
+        inputs.extend(self.opt.iter());
+        inputs.extend(data_lits.iter());
+
+        let result = exe
+            .execute::<&xla::Literal>(&inputs)
+            .map_err(|e| anyhow::anyhow!("train execute: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("train readback: {e}"))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("train tuple: {e}"))?;
+        let expect = self.n_params + self.n_opt + 3;
+        anyhow::ensure!(
+            parts.len() == expect,
+            "train outputs {} != {expect}",
+            parts.len()
+        );
+
+        let mut parts = parts.into_iter();
+        let new_params: Vec<xla::Literal> =
+            parts.by_ref().take(self.n_params).collect();
+        let new_opt: Vec<xla::Literal> = parts.by_ref().take(self.n_opt).collect();
+        let loss = Tensor::from_literal(&parts.next().unwrap())?.as_f32()[0];
+        let priorities = Tensor::from_literal(&parts.next().unwrap())?
+            .as_f32()
+            .to_vec();
+        let grad_norm = Tensor::from_literal(&parts.next().unwrap())?.as_f32()[0];
+
+        self.params = new_params;
+        self.opt = new_opt;
+        self.step += 1;
+        Ok(TrainReply {
+            loss,
+            priorities,
+            grad_norm,
+            step: self.step,
+        })
+    }
+
+    /// Copy online params into the target network.
+    pub fn sync_target(&mut self) -> anyhow::Result<()> {
+        self.target = self
+            .params
+            .iter()
+            .map(clone_literal)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(())
+    }
+
+    /// Snapshot the online parameters to host tensors (checkpointing).
+    pub fn params_to_host(&self) -> anyhow::Result<Vec<Tensor>> {
+        self.params.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Restore online parameters from host tensors (checkpoint load).
+    /// Shapes must match the manifest's param specs.
+    pub fn params_from_host(&mut self, tensors: &[Tensor]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            tensors.len() == self.n_params,
+            "checkpoint has {} params, model needs {}",
+            tensors.len(),
+            self.n_params
+        );
+        for (t, spec) in tensors.iter().zip(&self.manifest.param_specs) {
+            anyhow::ensure!(
+                t.shape == spec.shape,
+                "param `{}`: checkpoint shape {:?} != {:?}",
+                spec.name,
+                t.shape,
+                spec.shape
+            );
+        }
+        self.params = tensors
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(())
+    }
+
+    /// Compile and execute an arbitrary artifact by manifest name with an
+    /// explicit flat tensor list — the extensibility path for artifacts
+    /// outside the R2D2 ABI (e.g. the V-trace baseline learner).
+    /// Compiles on first use; callers own the full input ABI.
+    pub fn execute_raw(
+        &mut self,
+        name: &str,
+        inputs: &[Tensor],
+    ) -> anyhow::Result<Vec<Tensor>> {
+        if !self.raw_exes.contains_key(name) {
+            let sig = self
+                .manifest
+                .artifacts
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("artifact `{name}` not in manifest"))?;
+            let path: PathBuf = self.artifact_dir.join(&sig.path);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+            self.raw_exes.insert(name.to_string(), exe);
+        }
+        let sig = &self.manifest.artifacts[name];
+        anyhow::ensure!(
+            inputs.len() == sig.inputs.len(),
+            "artifact `{name}` wants {} inputs, got {}",
+            sig.inputs.len(),
+            inputs.len()
+        );
+        let lits = inputs
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        let exe = &self.raw_exes[name];
+        let result = exe
+            .execute::<&xla::Literal>(&refs)
+            .map_err(|e| anyhow::anyhow!("{name} execute: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{name} readback: {e}"))?;
+        out.to_tuple()
+            .map_err(|e| anyhow::anyhow!("{name} tuple: {e}"))?
+            .iter()
+            .map(Tensor::from_literal)
+            .collect()
+    }
+}

@@ -1,0 +1,180 @@
+//! Parsed view of `artifacts/manifest.json` (the parameter ABI and
+//! artifact signatures `aot.py` records at lowering time).
+
+use crate::util::json::Value;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSig {
+    pub path: String,
+    /// Input shapes in ABI order.
+    pub inputs: Vec<Vec<usize>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub obs_size: usize,
+    pub obs_channels: usize,
+    pub num_actions: usize,
+    pub lstm_hidden: usize,
+    pub param_count: usize,
+    pub burn_in: usize,
+    pub unroll_len: usize,
+    pub seq_len: usize,
+    pub n_step: usize,
+    pub gamma: f64,
+    pub train_batch: usize,
+    pub param_specs: Vec<ParamSpec>,
+    pub vtrace_param_specs: Vec<ParamSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("read manifest: {e} (run `make artifacts`)"))?;
+        let v = Value::parse(&text).map_err(|e| anyhow::anyhow!("manifest json: {e}"))?;
+        Self::from_value(&v)
+    }
+
+    pub fn from_value(v: &Value) -> anyhow::Result<Self> {
+        let u = |p: &str| -> anyhow::Result<usize> {
+            v.path(p)
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("manifest missing `{p}`"))
+        };
+        let parse_specs = |key: &str| -> Vec<ParamSpec> {
+            v.get(key)
+                .and_then(|x| x.as_arr())
+                .map(|xs| {
+                    xs.iter()
+                        .map(|s| ParamSpec {
+                            name: s
+                                .get("name")
+                                .and_then(|n| n.as_str())
+                                .unwrap_or("")
+                                .to_string(),
+                            shape: s
+                                .get("shape")
+                                .and_then(|sh| sh.as_arr())
+                                .map(|d| d.iter().filter_map(|x| x.as_usize()).collect())
+                                .unwrap_or_default(),
+                        })
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        let mut artifacts = BTreeMap::new();
+        if let Some(arts) = v.get("artifacts").and_then(|x| x.as_obj()) {
+            for (name, meta) in arts {
+                let inputs = meta
+                    .get("inputs")
+                    .and_then(|x| x.as_arr())
+                    .map(|xs| {
+                        xs.iter()
+                            .map(|i| {
+                                i.get("shape")
+                                    .and_then(|sh| sh.as_arr())
+                                    .map(|d| {
+                                        d.iter().filter_map(|x| x.as_usize()).collect()
+                                    })
+                                    .unwrap_or_default()
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactSig {
+                        path: meta
+                            .get("path")
+                            .and_then(|p| p.as_str())
+                            .unwrap_or("")
+                            .to_string(),
+                        inputs,
+                    },
+                );
+            }
+        }
+        Ok(Self {
+            obs_size: u("agent.obs_size")?,
+            obs_channels: u("agent.obs_channels")?,
+            num_actions: u("agent.num_actions")?,
+            lstm_hidden: u("agent.lstm_hidden")?,
+            param_count: u("agent.param_count")?,
+            burn_in: u("r2d2.burn_in")?,
+            unroll_len: u("r2d2.unroll_len")?,
+            seq_len: u("r2d2.seq_len")?,
+            n_step: u("r2d2.n_step")?,
+            gamma: v
+                .path("r2d2.gamma")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(0.997),
+            train_batch: u("r2d2.train_batch")?,
+            param_specs: parse_specs("param_specs"),
+            vtrace_param_specs: parse_specs("vtrace_param_specs"),
+            artifacts,
+        })
+    }
+
+    /// Observation vector length the agent consumes.
+    pub fn obs_len(&self) -> usize {
+        self.obs_size * self.obs_size * self.obs_channels
+    }
+
+    /// Inference batch sizes available in the artifact set, ascending.
+    pub fn infer_batch_sizes(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .artifacts
+            .keys()
+            .filter_map(|k| k.strip_prefix("infer_b").and_then(|b| b.parse().ok()))
+            .collect();
+        out.sort_unstable();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "agent": {"obs_size": 10, "obs_channels": 4, "num_actions": 4,
+                  "lstm_hidden": 128, "torso_dim": 128, "param_count": 247925},
+        "r2d2": {"burn_in": 5, "unroll_len": 15, "seq_len": 20, "n_step": 3,
+                 "gamma": 0.997, "train_batch": 16, "lr": 0.001},
+        "param_specs": [{"name": "advantage.b", "shape": [4], "dtype": "float32"}],
+        "vtrace_param_specs": [],
+        "artifacts": {
+            "infer_b1": {"path": "infer_b1.hlo.txt",
+                          "inputs": [{"index": 0, "shape": [4], "dtype": "float32"}]},
+            "infer_b32": {"path": "infer_b32.hlo.txt", "inputs": []},
+            "train": {"path": "train.hlo.txt", "inputs": []}
+        }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let v = Value::parse(SAMPLE).unwrap();
+        let m = Manifest::from_value(&v).unwrap();
+        assert_eq!(m.obs_len(), 400);
+        assert_eq!(m.seq_len, 20);
+        assert_eq!(m.param_specs.len(), 1);
+        assert_eq!(m.param_specs[0].shape, vec![4]);
+        assert_eq!(m.infer_batch_sizes(), vec![1, 32]);
+        assert_eq!(m.artifacts["train"].path, "train.hlo.txt");
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        let v = Value::parse(r#"{"agent": {}}"#).unwrap();
+        assert!(Manifest::from_value(&v).is_err());
+    }
+}

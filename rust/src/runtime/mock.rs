@@ -1,0 +1,212 @@
+//! Pure-Rust mock model: lets the coordinator, examples, and the
+//! discrete-event simulator run without compiled artifacts (and lets
+//! tests exercise the full actor/batcher/learner dataflow quickly).
+//!
+//! The mock is a real (if tiny) function, not a stub: q-values are a
+//! fixed random linear map of the observation plus a decaying recurrent
+//! trace, so batching/padding bugs change its outputs and get caught by
+//! the integration tests. `train` tracks a fake loss that decays with
+//! step count and returns priorities derived from batch rewards.
+
+use super::{InferReply, InferRequest, ModelDims, TrainBatch, TrainReply};
+use crate::util::prng::Pcg32;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+pub struct MockModel {
+    dims: ModelDims,
+    /// [obs_len * num_actions] fixed random projection.
+    w_obs: Vec<f32>,
+    /// [hidden] per-unit decay for the fake recurrence.
+    decay: Vec<f32>,
+    step: AtomicU64,
+    target_syncs: AtomicU64,
+    /// Optional per-call artificial latency (models GPU time in DES-free
+    /// tests); protected by a mutex to keep MockModel: Sync.
+    infer_latency: Mutex<std::time::Duration>,
+}
+
+impl MockModel {
+    pub fn new(dims: ModelDims, seed: u64) -> Self {
+        let mut rng = Pcg32::seeded(seed);
+        let w_obs = (0..dims.obs_len * dims.num_actions)
+            .map(|_| (rng.next_f32() - 0.5) * 0.2)
+            .collect();
+        let decay = (0..dims.hidden).map(|_| 0.5 + 0.4 * rng.next_f32()).collect();
+        Self {
+            dims,
+            w_obs,
+            decay,
+            step: AtomicU64::new(0),
+            target_syncs: AtomicU64::new(0),
+            infer_latency: Mutex::new(std::time::Duration::ZERO),
+        }
+    }
+
+    /// Default dims matching the AOT defaults (obs 10x10x4, A=4, H=128).
+    pub fn default_dims() -> ModelDims {
+        ModelDims {
+            obs_len: 400,
+            hidden: 128,
+            num_actions: 4,
+            seq_len: 20,
+            train_batch: 16,
+        }
+    }
+
+    pub fn with_infer_latency(self, d: std::time::Duration) -> Self {
+        *self.infer_latency.lock().unwrap() = d;
+        self
+    }
+
+    pub fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.step.load(Ordering::Relaxed)
+    }
+
+    pub fn target_syncs(&self) -> u64 {
+        self.target_syncs.load(Ordering::Relaxed)
+    }
+
+    pub fn infer(&self, req: &InferRequest) -> InferReply {
+        let d = &self.dims;
+        req.validate(d).expect("mock infer request shape");
+        let lat = *self.infer_latency.lock().unwrap();
+        if !lat.is_zero() {
+            std::thread::sleep(lat);
+        }
+        let mut q = vec![0.0f32; req.n * d.num_actions];
+        let mut h = vec![0.0f32; req.n * d.hidden];
+        let mut c = vec![0.0f32; req.n * d.hidden];
+        for i in 0..req.n {
+            let obs = &req.obs[i * d.obs_len..(i + 1) * d.obs_len];
+            let h_in = &req.h[i * d.hidden..(i + 1) * d.hidden];
+            let c_in = &req.c[i * d.hidden..(i + 1) * d.hidden];
+            for a in 0..d.num_actions {
+                let mut acc = 0.0f32;
+                for (j, &o) in obs.iter().enumerate() {
+                    acc += o * self.w_obs[j * d.num_actions + a];
+                }
+                // Recurrent contribution keeps state relevant.
+                acc += h_in.iter().take(4).sum::<f32>() * 0.01 * (a as f32 + 1.0);
+                q[i * d.num_actions + a] = acc;
+            }
+            let obs_mean = obs.iter().sum::<f32>() / obs.len().max(1) as f32;
+            for k in 0..d.hidden {
+                let idx = i * d.hidden + k;
+                c[idx] = self.decay[k] * c_in[k] + 0.1 * obs_mean;
+                h[idx] = c[idx].tanh();
+            }
+        }
+        InferReply { q, h, c }
+    }
+
+    pub fn train(&self, batch: &TrainBatch) -> TrainReply {
+        self.dims();
+        batch.validate(&self.dims).expect("mock train batch shape");
+        let step = self.step.fetch_add(1, Ordering::Relaxed) + 1;
+        let t = self.dims.seq_len;
+        // Priorities: |mean reward| per sequence + small floor.
+        let priorities: Vec<f32> = (0..batch.batch)
+            .map(|b| {
+                let r: f32 = batch.rewards[b * t..(b + 1) * t].iter().sum();
+                (r.abs() / t as f32) + 0.01
+            })
+            .collect();
+        TrainReply {
+            loss: 1.0 / (1.0 + step as f32 * 0.05),
+            priorities,
+            grad_norm: 1.0,
+            step,
+        }
+    }
+
+    pub fn sync_target(&self) {
+        self.target_syncs.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            obs_len: 8,
+            hidden: 4,
+            num_actions: 3,
+            seq_len: 4,
+            train_batch: 2,
+        }
+    }
+
+    fn req(n: usize, d: &ModelDims, fill: f32) -> InferRequest {
+        InferRequest {
+            n,
+            h: vec![0.0; n * d.hidden],
+            c: vec![0.0; n * d.hidden],
+            obs: vec![fill; n * d.obs_len],
+        }
+    }
+
+    #[test]
+    fn infer_is_deterministic_and_batch_consistent() {
+        let d = dims();
+        let m = MockModel::new(d, 42);
+        let single = m.infer(&req(1, &d, 0.5));
+        let batch = m.infer(&req(3, &d, 0.5));
+        // Same obs => same q regardless of batch position.
+        for i in 0..3 {
+            for a in 0..d.num_actions {
+                assert_eq!(batch.q[i * d.num_actions + a], single.q[a]);
+            }
+        }
+    }
+
+    #[test]
+    fn different_obs_different_q() {
+        let d = dims();
+        let m = MockModel::new(d, 42);
+        let a = m.infer(&req(1, &d, 0.1));
+        let b = m.infer(&req(1, &d, 0.9));
+        assert_ne!(a.q, b.q);
+    }
+
+    #[test]
+    fn recurrent_state_evolves() {
+        let d = dims();
+        let m = MockModel::new(d, 7);
+        let r1 = m.infer(&req(1, &d, 0.5));
+        let mut r2req = req(1, &d, 0.5);
+        r2req.h = r1.h.clone();
+        r2req.c = r1.c.clone();
+        let r2 = m.infer(&r2req);
+        assert_ne!(r1.c, r2.c);
+    }
+
+    #[test]
+    fn train_loss_decays_and_counts_steps() {
+        let d = dims();
+        let m = MockModel::new(d, 1);
+        let batch = TrainBatch {
+            batch: 2,
+            obs: vec![0.0; 2 * 4 * 8],
+            actions: vec![0; 8],
+            rewards: vec![1.0; 8],
+            discounts: vec![0.9; 8],
+            h0: vec![0.0; 8],
+            c0: vec![0.0; 8],
+        };
+        let r1 = m.train(&batch);
+        let r2 = m.train(&batch);
+        assert!(r2.loss < r1.loss);
+        assert_eq!(r2.step, 2);
+        assert_eq!(r1.priorities.len(), 2);
+        assert!(r1.priorities.iter().all(|&p| p > 0.0));
+        m.sync_target();
+        assert_eq!(m.target_syncs(), 1);
+    }
+}

@@ -1,0 +1,196 @@
+//! PJRT runtime: loads the AOT HLO artifacts and serves inference/train
+//! requests to the coordinator. Python never runs here — the artifacts
+//! are self-contained HLO text compiled once at startup.
+//!
+//! Threading model: the `xla` crate's handles are not `Send`, so a single
+//! dedicated runtime thread owns the PJRT client, the compiled
+//! executables, and the parameter literals (`server::XlaServer`). This is
+//! also the faithful model of the paper's system: SEED RL's *central
+//! inference* design funnels every observation through one GPU-side
+//! service instead of running per-actor CPU inference (IMPALA). The
+//! coordinator talks to it through the cloneable [`Backend`] handle.
+
+pub mod bundle;
+pub mod checkpoint;
+pub mod engine;
+pub mod manifest;
+pub mod mock;
+pub mod server;
+pub mod tensor;
+
+pub use bundle::Bundle;
+pub use engine::XlaRuntime;
+pub use manifest::Manifest;
+pub use mock::MockModel;
+pub use server::{XlaHandle, XlaServer};
+pub use tensor::{DType, Tensor, TensorData};
+
+use std::sync::Arc;
+
+/// Model dimensions the coordinator needs for buffer sizing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelDims {
+    pub obs_len: usize,
+    pub hidden: usize,
+    pub num_actions: usize,
+    pub seq_len: usize,
+    pub train_batch: usize,
+}
+
+/// A batched inference request: `n` rows of recurrent state + obs.
+#[derive(Clone, Debug)]
+pub struct InferRequest {
+    pub n: usize,
+    pub h: Vec<f32>,   // [n * hidden]
+    pub c: Vec<f32>,   // [n * hidden]
+    pub obs: Vec<f32>, // [n * obs_len]
+}
+
+/// Inference output: q-values and next recurrent state, `n` rows.
+#[derive(Clone, Debug)]
+pub struct InferReply {
+    pub q: Vec<f32>, // [n * num_actions]
+    pub h: Vec<f32>, // [n * hidden]
+    pub c: Vec<f32>, // [n * hidden]
+}
+
+/// A learner batch in the train artifact's ABI layout (batch-major).
+#[derive(Clone, Debug)]
+pub struct TrainBatch {
+    pub batch: usize,
+    pub obs: Vec<f32>,       // [B * T * obs_len]
+    pub actions: Vec<i32>,   // [B * T]
+    pub rewards: Vec<f32>,   // [B * T]
+    pub discounts: Vec<f32>, // [B * T]
+    pub h0: Vec<f32>,        // [B * hidden]
+    pub c0: Vec<f32>,        // [B * hidden]
+}
+
+/// Learner step output.
+#[derive(Clone, Debug)]
+pub struct TrainReply {
+    pub loss: f32,
+    pub priorities: Vec<f32>, // [B]
+    pub grad_norm: f32,
+    /// Learner step count after this update (= parameter version).
+    pub step: u64,
+}
+
+/// The coordinator's model backend: the real XLA runtime (channel RPC to
+/// the runtime thread) or the pure-Rust mock (tests / simulator-only
+/// runs). Cloneable + Send.
+#[derive(Clone)]
+pub enum Backend {
+    Xla(XlaHandle),
+    Mock(Arc<MockModel>),
+}
+
+impl Backend {
+    pub fn dims(&self) -> ModelDims {
+        match self {
+            Backend::Xla(h) => h.dims(),
+            Backend::Mock(m) => m.dims(),
+        }
+    }
+
+    /// Blocking batched inference.
+    pub fn infer(&self, req: InferRequest) -> anyhow::Result<InferReply> {
+        match self {
+            Backend::Xla(h) => h.infer(req),
+            Backend::Mock(m) => Ok(m.infer(&req)),
+        }
+    }
+
+    /// Blocking learner step (updates parameters in place).
+    pub fn train(&self, batch: TrainBatch) -> anyhow::Result<TrainReply> {
+        match self {
+            Backend::Xla(h) => h.train(batch),
+            Backend::Mock(m) => Ok(m.train(&batch)),
+        }
+    }
+
+    /// Copy online params -> target params.
+    pub fn sync_target(&self) -> anyhow::Result<()> {
+        match self {
+            Backend::Xla(h) => h.sync_target(),
+            Backend::Mock(m) => {
+                m.sync_target();
+                Ok(())
+            }
+        }
+    }
+}
+
+impl InferRequest {
+    pub fn validate(&self, dims: &ModelDims) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n > 0, "empty inference request");
+        anyhow::ensure!(self.h.len() == self.n * dims.hidden, "h length");
+        anyhow::ensure!(self.c.len() == self.n * dims.hidden, "c length");
+        anyhow::ensure!(self.obs.len() == self.n * dims.obs_len, "obs length");
+        Ok(())
+    }
+}
+
+impl TrainBatch {
+    pub fn validate(&self, dims: &ModelDims) -> anyhow::Result<()> {
+        let bt = self.batch * dims.seq_len;
+        anyhow::ensure!(self.batch == dims.train_batch, "batch size mismatch");
+        anyhow::ensure!(self.obs.len() == bt * dims.obs_len, "obs length");
+        anyhow::ensure!(self.actions.len() == bt, "actions length");
+        anyhow::ensure!(self.rewards.len() == bt, "rewards length");
+        anyhow::ensure!(self.discounts.len() == bt, "discounts length");
+        anyhow::ensure!(self.h0.len() == self.batch * dims.hidden, "h0 length");
+        anyhow::ensure!(self.c0.len() == self.batch * dims.hidden, "c0 length");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            obs_len: 8,
+            hidden: 4,
+            num_actions: 3,
+            seq_len: 5,
+            train_batch: 2,
+        }
+    }
+
+    #[test]
+    fn infer_request_validation() {
+        let d = dims();
+        let ok = InferRequest {
+            n: 2,
+            h: vec![0.0; 8],
+            c: vec![0.0; 8],
+            obs: vec![0.0; 16],
+        };
+        ok.validate(&d).unwrap();
+        let bad = InferRequest { n: 2, ..ok };
+        let bad = InferRequest {
+            obs: vec![0.0; 15],
+            ..bad
+        };
+        assert!(bad.validate(&d).is_err());
+    }
+
+    #[test]
+    fn train_batch_validation() {
+        let d = dims();
+        let ok = TrainBatch {
+            batch: 2,
+            obs: vec![0.0; 2 * 5 * 8],
+            actions: vec![0; 10],
+            rewards: vec![0.0; 10],
+            discounts: vec![0.0; 10],
+            h0: vec![0.0; 8],
+            c0: vec![0.0; 8],
+        };
+        ok.validate(&d).unwrap();
+        let bad = TrainBatch { batch: 1, ..ok };
+        assert!(bad.validate(&d).is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! The runtime server thread: owns the (non-Send) `XlaRuntime` and serves
+//! channel RPCs from any number of cloneable `XlaHandle`s.
+//!
+//! One thread per GPU is the honest topology for the paper's system:
+//! SEED-RL funnels all inference and training through a single
+//! accelerator-side service. Requests are processed FIFO; the inference
+//! batcher upstream is what creates GPU-efficient batch sizes.
+
+use super::engine::XlaRuntime;
+use super::{InferReply, InferRequest, ModelDims, TrainBatch, TrainReply};
+use std::path::Path;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+enum Msg {
+    Infer(InferRequest, mpsc::Sender<anyhow::Result<InferReply>>),
+    Train(TrainBatch, mpsc::Sender<anyhow::Result<TrainReply>>),
+    SyncTarget(mpsc::Sender<anyhow::Result<()>>),
+    Stop,
+}
+
+/// Cloneable, Send handle to the runtime thread.
+#[derive(Clone)]
+pub struct XlaHandle {
+    tx: mpsc::Sender<Msg>,
+    dims: ModelDims,
+}
+
+/// Owns the runtime thread; join on drop (after issuing Stop).
+pub struct XlaServer {
+    tx: mpsc::Sender<Msg>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl XlaServer {
+    /// Spawn the runtime thread, loading artifacts from `dir`.
+    /// Returns (server, handle); clone the handle freely.
+    pub fn spawn(
+        dir: &Path,
+        infer_batches: Option<Vec<usize>>,
+        with_train: bool,
+    ) -> anyhow::Result<(XlaServer, XlaHandle)> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<ModelDims>>();
+        let dir = dir.to_path_buf();
+        let join = std::thread::Builder::new()
+            .name("rlarch-runtime".into())
+            .spawn(move || {
+                let mut rt = match XlaRuntime::load(
+                    &dir,
+                    infer_batches.as_deref(),
+                    with_train,
+                ) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(rt.dims()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Infer(req, reply) => {
+                            let _ = reply.send(rt.infer(&req));
+                        }
+                        Msg::Train(batch, reply) => {
+                            let _ = reply.send(rt.train(&batch));
+                        }
+                        Msg::SyncTarget(reply) => {
+                            let _ = reply.send(rt.sync_target());
+                        }
+                        Msg::Stop => break,
+                    }
+                }
+            })
+            .expect("spawn runtime thread");
+        let dims = ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("runtime thread died during load"))??;
+        let handle = XlaHandle {
+            tx: tx.clone(),
+            dims,
+        };
+        Ok((
+            XlaServer {
+                tx,
+                join: Some(join),
+            },
+            handle,
+        ))
+    }
+}
+
+impl Drop for XlaServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Stop);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl XlaHandle {
+    pub fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    fn rpc<R>(&self, build: impl FnOnce(mpsc::Sender<anyhow::Result<R>>) -> Msg) -> anyhow::Result<R> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(build(rtx))
+            .map_err(|_| anyhow::anyhow!("runtime thread gone"))?;
+        rrx.recv()
+            .map_err(|_| anyhow::anyhow!("runtime thread dropped reply"))?
+    }
+
+    pub fn infer(&self, req: InferRequest) -> anyhow::Result<InferReply> {
+        self.rpc(|r| Msg::Infer(req, r))
+    }
+
+    pub fn train(&self, batch: TrainBatch) -> anyhow::Result<TrainReply> {
+        self.rpc(|r| Msg::Train(batch, r))
+    }
+
+    pub fn sync_target(&self) -> anyhow::Result<()> {
+        self.rpc(Msg::SyncTarget)
+    }
+}

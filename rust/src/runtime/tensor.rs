@@ -1,0 +1,224 @@
+//! Host-side tensors: the typed boundary between Rust data and XLA
+//! literals. Only the dtypes our artifacts use (f32, i32) are supported.
+
+use xla::{ElementType, Literal, PrimitiveType};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn element_type(self) -> ElementType {
+        match self {
+            DType::F32 => ElementType::F32,
+            DType::I32 => ElementType::S32,
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "float32" | "f32" => Ok(DType::F32),
+            "int32" | "i32" | "s32" => Ok(DType::I32),
+            other => anyhow::bail!("unsupported dtype `{other}`"),
+        }
+    }
+
+    pub fn size(self) -> usize {
+        4
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host tensor (shape + typed data). The ABI unit fed to / read from
+/// the PJRT executables.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn from_f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self {
+            shape,
+            data: TensorData::F32(data),
+        }
+    }
+
+    pub fn from_i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self {
+            shape,
+            data: TensorData::I32(data),
+        }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self::from_f32(shape, vec![0.0; n])
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        Self::from_f32(vec![], vec![x])
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
+    fn raw_bytes(&self) -> &[u8] {
+        match &self.data {
+            TensorData::F32(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            },
+            TensorData::I32(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            },
+        }
+    }
+
+    /// Convert to an XLA literal (host copy).
+    pub fn to_literal(&self) -> anyhow::Result<Literal> {
+        Literal::create_from_shape_and_untyped_data(
+            self.dtype().element_type(),
+            &self.shape,
+            self.raw_bytes(),
+        )
+        .map_err(|e| anyhow::anyhow!("literal create: {e}"))
+    }
+
+    /// Read an XLA literal back into a host tensor.
+    pub fn from_literal(lit: &Literal) -> anyhow::Result<Self> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow::anyhow!("literal shape: {e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.primitive_type() {
+            PrimitiveType::F32 => {
+                let v = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("literal read f32: {e}"))?;
+                Ok(Self::from_f32(dims, v))
+            }
+            PrimitiveType::S32 => {
+                let v = lit
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow::anyhow!("literal read i32: {e}"))?;
+                Ok(Self::from_i32(dims, v))
+            }
+            other => anyhow::bail!("unsupported literal type {other:?}"),
+        }
+    }
+
+    /// Build from raw little-endian bytes (tensor-bundle payloads).
+    pub fn from_le_bytes(dtype: DType, shape: Vec<usize>, bytes: &[u8]) -> anyhow::Result<Self> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(
+            bytes.len() == n * dtype.size(),
+            "byte length {} != {} elements * 4",
+            bytes.len(),
+            n
+        );
+        match dtype {
+            DType::F32 => {
+                let v = bytes
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect();
+                Ok(Self::from_f32(shape, v))
+            }
+            DType::I32 => {
+                let v = bytes
+                    .chunks_exact(4)
+                    .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect();
+                Ok(Self::from_i32(shape, v))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_product_enforced() {
+        let t = Tensor::from_f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_shape_panics() {
+        Tensor::from_f32(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn le_bytes_roundtrip() {
+        let vals = [1.5f32, -2.25, 3.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let t = Tensor::from_le_bytes(DType::F32, vec![3], &bytes).unwrap();
+        assert_eq!(t.as_f32(), &vals);
+        let i = Tensor::from_le_bytes(DType::I32, vec![2], &[1, 0, 0, 0, 255, 255, 255, 255])
+            .unwrap();
+        assert_eq!(i.as_i32(), &[1, -1]);
+    }
+
+    #[test]
+    fn dtype_names() {
+        assert_eq!(DType::from_name("float32").unwrap(), DType::F32);
+        assert_eq!(DType::from_name("int32").unwrap(), DType::I32);
+        assert!(DType::from_name("float64").is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        // Exercises the real XLA literal path (no artifacts needed).
+        let t = Tensor::from_f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let t2 = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, t2);
+
+        let ti = Tensor::from_i32(vec![3], vec![7, -8, 9]);
+        let lit = ti.to_literal().unwrap();
+        assert_eq!(Tensor::from_literal(&lit).unwrap(), ti);
+    }
+}

@@ -1,0 +1,217 @@
+//! Tick-driven discrete-event simulation of the SEED dataflow.
+//!
+//! Independent validation of the analytic fixed point in [`super::system`]:
+//! actors, the batcher, the GPU queue, and the learner are simulated
+//! explicitly on a small time quantum. Slower but assumption-light — the
+//! integration tests assert the two agree on throughput within tolerance,
+//! which guards both models against structural mistakes.
+
+use super::system::SystemModel;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum ActorState {
+    /// Remaining env work, in dedicated-core seconds.
+    EnvWork(f64),
+    /// Waiting in the batcher with submit timestamp.
+    Pending(f64),
+    /// In flight on the GPU.
+    OnGpu,
+}
+
+/// DES results over the measurement window.
+#[derive(Clone, Debug, Default)]
+pub struct DesPoint {
+    pub actors: usize,
+    pub env_rate: f64,
+    pub gpu_util: f64,
+    pub mean_batch: f64,
+    pub train_steps: u64,
+}
+
+/// Simulate `n` actors for `sim_seconds` (after an equal warmup) with
+/// time quantum `dt`.
+pub fn simulate(model: &SystemModel, n: usize, sim_seconds: f64, dt: f64) -> DesPoint {
+    let t_env = model.cpu.step_cost_us() * 1e-6;
+    let t_train = model.train_time();
+    let train_every = if model.train_per_env > 0.0 {
+        (1.0 / model.train_per_env).max(1.0)
+    } else {
+        f64::INFINITY
+    };
+
+    let mut actors = vec![ActorState::EnvWork(t_env); n];
+    let mut now = 0.0f64;
+    // GPU: FIFO queue of (is_train, batch actors) + one in-flight job.
+    let mut gpu_queue: std::collections::VecDeque<(bool, Vec<usize>)> =
+        std::collections::VecDeque::new();
+    let mut gpu_inflight: Option<(f64, bool, Vec<usize>)> = None;
+
+    let warmup = sim_seconds;
+    let total = 2.0 * sim_seconds;
+    let mut env_steps = 0u64;
+    let mut env_steps_since_train = 0.0f64;
+    let mut gpu_busy = 0.0f64;
+    let mut batches = 0u64;
+    let mut batch_items = 0u64;
+    let mut train_steps = 0u64;
+
+    while now < total {
+        let measuring = now >= warmup;
+
+        // 1) CPU: distribute capacity among env-working actors.
+        let working: Vec<usize> = actors
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| matches!(s, ActorState::EnvWork(_)).then_some(i))
+            .collect();
+        if !working.is_empty() {
+            let cap = model.cpu.capacity(working.len());
+            let per_actor = (cap / working.len() as f64).min(1.0) * dt;
+            for &i in &working {
+                if let ActorState::EnvWork(rem) = &mut actors[i] {
+                    *rem -= per_actor;
+                    if *rem <= 0.0 {
+                        if measuring {
+                            env_steps += 1;
+                        }
+                        env_steps_since_train += 1.0;
+                        actors[i] = ActorState::Pending(now);
+                    }
+                }
+            }
+        }
+
+        // 2) Learner: enqueue a train job when enough env steps arrived.
+        while env_steps_since_train >= train_every {
+            env_steps_since_train -= train_every;
+            gpu_queue.push_back((true, Vec::new()));
+        }
+
+        // 3) Batcher: flush when full or the oldest submit times out.
+        let pending: Vec<usize> = actors
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| matches!(s, ActorState::Pending(_)).then_some(i))
+            .collect();
+        let oldest = pending
+            .iter()
+            .filter_map(|&i| match actors[i] {
+                ActorState::Pending(t) => Some(t),
+                _ => None,
+            })
+            .fold(f64::INFINITY, f64::min);
+        let should_flush = pending.len() >= model.max_batch
+            || (!pending.is_empty() && now - oldest >= model.batch_timeout_s);
+        if should_flush {
+            let batch: Vec<usize> =
+                pending.into_iter().take(model.max_batch).collect();
+            for &i in &batch {
+                actors[i] = ActorState::OnGpu;
+            }
+            gpu_queue.push_back((false, batch));
+        }
+
+        // 4) GPU: complete and start jobs.
+        if let Some((done_at, is_train, batch)) = &gpu_inflight {
+            if now >= *done_at {
+                if *is_train && measuring {
+                    train_steps += 1;
+                }
+                for &i in batch {
+                    actors[i] = ActorState::EnvWork(t_env);
+                }
+                gpu_inflight = None;
+            }
+        }
+        if gpu_inflight.is_none() {
+            if let Some((is_train, batch)) = gpu_queue.pop_front() {
+                let service = if is_train {
+                    t_train
+                } else {
+                    model.infer_time(batch.len().max(1))
+                };
+                if measuring && !is_train {
+                    batches += 1;
+                    batch_items += batch.len() as u64;
+                }
+                gpu_inflight = Some((now + service, is_train, batch));
+            }
+        }
+        if measuring && gpu_inflight.is_some() {
+            gpu_busy += dt;
+        }
+
+        now += dt;
+    }
+
+    DesPoint {
+        actors: n,
+        env_rate: env_steps as f64 / sim_seconds,
+        gpu_util: gpu_busy / sim_seconds,
+        mean_batch: if batches > 0 {
+            batch_items as f64 / batches as f64
+        } else {
+            0.0
+        },
+        train_steps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simarch::system::default_system;
+    use crate::simarch::trace::{synthetic_paper_trace, synthetic_paper_train_trace};
+
+    fn model() -> SystemModel {
+        default_system(
+            synthetic_paper_trace(1, 1, 64),
+            synthetic_paper_train_trace(2, 80, 16),
+        )
+    }
+
+    #[test]
+    fn des_rate_scales_with_actors() {
+        let m = model();
+        let r4 = simulate(&m, 4, 0.25, 20e-6).env_rate;
+        let r32 = simulate(&m, 32, 0.25, 20e-6).env_rate;
+        assert!(r32 > 3.0 * r4, "r4={r4} r32={r32}");
+    }
+
+    #[test]
+    fn des_agrees_with_analytic_model() {
+        let m = model();
+        for n in [8usize, 40] {
+            let des = simulate(&m, n, 0.5, 10e-6);
+            let ana = m.steady_state(n);
+            let ratio = des.env_rate / ana.env_rate;
+            assert!(
+                (0.6..1.6).contains(&ratio),
+                "n={n}: DES {} vs analytic {} (ratio {ratio})",
+                des.env_rate,
+                ana.env_rate
+            );
+        }
+    }
+
+    #[test]
+    fn des_conservation_trains_proportional_to_steps() {
+        let m = model();
+        let p = simulate(&m, 16, 0.5, 10e-6);
+        let expected = p.env_rate * 0.5 * m.train_per_env;
+        assert!(
+            (p.train_steps as f64) > 0.3 * expected
+                && (p.train_steps as f64) < 3.0 * expected.max(1.0),
+            "train {} vs expected {expected}",
+            p.train_steps
+        );
+    }
+
+    #[test]
+    fn des_gpu_util_bounded() {
+        let m = model();
+        let p = simulate(&m, 64, 0.25, 20e-6);
+        assert!(p.gpu_util >= 0.0 && p.gpu_util <= 1.0);
+        assert!(p.mean_batch >= 1.0);
+    }
+}

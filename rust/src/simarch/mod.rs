@@ -1,0 +1,28 @@
+//! NVArchSim-style CPU-GPU architectural simulator.
+//!
+//! The paper's evidence (Figs. 2-4) comes from hardware profiling plus
+//! NVIDIA's internal trace-driven simulator. This module reproduces the
+//! *methodology* on open substrates:
+//!
+//! * [`trace`] — kernel descriptors extracted from our real R2D2 HLO.
+//! * [`gpu`] — V100 timing model + the component-idealization ladder
+//!   (Fig. 2's breakdown procedure).
+//! * [`cpu`] — hardware-thread scheduling model for the actor pool.
+//! * [`power`] — idle-heavy GPU power curve (Fig. 3 right axis).
+//! * [`system`] — coupled steady-state model of the full SEED dataflow
+//!   (Fig. 3 actor sweep, Fig. 4 SM sweep / CPU-GPU ratio).
+//! * [`des`] — tick-driven discrete-event validation of the analytic
+//!   steady-state solution.
+
+pub mod cpu;
+pub mod des;
+pub mod gpu;
+pub mod power;
+pub mod system;
+pub mod trace;
+
+pub use cpu::CpuModel;
+pub use gpu::{Breakdown, GpuModel, GpuTuning, Idealize};
+pub use power::PowerModel;
+pub use system::{default_system, InferScaling, SystemModel, SystemPoint};
+pub use trace::{synthetic_paper_train_trace, synthetic_paper_trace, synthetic_train_trace, KernelDesc, Trace, TraceSet};

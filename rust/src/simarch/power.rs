@@ -1,0 +1,105 @@
+//! GPU power model (Fig. 3's right-hand story).
+//!
+//! Measured GPUs draw substantial power at idle (the paper reports ≈70 W
+//! for the V100 at low utilization) and grow sub-linearly with
+//! utilization toward TDP. Dynamic power splits between SM activity and
+//! the memory system; disabling SMs (Fig. 4's knob) removes only the SM
+//! share of dynamic power plus a per-SM slice of static power.
+
+use crate::config::PowerModelConfig;
+
+#[derive(Clone, Debug)]
+pub struct PowerModel {
+    pub cfg: PowerModelConfig,
+}
+
+impl PowerModel {
+    pub fn new(cfg: PowerModelConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Average power (W) at `util` in [0,1] with all SMs enabled.
+    pub fn power(&self, util: f64) -> f64 {
+        let u = util.clamp(0.0, 1.0);
+        self.cfg.idle_w + (self.cfg.max_w - self.cfg.idle_w) * u.powf(self.cfg.util_exponent)
+    }
+
+    /// Average power with only `sms_enabled` of `sms_total` SMs powered.
+    /// SM-gated share of dynamic power scales with the enabled fraction;
+    /// idle (static + memory) power is unaffected — matching the paper's
+    /// observation that low-utilization power stays high.
+    pub fn power_with_sms(&self, util: f64, sms_enabled: usize, sms_total: usize) -> f64 {
+        let u = util.clamp(0.0, 1.0);
+        let frac = (sms_enabled.min(sms_total).max(1)) as f64 / sms_total.max(1) as f64;
+        let dynamic = (self.cfg.max_w - self.cfg.idle_w) * u.powf(self.cfg.util_exponent);
+        let sm_dyn = dynamic * self.cfg.sm_dynamic_frac * frac;
+        let mem_dyn = dynamic * (1.0 - self.cfg.sm_dynamic_frac);
+        self.cfg.idle_w + sm_dyn + mem_dyn
+    }
+
+    /// Energy (J) to run at `util` for `seconds`.
+    pub fn energy(&self, util: f64, seconds: f64) -> f64 {
+        self.power(util) * seconds
+    }
+
+    /// Performance per Watt: work rate / power.
+    pub fn perf_per_watt(&self, work_per_sec: f64, util: f64) -> f64 {
+        work_per_sec / self.power(util)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PowerModelConfig;
+
+    fn model() -> PowerModel {
+        PowerModel::new(PowerModelConfig::default())
+    }
+
+    #[test]
+    fn idle_floor_and_tdp_ceiling() {
+        let m = model();
+        assert_eq!(m.power(0.0), 70.0);
+        assert!((m.power(1.0) - 300.0).abs() < 1e-9);
+        assert!(m.power(-1.0) >= 70.0);
+        assert!(m.power(2.0) <= 300.0);
+    }
+
+    #[test]
+    fn sublinear_growth() {
+        let m = model();
+        // At 50% utilization, power exceeds the linear midpoint
+        // (util_exponent < 1): high power at moderate utilization.
+        let linear_mid = 70.0 + 0.5 * 230.0;
+        assert!(m.power(0.5) > linear_mid);
+        assert!(m.power(0.5) < 300.0);
+    }
+
+    #[test]
+    fn perf_per_watt_improves_with_utilization() {
+        // The paper's key power observation: throughput grows faster than
+        // power, so perf/W rises with actor count (utilization).
+        let m = model();
+        let low = m.perf_per_watt(100.0, 0.1);
+        let high = m.perf_per_watt(1000.0, 1.0);
+        assert!(high > low);
+    }
+
+    #[test]
+    fn disabling_sms_saves_only_sm_dynamic_power() {
+        let m = model();
+        let full = m.power_with_sms(0.8, 80, 80);
+        let half = m.power_with_sms(0.8, 40, 80);
+        assert!(half < full);
+        // But idle + memory share remains: saving is bounded.
+        assert!(full - half < 0.5 * (full - 70.0) + 1e-9);
+        assert!((m.power_with_sms(0.8, 80, 80) - m.power(0.8)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_is_power_times_time() {
+        let m = model();
+        assert!((m.energy(0.5, 10.0) - m.power(0.5) * 10.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,312 @@
+//! Full-system steady-state model: actors (CPU) + central inference +
+//! learner sharing one GPU. Produces the paper's Fig. 3 (actor sweep)
+//! and Fig. 4 (SM sweep) series.
+//!
+//! The model solves a fixed point over the coupled quantities:
+//!   * aggregate env-step rate R,
+//!   * the number of actors concurrently CPU-busy (Little's law — an
+//!     actor waiting on inference yields its hardware thread, which is
+//!     why oversubscribing actors beyond 40 threads keeps helping, the
+//!     paper's 40→256 tail),
+//!   * the inference batch size the batcher forms at rate R,
+//!   * GPU queueing inflation when inference + training near capacity.
+//!
+//! Absolute times come from the GPU timing model over the *real* kernel
+//! traces of our R2D2 graphs; the CPU side from `CpuModel`; power from
+//! `PowerModel`.
+
+use super::cpu::CpuModel;
+use super::gpu::{GpuModel, Idealize};
+use super::power::PowerModel;
+use super::trace::Trace;
+
+/// Scaling description for inference cost vs batch size: the reference
+/// trace is for `ref_batch`; activations scale with B, parameter reads
+/// do not. `weight_frac` is the fraction of trace bytes that are
+/// batch-independent (weights).
+#[derive(Clone, Debug)]
+pub struct InferScaling {
+    pub ref_batch: usize,
+    pub weight_frac: f64,
+}
+
+impl Default for InferScaling {
+    fn default() -> Self {
+        Self {
+            ref_batch: 64,
+            weight_frac: 0.5,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SystemModel {
+    pub cpu: CpuModel,
+    pub gpu: GpuModel,
+    pub power: PowerModel,
+    pub infer_trace: Trace,
+    pub infer_scaling: InferScaling,
+    pub train_trace: Trace,
+    /// Learner steps per environment step (replay ratio): R2D2 defaults
+    /// give 1 / ((seq_len - overlap) * train_batch).
+    pub train_per_env: f64,
+    /// Batcher policy.
+    pub max_batch: usize,
+    pub batch_timeout_s: f64,
+}
+
+/// One steady-state operating point.
+#[derive(Clone, Debug, Default)]
+pub struct SystemPoint {
+    pub actors: usize,
+    /// Aggregate environment steps / second.
+    pub env_rate: f64,
+    /// Mean inference batch size formed.
+    pub batch_size: f64,
+    /// GPU busy fraction in [0,1].
+    pub gpu_util: f64,
+    /// Actors concurrently CPU-busy.
+    pub cpu_busy_actors: f64,
+    /// Average GPU power, W.
+    pub power_w: f64,
+    /// env steps per second per GPU Watt.
+    pub perf_per_watt: f64,
+    /// Actor-visible inference round-trip, seconds.
+    pub rtt_s: f64,
+}
+
+impl SystemModel {
+    /// Inference time for a batch of `b` on the current GPU model.
+    pub fn infer_time(&self, b: usize) -> f64 {
+        let s = &self.infer_scaling;
+        let ratio = b as f64 / s.ref_batch as f64;
+        let scaled = Trace {
+            artifact: self.infer_trace.artifact.clone(),
+            kernels: self
+                .infer_trace
+                .kernels
+                .iter()
+                .map(|k| {
+                    let mut k = k.clone();
+                    k.flops *= ratio;
+                    k.out_elems = ((k.out_elems as f64 * ratio).ceil() as u64).max(1);
+                    let b_total = k.bytes_read + k.bytes_written;
+                    let scaled_bytes = b_total as f64
+                        * (s.weight_frac + (1.0 - s.weight_frac) * ratio);
+                    let f = scaled_bytes / b_total.max(1) as f64;
+                    k.bytes_read = (k.bytes_read as f64 * f) as u64;
+                    k.bytes_written = (k.bytes_written as f64 * f) as u64;
+                    k
+                })
+                .collect(),
+        };
+        self.gpu.trace_time(&scaled, Idealize::NONE)
+    }
+
+    /// Train-step time on the current GPU model.
+    pub fn train_time(&self) -> f64 {
+        self.gpu.trace_time(&self.train_trace, Idealize::NONE)
+    }
+
+    /// Solve the steady state for `n` actors (damped fixed point).
+    pub fn steady_state(&self, n: usize) -> SystemPoint {
+        let t_env = self.cpu.step_cost_us() * 1e-6; // ideal per-step CPU time
+        let t_train = self.train_time();
+        let mut rate = n as f64 / (t_env + 1e-4); // optimistic init
+        let mut batch = 1.0f64;
+        let mut rtt = 1e-4;
+        let mut busy = n as f64;
+
+        for _ in 0..200 {
+            // Actors CPU-busy (Little): arrivals R, service t_env_eff.
+            let speed = (self.cpu.capacity(busy.ceil() as usize) / busy.max(1.0)).min(1.0);
+            let t_env_eff = t_env / speed.max(1e-9);
+            busy = (rate * t_env_eff).clamp(1.0_f64.min(n as f64), n as f64);
+
+            // Batch formed: arrivals during min(timeout, fill time).
+            let fill_time = if rate > 0.0 {
+                self.max_batch as f64 / rate
+            } else {
+                f64::INFINITY
+            };
+            let window = self.batch_timeout_s.min(fill_time);
+            batch = (rate * window).clamp(1.0, self.max_batch as f64);
+            let t_infer = self.infer_time(batch.round() as usize);
+
+            // GPU occupancy: inference + training load.
+            let gpu_load = rate * (t_infer / batch + self.train_per_env * t_train);
+            let rho = gpu_load.min(0.97);
+            // Queueing inflation near saturation (M/D/1-flavoured).
+            let inflation = 1.0 / (1.0 - rho);
+            // Actors cycle near-synchronously, so the typical wait is
+            // most of the collection window (validated against the DES).
+            let t_wait = window * 0.75;
+            rtt = t_wait + t_infer * inflation;
+
+            // Concurrency-limited rate; GPU hard cap.
+            let r_conc = n as f64 / (t_env_eff + rtt);
+            let r_cpu = self.cpu.env_steps_per_sec(n.min(busy.ceil() as usize).max(1));
+            let gpu_per_step = t_infer / batch + self.train_per_env * t_train;
+            let r_gpu = 0.99 / gpu_per_step;
+            let target = r_conc.min(r_cpu.max(1.0)).min(r_gpu);
+            rate = 0.5 * rate + 0.5 * target; // damping
+        }
+
+        let t_infer = self.infer_time(batch.round() as usize);
+        let gpu_util =
+            (rate * (t_infer / batch + self.train_per_env * self.train_time())).min(1.0);
+        let power_w = self
+            .power
+            .power_with_sms(gpu_util, self.gpu.cfg.num_sms, 80);
+        SystemPoint {
+            actors: n,
+            env_rate: rate,
+            batch_size: batch,
+            gpu_util,
+            cpu_busy_actors: busy,
+            power_w,
+            perf_per_watt: rate / power_w,
+            rtt_s: rtt,
+        }
+    }
+
+    /// Wall-clock seconds to generate `frames` env steps with `n` actors.
+    pub fn runtime_for(&self, frames: u64, n: usize) -> f64 {
+        frames as f64 / self.steady_state(n).env_rate
+    }
+
+    /// Clone with a different SM count (Fig. 4 sweep).
+    pub fn with_sms(&self, sms: usize) -> Self {
+        let mut m = self.clone();
+        m.gpu = self.gpu.with_sms(sms);
+        m
+    }
+
+    /// Clone with a different CPU hardware-thread count.
+    pub fn with_threads(&self, threads: usize) -> Self {
+        let mut m = self.clone();
+        m.cpu = self.cpu.with_threads(threads);
+        m
+    }
+
+    /// CPU/GPU ratio of this configuration (the paper's design metric).
+    pub fn cpu_gpu_ratio(&self) -> f64 {
+        self.cpu.cfg.hw_threads as f64 / self.gpu.cfg.num_sms as f64
+    }
+}
+
+/// Build the default DGX-1-slice system model from traces.
+///
+/// The replay ratio uses the *paper's* R2D2 hyper-parameters (sequence
+/// length 80, overlap 40, train batch 64): one learner step per
+/// (80-40)*64 = 2560 environment steps — not our CPU-testbed training
+/// config, which trains far more aggressively per env step.
+pub fn default_system(infer_trace: Trace, train_trace: Trace) -> SystemModel {
+    use crate::config::SystemConfig;
+    let cfg = SystemConfig::default();
+    SystemModel {
+        cpu: CpuModel::new(cfg.cpu.clone()),
+        gpu: GpuModel::new(cfg.gpu.clone()),
+        power: PowerModel::new(cfg.power.clone()),
+        infer_trace,
+        infer_scaling: InferScaling::default(),
+        train_trace,
+        // One learner step per (80-40)*64 env steps, and the DGX-1
+        // shards the learner across its 8 V100s, so each GPU carries
+        // 1/8th of the training load alongside its inference service.
+        train_per_env: 1.0 / ((80.0 - 40.0) * 64.0 * 8.0),
+        max_batch: cfg.batcher.max_batch,
+        batch_timeout_s: cfg.batcher.timeout_us as f64 * 1e-6,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simarch::trace::{synthetic_paper_trace, synthetic_paper_train_trace};
+
+    fn model() -> SystemModel {
+        // Paper-scale traces (Atari-sized R2D2); the calibration
+        // integration test checks the same shapes on the real artifact
+        // traces from aot.py.
+        let infer = synthetic_paper_trace(1, 1, 64);
+        let train = synthetic_paper_train_trace(2, 80, 16);
+        default_system(infer, train)
+    }
+
+    #[test]
+    fn rate_monotone_in_actors_until_saturation() {
+        let m = model();
+        let rates: Vec<f64> = [1, 4, 8, 16, 32, 40, 64, 128, 256]
+            .iter()
+            .map(|&n| m.steady_state(n).env_rate)
+            .collect();
+        for w in rates.windows(2) {
+            assert!(w[1] >= w[0] * 0.98, "rate dropped: {rates:?}");
+        }
+    }
+
+    #[test]
+    fn knee_behaviour_matches_paper_shape() {
+        let m = model();
+        let r4 = m.steady_state(4).env_rate;
+        let r40 = m.steady_state(40).env_rate;
+        let r256 = m.steady_state(256).env_rate;
+        let up = r40 / r4;
+        let beyond = r256 / r40;
+        // Paper: 5.8x then 2.0x. Shape requirement: strong scaling to the
+        // thread count, diminishing returns beyond.
+        assert!(up > 3.0 && up < 12.0, "4->40 speedup {up}");
+        assert!(beyond > 1.2 && beyond < 4.0, "40->256 speedup {beyond}");
+        assert!(up > beyond, "knee must exist");
+    }
+
+    #[test]
+    fn gpu_power_rises_with_actors_and_perf_per_watt_improves() {
+        let m = model();
+        let lo = m.steady_state(4);
+        let hi = m.steady_state(256);
+        assert!(hi.power_w > lo.power_w);
+        assert!(hi.perf_per_watt > lo.perf_per_watt);
+        assert!(lo.power_w >= 70.0);
+    }
+
+    #[test]
+    fn batch_size_grows_with_actors() {
+        let m = model();
+        assert!(m.steady_state(64).batch_size > m.steady_state(2).batch_size);
+    }
+
+    #[test]
+    fn sm_sweep_mild_then_cliff() {
+        let m = model();
+        let base = m.steady_state(40).env_rate;
+        let half = m.with_sms(40).steady_state(40).env_rate;
+        let tiny = m.with_sms(2).steady_state(40).env_rate;
+        let slowdown_half = base / half;
+        let slowdown_tiny = base / tiny;
+        assert!(
+            slowdown_half < 1.25,
+            "halving SMs should be mild: {slowdown_half}"
+        );
+        assert!(
+            slowdown_tiny > slowdown_half + 0.2,
+            "2 SMs must hurt: {slowdown_tiny} vs {slowdown_half}"
+        );
+    }
+
+    #[test]
+    fn runtime_inverse_of_rate() {
+        let m = model();
+        let p = m.steady_state(16);
+        let t = m.runtime_for(1_000_000, 16);
+        assert!((t - 1_000_000.0 / p.env_rate).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cpu_gpu_ratio_metric() {
+        let m = model();
+        assert!((m.cpu_gpu_ratio() - 0.5).abs() < 1e-12);
+        assert!((m.with_sms(40).cpu_gpu_ratio() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,315 @@
+//! Kernel traces: the workload descriptions the GPU timing model consumes.
+//!
+//! Traces come from `artifacts/kernel_trace.json`, which `aot.py` extracts
+//! from the XLA-optimized HLO of our real R2D2 graphs (per-kernel FLOPs,
+//! bytes, output parallelism). A synthetic generator provides
+//! deterministic traces for unit tests and for sweeps that must not
+//! depend on artifact presence.
+
+use crate::util::json::Value;
+use crate::util::prng::Pcg32;
+use std::path::Path;
+
+/// One modeled GPU kernel launch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KernelDesc {
+    pub name: String,
+    pub op: String,
+    pub flops: f64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    /// Output element count — the parallelism proxy (threads to schedule).
+    pub out_elems: u64,
+}
+
+impl KernelDesc {
+    pub fn bytes_total(&self) -> u64 {
+        self.bytes_read + self.bytes_written
+    }
+
+    /// Arithmetic intensity (FLOPs per byte).
+    pub fn intensity(&self) -> f64 {
+        self.flops / self.bytes_total().max(1) as f64
+    }
+}
+
+/// A kernel sequence representing one execution of a graph
+/// (one inference batch or one training step).
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub artifact: String,
+    pub kernels: Vec<KernelDesc>,
+}
+
+impl Trace {
+    pub fn total_flops(&self) -> f64 {
+        self.kernels.iter().map(|k| k.flops).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.kernels.iter().map(|k| k.bytes_total()).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.kernels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kernels.is_empty()
+    }
+}
+
+/// All traces from `kernel_trace.json`.
+pub struct TraceSet {
+    pub traces: Vec<Trace>,
+}
+
+impl TraceSet {
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(dir.join("kernel_trace.json"))
+            .map_err(|e| anyhow::anyhow!("read kernel_trace.json: {e} (run `make artifacts`)"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let v = Value::parse(text).map_err(|e| anyhow::anyhow!("trace json: {e}"))?;
+        let mut traces = Vec::new();
+        for t in v.get("traces").and_then(|x| x.as_arr()).unwrap_or(&[]) {
+            let artifact = t
+                .get("artifact")
+                .and_then(|x| x.as_str())
+                .unwrap_or("")
+                .to_string();
+            let mut kernels = Vec::new();
+            for k in t.get("kernels").and_then(|x| x.as_arr()).unwrap_or(&[]) {
+                kernels.push(KernelDesc {
+                    name: k.get("name").and_then(|x| x.as_str()).unwrap_or("").into(),
+                    op: k.get("op").and_then(|x| x.as_str()).unwrap_or("").into(),
+                    flops: k.get("flops").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                    bytes_read: k.get("bytes_read").and_then(|x| x.as_u64()).unwrap_or(0),
+                    bytes_written: k
+                        .get("bytes_written")
+                        .and_then(|x| x.as_u64())
+                        .unwrap_or(0),
+                    out_elems: k.get("out_elems").and_then(|x| x.as_u64()).unwrap_or(0),
+                });
+            }
+            traces.push(Trace { artifact, kernels });
+        }
+        anyhow::ensure!(!traces.is_empty(), "no traces in kernel_trace.json");
+        Ok(Self { traces })
+    }
+
+    /// Find a trace by artifact-name prefix (e.g. "infer_b", "train").
+    pub fn find(&self, prefix: &str) -> Option<&Trace> {
+        self.traces.iter().find(|t| t.artifact.starts_with(prefix))
+    }
+}
+
+/// Deterministic synthetic trace shaped like a small NN training step:
+/// interleaved large matmul-ish kernels (high FLOPs, moderate bytes, high
+/// parallelism) and elementwise kernels (low FLOPs, bytes-bound).
+pub fn synthetic_train_trace(seed: u64, layers: usize, batch: usize) -> Trace {
+    let mut rng = Pcg32::seeded(seed);
+    let mut kernels = Vec::new();
+    for l in 0..layers {
+        let m = 64 << (l % 3); // output rows
+        let k = 128 + 64 * (l % 4); // contraction
+        let n = batch;
+        let flops = 2.0 * (m * n * k) as f64;
+        let bytes = 4 * (m * k + k * n + m * n) as u64;
+        kernels.push(KernelDesc {
+            name: format!("dot.{l}"),
+            op: "dot".into(),
+            flops,
+            bytes_read: 4 * (m * k + k * n) as u64,
+            bytes_written: 4 * (m * n) as u64,
+            out_elems: (m * n) as u64,
+        });
+        // 1-3 elementwise epilogues.
+        for e in 0..(1 + rng.index(3)) {
+            let elems = (m * n) as u64;
+            kernels.push(KernelDesc {
+                name: format!("fusion.{l}.{e}"),
+                op: "fusion".into(),
+                flops: elems as f64 * 3.0,
+                bytes_read: elems * 8,
+                bytes_written: elems * 4,
+                out_elems: elems,
+            });
+        }
+        let _ = bytes;
+    }
+    Trace {
+        artifact: format!("synthetic_l{layers}_b{batch}"),
+        kernels,
+    }
+}
+
+/// Synthetic trace at the *paper's* workload scale: SEED-RL's R2D2 on
+/// Atari (84x84x4 conv torso, LSTM 512, batch 64) keeps a V100 busy with
+/// multi-GFLOP convolutions and [64,512]x[512,2048] recurrent matmuls.
+/// Used by tests and as the fallback when artifacts are absent; the real
+/// counterpart is the `*_paper_scale` trace `aot.py` extracts.
+pub fn synthetic_paper_trace(seed: u64, timesteps: usize, batch: usize) -> Trace {
+    let mut rng = Pcg32::seeded(seed);
+    let mut kernels = Vec::new();
+    let b = batch;
+    for t in 0..timesteps {
+        // Conv stack (84x84x4 -> 20x20x32 -> 9x9x64), NHWC, fp32.
+        let conv1_out = b * 20 * 20 * 32;
+        kernels.push(KernelDesc {
+            name: format!("conv1.{t}"),
+            op: "convolution".into(),
+            flops: 2.0 * conv1_out as f64 * (8.0 * 8.0 * 4.0),
+            bytes_read: (b * 84 * 84 * 4 * 4 + 8 * 8 * 4 * 32 * 4) as u64,
+            bytes_written: (conv1_out * 4) as u64,
+            out_elems: conv1_out as u64,
+        });
+        let conv2_out = b * 9 * 9 * 64;
+        kernels.push(KernelDesc {
+            name: format!("conv2.{t}"),
+            op: "convolution".into(),
+            flops: 2.0 * conv2_out as f64 * (4.0 * 4.0 * 32.0),
+            bytes_read: (conv1_out * 4 + 4 * 4 * 32 * 64 * 4) as u64,
+            bytes_written: (conv2_out * 4) as u64,
+            out_elems: conv2_out as u64,
+        });
+        // LSTM gates: [B,512+?] x [., 2048] fused pair of matmuls.
+        for gate in 0..2 {
+            let (m, k, n) = (b, 512 + 64 * (gate % 2), 2048);
+            kernels.push(KernelDesc {
+                name: format!("lstm_dot{gate}.{t}"),
+                op: "dot".into(),
+                flops: 2.0 * (m * k * n) as f64,
+                bytes_read: ((m * k + k * n) * 4) as u64,
+                bytes_written: ((m * n) * 4) as u64,
+                out_elems: (m * n) as u64,
+            });
+        }
+        // Pointwise epilogues (gates, relu) — bytes-bound.
+        for e in 0..(2 + rng.index(2)) {
+            let elems = (b * 2048) as u64;
+            kernels.push(KernelDesc {
+                name: format!("ew{e}.{t}"),
+                op: "fusion".into(),
+                flops: elems as f64 * 6.0,
+                bytes_read: elems * 12,
+                bytes_written: elems * 4,
+                out_elems: elems,
+            });
+        }
+    }
+    Trace {
+        artifact: format!("synthetic_paper_t{timesteps}_b{batch}"),
+        kernels,
+    }
+}
+
+/// Paper-scale *training-step* trace: forward kernels (from
+/// `synthetic_paper_trace`) + backward-pass kernels (≈2x forward FLOPs,
+/// higher byte traffic for activation re-reads) + Adam optimizer kernels
+/// (pure DRAM-bandwidth: read p/g/m/v, write p/m/v over ~6M params).
+pub fn synthetic_paper_train_trace(seed: u64, timesteps: usize, batch: usize) -> Trace {
+    let fwd = synthetic_paper_trace(seed, timesteps, batch);
+    let mut kernels = fwd.kernels.clone();
+    // Backward: dgrad+wgrad per forward op, ~2x FLOPs, 2x bytes.
+    for k in &fwd.kernels {
+        kernels.push(KernelDesc {
+            name: format!("bwd_{}", k.name),
+            op: k.op.clone(),
+            flops: 2.0 * k.flops,
+            bytes_read: 2 * k.bytes_read,
+            bytes_written: 2 * k.bytes_written,
+            out_elems: 2 * k.out_elems,
+        });
+    }
+    // Input-pipeline / layout kernels: observation decode + stacking +
+    // NHWC<->NCHW transposes over the [64, 80, 84, 84, 4] batch — pure
+    // streaming DRAM traffic with no reuse (the TF graph the paper
+    // profiles is full of these between the fused compute ops).
+    for t in 0..timesteps {
+        let obs_bytes = (batch * 84 * 84 * 4 * 4) as u64;
+        for pass in 0..3 {
+            // decode/scale, frame-stack gather, layout transpose
+            kernels.push(KernelDesc {
+                name: format!("preproc{pass}.{t}"),
+                op: "copy".into(),
+                flops: 0.0,
+                bytes_read: obs_bytes,
+                bytes_written: obs_bytes,
+                out_elems: obs_bytes / 4,
+            });
+        }
+    }
+    // Optimizer: Adam over ~6M fp32 params, split across a few kernels.
+    let params: u64 = 6_000_000;
+    let chunks = 4;
+    for c in 0..chunks {
+        let p = params / chunks;
+        kernels.push(KernelDesc {
+            name: format!("adam.{c}"),
+            op: "fusion".into(),
+            flops: p as f64 * 12.0,
+            bytes_read: p * 4 * 4,  // p, g, m, v
+            bytes_written: p * 4 * 3, // p, m, v
+            out_elems: p,
+        });
+    }
+    Trace {
+        artifact: format!("synthetic_paper_train_t{timesteps}_b{batch}"),
+        kernels,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"traces": [
+      {"artifact": "infer_b64", "kernels": [
+         {"name": "dot.1", "op": "dot", "flops": 1048576,
+          "bytes_read": 262144, "bytes_written": 32768, "out_elems": 8192},
+         {"name": "fusion.2", "op": "fusion", "flops": 8192,
+          "bytes_read": 65536, "bytes_written": 32768, "out_elems": 8192}
+      ], "summary": {}, "xla_cost_analysis_flops": 1100000},
+      {"artifact": "train_unrolled", "kernels": [], "summary": {}}
+    ]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let ts = TraceSet::parse(SAMPLE).unwrap();
+        assert_eq!(ts.traces.len(), 2);
+        let t = ts.find("infer_b").unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.total_flops(), 1048576.0 + 8192.0);
+        assert_eq!(t.kernels[0].bytes_total(), 294912);
+        assert!(t.kernels[0].intensity() > 3.0);
+    }
+
+    #[test]
+    fn find_by_prefix() {
+        let ts = TraceSet::parse(SAMPLE).unwrap();
+        assert!(ts.find("train").is_some());
+        assert!(ts.find("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(TraceSet::parse(r#"{"traces": []}"#).is_err());
+        assert!(TraceSet::parse("not json").is_err());
+    }
+
+    #[test]
+    fn synthetic_trace_is_deterministic_and_mixed() {
+        let a = synthetic_train_trace(7, 6, 32);
+        let b = synthetic_train_trace(7, 6, 32);
+        assert_eq!(a.kernels, b.kernels);
+        let dots = a.kernels.iter().filter(|k| k.op == "dot").count();
+        let fusions = a.kernels.iter().filter(|k| k.op == "fusion").count();
+        assert_eq!(dots, 6);
+        assert!(fusions >= 6);
+        // Dots are compute-heavy, fusions bytes-bound.
+        assert!(a.kernels[0].intensity() > 10.0 * a.kernels[1].intensity());
+    }
+}

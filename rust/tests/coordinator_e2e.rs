@@ -1,0 +1,137 @@
+//! End-to-end integration: the full SEED dataflow against the real PJRT
+//! backend (artifacts required; skipped otherwise) and failure-injection
+//! checks against the mock.
+
+use rlarch::config::{InferenceMode, SystemConfig};
+use rlarch::coordinator;
+use rlarch::metrics::Registry;
+use rlarch::runtime::{Backend, MockModel, ModelDims, XlaServer};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn small_cfg() -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.env.name = "catch".into();
+    cfg.env.sticky_action_prob = 0.0;
+    cfg.actors.num_actors = 3;
+    cfg.learner.max_steps = 12;
+    cfg.learner.min_replay = 20;
+    cfg.learner.target_update_interval = 5;
+    cfg
+}
+
+#[test]
+fn seed_central_e2e_on_real_artifacts() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let cfg = small_cfg();
+    let (_server, handle) = XlaServer::spawn(&dir, None, true).unwrap();
+    let report =
+        coordinator::run(&cfg, Backend::Xla(handle), Registry::new()).unwrap();
+    assert_eq!(report.learner.steps, 12);
+    assert!(report.learner.final_loss.is_finite());
+    assert!(report.env_steps > 100);
+    assert!(report.episodes > 0);
+    assert!(report.inference_batches > 0);
+    assert!(report.learner.target_syncs >= 2);
+}
+
+#[test]
+fn local_mode_e2e_on_real_artifacts() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut cfg = small_cfg();
+    cfg.mode = InferenceMode::Local;
+    cfg.actors.num_actors = 2;
+    cfg.learner.max_steps = 8;
+    let (_server, handle) = XlaServer::spawn(&dir, None, true).unwrap();
+    let report =
+        coordinator::run(&cfg, Backend::Xla(handle), Registry::new()).unwrap();
+    assert_eq!(report.learner.steps, 8);
+    assert_eq!(report.inference_batches, 0); // no batcher in local mode
+}
+
+#[test]
+fn metrics_are_consistent_with_report() {
+    // Mock backend: verify conservation between metrics and RunReport.
+    let mut cfg = small_cfg();
+    cfg.learner.max_steps = 20;
+    let dims = ModelDims {
+        obs_len: 400,
+        hidden: 16,
+        num_actions: 4,
+        seq_len: cfg.learner.seq_len(),
+        train_batch: cfg.learner.train_batch,
+    };
+    let metrics = Registry::new();
+    let report = coordinator::run(
+        &cfg,
+        Backend::Mock(Arc::new(MockModel::new(dims, 4))),
+        metrics.clone(),
+    )
+    .unwrap();
+    let snap = metrics.snapshot();
+    assert_eq!(snap["actor.env_steps"] as u64, report.env_steps);
+    assert_eq!(snap["learner.steps"] as u64, report.learner.steps);
+    // Every batched item belongs to some actor request.
+    assert_eq!(snap["batcher.items"] as u64 > 0, true);
+    assert!(snap["batcher.items"] <= snap["actor.env_steps"] + 1.0);
+}
+
+#[test]
+fn degenerate_configs_still_terminate() {
+    // 1 actor, batch window tiny, learner wants more data than one actor
+    // produces quickly: must still converge and shut down.
+    let mut cfg = small_cfg();
+    cfg.actors.num_actors = 1;
+    cfg.batcher.timeout_us = 1;
+    cfg.learner.max_steps = 3;
+    cfg.learner.min_replay = 16;
+    let dims = ModelDims {
+        obs_len: 400,
+        hidden: 8,
+        num_actions: 4,
+        seq_len: cfg.learner.seq_len(),
+        train_batch: cfg.learner.train_batch,
+    };
+    let report = coordinator::run(
+        &cfg,
+        Backend::Mock(Arc::new(MockModel::new(dims, 5))),
+        Registry::new(),
+    )
+    .unwrap();
+    assert_eq!(report.learner.steps, 3);
+}
+
+#[test]
+fn all_registered_envs_run_e2e_with_mock() {
+    for env in rlarch::env::registered_envs() {
+        let mut cfg = small_cfg();
+        cfg.env.name = env.to_string();
+        cfg.learner.max_steps = 5;
+        let dims = ModelDims {
+            obs_len: 400,
+            hidden: 8,
+            num_actions: 4,
+            seq_len: cfg.learner.seq_len(),
+            train_batch: cfg.learner.train_batch,
+        };
+        let report = coordinator::run(
+            &cfg,
+            Backend::Mock(Arc::new(MockModel::new(dims, 6))),
+            Registry::new(),
+        )
+        .unwrap();
+        assert_eq!(report.learner.steps, 5, "env {env}");
+        assert!(report.env_steps > 0, "env {env}");
+    }
+}

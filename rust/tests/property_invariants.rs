@@ -1,0 +1,186 @@
+//! Cross-module property tests (the in-repo quickcheck framework):
+//! batching, replay, sequence slicing, scheduler conservation, and the
+//! Rust/loss-layer math mirrors.
+
+use rlarch::config::CpuModelConfig;
+use rlarch::replay::{ReplayConfig, SequenceReplay, SumTree};
+use rlarch::rl::{Sequence, SequenceBuilder, Transition};
+use rlarch::simarch::CpuModel;
+use rlarch::util::prng::Pcg32;
+use rlarch::util::quickcheck::{forall, prop_assert, prop_close};
+
+#[test]
+fn prop_sumtree_total_equals_leaf_sum_under_any_op_sequence() {
+    forall(150, |g| {
+        let cap = g.usize(1..128);
+        let mut t = SumTree::new(cap);
+        let mut shadow = vec![0.0f64; t.capacity()];
+        for _ in 0..g.usize(0..256) {
+            let i = g.usize(0..t.capacity());
+            let p = g.f64(0.0..5.0);
+            t.set(i, p);
+            shadow[i] = p;
+        }
+        prop_close(t.total(), shadow.iter().sum(), 1e-9)
+    });
+}
+
+#[test]
+fn prop_replay_sampled_slots_always_hold_sequences() {
+    forall(60, |g| {
+        let cap = g.usize(4..64);
+        let r = SequenceReplay::new(ReplayConfig {
+            capacity: cap,
+            alpha: g.f64(0.0..1.0),
+            min_priority: 1e-3,
+        });
+        let n_add = g.usize(1..200);
+        for i in 0..n_add {
+            r.add(Sequence {
+                obs: vec![i as f32; 4],
+                actions: vec![0; 2],
+                rewards: vec![0.0; 2],
+                discounts: vec![0.9; 2],
+                h0: vec![0.0; 2],
+                c0: vec![0.0; 2],
+                actor_id: 0,
+                valid_len: 2,
+            });
+        }
+        let batch = g.usize(1..8).min(r.len());
+        if batch == 0 {
+            return Ok(());
+        }
+        let mut rng = Pcg32::seeded(g.u64(0..u64::MAX - 1));
+        if let Some(s) = r.sample(batch, &mut rng) {
+            prop_assert(s.sequences.len() == batch, "batch size")?;
+            // Update with arbitrary priorities never panics / corrupts.
+            let prios: Vec<f32> =
+                (0..batch).map(|_| g.f64(0.0..100.0) as f32).collect();
+            r.update_priorities(&s.slots, &prios);
+            let mut rng2 = Pcg32::seeded(1);
+            prop_assert(r.sample(batch, &mut rng2).is_some(), "resample")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sequence_builder_conserves_transitions() {
+    // Every non-overlap transition appears in exactly one emitted
+    // sequence; overlap transitions appear in at most two.
+    forall(80, |g| {
+        let seq_len = g.usize(2..12);
+        let overlap = g.usize(0..seq_len);
+        let mut b = SequenceBuilder::new(seq_len, overlap, 1, 1, 0);
+        let n = g.usize(1..300);
+        let mut emitted: Vec<Sequence> = Vec::new();
+        for i in 0..n {
+            let terminal = g.chance(0.05);
+            if let Some(s) = b.push(Transition {
+                obs: vec![i as f32],
+                action: i as i32,
+                reward: 0.0,
+                discount: if terminal { 0.0 } else { 0.9 },
+                h: vec![0.0],
+                c: vec![0.0],
+            }) {
+                emitted.push(s);
+            }
+        }
+        if let Some(s) = b.flush() {
+            emitted.push(s);
+        }
+        // Count appearances of each step index across valid regions.
+        let mut counts = vec![0u32; n];
+        for s in &emitted {
+            for k in 0..s.valid_len {
+                counts[s.actions[k] as usize] += 1;
+            }
+        }
+        // A transition can appear in ceil(seq_len / stride) consecutive
+        // sequences (stride = seq_len - overlap), +1 for a terminal flush.
+        let stride = seq_len - overlap;
+        let max_dup = (seq_len.div_ceil(stride) + 1) as u32;
+        for (i, c) in counts.iter().enumerate() {
+            prop_assert(*c >= 1, &format!("transition {i} lost"))?;
+            prop_assert(
+                *c <= max_dup,
+                &format!("transition {i} appeared {c}x (max {max_dup})"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cpu_capacity_monotone_and_bounded() {
+    forall(100, |g| {
+        let threads = g.usize(2..256) & !1; // even
+        let m = CpuModel::new(CpuModelConfig {
+            hw_threads: threads,
+            ..Default::default()
+        });
+        let a = g.usize(1..512);
+        let b = a + g.usize(1..64);
+        let ca = m.capacity(a);
+        let cb = m.capacity(b);
+        // Monotone up to hw_threads; never exceeds SMT-peak.
+        if b <= threads {
+            prop_assert(cb >= ca - 1e-9, "capacity must grow with actors")?;
+        }
+        let peak = (threads / 2) as f64 * 2.0 * 0.65;
+        prop_assert(ca <= peak + 1e-9, "capacity above SMT peak")?;
+        prop_assert(ca > 0.0, "capacity positive")
+    });
+}
+
+#[test]
+fn prop_value_rescale_mirrors_are_inverse_and_monotone() {
+    forall(200, |g| {
+        let x = g.f64(-1e5..1e5);
+        let y = rlarch::rl::value_rescale(x, 1e-3);
+        prop_close(rlarch::rl::value_rescale_inv(y, 1e-3), x, 1e-6)?;
+        let x2 = x + g.f64(0.001..10.0);
+        let y2 = rlarch::rl::value_rescale(x2, 1e-3);
+        prop_assert(y2 > y, "monotone")
+    });
+}
+
+#[test]
+fn prop_epsilon_greedy_distribution_bounds() {
+    forall(40, |g| {
+        let eps = g.f64(0.0..1.0);
+        let q = vec![0.0f32, 1.0, 0.0];
+        let mut rng = Pcg32::seeded(g.u64(0..u64::MAX - 1));
+        let n = 4000;
+        let greedy_hits = (0..n)
+            .filter(|_| rlarch::rl::epsilon_greedy(&q, eps, &mut rng) == 1)
+            .count() as f64
+            / n as f64;
+        // Greedy action frequency = (1 - eps) + eps/|A|, within noise.
+        let expect = (1.0 - eps) + eps / 3.0;
+        prop_close(greedy_hits, expect, 0.1)
+    });
+}
+
+#[test]
+fn prop_gpu_idealization_never_slows_a_trace() {
+    use rlarch::simarch::{synthetic_train_trace, GpuModel, Idealize};
+    forall(60, |g| {
+        let gpu = GpuModel::new(rlarch::config::GpuModelConfig::default());
+        let trace = synthetic_train_trace(g.u64(0..1 << 32), g.usize(1..12),
+                                          g.usize(1..128));
+        let t0 = gpu.trace_time(&trace, Idealize::NONE);
+        for ideal in [
+            Idealize { dram_bw: true, ..Idealize::NONE },
+            Idealize { dram_bw: true, dram_latency: true, ..Idealize::NONE },
+            Idealize::ALL,
+        ] {
+            let ti = gpu.trace_time(&trace, ideal);
+            prop_assert(ti <= t0 * (1.0 + 1e-9), "idealization slowed trace")?;
+            prop_assert(ti > 0.0, "time must stay positive")?;
+        }
+        Ok(())
+    });
+}

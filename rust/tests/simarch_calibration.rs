@@ -1,0 +1,169 @@
+//! Calibration: the simulator, fed the REAL kernel traces extracted from
+//! our R2D2 graphs (`make artifacts`), must reproduce the *shape* of the
+//! paper's Figures 2-4. Absolute numbers differ (their testbed, their
+//! TF build); who-wins/by-roughly-what-factor must hold. Bands below are
+//! centered on the paper's reported values:
+//!   Fig. 2: Math 57%, SM-util 15%, DRAM-BW 12% (rest latency/L2 ~16%)
+//!   Fig. 3: 4->40 actors = 5.8x; 40->256 = 2x more
+//!   Fig. 4: 80->40 SMs = 6% slowdown; 2 SMs = severe
+//! Skipped when artifacts are absent.
+
+use rlarch::simarch::{default_system, GpuModel, TraceSet};
+use std::path::{Path, PathBuf};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("kernel_trace.json").exists().then_some(dir)
+}
+
+macro_rules! require {
+    () => {
+        match artifacts() {
+            Some(d) => TraceSet::load(&d).unwrap(),
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+fn system(ts: &TraceSet) -> rlarch::simarch::SystemModel {
+    default_system(
+        ts.find("infer_paper_scale").expect("infer trace").clone(),
+        ts.find("train_paper_scale").expect("train trace").clone(),
+    )
+}
+
+#[test]
+fn fig2_breakdown_shape_on_real_trace() {
+    let ts = require!();
+    let gpu = GpuModel::new(rlarch::config::GpuModelConfig::default());
+    let b = gpu.breakdown(ts.find("train_paper_scale").unwrap());
+    let sum = b.math + b.sm_util + b.dram_bw + b.dram_latency + b.l2;
+    assert!((sum - 1.0).abs() < 1e-9);
+    // Math is the dominant component (paper: 57%).
+    assert!(
+        (0.40..=0.70).contains(&b.math),
+        "math share {} outside band",
+        b.math
+    );
+    // SM utilization is the second-largest (paper: 15%).
+    assert!(
+        (0.08..=0.35).contains(&b.sm_util),
+        "sm_util share {}",
+        b.sm_util
+    );
+    // DRAM bandwidth visible but not dominant (paper: 12%).
+    assert!(
+        (0.03..=0.20).contains(&b.dram_bw),
+        "dram_bw share {}",
+        b.dram_bw
+    );
+    // Paper's headline: < 2x total headroom from GPU uarch idealization.
+    assert!(
+        b.math > 0.5 - 0.15,
+        "non-math headroom must stay under ~2x (math {})",
+        b.math
+    );
+}
+
+#[test]
+fn fig3_actor_sweep_shape_on_real_trace() {
+    let ts = require!();
+    let m = system(&ts);
+    let r4 = m.steady_state(4).env_rate;
+    let r40 = m.steady_state(40).env_rate;
+    let r256 = m.steady_state(256).env_rate;
+    let up = r40 / r4;
+    let beyond = r256 / r40;
+    assert!((3.0..=12.0).contains(&up), "4->40 speedup {up} (paper 5.8)");
+    assert!(
+        (1.2..=4.0).contains(&beyond),
+        "40->256 speedup {beyond} (paper 2.0)"
+    );
+    assert!(up > beyond, "knee at the HW-thread count must exist");
+}
+
+#[test]
+fn fig3_power_story_on_real_trace() {
+    let ts = require!();
+    let m = system(&ts);
+    let pts: Vec<_> = [4usize, 16, 40, 128, 256]
+        .iter()
+        .map(|&n| m.steady_state(n))
+        .collect();
+    // GPU power rises with actors; floor near idle (70 W).
+    for w in pts.windows(2) {
+        assert!(w[1].power_w >= w[0].power_w - 1e-9);
+    }
+    assert!(pts[0].power_w >= 70.0 && pts[0].power_w < 200.0);
+    // Perf/W improves monotonically (paper's efficiency observation).
+    for w in pts.windows(2) {
+        assert!(
+            w[1].perf_per_watt >= w[0].perf_per_watt * 0.999,
+            "perf/W must not degrade: {} -> {}",
+            w[0].perf_per_watt,
+            w[1].perf_per_watt
+        );
+    }
+}
+
+#[test]
+fn fig4_sm_sweep_shape_on_real_trace() {
+    let ts = require!();
+    let m = system(&ts);
+    let base = m.steady_state(40).env_rate;
+    let slow = |sms: usize| base / m.with_sms(sms).steady_state(40).env_rate;
+    let s40 = slow(40);
+    let s2 = slow(2);
+    // Paper: halving SMs costs only ~6% (we allow up to 15%).
+    assert!(s40 < 1.15, "80->40 SMs slowdown {s40} (paper 1.06)");
+    // Monotone degradation, severe at 2 SMs.
+    let mut prev = 1.0;
+    for sms in [60, 40, 20, 10, 4, 2] {
+        let s = slow(sms);
+        assert!(s >= prev * 0.99, "non-monotone at {sms} SMs");
+        prev = s;
+    }
+    assert!(s2 > 3.0, "2 SMs slowdown {s2} must be severe");
+}
+
+#[test]
+fn cpu_gpu_ratio_conclusions() {
+    let ts = require!();
+    let m = system(&ts);
+    // DGX-1 slice: 40 threads / 80 SMs = 1/2.
+    assert!((m.cpu_gpu_ratio() - 0.5).abs() < 1e-12);
+    // The paper's conclusion: ratio >= 1 wastes little GPU. Compare a
+    // ratio-1 system (40 SMs) against baseline at a saturating actor
+    // count: throughput within 15%, but energy per step improves because
+    // SM power is gated.
+    let n = 40;
+    let base = m.steady_state(n);
+    let ratio1 = m.with_sms(40).steady_state(n);
+    assert!(ratio1.env_rate > 0.85 * base.env_rate);
+    let energy_base = base.power_w / base.env_rate;
+    let energy_r1 = ratio1.power_w / ratio1.env_rate;
+    assert!(
+        energy_r1 < energy_base,
+        "ratio-1 system should cost less energy/step: {energy_r1} vs {energy_base}"
+    );
+}
+
+#[test]
+fn des_validates_analytic_on_real_trace() {
+    let ts = require!();
+    let m = system(&ts);
+    for n in [8usize, 64] {
+        let des = rlarch::simarch::des::simulate(&m, n, 0.4, 20e-6);
+        let ana = m.steady_state(n);
+        let ratio = des.env_rate / ana.env_rate;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "n={n}: DES {} vs analytic {} differ structurally",
+            des.env_rate,
+            ana.env_rate
+        );
+    }
+}
