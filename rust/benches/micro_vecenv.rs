@@ -1,0 +1,81 @@
+//! Micro-bench: the vectorized environment engine.
+//!
+//! Measures aggregate env-steps/sec of one `VecEnv` as the slot count E
+//! grows (the engine's scaling curve on a single thread), and compares
+//! a 1-slot `VecEnv` against the bare `Wrapped` single-env path to show
+//! the engine adds no per-step overhead at E = 1.
+
+use rlarch::config::EnvConfig;
+use rlarch::env::wrappers::Wrapped;
+use rlarch::report::figure::Table;
+use rlarch::report::write_csv;
+use rlarch::util::prng::Pcg32;
+use rlarch::vecenv::VecEnv;
+use std::time::Instant;
+
+fn main() {
+    println!("# micro_vecenv — vectorized environment engine step rates\n");
+    let cfg = EnvConfig {
+        name: "catch".into(),
+        step_cost_us: 0,
+        ..Default::default()
+    };
+
+    // Baseline: the single-env Wrapped path.
+    let steps = 100_000usize;
+    let mut w = Wrapped::from_config(&cfg, 1).unwrap();
+    let mut obs = vec![0.0f32; w.obs_len()];
+    let mut rng = Pcg32::seeded(3);
+    w.reset(&mut obs);
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        w.step(rng.index(4), &mut obs);
+    }
+    let wrapped_rate = steps as f64 / t0.elapsed().as_secs_f64();
+    println!("single `Wrapped` baseline: {wrapped_rate:.0} env-steps/s\n");
+
+    // VecEnv over the envs_per_actor sweep: total env steps per second
+    // of one engine (one thread) as slots scale.
+    let mut t = Table::new(&[
+        "envs_per_actor",
+        "env steps/s",
+        "vs E=1",
+        "steps/s per env",
+    ]);
+    let mut csv = String::from("envs_per_actor,steps_per_sec,per_env\n");
+    let mut base_rate = 0.0f64;
+    for e in [1usize, 2, 4, 8, 16, 32, 64] {
+        let mut venv = VecEnv::from_config(&cfg, e, 1).unwrap();
+        let mut obs = venv.new_obs_batch();
+        let mut actions = vec![0usize; e];
+        let mut rng = Pcg32::seeded(7);
+        venv.reset_all(&mut obs);
+        let rounds = (200_000 / e).max(500);
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            for a in actions.iter_mut() {
+                *a = rng.index(4);
+            }
+            venv.step_all(&actions, &mut obs);
+        }
+        let rate = (rounds * e) as f64 / t0.elapsed().as_secs_f64();
+        if e == 1 {
+            base_rate = rate;
+        }
+        t.row(&[
+            e.to_string(),
+            format!("{rate:.0}"),
+            format!("{:.2}x", rate / base_rate),
+            format!("{:.0}", rate / e as f64),
+        ]);
+        csv.push_str(&format!("{e},{rate},{}\n", rate / e as f64));
+    }
+    println!("{}", t.to_markdown());
+    println!(
+        "E=1 engine vs bare Wrapped: {:.2}x (≈1.0 means the vecenv layer \
+         is overhead-free at the seed topology)",
+        base_rate / wrapped_rate
+    );
+    let p = write_csv("micro_vecenv", &csv);
+    println!("csv: {}", p.display());
+}

@@ -9,11 +9,20 @@
 
 use crate::util::json::Value;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum TomlError {
-    #[error("line {0}: {1}")]
     Syntax(usize, String),
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TomlError::Syntax(line, msg) => write!(f, "line {line}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 pub fn parse(text: &str) -> Result<Value, TomlError> {
     let mut root: Vec<(String, Value)> = Vec::new();
@@ -61,6 +70,43 @@ pub fn parse(text: &str) -> Result<Value, TomlError> {
         insert(&mut root, &current_path, key, value, lineno + 1)?;
     }
     Ok(Value::Obj(root))
+}
+
+/// Check a parsed config tree against a flat schema: `top` lists the
+/// scalar keys allowed at the top level, `sections` maps each allowed
+/// `[section]` to its allowed keys. Unknown keys are rejected instead of
+/// silently ignored (a misspelt knob must not silently fall back to its
+/// default). Returns the first offending key as a descriptive error.
+pub fn check_known_keys(
+    v: &Value,
+    top: &[&str],
+    sections: &[(&str, &[&str])],
+) -> Result<(), String> {
+    let Value::Obj(kvs) = v else { return Ok(()) };
+    for (key, val) in kvs {
+        if top.contains(&key.as_str()) {
+            continue;
+        }
+        let Some((section, allowed)) =
+            sections.iter().find(|(s, _)| s == key)
+        else {
+            return Err(format!(
+                "unknown key `{key}` at the top level (sections: {:?})",
+                sections.iter().map(|(s, _)| *s).collect::<Vec<_>>()
+            ));
+        };
+        let Value::Obj(inner) = val else {
+            return Err(format!("`{section}` must be a [{section}] table"));
+        };
+        for (ik, _) in inner {
+            if !allowed.contains(&ik.as_str()) {
+                return Err(format!(
+                    "unknown key `{ik}` in section `{section}`"
+                ));
+            }
+        }
+    }
+    Ok(())
 }
 
 fn strip_comment(line: &str) -> &str {

@@ -5,11 +5,20 @@
 
 use crate::util::json::Value;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("config: {0}")]
     Invalid(String),
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Invalid(msg) => write!(f, "config: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 fn get_f64(v: &Value, path: &str, default: f64) -> f64 {
     v.path(path).and_then(|x| x.as_f64()).unwrap_or(default)
@@ -144,7 +153,13 @@ impl BatcherConfig {
 #[derive(Clone, Debug, PartialEq)]
 pub struct ActorConfig {
     pub num_actors: usize,
+    /// Environments driven in lockstep by each actor thread (the vecenv
+    /// knob). 1 = the paper's one-env-per-thread baseline; larger values
+    /// raise environments-in-flight without consuming more CPU threads.
+    pub envs_per_actor: usize,
     /// Ape-X/R2D2 per-actor epsilon: eps_i = base^(1 + i/(N-1) * alpha).
+    /// With vecenv the schedule spans all num_actors * envs_per_actor
+    /// environment slots.
     pub epsilon_base: f64,
     pub epsilon_alpha: f64,
     /// Evaluation actors use epsilon 0 (not used in training flow).
@@ -155,6 +170,7 @@ impl Default for ActorConfig {
     fn default() -> Self {
         Self {
             num_actors: 8,
+            envs_per_actor: 1,
             epsilon_base: 0.4,
             epsilon_alpha: 7.0,
             num_eval_actors: 0,
@@ -167,6 +183,7 @@ impl ActorConfig {
         let d = Self::default();
         Self {
             num_actors: get_usize(v, "actors.num_actors", d.num_actors),
+            envs_per_actor: get_usize(v, "actors.envs_per_actor", d.envs_per_actor),
             epsilon_base: get_f64(v, "actors.epsilon_base", d.epsilon_base),
             epsilon_alpha: get_f64(v, "actors.epsilon_alpha", d.epsilon_alpha),
             num_eval_actors: get_usize(
@@ -175,6 +192,11 @@ impl ActorConfig {
                 d.num_eval_actors,
             ),
         }
+    }
+
+    /// Environment slots across the whole pool.
+    pub fn total_envs(&self) -> usize {
+        self.num_actors * self.envs_per_actor
     }
 }
 
@@ -469,8 +491,82 @@ impl Default for SystemConfig {
     }
 }
 
+/// Scalar keys allowed at the top level of a config file.
+const TOP_LEVEL_KEYS: &[&str] = &["run_name", "seed", "mode", "artifacts_dir"];
+
+/// Allowed `[section]` tables and their keys. `from_value` rejects
+/// anything outside this schema so typos surface as errors instead of
+/// silently falling back to defaults.
+const SECTION_KEYS: &[(&str, &[&str])] = &[
+    (
+        "env",
+        &[
+            "name",
+            "frame_stack",
+            "sticky_action_prob",
+            "max_episode_len",
+            "step_cost_us",
+            "seed",
+        ],
+    ),
+    (
+        "actors",
+        &[
+            "num_actors",
+            "envs_per_actor",
+            "epsilon_base",
+            "epsilon_alpha",
+            "num_eval_actors",
+        ],
+    ),
+    ("batcher", &["max_batch", "timeout_us", "batch_sizes"]),
+    (
+        "learner",
+        &[
+            "train_batch",
+            "replay_capacity",
+            "min_replay",
+            "target_update_interval",
+            "priority_exponent",
+            "max_steps",
+            "burn_in",
+            "unroll_len",
+            "seq_overlap",
+            "gamma",
+            "n_step",
+        ],
+    ),
+    (
+        "gpu",
+        &[
+            "num_sms",
+            "clock_ghz",
+            "flops_per_sm_clk",
+            "dram_bw_gbps",
+            "dram_latency_ns",
+            "l2_bytes",
+            "l2_bw_gbps",
+            "launch_overhead_us",
+            "threads_per_sm",
+        ],
+    ),
+    (
+        "cpu",
+        &[
+            "hw_threads",
+            "env_step_us",
+            "actor_overhead_us",
+            "ctx_switch_us",
+            "smt_efficiency",
+        ],
+    ),
+    ("power", &["idle_w", "max_w", "sm_dynamic_frac", "util_exponent"]),
+];
+
 impl SystemConfig {
     pub fn from_value(v: &Value) -> Result<Self, ConfigError> {
+        super::toml::check_known_keys(v, TOP_LEVEL_KEYS, SECTION_KEYS)
+            .map_err(ConfigError::Invalid)?;
         let d = Self::default();
         let mode = match get_str(v, "mode", "central").as_str() {
             "central" => InferenceMode::Central,
@@ -509,6 +605,11 @@ impl SystemConfig {
         self.learner.validate()?;
         if self.actors.num_actors == 0 {
             return Err(ConfigError::Invalid("num_actors must be > 0".into()));
+        }
+        if self.actors.envs_per_actor == 0 {
+            return Err(ConfigError::Invalid(
+                "envs_per_actor must be > 0".into(),
+            ));
         }
         if self.gpu.num_sms == 0 || self.cpu.hw_threads == 0 {
             return Err(ConfigError::Invalid(
@@ -572,6 +673,41 @@ hw_threads = 40
         assert!(SystemConfig::from_toml("[env]\nsticky_action_prob = 1.5\n")
             .is_err());
         assert!(SystemConfig::from_toml("[actors]\nnum_actors = 0\n").is_err());
+        assert!(
+            SystemConfig::from_toml("[actors]\nenvs_per_actor = 0\n").is_err()
+        );
+    }
+
+    #[test]
+    fn parses_envs_per_actor() {
+        let cfg = SystemConfig::from_toml("[actors]\nenvs_per_actor = 8\n")
+            .unwrap();
+        assert_eq!(cfg.actors.envs_per_actor, 8);
+        assert_eq!(cfg.actors.total_envs(), 8 * cfg.actors.num_actors);
+        assert_eq!(SystemConfig::default().actors.envs_per_actor, 1);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_with_section_context() {
+        let err = SystemConfig::from_toml("[env]\nsticky_prob = 0.3\n")
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("unknown key `sticky_prob` in section `env`"),
+            "got: {err}"
+        );
+        let err = SystemConfig::from_toml("sede = 3\n").unwrap_err().to_string();
+        assert!(err.contains("unknown key `sede`"), "got: {err}");
+        let err = SystemConfig::from_toml("[actor]\nnum_actors = 4\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown key `actor`"), "got: {err}");
+        // Every documented key parses cleanly.
+        SystemConfig::from_toml(
+            "[actors]\nnum_actors = 2\nenvs_per_actor = 4\n\
+             [batcher]\nmax_batch = 8\nbatch_sizes = [1, 8]\n",
+        )
+        .unwrap();
     }
 
     #[test]

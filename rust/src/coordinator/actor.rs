@@ -1,28 +1,32 @@
 //! Actor threads: environment interaction (the CPU side of the paper).
 //!
-//! Each actor owns one wrapped environment and its recurrent state. In
-//! central mode (SEED) the actor's policy step is a blocking round-trip
-//! through the inference batcher; in local mode (IMPALA baseline) the
-//! actor calls the backend directly with a batch of 1, modelling
-//! actor-side inference. Completed sequences flow into the shared
-//! prioritized replay.
+//! Each actor thread owns a [`VecEnv`] driving `envs_per_actor`
+//! environment slots in lockstep, plus one recurrent state and one
+//! trajectory builder per slot. In central mode (SEED) the policy step
+//! submits all E observations to the inference batcher in one shot and
+//! waits for the routed replies; in local mode (IMPALA baseline) the
+//! actor calls the backend directly with a batch of E. Completed
+//! sequences flow into the shared prioritized replay.
+//!
+//! With `envs_per_actor = 1` this is exactly the seed's single-env actor
+//! loop: same seeds, same RNG streams, same submission pattern.
 
 use super::batcher::BatcherHandle;
 use crate::config::SystemConfig;
-use crate::env::wrappers::Wrapped;
 use crate::exec::ShutdownToken;
 use crate::metrics::Registry;
 use crate::replay::SequenceReplay;
 use crate::rl::{actor_epsilon, epsilon_greedy, SequenceBuilder, Transition};
 use crate::runtime::{Backend, InferRequest, ModelDims};
 use crate::util::prng::Pcg32;
+use crate::vecenv::VecEnv;
 use std::sync::Arc;
 
-/// How an actor obtains q-values for an observation.
+/// How an actor obtains q-values for its observations.
 pub enum PolicyPath {
     /// SEED: round-trip through the central inference batcher.
     Central(BatcherHandle),
-    /// IMPALA baseline: direct per-actor inference (batch of 1).
+    /// IMPALA baseline: direct per-actor inference (batch of E).
     Local(Backend),
 }
 
@@ -40,9 +44,12 @@ pub struct ActorArgs {
 #[derive(Clone, Debug, Default)]
 pub struct ActorStats {
     pub id: usize,
+    /// Environment slots this actor drove.
+    pub envs: usize,
     pub env_steps: u64,
     pub episodes: u64,
     pub mean_return: f64,
+    /// Mean epsilon across this actor's slots.
     pub epsilon: f64,
 }
 
@@ -58,27 +65,45 @@ pub fn run_actor(args: ActorArgs) -> anyhow::Result<ActorStats> {
         shutdown,
     } = args;
 
-    let mut env = Wrapped::from_config(&cfg.env, id as u64 + 1)?;
+    let e = cfg.actors.envs_per_actor.max(1);
+    let total_slots = cfg.actors.num_actors * e;
+    // Slot seeds continue the seed layout of the single-env design:
+    // actor `id` at E = 1 used instance seed `id + 1`; slot `s` of actor
+    // `id` uses `id * E + s + 1`.
+    let mut venv = VecEnv::from_config(&cfg.env, e, (id * e) as u64 + 1)?;
     anyhow::ensure!(
-        env.obs_len() == dims.obs_len,
+        venv.obs_len() == dims.obs_len,
         "env obs_len {} != model obs_len {} (frame_stack vs obs_channels?)",
-        env.obs_len(),
+        venv.obs_len(),
         dims.obs_len
     );
-    let epsilon = actor_epsilon(
-        id,
-        cfg.actors.num_actors,
-        cfg.actors.epsilon_base,
-        cfg.actors.epsilon_alpha,
-    );
-    let mut rng = Pcg32::seeded(cfg.seed ^ (0xAC70 + id as u64));
-    let mut builder = SequenceBuilder::new(
-        cfg.learner.seq_len(),
-        cfg.learner.seq_overlap,
-        dims.obs_len,
-        dims.hidden,
-        id,
-    );
+
+    // Per-slot exploration spectrum over ALL environment slots in the
+    // pool, so E envs on one thread explore like E distinct actors.
+    let epsilons: Vec<f64> = (0..e)
+        .map(|s| {
+            actor_epsilon(
+                id * e + s,
+                total_slots,
+                cfg.actors.epsilon_base,
+                cfg.actors.epsilon_alpha,
+            )
+        })
+        .collect();
+    let mut rngs: Vec<Pcg32> = (0..e)
+        .map(|s| Pcg32::seeded(cfg.seed ^ (0xAC70 + (id * e + s) as u64)))
+        .collect();
+    let mut builders: Vec<SequenceBuilder> = (0..e)
+        .map(|s| {
+            SequenceBuilder::new(
+                cfg.learner.seq_len(),
+                cfg.learner.seq_overlap,
+                dims.obs_len,
+                dims.hidden,
+                id * e + s,
+            )
+        })
+        .collect();
 
     let steps = metrics.counter("actor.env_steps");
     let episodes_c = metrics.counter("actor.episodes");
@@ -86,94 +111,130 @@ pub fn run_actor(args: ActorArgs) -> anyhow::Result<ActorStats> {
     let step_time = metrics.timer("actor.step_seconds");
     let return_gauge = metrics.gauge("actor.last_return");
 
-    let mut obs = vec![0.0f32; dims.obs_len];
-    let mut h = vec![0.0f32; dims.hidden];
-    let mut c = vec![0.0f32; dims.hidden];
-    env.reset(&mut obs);
+    // Contiguous [E, S, S, K] observation slab and [E, hidden] recurrent
+    // state slabs: slot rows map 1:1 onto inference-batch rows.
+    let mut obs = venv.new_obs_batch();
+    let mut h = vec![0.0f32; e * dims.hidden];
+    let mut c = vec![0.0f32; e * dims.hidden];
+    venv.reset_all(&mut obs);
 
+    let mut actions = vec![0usize; e];
     let mut return_sum = 0.0f64;
     let mut return_count = 0u64;
 
-    while !shutdown.is_signalled() {
+    'run: while !shutdown.is_signalled() {
         let t0 = std::time::Instant::now();
-        // Policy step: obtain q and next recurrent state.
-        let (q, h2, c2) = match &path {
+        // Policy step: obtain q and next recurrent state for every slot.
+        let replies = match &path {
             PolicyPath::Central(handle) => {
-                match handle.infer(id, obs.clone(), h.clone(), c.clone()) {
-                    Ok(r) => (r.q, r.h, r.c),
-                    Err(_) => break, // batcher shut down
+                match handle.infer_many(id, e, &obs, &h, &c) {
+                    Ok(rs) => rs,
+                    Err(_) => break 'run, // batcher shut down
                 }
             }
             PolicyPath::Local(backend) => {
-                let r = backend.infer(InferRequest {
-                    n: 1,
-                    h: h.clone(),
-                    c: c.clone(),
-                    obs: obs.clone(),
-                })?;
-                (r.q, r.h, r.c)
+                // One backend call can carry at most max_batch rows (the
+                // largest compiled AOT batch); E beyond that is served in
+                // ceil(E / max_batch) chunked calls.
+                let cap = cfg.batcher.max_batch.max(1);
+                let mut replies = Vec::with_capacity(e);
+                let mut start = 0usize;
+                while start < e {
+                    let n = cap.min(e - start);
+                    let r = backend.infer(InferRequest {
+                        n,
+                        h: h[start * dims.hidden..(start + n) * dims.hidden]
+                            .to_vec(),
+                        c: c[start * dims.hidden..(start + n) * dims.hidden]
+                            .to_vec(),
+                        obs: obs[start * dims.obs_len..(start + n) * dims.obs_len]
+                            .to_vec(),
+                    })?;
+                    for s in 0..n {
+                        replies.push(super::batcher::ActorReply {
+                            q: r.q[s * dims.num_actions..(s + 1) * dims.num_actions]
+                                .to_vec(),
+                            h: r.h[s * dims.hidden..(s + 1) * dims.hidden].to_vec(),
+                            c: r.c[s * dims.hidden..(s + 1) * dims.hidden].to_vec(),
+                        });
+                    }
+                    start += n;
+                }
+                replies
             }
         };
-        let action = epsilon_greedy(&q, epsilon, &mut rng);
+        for s in 0..e {
+            actions[s] = epsilon_greedy(&replies[s].q, epsilons[s], &mut rngs[s]);
+        }
 
-        // Environment step (the CPU-bound work the paper sweeps).
+        // Environment step (the CPU-bound work the paper sweeps): all E
+        // slots advance before the next inference round-trip.
         let prev_obs = obs.clone();
-        let step = env.step(action, &mut obs);
-        let discount = if step.done && !step.truncated {
-            0.0
-        } else {
-            cfg.learner.gamma as f32
-        };
+        let step_results = venv.step_all(&actions, &mut obs).to_vec();
 
-        if step.done {
-            episodes_c.inc();
-            return_gauge.set(env.last_return as f64);
-            return_sum += env.last_return as f64;
-            return_count += 1;
+        for s in 0..e {
+            let step = &step_results[s];
+            let discount = if step.done && !step.truncated {
+                0.0
+            } else {
+                cfg.learner.gamma as f32
+            };
+
+            if step.done {
+                episodes_c.inc();
+                let last = venv.slot(s).last_return as f64;
+                return_gauge.set(last);
+                return_sum += last;
+                return_count += 1;
+            }
+
+            // Record the transition with the pre-step state.
+            let row = s * dims.obs_len..(s + 1) * dims.obs_len;
+            let hrow = s * dims.hidden..(s + 1) * dims.hidden;
+            if let Some(seq) = builders[s].push(Transition {
+                obs: prev_obs[row].to_vec(),
+                action: actions[s] as i32,
+                reward: step.reward,
+                discount,
+                h: h[hrow.clone()].to_vec(),
+                c: c[hrow.clone()].to_vec(),
+            }) {
+                replay.add(seq);
+                seqs.inc();
+            }
+
+            // Advance recurrent state; reset it at episode boundaries.
+            if step.done {
+                h[hrow.clone()].fill(0.0);
+                c[hrow.clone()].fill(0.0);
+            } else {
+                h[hrow.clone()].copy_from_slice(&replies[s].h);
+                c[hrow].copy_from_slice(&replies[s].c);
+            }
         }
 
-        // Record the transition with the pre-step state.
-        let done = step.done;
-        if let Some(seq) = builder.push(Transition {
-            obs: prev_obs,
-            action: action as i32,
-            reward: step.reward,
-            discount,
-            h: h.clone(),
-            c: c.clone(),
-        }) {
-            replay.add(seq);
-            seqs.inc();
-        }
-
-        // Advance recurrent state; reset it at episode boundaries.
-        if done {
-            h.fill(0.0);
-            c.fill(0.0);
-        } else {
-            h = h2;
-            c = c2;
-        }
-
-        steps.inc();
+        steps.add(e as u64);
         step_time.record(t0.elapsed().as_secs_f64());
     }
 
-    if let Some(seq) = builder.flush() {
-        replay.add(seq);
-        seqs.inc();
+    for b in &mut builders {
+        if let Some(seq) = b.flush() {
+            replay.add(seq);
+            seqs.inc();
+        }
     }
 
     Ok(ActorStats {
         id,
-        env_steps: env.total_steps,
-        episodes: env.episodes_completed,
+        envs: e,
+        env_steps: venv.total_steps(),
+        episodes: venv.episodes_completed(),
         mean_return: if return_count > 0 {
             return_sum / return_count as f64
         } else {
             0.0
         },
-        epsilon,
+        epsilon: epsilons.iter().sum::<f64>() / e as f64,
     })
 }
 
@@ -202,9 +263,7 @@ mod tests {
         (cfg, dims)
     }
 
-    #[test]
-    fn local_actor_fills_replay_and_stops_on_shutdown() {
-        let (cfg, dims) = test_cfg();
+    fn run_local_for(cfg: SystemConfig, dims: ModelDims, ms: u64) -> (ActorStats, Arc<SequenceReplay>, Registry) {
         let replay = Arc::new(SequenceReplay::new(ReplayConfig {
             capacity: 256,
             ..Default::default()
@@ -230,14 +289,39 @@ mod tests {
                     .unwrap()
                 }
             });
-            std::thread::sleep(std::time::Duration::from_millis(150));
+            std::thread::sleep(std::time::Duration::from_millis(ms));
             shutdown.signal();
             h.join().unwrap()
         });
+        (stats, replay, metrics)
+    }
+
+    #[test]
+    fn local_actor_fills_replay_and_stops_on_shutdown() {
+        let (cfg, dims) = test_cfg();
+        let (stats, replay, metrics) = run_local_for(cfg, dims, 150);
+        assert_eq!(stats.envs, 1);
         assert!(stats.env_steps > 50, "steps {}", stats.env_steps);
         assert!(stats.episodes > 0);
         assert!(replay.len() > 0, "sequences should reach replay");
         assert!(metrics.counter("actor.sequences").get() > 0);
+    }
+
+    #[test]
+    fn multi_env_actor_steps_all_slots() {
+        let (mut cfg, dims) = test_cfg();
+        cfg.actors.envs_per_actor = 4;
+        let (stats, replay, metrics) = run_local_for(cfg, dims, 150);
+        assert_eq!(stats.envs, 4);
+        // All slots advance together: the step total is a multiple of 4.
+        assert_eq!(stats.env_steps % 4, 0);
+        assert!(stats.env_steps >= 200, "steps {}", stats.env_steps);
+        assert!(stats.episodes > 3, "episodes {}", stats.episodes);
+        assert!(replay.len() > 0);
+        assert_eq!(
+            metrics.counter("actor.env_steps").get(),
+            stats.env_steps
+        );
     }
 
     #[test]

@@ -63,6 +63,54 @@ impl BatcherHandle {
             .map_err(|_| anyhow::anyhow!("batcher gone"))?;
         rrx.recv().map_err(|_| anyhow::anyhow!("batcher dropped reply"))
     }
+
+    /// Submit `n` observation rows at once (a vecenv actor's whole slot
+    /// batch), then block until all `n` routed replies arrive; replies
+    /// come back in slot order. All rows enter the batcher back-to-back,
+    /// so one multi-env actor fills a GPU batch the way `n` single-env
+    /// actors would — without the n threads.
+    ///
+    /// `obs`, `h`, and `c` are `[n, obs_len]`, `[n, hidden]`,
+    /// `[n, hidden]` row-major slabs.
+    pub fn infer_many(
+        &self,
+        actor: usize,
+        n: usize,
+        obs: &[f32],
+        h: &[f32],
+        c: &[f32],
+    ) -> anyhow::Result<Vec<ActorReply>> {
+        anyhow::ensure!(n > 0, "infer_many with no rows");
+        anyhow::ensure!(
+            obs.len() % n == 0 && h.len() % n == 0 && c.len() % n == 0,
+            "row slabs must be divisible by n"
+        );
+        let obs_len = obs.len() / n;
+        let hidden = h.len() / n;
+        // Submit all rows before waiting on any reply: the rows must be
+        // in the batcher's queue together to coalesce into one batch.
+        let mut pending = Vec::with_capacity(n);
+        for i in 0..n {
+            let (rtx, rrx) = mpsc::channel();
+            self.tx
+                .send(InferItem {
+                    actor,
+                    obs: obs[i * obs_len..(i + 1) * obs_len].to_vec(),
+                    h: h[i * hidden..(i + 1) * hidden].to_vec(),
+                    c: c[i * hidden..(i + 1) * hidden].to_vec(),
+                    reply: rtx,
+                })
+                .map_err(|_| anyhow::anyhow!("batcher gone"))?;
+            pending.push(rrx);
+        }
+        pending
+            .into_iter()
+            .map(|rrx| {
+                rrx.recv()
+                    .map_err(|_| anyhow::anyhow!("batcher dropped reply"))
+            })
+            .collect()
+    }
 }
 
 /// The batcher thread. Exits when every `BatcherHandle` is dropped.
@@ -178,8 +226,8 @@ fn run_batcher(
             }
             Err(e) => {
                 // Inference failure: drop the replies; actors see a closed
-                // channel and shut down. Log once per batch.
-                log::error!("batcher inference failed: {e}");
+                // channel and shut down. Report once per batch.
+                eprintln!("batcher inference failed: {e}");
             }
         }
     }
@@ -263,6 +311,41 @@ mod tests {
         // Batching really happened (fewer batches than items).
         assert!(m.counter("batcher.batches").get() < 12);
         assert_eq!(m.counter("batcher.items").get(), 12);
+    }
+
+    #[test]
+    fn infer_many_routes_rows_in_slot_order_and_coalesces() {
+        let (backend, dims) = mock_backend();
+        let m = Registry::new();
+        let (batcher, handle) =
+            Batcher::spawn(cfg(8, 2_000), backend.clone(), m.clone());
+        let n = 5;
+        let mut obs = vec![0.0f32; n * dims.obs_len];
+        for i in 0..n {
+            obs[i * dims.obs_len..(i + 1) * dims.obs_len]
+                .fill(i as f32 / n as f32);
+        }
+        let h = vec![0.0f32; n * dims.hidden];
+        let c = vec![0.0f32; n * dims.hidden];
+        let replies = handle.infer_many(0, n, &obs, &h, &c).unwrap();
+        assert_eq!(replies.len(), n);
+        for (i, r) in replies.iter().enumerate() {
+            let direct = backend
+                .infer(InferRequest {
+                    n: 1,
+                    h: vec![0.0; dims.hidden],
+                    c: vec![0.0; dims.hidden],
+                    obs: vec![i as f32 / n as f32; dims.obs_len],
+                })
+                .unwrap();
+            assert_eq!(r.q, direct.q, "row {i} misrouted");
+        }
+        drop(handle);
+        batcher.join();
+        // All 5 rows entered together: they coalesce into 1-2 batches
+        // instead of 5 singleton calls.
+        assert_eq!(m.counter("batcher.items").get(), 5);
+        assert!(m.counter("batcher.batches").get() <= 2);
     }
 
     #[test]

@@ -40,11 +40,30 @@ pub struct RunReport {
     pub env_steps: u64,
     pub env_steps_per_sec: f64,
     pub episodes: u64,
-    /// Mean completed-episode return across actors (exploration included).
+    /// Environment slots in flight (num_actors * envs_per_actor).
+    pub total_envs: usize,
+    /// Mean completed-episode return across the whole pool (exploration
+    /// included), weighted by each actor's episode count so actors with
+    /// few episodes don't skew the aggregate.
     pub mean_return: f64,
     pub sequences: u64,
     pub inference_batches: u64,
     pub mean_batch_occupancy: f64,
+}
+
+/// Episode-weighted mean completed-episode return: each actor's mean
+/// counts once per episode behind it, so an actor that finished 2
+/// episodes cannot skew the aggregate the way one with 200 can.
+pub fn weighted_mean_return(stats: &[ActorStats]) -> f64 {
+    let episodes: u64 = stats.iter().map(|a| a.episodes).sum();
+    if episodes == 0 {
+        return 0.0;
+    }
+    let weighted: f64 = stats
+        .iter()
+        .map(|a| a.mean_return * a.episodes as f64)
+        .sum();
+    weighted / episodes as f64
 }
 
 /// Run the full system: actors + (batcher) + learner, until the learner
@@ -134,26 +153,18 @@ pub fn run(cfg: &SystemConfig, backend: Backend, metrics: Registry) -> anyhow::R
     let elapsed = t0.elapsed().as_secs_f64();
     let env_steps: u64 = actor_stats.iter().map(|a| a.env_steps).sum();
     let episodes: u64 = actor_stats.iter().map(|a| a.episodes).sum();
-    let returns: Vec<f64> = actor_stats
-        .iter()
-        .filter(|a| a.episodes > 0)
-        .map(|a| a.mean_return)
-        .collect();
     let batches = metrics.counter("batcher.batches").get();
     let items = metrics.counter("batcher.items").get();
 
     Ok(RunReport {
         learner: learner_stats,
-        actors: actor_stats,
         elapsed_seconds: elapsed,
         env_steps,
         env_steps_per_sec: env_steps as f64 / elapsed.max(1e-9),
         episodes,
-        mean_return: if returns.is_empty() {
-            0.0
-        } else {
-            returns.iter().sum::<f64>() / returns.len() as f64
-        },
+        total_envs: cfg.actors.total_envs(),
+        mean_return: weighted_mean_return(&actor_stats),
+        actors: actor_stats,
         sequences: replay.inserts(),
         inference_batches: batches,
         mean_batch_occupancy: if batches > 0 {
@@ -230,6 +241,48 @@ mod tests {
         let (mut cfg, backend) = mock_system(1, InferenceMode::Local);
         cfg.learner.unroll_len = 9; // seq_len 11 != dims 6
         assert!(run(&cfg, backend, Registry::new()).is_err());
+    }
+
+    #[test]
+    fn weighted_mean_return_weights_by_episode_count() {
+        let stats = vec![
+            ActorStats {
+                episodes: 1,
+                mean_return: 100.0,
+                ..Default::default()
+            },
+            ActorStats {
+                episodes: 99,
+                mean_return: 0.0,
+                ..Default::default()
+            },
+        ];
+        // Unweighted averaging would say 50; the lone-episode outlier
+        // must only contribute 1/100 of the weight.
+        assert!((weighted_mean_return(&stats) - 1.0).abs() < 1e-12);
+        assert_eq!(weighted_mean_return(&[]), 0.0);
+        assert_eq!(
+            weighted_mean_return(&[ActorStats::default()]),
+            0.0,
+            "zero-episode actors contribute nothing"
+        );
+    }
+
+    #[test]
+    fn vecenv_central_mode_end_to_end() {
+        let (mut cfg, backend) = mock_system(2, InferenceMode::Central);
+        cfg.actors.envs_per_actor = 4;
+        let report = run(&cfg, backend, Registry::new()).unwrap();
+        assert_eq!(report.learner.steps, 30);
+        assert_eq!(report.total_envs, 8);
+        assert!(report.env_steps > 0);
+        assert!(report.episodes > 0);
+        // 8 env slots behind 2 threads must still fill real batches.
+        assert!(
+            report.mean_batch_occupancy > 1.05,
+            "occupancy {}",
+            report.mean_batch_occupancy
+        );
     }
 
     #[test]

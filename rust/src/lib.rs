@@ -9,10 +9,19 @@
 //!
 //! Layer map:
 //! * [`coordinator`] — L3: actors, central inference batcher, learner.
+//!   Each actor thread drives a [`vecenv::VecEnv`]; the
+//!   `actors.envs_per_actor` knob sets how many environments ride on one
+//!   thread (1 = the paper's baseline topology).
+//! * [`vecenv`] — vectorized environment engine: E wrapped environments
+//!   stepped in lockstep behind one contiguous `[E, S, S, K]`
+//!   observation buffer, decoupling environments-in-flight from CPU
+//!   threads consumed (the CuLE-style lever on the paper's CPU/GPU
+//!   ratio; see DESIGN.md §4).
 //! * [`runtime`] — PJRT loading/execution of the AOT HLO artifacts.
 //! * [`env`], [`replay`], [`rl`] — RL substrates (ALE-like suite, R2D2
 //!   prioritized sequence replay, epsilon/return utilities).
-//! * [`simarch`] — the architectural simulator (GPU/CPU/power models).
+//! * [`simarch`] — the architectural simulator (GPU/CPU/power models);
+//!   its system model carries the same `envs_per_actor` axis.
 //! * [`util`], [`exec`], [`config`], [`cli`], [`metrics`], [`report`] —
 //!   dependency-free infrastructure (the offline crate set has no
 //!   tokio/serde/clap/criterion).
@@ -29,3 +38,4 @@ pub mod simarch;
 pub mod rl;
 pub mod runtime;
 pub mod util;
+pub mod vecenv;

@@ -53,6 +53,11 @@ fn load_config(parsed: &rlarch::cli::Parsed) -> anyhow::Result<SystemConfig> {
             cfg.actors.num_actors = n;
         }
     }
+    if let Ok(e) = parsed.get_usize("envs-per-actor") {
+        if e > 0 {
+            cfg.actors.envs_per_actor = e;
+        }
+    }
     if let Ok(k) = parsed.get_usize("steps") {
         if k > 0 {
             cfg.learner.max_steps = k;
@@ -72,6 +77,7 @@ fn cmd_train(args: &[String]) -> i32 {
     let cli = Cli::new("rlarch train", "run the SEED coordinator (real PJRT)")
         .flag("config", "", "TOML config path (default: built-in)")
         .flag("actors", "0", "override actor count")
+        .flag("envs-per-actor", "0", "override envs per actor thread (vecenv)")
         .flag("steps", "0", "override learner steps")
         .flag("env", "", "override env (grid_pong|breakout|catch|nav_maze)")
         .flag("mode", "central", "central (SEED) or local (IMPALA-style)")
@@ -90,8 +96,12 @@ fn cmd_train(args: &[String]) -> i32 {
         let backend = Backend::Xla(handle);
         let metrics = Registry::new();
         println!(
-            "rlarch train: env={} actors={} steps={} mode={:?}",
-            cfg.env.name, cfg.actors.num_actors, cfg.learner.max_steps, cfg.mode
+            "rlarch train: env={} actors={} envs/actor={} steps={} mode={:?}",
+            cfg.env.name,
+            cfg.actors.num_actors,
+            cfg.actors.envs_per_actor,
+            cfg.learner.max_steps,
+            cfg.mode
         );
         let report = coordinator::run(&cfg, backend, metrics.clone())?;
         println!(

@@ -53,6 +53,12 @@ pub struct SystemModel {
     /// Batcher policy.
     pub max_batch: usize,
     pub batch_timeout_s: f64,
+    /// Environments driven in lockstep by each actor thread (vecenv).
+    /// One thread's cycle becomes E env steps + one batched round-trip,
+    /// so E raises environments-in-flight (and the achievable batch
+    /// occupancy) without consuming more hardware threads — it shifts
+    /// the *effective* CPU/GPU ratio at a fixed thread count.
+    pub envs_per_actor: usize,
 }
 
 /// One steady-state operating point.
@@ -108,29 +114,40 @@ impl SystemModel {
         self.gpu.trace_time(&self.train_trace, Idealize::NONE)
     }
 
-    /// Solve the steady state for `n` actors (damped fixed point).
+    /// Solve the steady state for `n` actor threads (damped fixed
+    /// point). Each thread drives `envs_per_actor` environments in
+    /// lockstep: a thread's cycle is E serial env steps plus one
+    /// batched inference round-trip that produces E steps' worth of
+    /// actions, so E environments occupy one hardware thread.
     pub fn steady_state(&self, n: usize) -> SystemPoint {
+        let e = self.envs_per_actor.max(1) as f64;
         let t_env = self.cpu.step_cost_us() * 1e-6; // ideal per-step CPU time
         let t_train = self.train_time();
-        let mut rate = n as f64 / (t_env + 1e-4); // optimistic init
+        let mut rate = n as f64 * e / (t_env + 1e-4); // optimistic init
         let mut batch = 1.0f64;
         let mut rtt = 1e-4;
         let mut busy = n as f64;
 
         for _ in 0..200 {
-            // Actors CPU-busy (Little): arrivals R, service t_env_eff.
+            // Threads CPU-busy (Little): arrivals R, service t_env_eff
+            // per env step; a thread stepping its E slots serially is
+            // busy for E * t_env_eff of each cycle.
             let speed = (self.cpu.capacity(busy.ceil() as usize) / busy.max(1.0)).min(1.0);
             let t_env_eff = t_env / speed.max(1e-9);
             busy = (rate * t_env_eff).clamp(1.0_f64.min(n as f64), n as f64);
 
             // Batch formed: arrivals during min(timeout, fill time).
+            // Each thread submits E rows back-to-back, so a flush holds
+            // at least min(E, max_batch) rows even at low thread counts
+            // — the vecenv occupancy floor.
             let fill_time = if rate > 0.0 {
                 self.max_batch as f64 / rate
             } else {
                 f64::INFINITY
             };
             let window = self.batch_timeout_s.min(fill_time);
-            batch = (rate * window).clamp(1.0, self.max_batch as f64);
+            let floor = e.min(self.max_batch as f64);
+            batch = (rate * window).clamp(floor, self.max_batch as f64);
             let t_infer = self.infer_time(batch.round() as usize);
 
             // GPU occupancy: inference + training load.
@@ -143,8 +160,9 @@ impl SystemModel {
             let t_wait = window * 0.75;
             rtt = t_wait + t_infer * inflation;
 
-            // Concurrency-limited rate; GPU hard cap.
-            let r_conc = n as f64 / (t_env_eff + rtt);
+            // Concurrency-limited rate: n threads, each producing E env
+            // steps per (E * t_env_eff + rtt) cycle; CPU + GPU hard caps.
+            let r_conc = n as f64 * e / (e * t_env_eff + rtt);
             let r_cpu = self.cpu.env_steps_per_sec(n.min(busy.ceil() as usize).max(1));
             let gpu_per_step = t_infer / batch + self.train_per_env * t_train;
             let r_gpu = 0.99 / gpu_per_step;
@@ -189,6 +207,13 @@ impl SystemModel {
         m
     }
 
+    /// Clone with a different envs-per-actor count (vecenv sweep).
+    pub fn with_envs_per_actor(&self, envs: usize) -> Self {
+        let mut m = self.clone();
+        m.envs_per_actor = envs.max(1);
+        m
+    }
+
     /// CPU/GPU ratio of this configuration (the paper's design metric).
     pub fn cpu_gpu_ratio(&self) -> f64 {
         self.cpu.cfg.hw_threads as f64 / self.gpu.cfg.num_sms as f64
@@ -217,6 +242,7 @@ pub fn default_system(infer_trace: Trace, train_trace: Trace) -> SystemModel {
         train_per_env: 1.0 / ((80.0 - 40.0) * 64.0 * 8.0),
         max_batch: cfg.batcher.max_batch,
         batch_timeout_s: cfg.batcher.timeout_us as f64 * 1e-6,
+        envs_per_actor: cfg.actors.envs_per_actor,
     }
 }
 
@@ -308,5 +334,47 @@ mod tests {
         let m = model();
         assert!((m.cpu_gpu_ratio() - 0.5).abs() < 1e-12);
         assert!((m.with_sms(40).cpu_gpu_ratio() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn envs_per_actor_raises_rate_and_occupancy_at_fixed_threads() {
+        let m = model();
+        let single = m.steady_state(4);
+        let vec8 = m.with_envs_per_actor(8).steady_state(4);
+        assert!(
+            vec8.env_rate > 1.5 * single.env_rate,
+            "8 envs/thread at 4 threads: {} vs {}",
+            vec8.env_rate,
+            single.env_rate
+        );
+        assert!(
+            vec8.batch_size > single.batch_size,
+            "occupancy {} vs {}",
+            vec8.batch_size,
+            single.batch_size
+        );
+    }
+
+    #[test]
+    fn vecenv_reaches_the_fig3_tail_with_far_fewer_threads() {
+        // The paper pushes past the 40-thread knee by oversubscribing to
+        // 256 single-env actor threads; a vecenv pool should land in the
+        // same rate regime with an order of magnitude fewer threads.
+        let m = model();
+        let threads_256 = m.steady_state(256).env_rate;
+        let vec_32x8 = m.with_envs_per_actor(8).steady_state(32).env_rate;
+        assert!(
+            vec_32x8 > 0.7 * threads_256,
+            "32 threads x 8 envs = {vec_32x8} vs 256 threads = {threads_256}"
+        );
+    }
+
+    #[test]
+    fn envs_per_actor_one_is_the_identity() {
+        let m = model();
+        let a = m.steady_state(16);
+        let b = m.with_envs_per_actor(1).steady_state(16);
+        assert_eq!(a.env_rate, b.env_rate);
+        assert_eq!(a.batch_size, b.batch_size);
     }
 }

@@ -18,19 +18,30 @@ pub enum Value {
     Obj(Vec<(String, Value)>),
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("unexpected end of input at byte {0}")]
     Eof(usize),
-    #[error("unexpected character '{0}' at byte {1}")]
     Unexpected(char, usize),
-    #[error("invalid number at byte {0}")]
     BadNumber(usize),
-    #[error("invalid escape '\\{0}' at byte {1}")]
     BadEscape(char, usize),
-    #[error("trailing garbage at byte {0}")]
     Trailing(usize),
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::Eof(at) => write!(f, "unexpected end of input at byte {at}"),
+            JsonError::Unexpected(c, at) => {
+                write!(f, "unexpected character '{c}' at byte {at}")
+            }
+            JsonError::BadNumber(at) => write!(f, "invalid number at byte {at}"),
+            JsonError::BadEscape(c, at) => write!(f, "invalid escape '\\{c}' at byte {at}"),
+            JsonError::Trailing(at) => write!(f, "trailing garbage at byte {at}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Value {
     pub fn parse(text: &str) -> Result<Value, JsonError> {

@@ -1,0 +1,272 @@
+//! Vectorized environment engine: one actor thread drives E environments.
+//!
+//! The paper's central lever is the CPU/GPU ratio — how much environment
+//! throughput backs each unit of accelerator capacity. The seed design
+//! pinned exactly one environment to one OS thread, so the only way to
+//! raise the env-step rate was to spawn more threads (the Fig. 3 actor
+//! sweep). `VecEnv` decouples the two axes, CuLE-style: a single engine
+//! owns E fully-wrapped environment instances (frame stack, sticky
+//! actions, step cost, episode bookkeeping — one [`Wrapped`] per slot),
+//! steps them in lockstep through [`VecEnv::step_all`], and writes all
+//! observations into one contiguous `[E, S, S, K]` buffer that maps 1:1
+//! onto E rows of a batched inference request.
+//!
+//! Slots auto-reset on episode end (inherited from [`Wrapped`]), so the
+//! engine never stalls; per-slot episode state stays readable through
+//! [`VecEnv::slot`] for return tracking and stats.
+//!
+//! With `envs_per_actor = 1` a `VecEnv` is bit-for-bit the seed's
+//! single-env actor: slot seeds, sticky-action RNG streams, and reset
+//! semantics are identical (asserted by the tests below).
+
+use crate::config::EnvConfig;
+use crate::env::wrappers::Wrapped;
+use crate::env::Step;
+
+/// A batched environment engine: E wrapped env instances stepped in
+/// lockstep, rendering into one contiguous observation buffer.
+pub struct VecEnv {
+    slots: Vec<Wrapped>,
+    obs_len: usize,
+    last_steps: Vec<Step>,
+}
+
+impl VecEnv {
+    /// Build `num_envs` wrapped instances. Slot `i` gets instance seed
+    /// `base_instance_seed + i`, so a pool of actors can hand out
+    /// disjoint seed ranges (actor `a` with E envs uses base
+    /// `a * E + 1`, matching the seed layout of `a + 1` at E = 1).
+    pub fn from_config(
+        cfg: &EnvConfig,
+        num_envs: usize,
+        base_instance_seed: u64,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(num_envs > 0, "vecenv needs at least one environment");
+        let mut slots = Vec::with_capacity(num_envs);
+        for i in 0..num_envs {
+            slots.push(Wrapped::from_config(cfg, base_instance_seed + i as u64)?);
+        }
+        let obs_len = slots[0].obs_len();
+        Ok(Self {
+            slots,
+            obs_len,
+            last_steps: Vec::with_capacity(num_envs),
+        })
+    }
+
+    /// Environments in flight behind this engine.
+    pub fn num_envs(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Per-slot observation length (S * S * K floats).
+    pub fn obs_len(&self) -> usize {
+        self.obs_len
+    }
+
+    /// Length of the full `[E, S, S, K]` observation buffer.
+    pub fn obs_batch_len(&self) -> usize {
+        self.slots.len() * self.obs_len
+    }
+
+    /// Allocate a zeroed observation batch of the right size.
+    pub fn new_obs_batch(&self) -> Vec<f32> {
+        vec![0.0; self.obs_batch_len()]
+    }
+
+    /// Reset every slot; write all initial observations into `obs_batch`.
+    pub fn reset_all(&mut self, obs_batch: &mut [f32]) {
+        assert_eq!(obs_batch.len(), self.obs_batch_len(), "obs batch size");
+        for (slot, obs) in self
+            .slots
+            .iter_mut()
+            .zip(obs_batch.chunks_exact_mut(self.obs_len))
+        {
+            slot.reset(obs);
+        }
+    }
+
+    /// Step every slot with its action; write each slot's post-step
+    /// observation into its row of `obs_batch`. Slots whose episode ends
+    /// auto-reset (their row holds the next episode's initial
+    /// observation, and the returned `Step` has `done = true`). Returns
+    /// one `Step` per slot, in slot order.
+    pub fn step_all(&mut self, actions: &[usize], obs_batch: &mut [f32]) -> &[Step] {
+        assert_eq!(actions.len(), self.slots.len(), "one action per slot");
+        assert_eq!(obs_batch.len(), self.obs_batch_len(), "obs batch size");
+        self.last_steps.clear();
+        for ((slot, &action), obs) in self
+            .slots
+            .iter_mut()
+            .zip(actions)
+            .zip(obs_batch.chunks_exact_mut(self.obs_len))
+        {
+            self.last_steps.push(slot.step(action, obs));
+        }
+        &self.last_steps
+    }
+
+    /// Per-slot episode state (returns, lengths, counters).
+    pub fn slot(&self, i: usize) -> &Wrapped {
+        &self.slots[i]
+    }
+
+    /// Total env steps across all slots.
+    pub fn total_steps(&self) -> u64 {
+        self.slots.iter().map(|s| s.total_steps).sum()
+    }
+
+    /// Completed episodes across all slots.
+    pub fn episodes_completed(&self) -> u64 {
+        self.slots.iter().map(|s| s.episodes_completed).sum()
+    }
+
+    /// Environment name (shared by every slot).
+    pub fn name(&self) -> &'static str {
+        self.slots[0].name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(name: &str) -> EnvConfig {
+        EnvConfig {
+            name: name.into(),
+            frame_stack: 4,
+            sticky_action_prob: 0.25,
+            max_episode_len: 100,
+            step_cost_us: 0,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn single_slot_matches_wrapped_exactly() {
+        // envs_per_actor = 1 must reproduce the seed's single-env actor:
+        // same instance seed => identical observations, rewards, dones,
+        // and counters at every step.
+        let c = cfg("catch");
+        let mut venv = VecEnv::from_config(&c, 1, 3).unwrap();
+        let mut solo = Wrapped::from_config(&c, 3).unwrap();
+
+        let mut obs_v = venv.new_obs_batch();
+        let mut obs_s = vec![0.0f32; solo.obs_len()];
+        venv.reset_all(&mut obs_v);
+        solo.reset(&mut obs_s);
+        assert_eq!(obs_v, obs_s);
+
+        for i in 0..200usize {
+            let a = i % 3;
+            let sv = venv.step_all(&[a], &mut obs_v)[0].clone();
+            let ss = solo.step(a, &mut obs_s);
+            assert_eq!(sv, ss, "step {i}");
+            assert_eq!(obs_v, obs_s, "obs diverged at step {i}");
+        }
+        assert_eq!(venv.total_steps(), solo.total_steps);
+        assert_eq!(venv.episodes_completed(), solo.episodes_completed);
+        assert_eq!(venv.slot(0).last_return, solo.last_return);
+    }
+
+    #[test]
+    fn slots_match_independent_wrapped_instances() {
+        // The batched engine must be observationally equivalent to E
+        // independent single-env instances with the same seed layout.
+        let c = cfg("grid_pong");
+        let e = 3;
+        let mut venv = VecEnv::from_config(&c, e, 10).unwrap();
+        let mut solos: Vec<Wrapped> = (0..e)
+            .map(|i| Wrapped::from_config(&c, 10 + i as u64).unwrap())
+            .collect();
+
+        let mut obs_v = venv.new_obs_batch();
+        venv.reset_all(&mut obs_v);
+        let obs_len = venv.obs_len();
+        let mut obs_s = vec![vec![0.0f32; obs_len]; e];
+        for (s, o) in solos.iter_mut().zip(&mut obs_s) {
+            s.reset(o);
+        }
+
+        for i in 0..150usize {
+            let actions: Vec<usize> = (0..e).map(|k| (i + k) % 4).collect();
+            let steps: Vec<Step> = venv.step_all(&actions, &mut obs_v).to_vec();
+            for k in 0..e {
+                let ss = solos[k].step(actions[k], &mut obs_s[k]);
+                assert_eq!(steps[k], ss, "slot {k} step {i}");
+                assert_eq!(
+                    obs_v[k * obs_len..(k + 1) * obs_len],
+                    obs_s[k][..],
+                    "slot {k} obs at step {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn slots_are_decorrelated_by_seed() {
+        // Different slots must not play identical episodes.
+        let c = cfg("breakout");
+        let mut venv = VecEnv::from_config(&c, 2, 1).unwrap();
+        let mut obs = venv.new_obs_batch();
+        venv.reset_all(&mut obs);
+        let n = venv.obs_len();
+        let mut diverged = false;
+        for _ in 0..50 {
+            venv.step_all(&[1, 1], &mut obs);
+            if obs[..n] != obs[n..] {
+                diverged = true;
+                break;
+            }
+        }
+        assert!(diverged, "slots played identical trajectories");
+    }
+
+    #[test]
+    fn auto_reset_keeps_all_slots_running() {
+        let c = cfg("catch"); // catch episodes are ~9 steps
+        let e = 4;
+        let mut venv = VecEnv::from_config(&c, e, 1).unwrap();
+        let mut obs = venv.new_obs_batch();
+        venv.reset_all(&mut obs);
+        let mut dones = 0u64;
+        for _ in 0..100 {
+            dones += venv
+                .step_all(&vec![0; e], &mut obs)
+                .iter()
+                .filter(|s| s.done)
+                .count() as u64;
+        }
+        assert_eq!(venv.total_steps(), 100 * e as u64);
+        assert_eq!(venv.episodes_completed(), dones);
+        assert!(dones >= 4 * 9, "catch should complete many episodes: {dones}");
+    }
+
+    #[test]
+    fn determinism_under_fixed_seed() {
+        let c = cfg("nav_maze");
+        let run = || {
+            let mut venv = VecEnv::from_config(&c, 3, 5).unwrap();
+            let mut obs = venv.new_obs_batch();
+            venv.reset_all(&mut obs);
+            let mut rewards = Vec::new();
+            for i in 0..120usize {
+                let actions = [i % 4, (i + 1) % 4, (i + 2) % 4];
+                for s in venv.step_all(&actions, &mut obs) {
+                    rewards.push(s.reward);
+                }
+            }
+            (obs, rewards)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    #[should_panic(expected = "one action per slot")]
+    fn wrong_action_count_panics() {
+        let mut venv = VecEnv::from_config(&cfg("catch"), 2, 1).unwrap();
+        let mut obs = venv.new_obs_batch();
+        venv.reset_all(&mut obs);
+        venv.step_all(&[0], &mut obs);
+    }
+}

@@ -114,6 +114,112 @@ fn prop_sequence_builder_conserves_transitions() {
 }
 
 #[test]
+fn prop_env_suite_contract_frames_actions_determinism() {
+    // Registry-driven contract for every registered environment:
+    //   * frames are always GRID*GRID floats in [0, 1],
+    //   * real_actions() is in 1..=NUM_ACTIONS,
+    //   * trajectories are deterministic under a fixed seed.
+    use rlarch::env::{make_env, new_frame, registered_envs, GRID, NUM_ACTIONS};
+    forall(25, |g| {
+        for name in registered_envs() {
+            let seed = g.u64(0..u64::MAX - 1);
+            let mut env = make_env(name, seed).map_err(|e| e.to_string())?;
+            let mut twin = make_env(name, seed).map_err(|e| e.to_string())?;
+            let ra = env.real_actions();
+            prop_assert(
+                (1..=NUM_ACTIONS).contains(&ra),
+                &format!("{name}: real_actions {ra} outside 1..={NUM_ACTIONS}"),
+            )?;
+
+            let mut frame = new_frame();
+            let mut frame2 = new_frame();
+            env.reset(&mut frame);
+            twin.reset(&mut frame2);
+            prop_assert(frame == frame2, &format!("{name}: reset nondeterministic"))?;
+
+            let steps = g.usize(20..120);
+            for i in 0..steps {
+                let a = g.usize(0..NUM_ACTIONS);
+                let s1 = env.step(a, &mut frame);
+                let s2 = twin.step(a, &mut frame2);
+                prop_assert(
+                    s1 == s2,
+                    &format!("{name}: step {i} diverged under same seed+actions"),
+                )?;
+                prop_assert(
+                    frame == frame2,
+                    &format!("{name}: frame {i} diverged under same seed+actions"),
+                )?;
+                prop_assert(
+                    frame.len() == GRID * GRID,
+                    &format!("{name}: frame length {}", frame.len()),
+                )?;
+                for &v in &frame {
+                    prop_assert(
+                        (0.0..=1.0).contains(&v),
+                        &format!("{name}: frame value {v} out of [0,1] at step {i}"),
+                    )?;
+                }
+                if s1.done {
+                    env.reset(&mut frame);
+                    twin.reset(&mut frame2);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_vecenv_slots_equal_independent_wrapped_envs() {
+    // The vectorized engine is observationally equivalent to E
+    // independent single-env instances over any action sequence.
+    use rlarch::config::EnvConfig;
+    use rlarch::env::wrappers::Wrapped;
+    use rlarch::vecenv::VecEnv;
+    forall(15, |g| {
+        let name = *g.pick(&["catch", "grid_pong", "breakout", "nav_maze"]);
+        let cfg = EnvConfig {
+            name: name.to_string(),
+            frame_stack: g.usize(1..5),
+            sticky_action_prob: g.f64(0.0..0.5),
+            max_episode_len: g.usize(10..80),
+            step_cost_us: 0,
+            seed: g.u64(0..1 << 40),
+        };
+        let e = g.usize(1..5);
+        let base = g.u64(1..1 << 20);
+        let mut venv = VecEnv::from_config(&cfg, e, base).map_err(|x| x.to_string())?;
+        let mut solos: Vec<Wrapped> = (0..e)
+            .map(|i| Wrapped::from_config(&cfg, base + i as u64).unwrap())
+            .collect();
+        let obs_len = venv.obs_len();
+        let mut obs = venv.new_obs_batch();
+        venv.reset_all(&mut obs);
+        let mut obs_s = vec![vec![0.0f32; obs_len]; e];
+        for (s, o) in solos.iter_mut().zip(&mut obs_s) {
+            s.reset(o);
+        }
+        for i in 0..g.usize(10..150) {
+            let actions: Vec<usize> = (0..e).map(|_| g.usize(0..4)).collect();
+            let steps = venv.step_all(&actions, &mut obs).to_vec();
+            for k in 0..e {
+                let ss = solos[k].step(actions[k], &mut obs_s[k]);
+                prop_assert(
+                    steps[k] == ss,
+                    &format!("{name}: slot {k} step {i} diverged"),
+                )?;
+                prop_assert(
+                    obs[k * obs_len..(k + 1) * obs_len] == obs_s[k][..],
+                    &format!("{name}: slot {k} obs {i} diverged"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_cpu_capacity_monotone_and_bounded() {
     forall(100, |g| {
         let threads = g.usize(2..256) & !1; // even

@@ -1,0 +1,265 @@
+//! Host-only shim of the `xla` PJRT bindings' API surface.
+//!
+//! The offline build environment has neither crates.io access nor a PJRT
+//! plugin, so this vendored crate keeps `rlarch::runtime` compiling and
+//! its host-side data paths working:
+//!
+//! * [`Literal`] is fully functional on the host (create from bytes, read
+//!   shapes, read back typed data) — the `runtime::tensor` layer and its
+//!   tests run for real.
+//! * Everything that needs an actual PJRT runtime ([`PjRtClient::cpu`],
+//!   compilation, execution) returns a descriptive [`Error`]. Callers
+//!   already treat artifact execution as optional (tests skip, the CLI
+//!   reports the error), so a stubbed runtime degrades gracefully.
+//!
+//! Swapping in real PJRT bindings is a Cargo.toml change; no rlarch code
+//! references anything outside the genuine crate's API.
+
+use std::fmt;
+use std::path::Path;
+
+/// Errors surfaced by the shim (and, in a real build, by PJRT).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl Error {
+    fn unsupported(what: &str) -> Self {
+        Self(format!(
+            "{what} is unavailable: rlarch was built against the vendored \
+             host-only xla shim (no PJRT plugin in this environment)"
+        ))
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types our artifacts use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// XLA primitive types (subset + catch-all for diagnostics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+    Unsupported,
+}
+
+impl ElementType {
+    fn primitive(self) -> PrimitiveType {
+        match self {
+            ElementType::F32 => PrimitiveType::F32,
+            ElementType::S32 => PrimitiveType::S32,
+        }
+    }
+}
+
+/// Array shape: dims + primitive type.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: PrimitiveType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn primitive_type(&self) -> PrimitiveType {
+        self.ty
+    }
+}
+
+/// Native element types readable out of a [`Literal`].
+pub trait NativeType: Copy {
+    const PRIMITIVE: PrimitiveType;
+    fn from_le(bytes: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const PRIMITIVE: PrimitiveType = PrimitiveType::F32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        f32::from_le_bytes(bytes)
+    }
+}
+
+impl NativeType for i32 {
+    const PRIMITIVE: PrimitiveType = PrimitiveType::S32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        i32::from_le_bytes(bytes)
+    }
+}
+
+/// A host literal: shape + little-endian payload bytes.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Self> {
+        let elems: usize = dims.iter().product();
+        if data.len() != elems * 4 {
+            return Err(Error(format!(
+                "literal payload {} bytes != {} elements * 4",
+                data.len(),
+                elems
+            )));
+        }
+        Ok(Self {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            bytes: data.to_vec(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape {
+            dims: self.dims.clone(),
+            ty: self.ty.primitive(),
+        })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty.primitive() != T::PRIMITIVE {
+            return Err(Error(format!(
+                "literal is {:?}, asked for {:?}",
+                self.ty.primitive(),
+                T::PRIMITIVE
+            )));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|b| T::from_le([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    /// Destructure a tuple literal. Host-created literals are always
+    /// arrays; tuples only come out of executable runs, which the shim
+    /// cannot perform.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unsupported("Literal::to_tuple (tuple literals)"))
+    }
+}
+
+/// Parsed HLO module (opaque; the shim only records the path).
+pub struct HloModuleProto {
+    _path: std::path::PathBuf,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Err(Error(format!("no such HLO file: {}", path.display())));
+        }
+        Err(Error::unsupported("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation built from an HLO proto.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _private: () }
+    }
+}
+
+/// A compiled executable (never constructible through the shim).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unsupported("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unsupported("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// The PJRT client. The shim has no backing plugin, so construction
+/// fails with a descriptive error and callers fall back / skip.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::unsupported("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unsupported("PjRtClient::compile"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "host-stub".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[3]);
+        assert_eq!(shape.primitive_type(), PrimitiveType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn payload_length_checked() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[2, 2], &[0u8; 15])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn runtime_paths_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo.txt").is_err());
+    }
+}
