@@ -24,6 +24,9 @@ fn run_mode(
     cfg.mode = mode;
     let metrics = Registry::new();
     let report = coordinator::run(&cfg, backend, metrics.clone())?;
+    if let Some(e) = &report.first_error {
+        anyhow::bail!("{:?} run failed: {e}", cfg.mode);
+    }
     Ok((report, metrics))
 }
 

@@ -91,6 +91,9 @@ fn main() -> anyhow::Result<()> {
     );
     let metrics = Registry::new();
     let report = coordinator::run(&cfg, backend.clone(), metrics)?;
+    if let Some(e) = &report.first_error {
+        anyhow::bail!("training run failed: {e}");
+    }
 
     println!("\n[quickstart] loss curve (step, loss):");
     for (step, loss) in &report.learner.loss_curve {

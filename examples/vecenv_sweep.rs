@@ -1,37 +1,49 @@
-//! vecenv sweep: envs_per_actor × num_actors on the real coordinator.
+//! vecenv sweep: pipeline_depth × envs_per_actor × num_actors on the
+//! real coordinator.
 //!
 //! The paper's Fig. 3 raises the env-step rate by sweeping actor *threads*
 //! (4 → 40 → 256) against the batcher; the knee sits at the CPU's
 //! hardware-thread count. `vecenv` decouples environments-in-flight from
-//! threads consumed, so the same tail is reachable with far fewer
-//! threads. This example runs the real dataflow (actors + batcher +
-//! learner) on the mock backend over the grid and reports env-steps/sec
-//! and mean inference-batch occupancy, then reproduces the same story on
-//! the architectural model at paper scale.
+//! threads consumed, and the policy layer's `pipeline_depth` additionally
+//! overlaps each thread's env stepping with its in-flight inference. This
+//! example runs the real dataflow (actors + batcher + learner) on the
+//! mock backend (with injected inference latency, so there is GPU time to
+//! hide) over the grid and reports env-steps/sec and mean inference-batch
+//! occupancy, then reproduces the same story on the architectural model
+//! at paper scale.
 //!
 //!     cargo run --release --example vecenv_sweep
 //!
-//! Flags: --actors 1,2,4  --envs 1,2,4,8  --steps N  --env NAME.
+//! Flags: --actors 1,2,4  --envs 1,2,4,8  --depths 1,2  --steps N
+//!        --env NAME  --infer-latency-us L.
 
 use rlarch::cli::Cli;
 use rlarch::config::{InferenceMode, SystemConfig};
 use rlarch::coordinator;
 use rlarch::metrics::Registry;
-use rlarch::runtime::{Backend, MockModel, ModelDims};
 use rlarch::report::figure::Table;
 use rlarch::report::write_csv;
+use rlarch::runtime::{Backend, MockModel, ModelDims};
 use rlarch::simarch::{
     default_system, synthetic_paper_train_trace, synthetic_paper_trace,
 };
 use std::sync::Arc;
+use std::time::Duration;
 
-fn sweep_cfg(env: &str, actors: usize, envs: usize, steps: usize) -> SystemConfig {
+fn sweep_cfg(
+    env: &str,
+    actors: usize,
+    envs: usize,
+    depth: usize,
+    steps: usize,
+) -> SystemConfig {
     let mut cfg = SystemConfig::default();
     cfg.mode = InferenceMode::Central;
     cfg.env.name = env.to_string();
     cfg.env.step_cost_us = 100; // ALE-class env weight: makes CPU time real
     cfg.actors.num_actors = actors;
     cfg.actors.envs_per_actor = envs;
+    cfg.actors.pipeline_depth = depth;
     cfg.learner.burn_in = 2;
     cfg.learner.unroll_len = 4;
     cfg.learner.seq_overlap = 2;
@@ -48,67 +60,93 @@ fn sweep_cfg(env: &str, actors: usize, envs: usize, steps: usize) -> SystemConfi
 fn main() -> anyhow::Result<()> {
     let cli = Cli::new(
         "vecenv_sweep",
-        "envs_per_actor x num_actors sweep on the mock backend",
+        "pipeline_depth x envs_per_actor x num_actors sweep on the mock backend",
     )
     .flag("actors", "1,2,4", "actor thread counts")
     .flag("envs", "1,2,4,8", "envs-per-actor counts")
+    .flag("depths", "1,2", "actor pipeline depths")
     .flag("steps", "40", "learner steps per grid point")
-    .flag("env", "catch", "environment");
+    .flag("env", "catch", "environment")
+    .flag(
+        "infer-latency-us",
+        "250",
+        "injected mock inference latency (GPU time to overlap)",
+    );
     let parsed = cli.parse_env().map_err(|e| anyhow::anyhow!("{e}"))?;
     let actor_counts = parsed.get_usize_list("actors")?;
     let env_counts = parsed.get_usize_list("envs")?;
+    let depth_counts = parsed.get_usize_list("depths")?;
     let steps = parsed.get_usize("steps")?;
+    let latency_us = parsed.get_u64("infer-latency-us")?;
     let env_name = parsed.get("env").to_string();
 
     println!("# vecenv sweep — real dataflow on the mock backend\n");
     let mut t = Table::new(&[
         "actors",
         "envs/actor",
+        "depth",
         "envs in flight",
         "env steps/s",
         "mean batch",
         "episodes",
     ]);
     let mut csv = String::from(
-        "actors,envs_per_actor,total_envs,env_steps_per_sec,mean_batch\n",
+        "actors,envs_per_actor,pipeline_depth,total_envs,env_steps_per_sec,mean_batch\n",
     );
     for &actors in &actor_counts {
         for &envs in &env_counts {
-            let cfg = sweep_cfg(&env_name, actors, envs, steps);
-            let dims = ModelDims {
-                obs_len: 400,
-                hidden: 16,
-                num_actions: 4,
-                seq_len: cfg.learner.seq_len(),
-                train_batch: cfg.learner.train_batch,
-            };
-            let backend = Backend::Mock(Arc::new(MockModel::new(dims, 11)));
-            let report = coordinator::run(&cfg, backend, Registry::new())?;
-            t.row(&[
-                actors.to_string(),
-                envs.to_string(),
-                report.total_envs.to_string(),
-                format!("{:.0}", report.env_steps_per_sec),
-                format!("{:.1}", report.mean_batch_occupancy),
-                report.episodes.to_string(),
-            ]);
-            csv.push_str(&format!(
-                "{actors},{envs},{},{},{}\n",
-                report.total_envs,
-                report.env_steps_per_sec,
-                report.mean_batch_occupancy
-            ));
+            for &depth in &depth_counts {
+                if depth > envs {
+                    continue; // clamps to envs anyway: skip duplicates
+                }
+                let cfg = sweep_cfg(&env_name, actors, envs, depth, steps);
+                let dims = ModelDims {
+                    obs_len: 400,
+                    hidden: 16,
+                    num_actions: 4,
+                    seq_len: cfg.learner.seq_len(),
+                    train_batch: cfg.learner.train_batch,
+                };
+                let backend = Backend::Mock(Arc::new(
+                    MockModel::new(dims, 11)
+                        .with_infer_latency(Duration::from_micros(latency_us)),
+                ));
+                let report = coordinator::run(&cfg, backend, Registry::new())?;
+                if let Some(e) = &report.first_error {
+                    anyhow::bail!(
+                        "grid point actors={actors} envs={envs} depth={depth} \
+                         failed: {e}"
+                    );
+                }
+                t.row(&[
+                    actors.to_string(),
+                    envs.to_string(),
+                    depth.to_string(),
+                    report.total_envs.to_string(),
+                    format!("{:.0}", report.env_steps_per_sec),
+                    format!("{:.1}", report.mean_batch_occupancy),
+                    report.episodes.to_string(),
+                ]);
+                csv.push_str(&format!(
+                    "{actors},{envs},{depth},{},{},{}\n",
+                    report.total_envs,
+                    report.env_steps_per_sec,
+                    report.mean_batch_occupancy
+                ));
+            }
         }
     }
     println!("{}", t.to_markdown());
     println!(
         "Reading: at a fixed thread count, envs/actor multiplies both the \
          env-step rate and the inference-batch occupancy — the same lever \
-         the paper pulls with more threads.\n"
+         the paper pulls with more threads — and pipeline depth then hides \
+         the env CPU work under the inference round-trip on top of it.\n"
     );
 
     // The paper-scale story on the architectural model: the Fig. 3 tail
-    // (256 oversubscribed single-env threads) vs small vecenv pools.
+    // (256 oversubscribed single-env threads) vs small vecenv pools,
+    // serialized and pipelined.
     println!("# paper-scale model: Fig. 3 tail with far fewer threads\n");
     let m = default_system(
         synthetic_paper_trace(1, 1, 64),
@@ -123,21 +161,27 @@ fn main() -> anyhow::Result<()> {
         "vs 256-thread tail",
     ]);
     let tail = m.steady_state(256).env_rate;
-    for (threads, envs) in [
-        (4usize, 1usize),
-        (40, 1),
-        (256, 1),
-        (4, 8),
-        (8, 8),
-        (32, 8),
-        (16, 16),
+    for (threads, envs, depth) in [
+        (4usize, 1usize, 1usize),
+        (40, 1, 1),
+        (256, 1, 1),
+        (4, 8, 1),
+        (4, 8, 2),
+        (8, 8, 1),
+        (8, 8, 2),
+        (32, 8, 1),
+        (32, 8, 2),
+        (16, 16, 2),
     ] {
-        let p = m.with_envs_per_actor(envs).steady_state(threads);
+        let p = m
+            .with_envs_per_actor(envs)
+            .with_pipeline_depth(depth)
+            .steady_state(threads);
         mt.row(&[
-            if envs == 1 {
-                "single-env".into()
-            } else {
-                format!("vecenv x{envs}")
+            match (envs, depth) {
+                (1, _) => "single-env".into(),
+                (_, 1) => format!("vecenv x{envs}"),
+                _ => format!("vecenv x{envs} depth {depth}"),
             },
             threads.to_string(),
             (threads * envs).to_string(),

@@ -1,0 +1,117 @@
+//! Micro-bench: the split-phase policy layer's pipeline surface.
+//!
+//! Runs the real actor loop (vecenv + central batcher + mock backend
+//! with injected inference latency) at pipeline depths 1/2/4 and
+//! reports env-steps/sec plus the overlap time the actor banked while
+//! inference was in flight — the policy-layer lever on the paper's
+//! CPU/GPU ratio: depth 1 serializes env CPU work behind GPU latency,
+//! deeper pipelines hide it.
+
+use rlarch::config::SystemConfig;
+use rlarch::coordinator::actor::{run_actor, ActorArgs};
+use rlarch::coordinator::Batcher;
+use rlarch::exec::ShutdownToken;
+use rlarch::metrics::Registry;
+use rlarch::policy::{CentralClient, PolicyClient};
+use rlarch::replay::{ReplayConfig, SequenceReplay};
+use rlarch::report::figure::Table;
+use rlarch::report::write_csv;
+use rlarch::runtime::{Backend, MockModel, ModelDims};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn run_depth(depth: usize, envs: usize, rounds: u64, latency_us: u64) -> (f64, f64) {
+    let mut cfg = SystemConfig::default();
+    cfg.env.name = "catch".into();
+    cfg.env.step_cost_us = 200; // ALE-class env weight
+    cfg.actors.num_actors = 1;
+    cfg.actors.envs_per_actor = envs;
+    cfg.actors.pipeline_depth = depth;
+    cfg.learner.burn_in = 2;
+    cfg.learner.unroll_len = 4;
+    cfg.learner.seq_overlap = 2;
+    cfg.batcher.max_batch = envs;
+    cfg.batcher.batch_sizes = vec![envs];
+    cfg.batcher.timeout_us = 100;
+    let dims = ModelDims {
+        obs_len: 400,
+        hidden: 16,
+        num_actions: 4,
+        seq_len: 6,
+        train_batch: 2,
+    };
+    let backend = Backend::Mock(Arc::new(
+        MockModel::new(dims, 9).with_infer_latency(Duration::from_micros(latency_us)),
+    ));
+    let metrics = Registry::new();
+    let (batcher, handle) =
+        Batcher::spawn(cfg.batcher.clone(), backend, metrics.clone());
+    let policy: Box<dyn PolicyClient> =
+        Box::new(CentralClient::new(handle.clone(), 0, dims, &metrics));
+    let replay = Arc::new(SequenceReplay::new(ReplayConfig {
+        capacity: 4_096,
+        ..Default::default()
+    }));
+    let t0 = Instant::now();
+    let stats = run_actor(ActorArgs {
+        id: 0,
+        cfg,
+        dims,
+        policy,
+        replay,
+        metrics: metrics.clone(),
+        shutdown: ShutdownToken::new(),
+        max_rounds: Some(rounds),
+    })
+    .unwrap();
+    let elapsed = t0.elapsed().as_secs_f64();
+    drop(handle);
+    batcher.join();
+    let overlap: f64 = {
+        let s = metrics.timer("actor.overlap_seconds").snapshot();
+        if s.count() > 0 {
+            s.mean() * s.count() as f64
+        } else {
+            0.0
+        }
+    };
+    (stats.env_steps as f64 / elapsed, overlap)
+}
+
+fn main() {
+    println!("# micro_policy — actor pipeline depth sweep (mock backend)\n");
+    let envs = 8;
+    let rounds = 100;
+    let mut t = Table::new(&[
+        "pipeline depth",
+        "envs/actor",
+        "env steps/s",
+        "vs depth 1",
+        "overlap s",
+    ]);
+    let mut csv = String::from("depth,envs,steps_per_sec,overlap_seconds\n");
+    let mut base = 0.0f64;
+    for &(depth, latency_us) in &[(1usize, 1_000u64), (2, 1_000), (4, 1_000)] {
+        let (rate, overlap) = run_depth(depth, envs, rounds, latency_us);
+        if depth == 1 {
+            base = rate;
+        }
+        t.row(&[
+            depth.to_string(),
+            envs.to_string(),
+            format!("{rate:.0}"),
+            format!("{:.2}x", rate / base.max(1e-9)),
+            format!("{overlap:.3}"),
+        ]);
+        csv.push_str(&format!("{depth},{envs},{rate},{overlap}\n"));
+    }
+    println!("{}", t.to_markdown());
+    println!(
+        "pipelining wins: depth 1 serializes {envs} env steps behind every \
+         inference round-trip; deeper pipelines step one slot group while \
+         the others' rows are in flight, hiding the env CPU work the paper \
+         says dominates."
+    );
+    let p = write_csv("micro_policy", &csv);
+    println!("csv: {}", p.display());
+}

@@ -1,6 +1,6 @@
 //! Typed configuration for the whole stack, parsed from TOML (or built
 //! programmatically by examples/benches). Every struct has defaults that
-//! match DESIGN.md §9 (DGX-1 / V100 machine model + the paper's R2D2
+//! match DESIGN.md §10 (DGX-1 / V100 machine model + the paper's R2D2
 //! hyper-parameters scaled to the CPU testbed).
 
 use crate::util::json::Value;
@@ -157,6 +157,12 @@ pub struct ActorConfig {
     /// knob). 1 = the paper's one-env-per-thread baseline; larger values
     /// raise environments-in-flight without consuming more CPU threads.
     pub envs_per_actor: usize,
+    /// Software-pipeline depth of the actor loop: the thread's env slots
+    /// are split into this many groups, and env stepping for one group
+    /// overlaps the in-flight inference of the others (policy layer,
+    /// DESIGN.md §5). 1 = the seed's fully serialized loop (bit-for-bit);
+    /// values above `envs_per_actor` clamp to it.
+    pub pipeline_depth: usize,
     /// Ape-X/R2D2 per-actor epsilon: eps_i = base^(1 + i/(N-1) * alpha).
     /// With vecenv the schedule spans all num_actors * envs_per_actor
     /// environment slots.
@@ -171,6 +177,7 @@ impl Default for ActorConfig {
         Self {
             num_actors: 8,
             envs_per_actor: 1,
+            pipeline_depth: 1,
             epsilon_base: 0.4,
             epsilon_alpha: 7.0,
             num_eval_actors: 0,
@@ -184,6 +191,7 @@ impl ActorConfig {
         Self {
             num_actors: get_usize(v, "actors.num_actors", d.num_actors),
             envs_per_actor: get_usize(v, "actors.envs_per_actor", d.envs_per_actor),
+            pipeline_depth: get_usize(v, "actors.pipeline_depth", d.pipeline_depth),
             epsilon_base: get_f64(v, "actors.epsilon_base", d.epsilon_base),
             epsilon_alpha: get_f64(v, "actors.epsilon_alpha", d.epsilon_alpha),
             num_eval_actors: get_usize(
@@ -295,7 +303,7 @@ impl LearnerConfig {
 }
 
 // ---------------------------------------------------------------------------
-// simarch machine model (DESIGN.md §9)
+// simarch machine model (DESIGN.md §10)
 // ---------------------------------------------------------------------------
 
 /// V100-class GPU timing model parameters.
@@ -514,6 +522,7 @@ const SECTION_KEYS: &[(&str, &[&str])] = &[
         &[
             "num_actors",
             "envs_per_actor",
+            "pipeline_depth",
             "epsilon_base",
             "epsilon_alpha",
             "num_eval_actors",
@@ -611,6 +620,11 @@ impl SystemConfig {
                 "envs_per_actor must be > 0".into(),
             ));
         }
+        if self.actors.pipeline_depth == 0 {
+            return Err(ConfigError::Invalid(
+                "pipeline_depth must be > 0 (1 = serialized)".into(),
+            ));
+        }
         if self.gpu.num_sms == 0 || self.cpu.hw_threads == 0 {
             return Err(ConfigError::Invalid(
                 "gpu.num_sms and cpu.hw_threads must be > 0".into(),
@@ -685,6 +699,21 @@ hw_threads = 40
         assert_eq!(cfg.actors.envs_per_actor, 8);
         assert_eq!(cfg.actors.total_envs(), 8 * cfg.actors.num_actors);
         assert_eq!(SystemConfig::default().actors.envs_per_actor, 1);
+    }
+
+    #[test]
+    fn parses_pipeline_depth_and_rejects_zero() {
+        let cfg = SystemConfig::from_toml(
+            "[actors]\nenvs_per_actor = 8\npipeline_depth = 2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.actors.pipeline_depth, 2);
+        // 1 (the serialized seed loop) is the default.
+        assert_eq!(SystemConfig::default().actors.pipeline_depth, 1);
+        let err = SystemConfig::from_toml("[actors]\npipeline_depth = 0\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("pipeline_depth"), "got: {err}");
     }
 
     #[test]

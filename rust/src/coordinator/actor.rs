@@ -2,42 +2,48 @@
 //!
 //! Each actor thread owns a [`VecEnv`] driving `envs_per_actor`
 //! environment slots in lockstep, plus one recurrent state and one
-//! trajectory builder per slot. In central mode (SEED) the policy step
-//! submits all E observations to the inference batcher in one shot and
-//! waits for the routed replies; in local mode (IMPALA baseline) the
-//! actor calls the backend directly with a batch of E. Completed
-//! sequences flow into the shared prioritized replay.
+//! trajectory builder per slot. Inference goes through the split-phase
+//! [`PolicyClient`] (DESIGN.md §5): the slots are partitioned into
+//! `pipeline_depth` contiguous groups, and the loop round-robins over
+//! them — `wait` on group g's in-flight inference, act, step g's
+//! environments, `submit` g's next observations — so with depth ≥ 2 the
+//! CPU-bound env stepping of one group overlaps the GPU latency of the
+//! others. Completed sequences flow into the shared prioritized replay.
 //!
-//! With `envs_per_actor = 1` this is exactly the seed's single-env actor
-//! loop: same seeds, same RNG streams, same submission pattern.
+//! With `pipeline_depth = 1` (and any `envs_per_actor`) this is exactly
+//! the seed's serialized loop: same seeds, same RNG streams, same
+//! submission pattern, same replay contents — asserted bit-for-bit by
+//! `tests/coordinator_e2e.rs`. Observations live in two full-size slabs
+//! per actor (double buffer): the step writes the post-step frame into
+//! the spare buffer while the pre-step frame stays addressable for
+//! transition recording, so the loop itself allocates no observation
+//! slabs per step (the seed's full-slab `obs.clone()` is gone; the
+//! per-transition row copies into sequence builders remain, as before).
 
-use super::batcher::BatcherHandle;
 use crate::config::SystemConfig;
 use crate::exec::ShutdownToken;
 use crate::metrics::Registry;
+use crate::policy::PolicyClient;
 use crate::replay::SequenceReplay;
 use crate::rl::{actor_epsilon, epsilon_greedy, SequenceBuilder, Transition};
-use crate::runtime::{Backend, InferRequest, ModelDims};
+use crate::runtime::ModelDims;
 use crate::util::prng::Pcg32;
 use crate::vecenv::VecEnv;
 use std::sync::Arc;
-
-/// How an actor obtains q-values for its observations.
-pub enum PolicyPath {
-    /// SEED: round-trip through the central inference batcher.
-    Central(BatcherHandle),
-    /// IMPALA baseline: direct per-actor inference (batch of E).
-    Local(Backend),
-}
 
 pub struct ActorArgs {
     pub id: usize,
     pub cfg: SystemConfig,
     pub dims: ModelDims,
-    pub path: PolicyPath,
+    /// Split-phase inference client (central batcher or local backend).
+    pub policy: Box<dyn PolicyClient>,
     pub replay: Arc<SequenceReplay>,
     pub metrics: Registry,
     pub shutdown: ShutdownToken,
+    /// Stop after this many rounds (a round steps every env slot once);
+    /// `None` runs until shutdown. Tests/benches use this to make actor
+    /// runs deterministic.
+    pub max_rounds: Option<u64>,
 }
 
 /// Per-actor terminal statistics, returned at join time.
@@ -53,20 +59,42 @@ pub struct ActorStats {
     pub epsilon: f64,
 }
 
-/// The actor main loop. Runs until shutdown is signalled.
+/// Contiguous `(start, len)` slot groups: `e` slots split into `depth`
+/// pipeline stages, earlier groups taking the remainder slots.
+fn slot_groups(e: usize, depth: usize) -> Vec<(usize, usize)> {
+    let base = e / depth;
+    let extra = e % depth;
+    let mut out = Vec::with_capacity(depth);
+    let mut start = 0;
+    for g in 0..depth {
+        let len = base + usize::from(g < extra);
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+/// The actor main loop. Runs until shutdown is signalled (or
+/// `max_rounds` elapse). A policy failure signals shutdown and returns
+/// a descriptive error instead of dying silently.
 pub fn run_actor(args: ActorArgs) -> anyhow::Result<ActorStats> {
     let ActorArgs {
         id,
         cfg,
         dims,
-        path,
+        mut policy,
         replay,
         metrics,
         shutdown,
+        max_rounds,
     } = args;
 
     let e = cfg.actors.envs_per_actor.max(1);
     let total_slots = cfg.actors.num_actors * e;
+    // More pipeline stages than slots cannot help: clamp to one slot
+    // per group.
+    let depth = cfg.actors.pipeline_depth.max(1).min(e);
+    let groups = slot_groups(e, depth);
     // Slot seeds continue the seed layout of the single-env design:
     // actor `id` at E = 1 used instance seed `id + 1`; slot `s` of actor
     // `id` uses `id * E + s + 1`.
@@ -77,6 +105,8 @@ pub fn run_actor(args: ActorArgs) -> anyhow::Result<ActorStats> {
         venv.obs_len(),
         dims.obs_len
     );
+    let obs_len = dims.obs_len;
+    let hidden = dims.hidden;
 
     // Per-slot exploration spectrum over ALL environment slots in the
     // pool, so E envs on one thread explore like E distinct actors.
@@ -98,8 +128,8 @@ pub fn run_actor(args: ActorArgs) -> anyhow::Result<ActorStats> {
             SequenceBuilder::new(
                 cfg.learner.seq_len(),
                 cfg.learner.seq_overlap,
-                dims.obs_len,
-                dims.hidden,
+                obs_len,
+                hidden,
                 id * e + s,
             )
         })
@@ -109,112 +139,170 @@ pub fn run_actor(args: ActorArgs) -> anyhow::Result<ActorStats> {
     let episodes_c = metrics.counter("actor.episodes");
     let seqs = metrics.counter("actor.sequences");
     let step_time = metrics.timer("actor.step_seconds");
+    let overlap_time = metrics.timer("actor.overlap_seconds");
     let return_gauge = metrics.gauge("actor.last_return");
 
-    // Contiguous [E, S, S, K] observation slab and [E, hidden] recurrent
-    // state slabs: slot rows map 1:1 onto inference-batch rows.
-    let mut obs = venv.new_obs_batch();
-    let mut h = vec![0.0f32; e * dims.hidden];
-    let mut c = vec![0.0f32; e * dims.hidden];
-    venv.reset_all(&mut obs);
-
+    // Double-buffered contiguous [E, S, S, K] observation slabs plus
+    // [E, hidden] recurrent-state slabs (h/c inputs and h_next/c_next
+    // scatter targets): slot rows map 1:1 onto inference-batch rows, and
+    // the loop never clones a whole observation slab — stepping writes
+    // the post-step frame into the spare buffer while the pre-step frame
+    // is still recorded from the other.
+    let mut obs_bufs = [venv.new_obs_batch(), venv.new_obs_batch()];
+    // Which buffer holds each group's current (pre-step) observations.
+    let mut cur = vec![0usize; depth];
+    let mut h = vec![0.0f32; e * hidden];
+    let mut c = vec![0.0f32; e * hidden];
+    let mut h_next = vec![0.0f32; e * hidden];
+    let mut c_next = vec![0.0f32; e * hidden];
+    let mut q = vec![0.0f32; e * dims.num_actions];
     let mut actions = vec![0usize; e];
+    let mut steps_buf: Vec<crate::env::Step> = Vec::with_capacity(e);
+    venv.reset_all(&mut obs_bufs[0]);
+
     let mut return_sum = 0.0f64;
     let mut return_count = 0u64;
+    let mut rounds = 0u64;
+    let mut failure: Option<anyhow::Error> = None;
+
+    // Prologue: put every group's initial observations in flight.
+    for (g, &(start, len)) in groups.iter().enumerate() {
+        let orow = start * obs_len..(start + len) * obs_len;
+        let hrow = start * hidden..(start + len) * hidden;
+        if let Err(err) = policy.submit(
+            g,
+            len,
+            &obs_bufs[0][orow],
+            &h[hrow.clone()],
+            &c[hrow],
+        ) {
+            shutdown.signal();
+            return Err(anyhow::anyhow!("actor {id}: inference submit failed: {err}"));
+        }
+    }
 
     'run: while !shutdown.is_signalled() {
-        let t0 = std::time::Instant::now();
-        // Policy step: obtain q and next recurrent state for every slot.
-        let replies = match &path {
-            PolicyPath::Central(handle) => {
-                match handle.infer_many(id, e, &obs, &h, &c) {
-                    Ok(rs) => rs,
-                    Err(_) => break 'run, // batcher shut down
-                }
+        if let Some(max) = max_rounds {
+            if rounds >= max {
+                break;
             }
-            PolicyPath::Local(backend) => {
-                // One backend call can carry at most max_batch rows (the
-                // largest compiled AOT batch); E beyond that is served in
-                // ceil(E / max_batch) chunked calls.
-                let cap = cfg.batcher.max_batch.max(1);
-                let mut replies = Vec::with_capacity(e);
-                let mut start = 0usize;
-                while start < e {
-                    let n = cap.min(e - start);
-                    let r = backend.infer(InferRequest {
-                        n,
-                        h: h[start * dims.hidden..(start + n) * dims.hidden]
-                            .to_vec(),
-                        c: c[start * dims.hidden..(start + n) * dims.hidden]
-                            .to_vec(),
-                        obs: obs[start * dims.obs_len..(start + n) * dims.obs_len]
-                            .to_vec(),
-                    })?;
-                    for s in 0..n {
-                        replies.push(super::batcher::ActorReply {
-                            q: r.q[s * dims.num_actions..(s + 1) * dims.num_actions]
-                                .to_vec(),
-                            h: r.h[s * dims.hidden..(s + 1) * dims.hidden].to_vec(),
-                            c: r.c[s * dims.hidden..(s + 1) * dims.hidden].to_vec(),
-                        });
-                    }
-                    start += n;
-                }
-                replies
-            }
-        };
-        for s in 0..e {
-            actions[s] = epsilon_greedy(&replies[s].q, epsilons[s], &mut rngs[s]);
         }
+        rounds += 1;
+        for (g, &(start, len)) in groups.iter().enumerate() {
+            let t0 = std::time::Instant::now();
+            let orow = start * obs_len..(start + len) * obs_len;
+            let hrow = start * hidden..(start + len) * hidden;
+            let qrow = start * dims.num_actions..(start + len) * dims.num_actions;
 
-        // Environment step (the CPU-bound work the paper sweeps): all E
-        // slots advance before the next inference round-trip.
-        let prev_obs = obs.clone();
-        let step_results = venv.step_all(&actions, &mut obs).to_vec();
+            // Redeem group g's in-flight inference: q plus next
+            // recurrent state scatter straight into the slot rows.
+            if let Err(err) = policy.wait(
+                g,
+                &mut q[qrow],
+                &mut h_next[hrow.clone()],
+                &mut c_next[hrow.clone()],
+            ) {
+                if shutdown.is_signalled() {
+                    break 'run; // teardown race, not a failure
+                }
+                shutdown.signal();
+                failure =
+                    Some(anyhow::anyhow!("actor {id}: inference failed: {err}"));
+                break 'run;
+            }
+            let t_work = std::time::Instant::now();
 
-        for s in 0..e {
-            let step = &step_results[s];
-            let discount = if step.done && !step.truncated {
-                0.0
-            } else {
-                cfg.learner.gamma as f32
+            for s in start..start + len {
+                actions[s] = epsilon_greedy(
+                    &q[s * dims.num_actions..(s + 1) * dims.num_actions],
+                    epsilons[s],
+                    &mut rngs[s],
+                );
+            }
+
+            // Environment step (the CPU-bound work the paper sweeps) for
+            // this group's slots, into the spare observation buffer; the
+            // pre-step frames stay live in the current one.
+            let (prev_buf, next_buf) = {
+                let [a, b] = &mut obs_bufs;
+                if cur[g] == 0 {
+                    (&*a, b)
+                } else {
+                    (&*b, a)
+                }
             };
+            steps_buf.clear();
+            steps_buf.extend_from_slice(venv.step_range(
+                start,
+                &actions[start..start + len],
+                &mut next_buf[orow.clone()],
+            ));
 
-            if step.done {
-                episodes_c.inc();
-                let last = venv.slot(s).last_return as f64;
-                return_gauge.set(last);
-                return_sum += last;
-                return_count += 1;
+            for s in start..start + len {
+                let step = &steps_buf[s - start];
+                let discount = if step.done && !step.truncated {
+                    0.0
+                } else {
+                    cfg.learner.gamma as f32
+                };
+
+                if step.done {
+                    episodes_c.inc();
+                    let last = venv.slot(s).last_return as f64;
+                    return_gauge.set(last);
+                    return_sum += last;
+                    return_count += 1;
+                }
+
+                // Record the transition with the pre-step state.
+                let row = s * obs_len..(s + 1) * obs_len;
+                let hr = s * hidden..(s + 1) * hidden;
+                if let Some(seq) = builders[s].push(Transition {
+                    obs: prev_buf[row].to_vec(),
+                    action: actions[s] as i32,
+                    reward: step.reward,
+                    discount,
+                    h: h[hr.clone()].to_vec(),
+                    c: c[hr.clone()].to_vec(),
+                }) {
+                    replay.add(seq);
+                    seqs.inc();
+                }
+
+                // Advance recurrent state; reset it at episode ends.
+                if step.done {
+                    h[hr.clone()].fill(0.0);
+                    c[hr].fill(0.0);
+                } else {
+                    h[hr.clone()].copy_from_slice(&h_next[hr.clone()]);
+                    c[hr.clone()].copy_from_slice(&c_next[hr]);
+                }
             }
 
-            // Record the transition with the pre-step state.
-            let row = s * dims.obs_len..(s + 1) * dims.obs_len;
-            let hrow = s * dims.hidden..(s + 1) * dims.hidden;
-            if let Some(seq) = builders[s].push(Transition {
-                obs: prev_obs[row].to_vec(),
-                action: actions[s] as i32,
-                reward: step.reward,
-                discount,
-                h: h[hrow.clone()].to_vec(),
-                c: c[hrow.clone()].to_vec(),
-            }) {
-                replay.add(seq);
-                seqs.inc();
+            // Put group g's next round in flight before touching the
+            // other groups: at depth ≥ 2 their env work now overlaps it.
+            if let Err(err) =
+                policy.submit(g, len, &next_buf[orow], &h[hrow.clone()], &c[hrow])
+            {
+                if shutdown.is_signalled() {
+                    break 'run;
+                }
+                shutdown.signal();
+                failure = Some(anyhow::anyhow!(
+                    "actor {id}: inference submit failed: {err}"
+                ));
+                break 'run;
             }
+            cur[g] ^= 1;
 
-            // Advance recurrent state; reset it at episode boundaries.
-            if step.done {
-                h[hrow.clone()].fill(0.0);
-                c[hrow.clone()].fill(0.0);
-            } else {
-                h[hrow.clone()].copy_from_slice(&replies[s].h);
-                c[hrow].copy_from_slice(&replies[s].c);
+            steps.add(len as u64);
+            if depth > 1 {
+                // Env/bookkeeping time spent while the other groups'
+                // inference was in flight — the pipeline's win.
+                overlap_time.record(t_work.elapsed().as_secs_f64());
             }
+            step_time.record(t0.elapsed().as_secs_f64());
         }
-
-        steps.add(e as u64);
-        step_time.record(t0.elapsed().as_secs_f64());
     }
 
     for b in &mut builders {
@@ -222,6 +310,10 @@ pub fn run_actor(args: ActorArgs) -> anyhow::Result<ActorStats> {
             replay.add(seq);
             seqs.inc();
         }
+    }
+
+    if let Some(err) = failure {
+        return Err(err);
     }
 
     Ok(ActorStats {
@@ -241,8 +333,9 @@ pub fn run_actor(args: ActorArgs) -> anyhow::Result<ActorStats> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::policy::LocalClient;
     use crate::replay::{ReplayConfig, SequenceReplay};
-    use crate::runtime::MockModel;
+    use crate::runtime::{Backend, MockModel};
 
     fn test_cfg() -> (SystemConfig, ModelDims) {
         let mut cfg = SystemConfig::default();
@@ -263,7 +356,11 @@ mod tests {
         (cfg, dims)
     }
 
-    fn run_local_for(cfg: SystemConfig, dims: ModelDims, ms: u64) -> (ActorStats, Arc<SequenceReplay>, Registry) {
+    fn run_local_for(
+        cfg: SystemConfig,
+        dims: ModelDims,
+        ms: u64,
+    ) -> (ActorStats, Arc<SequenceReplay>, Registry) {
         let replay = Arc::new(SequenceReplay::new(ReplayConfig {
             capacity: 256,
             ..Default::default()
@@ -276,15 +373,22 @@ mod tests {
                 let replay = replay.clone();
                 let shutdown = shutdown.clone();
                 let metrics = metrics.clone();
+                let policy: Box<dyn PolicyClient> = Box::new(LocalClient::new(
+                    backend,
+                    cfg.batcher.max_batch,
+                    dims,
+                    &metrics,
+                ));
                 move || {
                     run_actor(ActorArgs {
                         id: 0,
                         cfg,
                         dims,
-                        path: PolicyPath::Local(backend),
+                        policy,
                         replay,
                         metrics,
                         shutdown,
+                        max_rounds: None,
                     })
                     .unwrap()
                 }
@@ -325,20 +429,85 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_actor_steps_all_slots() {
+        // depth 2 over 4 slots: two groups of 2 leapfrogging; every slot
+        // still advances once per round.
+        let (mut cfg, dims) = test_cfg();
+        cfg.actors.envs_per_actor = 4;
+        cfg.actors.pipeline_depth = 2;
+        let (stats, replay, metrics) = run_local_for(cfg, dims, 150);
+        assert_eq!(stats.envs, 4);
+        assert!(stats.env_steps >= 200, "steps {}", stats.env_steps);
+        assert!(replay.len() > 0);
+        // Groups may be one apart at shutdown, never more.
+        let per_group = 2u64;
+        let diff = stats.env_steps % (2 * per_group);
+        assert!(
+            diff == 0 || diff == per_group,
+            "groups drifted: {} steps",
+            stats.env_steps
+        );
+        assert!(metrics.timer("actor.overlap_seconds").snapshot().count() > 0);
+    }
+
+    #[test]
+    fn max_rounds_bounds_the_run_exactly() {
+        let (mut cfg, dims) = test_cfg();
+        cfg.actors.envs_per_actor = 3;
+        let replay = Arc::new(SequenceReplay::new(ReplayConfig::default()));
+        let backend = Backend::Mock(Arc::new(MockModel::new(dims, 3)));
+        let metrics = Registry::new();
+        let policy: Box<dyn PolicyClient> = Box::new(LocalClient::new(
+            backend,
+            cfg.batcher.max_batch,
+            dims,
+            &metrics,
+        ));
+        let stats = run_actor(ActorArgs {
+            id: 0,
+            cfg,
+            dims,
+            policy,
+            replay,
+            metrics,
+            shutdown: ShutdownToken::new(),
+            max_rounds: Some(25),
+        })
+        .unwrap();
+        assert_eq!(stats.env_steps, 25 * 3);
+    }
+
+    #[test]
     fn obs_len_mismatch_is_rejected() {
         let (mut cfg, dims) = test_cfg();
         cfg.env.frame_stack = 2; // obs_len becomes 200 != dims.obs_len 400
         let replay = Arc::new(SequenceReplay::new(ReplayConfig::default()));
         let backend = Backend::Mock(Arc::new(MockModel::new(dims, 3)));
+        let metrics = Registry::new();
+        let policy: Box<dyn PolicyClient> = Box::new(LocalClient::new(
+            backend,
+            cfg.batcher.max_batch,
+            dims,
+            &metrics,
+        ));
         let r = run_actor(ActorArgs {
             id: 0,
             cfg,
             dims,
-            path: PolicyPath::Local(backend),
+            policy,
             replay,
-            metrics: Registry::new(),
+            metrics,
             shutdown: ShutdownToken::new(),
+            max_rounds: None,
         });
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn slot_groups_cover_contiguously() {
+        assert_eq!(slot_groups(8, 2), vec![(0, 4), (4, 4)]);
+        assert_eq!(slot_groups(5, 2), vec![(0, 3), (3, 2)]);
+        assert_eq!(slot_groups(1, 1), vec![(0, 1)]);
+        assert_eq!(slot_groups(6, 3), vec![(0, 2), (2, 2), (4, 2)]);
     }
 }

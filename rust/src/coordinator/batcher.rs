@@ -1,11 +1,21 @@
 //! The central-inference batcher — the core of the SEED-RL dataflow.
 //!
-//! Actors submit single observations (+ their recurrent state) through a
-//! channel; the batcher thread greedily coalesces them into batches of up
-//! to `max_batch`, flushing a partial batch after `timeout_us` so tail
-//! latency stays bounded when few actors are running. Each flushed batch
-//! becomes one `Backend::infer` call (one padded AOT executable launch),
-//! and the replies are routed back to the submitting actors.
+//! Actors submit observation slabs (+ their recurrent state) through a
+//! channel; the batcher thread greedily coalesces pending rows into
+//! batches of up to `max_batch`, flushing a partial batch after
+//! `timeout_us` so tail latency stays bounded when few actors are
+//! running. Each flushed batch becomes one `Backend::infer` call (one
+//! padded AOT executable launch), and the reply rows are routed back to
+//! the submitting actors.
+//!
+//! Protocol (since the policy layer, DESIGN.md §5): a vecenv actor's E
+//! rows travel as **one multi-row [`InferItem`] carrying contiguous
+//! slabs**, with a single reply channel per submission. The batcher may
+//! split a submission across several flushed batches (it never exceeds
+//! `max_batch` rows per GPU call); each batch sends one [`ReplyChunk`]
+//! back with `slot0`-addressed rows, and the submitter's `wait` scatters
+//! them into its `[E, hidden]` slabs. Inference failures are surfaced as
+//! error chunks plus a `batcher.errors` counter — never a silent drop.
 //!
 //! Policy trade-off (paper Fig. 3 territory): a larger max_batch raises
 //! GPU efficiency; a longer timeout raises occupancy at low actor counts
@@ -15,20 +25,45 @@
 use crate::config::BatcherConfig;
 use crate::metrics::Registry;
 use crate::runtime::{Backend, InferRequest};
+use std::collections::VecDeque;
 use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// One actor's inference submission.
+/// One actor submission: `rows` observation/recurrent-state rows
+/// travelling together as contiguous row-major slabs. Replies arrive on
+/// `reply` as one or more [`ReplyChunk`]s (several when the rows span
+/// more than one flushed batch).
 pub struct InferItem {
     pub actor: usize,
+    pub rows: usize,
+    /// `[rows * obs_len]` row-major observation slab.
     pub obs: Vec<f32>,
+    /// `[rows * hidden]` recurrent-state slabs.
     pub h: Vec<f32>,
     pub c: Vec<f32>,
-    pub reply: mpsc::Sender<ActorReply>,
+    pub reply: mpsc::Sender<ReplyChunk>,
 }
 
-/// Per-actor inference result.
+/// A contiguous run of reply rows routed back to one submission.
+pub struct ReplyChunk {
+    /// First row (slot) of the submission this chunk covers.
+    pub slot0: usize,
+    pub rows: usize,
+    /// Row-major `[rows * A]` / `[rows * H]` slabs, or the inference
+    /// error message.
+    pub result: Result<ChunkData, String>,
+}
+
+/// Payload of a successful reply chunk.
+pub struct ChunkData {
+    pub q: Vec<f32>,
+    pub h: Vec<f32>,
+    pub c: Vec<f32>,
+}
+
+/// Per-actor single-row inference result (convenience API / tests).
 #[derive(Clone, Debug)]
 pub struct ActorReply {
     pub q: Vec<f32>,
@@ -36,14 +71,44 @@ pub struct ActorReply {
     pub c: Vec<f32>,
 }
 
-/// Handle used by actors to submit observations.
+/// Handle used by actors to submit observation slabs.
 #[derive(Clone)]
 pub struct BatcherHandle {
     tx: mpsc::Sender<InferItem>,
+    first_error: Arc<Mutex<Option<String>>>,
 }
 
 impl BatcherHandle {
-    /// Blocking round-trip: submit and wait for the routed reply.
+    /// Queue a multi-row submission. Replies arrive on `item.reply`.
+    pub fn submit(&self, item: InferItem) -> anyhow::Result<()> {
+        anyhow::ensure!(item.rows > 0, "submission with no rows");
+        anyhow::ensure!(
+            item.obs.len() % item.rows == 0
+                && item.h.len() % item.rows == 0
+                && item.c.len() % item.rows == 0,
+            "submission slabs must be divisible by rows"
+        );
+        self.tx
+            .send(item)
+            .map_err(|_| anyhow::anyhow!("{}", self.gone_message()))
+    }
+
+    /// First inference failure the batcher recorded, if any.
+    pub fn first_error(&self) -> Option<String> {
+        self.first_error.lock().unwrap().clone()
+    }
+
+    /// Descriptive shutdown message: names the inference failure when
+    /// the batcher died of one, instead of a bare "batcher gone".
+    pub fn gone_message(&self) -> String {
+        match self.first_error() {
+            Some(e) => format!("batcher gone after inference failure: {e}"),
+            None => "batcher gone".into(),
+        }
+    }
+
+    /// Blocking single-row round-trip: submit and wait for the routed
+    /// reply (tests / micro-benches; actors use the policy layer).
     pub fn infer(
         &self,
         actor: usize,
@@ -52,68 +117,30 @@ impl BatcherHandle {
         c: Vec<f32>,
     ) -> anyhow::Result<ActorReply> {
         let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(InferItem {
-                actor,
-                obs,
-                h,
-                c,
-                reply: rtx,
-            })
-            .map_err(|_| anyhow::anyhow!("batcher gone"))?;
-        rrx.recv().map_err(|_| anyhow::anyhow!("batcher dropped reply"))
-    }
-
-    /// Submit `n` observation rows at once (a vecenv actor's whole slot
-    /// batch), then block until all `n` routed replies arrive; replies
-    /// come back in slot order. All rows enter the batcher back-to-back,
-    /// so one multi-env actor fills a GPU batch the way `n` single-env
-    /// actors would — without the n threads.
-    ///
-    /// `obs`, `h`, and `c` are `[n, obs_len]`, `[n, hidden]`,
-    /// `[n, hidden]` row-major slabs.
-    pub fn infer_many(
-        &self,
-        actor: usize,
-        n: usize,
-        obs: &[f32],
-        h: &[f32],
-        c: &[f32],
-    ) -> anyhow::Result<Vec<ActorReply>> {
-        anyhow::ensure!(n > 0, "infer_many with no rows");
-        anyhow::ensure!(
-            obs.len() % n == 0 && h.len() % n == 0 && c.len() % n == 0,
-            "row slabs must be divisible by n"
-        );
-        let obs_len = obs.len() / n;
-        let hidden = h.len() / n;
-        // Submit all rows before waiting on any reply: the rows must be
-        // in the batcher's queue together to coalesce into one batch.
-        let mut pending = Vec::with_capacity(n);
-        for i in 0..n {
-            let (rtx, rrx) = mpsc::channel();
-            self.tx
-                .send(InferItem {
-                    actor,
-                    obs: obs[i * obs_len..(i + 1) * obs_len].to_vec(),
-                    h: h[i * hidden..(i + 1) * hidden].to_vec(),
-                    c: c[i * hidden..(i + 1) * hidden].to_vec(),
-                    reply: rtx,
-                })
-                .map_err(|_| anyhow::anyhow!("batcher gone"))?;
-            pending.push(rrx);
+        self.submit(InferItem {
+            actor,
+            rows: 1,
+            obs,
+            h,
+            c,
+            reply: rtx,
+        })?;
+        let chunk = rrx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("{}", self.gone_message()))?;
+        match chunk.result {
+            Ok(d) => Ok(ActorReply {
+                q: d.q,
+                h: d.h,
+                c: d.c,
+            }),
+            Err(e) => Err(anyhow::anyhow!("batcher inference failed: {e}")),
         }
-        pending
-            .into_iter()
-            .map(|rrx| {
-                rrx.recv()
-                    .map_err(|_| anyhow::anyhow!("batcher dropped reply"))
-            })
-            .collect()
     }
 }
 
-/// The batcher thread. Exits when every `BatcherHandle` is dropped.
+/// The batcher thread. Exits when every `BatcherHandle` is dropped, or
+/// after a backend inference failure (recorded in `first_error`).
 pub struct Batcher {
     join: Option<JoinHandle<()>>,
 }
@@ -125,11 +152,16 @@ impl Batcher {
         metrics: Registry,
     ) -> (Batcher, BatcherHandle) {
         let (tx, rx) = mpsc::channel::<InferItem>();
+        let first_error = Arc::new(Mutex::new(None));
+        let cell = first_error.clone();
         let join = std::thread::Builder::new()
             .name("rlarch-batcher".into())
-            .spawn(move || run_batcher(cfg, backend, metrics, rx))
+            .spawn(move || run_batcher(cfg, backend, metrics, rx, cell))
             .expect("spawn batcher");
-        (Batcher { join: Some(join) }, BatcherHandle { tx })
+        (
+            Batcher { join: Some(join) },
+            BatcherHandle { tx, first_error },
+        )
     }
 
     /// Wait for the batcher thread to exit (after all handles drop).
@@ -148,39 +180,81 @@ impl Drop for Batcher {
     }
 }
 
+/// A queued submission with a cursor over its already-batched rows.
+struct Open {
+    item: InferItem,
+    consumed: usize,
+}
+
 fn run_batcher(
     cfg: BatcherConfig,
     backend: Backend,
     metrics: Registry,
     rx: mpsc::Receiver<InferItem>,
+    first_error: Arc<Mutex<Option<String>>>,
 ) {
     let dims = backend.dims();
     let timeout = Duration::from_micros(cfg.timeout_us);
     let batches = metrics.counter("batcher.batches");
     let items = metrics.counter("batcher.items");
+    let errors = metrics.counter("batcher.errors");
     let flush_timeout = metrics.counter("batcher.flush_timeout");
     let flush_full = metrics.counter("batcher.flush_full");
     let occupancy = metrics.gauge("batcher.last_batch_size");
     let infer_time = metrics.timer("batcher.infer_seconds");
     let wait_time = metrics.timer("batcher.collect_seconds");
 
+    let mut queue: VecDeque<Open> = VecDeque::new();
+    let mut rows_avail = 0usize;
+
+    // Accept a submission into the queue; malformed slabs are refused
+    // with an error chunk instead of poisoning the batch assembly.
+    let push = |queue: &mut VecDeque<Open>, rows_avail: &mut usize, item: InferItem| {
+        let ok = item.rows > 0
+            && item.obs.len() == item.rows * dims.obs_len
+            && item.h.len() == item.rows * dims.hidden
+            && item.c.len() == item.rows * dims.hidden;
+        if !ok {
+            let _ = item.reply.send(ReplyChunk {
+                slot0: 0,
+                rows: item.rows,
+                result: Err(format!(
+                    "malformed submission from actor {}: {} rows, obs {}, h {}, c {}",
+                    item.actor,
+                    item.rows,
+                    item.obs.len(),
+                    item.h.len(),
+                    item.c.len()
+                )),
+            });
+            return;
+        }
+        *rows_avail += item.rows;
+        queue.push_back(Open { item, consumed: 0 });
+    };
+
     loop {
-        // Block for the first item of the next batch.
-        let first = match rx.recv() {
-            Ok(item) => item,
-            Err(_) => return, // all handles dropped
-        };
+        // Block for the first rows of the next batch (leftover rows of
+        // an oversized submission flow straight into the next one).
+        if rows_avail == 0 {
+            match rx.recv() {
+                Ok(item) => push(&mut queue, &mut rows_avail, item),
+                Err(_) => return, // all handles dropped
+            }
+            if rows_avail == 0 {
+                continue; // the submission was malformed
+            }
+        }
         let t_collect = Instant::now();
-        let mut pending = vec![first];
         let deadline = t_collect + timeout;
-        while pending.len() < cfg.max_batch {
+        while rows_avail < cfg.max_batch {
             let now = Instant::now();
             if now >= deadline {
                 flush_timeout.inc();
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(item) => pending.push(item),
+                Ok(item) => push(&mut queue, &mut rows_avail, item),
                 Err(mpsc::RecvTimeoutError::Timeout) => {
                     flush_timeout.inc();
                     break;
@@ -188,24 +262,40 @@ fn run_batcher(
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
-        if pending.len() == cfg.max_batch {
+        if rows_avail >= cfg.max_batch {
             flush_full.inc();
         }
         wait_time.record(t_collect.elapsed().as_secs_f64());
 
-        // Assemble the batched request.
-        let n = pending.len();
+        // Assemble up to max_batch rows off the queue front, consuming
+        // submissions partially where needed (rows > max_batch split
+        // across consecutive full batches, in slot order).
+        let n = rows_avail.min(cfg.max_batch);
         let mut req = InferRequest {
             n,
             h: Vec::with_capacity(n * dims.hidden),
             c: Vec::with_capacity(n * dims.hidden),
             obs: Vec::with_capacity(n * dims.obs_len),
         };
-        for item in &pending {
-            req.h.extend_from_slice(&item.h);
-            req.c.extend_from_slice(&item.c);
-            req.obs.extend_from_slice(&item.obs);
+        // (reply sender, slot0 within the submission, rows in this batch)
+        let mut routes: Vec<(mpsc::Sender<ReplyChunk>, usize, usize)> = Vec::new();
+        let mut taken = 0usize;
+        while taken < n {
+            let open = queue.front_mut().expect("rows_avail tracks queue rows");
+            let k = (open.item.rows - open.consumed).min(n - taken);
+            let (a, b) = (open.consumed, open.consumed + k);
+            req.h.extend_from_slice(&open.item.h[a * dims.hidden..b * dims.hidden]);
+            req.c.extend_from_slice(&open.item.c[a * dims.hidden..b * dims.hidden]);
+            req.obs
+                .extend_from_slice(&open.item.obs[a * dims.obs_len..b * dims.obs_len]);
+            routes.push((open.item.reply.clone(), open.consumed, k));
+            open.consumed += k;
+            taken += k;
+            if open.consumed == open.item.rows {
+                queue.pop_front();
+            }
         }
+        rows_avail -= n;
 
         let reply = infer_time.time(|| backend.infer(req));
         batches.inc();
@@ -214,20 +304,49 @@ fn run_batcher(
 
         match reply {
             Ok(out) => {
-                for (i, item) in pending.into_iter().enumerate() {
-                    let a = dims.num_actions;
-                    let h = dims.hidden;
-                    let _ = item.reply.send(ActorReply {
-                        q: out.q[i * a..(i + 1) * a].to_vec(),
-                        h: out.h[i * h..(i + 1) * h].to_vec(),
-                        c: out.c[i * h..(i + 1) * h].to_vec(),
+                let a = dims.num_actions;
+                let hd = dims.hidden;
+                let mut off = 0usize;
+                for (tx, slot0, k) in routes {
+                    let _ = tx.send(ReplyChunk {
+                        slot0,
+                        rows: k,
+                        result: Ok(ChunkData {
+                            q: out.q[off * a..(off + k) * a].to_vec(),
+                            h: out.h[off * hd..(off + k) * hd].to_vec(),
+                            c: out.c[off * hd..(off + k) * hd].to_vec(),
+                        }),
                     });
+                    off += k;
                 }
             }
             Err(e) => {
-                // Inference failure: drop the replies; actors see a closed
-                // channel and shut down. Report once per batch.
-                eprintln!("batcher inference failed: {e}");
+                // Inference failure: fail this batch's submissions and
+                // everything still queued with the message, record it,
+                // and exit — waiters see the error, later submitters see
+                // a descriptive `gone_message`.
+                errors.inc();
+                let msg = e.to_string();
+                let mut cell = first_error.lock().unwrap();
+                if cell.is_none() {
+                    *cell = Some(msg.clone());
+                }
+                drop(cell);
+                for (tx, slot0, k) in routes {
+                    let _ = tx.send(ReplyChunk {
+                        slot0,
+                        rows: k,
+                        result: Err(msg.clone()),
+                    });
+                }
+                for open in queue.drain(..) {
+                    let _ = open.item.reply.send(ReplyChunk {
+                        slot0: open.consumed,
+                        rows: open.item.rows - open.consumed,
+                        result: Err(msg.clone()),
+                    });
+                }
+                return;
             }
         }
     }
@@ -256,6 +375,43 @@ mod tests {
             timeout_us,
             batch_sizes: vec![max_batch],
         }
+    }
+
+    /// Submit a multi-row slab and gather all reply chunks into
+    /// slot-ordered row slabs.
+    fn submit_and_gather(
+        handle: &BatcherHandle,
+        dims: &ModelDims,
+        rows: usize,
+        obs: Vec<f32>,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, usize) {
+        let (rtx, rrx) = mpsc::channel();
+        handle
+            .submit(InferItem {
+                actor: 0,
+                rows,
+                obs,
+                h: vec![0.0; rows * dims.hidden],
+                c: vec![0.0; rows * dims.hidden],
+                reply: rtx,
+            })
+            .unwrap();
+        let mut q = vec![0.0f32; rows * dims.num_actions];
+        let mut h = vec![0.0f32; rows * dims.hidden];
+        let mut c = vec![0.0f32; rows * dims.hidden];
+        let mut done = 0usize;
+        let mut chunks = 0usize;
+        while done < rows {
+            let chunk = rrx.recv().expect("reply chunk");
+            let d = chunk.result.expect("inference ok");
+            let (s, k) = (chunk.slot0, chunk.rows);
+            q[s * dims.num_actions..(s + k) * dims.num_actions].copy_from_slice(&d.q);
+            h[s * dims.hidden..(s + k) * dims.hidden].copy_from_slice(&d.h);
+            c[s * dims.hidden..(s + k) * dims.hidden].copy_from_slice(&d.c);
+            done += k;
+            chunks += 1;
+        }
+        (q, h, c, chunks)
     }
 
     #[test]
@@ -308,13 +464,13 @@ mod tests {
         }
         drop(handle);
         batcher.join();
-        // Batching really happened (fewer batches than items).
+        // Batching really happened (fewer batches than rows).
         assert!(m.counter("batcher.batches").get() < 12);
         assert_eq!(m.counter("batcher.items").get(), 12);
     }
 
     #[test]
-    fn infer_many_routes_rows_in_slot_order_and_coalesces() {
+    fn multi_row_submission_routes_rows_in_slot_order_as_one_batch() {
         let (backend, dims) = mock_backend();
         let m = Registry::new();
         let (batcher, handle) =
@@ -322,14 +478,10 @@ mod tests {
         let n = 5;
         let mut obs = vec![0.0f32; n * dims.obs_len];
         for i in 0..n {
-            obs[i * dims.obs_len..(i + 1) * dims.obs_len]
-                .fill(i as f32 / n as f32);
+            obs[i * dims.obs_len..(i + 1) * dims.obs_len].fill(i as f32 / n as f32);
         }
-        let h = vec![0.0f32; n * dims.hidden];
-        let c = vec![0.0f32; n * dims.hidden];
-        let replies = handle.infer_many(0, n, &obs, &h, &c).unwrap();
-        assert_eq!(replies.len(), n);
-        for (i, r) in replies.iter().enumerate() {
+        let (q, _, _, chunks) = submit_and_gather(&handle, &dims, n, obs);
+        for i in 0..n {
             let direct = backend
                 .infer(InferRequest {
                     n: 1,
@@ -338,14 +490,56 @@ mod tests {
                     obs: vec![i as f32 / n as f32; dims.obs_len],
                 })
                 .unwrap();
-            assert_eq!(r.q, direct.q, "row {i} misrouted");
+            assert_eq!(
+                q[i * dims.num_actions..(i + 1) * dims.num_actions],
+                direct.q[..],
+                "row {i} misrouted"
+            );
         }
         drop(handle);
         batcher.join();
-        // All 5 rows entered together: they coalesce into 1-2 batches
-        // instead of 5 singleton calls.
+        // All 5 rows entered together: one multi-row item, one batch,
+        // one reply chunk — not 5 singleton calls.
+        assert_eq!(chunks, 1);
         assert_eq!(m.counter("batcher.items").get(), 5);
-        assert!(m.counter("batcher.batches").get() <= 2);
+        assert_eq!(m.counter("batcher.batches").get(), 1);
+    }
+
+    #[test]
+    fn oversized_submission_splits_across_full_batches_in_slot_order() {
+        // rows = 10 > max_batch = 4: must be served as 4 + 4 + 2, never
+        // exceeding the cap, with every row routed back in slot order.
+        let (backend, dims) = mock_backend();
+        let m = Registry::new();
+        let (batcher, handle) = Batcher::spawn(cfg(4, 500), backend.clone(), m.clone());
+        let n = 10;
+        let mut obs = vec![0.0f32; n * dims.obs_len];
+        for i in 0..n {
+            obs[i * dims.obs_len..(i + 1) * dims.obs_len].fill(i as f32 / n as f32);
+        }
+        let (q, _, _, chunks) = submit_and_gather(&handle, &dims, n, obs);
+        for i in 0..n {
+            let direct = backend
+                .infer(InferRequest {
+                    n: 1,
+                    h: vec![0.0; dims.hidden],
+                    c: vec![0.0; dims.hidden],
+                    obs: vec![i as f32 / n as f32; dims.obs_len],
+                })
+                .unwrap();
+            assert_eq!(
+                q[i * dims.num_actions..(i + 1) * dims.num_actions],
+                direct.q[..],
+                "row {i} misrouted"
+            );
+        }
+        drop(handle);
+        batcher.join();
+        assert_eq!(chunks, 3, "10 rows at cap 4 => 3 chunks");
+        assert_eq!(m.counter("batcher.items").get(), 10);
+        assert_eq!(m.counter("batcher.batches").get(), 3);
+        assert_eq!(m.counter("batcher.flush_full").get(), 2);
+        assert!(m.gauge("batcher.last_batch_size").get() <= 4.0);
     }
 
     #[test]
@@ -364,9 +558,43 @@ mod tests {
         });
         drop(handle);
         batcher.join();
-        // 16 items / cap 4 => at least 4 batches, all full-or-smaller.
+        // 16 rows / cap 4 => at least 4 batches, all full-or-smaller.
         assert!(m.counter("batcher.batches").get() >= 4);
         assert_eq!(m.counter("batcher.items").get(), 16);
         assert!(m.gauge("batcher.last_batch_size").get() <= 4.0);
+    }
+
+    #[test]
+    fn inference_failure_surfaces_as_error_chunks_and_counter() {
+        let dims = ModelDims {
+            obs_len: 8,
+            hidden: 4,
+            num_actions: 3,
+            seq_len: 4,
+            train_batch: 2,
+        };
+        let backend = Backend::Mock(Arc::new(
+            MockModel::new(dims, 1).with_infer_error("injected GPU fault"),
+        ));
+        let m = Registry::new();
+        let (batcher, handle) = Batcher::spawn(cfg(8, 200), backend, m.clone());
+        let err = handle
+            .infer(0, vec![0.5; dims.obs_len], vec![0.0; 4], vec![0.0; 4])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("injected GPU fault"), "got: {err}");
+        assert_eq!(m.counter("batcher.errors").get(), 1);
+        assert_eq!(
+            handle.first_error().as_deref(),
+            Some("injected GPU fault")
+        );
+        // The batcher thread exited; later submissions fail with a
+        // descriptive message, not a bare "batcher gone".
+        batcher.join();
+        let err = handle
+            .infer(0, vec![0.5; dims.obs_len], vec![0.0; 4], vec![0.0; 4])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("injected GPU fault"), "got: {err}");
     }
 }

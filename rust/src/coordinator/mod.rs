@@ -1,17 +1,19 @@
 //! L3 coordinator — the paper's system under study.
 //!
 //! Wires the SEED-RL dataflow: N actor threads step environments (CPU
-//! side), a central inference batcher coalesces their observations into
-//! batched accelerator calls, completed sequences land in prioritized
-//! replay, and the learner thread trains the AOT'd R2D2 graph and
-//! refreshes priorities. The IMPALA-style `Local` mode skips the batcher
-//! and performs per-actor inference — the architectural baseline the
-//! paper contrasts (Fig. 1).
+//! side), a central inference batcher coalesces their observation slabs
+//! into batched accelerator calls, completed sequences land in
+//! prioritized replay, and the learner thread trains the AOT'd R2D2
+//! graph and refreshes priorities. Actors reach inference through the
+//! split-phase `policy` layer (submit/wait), which lets them pipeline
+//! env stepping against in-flight inference. The IMPALA-style `Local`
+//! mode skips the batcher and performs per-actor inference — the
+//! architectural baseline the paper contrasts (Fig. 1).
 //!
 //! ```text
-//!  actors (env CPU) ──obs──► batcher ──batched──► Backend (PJRT thread)
-//!     ▲                                            │ q, h', c'
-//!     └── actions ◄──────────── routed replies ◄───┘
+//!  actors (env CPU) ─submit─► policy ──slabs──► batcher ──► Backend (PJRT)
+//!     ▲                         ▲                              │ q, h', c'
+//!     └── wait ◄── scatter ◄────┴──── slot-addressed chunks ◄──┘
 //!  actors ──sequences──► SequenceReplay ◄──sample── learner ──► train()
 //! ```
 
@@ -19,13 +21,14 @@ pub mod actor;
 pub mod batcher;
 pub mod learner;
 
-pub use actor::{ActorStats, PolicyPath};
-pub use batcher::{ActorReply, Batcher, BatcherHandle, InferItem};
+pub use actor::ActorStats;
+pub use batcher::{ActorReply, Batcher, BatcherHandle, ChunkData, InferItem, ReplyChunk};
 pub use learner::{LearnerStats, assemble_batch};
 
 use crate::config::{InferenceMode, SystemConfig};
 use crate::exec::ShutdownToken;
 use crate::metrics::Registry;
+use crate::policy::{CentralClient, LocalClient, PolicyClient};
 use crate::replay::{ReplayConfig, SequenceReplay};
 use crate::runtime::Backend;
 use std::sync::Arc;
@@ -49,6 +52,12 @@ pub struct RunReport {
     pub sequences: u64,
     pub inference_batches: u64,
     pub mean_batch_occupancy: f64,
+    /// Batched-inference failures the batcher observed (mirrors the
+    /// `batcher.errors` counter; 0 on a healthy run).
+    pub batcher_errors: u64,
+    /// First actor failure message, if any actor exited with an error
+    /// (e.g. a batcher inference failure) instead of a clean shutdown.
+    pub first_error: Option<String>,
 }
 
 /// Episode-weighted mean completed-episode return: each actor's mean
@@ -102,47 +111,69 @@ pub fn run(cfg: &SystemConfig, backend: Backend, metrics: Registry) -> anyhow::R
         InferenceMode::Local => (None, None),
     };
 
-    let (learner_stats, actor_stats) = std::thread::scope(|s| -> anyhow::Result<_> {
-        let mut actor_joins = Vec::new();
-        for id in 0..cfg.actors.num_actors {
-            let path = match (&cfg.mode, &batcher_handle) {
-                (InferenceMode::Central, Some(h)) => PolicyPath::Central(h.clone()),
-                _ => PolicyPath::Local(backend.clone()),
-            };
-            let args = actor::ActorArgs {
-                id,
-                cfg: cfg.clone(),
+    let (learner_stats, actor_stats, actor_errors) =
+        std::thread::scope(|s| -> anyhow::Result<_> {
+            let mut actor_joins = Vec::new();
+            for id in 0..cfg.actors.num_actors {
+                let policy: Box<dyn PolicyClient> = match (&cfg.mode, &batcher_handle)
+                {
+                    (InferenceMode::Central, Some(h)) => Box::new(
+                        CentralClient::new(h.clone(), id, dims, &metrics),
+                    ),
+                    _ => Box::new(LocalClient::new(
+                        backend.clone(),
+                        cfg.batcher.max_batch,
+                        dims,
+                        &metrics,
+                    )),
+                };
+                let args = actor::ActorArgs {
+                    id,
+                    cfg: cfg.clone(),
+                    dims,
+                    policy,
+                    replay: replay.clone(),
+                    metrics: metrics.clone(),
+                    shutdown: shutdown.clone(),
+                    max_rounds: None,
+                };
+                actor_joins.push(
+                    std::thread::Builder::new()
+                        .name(format!("rlarch-actor-{id}"))
+                        .spawn_scoped(s, move || actor::run_actor(args))
+                        .expect("spawn actor"),
+                );
+            }
+
+            let learner_result = learner::run_learner(learner::LearnerArgs {
+                cfg: cfg.learner.clone(),
                 dims,
-                path,
+                backend: backend.clone(),
                 replay: replay.clone(),
                 metrics: metrics.clone(),
                 shutdown: shutdown.clone(),
-            };
-            actor_joins.push(
-                std::thread::Builder::new()
-                    .name(format!("rlarch-actor-{id}"))
-                    .spawn_scoped(s, move || actor::run_actor(args))
-                    .expect("spawn actor"),
-            );
-        }
-
-        let learner_stats = learner::run_learner(learner::LearnerArgs {
-            cfg: cfg.learner.clone(),
-            dims,
-            backend: backend.clone(),
-            replay: replay.clone(),
-            metrics: metrics.clone(),
-            shutdown: shutdown.clone(),
-            loss_every: 10,
-            seed: cfg.seed,
+                loss_every: 10,
+                seed: cfg.seed,
+            });
+            // run_learner signals shutdown on its happy path only; a
+            // learner error (backend train failure) must also stop the
+            // actors, or the joins below would hang forever.
+            if learner_result.is_err() {
+                shutdown.signal();
+            }
+            // Actors drain out. A failed actor (e.g. batcher inference
+            // failure) is recorded rather than aborting the report: the
+            // first message surfaces through `RunReport::first_error`.
+            let mut actor_stats = Vec::new();
+            let mut actor_errors: Vec<String> = Vec::new();
+            for j in actor_joins {
+                match j.join().expect("actor panicked") {
+                    Ok(stats) => actor_stats.push(stats),
+                    Err(e) => actor_errors.push(e.to_string()),
+                }
+            }
+            Ok((learner_result?, actor_stats, actor_errors))
         })?;
-        // run_learner signals shutdown on exit; actors drain out.
-        let mut actor_stats = Vec::new();
-        for j in actor_joins {
-            actor_stats.push(j.join().expect("actor panicked")?);
-        }
-        Ok((learner_stats, actor_stats))
-    })?;
 
     // Drop our handle so the batcher thread can exit, then join it.
     drop(batcher_handle);
@@ -172,6 +203,8 @@ pub fn run(cfg: &SystemConfig, backend: Backend, metrics: Registry) -> anyhow::R
         } else {
             0.0
         },
+        batcher_errors: metrics.counter("batcher.errors").get(),
+        first_error: actor_errors.first().cloned(),
     })
 }
 
@@ -283,6 +316,83 @@ mod tests {
             "occupancy {}",
             report.mean_batch_occupancy
         );
+    }
+
+    #[test]
+    fn pipelined_central_mode_end_to_end() {
+        let (mut cfg, backend) = mock_system(2, InferenceMode::Central);
+        cfg.actors.envs_per_actor = 4;
+        cfg.actors.pipeline_depth = 2;
+        let report = run(&cfg, backend, Registry::new()).unwrap();
+        assert_eq!(report.learner.steps, 30);
+        assert_eq!(report.total_envs, 8);
+        assert!(report.env_steps > 0);
+        assert!(report.sequences > 0);
+        assert_eq!(report.batcher_errors, 0);
+        assert!(report.first_error.is_none(), "{:?}", report.first_error);
+    }
+
+    #[test]
+    fn inference_failure_is_surfaced_in_report() {
+        let (cfg, _healthy) = mock_system(2, InferenceMode::Central);
+        let dims = ModelDims {
+            obs_len: 400,
+            hidden: 8,
+            num_actions: 4,
+            seq_len: 6,
+            train_batch: 4,
+        };
+        let backend = Backend::Mock(Arc::new(
+            MockModel::new(dims, 11).with_infer_error("injected GPU fault"),
+        ));
+        let metrics = Registry::new();
+        let report = run(&cfg, backend, metrics.clone()).unwrap();
+        // Actors exited with a descriptive error; the first message and
+        // the failure counter surface through the report.
+        let msg = report.first_error.as_deref().unwrap_or("");
+        assert!(msg.contains("injected GPU fault"), "got: {msg}");
+        assert!(report.batcher_errors >= 1);
+        assert!(metrics.counter("batcher.errors").get() >= 1);
+        assert_eq!(report.learner.steps, 0, "no data ever reached replay");
+    }
+
+    #[test]
+    fn learner_train_failure_terminates_and_propagates() {
+        // A backend train failure must stop the actors (not hang the
+        // scope joins) and surface as run()'s error.
+        let (cfg, _healthy) = mock_system(2, InferenceMode::Central);
+        let dims = ModelDims {
+            obs_len: 400,
+            hidden: 8,
+            num_actions: 4,
+            seq_len: 6,
+            train_batch: 4,
+        };
+        let backend = Backend::Mock(Arc::new(
+            MockModel::new(dims, 11).with_train_error("injected train fault"),
+        ));
+        let err = run(&cfg, backend, Registry::new()).unwrap_err().to_string();
+        assert!(err.contains("injected train fault"), "got: {err}");
+    }
+
+    #[test]
+    fn local_inference_failure_is_surfaced_in_report() {
+        let (mut cfg, _healthy) = mock_system(1, InferenceMode::Local);
+        cfg.mode = InferenceMode::Local;
+        let dims = ModelDims {
+            obs_len: 400,
+            hidden: 8,
+            num_actions: 4,
+            seq_len: 6,
+            train_batch: 4,
+        };
+        let backend = Backend::Mock(Arc::new(
+            MockModel::new(dims, 11).with_infer_error("injected local fault"),
+        ));
+        let report = run(&cfg, backend, Registry::new()).unwrap();
+        let msg = report.first_error.as_deref().unwrap_or("");
+        assert!(msg.contains("injected local fault"), "got: {msg}");
+        assert_eq!(report.batcher_errors, 0, "no batcher in local mode");
     }
 
     #[test]

@@ -12,6 +12,11 @@
 //!   Each actor thread drives a [`vecenv::VecEnv`]; the
 //!   `actors.envs_per_actor` knob sets how many environments ride on one
 //!   thread (1 = the paper's baseline topology).
+//! * [`policy`] — split-phase inference clients (`submit`/`wait`): the
+//!   seam between actors and inference. `actors.pipeline_depth` splits a
+//!   thread's env slots into groups so env stepping overlaps in-flight
+//!   inference (1 = the seed's serialized loop, bit-for-bit; see
+//!   DESIGN.md §5).
 //! * [`vecenv`] — vectorized environment engine: E wrapped environments
 //!   stepped in lockstep behind one contiguous `[E, S, S, K]`
 //!   observation buffer, decoupling environments-in-flight from CPU
@@ -21,7 +26,8 @@
 //! * [`env`], [`replay`], [`rl`] — RL substrates (ALE-like suite, R2D2
 //!   prioritized sequence replay, epsilon/return utilities).
 //! * [`simarch`] — the architectural simulator (GPU/CPU/power models);
-//!   its system model carries the same `envs_per_actor` axis.
+//!   its system model carries the same `envs_per_actor` and
+//!   `pipeline_depth` axes.
 //! * [`util`], [`exec`], [`config`], [`cli`], [`metrics`], [`report`] —
 //!   dependency-free infrastructure (the offline crate set has no
 //!   tokio/serde/clap/criterion).
@@ -32,6 +38,7 @@ pub mod coordinator;
 pub mod env;
 pub mod exec;
 pub mod metrics;
+pub mod policy;
 pub mod replay;
 pub mod report;
 pub mod simarch;

@@ -58,6 +58,11 @@ fn load_config(parsed: &rlarch::cli::Parsed) -> anyhow::Result<SystemConfig> {
             cfg.actors.envs_per_actor = e;
         }
     }
+    if let Ok(d) = parsed.get_usize("pipeline-depth") {
+        if d > 0 {
+            cfg.actors.pipeline_depth = d;
+        }
+    }
     if let Ok(k) = parsed.get_usize("steps") {
         if k > 0 {
             cfg.learner.max_steps = k;
@@ -78,6 +83,11 @@ fn cmd_train(args: &[String]) -> i32 {
         .flag("config", "", "TOML config path (default: built-in)")
         .flag("actors", "0", "override actor count")
         .flag("envs-per-actor", "0", "override envs per actor thread (vecenv)")
+        .flag(
+            "pipeline-depth",
+            "0",
+            "override actor pipeline depth (1 = serialized)",
+        )
         .flag("steps", "0", "override learner steps")
         .flag("env", "", "override env (grid_pong|breakout|catch|nav_maze)")
         .flag("mode", "central", "central (SEED) or local (IMPALA-style)")
@@ -96,14 +106,21 @@ fn cmd_train(args: &[String]) -> i32 {
         let backend = Backend::Xla(handle);
         let metrics = Registry::new();
         println!(
-            "rlarch train: env={} actors={} envs/actor={} steps={} mode={:?}",
+            "rlarch train: env={} actors={} envs/actor={} depth={} steps={} mode={:?}",
             cfg.env.name,
             cfg.actors.num_actors,
             cfg.actors.envs_per_actor,
+            cfg.actors.pipeline_depth,
             cfg.learner.max_steps,
             cfg.mode
         );
         let report = coordinator::run(&cfg, backend, metrics.clone())?;
+        if let Some(e) = &report.first_error {
+            anyhow::bail!(
+                "run failed ({} batcher error(s)): {e}",
+                report.batcher_errors
+            );
+        }
         println!(
             "done in {:.1}s: {} env steps ({:.0}/s), {} episodes, mean return {:.2}",
             report.elapsed_seconds,

@@ -41,6 +41,17 @@ impl Gauge {
         self.v.store(x.to_bits(), Ordering::Relaxed);
     }
 
+    /// Atomically add `delta` (CAS loop). Lets multiple writers share a
+    /// level-style gauge (e.g. `policy.inflight` across actor threads)
+    /// without clobbering each other the way `set` would.
+    pub fn add(&self, delta: f64) {
+        let _ = self
+            .v
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+                Some((f64::from_bits(bits) + delta).to_bits())
+            });
+    }
+
     pub fn get(&self) -> f64 {
         f64::from_bits(self.v.load(Ordering::Relaxed))
     }
@@ -170,6 +181,27 @@ mod tests {
         r.gauge("power_w").set(70.0);
         r.gauge("power_w").set(250.5);
         assert_eq!(r.gauge("power_w").get(), 250.5);
+    }
+
+    #[test]
+    fn gauge_add_accumulates_across_clones() {
+        let r = Registry::new();
+        let g = r.gauge("inflight");
+        g.set(0.0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let g = g.clone();
+                s.spawn(move || {
+                    for _ in 0..100 {
+                        g.add(1.0);
+                        g.add(-1.0);
+                    }
+                    g.add(1.0);
+                });
+            }
+        });
+        // 4 threads each net +1: concurrent add must not lose updates.
+        assert_eq!(r.gauge("inflight").get(), 4.0);
     }
 
     #[test]

@@ -1,0 +1,138 @@
+//! SEED-style split-phase client: one multi-row slab submission to the
+//! central batcher per `submit`, slot-addressed reply chunks scattered
+//! into the caller's slabs at `wait`.
+
+use super::PolicyClient;
+use crate::coordinator::batcher::{BatcherHandle, InferItem, ReplyChunk};
+use crate::metrics::{Gauge, Registry};
+use crate::runtime::ModelDims;
+use std::sync::mpsc;
+
+struct Pending {
+    rx: mpsc::Receiver<ReplyChunk>,
+    rows: usize,
+}
+
+/// Split-phase client over the central inference batcher. `submit`
+/// sends the whole row slab as one [`InferItem`] with a single reply
+/// channel; the batcher may serve it as several batches, and `wait`
+/// scatters each chunk by its slot offset — no per-row vectors, no
+/// per-row channels.
+pub struct CentralClient {
+    handle: BatcherHandle,
+    actor: usize,
+    dims: ModelDims,
+    inflight: Vec<Option<Pending>>,
+    /// Shared across every actor's client: submissions currently in
+    /// flight, pool-wide (incremented on submit, decremented on wait).
+    inflight_gauge: Gauge,
+}
+
+impl CentralClient {
+    pub fn new(
+        handle: BatcherHandle,
+        actor: usize,
+        dims: ModelDims,
+        metrics: &Registry,
+    ) -> Self {
+        Self {
+            handle,
+            actor,
+            dims,
+            inflight: Vec::new(),
+            inflight_gauge: metrics.gauge("policy.inflight"),
+        }
+    }
+}
+
+impl Drop for CentralClient {
+    fn drop(&mut self) {
+        // The pipelined actor exits with up to one un-waited submission
+        // per group; give their gauge increments back so the pool-wide
+        // `policy.inflight` reads 0 after a run, not num_actors * depth.
+        let abandoned = self.inflight.iter().filter(|p| p.is_some()).count();
+        if abandoned > 0 {
+            self.inflight_gauge.add(-(abandoned as f64));
+        }
+    }
+}
+
+impl PolicyClient for CentralClient {
+    fn submit(
+        &mut self,
+        ticket: usize,
+        rows: usize,
+        obs: &[f32],
+        h: &[f32],
+        c: &[f32],
+    ) -> anyhow::Result<()> {
+        let d = &self.dims;
+        anyhow::ensure!(rows > 0, "submit with no rows");
+        anyhow::ensure!(obs.len() == rows * d.obs_len, "obs slab length");
+        anyhow::ensure!(
+            h.len() == rows * d.hidden && c.len() == rows * d.hidden,
+            "recurrent slab length"
+        );
+        if self.inflight.len() <= ticket {
+            self.inflight.resize_with(ticket + 1, || None);
+        }
+        anyhow::ensure!(
+            self.inflight[ticket].is_none(),
+            "ticket {ticket} already in flight"
+        );
+        let (rtx, rrx) = mpsc::channel();
+        self.handle.submit(InferItem {
+            actor: self.actor,
+            rows,
+            obs: obs.to_vec(),
+            h: h.to_vec(),
+            c: c.to_vec(),
+            reply: rtx,
+        })?;
+        self.inflight[ticket] = Some(Pending { rx: rrx, rows });
+        self.inflight_gauge.add(1.0);
+        Ok(())
+    }
+
+    fn wait(
+        &mut self,
+        ticket: usize,
+        q: &mut [f32],
+        h: &mut [f32],
+        c: &mut [f32],
+    ) -> anyhow::Result<()> {
+        let pending = self
+            .inflight
+            .get_mut(ticket)
+            .and_then(Option::take)
+            .ok_or_else(|| anyhow::anyhow!("wait on idle ticket {ticket}"))?;
+        self.inflight_gauge.add(-1.0);
+        let d = &self.dims;
+        let n = pending.rows;
+        anyhow::ensure!(q.len() == n * d.num_actions, "q slab length");
+        anyhow::ensure!(
+            h.len() == n * d.hidden && c.len() == n * d.hidden,
+            "recurrent slab length"
+        );
+        let mut done = 0usize;
+        while done < n {
+            let chunk = pending
+                .rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("{}", self.handle.gone_message()))?;
+            let data = match chunk.result {
+                Ok(data) => data,
+                Err(e) => {
+                    return Err(anyhow::anyhow!("central inference failed: {e}"))
+                }
+            };
+            let (s, k) = (chunk.slot0, chunk.rows);
+            anyhow::ensure!(s + k <= n, "chunk rows out of range");
+            q[s * d.num_actions..(s + k) * d.num_actions].copy_from_slice(&data.q);
+            h[s * d.hidden..(s + k) * d.hidden].copy_from_slice(&data.h);
+            c[s * d.hidden..(s + k) * d.hidden].copy_from_slice(&data.c);
+            done += k;
+        }
+        Ok(())
+    }
+}

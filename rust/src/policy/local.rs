@@ -1,0 +1,138 @@
+//! IMPALA-style split-phase client: direct backend inference, chunked
+//! at `max_batch` rows (the largest compiled AOT batch) over borrowed
+//! sub-slices of the caller's slabs.
+
+use super::PolicyClient;
+use crate::metrics::{Gauge, Registry};
+use crate::runtime::{Backend, InferSlices, ModelDims};
+
+/// Per-ticket reply buffers, reused across steps so the client itself
+/// allocates no slabs in the steady-state submit/wait cycle (backend
+/// replies still allocate their own outputs).
+#[derive(Default)]
+struct Slot {
+    rows: usize,
+    q: Vec<f32>,
+    h: Vec<f32>,
+    c: Vec<f32>,
+}
+
+/// Split-phase client over a local backend. Local inference has no
+/// remote latency to overlap, so the call runs synchronously inside
+/// `submit` and `wait` only scatters — the honest model of the paper's
+/// per-actor-inference baseline (pipeline depth buys nothing here).
+pub struct LocalClient {
+    backend: Backend,
+    max_batch: usize,
+    dims: ModelDims,
+    slots: Vec<Option<Slot>>,
+    spare: Vec<Slot>,
+    /// Shared across every actor's client: submissions currently in
+    /// flight, pool-wide (incremented on submit, decremented on wait).
+    inflight_gauge: Gauge,
+}
+
+impl LocalClient {
+    pub fn new(
+        backend: Backend,
+        max_batch: usize,
+        dims: ModelDims,
+        metrics: &Registry,
+    ) -> Self {
+        Self {
+            backend,
+            max_batch: max_batch.max(1),
+            dims,
+            slots: Vec::new(),
+            spare: Vec::new(),
+            inflight_gauge: metrics.gauge("policy.inflight"),
+        }
+    }
+}
+
+impl Drop for LocalClient {
+    fn drop(&mut self) {
+        // Mirror CentralClient: give abandoned tickets' gauge increments
+        // back so `policy.inflight` reads 0 after a run.
+        let abandoned = self.slots.iter().filter(|s| s.is_some()).count();
+        if abandoned > 0 {
+            self.inflight_gauge.add(-(abandoned as f64));
+        }
+    }
+}
+
+impl PolicyClient for LocalClient {
+    fn submit(
+        &mut self,
+        ticket: usize,
+        rows: usize,
+        obs: &[f32],
+        h: &[f32],
+        c: &[f32],
+    ) -> anyhow::Result<()> {
+        let d = self.dims;
+        anyhow::ensure!(rows > 0, "submit with no rows");
+        anyhow::ensure!(obs.len() == rows * d.obs_len, "obs slab length");
+        anyhow::ensure!(
+            h.len() == rows * d.hidden && c.len() == rows * d.hidden,
+            "recurrent slab length"
+        );
+        if self.slots.len() <= ticket {
+            self.slots.resize_with(ticket + 1, || None);
+        }
+        anyhow::ensure!(
+            self.slots[ticket].is_none(),
+            "ticket {ticket} already in flight"
+        );
+        let mut slot = self.spare.pop().unwrap_or_default();
+        slot.rows = rows;
+        slot.q.clear();
+        slot.h.clear();
+        slot.c.clear();
+        // Chunked at the AOT batch cap: borrowed sub-slices straight
+        // into the backend — no per-chunk slab copies.
+        let mut start = 0usize;
+        while start < rows {
+            let n = self.max_batch.min(rows - start);
+            let r = self.backend.infer_slices(InferSlices {
+                n,
+                h: &h[start * d.hidden..(start + n) * d.hidden],
+                c: &c[start * d.hidden..(start + n) * d.hidden],
+                obs: &obs[start * d.obs_len..(start + n) * d.obs_len],
+            })?;
+            slot.q.extend_from_slice(&r.q);
+            slot.h.extend_from_slice(&r.h);
+            slot.c.extend_from_slice(&r.c);
+            start += n;
+        }
+        self.slots[ticket] = Some(slot);
+        self.inflight_gauge.add(1.0);
+        Ok(())
+    }
+
+    fn wait(
+        &mut self,
+        ticket: usize,
+        q: &mut [f32],
+        h: &mut [f32],
+        c: &mut [f32],
+    ) -> anyhow::Result<()> {
+        let slot = self
+            .slots
+            .get_mut(ticket)
+            .and_then(Option::take)
+            .ok_or_else(|| anyhow::anyhow!("wait on idle ticket {ticket}"))?;
+        self.inflight_gauge.add(-1.0);
+        let d = self.dims;
+        anyhow::ensure!(q.len() == slot.rows * d.num_actions, "q slab length");
+        anyhow::ensure!(
+            h.len() == slot.rows * d.hidden && c.len() == slot.rows * d.hidden,
+            "recurrent slab length"
+        );
+        q.copy_from_slice(&slot.q);
+        h.copy_from_slice(&slot.h);
+        c.copy_from_slice(&slot.c);
+        self.spare.push(slot);
+        Ok(())
+    }
+}

@@ -1,0 +1,258 @@
+//! Policy layer: split-phase inference clients for actor threads.
+//!
+//! The seed actor loop blocked on every inference round-trip, so env
+//! CPUs idled while the GPU ran and vice versa — artificially inflating
+//! the CPU/GPU ratio the paper says the system needs. This layer splits
+//! the round-trip into `submit` / `wait` halves behind one trait, so the
+//! actor can keep stepping environments for one slot group while another
+//! group's inference is in flight (GA3C/SRL-style decoupling; see
+//! DESIGN.md §5).
+//!
+//! Two implementations mirror the paper's Fig. 1 architectures:
+//!
+//! * [`CentralClient`] — SEED: one multi-row slab submission to the
+//!   central batcher per call; replies scatter straight into the
+//!   caller's `[rows, hidden]` slabs as slot-addressed chunks arrive.
+//!   Overlap is real: the GPU (or batcher thread) works between
+//!   `submit` and `wait`.
+//! * [`LocalClient`] — IMPALA baseline: direct backend calls, chunked
+//!   at `max_batch` rows via borrowed sub-slices. Inference runs
+//!   synchronously inside `submit`, so pipelining buys nothing here —
+//!   the honest model of per-actor inference, which has no remote
+//!   latency to hide.
+//!
+//! Tickets are caller-chosen small integers (the actor uses its slot
+//! group index), at most one outstanding submission per ticket. The
+//! `policy.inflight` gauge tracks outstanding submissions.
+
+mod central;
+mod local;
+
+pub use central::CentralClient;
+pub use local::LocalClient;
+
+/// Split-phase inference: `submit` starts a request, `wait` blocks for
+/// it and scatters the results. Implementations are single-actor
+/// objects (one per actor thread), not shared handles.
+pub trait PolicyClient: Send {
+    /// Begin inference on `rows` rows of `obs`/`h`/`c` (row-major
+    /// slabs). `ticket` must not already be in flight.
+    fn submit(
+        &mut self,
+        ticket: usize,
+        rows: usize,
+        obs: &[f32],
+        h: &[f32],
+        c: &[f32],
+    ) -> anyhow::Result<()>;
+
+    /// Block until `ticket`'s replies land; scatter q-values and the
+    /// next recurrent state into the `[rows, ·]` output slabs.
+    fn wait(
+        &mut self,
+        ticket: usize,
+        q: &mut [f32],
+        h: &mut [f32],
+        c: &mut [f32],
+    ) -> anyhow::Result<()>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BatcherConfig;
+    use crate::coordinator::Batcher;
+    use crate::metrics::Registry;
+    use crate::runtime::{Backend, InferRequest, MockModel, ModelDims};
+    use std::sync::Arc;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            obs_len: 8,
+            hidden: 4,
+            num_actions: 3,
+            seq_len: 4,
+            train_batch: 2,
+        }
+    }
+
+    fn filled_obs(d: &ModelDims, rows: usize) -> Vec<f32> {
+        let mut obs = vec![0.0f32; rows * d.obs_len];
+        for i in 0..rows {
+            obs[i * d.obs_len..(i + 1) * d.obs_len].fill(i as f32 / rows as f32);
+        }
+        obs
+    }
+
+    fn expect_rows(backend: &Backend, d: &ModelDims, obs: &[f32], rows: usize) -> Vec<f32> {
+        let mut q = Vec::new();
+        for i in 0..rows {
+            let direct = backend
+                .infer(InferRequest {
+                    n: 1,
+                    h: vec![0.0; d.hidden],
+                    c: vec![0.0; d.hidden],
+                    obs: obs[i * d.obs_len..(i + 1) * d.obs_len].to_vec(),
+                })
+                .unwrap();
+            q.extend_from_slice(&direct.q);
+        }
+        q
+    }
+
+    fn roundtrip(
+        client: &mut dyn PolicyClient,
+        d: &ModelDims,
+        rows: usize,
+        obs: &[f32],
+    ) -> Vec<f32> {
+        let h = vec![0.0f32; rows * d.hidden];
+        let c = vec![0.0f32; rows * d.hidden];
+        client.submit(0, rows, obs, &h, &c).unwrap();
+        let mut q = vec![0.0f32; rows * d.num_actions];
+        let mut h_out = vec![0.0f32; rows * d.hidden];
+        let mut c_out = vec![0.0f32; rows * d.hidden];
+        client.wait(0, &mut q, &mut h_out, &mut c_out).unwrap();
+        q
+    }
+
+    #[test]
+    fn central_client_scatters_rows_like_direct_calls() {
+        let d = dims();
+        let backend = Backend::Mock(Arc::new(MockModel::new(d, 3)));
+        let m = Registry::new();
+        let (batcher, handle) = Batcher::spawn(
+            BatcherConfig {
+                max_batch: 4,
+                timeout_us: 300,
+                batch_sizes: vec![4],
+            },
+            backend.clone(),
+            m.clone(),
+        );
+        let mut client = CentralClient::new(handle, 0, d, &m);
+        // 6 rows at cap 4: spans two batches, still lands in slot order.
+        let obs = filled_obs(&d, 6);
+        let q = roundtrip(&mut client, &d, 6, &obs);
+        assert_eq!(q, expect_rows(&backend, &d, &obs, 6));
+        assert_eq!(m.gauge("policy.inflight").get(), 0.0);
+        drop(client);
+        batcher.join();
+    }
+
+    #[test]
+    fn local_client_chunks_like_direct_calls() {
+        let d = dims();
+        let backend = Backend::Mock(Arc::new(MockModel::new(d, 3)));
+        let m = Registry::new();
+        // max_batch 4 forces the 6-row submission through 2 chunks.
+        let mut client = LocalClient::new(backend.clone(), 4, d, &m);
+        let obs = filled_obs(&d, 6);
+        let q = roundtrip(&mut client, &d, 6, &obs);
+        assert_eq!(q, expect_rows(&backend, &d, &obs, 6));
+    }
+
+    #[test]
+    fn central_and_local_agree() {
+        let d = dims();
+        let backend = Backend::Mock(Arc::new(MockModel::new(d, 7)));
+        let m = Registry::new();
+        let (batcher, handle) = Batcher::spawn(
+            BatcherConfig {
+                max_batch: 8,
+                timeout_us: 300,
+                batch_sizes: vec![8],
+            },
+            backend.clone(),
+            m.clone(),
+        );
+        let mut central = CentralClient::new(handle, 0, d, &m);
+        let mut local = LocalClient::new(backend, 8, d, &m);
+        let obs = filled_obs(&d, 5);
+        assert_eq!(
+            roundtrip(&mut central, &d, 5, &obs),
+            roundtrip(&mut local, &d, 5, &obs)
+        );
+        drop(central);
+        batcher.join();
+    }
+
+    #[test]
+    fn ticket_misuse_is_rejected() {
+        let d = dims();
+        let backend = Backend::Mock(Arc::new(MockModel::new(d, 3)));
+        let m = Registry::new();
+        let mut client = LocalClient::new(backend, 4, d, &m);
+        let obs = vec![0.1f32; d.obs_len];
+        let (h, c) = (vec![0.0f32; d.hidden], vec![0.0f32; d.hidden]);
+        // wait with nothing in flight
+        let mut q = vec![0.0f32; d.num_actions];
+        let (mut ho, mut co) = (vec![0.0f32; d.hidden], vec![0.0f32; d.hidden]);
+        assert!(client.wait(0, &mut q, &mut ho, &mut co).is_err());
+        // double submit on one ticket
+        client.submit(0, 1, &obs, &h, &c).unwrap();
+        assert!(client.submit(0, 1, &obs, &h, &c).is_err());
+        client.wait(0, &mut q, &mut ho, &mut co).unwrap();
+    }
+
+    #[test]
+    fn dropping_a_client_drains_its_inflight_gauge() {
+        // An actor exits with un-waited submissions (the pipelined loop's
+        // epilogue); the gauge must return to 0 when the client drops.
+        let d = dims();
+        let backend = Backend::Mock(Arc::new(MockModel::new(d, 3)));
+        let m = Registry::new();
+        let (batcher, handle) = Batcher::spawn(
+            BatcherConfig {
+                max_batch: 4,
+                timeout_us: 100,
+                batch_sizes: vec![4],
+            },
+            backend.clone(),
+            m.clone(),
+        );
+        let mut central = CentralClient::new(handle, 0, d, &m);
+        let mut local = LocalClient::new(backend, 4, d, &m);
+        let obs = filled_obs(&d, 2);
+        let h = vec![0.0f32; 2 * d.hidden];
+        let c = vec![0.0f32; 2 * d.hidden];
+        central.submit(0, 2, &obs, &h, &c).unwrap();
+        central.submit(1, 2, &obs, &h, &c).unwrap();
+        local.submit(0, 2, &obs, &h, &c).unwrap();
+        assert_eq!(m.gauge("policy.inflight").get(), 3.0);
+        drop(central);
+        drop(local);
+        assert_eq!(m.gauge("policy.inflight").get(), 0.0);
+        batcher.join();
+    }
+
+    #[test]
+    fn central_wait_surfaces_inference_failure() {
+        let d = dims();
+        let backend = Backend::Mock(Arc::new(
+            MockModel::new(d, 3).with_infer_error("injected GPU fault"),
+        ));
+        let m = Registry::new();
+        let (batcher, handle) = Batcher::spawn(
+            BatcherConfig {
+                max_batch: 4,
+                timeout_us: 100,
+                batch_sizes: vec![4],
+            },
+            backend,
+            m.clone(),
+        );
+        let mut client = CentralClient::new(handle, 0, d, &m);
+        let obs = filled_obs(&d, 2);
+        let h = vec![0.0f32; 2 * d.hidden];
+        let c = vec![0.0f32; 2 * d.hidden];
+        client.submit(0, 2, &obs, &h, &c).unwrap();
+        let mut q = vec![0.0f32; 2 * d.num_actions];
+        let (mut ho, mut co) = (vec![0.0f32; 2 * d.hidden], vec![0.0f32; 2 * d.hidden]);
+        let err = client.wait(0, &mut q, &mut ho, &mut co).unwrap_err().to_string();
+        assert!(err.contains("injected GPU fault"), "got: {err}");
+        assert_eq!(m.gauge("policy.inflight").get(), 0.0);
+        drop(client);
+        batcher.join();
+    }
+}

@@ -147,6 +147,20 @@ impl SequenceReplay {
         self.inner.lock().unwrap().tree.total()
     }
 
+    /// Snapshot of the buffered sequences in insertion order (oldest
+    /// first). Diagnostic/test API: the actor-equivalence tests compare
+    /// whole replay contents across loop implementations.
+    pub fn snapshot(&self) -> Vec<Arc<Sequence>> {
+        let g = self.inner.lock().unwrap();
+        let cap = self.cfg.capacity;
+        // Oldest entry: the write cursor when the ring has wrapped,
+        // slot 0 otherwise.
+        let start = if g.len == cap { g.write } else { 0 };
+        (0..g.len)
+            .filter_map(|i| g.slots[(start + i) % cap].clone())
+            .collect()
+    }
+
     fn shaped(&self, raw: f64) -> f64 {
         raw.max(self.cfg.min_priority).powf(self.cfg.alpha)
     }
@@ -202,6 +216,25 @@ mod tests {
         for s in &b.sequences {
             assert!(s.rewards[0] >= 2.0);
         }
+    }
+
+    #[test]
+    fn snapshot_returns_insertion_order() {
+        let r = SequenceReplay::new(ReplayConfig {
+            capacity: 4,
+            ..Default::default()
+        });
+        for i in 0..3 {
+            r.add(seq(i as f32));
+        }
+        let tags: Vec<f32> = r.snapshot().iter().map(|s| s.rewards[0]).collect();
+        assert_eq!(tags, vec![0.0, 1.0, 2.0]);
+        // Wrap: 6 inserts into capacity 4 keeps the newest 4, oldest first.
+        for i in 3..6 {
+            r.add(seq(i as f32));
+        }
+        let tags: Vec<f32> = r.snapshot().iter().map(|s| s.rewards[0]).collect();
+        assert_eq!(tags, vec![2.0, 3.0, 4.0, 5.0]);
     }
 
     #[test]

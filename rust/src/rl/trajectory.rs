@@ -8,7 +8,7 @@
 
 /// One actor transition: the observation fed to inference, the action
 /// taken, and the immediate outcome.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Transition {
     pub obs: Vec<f32>,
     pub action: i32,
@@ -21,7 +21,7 @@ pub struct Transition {
 }
 
 /// A fixed-length training sequence (the replay/learner unit).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Sequence {
     /// [T * obs_len], time-major.
     pub obs: Vec<f32>,

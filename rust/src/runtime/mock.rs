@@ -8,7 +8,7 @@
 //! the integration tests. `train` tracks a fake loss that decays with
 //! step count and returns priorities derived from batch rewards.
 
-use super::{InferReply, InferRequest, ModelDims, TrainBatch, TrainReply};
+use super::{InferReply, InferRequest, InferSlices, ModelDims, TrainBatch, TrainReply};
 use crate::util::prng::Pcg32;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -24,6 +24,9 @@ pub struct MockModel {
     /// Optional per-call artificial latency (models GPU time in DES-free
     /// tests); protected by a mutex to keep MockModel: Sync.
     infer_latency: Mutex<std::time::Duration>,
+    /// Optional injected inference/train failures (failure-path tests).
+    infer_error: Mutex<Option<String>>,
+    train_error: Mutex<Option<String>>,
 }
 
 impl MockModel {
@@ -40,6 +43,8 @@ impl MockModel {
             step: AtomicU64::new(0),
             target_syncs: AtomicU64::new(0),
             infer_latency: Mutex::new(std::time::Duration::ZERO),
+            infer_error: Mutex::new(None),
+            train_error: Mutex::new(None),
         }
     }
 
@@ -59,6 +64,20 @@ impl MockModel {
         self
     }
 
+    /// Make every subsequent inference call fail with `msg` (exercises
+    /// the batcher/actor failure-surfacing paths).
+    pub fn with_infer_error(self, msg: &str) -> Self {
+        *self.infer_error.lock().unwrap() = Some(msg.to_string());
+        self
+    }
+
+    /// Make every subsequent train call fail with `msg` (exercises the
+    /// learner failure path: the run must terminate, not hang).
+    pub fn with_train_error(self, msg: &str) -> Self {
+        *self.train_error.lock().unwrap() = Some(msg.to_string());
+        self
+    }
+
     pub fn dims(&self) -> ModelDims {
         self.dims
     }
@@ -72,6 +91,34 @@ impl MockModel {
     }
 
     pub fn infer(&self, req: &InferRequest) -> InferReply {
+        self.infer_slices(InferSlices {
+            n: req.n,
+            h: &req.h,
+            c: &req.c,
+            obs: &req.obs,
+        })
+    }
+
+    /// Fallible wrapper: fails when an error was injected via
+    /// [`MockModel::with_infer_error`], otherwise runs the real mock.
+    pub fn try_infer(&self, req: &InferRequest) -> anyhow::Result<InferReply> {
+        self.try_infer_slices(InferSlices {
+            n: req.n,
+            h: &req.h,
+            c: &req.c,
+            obs: &req.obs,
+        })
+    }
+
+    pub fn try_infer_slices(&self, req: InferSlices<'_>) -> anyhow::Result<InferReply> {
+        if let Some(msg) = self.infer_error.lock().unwrap().as_ref() {
+            return Err(anyhow::anyhow!("{msg}"));
+        }
+        Ok(self.infer_slices(req))
+    }
+
+    /// The mock forward pass over borrowed row slices (zero-copy).
+    pub fn infer_slices(&self, req: InferSlices<'_>) -> InferReply {
         let d = &self.dims;
         req.validate(d).expect("mock infer request shape");
         let lat = *self.infer_latency.lock().unwrap();
@@ -102,6 +149,15 @@ impl MockModel {
             }
         }
         InferReply { q, h, c }
+    }
+
+    /// Fallible wrapper: fails when an error was injected via
+    /// [`MockModel::with_train_error`], otherwise runs the real mock.
+    pub fn try_train(&self, batch: &TrainBatch) -> anyhow::Result<TrainReply> {
+        if let Some(msg) = self.train_error.lock().unwrap().as_ref() {
+            return Err(anyhow::anyhow!("{msg}"));
+        }
+        Ok(self.train(batch))
     }
 
     pub fn train(&self, batch: &TrainBatch) -> TrainReply {
@@ -185,6 +241,31 @@ mod tests {
         r2req.c = r1.c.clone();
         let r2 = m.infer(&r2req);
         assert_ne!(r1.c, r2.c);
+    }
+
+    #[test]
+    fn slice_view_matches_owned_request() {
+        let d = dims();
+        let m = MockModel::new(d, 42);
+        let owned = req(2, &d, 0.3);
+        let a = m.infer(&owned);
+        let b = m.infer_slices(InferSlices {
+            n: 2,
+            h: &owned.h,
+            c: &owned.c,
+            obs: &owned.obs,
+        });
+        assert_eq!(a.q, b.q);
+        assert_eq!(a.h, b.h);
+        assert_eq!(a.c, b.c);
+    }
+
+    #[test]
+    fn injected_error_fails_try_infer() {
+        let d = dims();
+        let m = MockModel::new(d, 42).with_infer_error("boom");
+        let err = m.try_infer(&req(1, &d, 0.3)).unwrap_err().to_string();
+        assert!(err.contains("boom"));
     }
 
     #[test]

@@ -46,6 +46,20 @@ pub struct InferRequest {
     pub obs: Vec<f32>, // [n * obs_len]
 }
 
+/// Borrowed view of a batched inference request: `n` rows sliced out of
+/// caller-owned slabs. Lets chunked local inference hand the backend a
+/// row range without copying it into an owned [`InferRequest`] first —
+/// the mock consumes the slices directly; the XLA path converts to an
+/// owned request only at the channel boundary, where ownership is
+/// genuinely required.
+#[derive(Clone, Copy, Debug)]
+pub struct InferSlices<'a> {
+    pub n: usize,
+    pub h: &'a [f32],   // [n * hidden]
+    pub c: &'a [f32],   // [n * hidden]
+    pub obs: &'a [f32], // [n * obs_len]
+}
+
 /// Inference output: q-values and next recurrent state, `n` rows.
 #[derive(Clone, Debug)]
 pub struct InferReply {
@@ -97,7 +111,17 @@ impl Backend {
     pub fn infer(&self, req: InferRequest) -> anyhow::Result<InferReply> {
         match self {
             Backend::Xla(h) => h.infer(req),
-            Backend::Mock(m) => Ok(m.infer(&req)),
+            Backend::Mock(m) => m.try_infer(&req),
+        }
+    }
+
+    /// Blocking batched inference over borrowed row slices (the local
+    /// chunked-inference path): zero-copy into the mock, one owned copy
+    /// at the XLA channel boundary.
+    pub fn infer_slices(&self, req: InferSlices<'_>) -> anyhow::Result<InferReply> {
+        match self {
+            Backend::Xla(h) => h.infer(InferRequest::from_slices(req)),
+            Backend::Mock(m) => m.try_infer_slices(req),
         }
     }
 
@@ -105,7 +129,7 @@ impl Backend {
     pub fn train(&self, batch: TrainBatch) -> anyhow::Result<TrainReply> {
         match self {
             Backend::Xla(h) => h.train(batch),
-            Backend::Mock(m) => Ok(m.train(&batch)),
+            Backend::Mock(m) => m.try_train(&batch),
         }
     }
 
@@ -122,6 +146,29 @@ impl Backend {
 }
 
 impl InferRequest {
+    /// Slice-based constructor: one `to_vec` per slab (the whole row
+    /// range at once), not one per row.
+    pub fn from_slices(s: InferSlices<'_>) -> Self {
+        Self {
+            n: s.n,
+            h: s.h.to_vec(),
+            c: s.c.to_vec(),
+            obs: s.obs.to_vec(),
+        }
+    }
+
+    pub fn validate(&self, dims: &ModelDims) -> anyhow::Result<()> {
+        InferSlices {
+            n: self.n,
+            h: &self.h,
+            c: &self.c,
+            obs: &self.obs,
+        }
+        .validate(dims)
+    }
+}
+
+impl InferSlices<'_> {
     pub fn validate(&self, dims: &ModelDims) -> anyhow::Result<()> {
         anyhow::ensure!(self.n > 0, "empty inference request");
         anyhow::ensure!(self.h.len() == self.n * dims.hidden, "h length");

@@ -59,6 +59,13 @@ pub struct SystemModel {
     /// occupancy) without consuming more hardware threads — it shifts
     /// the *effective* CPU/GPU ratio at a fixed thread count.
     pub envs_per_actor: usize,
+    /// Actor-loop software-pipeline depth (policy layer, DESIGN.md §5):
+    /// the E slots split into D groups that round-robin, so env CPU work
+    /// for one group overlaps the inference round-trip of the others.
+    /// The serialized per-thread cycle for E steps, `W + rtt` with
+    /// `W = E * t_env`, becomes `max(W, rtt + W/D)` — at depth 1 the
+    /// seed's fully serialized critical path, identically.
+    pub pipeline_depth: usize,
 }
 
 /// One steady-state operating point.
@@ -121,6 +128,9 @@ impl SystemModel {
     /// actions, so E environments occupy one hardware thread.
     pub fn steady_state(&self, n: usize) -> SystemPoint {
         let e = self.envs_per_actor.max(1) as f64;
+        // More pipeline stages than slots cannot help (matches the
+        // actor's clamp).
+        let d = (self.pipeline_depth.max(1) as f64).min(e);
         let t_env = self.cpu.step_cost_us() * 1e-6; // ideal per-step CPU time
         let t_train = self.train_time();
         let mut rate = n as f64 * e / (t_env + 1e-4); // optimistic init
@@ -137,16 +147,17 @@ impl SystemModel {
             busy = (rate * t_env_eff).clamp(1.0_f64.min(n as f64), n as f64);
 
             // Batch formed: arrivals during min(timeout, fill time).
-            // Each thread submits E rows back-to-back, so a flush holds
-            // at least min(E, max_batch) rows even at low thread counts
-            // — the vecenv occupancy floor.
+            // Each thread submits a slot group of E/D rows back-to-back,
+            // so a flush holds at least min(E/D, max_batch) rows even at
+            // low thread counts — the vecenv occupancy floor (pipelining
+            // trades a slice of it for overlap).
             let fill_time = if rate > 0.0 {
                 self.max_batch as f64 / rate
             } else {
                 f64::INFINITY
             };
             let window = self.batch_timeout_s.min(fill_time);
-            let floor = e.min(self.max_batch as f64);
+            let floor = (e / d).min(self.max_batch as f64);
             batch = (rate * window).clamp(floor, self.max_batch as f64);
             let t_infer = self.infer_time(batch.round() as usize);
 
@@ -161,8 +172,13 @@ impl SystemModel {
             rtt = t_wait + t_infer * inflation;
 
             // Concurrency-limited rate: n threads, each producing E env
-            // steps per (E * t_env_eff + rtt) cycle; CPU + GPU hard caps.
-            let r_conc = n as f64 * e / (e * t_env_eff + rtt);
+            // steps per pipelined cycle max(W, rtt + W/D) with
+            // W = E * t_env_eff — the round-robin over D slot groups
+            // hides up to (D-1)/D of the env work under the inference
+            // round-trip (at D = 1 this is the seed's fully serialized
+            // W + rtt); CPU + GPU hard caps still apply.
+            let w = e * t_env_eff;
+            let r_conc = n as f64 * e / w.max(rtt + w / d);
             let r_cpu = self.cpu.env_steps_per_sec(n.min(busy.ceil() as usize).max(1));
             let gpu_per_step = t_infer / batch + self.train_per_env * t_train;
             let r_gpu = 0.99 / gpu_per_step;
@@ -214,6 +230,13 @@ impl SystemModel {
         m
     }
 
+    /// Clone with a different actor pipeline depth (policy-layer sweep).
+    pub fn with_pipeline_depth(&self, depth: usize) -> Self {
+        let mut m = self.clone();
+        m.pipeline_depth = depth.max(1);
+        m
+    }
+
     /// CPU/GPU ratio of this configuration (the paper's design metric).
     pub fn cpu_gpu_ratio(&self) -> f64 {
         self.cpu.cfg.hw_threads as f64 / self.gpu.cfg.num_sms as f64
@@ -243,6 +266,7 @@ pub fn default_system(infer_trace: Trace, train_trace: Trace) -> SystemModel {
         max_batch: cfg.batcher.max_batch,
         batch_timeout_s: cfg.batcher.timeout_us as f64 * 1e-6,
         envs_per_actor: cfg.actors.envs_per_actor,
+        pipeline_depth: cfg.actors.pipeline_depth,
     }
 }
 
@@ -376,5 +400,47 @@ mod tests {
         let b = m.with_envs_per_actor(1).steady_state(16);
         assert_eq!(a.env_rate, b.env_rate);
         assert_eq!(a.batch_size, b.batch_size);
+    }
+
+    #[test]
+    fn pipeline_depth_one_is_the_identity() {
+        let m = model().with_envs_per_actor(8);
+        let a = m.steady_state(16);
+        let b = m.with_pipeline_depth(1).steady_state(16);
+        assert_eq!(a.env_rate, b.env_rate);
+        assert_eq!(a.batch_size, b.batch_size);
+        assert_eq!(a.rtt_s, b.rtt_s);
+    }
+
+    #[test]
+    fn pipeline_depth_overlaps_env_work_with_inference() {
+        // At few threads the cycle is latency-bound: splitting each
+        // thread's 8 slots into 2 leapfrogging groups must raise the
+        // rate, and the gain must not exceed the serialized/pipelined
+        // critical-path ratio.
+        let m = model().with_envs_per_actor(8);
+        let serial = m.steady_state(4);
+        let piped = m.with_pipeline_depth(2).steady_state(4);
+        assert!(
+            piped.env_rate > 1.05 * serial.env_rate,
+            "depth 2 {} vs depth 1 {}",
+            piped.env_rate,
+            serial.env_rate
+        );
+        assert!(
+            piped.env_rate < 2.5 * serial.env_rate,
+            "pipelining cannot more than halve the cycle: {} vs {}",
+            piped.env_rate,
+            serial.env_rate
+        );
+    }
+
+    #[test]
+    fn pipeline_depth_clamps_to_envs_per_actor() {
+        // depth > E cannot help: one slot per group is the limit.
+        let m = model().with_envs_per_actor(4);
+        let a = m.with_pipeline_depth(4).steady_state(8);
+        let b = m.with_pipeline_depth(64).steady_state(8);
+        assert_eq!(a.env_rate, b.env_rate);
     }
 }

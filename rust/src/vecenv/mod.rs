@@ -94,12 +94,29 @@ impl VecEnv {
     pub fn step_all(&mut self, actions: &[usize], obs_batch: &mut [f32]) -> &[Step] {
         assert_eq!(actions.len(), self.slots.len(), "one action per slot");
         assert_eq!(obs_batch.len(), self.obs_batch_len(), "obs batch size");
+        self.step_range(0, actions, obs_batch)
+    }
+
+    /// Step the contiguous slot range `start .. start + actions.len()`
+    /// with one action per slot; write each slot's post-step observation
+    /// into its row of `obs_rows` (a `[k, S, S, K]` sub-slab). The
+    /// pipelined actor uses this to advance one slot group while another
+    /// group's inference is in flight; `step_all` is the whole-pool
+    /// special case.
+    pub fn step_range(
+        &mut self,
+        start: usize,
+        actions: &[usize],
+        obs_rows: &mut [f32],
+    ) -> &[Step] {
+        let k = actions.len();
+        assert!(start + k <= self.slots.len(), "slot range out of bounds");
+        assert_eq!(obs_rows.len(), k * self.obs_len, "obs rows size");
         self.last_steps.clear();
-        for ((slot, &action), obs) in self
-            .slots
+        for ((slot, &action), obs) in self.slots[start..start + k]
             .iter_mut()
             .zip(actions)
-            .zip(obs_batch.chunks_exact_mut(self.obs_len))
+            .zip(obs_rows.chunks_exact_mut(self.obs_len))
         {
             self.last_steps.push(slot.step(action, obs));
         }
@@ -259,6 +276,36 @@ mod tests {
             (obs, rewards)
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn step_range_matches_step_all_per_group() {
+        // Stepping [0..2) then [2..4) must equal one step_all over 4
+        // slots: same Steps, same obs rows (slots are independent).
+        let c = cfg("grid_pong");
+        let e = 4;
+        let mut whole = VecEnv::from_config(&c, e, 9).unwrap();
+        let mut split = VecEnv::from_config(&c, e, 9).unwrap();
+        let mut obs_w = whole.new_obs_batch();
+        let mut obs_s = split.new_obs_batch();
+        whole.reset_all(&mut obs_w);
+        split.reset_all(&mut obs_s);
+        let n = whole.obs_len();
+        for i in 0..80usize {
+            let actions: Vec<usize> = (0..e).map(|k| (i + k) % 4).collect();
+            let steps_w: Vec<Step> = whole.step_all(&actions, &mut obs_w).to_vec();
+            let mut steps_s: Vec<Step> = Vec::new();
+            for (start, len) in [(0usize, 2usize), (2, 2)] {
+                steps_s.extend_from_slice(&split.step_range(
+                    start,
+                    &actions[start..start + len],
+                    &mut obs_s[start * n..(start + len) * n],
+                ));
+            }
+            assert_eq!(steps_w, steps_s, "step {i}");
+            assert_eq!(obs_w, obs_s, "obs at step {i}");
+        }
+        assert_eq!(whole.total_steps(), split.total_steps());
     }
 
     #[test]
