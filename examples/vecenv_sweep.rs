@@ -35,6 +35,7 @@ fn sweep_cfg(
     actors: usize,
     envs: usize,
     depth: usize,
+    prefetch: usize,
     steps: usize,
 ) -> SystemConfig {
     let mut cfg = SystemConfig::default();
@@ -50,7 +51,8 @@ fn sweep_cfg(
     cfg.learner.train_batch = 4;
     cfg.learner.min_replay = 16;
     cfg.learner.max_steps = steps;
-    cfg.learner.replay_capacity = 1024;
+    cfg.learner.prefetch_depth = prefetch;
+    cfg.replay.capacity = 1024;
     cfg.batcher.max_batch = 32;
     cfg.batcher.batch_sizes = vec![1, 8, 32];
     cfg.batcher.timeout_us = 500;
@@ -65,6 +67,11 @@ fn main() -> anyhow::Result<()> {
     .flag("actors", "1,2,4", "actor thread counts")
     .flag("envs", "1,2,4,8", "envs-per-actor counts")
     .flag("depths", "1,2", "actor pipeline depths")
+    .flag(
+        "prefetch-depth",
+        "1",
+        "learner prefetch depth (1 = serialized seed learner)",
+    )
     .flag("steps", "40", "learner steps per grid point")
     .flag("env", "catch", "environment")
     .flag(
@@ -76,6 +83,7 @@ fn main() -> anyhow::Result<()> {
     let actor_counts = parsed.get_usize_list("actors")?;
     let env_counts = parsed.get_usize_list("envs")?;
     let depth_counts = parsed.get_usize_list("depths")?;
+    let prefetch = parsed.get_usize("prefetch-depth")?.max(1);
     let steps = parsed.get_usize("steps")?;
     let latency_us = parsed.get_u64("infer-latency-us")?;
     let env_name = parsed.get("env").to_string();
@@ -88,10 +96,12 @@ fn main() -> anyhow::Result<()> {
         "envs in flight",
         "env steps/s",
         "mean batch",
+        "learner steps/s",
         "episodes",
     ]);
     let mut csv = String::from(
-        "actors,envs_per_actor,pipeline_depth,total_envs,env_steps_per_sec,mean_batch\n",
+        "actors,envs_per_actor,pipeline_depth,total_envs,env_steps_per_sec,\
+         mean_batch,learner_steps_per_sec\n",
     );
     for &actors in &actor_counts {
         for &envs in &env_counts {
@@ -99,7 +109,8 @@ fn main() -> anyhow::Result<()> {
                 if depth > envs {
                     continue; // clamps to envs anyway: skip duplicates
                 }
-                let cfg = sweep_cfg(&env_name, actors, envs, depth, steps);
+                let cfg =
+                    sweep_cfg(&env_name, actors, envs, depth, prefetch, steps);
                 let dims = ModelDims {
                     obs_len: 400,
                     hidden: 16,
@@ -118,6 +129,8 @@ fn main() -> anyhow::Result<()> {
                          failed: {e}"
                     );
                 }
+                let learner_rate = report.learner.steps as f64
+                    / report.elapsed_seconds.max(1e-9);
                 t.row(&[
                     actors.to_string(),
                     envs.to_string(),
@@ -125,10 +138,11 @@ fn main() -> anyhow::Result<()> {
                     report.total_envs.to_string(),
                     format!("{:.0}", report.env_steps_per_sec),
                     format!("{:.1}", report.mean_batch_occupancy),
+                    format!("{learner_rate:.1}"),
                     report.episodes.to_string(),
                 ]);
                 csv.push_str(&format!(
-                    "{actors},{envs},{depth},{},{},{}\n",
+                    "{actors},{envs},{depth},{},{},{},{learner_rate}\n",
                     report.total_envs,
                     report.env_steps_per_sec,
                     report.mean_batch_occupancy

@@ -1,10 +1,24 @@
 //! Micro-bench: prioritized sequence replay hot paths (add / sample /
-//! update-priorities) — the learner-side substrate (Reverb-equivalent).
+//! update-priorities), the shards × writer-threads contention grid, and
+//! the prefetch on/off learner-cycle comparison — the learner-side
+//! substrate (Reverb-equivalent). The tables here regenerate
+//! EXPERIMENTS.md §Perf.
+//!
+//! `--quick` shrinks every loop (the CI smoke run).
 
+use rlarch::config::LearnerConfig;
+use rlarch::coordinator::learner::{run_learner, LearnerArgs};
+use rlarch::exec::ShutdownToken;
+use rlarch::metrics::Registry;
 use rlarch::replay::{ReplayConfig, SequenceReplay};
+use rlarch::report::figure::Table;
 use rlarch::report::{bench, BenchResult};
 use rlarch::rl::Sequence;
+use rlarch::runtime::{Backend, MockModel, ModelDims};
 use rlarch::util::prng::Pcg32;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn seq(obs_len: usize, t: usize, hidden: usize, tag: f32) -> Sequence {
     Sequence {
@@ -19,19 +33,132 @@ fn seq(obs_len: usize, t: usize, hidden: usize, tag: f32) -> Sequence {
     }
 }
 
+/// One contention-grid cell: `writers` threads hammer `add` while one
+/// sampler runs sample+update cycles. Returns (adds/s, sampler cycles,
+/// contended lock acquisitions).
+fn contention_cell(
+    shards: usize,
+    writers: usize,
+    adds_per_writer: usize,
+) -> (f64, u64, u64) {
+    let r = Arc::new(SequenceReplay::new(ReplayConfig {
+        capacity: 4_096,
+        shards,
+        ..Default::default()
+    }));
+    for i in 0..64 {
+        r.add(seq(400, 20, 128, i as f32));
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let t0 = Instant::now();
+    let cycles = std::thread::scope(|s| {
+        let mut writer_joins = Vec::new();
+        for w in 0..writers {
+            let r = r.clone();
+            writer_joins.push(s.spawn(move || {
+                let template = seq(400, 20, 128, w as f32);
+                for _ in 0..adds_per_writer {
+                    r.add(template.clone());
+                }
+            }));
+        }
+        let sampler = s.spawn({
+            let r = r.clone();
+            let stop = stop.clone();
+            move || {
+                let mut rng = Pcg32::seeded(1);
+                let prios = vec![0.5f32; 16];
+                let mut cycles = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    if let Some(b) = r.sample(16, &mut rng) {
+                        r.update_priorities(&b.slots, &b.generations, &prios);
+                        cycles += 1;
+                    }
+                }
+                cycles
+            }
+        });
+        for j in writer_joins {
+            j.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        sampler.join().unwrap()
+    });
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    let adds = (writers * adds_per_writer) as f64;
+    (adds / elapsed, cycles, r.shard_contention())
+}
+
+/// One learner-cycle run: prefetch on/off over a pre-filled buffer with
+/// injected mock train latency. Returns (learner steps/s, prefetch
+/// occupancy).
+fn learner_cycle(
+    prefetch_depth: usize,
+    steps: usize,
+    train_latency: Duration,
+) -> (f64, f64) {
+    let dims = ModelDims {
+        obs_len: 400,
+        hidden: 128,
+        num_actions: 4,
+        seq_len: 20,
+        train_batch: 16,
+    };
+    let replay = Arc::new(SequenceReplay::new(ReplayConfig {
+        capacity: 1_024,
+        ..Default::default()
+    }));
+    for i in 0..256 {
+        replay.add(seq(dims.obs_len, dims.seq_len, dims.hidden, i as f32));
+    }
+    let backend = Backend::Mock(Arc::new(
+        MockModel::new(dims, 7).with_train_latency(train_latency),
+    ));
+    let metrics = Registry::new();
+    let cfg = LearnerConfig {
+        train_batch: dims.train_batch,
+        min_replay: 64,
+        max_steps: steps,
+        prefetch_depth,
+        target_update_interval: 1_000_000,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let stats = run_learner(LearnerArgs {
+        cfg,
+        dims,
+        backend,
+        replay,
+        metrics: metrics.clone(),
+        shutdown: ShutdownToken::new(),
+        loss_every: 0,
+        seed: 9,
+        on_batch: None,
+    })
+    .unwrap();
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    (
+        stats.steps as f64 / elapsed,
+        metrics.gauge("learner.prefetch_occupancy").get(),
+    )
+}
+
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
     println!("# micro_replay — R2D2 sequence replay (obs 400, T=20, H=128)\n");
     let cfg = || ReplayConfig {
         capacity: 4_096,
         alpha: 0.9,
         min_priority: 1e-3,
+        shards: 1,
     };
+    let (warm, iters) = if quick { (10, 100) } else { (100, 2_000) };
     let mut results: Vec<BenchResult> = Vec::new();
 
     // add (ring insert at max priority)
     let r = SequenceReplay::new(cfg());
     let template = seq(400, 20, 128, 1.0);
-    results.push(bench("replay.add", 100, 2_000, || {
+    results.push(bench("replay.add", warm, iters, || {
         r.add(template.clone());
     }));
 
@@ -41,21 +168,23 @@ fn main() {
         r.add(seq(400, 20, 128, i as f32));
     }
     let mut rng = Pcg32::seeded(1);
-    results.push(bench("replay.sample_b16", 20, 500, || {
+    let (warm_s, iters_s) = if quick { (5, 50) } else { (20, 500) };
+    results.push(bench("replay.sample_b16", warm_s, iters_s, || {
         std::hint::black_box(r.sample(16, &mut rng).unwrap());
     }));
 
     // update priorities for 16 slots
     let batch = r.sample(16, &mut rng).unwrap();
     let prios = vec![0.5f32; 16];
-    results.push(bench("replay.update_prio_16", 100, 5_000, || {
-        r.update_priorities(&batch.slots, &prios);
+    let (warm_u, iters_u) = if quick { (10, 200) } else { (100, 5_000) };
+    results.push(bench("replay.update_prio_16", warm_u, iters_u, || {
+        r.update_priorities(&batch.slots, &batch.generations, &prios);
     }));
 
     // end-to-end learner-side cycle: sample + update
-    results.push(bench("replay.cycle_b16", 20, 500, || {
+    results.push(bench("replay.cycle_b16", warm_s, iters_s, || {
         let b = r.sample(16, &mut rng).unwrap();
-        r.update_priorities(&b.slots, &prios);
+        r.update_priorities(&b.slots, &b.generations, &prios);
     }));
 
     println!("{}", BenchResult::markdown_header());
@@ -68,4 +197,62 @@ fn main() {
         .join("\n");
     let p = rlarch::report::write_csv("micro_replay", &csv);
     println!("\ncsv: {}", p.display());
+
+    // Shards × writer-threads contention grid: actor inserts stripe
+    // across shard mutexes while the learner samples + updates.
+    println!("\n# shard contention — writers hammer add vs one sampler\n");
+    let adds_per_writer = if quick { 300 } else { 5_000 };
+    let mut grid = Table::new(&[
+        "shards",
+        "writers",
+        "adds/s",
+        "sampler cycles",
+        "contended locks",
+    ]);
+    let mut grid_csv =
+        String::from("shards,writers,adds_per_sec,sampler_cycles,contended\n");
+    for &shards in &[1usize, 2, 4, 8] {
+        for &writers in &[1usize, 2, 4] {
+            let (rate, cycles, contended) =
+                contention_cell(shards, writers, adds_per_writer);
+            grid.row(&[
+                shards.to_string(),
+                writers.to_string(),
+                format!("{rate:.0}"),
+                cycles.to_string(),
+                contended.to_string(),
+            ]);
+            grid_csv
+                .push_str(&format!("{shards},{writers},{rate},{cycles},{contended}\n"));
+        }
+    }
+    println!("{}", grid.to_markdown());
+    let p = rlarch::report::write_csv("micro_replay_contention", &grid_csv);
+    println!("csv: {}", p.display());
+
+    // Prefetch on/off learner-cycle comparison: injected train latency
+    // gives the pipeline GPU time to hide the sample+assemble under.
+    println!("\n# learner cycle — prefetch off vs on (injected train latency)\n");
+    let steps = if quick { 10 } else { 40 };
+    let latency = Duration::from_micros(if quick { 300 } else { 1_000 });
+    let mut lt = Table::new(&["prefetch depth", "learner steps/s", "occupancy"]);
+    let mut lt_csv = String::from("prefetch_depth,steps_per_sec,occupancy\n");
+    for depth in [1usize, 2, 3] {
+        let (rate, occ) = learner_cycle(depth, steps, latency);
+        // The serialized loop has no prefetch stage: occupancy is
+        // not-applicable there, not a measured 0%.
+        lt.row(&[
+            depth.to_string(),
+            format!("{rate:.1}"),
+            if depth == 1 {
+                "n/a".to_string()
+            } else {
+                format!("{occ:.2}")
+            },
+        ]);
+        lt_csv.push_str(&format!("{depth},{rate},{occ}\n"));
+    }
+    println!("{}", lt.to_markdown());
+    let p = rlarch::report::write_csv("micro_replay_prefetch", &lt_csv);
+    println!("csv: {}", p.display());
 }

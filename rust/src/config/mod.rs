@@ -8,7 +8,7 @@ pub mod types;
 pub use types::{
     ActorConfig, BatcherConfig, ConfigError, CpuModelConfig, EnvConfig,
     GpuModelConfig, InferenceMode, LearnerConfig, PowerModelConfig,
-    SystemConfig,
+    ReplayBufferConfig, SystemConfig,
 };
 
 use std::path::Path;

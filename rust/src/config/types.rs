@@ -208,19 +208,86 @@ impl ActorConfig {
     }
 }
 
-/// Learner / replay settings (R2D2).
+/// Prioritized replay buffer settings (the `[replay]` table). The
+/// buffer itself lives in `replay::SequenceReplay`; these are the knobs
+/// the coordinator builds it from.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplayBufferConfig {
+    /// Total ring capacity in sequences (striped across shards).
+    pub capacity: usize,
+    /// Priority-sampling exponent alpha (0 = uniform).
+    pub alpha: f64,
+    /// Floor for updated priorities so nothing becomes unsampleable.
+    pub min_priority: f64,
+    /// Independent ring+sum-tree shards, each behind its own mutex;
+    /// must divide `capacity`. 1 = the classic single-mutex buffer.
+    pub shards: usize,
+}
+
+impl Default for ReplayBufferConfig {
+    fn default() -> Self {
+        Self {
+            capacity: 4_096,
+            alpha: 0.9,
+            min_priority: 1e-3,
+            shards: 1,
+        }
+    }
+}
+
+impl ReplayBufferConfig {
+    pub fn from_value(v: &Value) -> Self {
+        let d = Self::default();
+        Self {
+            capacity: get_usize(v, "replay.capacity", d.capacity),
+            alpha: get_f64(v, "replay.alpha", d.alpha),
+            min_priority: get_f64(v, "replay.min_priority", d.min_priority),
+            shards: get_usize(v, "replay.shards", d.shards),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.capacity == 0 {
+            return Err(ConfigError::Invalid(
+                "replay.capacity must be > 0".into(),
+            ));
+        }
+        if self.alpha < 0.0 {
+            return Err(ConfigError::Invalid("replay.alpha must be >= 0".into()));
+        }
+        if self.min_priority <= 0.0 {
+            return Err(ConfigError::Invalid(
+                "replay.min_priority must be > 0".into(),
+            ));
+        }
+        if self.shards == 0 {
+            return Err(ConfigError::Invalid("replay.shards must be > 0".into()));
+        }
+        if self.shards > self.capacity
+            || self.capacity / self.shards * self.shards != self.capacity
+        {
+            return Err(ConfigError::Invalid(
+                "replay.shards must divide replay.capacity".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Learner settings (R2D2).
 #[derive(Clone, Debug, PartialEq)]
 pub struct LearnerConfig {
     pub train_batch: usize,
-    pub replay_capacity: usize,
     /// Minimum sequences buffered before training starts.
     pub min_replay: usize,
     /// Copy online -> target params every N learner steps.
     pub target_update_interval: usize,
-    /// Priority-sampling exponent (0 = uniform).
-    pub priority_exponent: f64,
     /// Max learner steps for a run (examples override).
     pub max_steps: usize,
+    /// Split-phase learner pipeline depth: batches sampled + assembled
+    /// ahead of the train step (1 = the serialized seed loop; 2 = one
+    /// batch prefetched while the backend trains the previous one).
+    pub prefetch_depth: usize,
     /// Sequence replay: burn-in + unroll must match the AOT'd train graph.
     pub burn_in: usize,
     pub unroll_len: usize,
@@ -234,11 +301,10 @@ impl Default for LearnerConfig {
     fn default() -> Self {
         Self {
             train_batch: 16,
-            replay_capacity: 4_096,
             min_replay: 64,
             target_update_interval: 100,
-            priority_exponent: 0.9,
             max_steps: 200,
+            prefetch_depth: 1,
             burn_in: 5,
             unroll_len: 15,
             seq_overlap: 10,
@@ -257,23 +323,18 @@ impl LearnerConfig {
         let d = Self::default();
         Self {
             train_batch: get_usize(v, "learner.train_batch", d.train_batch),
-            replay_capacity: get_usize(
-                v,
-                "learner.replay_capacity",
-                d.replay_capacity,
-            ),
             min_replay: get_usize(v, "learner.min_replay", d.min_replay),
             target_update_interval: get_usize(
                 v,
                 "learner.target_update_interval",
                 d.target_update_interval,
             ),
-            priority_exponent: get_f64(
-                v,
-                "learner.priority_exponent",
-                d.priority_exponent,
-            ),
             max_steps: get_usize(v, "learner.max_steps", d.max_steps),
+            prefetch_depth: get_usize(
+                v,
+                "learner.prefetch_depth",
+                d.prefetch_depth,
+            ),
             burn_in: get_usize(v, "learner.burn_in", d.burn_in),
             unroll_len: get_usize(v, "learner.unroll_len", d.unroll_len),
             seq_overlap: get_usize(v, "learner.seq_overlap", d.seq_overlap),
@@ -293,9 +354,9 @@ impl LearnerConfig {
                 "min_replay must be >= train_batch".into(),
             ));
         }
-        if self.replay_capacity < self.min_replay {
+        if self.prefetch_depth == 0 {
             return Err(ConfigError::Invalid(
-                "replay_capacity must be >= min_replay".into(),
+                "prefetch_depth must be > 0 (1 = serialized)".into(),
             ));
         }
         Ok(())
@@ -476,6 +537,7 @@ pub struct SystemConfig {
     pub actors: ActorConfig,
     pub batcher: BatcherConfig,
     pub learner: LearnerConfig,
+    pub replay: ReplayBufferConfig,
     pub gpu: GpuModelConfig,
     pub cpu: CpuModelConfig,
     pub power: PowerModelConfig,
@@ -492,6 +554,7 @@ impl Default for SystemConfig {
             actors: ActorConfig::default(),
             batcher: BatcherConfig::default(),
             learner: LearnerConfig::default(),
+            replay: ReplayBufferConfig::default(),
             gpu: GpuModelConfig::default(),
             cpu: CpuModelConfig::default(),
             power: PowerModelConfig::default(),
@@ -533,11 +596,10 @@ const SECTION_KEYS: &[(&str, &[&str])] = &[
         "learner",
         &[
             "train_batch",
-            "replay_capacity",
             "min_replay",
             "target_update_interval",
-            "priority_exponent",
             "max_steps",
+            "prefetch_depth",
             "burn_in",
             "unroll_len",
             "seq_overlap",
@@ -545,6 +607,7 @@ const SECTION_KEYS: &[(&str, &[&str])] = &[
             "n_step",
         ],
     ),
+    ("replay", &["capacity", "alpha", "min_priority", "shards"]),
     (
         "gpu",
         &[
@@ -595,6 +658,7 @@ impl SystemConfig {
             actors: ActorConfig::from_value(v),
             batcher: BatcherConfig::from_value(v),
             learner: LearnerConfig::from_value(v),
+            replay: ReplayBufferConfig::from_value(v),
             gpu: GpuModelConfig::from_value(v),
             cpu: CpuModelConfig::from_value(v),
             power: PowerModelConfig::from_value(v),
@@ -612,6 +676,19 @@ impl SystemConfig {
     pub fn validate(&self) -> Result<(), ConfigError> {
         self.batcher.validate()?;
         self.learner.validate()?;
+        self.replay.validate()?;
+        // Cross-section: the buffer must be able to hold a train batch
+        // and the fill threshold the learner waits for.
+        if self.replay.capacity < self.learner.train_batch {
+            return Err(ConfigError::Invalid(
+                "replay.capacity must be >= learner.train_batch".into(),
+            ));
+        }
+        if self.replay.capacity < self.learner.min_replay {
+            return Err(ConfigError::Invalid(
+                "replay.capacity must be >= learner.min_replay".into(),
+            ));
+        }
         if self.actors.num_actors == 0 {
             return Err(ConfigError::Invalid("num_actors must be > 0".into()));
         }
@@ -757,5 +834,104 @@ hw_threads = 40
         assert_eq!(l.seq_len(), 20);
         l.seq_overlap = 25;
         assert!(l.validate().is_err());
+    }
+
+    #[test]
+    fn parses_replay_section_and_prefetch_depth() {
+        let cfg = SystemConfig::from_toml(
+            "[replay]\ncapacity = 1024\nalpha = 0.5\nmin_priority = 0.01\n\
+             shards = 4\n[learner]\nprefetch_depth = 2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.replay.capacity, 1024);
+        assert!((cfg.replay.alpha - 0.5).abs() < 1e-12);
+        assert!((cfg.replay.min_priority - 0.01).abs() < 1e-12);
+        assert_eq!(cfg.replay.shards, 4);
+        assert_eq!(cfg.learner.prefetch_depth, 2);
+        // The serialized seed paths are the defaults.
+        let d = SystemConfig::default();
+        assert_eq!(d.replay.shards, 1);
+        assert_eq!(d.learner.prefetch_depth, 1);
+    }
+
+    #[test]
+    fn replay_validation_bounds() {
+        // capacity must hold a train batch.
+        let err = SystemConfig::from_toml(
+            "[replay]\ncapacity = 8\n[learner]\ntrain_batch = 16\n\
+             min_replay = 16\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(
+            err.contains("replay.capacity must be >= learner.train_batch"),
+            "got: {err}"
+        );
+        // ...and the learner's fill threshold.
+        let err = SystemConfig::from_toml(
+            "[replay]\ncapacity = 32\n[learner]\ntrain_batch = 16\n\
+             min_replay = 64\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(
+            err.contains("replay.capacity must be >= learner.min_replay"),
+            "got: {err}"
+        );
+        let err = SystemConfig::from_toml("[replay]\nalpha = -0.1\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("replay.alpha must be >= 0"), "got: {err}");
+        let err = SystemConfig::from_toml("[replay]\nmin_priority = 0.0\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("replay.min_priority must be > 0"), "got: {err}");
+        let err = SystemConfig::from_toml("[replay]\nshards = 0\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("replay.shards must be > 0"), "got: {err}");
+        // Shards must stripe the capacity evenly.
+        for bad in ["capacity = 4096\nshards = 3\n", "capacity = 4\nshards = 8\n"]
+        {
+            let err =
+                SystemConfig::from_toml(&format!("[replay]\n{bad}"))
+                    .unwrap_err()
+                    .to_string();
+            assert!(
+                err.contains("replay.shards must divide replay.capacity"),
+                "got: {err}"
+            );
+        }
+        let err = SystemConfig::from_toml("[learner]\nprefetch_depth = 0\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("prefetch_depth"), "got: {err}");
+    }
+
+    #[test]
+    fn replay_section_rejects_unknown_and_stale_keys() {
+        let err = SystemConfig::from_toml("[replay]\ncapcity = 64\n")
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("unknown key `capcity` in section `replay`"),
+            "got: {err}"
+        );
+        // The pre-split learner spellings moved to [replay]; they must
+        // fail loudly, not silently fall back to defaults.
+        let err = SystemConfig::from_toml("[learner]\nreplay_capacity = 64\n")
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("unknown key `replay_capacity` in section `learner`"),
+            "got: {err}"
+        );
+        let err = SystemConfig::from_toml("[learner]\npriority_exponent = 0.5\n")
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("unknown key `priority_exponent` in section `learner`"),
+            "got: {err}"
+        );
     }
 }

@@ -1,13 +1,32 @@
 //! Learner loop: sample prioritized sequences, run the AOT train step,
 //! refresh priorities, periodically sync the target network.
+//!
+//! The loop is split-phase, mirroring the `policy` layer's submit/wait
+//! design on the trainer side (SRL's disaggregated trainer data path;
+//! GA3C's trainer queue at single-node scale). At
+//! `prefetch_depth >= 2` a prefetch thread samples and assembles batch
+//! k+1 into pooled `TrainBatch` buffers while the backend trains batch
+//! k, and the priority write-back for batch k−1 rides back to the
+//! prefetch thread — off the train critical path — so the accelerator
+//! no longer idles during the CPU-side sample/assemble/update phases.
+//! `prefetch_depth = 1` is the seed's fully serialized
+//! sample → assemble → train → write-back loop, reproduced bit-for-bit
+//! (same RNG stream, same sampled slots, same loss curve; asserted
+//! against a verbatim seed-learner replica in
+//! `tests/coordinator_e2e.rs`).
+//!
+//! Pipelining trades priority freshness for overlap: batch k+1 is
+//! sampled under priorities as of batch k−1 (one train step staler than
+//! the serialized loop), the standard Ape-X/R2D2 relaxation.
 
 use crate::config::LearnerConfig;
 use crate::exec::ShutdownToken;
-use crate::metrics::Registry;
+use crate::metrics::{Counter, Gauge, Registry, Timer};
 use crate::replay::SequenceReplay;
-use crate::runtime::{Backend, ModelDims, TrainBatch};
+use crate::runtime::{Backend, ModelDims, TrainBatch, TrainReply};
 use crate::util::prng::Pcg32;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 /// Summary of a learner run.
@@ -22,6 +41,11 @@ pub struct LearnerStats {
     pub loss_curve: Vec<(u64, f32)>,
 }
 
+/// Test/diagnostic probe: called with the global replay slot ids of
+/// every batch actually trained, in train order (the pipeline
+/// equivalence tests compare these across prefetch depths).
+pub type BatchProbe = Box<dyn FnMut(&[usize]) + Send>;
+
 pub struct LearnerArgs {
     pub cfg: LearnerConfig,
     pub dims: ModelDims,
@@ -32,25 +56,33 @@ pub struct LearnerArgs {
     /// Record a loss-curve point every N steps.
     pub loss_every: u64,
     pub seed: u64,
+    /// Optional probe over each trained batch's sampled slots.
+    pub on_batch: Option<BatchProbe>,
 }
 
-/// Assemble a `TrainBatch` from sampled sequences (batch-major layout,
-/// matching the AOT ABI).
-pub fn assemble_batch<S: std::ops::Deref<Target = crate::rl::Sequence>>(
+/// Assemble a `TrainBatch` from sampled sequences into a caller-owned
+/// (pooled) buffer, reusing whatever capacity it already holds
+/// (batch-major layout, matching the AOT ABI).
+pub fn assemble_into<S: std::ops::Deref<Target = crate::rl::Sequence>>(
+    batch: &mut TrainBatch,
     sequences: &[S],
     dims: &ModelDims,
-) -> TrainBatch {
+) {
     let b = sequences.len();
     let t = dims.seq_len;
-    let mut batch = TrainBatch {
-        batch: b,
-        obs: Vec::with_capacity(b * t * dims.obs_len),
-        actions: Vec::with_capacity(b * t),
-        rewards: Vec::with_capacity(b * t),
-        discounts: Vec::with_capacity(b * t),
-        h0: Vec::with_capacity(b * dims.hidden),
-        c0: Vec::with_capacity(b * dims.hidden),
-    };
+    batch.batch = b;
+    batch.obs.clear();
+    batch.obs.reserve(b * t * dims.obs_len);
+    batch.actions.clear();
+    batch.actions.reserve(b * t);
+    batch.rewards.clear();
+    batch.rewards.reserve(b * t);
+    batch.discounts.clear();
+    batch.discounts.reserve(b * t);
+    batch.h0.clear();
+    batch.h0.reserve(b * dims.hidden);
+    batch.c0.clear();
+    batch.c0.reserve(b * dims.hidden);
     for seq in sequences {
         let seq: &crate::rl::Sequence = seq;
         debug_assert_eq!(seq.seq_len(), t, "sequence length mismatch");
@@ -61,7 +93,278 @@ pub fn assemble_batch<S: std::ops::Deref<Target = crate::rl::Sequence>>(
         batch.h0.extend_from_slice(&seq.h0);
         batch.c0.extend_from_slice(&seq.c0);
     }
+}
+
+/// Assemble a `TrainBatch` from sampled sequences into a fresh buffer
+/// (convenience wrapper over [`assemble_into`]).
+pub fn assemble_batch<S: std::ops::Deref<Target = crate::rl::Sequence>>(
+    sequences: &[S],
+    dims: &ModelDims,
+) -> TrainBatch {
+    let mut batch = TrainBatch::empty();
+    assemble_into(&mut batch, sequences, dims);
     batch
+}
+
+/// Loss/step bookkeeping shared by the serial and pipelined paths.
+#[derive(Default)]
+struct Book {
+    stats: LearnerStats,
+    loss_sum: f64,
+    /// Whether any train step has completed — tracked explicitly so a
+    /// genuine first loss of 0.0 is not silently overwritten (the old
+    /// `first_loss == 0.0` sentinel bug).
+    first_seen: bool,
+}
+
+impl Book {
+    fn observe(&mut self, reply: &TrainReply, loss_every: u64) {
+        self.stats.steps = reply.step;
+        if !self.first_seen {
+            self.first_seen = true;
+            self.stats.first_loss = reply.loss;
+        }
+        self.stats.final_loss = reply.loss;
+        self.loss_sum += reply.loss as f64;
+        if loss_every > 0 && self.stats.steps % loss_every == 0 {
+            self.stats.loss_curve.push((self.stats.steps, reply.loss));
+        }
+    }
+}
+
+/// A sampled + assembled batch waiting for the train step.
+struct Prefetched {
+    batch: TrainBatch,
+    slots: Vec<usize>,
+    generations: Vec<u64>,
+}
+
+/// A completed train step's priority refresh, riding back to the
+/// prefetch thread (with the batch buffer, which returns to the pool).
+struct WriteBack {
+    slots: Vec<usize>,
+    generations: Vec<u64>,
+    priorities: Vec<f32>,
+    pool: TrainBatch,
+}
+
+/// Everything both learner paths need; keeps the helpers below at sane
+/// arities.
+struct LearnerCtx {
+    cfg: LearnerConfig,
+    dims: ModelDims,
+    backend: Backend,
+    replay: Arc<SequenceReplay>,
+    shutdown: ShutdownToken,
+    loss_every: u64,
+    seed: u64,
+    steps_c: Counter,
+    waits_c: Counter,
+    train_time: Timer,
+    sample_time: Timer,
+    assemble_time: Timer,
+    occupancy_g: Gauge,
+    loss_gauge: Gauge,
+}
+
+impl LearnerCtx {
+    fn record(&self, book: &mut Book, reply: &TrainReply) -> anyhow::Result<()> {
+        book.observe(reply, self.loss_every);
+        self.loss_gauge.set(reply.loss as f64);
+        self.steps_c.inc();
+        if book.stats.steps % self.cfg.target_update_interval as u64 == 0 {
+            self.backend.sync_target()?;
+            book.stats.target_syncs += 1;
+        }
+        Ok(())
+    }
+
+    /// The seed's serialized loop: sample → assemble → train →
+    /// write-back, strictly in sequence (one reused batch buffer).
+    fn run_serial(
+        &self,
+        book: &mut Book,
+        on_batch: &mut Option<BatchProbe>,
+    ) -> anyhow::Result<()> {
+        let mut rng = Pcg32::seeded(self.seed ^ 0x1EA8);
+        let mut pool = TrainBatch::empty();
+        while book.stats.steps < self.cfg.max_steps as u64
+            && !self.shutdown.is_signalled()
+        {
+            let sampled = self
+                .sample_time
+                .time(|| self.replay.sample(self.cfg.train_batch, &mut rng));
+            let Some(sampled) = sampled else {
+                self.waits_c.inc();
+                if self.shutdown.sleep_interruptible(Duration::from_millis(1)) {
+                    break;
+                }
+                continue;
+            };
+            self.assemble_time
+                .time(|| assemble_into(&mut pool, &sampled.sequences, &self.dims));
+            let reply = self.train_time.time(|| self.backend.train_step(&mut pool))?;
+            self.replay.update_priorities(
+                &sampled.slots,
+                &sampled.generations,
+                &reply.priorities,
+            );
+            if let Some(probe) = on_batch.as_mut() {
+                probe(&sampled.slots);
+            }
+            self.record(book, &reply)?;
+        }
+        Ok(())
+    }
+
+    /// The split-phase pipeline: a prefetch thread samples + assembles
+    /// ahead (bounded at `prefetch_depth - 1` batches in flight beyond
+    /// the one training) and applies priority write-backs between
+    /// samples, while this thread runs back-to-back train steps.
+    fn run_pipelined(
+        &self,
+        book: &mut Book,
+        on_batch: &mut Option<BatchProbe>,
+    ) -> anyhow::Result<()> {
+        // Rendezvous at depth 2: the prefetcher finishes assembling
+        // batch k+1 during train k and hands it over the moment train
+        // k+1 is wanted. Deeper pipelines buffer depth-2 extra batches.
+        let (ready_tx, ready_rx) =
+            mpsc::sync_channel::<Prefetched>(self.cfg.prefetch_depth.saturating_sub(2));
+        let (back_tx, back_rx) = mpsc::channel::<WriteBack>();
+        let stop = AtomicBool::new(false);
+        let stop_ref = &stop;
+        std::thread::scope(|s| -> anyhow::Result<()> {
+            let prefetcher = s.spawn({
+                let replay = self.replay.clone();
+                let shutdown = self.shutdown.clone();
+                let sample_time = self.sample_time.clone();
+                let assemble_time = self.assemble_time.clone();
+                let waits_c = self.waits_c.clone();
+                let train_batch = self.cfg.train_batch;
+                let dims = self.dims;
+                let seed = self.seed;
+                move || -> mpsc::Receiver<WriteBack> {
+                    let mut rng = Pcg32::seeded(seed ^ 0x1EA8);
+                    let mut pool: Vec<TrainBatch> = Vec::new();
+                    while !stop_ref.load(Ordering::Relaxed)
+                        && !shutdown.is_signalled()
+                    {
+                        // Apply completed write-backs off the train
+                        // critical path, reclaiming their buffers.
+                        while let Ok(wb) = back_rx.try_recv() {
+                            replay.update_priorities(
+                                &wb.slots,
+                                &wb.generations,
+                                &wb.priorities,
+                            );
+                            pool.push(wb.pool);
+                        }
+                        let sampled = sample_time
+                            .time(|| replay.sample(train_batch, &mut rng));
+                        let Some(sampled) = sampled else {
+                            waits_c.inc();
+                            if shutdown
+                                .sleep_interruptible(Duration::from_millis(1))
+                            {
+                                break;
+                            }
+                            continue;
+                        };
+                        let mut batch =
+                            pool.pop().unwrap_or_else(TrainBatch::empty);
+                        assemble_time.time(|| {
+                            assemble_into(&mut batch, &sampled.sequences, &dims)
+                        });
+                        let handoff = Prefetched {
+                            batch,
+                            slots: sampled.slots,
+                            generations: sampled.generations,
+                        };
+                        if ready_tx.send(handoff).is_err() {
+                            break; // train side exited
+                        }
+                    }
+                    back_rx
+                }
+            });
+
+            let mut train_err: Option<anyhow::Error> = None;
+            let (mut hits, mut total) = (0u64, 0u64);
+            while book.stats.steps < self.cfg.max_steps as u64
+                && !self.shutdown.is_signalled()
+            {
+                total += 1;
+                let pf = match ready_rx.try_recv() {
+                    Ok(pf) => {
+                        // The next batch was already assembled when the
+                        // backend wanted it: the pipeline kept up.
+                        hits += 1;
+                        Some(pf)
+                    }
+                    Err(mpsc::TryRecvError::Empty) => loop {
+                        match ready_rx.recv_timeout(Duration::from_millis(20)) {
+                            Ok(pf) => break Some(pf),
+                            Err(mpsc::RecvTimeoutError::Timeout) => {
+                                if self.shutdown.is_signalled() {
+                                    break None;
+                                }
+                            }
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                break None
+                            }
+                        }
+                    },
+                    Err(mpsc::TryRecvError::Disconnected) => None,
+                };
+                self.occupancy_g.set(hits as f64 / total as f64);
+                let Some(mut pf) = pf else { break };
+                match self.train_time.time(|| self.backend.train_step(&mut pf.batch))
+                {
+                    Ok(reply) => {
+                        if let Some(probe) = on_batch.as_mut() {
+                            probe(&pf.slots);
+                        }
+                        let recorded = self.record(book, &reply);
+                        let _ = back_tx.send(WriteBack {
+                            slots: pf.slots,
+                            generations: pf.generations,
+                            priorities: reply.priorities,
+                            pool: pf.batch,
+                        });
+                        if let Err(e) = recorded {
+                            train_err = Some(e);
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        train_err = Some(e);
+                        break;
+                    }
+                }
+            }
+
+            stop.store(true, Ordering::Relaxed);
+            // Dropping the ready side releases a prefetcher blocked on
+            // the bounded hand-off.
+            drop(ready_rx);
+            drop(back_tx);
+            let back_rx = prefetcher.join().expect("prefetch thread panicked");
+            // Write-backs still in flight apply now; anything racing a
+            // slot overwrite is dropped by the generation tags.
+            while let Ok(wb) = back_rx.try_recv() {
+                self.replay.update_priorities(
+                    &wb.slots,
+                    &wb.generations,
+                    &wb.priorities,
+                );
+            }
+            match train_err {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
+        })
+    }
 }
 
 /// Run the learner until `cfg.max_steps` or shutdown. Returns stats and
@@ -76,61 +379,45 @@ pub fn run_learner(args: LearnerArgs) -> anyhow::Result<LearnerStats> {
         shutdown,
         loss_every,
         seed,
+        mut on_batch,
     } = args;
-    let mut rng = Pcg32::seeded(seed ^ 0x1EA8);
-    let steps_c = metrics.counter("learner.steps");
-    let waits_c = metrics.counter("learner.replay_waits");
-    let train_time = metrics.timer("learner.train_seconds");
-    let sample_time = metrics.timer("learner.sample_seconds");
-    let loss_gauge = metrics.gauge("learner.loss");
-
-    let mut stats = LearnerStats::default();
-    let mut loss_sum = 0.0f64;
+    let ctx = LearnerCtx {
+        steps_c: metrics.counter("learner.steps"),
+        waits_c: metrics.counter("learner.replay_waits"),
+        train_time: metrics.timer("learner.train_seconds"),
+        sample_time: metrics.timer("learner.sample_seconds"),
+        assemble_time: metrics.timer("learner.assemble_seconds"),
+        occupancy_g: metrics.gauge("learner.prefetch_occupancy"),
+        loss_gauge: metrics.gauge("learner.loss"),
+        cfg,
+        dims,
+        backend,
+        replay,
+        shutdown,
+        loss_every,
+        seed,
+    };
+    let mut book = Book::default();
 
     // Wait for the minimum replay fill.
-    while replay.len() < cfg.min_replay {
-        waits_c.inc();
-        if shutdown.sleep_interruptible(Duration::from_millis(2)) {
-            return Ok(stats);
+    while ctx.replay.len() < ctx.cfg.min_replay {
+        ctx.waits_c.inc();
+        if ctx.shutdown.sleep_interruptible(Duration::from_millis(2)) {
+            return Ok(book.stats);
         }
     }
 
-    while stats.steps < cfg.max_steps as u64 && !shutdown.is_signalled() {
-        let sampled = sample_time.time(|| replay.sample(cfg.train_batch, &mut rng));
-        let Some(sampled) = sampled else {
-            waits_c.inc();
-            if shutdown.sleep_interruptible(Duration::from_millis(1)) {
-                break;
-            }
-            continue;
-        };
-        let batch = assemble_batch(&sampled.sequences, &dims);
-        let reply = train_time.time(|| backend.train(batch))?;
-        replay.update_priorities(&sampled.slots, &reply.priorities);
-
-        stats.steps = reply.step;
-        if stats.first_loss == 0.0 {
-            stats.first_loss = reply.loss;
-        }
-        stats.final_loss = reply.loss;
-        loss_sum += reply.loss as f64;
-        loss_gauge.set(reply.loss as f64);
-        steps_c.inc();
-        if loss_every > 0 && stats.steps % loss_every == 0 {
-            stats.loss_curve.push((stats.steps, reply.loss));
-        }
-
-        if stats.steps % cfg.target_update_interval as u64 == 0 {
-            backend.sync_target()?;
-            stats.target_syncs += 1;
-        }
+    if ctx.cfg.prefetch_depth <= 1 {
+        ctx.run_serial(&mut book, &mut on_batch)?;
+    } else {
+        ctx.run_pipelined(&mut book, &mut on_batch)?;
     }
 
-    if stats.steps > 0 {
-        stats.mean_loss = loss_sum / stats.steps as f64;
+    if book.stats.steps > 0 {
+        book.stats.mean_loss = book.loss_sum / book.stats.steps as f64;
     }
-    shutdown.signal();
-    Ok(stats)
+    ctx.shutdown.signal();
+    Ok(book.stats)
 }
 
 #[cfg(test)]
@@ -180,6 +467,39 @@ mod tests {
     }
 
     #[test]
+    fn assemble_into_reuses_pooled_buffers() {
+        let d = dims();
+        let seqs = vec![Box::new(seq(&d, 1.0)), Box::new(seq(&d, 2.0))];
+        let mut pool = assemble_batch(&seqs, &d);
+        let obs_ptr = pool.obs.as_ptr();
+        let obs_cap = pool.obs.capacity();
+        // Re-assembling the same shape into the pooled buffer must not
+        // reallocate the payload vectors.
+        assemble_into(&mut pool, &seqs, &d);
+        assert_eq!(pool.obs.as_ptr(), obs_ptr);
+        assert_eq!(pool.obs.capacity(), obs_cap);
+        assert_eq!(pool.batch, 2);
+        assert_eq!(pool.rewards[5], 2.0);
+    }
+
+    #[test]
+    fn first_loss_zero_is_not_overwritten() {
+        // Regression: a genuine first loss of 0.0 used to be treated as
+        // "not yet seen" and silently replaced by the second loss.
+        let mut book = Book::default();
+        let reply = |step: u64, loss: f32| TrainReply {
+            loss,
+            priorities: vec![],
+            grad_norm: 1.0,
+            step,
+        };
+        book.observe(&reply(1, 0.0), 0);
+        book.observe(&reply(2, 0.5), 0);
+        assert_eq!(book.stats.first_loss, 0.0);
+        assert_eq!(book.stats.final_loss, 0.5);
+    }
+
+    #[test]
     fn learner_runs_to_max_steps_and_signals_shutdown() {
         let d = dims();
         let replay = Arc::new(SequenceReplay::new(ReplayConfig {
@@ -207,6 +527,7 @@ mod tests {
             shutdown: shutdown.clone(),
             loss_every: 5,
             seed: 0,
+            on_batch: None,
         })
         .unwrap();
         assert_eq!(stats.steps, 25);
@@ -214,6 +535,90 @@ mod tests {
         assert!(stats.final_loss < stats.first_loss);
         assert_eq!(stats.loss_curve.len(), 5);
         assert!(shutdown.is_signalled());
+    }
+
+    #[test]
+    fn pipelined_learner_runs_to_max_steps() {
+        for depth in [2usize, 3] {
+            let d = dims();
+            let replay = Arc::new(SequenceReplay::new(ReplayConfig {
+                capacity: 64,
+                shards: 2,
+                ..Default::default()
+            }));
+            for i in 0..16 {
+                replay.add(seq(&d, i as f32));
+            }
+            let backend = Backend::Mock(Arc::new(MockModel::new(d, 5)));
+            let shutdown = ShutdownToken::new();
+            let cfg = LearnerConfig {
+                train_batch: 4,
+                min_replay: 8,
+                max_steps: 25,
+                target_update_interval: 10,
+                prefetch_depth: depth,
+                ..Default::default()
+            };
+            let metrics = Registry::new();
+            let stats = run_learner(LearnerArgs {
+                cfg,
+                dims: d,
+                backend,
+                replay,
+                metrics: metrics.clone(),
+                shutdown: shutdown.clone(),
+                loss_every: 5,
+                seed: 0,
+                on_batch: None,
+            })
+            .unwrap();
+            assert_eq!(stats.steps, 25, "depth={depth}");
+            assert_eq!(stats.target_syncs, 2, "depth={depth}");
+            assert_eq!(stats.loss_curve.len(), 5, "depth={depth}");
+            assert!(shutdown.is_signalled());
+            let occ = metrics.gauge("learner.prefetch_occupancy").get();
+            assert!((0.0..=1.0).contains(&occ), "occupancy {occ}");
+            assert!(
+                metrics.timer("learner.assemble_seconds").snapshot().count()
+                    >= 25
+            );
+        }
+    }
+
+    #[test]
+    fn pipelined_learner_propagates_train_failure() {
+        let d = dims();
+        let replay = Arc::new(SequenceReplay::new(ReplayConfig {
+            capacity: 64,
+            ..Default::default()
+        }));
+        for i in 0..16 {
+            replay.add(seq(&d, i as f32));
+        }
+        let backend = Backend::Mock(Arc::new(
+            MockModel::new(d, 5).with_train_error("injected train fault"),
+        ));
+        let cfg = LearnerConfig {
+            train_batch: 4,
+            min_replay: 8,
+            max_steps: 25,
+            prefetch_depth: 2,
+            ..Default::default()
+        };
+        let err = run_learner(LearnerArgs {
+            cfg,
+            dims: d,
+            backend,
+            replay,
+            metrics: Registry::new(),
+            shutdown: ShutdownToken::new(),
+            loss_every: 0,
+            seed: 0,
+            on_batch: None,
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("injected train fault"), "got: {err}");
     }
 
     #[test]
@@ -247,6 +652,7 @@ mod tests {
                         shutdown,
                         loss_every: 0,
                         seed: 1,
+                        on_batch: None,
                     })
                     .unwrap()
                 }

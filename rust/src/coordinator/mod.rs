@@ -2,13 +2,16 @@
 //!
 //! Wires the SEED-RL dataflow: N actor threads step environments (CPU
 //! side), a central inference batcher coalesces their observation slabs
-//! into batched accelerator calls, completed sequences land in
+//! into batched accelerator calls, completed sequences land in sharded
 //! prioritized replay, and the learner thread trains the AOT'd R2D2
 //! graph and refreshes priorities. Actors reach inference through the
 //! split-phase `policy` layer (submit/wait), which lets them pipeline
-//! env stepping against in-flight inference. The IMPALA-style `Local`
-//! mode skips the batcher and performs per-actor inference — the
-//! architectural baseline the paper contrasts (Fig. 1).
+//! env stepping against in-flight inference; the learner mirrors that
+//! design with a prefetch stage (`learner.prefetch_depth`) that samples
+//! and assembles the next batch while the backend trains the current
+//! one (DESIGN.md §7). The IMPALA-style `Local` mode skips the batcher
+//! and performs per-actor inference — the architectural baseline the
+//! paper contrasts (Fig. 1).
 //!
 //! ```text
 //!  actors (env CPU) ─submit─► policy ──slabs──► batcher ──► Backend (PJRT)
@@ -23,7 +26,7 @@ pub mod learner;
 
 pub use actor::ActorStats;
 pub use batcher::{ActorReply, Batcher, BatcherHandle, ChunkData, InferItem, ReplyChunk};
-pub use learner::{LearnerStats, assemble_batch};
+pub use learner::{BatchProbe, LearnerStats, assemble_batch, assemble_into};
 
 use crate::config::{InferenceMode, SystemConfig};
 use crate::exec::ShutdownToken;
@@ -94,11 +97,7 @@ pub fn run(cfg: &SystemConfig, backend: Backend, metrics: Registry) -> anyhow::R
         dims.train_batch
     );
 
-    let replay = Arc::new(SequenceReplay::new(ReplayConfig {
-        capacity: cfg.learner.replay_capacity,
-        alpha: cfg.learner.priority_exponent,
-        min_priority: 1e-3,
-    }));
+    let replay = Arc::new(SequenceReplay::new(ReplayConfig::from(&cfg.replay)));
     let shutdown = ShutdownToken::new();
     let t0 = Instant::now();
 
@@ -154,6 +153,7 @@ pub fn run(cfg: &SystemConfig, backend: Backend, metrics: Registry) -> anyhow::R
                 shutdown: shutdown.clone(),
                 loss_every: 10,
                 seed: cfg.seed,
+                on_batch: None,
             });
             // run_learner signals shutdown on its happy path only; a
             // learner error (backend train failure) must also stop the
@@ -186,6 +186,11 @@ pub fn run(cfg: &SystemConfig, backend: Backend, metrics: Registry) -> anyhow::R
     let episodes: u64 = actor_stats.iter().map(|a| a.episodes).sum();
     let batches = metrics.counter("batcher.batches").get();
     let items = metrics.counter("batcher.items").get();
+    // Contended shard-lock acquisitions over the whole run (actors
+    // striping inserts vs the learner's sample/write-back passes).
+    metrics
+        .counter("replay.shard_contention")
+        .add(replay.shard_contention());
 
     Ok(RunReport {
         learner: learner_stats,
@@ -225,7 +230,7 @@ mod tests {
         cfg.learner.train_batch = 4;
         cfg.learner.min_replay = 8;
         cfg.learner.max_steps = 30;
-        cfg.learner.replay_capacity = 512;
+        cfg.replay.capacity = 512;
         cfg.learner.target_update_interval = 10;
         cfg.batcher.max_batch = 8;
         cfg.batcher.batch_sizes = vec![1, 8];
@@ -330,6 +335,27 @@ mod tests {
         assert!(report.sequences > 0);
         assert_eq!(report.batcher_errors, 0);
         assert!(report.first_error.is_none(), "{:?}", report.first_error);
+    }
+
+    #[test]
+    fn sharded_replay_and_prefetching_learner_end_to_end() {
+        // The learner-side mirror of the actor pipeline test: 4 replay
+        // shards + a depth-2 prefetching learner must run the whole
+        // dataflow to completion and expose the new metrics.
+        let (mut cfg, backend) = mock_system(4, InferenceMode::Central);
+        cfg.replay.shards = 4;
+        cfg.learner.prefetch_depth = 2;
+        let metrics = Registry::new();
+        let report = run(&cfg, backend, metrics.clone()).unwrap();
+        assert_eq!(report.learner.steps, 30);
+        assert!(report.env_steps > 0);
+        assert!(report.sequences > 0);
+        assert!(report.first_error.is_none(), "{:?}", report.first_error);
+        let snap = metrics.snapshot();
+        let occ = snap["learner.prefetch_occupancy"];
+        assert!((0.0..=1.0).contains(&occ), "occupancy {occ}");
+        assert!(snap.contains_key("replay.shard_contention"));
+        assert!(snap["learner.assemble_seconds.count"] >= 30.0);
     }
 
     #[test]

@@ -24,7 +24,11 @@
 //!   ratio; see DESIGN.md §4).
 //! * [`runtime`] — PJRT loading/execution of the AOT HLO artifacts.
 //! * [`env`], [`replay`], [`rl`] — RL substrates (ALE-like suite, R2D2
-//!   prioritized sequence replay, epsilon/return utilities).
+//!   prioritized sequence replay striped over `replay.shards`
+//!   per-mutex ring+sum-tree shards, epsilon/return utilities). The
+//!   learner mirrors the actor pipeline: `learner.prefetch_depth`
+//!   overlaps batch sample/assembly with the in-flight train step
+//!   (1 = the seed's serialized loop, bit-for-bit; see DESIGN.md §7).
 //! * [`simarch`] — the architectural simulator (GPU/CPU/power models);
 //!   its system model carries the same `envs_per_actor` and
 //!   `pipeline_depth` axes.

@@ -63,6 +63,16 @@ fn load_config(parsed: &rlarch::cli::Parsed) -> anyhow::Result<SystemConfig> {
             cfg.actors.pipeline_depth = d;
         }
     }
+    if let Ok(s) = parsed.get_usize("replay-shards") {
+        if s > 0 {
+            cfg.replay.shards = s;
+        }
+    }
+    if let Ok(d) = parsed.get_usize("prefetch-depth") {
+        if d > 0 {
+            cfg.learner.prefetch_depth = d;
+        }
+    }
     if let Ok(k) = parsed.get_usize("steps") {
         if k > 0 {
             cfg.learner.max_steps = k;
@@ -75,6 +85,10 @@ fn load_config(parsed: &rlarch::cli::Parsed) -> anyhow::Result<SystemConfig> {
     if parsed.get("mode") == "local" {
         cfg.mode = InferenceMode::Local;
     }
+    // CLI overrides can invalidate a config that parsed cleanly (e.g.
+    // --replay-shards that does not divide the capacity): re-validate
+    // here so that fails before the runtime spawns.
+    cfg.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
     Ok(cfg)
 }
 
@@ -87,6 +101,16 @@ fn cmd_train(args: &[String]) -> i32 {
             "pipeline-depth",
             "0",
             "override actor pipeline depth (1 = serialized)",
+        )
+        .flag(
+            "replay-shards",
+            "0",
+            "override replay shard count (1 = single-mutex buffer)",
+        )
+        .flag(
+            "prefetch-depth",
+            "0",
+            "override learner prefetch depth (1 = serialized)",
         )
         .flag("steps", "0", "override learner steps")
         .flag("env", "", "override env (grid_pong|breakout|catch|nav_maze)")
@@ -106,12 +130,15 @@ fn cmd_train(args: &[String]) -> i32 {
         let backend = Backend::Xla(handle);
         let metrics = Registry::new();
         println!(
-            "rlarch train: env={} actors={} envs/actor={} depth={} steps={} mode={:?}",
+            "rlarch train: env={} actors={} envs/actor={} depth={} steps={} \
+             shards={} prefetch={} mode={:?}",
             cfg.env.name,
             cfg.actors.num_actors,
             cfg.actors.envs_per_actor,
             cfg.actors.pipeline_depth,
             cfg.learner.max_steps,
+            cfg.replay.shards,
+            cfg.learner.prefetch_depth,
             cfg.mode
         );
         let report = coordinator::run(&cfg, backend, metrics.clone())?;

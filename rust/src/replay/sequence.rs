@@ -1,15 +1,36 @@
-//! R2D2 prioritized sequence replay buffer.
+//! R2D2 prioritized sequence replay buffer, sharded.
 //!
 //! Stores fixed-length sequences in a ring; samples with probability
 //! proportional to priority^alpha through a sum tree; priorities are
 //! refreshed from the learner's TD-error output after every train step.
 //! New sequences enter at the current max priority (so nothing starves
 //! before its first update) — the standard Ape-X/R2D2 scheme.
+//!
+//! The ring is striped across `shards` independent ring+sum-tree shards,
+//! each behind its own mutex: global slot `g` lives in shard `g % S` at
+//! local index `g / S`, so consecutive actor inserts land on different
+//! shards and writer threads stop serializing on one global lock (the
+//! contention measurement is in EXPERIMENTS.md §Perf). Sampling is
+//! stratified *across* shards — a batch's rows are allocated to shards
+//! proportional to each shard's priority mass (largest-remainder
+//! rounding), then stratified *within* each shard over equal-mass
+//! segments, the standard PER scheme. With `shards = 1` both the insert
+//! path and the sampling path reduce to the classic single-ring buffer
+//! bit-for-bit: one `next_f64` per row against segments of the single
+//! tree's total (asserted against a verbatim seed replica in
+//! `tests/replay_equivalence.rs`).
+//!
+//! Every insert carries a monotonically increasing generation tag, and
+//! sampled batches return the tags alongside the slot ids: a priority
+//! update whose tag no longer matches the slot's occupant is dropped as
+//! stale, so a slot overwritten between `sample` and `update_priorities`
+//! can never have the old batch's TD-error applied to the new sequence.
 
 use super::sum_tree::SumTree;
 use crate::rl::Sequence;
 use crate::util::prng::Pcg32;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 pub struct ReplayConfig {
     pub capacity: usize,
@@ -17,6 +38,9 @@ pub struct ReplayConfig {
     pub alpha: f64,
     /// Floor added to updated priorities so nothing becomes unsampleable.
     pub min_priority: f64,
+    /// Independent ring+sum-tree shards the capacity is striped across
+    /// (must divide `capacity`). 1 = the classic single-mutex buffer.
+    pub shards: usize,
 }
 
 impl Default for ReplayConfig {
@@ -25,145 +49,347 @@ impl Default for ReplayConfig {
             capacity: 4_096,
             alpha: 0.9,
             min_priority: 1e-3,
+            shards: 1,
         }
     }
 }
 
-struct Inner {
-    slots: Vec<Option<Arc<Sequence>>>,
+/// The `[replay]` config table maps 1:1 onto the buffer's own knobs.
+impl From<&crate::config::ReplayBufferConfig> for ReplayConfig {
+    fn from(c: &crate::config::ReplayBufferConfig) -> Self {
+        Self {
+            capacity: c.capacity,
+            alpha: c.alpha,
+            min_priority: c.min_priority,
+            shards: c.shards,
+        }
+    }
+}
+
+/// One occupied ring slot: the stored sequence plus the insert
+/// generation that guards priority updates against overwrites.
+struct SlotEntry {
+    seq: Arc<Sequence>,
+    generation: u64,
+}
+
+struct Shard {
+    slots: Vec<Option<SlotEntry>>,
     tree: SumTree,
-    write: usize,
     len: usize,
-    inserts: u64,
-    /// Raw (pre-alpha) max priority seen, for new-sequence initialization.
+    /// Raw (pre-alpha) max priority seen by this shard, for
+    /// new-sequence initialization (per-shard, like the per-ring value
+    /// it generalizes; shards exchange no priority state).
     max_raw_priority: f64,
 }
 
 /// Thread-safe prioritized sequence buffer (actors insert, learner
-/// samples + updates). A single mutex is sufficient at our rates; see
-/// EXPERIMENTS.md §Perf for the contention measurement.
+/// samples + updates), striped over per-shard mutexes; see the module
+/// docs and EXPERIMENTS.md §Perf for the contention measurement.
 pub struct SequenceReplay {
     cfg: ReplayConfig,
-    inner: Mutex<Inner>,
+    shards: Vec<Mutex<Shard>>,
+    /// Global insert cursor; also the generation tag of the next insert.
+    cursor: AtomicU64,
+    /// Lock acquisitions that found a shard mutex already held.
+    contention: AtomicU64,
 }
 
-/// A sampled batch: shared sequence handles + slot ids for the priority
-/// refresh. `Arc` keeps sampling allocation-free on the sequence payload
-/// (a clone of a 32 KiB obs sequence per row dominated the sample path;
-/// see EXPERIMENTS.md §Perf).
+/// A sampled batch: shared sequence handles + global slot ids and insert
+/// generations for the priority refresh. `Arc` keeps sampling
+/// allocation-free on the sequence payload (a clone of a 32 KiB obs
+/// sequence per row dominated the sample path; see EXPERIMENTS.md
+/// §Perf).
 pub struct SampledBatch {
     pub sequences: Vec<Arc<Sequence>>,
     pub slots: Vec<usize>,
+    /// Insert generation of each sampled slot; pass back to
+    /// [`SequenceReplay::update_priorities`] so updates racing an
+    /// overwrite are dropped instead of retagging the new occupant.
+    pub generations: Vec<u64>,
 }
 
 impl SequenceReplay {
     pub fn new(cfg: ReplayConfig) -> Self {
-        let capacity = cfg.capacity;
+        assert!(cfg.capacity > 0, "replay capacity must be > 0");
+        assert!(cfg.shards >= 1, "replay shards must be >= 1");
+        assert!(
+            cfg.capacity / cfg.shards * cfg.shards == cfg.capacity,
+            "replay shards ({}) must divide capacity ({})",
+            cfg.shards,
+            cfg.capacity
+        );
+        let per_shard = cfg.capacity / cfg.shards;
+        let shards = (0..cfg.shards)
+            .map(|_| {
+                Mutex::new(Shard {
+                    slots: (0..per_shard).map(|_| None).collect(),
+                    tree: SumTree::new(per_shard),
+                    len: 0,
+                    max_raw_priority: 1.0,
+                })
+            })
+            .collect();
         Self {
             cfg,
-            inner: Mutex::new(Inner {
-                slots: (0..capacity).map(|_| None).collect(),
-                tree: SumTree::new(capacity),
-                write: 0,
-                len: 0,
-                inserts: 0,
-                max_raw_priority: 1.0,
-            }),
+            shards,
+            cursor: AtomicU64::new(0),
+            contention: AtomicU64::new(0),
         }
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len
+        (0..self.shards.len()).map(|s| self.lock_shard(s).len).sum()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Total insert *attempts* (the generation cursor). A wrap-racing
+    /// add that loses its slot to a newer generation still counts —
+    /// unlike the seed's committed-write counter — so this can exceed
+    /// the number of sequences ever stored by the (vanishingly rare)
+    /// number of same-slot races.
     pub fn inserts(&self) -> u64 {
-        self.inner.lock().unwrap().inserts
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Number of shards the capacity is striped across.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Lock acquisitions so far that found a shard mutex already held —
+    /// the contention signal behind the `replay.shard_contention`
+    /// metric.
+    pub fn shard_contention(&self) -> u64 {
+        self.contention.load(Ordering::Relaxed)
+    }
+
+    /// Lock shard `s`, counting the acquisition as contended when the
+    /// mutex was already held.
+    fn lock_shard(&self, s: usize) -> MutexGuard<'_, Shard> {
+        if let Ok(g) = self.shards[s].try_lock() {
+            return g;
+        }
+        self.contention.fetch_add(1, Ordering::Relaxed);
+        self.shards[s].lock().unwrap()
     }
 
     /// Insert at max priority; overwrites the oldest slot when full.
+    /// Striped: consecutive inserts land on consecutive shards.
     pub fn add(&self, seq: Sequence) {
-        let mut g = self.inner.lock().unwrap();
-        let idx = g.write;
-        let raw = g.max_raw_priority;
-        let prio = self.shaped(raw);
-        g.slots[idx] = Some(Arc::new(seq));
-        g.tree.set(idx, prio);
-        g.write = (g.write + 1) % self.cfg.capacity;
-        g.len = (g.len + 1).min(self.cfg.capacity);
-        g.inserts += 1;
+        let generation = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let global = (generation % self.cfg.capacity as u64) as usize;
+        let n = self.shards.len();
+        let (shard, local) = (global % n, global / n);
+        let mut g = self.lock_shard(shard);
+        if let Some(e) = &g.slots[local] {
+            // A wrap-racing older insert must not clobber a newer one.
+            if e.generation > generation {
+                return;
+            }
+        } else {
+            g.len += 1;
+        }
+        let prio = self.shaped(g.max_raw_priority);
+        g.slots[local] = Some(SlotEntry {
+            seq: Arc::new(seq),
+            generation,
+        });
+        g.tree.set(local, prio);
     }
 
     /// Sample `batch` sequences (with replacement across the priority
-    /// distribution; stratified over equal mass segments, the standard
-    /// PER scheme). Returns None until the buffer holds >= batch items.
+    /// distribution). Rows are allocated to shards proportional to each
+    /// shard's priority mass, then stratified over equal mass segments
+    /// within the shard, the standard PER scheme; at `shards = 1` this
+    /// is exactly classic stratified sampling over one tree, consuming
+    /// one `next_f64` per row. Returns None until the buffer holds
+    /// >= batch items.
     pub fn sample(&self, batch: usize, rng: &mut Pcg32) -> Option<SampledBatch> {
-        let g = self.inner.lock().unwrap();
-        if g.len < batch || g.tree.total() <= 0.0 {
+        let n = self.shards.len();
+        // Pass 1: shard priority masses (short per-shard critical
+        // sections; entries are never removed, so a mass observed > 0
+        // stays > 0 for pass 2).
+        let mut len = 0usize;
+        let mut masses = Vec::with_capacity(n);
+        for s in 0..n {
+            let g = self.lock_shard(s);
+            len += g.len;
+            masses.push(g.tree.total());
+        }
+        let total: f64 = masses.iter().sum();
+        if len < batch || total <= 0.0 {
             return None;
         }
-        let total = g.tree.total();
-        let seg = total / batch as f64;
+        let quotas = allocate_rows(batch, &masses);
         let mut sequences = Vec::with_capacity(batch);
         let mut slots = Vec::with_capacity(batch);
-        for i in 0..batch {
-            let u = (i as f64 + rng.next_f64()) * seg;
-            let slot = g.tree.sample(u);
-            match &g.slots[slot] {
-                Some(seq) => {
-                    sequences.push(seq.clone());
-                    slots.push(slot);
-                }
-                None => {
-                    // Tree/slot mismatch is a bug: priorities for empty
-                    // slots must be zero.
-                    unreachable!("sampled an empty slot {slot}");
+        let mut generations = Vec::with_capacity(batch);
+        // Pass 2: stratified sampling within each shard that drew rows.
+        for (s, &k) in quotas.iter().enumerate() {
+            if k == 0 {
+                continue;
+            }
+            let g = self.lock_shard(s);
+            let seg = g.tree.total() / k as f64;
+            for i in 0..k {
+                let u = (i as f64 + rng.next_f64()) * seg;
+                let local = g.tree.sample(u);
+                match &g.slots[local] {
+                    Some(e) => {
+                        sequences.push(e.seq.clone());
+                        slots.push(local * n + s);
+                        generations.push(e.generation);
+                    }
+                    None => {
+                        // Tree/slot mismatch is a bug: priorities for
+                        // empty slots must be zero.
+                        unreachable!("sampled an empty slot {local} in shard {s}");
+                    }
                 }
             }
         }
-        Some(SampledBatch { sequences, slots })
+        Some(SampledBatch {
+            sequences,
+            slots,
+            generations,
+        })
     }
 
     /// Refresh priorities (raw TD-error magnitudes) after a train step.
-    /// Slots overwritten since sampling are skipped (stale update).
-    pub fn update_priorities(&self, slots: &[usize], raw_priorities: &[f32]) {
-        let mut g = self.inner.lock().unwrap();
-        for (&slot, &p) in slots.iter().zip(raw_priorities) {
-            if g.slots[slot].is_none() {
+    /// `generations` are the insert tags returned by [`Self::sample`]:
+    /// an update whose tag no longer matches the slot's occupant (the
+    /// slot was overwritten since sampling) is dropped as stale instead
+    /// of applying the old batch's TD-error to the new sequence.
+    pub fn update_priorities(
+        &self,
+        slots: &[usize],
+        generations: &[u64],
+        raw_priorities: &[f32],
+    ) {
+        debug_assert_eq!(slots.len(), generations.len());
+        let n = self.shards.len();
+        for s in 0..n {
+            if !slots.iter().any(|&slot| slot % n == s) {
                 continue;
             }
-            let raw = (p as f64).max(self.cfg.min_priority);
-            g.max_raw_priority = g.max_raw_priority.max(raw);
-            let shaped = self.shaped(raw);
-            g.tree.set(slot, shaped);
+            let mut g = self.lock_shard(s);
+            for ((&slot, &generation), &p) in
+                slots.iter().zip(generations).zip(raw_priorities)
+            {
+                if slot % n != s {
+                    continue;
+                }
+                let local = slot / n;
+                // Empty, or overwritten since sampling: stale, drop.
+                let fresh = matches!(
+                    &g.slots[local],
+                    Some(e) if e.generation == generation
+                );
+                if !fresh {
+                    continue;
+                }
+                let raw = (p as f64).max(self.cfg.min_priority);
+                g.max_raw_priority = g.max_raw_priority.max(raw);
+                let shaped = self.shaped(raw);
+                g.tree.set(local, shaped);
+            }
         }
     }
 
-    /// Mean raw insert-time priority currently in the tree (diagnostic).
+    /// Total priority mass currently in the trees (diagnostic).
     pub fn total_priority(&self) -> f64 {
-        self.inner.lock().unwrap().tree.total()
+        (0..self.shards.len())
+            .map(|s| self.lock_shard(s).tree.total())
+            .sum()
+    }
+
+    /// Current (shaped) priority of one global slot (diagnostic/test
+    /// API; the stale-update regression tests watch individual slots).
+    pub fn priority_of(&self, slot: usize) -> f64 {
+        let n = self.shards.len();
+        self.lock_shard(slot % n).tree.get(slot / n)
     }
 
     /// Snapshot of the buffered sequences in insertion order (oldest
     /// first). Diagnostic/test API: the actor-equivalence tests compare
     /// whole replay contents across loop implementations.
     pub fn snapshot(&self) -> Vec<Arc<Sequence>> {
-        let g = self.inner.lock().unwrap();
+        let n = self.shards.len();
+        let guards: Vec<MutexGuard<'_, Shard>> =
+            (0..n).map(|s| self.lock_shard(s)).collect();
         let cap = self.cfg.capacity;
-        // Oldest entry: the write cursor when the ring has wrapped,
-        // slot 0 otherwise.
-        let start = if g.len == cap { g.write } else { 0 };
-        (0..g.len)
-            .filter_map(|i| g.slots[(start + i) % cap].clone())
+        let count: usize = guards.iter().map(|g| g.len).sum();
+        // Oldest entry once the ring has wrapped: one past the newest
+        // *committed* generation — the atomic cursor can run ahead of
+        // an in-flight add that has reserved a generation but not yet
+        // written its slot, and deriving the start from it would rotate
+        // the order. Global slot 0 otherwise.
+        let start = if count == cap {
+            let newest = guards
+                .iter()
+                .flat_map(|g| g.slots.iter().flatten().map(|e| e.generation))
+                .max()
+                .unwrap_or(0);
+            ((newest + 1) % cap as u64) as usize
+        } else {
+            0
+        };
+        (0..count)
+            .filter_map(|i| {
+                let g = (start + i) % cap;
+                guards[g % n].slots[g / n].as_ref().map(|e| e.seq.clone())
+            })
             .collect()
     }
 
     fn shaped(&self, raw: f64) -> f64 {
         raw.max(self.cfg.min_priority).powf(self.cfg.alpha)
     }
+}
+
+/// Largest-remainder allocation of `batch` rows proportional to shard
+/// priority masses. Deterministic (no RNG): exact quotas are floored,
+/// then leftover rows go to the largest fractional remainders (ties to
+/// the lower shard index). Zero-mass shards never receive rows.
+fn allocate_rows(batch: usize, masses: &[f64]) -> Vec<usize> {
+    let total: f64 = masses.iter().sum();
+    let mut quotas = Vec::with_capacity(masses.len());
+    let mut remainders = Vec::with_capacity(masses.len());
+    let mut assigned = 0usize;
+    for (i, &m) in masses.iter().enumerate() {
+        let exact = batch as f64 * m / total;
+        let q = exact.floor() as usize;
+        quotas.push(q);
+        assigned += q;
+        if m > 0.0 {
+            remainders.push((exact - q as f64, i));
+        }
+    }
+    remainders.sort_by(|a, b| {
+        b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1))
+    });
+    for &(_, i) in &remainders {
+        if assigned == batch {
+            break;
+        }
+        quotas[i] += 1;
+        assigned += 1;
+    }
+    // Float-sum slack can leave a row unplaced; park leftovers on
+    // positive-mass shards round-robin.
+    let mut i = 0usize;
+    while assigned < batch {
+        if masses[i % masses.len()] > 0.0 {
+            quotas[i % masses.len()] += 1;
+            assigned += 1;
+        }
+        i += 1;
+    }
+    quotas
 }
 
 #[cfg(test)]
@@ -197,6 +423,7 @@ mod tests {
         let b = r.sample(4, &mut rng).unwrap();
         assert_eq!(b.sequences.len(), 4);
         assert_eq!(b.slots.len(), 4);
+        assert_eq!(b.generations.len(), 4);
     }
 
     #[test]
@@ -238,20 +465,42 @@ mod tests {
     }
 
     #[test]
+    fn sharded_snapshot_keeps_global_insertion_order() {
+        for shards in [2usize, 4] {
+            let r = SequenceReplay::new(ReplayConfig {
+                capacity: 8,
+                shards,
+                ..Default::default()
+            });
+            for i in 0..11 {
+                r.add(seq(i as f32));
+            }
+            assert_eq!(r.len(), 8);
+            let tags: Vec<f32> =
+                r.snapshot().iter().map(|s| s.rewards[0]).collect();
+            let expect: Vec<f32> = (3..11).map(|i| i as f32).collect();
+            assert_eq!(tags, expect, "shards={shards}");
+        }
+    }
+
+    #[test]
     fn priority_update_shifts_sampling() {
         let r = SequenceReplay::new(ReplayConfig {
             capacity: 8,
             alpha: 1.0,
             min_priority: 1e-3,
+            shards: 1,
         });
         for i in 0..8 {
             r.add(seq(i as f32));
         }
-        // Depress every slot except slot 5.
+        // Depress every slot except slot 5. First-pass inserts: the
+        // generation of slot i is i.
         let slots: Vec<usize> = (0..8).collect();
+        let generations: Vec<u64> = (0..8).collect();
         let mut prios = vec![1e-3f32; 8];
         prios[5] = 100.0;
-        r.update_priorities(&slots, &prios);
+        r.update_priorities(&slots, &generations, &prios);
         let mut rng = Pcg32::seeded(2);
         let mut hits5 = 0;
         let n = 200;
@@ -265,16 +514,84 @@ mod tests {
     }
 
     #[test]
+    fn sharded_sampling_tracks_priority_mass() {
+        // 2 shards, all mass on one slot of shard 1: stratified
+        // allocation must send essentially every row there.
+        let r = SequenceReplay::new(ReplayConfig {
+            capacity: 8,
+            alpha: 1.0,
+            min_priority: 1e-3,
+            shards: 2,
+        });
+        for i in 0..8 {
+            r.add(seq(i as f32));
+        }
+        let slots: Vec<usize> = (0..8).collect();
+        let generations: Vec<u64> = (0..8).collect();
+        let mut prios = vec![1e-3f32; 8];
+        prios[5] = 100.0; // global slot 5 = shard 1, local 2
+        r.update_priorities(&slots, &generations, &prios);
+        let mut rng = Pcg32::seeded(7);
+        let mut hits5 = 0;
+        let n = 100;
+        for _ in 0..n {
+            let b = r.sample(4, &mut rng).unwrap();
+            hits5 += b.slots.iter().filter(|&&s| s == 5).count();
+        }
+        assert!(hits5 > 4 * n * 8 / 10, "slot 5 drew {hits5}/{}", 4 * n);
+    }
+
+    #[test]
+    fn stale_update_after_overwrite_is_dropped() {
+        // Regression: a slot overwritten between sample and
+        // update_priorities must NOT receive the old batch's TD-error.
+        let r = SequenceReplay::new(ReplayConfig {
+            capacity: 4,
+            alpha: 1.0,
+            min_priority: 1e-3,
+            shards: 1,
+        });
+        for i in 0..4 {
+            r.add(seq(i as f32));
+        }
+        let mut rng = Pcg32::seeded(3);
+        let b = r.sample(4, &mut rng).unwrap();
+        // Force an overwrite of every sampled slot before the update
+        // lands (one full ring wrap).
+        for i in 4..8 {
+            r.add(seq(i as f32));
+        }
+        let before: Vec<f64> =
+            b.slots.iter().map(|&s| r.priority_of(s)).collect();
+        r.update_priorities(&b.slots, &b.generations, &[100.0; 4]);
+        for (i, &slot) in b.slots.iter().enumerate() {
+            assert_eq!(
+                r.priority_of(slot),
+                before[i],
+                "stale update leaked into overwritten slot {slot}"
+            );
+        }
+        // A fresh sample's generations do match, and its update lands.
+        let b2 = r.sample(4, &mut rng).unwrap();
+        r.update_priorities(&b2.slots, &b2.generations, &[100.0; 4]);
+        assert!(
+            (r.priority_of(b2.slots[0]) - 100.0).abs() < 1e-9,
+            "fresh update must apply"
+        );
+    }
+
+    #[test]
     fn alpha_zero_is_uniform() {
         let r = SequenceReplay::new(ReplayConfig {
             capacity: 4,
             alpha: 0.0,
             min_priority: 1e-3,
+            shards: 1,
         });
         for i in 0..4 {
             r.add(seq(i as f32));
         }
-        r.update_priorities(&[0, 1, 2, 3], &[100.0, 1.0, 1.0, 1.0]);
+        r.update_priorities(&[0, 1, 2, 3], &[0, 1, 2, 3], &[100.0, 1.0, 1.0, 1.0]);
         let mut rng = Pcg32::seeded(3);
         let mut counts = [0u32; 4];
         for _ in 0..8_000 {
@@ -286,32 +603,52 @@ mod tests {
     }
 
     #[test]
+    fn allocate_rows_is_proportional_and_exact() {
+        assert_eq!(allocate_rows(8, &[1.0]), vec![8]);
+        assert_eq!(allocate_rows(8, &[1.0, 1.0]), vec![4, 4]);
+        assert_eq!(allocate_rows(8, &[3.0, 1.0]), vec![6, 2]);
+        // Zero-mass shards draw nothing; totals always sum to batch.
+        assert_eq!(allocate_rows(5, &[0.0, 1.0, 0.0]), vec![0, 5, 0]);
+        let q = allocate_rows(7, &[1.0, 1.0, 1.0]);
+        assert_eq!(q.iter().sum::<usize>(), 7);
+        assert!(q.iter().all(|&k| (2..=3).contains(&k)), "{q:?}");
+    }
+
+    #[test]
     fn concurrent_add_and_sample() {
-        let r = std::sync::Arc::new(SequenceReplay::new(ReplayConfig {
-            capacity: 128,
-            ..Default::default()
-        }));
-        std::thread::scope(|s| {
-            for t in 0..4 {
-                let r = r.clone();
+        for shards in [1usize, 4] {
+            let r = Arc::new(SequenceReplay::new(ReplayConfig {
+                capacity: 128,
+                shards,
+                ..Default::default()
+            }));
+            std::thread::scope(|s| {
+                for t in 0..4 {
+                    let r = r.clone();
+                    s.spawn(move || {
+                        for i in 0..200 {
+                            r.add(seq((t * 1000 + i) as f32));
+                        }
+                    });
+                }
+                let r2 = r.clone();
                 s.spawn(move || {
-                    for i in 0..200 {
-                        r.add(seq((t * 1000 + i) as f32));
+                    let mut rng = Pcg32::seeded(4);
+                    let mut sampled = 0;
+                    while sampled < 50 {
+                        if let Some(b) = r2.sample(8, &mut rng) {
+                            r2.update_priorities(
+                                &b.slots,
+                                &b.generations,
+                                &[0.5; 8],
+                            );
+                            sampled += 1;
+                        }
                     }
                 });
-            }
-            let r2 = r.clone();
-            s.spawn(move || {
-                let mut rng = Pcg32::seeded(4);
-                let mut sampled = 0;
-                while sampled < 50 {
-                    if let Some(b) = r2.sample(8, &mut rng) {
-                        r2.update_priorities(&b.slots, &vec![0.5; 8]);
-                        sampled += 1;
-                    }
-                }
             });
-        });
-        assert_eq!(r.inserts(), 800);
+            assert_eq!(r.inserts(), 800, "shards={shards}");
+            assert_eq!(r.len(), 128, "shards={shards}");
+        }
     }
 }

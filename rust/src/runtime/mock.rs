@@ -24,6 +24,9 @@ pub struct MockModel {
     /// Optional per-call artificial latency (models GPU time in DES-free
     /// tests); protected by a mutex to keep MockModel: Sync.
     infer_latency: Mutex<std::time::Duration>,
+    /// Optional per-train-step artificial latency (GPU train time for
+    /// the learner-pipeline overlap tests).
+    train_latency: Mutex<std::time::Duration>,
     /// Optional injected inference/train failures (failure-path tests).
     infer_error: Mutex<Option<String>>,
     train_error: Mutex<Option<String>>,
@@ -43,6 +46,7 @@ impl MockModel {
             step: AtomicU64::new(0),
             target_syncs: AtomicU64::new(0),
             infer_latency: Mutex::new(std::time::Duration::ZERO),
+            train_latency: Mutex::new(std::time::Duration::ZERO),
             infer_error: Mutex::new(None),
             train_error: Mutex::new(None),
         }
@@ -61,6 +65,13 @@ impl MockModel {
 
     pub fn with_infer_latency(self, d: std::time::Duration) -> Self {
         *self.infer_latency.lock().unwrap() = d;
+        self
+    }
+
+    /// Add artificial GPU time to every train step (the learner-pipeline
+    /// overlap tests inject latency here and measure the prefetch win).
+    pub fn with_train_latency(self, d: std::time::Duration) -> Self {
+        *self.train_latency.lock().unwrap() = d;
         self
     }
 
@@ -163,6 +174,10 @@ impl MockModel {
     pub fn train(&self, batch: &TrainBatch) -> TrainReply {
         self.dims();
         batch.validate(&self.dims).expect("mock train batch shape");
+        let lat = *self.train_latency.lock().unwrap();
+        if !lat.is_zero() {
+            std::thread::sleep(lat);
+        }
         let step = self.step.fetch_add(1, Ordering::Relaxed) + 1;
         let t = self.dims.seq_len;
         // Priorities: |mean reward| per sequence + small floor.

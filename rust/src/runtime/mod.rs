@@ -133,6 +133,20 @@ impl Backend {
         }
     }
 
+    /// Blocking learner step over a caller-owned batch the caller keeps.
+    /// The mock trains by reference, so the buffers come back intact —
+    /// the learner's batch pool reuses them for the next assembly. The
+    /// XLA path genuinely needs an owned batch at the runtime-thread
+    /// channel boundary, so there the buffers are taken and the caller's
+    /// shell comes back empty (pooling degrades to plain allocation,
+    /// exactly today's cost).
+    pub fn train_step(&self, batch: &mut TrainBatch) -> anyhow::Result<TrainReply> {
+        match self {
+            Backend::Xla(h) => h.train(batch.take()),
+            Backend::Mock(m) => m.try_train(batch),
+        }
+    }
+
     /// Copy online params -> target params.
     pub fn sync_target(&self) -> anyhow::Result<()> {
         match self {
@@ -179,6 +193,36 @@ impl InferSlices<'_> {
 }
 
 impl TrainBatch {
+    /// An empty zero-batch shell, the unit of the learner's buffer pool
+    /// (`assemble_into` fills it, reusing whatever capacity it holds).
+    pub fn empty() -> TrainBatch {
+        TrainBatch {
+            batch: 0,
+            obs: Vec::new(),
+            actions: Vec::new(),
+            rewards: Vec::new(),
+            discounts: Vec::new(),
+            h0: Vec::new(),
+            c0: Vec::new(),
+        }
+    }
+
+    /// Move the contents out, leaving an empty shell behind (the XLA
+    /// train path needs an owned batch at the channel boundary).
+    pub fn take(&mut self) -> TrainBatch {
+        let taken = TrainBatch {
+            batch: self.batch,
+            obs: std::mem::take(&mut self.obs),
+            actions: std::mem::take(&mut self.actions),
+            rewards: std::mem::take(&mut self.rewards),
+            discounts: std::mem::take(&mut self.discounts),
+            h0: std::mem::take(&mut self.h0),
+            c0: std::mem::take(&mut self.c0),
+        };
+        self.batch = 0;
+        taken
+    }
+
     pub fn validate(&self, dims: &ModelDims) -> anyhow::Result<()> {
         let bt = self.batch * dims.seq_len;
         anyhow::ensure!(self.batch == dims.train_batch, "batch size mismatch");

@@ -44,6 +44,23 @@ pub fn simulate(model: &SystemModel, n: usize, sim_seconds: f64, dt: f64) -> Des
     let t_env = model.cpu.step_cost_us() * 1e-6;
     let t_cycle_env = rows_per_group * t_env; // CPU work per group cycle
     let t_train = model.train_time();
+    // A train job occupies the learner for the whole train cycle
+    // (GPU step + CPU sample/assemble, overlapped when prefetching) but
+    // keeps the GPU busy only for the t_train fraction of it — the DES
+    // mirror of `SystemModel::train_cycle`. Granularity approximation:
+    // the cycle is served on the single GPU queue, so the CPU-side
+    // phases also delay queued *inference* batches, which the real
+    // coordinator keeps serving; at the default sub-ms learner overhead
+    // and paper replay ratios the bias is far inside the structural
+    // tolerance the DES is used at (see the batcher note below for the
+    // same trade), and modelling the learner as a second server would
+    // need per-thread resume tracking.
+    let t_train_cycle = model.train_cycle().max(t_train);
+    let train_busy_frac = if t_train_cycle > 0.0 {
+        (t_train / t_train_cycle).min(1.0)
+    } else {
+        1.0
+    };
     let train_every = if model.train_per_env > 0.0 {
         (1.0 / model.train_per_env).max(1.0)
     } else {
@@ -159,7 +176,7 @@ pub fn simulate(model: &SystemModel, n: usize, sim_seconds: f64, dt: f64) -> Des
         if gpu_inflight.is_none() {
             if let Some((is_train, batch)) = gpu_queue.pop_front() {
                 let service = if is_train {
-                    t_train
+                    t_train_cycle
                 } else {
                     // The real batcher never exceeds max_batch rows per
                     // GPU call: a flush of rows > max_batch (E > cap) is
@@ -181,8 +198,11 @@ pub fn simulate(model: &SystemModel, n: usize, sim_seconds: f64, dt: f64) -> Des
                 gpu_inflight = Some((now + service, is_train, batch));
             }
         }
-        if measuring && gpu_inflight.is_some() {
-            gpu_busy += dt;
+        if measuring {
+            if let Some((_, is_train, _)) = &gpu_inflight {
+                // A train job's CPU-side phases leave the GPU idle.
+                gpu_busy += if *is_train { dt * train_busy_frac } else { dt };
+            }
         }
 
         now += dt;
@@ -333,5 +353,43 @@ mod tests {
         let p = simulate(&m, 64, 0.25, 20e-6);
         assert!(p.gpu_util >= 0.0 && p.gpu_util <= 1.0);
         assert!(p.mean_batch >= 1.0);
+    }
+
+    #[test]
+    fn des_prefetch_identity_without_learner_cost() {
+        // With no CPU-side learner phases the train cycle is t_train at
+        // either depth; the deterministic simulation must agree exactly.
+        let base = model().with_learner_overhead(0.0, 0.0);
+        let a = simulate(&base, 8, 0.25, 20e-6);
+        let b = simulate(&base.with_prefetch_depth(2), 8, 0.25, 20e-6);
+        assert_eq!(a.env_rate, b.env_rate);
+        assert_eq!(a.gpu_util, b.gpu_util);
+        assert_eq!(a.train_steps, b.train_steps);
+    }
+
+    #[test]
+    fn des_prefetch_depth_raises_rate_when_learner_bound() {
+        // Aggressive replay ratio + CPU-side assembly far heavier than
+        // the accelerator step: train jobs dominate the queue, so
+        // shortening the train cycle by overlapping the CPU phases must
+        // raise the simulated env rate. Time scales are relative to the
+        // trace's train time so the test holds for any trace magnitude.
+        let t = model().train_time();
+        let mut base = model().with_learner_overhead(0.0, 4.0 * t);
+        base.train_per_env = 1.0 / 8.0;
+        let piped = base.with_prefetch_depth(2);
+        let sim = 100.0 * t;
+        let dt = (t / 50.0).max(1e-6);
+        let serial_des = simulate(&base, 4, sim, dt);
+        let piped_des = simulate(&piped, 4, sim, dt);
+        assert!(
+            piped_des.env_rate > serial_des.env_rate,
+            "prefetch DES rate {} <= serial {}",
+            piped_des.env_rate,
+            serial_des.env_rate
+        );
+        assert!(piped_des.train_steps >= serial_des.train_steps);
+        // GPU-busy accounting discounts the CPU-side share of the cycle.
+        assert!(serial_des.gpu_util <= 1.0 + 1e-9);
     }
 }

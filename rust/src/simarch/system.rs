@@ -66,6 +66,18 @@ pub struct SystemModel {
     /// `W = E * t_env`, becomes `max(W, rtt + W/D)` — at depth 1 the
     /// seed's fully serialized critical path, identically.
     pub pipeline_depth: usize,
+    /// CPU time the learner spends sampling a train batch from
+    /// prioritized replay, seconds per train step.
+    pub learner_sample_s: f64,
+    /// CPU time the learner spends assembling the sampled sequences
+    /// into the batch-major `TrainBatch`, seconds per train step.
+    pub learner_assemble_s: f64,
+    /// Learner split-phase prefetch depth (DESIGN.md §7): at 1 the
+    /// train cycle serializes `t_train + t_sample + t_assemble`; at
+    /// >= 2 the CPU phases overlap the accelerator step and the cycle
+    /// becomes `max(t_train, t_sample + t_assemble)` — the learner-side
+    /// mirror of the actor pipeline's `max(W, rtt + W/D)`.
+    pub prefetch_depth: usize,
 }
 
 /// One steady-state operating point.
@@ -121,6 +133,19 @@ impl SystemModel {
         self.gpu.trace_time(&self.train_trace, Idealize::NONE)
     }
 
+    /// Learner train-cycle time: the GPU train step plus the CPU-side
+    /// sample/assemble phases — serialized at `prefetch_depth` 1,
+    /// overlapped (`max`) when the split-phase learner prefetches.
+    pub fn train_cycle(&self) -> f64 {
+        let t_cpu = self.learner_sample_s + self.learner_assemble_s;
+        let t_train = self.train_time();
+        if self.prefetch_depth > 1 {
+            t_train.max(t_cpu)
+        } else {
+            t_train + t_cpu
+        }
+    }
+
     /// Solve the steady state for `n` actor threads (damped fixed
     /// point). Each thread drives `envs_per_actor` environments in
     /// lockstep: a thread's cycle is E serial env steps plus one
@@ -133,6 +158,14 @@ impl SystemModel {
         let d = (self.pipeline_depth.max(1) as f64).min(e);
         let t_env = self.cpu.step_cost_us() * 1e-6; // ideal per-step CPU time
         let t_train = self.train_time();
+        // Learner-side cap: train steps complete one per train cycle
+        // (GPU step + CPU sample/assemble, overlapped when prefetching),
+        // which bounds the env rate through the replay ratio.
+        let r_learn = if self.train_per_env > 0.0 {
+            0.99 / (self.train_per_env * self.train_cycle())
+        } else {
+            f64::INFINITY
+        };
         let mut rate = n as f64 * e / (t_env + 1e-4); // optimistic init
         let mut batch = 1.0f64;
         let mut rtt = 1e-4;
@@ -182,7 +215,7 @@ impl SystemModel {
             let r_cpu = self.cpu.env_steps_per_sec(n.min(busy.ceil() as usize).max(1));
             let gpu_per_step = t_infer / batch + self.train_per_env * t_train;
             let r_gpu = 0.99 / gpu_per_step;
-            let target = r_conc.min(r_cpu.max(1.0)).min(r_gpu);
+            let target = r_conc.min(r_cpu.max(1.0)).min(r_gpu).min(r_learn);
             rate = 0.5 * rate + 0.5 * target; // damping
         }
 
@@ -237,6 +270,23 @@ impl SystemModel {
         m
     }
 
+    /// Clone with a different learner prefetch depth (split-phase
+    /// learner sweep).
+    pub fn with_prefetch_depth(&self, depth: usize) -> Self {
+        let mut m = self.clone();
+        m.prefetch_depth = depth.max(1);
+        m
+    }
+
+    /// Clone with different learner CPU-phase costs (sample, assemble;
+    /// seconds per train step).
+    pub fn with_learner_overhead(&self, sample_s: f64, assemble_s: f64) -> Self {
+        let mut m = self.clone();
+        m.learner_sample_s = sample_s.max(0.0);
+        m.learner_assemble_s = assemble_s.max(0.0);
+        m
+    }
+
     /// CPU/GPU ratio of this configuration (the paper's design metric).
     pub fn cpu_gpu_ratio(&self) -> f64 {
         self.cpu.cfg.hw_threads as f64 / self.gpu.cfg.num_sms as f64
@@ -267,6 +317,12 @@ pub fn default_system(infer_trace: Trace, train_trace: Trace) -> SystemModel {
         batch_timeout_s: cfg.batcher.timeout_us as f64 * 1e-6,
         envs_per_actor: cfg.actors.envs_per_actor,
         pipeline_depth: cfg.actors.pipeline_depth,
+        // Measured on the CPU testbed (EXPERIMENTS.md §Perf): sampling
+        // a batch through the sum trees is tens of microseconds; the
+        // batch-major assembly copy dominates the CPU side.
+        learner_sample_s: 20e-6,
+        learner_assemble_s: 500e-6,
+        prefetch_depth: cfg.learner.prefetch_depth,
     }
 }
 
@@ -442,5 +498,50 @@ mod tests {
         let a = m.with_pipeline_depth(4).steady_state(8);
         let b = m.with_pipeline_depth(64).steady_state(8);
         assert_eq!(a.env_rate, b.env_rate);
+    }
+
+    #[test]
+    fn train_cycle_serializes_then_overlaps_learner_cpu_phases() {
+        let m = model().with_learner_overhead(1e-3, 4e-3);
+        let t_train = m.train_time();
+        assert!((m.train_cycle() - (t_train + 5e-3)).abs() < 1e-12);
+        let piped = m.with_prefetch_depth(2);
+        assert!((piped.train_cycle() - t_train.max(5e-3)).abs() < 1e-12);
+        assert!(piped.train_cycle() < m.train_cycle());
+    }
+
+    #[test]
+    fn prefetch_depth_is_identity_without_learner_cpu_cost() {
+        let m = model().with_learner_overhead(0.0, 0.0);
+        let a = m.steady_state(16);
+        let b = m.with_prefetch_depth(2).steady_state(16);
+        assert_eq!(a.env_rate, b.env_rate);
+        assert_eq!(a.batch_size, b.batch_size);
+    }
+
+    #[test]
+    fn prefetch_depth_raises_rate_when_learner_bound() {
+        // CPU-side assembly as heavy as the accelerator step and a
+        // replay ratio aggressive enough that the learner cycle caps
+        // the whole system: overlapping the CPU phases under the train
+        // step must buy rate back — but never more than the
+        // serial/overlapped cycle ratio (here exactly 2x).
+        let t_train = model().train_time();
+        let mut m = model().with_learner_overhead(0.0, t_train);
+        m.train_per_env = 1.0 / (800.0 * t_train);
+        let serial = m.steady_state(40);
+        let piped = m.with_prefetch_depth(2).steady_state(40);
+        assert!(
+            piped.env_rate > 1.05 * serial.env_rate,
+            "prefetch {} vs serial {}",
+            piped.env_rate,
+            serial.env_rate
+        );
+        let cycle_gain = m.train_cycle() / m.with_prefetch_depth(2).train_cycle();
+        assert!(
+            piped.env_rate <= serial.env_rate * cycle_gain * 1.05,
+            "gain {} exceeds cycle ratio {cycle_gain}",
+            piped.env_rate / serial.env_rate
+        );
     }
 }

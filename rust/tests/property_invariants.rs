@@ -28,11 +28,15 @@ fn prop_sumtree_total_equals_leaf_sum_under_any_op_sequence() {
 #[test]
 fn prop_replay_sampled_slots_always_hold_sequences() {
     forall(60, |g| {
-        let cap = g.usize(4..64);
+        // Random shard counts too: capacity is drawn as a multiple of
+        // the shard count so striping is always well-formed.
+        let shards = g.usize(1..5);
+        let cap = shards * g.usize(4..32);
         let r = SequenceReplay::new(ReplayConfig {
             capacity: cap,
             alpha: g.f64(0.0..1.0),
             min_priority: 1e-3,
+            shards,
         });
         let n_add = g.usize(1..200);
         for i in 0..n_add {
@@ -57,7 +61,7 @@ fn prop_replay_sampled_slots_always_hold_sequences() {
             // Update with arbitrary priorities never panics / corrupts.
             let prios: Vec<f32> =
                 (0..batch).map(|_| g.f64(0.0..100.0) as f32).collect();
-            r.update_priorities(&s.slots, &prios);
+            r.update_priorities(&s.slots, &s.generations, &prios);
             let mut rng2 = Pcg32::seeded(1);
             prop_assert(r.sample(batch, &mut rng2).is_some(), "resample")?;
         }
