@@ -15,7 +15,11 @@
 //!     cargo run --release --example vecenv_sweep
 //!
 //! Flags: --actors 1,2,4  --envs 1,2,4,8  --depths 1,2  --steps N
-//!        --env NAME  --infer-latency-us L.
+//!        --env NAME  --infer-latency-us L  --json PATH.
+//!
+//! `--json PATH` appends the measured steps/s grid (plus a unix
+//! timestamp) to a JSON array at PATH — the repo's perf trajectory
+//! (`BENCH_vecenv.json`) accumulates one entry per recorded run.
 
 use rlarch::cli::Cli;
 use rlarch::config::{InferenceMode, SystemConfig};
@@ -27,6 +31,7 @@ use rlarch::runtime::{Backend, MockModel, ModelDims};
 use rlarch::simarch::{
     default_system, synthetic_paper_train_trace, synthetic_paper_trace,
 };
+use rlarch::util::json::{obj, Value};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -78,6 +83,11 @@ fn main() -> anyhow::Result<()> {
         "infer-latency-us",
         "250",
         "injected mock inference latency (GPU time to overlap)",
+    )
+    .flag(
+        "json",
+        "",
+        "append the steps/s grid to this JSON array file (perf trajectory)",
     );
     let parsed = cli.parse_env().map_err(|e| anyhow::anyhow!("{e}"))?;
     let actor_counts = parsed.get_usize_list("actors")?;
@@ -87,6 +97,9 @@ fn main() -> anyhow::Result<()> {
     let steps = parsed.get_usize("steps")?;
     let latency_us = parsed.get_u64("infer-latency-us")?;
     let env_name = parsed.get("env").to_string();
+
+    let json_path = parsed.get("json").to_string();
+    let mut json_rows: Vec<Value> = Vec::new();
 
     println!("# vecenv sweep — real dataflow on the mock backend\n");
     let mut t = Table::new(&[
@@ -147,6 +160,15 @@ fn main() -> anyhow::Result<()> {
                     report.env_steps_per_sec,
                     report.mean_batch_occupancy
                 ));
+                json_rows.push(obj(&[
+                    ("actors", actors.into()),
+                    ("envs_per_actor", envs.into()),
+                    ("pipeline_depth", depth.into()),
+                    ("total_envs", report.total_envs.into()),
+                    ("env_steps_per_sec", report.env_steps_per_sec.into()),
+                    ("mean_batch", report.mean_batch_occupancy.into()),
+                    ("learner_steps_per_sec", learner_rate.into()),
+                ]));
             }
         }
     }
@@ -207,5 +229,41 @@ fn main() -> anyhow::Result<()> {
     println!("{}", mt.to_markdown());
     let p = write_csv("vecenv_sweep", &csv);
     println!("csv: {}", p.display());
+
+    // Perf trajectory: append this run's grid to the JSON array so
+    // successive recorded runs accumulate (see BENCH_vecenv.json).
+    if !json_path.is_empty() {
+        // Refuse to clobber a trajectory we cannot parse: a corrupted
+        // file (truncated write, merge conflict) must surface as an
+        // error, not be silently replaced by a one-entry history.
+        let mut runs: Vec<Value> = match std::fs::read_to_string(&json_path) {
+            Ok(text) => match Value::parse(&text)
+                .ok()
+                .and_then(|v| v.as_arr().map(|a| a.to_vec()))
+            {
+                Some(existing) => existing,
+                None => anyhow::bail!(
+                    "--json {json_path}: existing file is not a JSON array; \
+                     refusing to overwrite the perf trajectory"
+                ),
+            },
+            Err(_) => Vec::new(),
+        };
+        let ts = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        runs.push(obj(&[
+            ("bench", "vecenv_sweep".into()),
+            ("timestamp_unix", ts.into()),
+            ("env", env_name.as_str().into()),
+            ("steps", steps.into()),
+            ("infer_latency_us", latency_us.into()),
+            ("rows", Value::from(json_rows)),
+        ]));
+        let entries = runs.len();
+        std::fs::write(&json_path, Value::from(runs).to_string())?;
+        println!("json: {json_path} ({entries} run(s) recorded)");
+    }
     Ok(())
 }

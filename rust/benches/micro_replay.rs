@@ -1,8 +1,9 @@
 //! Micro-bench: prioritized sequence replay hot paths (add / sample /
-//! update-priorities), the shards × writer-threads contention grid, and
-//! the prefetch on/off learner-cycle comparison — the learner-side
-//! substrate (Reverb-equivalent). The tables here regenerate
-//! EXPERIMENTS.md §Perf.
+//! update-priorities), the batched-ingest lock-amortization grid
+//! (insert_batch × shards, counter-based), the shards × writer-threads
+//! contention grid, and the prefetch on/off learner-cycle comparison —
+//! the learner-side substrate (Reverb-equivalent). The tables here
+//! regenerate EXPERIMENTS.md §Perf.
 //!
 //! `--quick` shrinks every loop (the CI smoke run).
 
@@ -10,7 +11,7 @@ use rlarch::config::LearnerConfig;
 use rlarch::coordinator::learner::{run_learner, LearnerArgs};
 use rlarch::exec::ShutdownToken;
 use rlarch::metrics::Registry;
-use rlarch::replay::{ReplayConfig, SequenceReplay};
+use rlarch::replay::{IngestQueue, ReplayConfig, SequenceReplay};
 use rlarch::report::figure::Table;
 use rlarch::report::{bench, BenchResult};
 use rlarch::rl::Sequence;
@@ -197,6 +198,54 @@ fn main() {
         .join("\n");
     let p = rlarch::report::write_csv("micro_replay", &csv);
     println!("\ncsv: {}", p.display());
+
+    // Batched-ingest grid: shard-lock acquisitions per sequence across
+    // insert_batch settings (counter-based: SequenceReplay counts every
+    // lock acquisition). One flush of k sequences over S shards costs
+    // min(k, S) acquisitions instead of k — the ISSUE 4 acceptance
+    // shape is the drop at insert_batch >= 4.
+    println!("\n# batched ingest — shard-lock acquisitions per sequence\n");
+    let ingest_n = if quick { 512 } else { 8_192 };
+    let mut it = Table::new(&[
+        "shards",
+        "insert_batch",
+        "locks/seq",
+        "adds/s",
+    ]);
+    let mut it_csv = String::from("shards,insert_batch,locks_per_seq,adds_per_sec\n");
+    for &shards in &[1usize, 4] {
+        for &insert_batch in &[1usize, 4, 16] {
+            let r = Arc::new(SequenceReplay::new(ReplayConfig {
+                capacity: 4_096,
+                shards,
+                ..Default::default()
+            }));
+            let mut q = IngestQueue::new(r.clone(), insert_batch);
+            let template = seq(400, 20, 128, 1.0);
+            let locks0 = r.lock_acquisitions();
+            let t0 = Instant::now();
+            for _ in 0..ingest_n {
+                q.push(template.clone());
+            }
+            q.flush();
+            let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+            let locks_per_seq =
+                (r.lock_acquisitions() - locks0) as f64 / ingest_n as f64;
+            it.row(&[
+                shards.to_string(),
+                insert_batch.to_string(),
+                format!("{locks_per_seq:.3}"),
+                format!("{:.0}", ingest_n as f64 / elapsed),
+            ]);
+            it_csv.push_str(&format!(
+                "{shards},{insert_batch},{locks_per_seq},{}\n",
+                ingest_n as f64 / elapsed
+            ));
+        }
+    }
+    println!("{}", it.to_markdown());
+    let p = rlarch::report::write_csv("micro_replay_ingest", &it_csv);
+    println!("csv: {}", p.display());
 
     // Shards × writer-threads contention grid: actor inserts stripe
     // across shard mutexes while the learner samples + updates.

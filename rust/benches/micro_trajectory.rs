@@ -1,0 +1,280 @@
+//! Micro-bench: the actor→replay transition path.
+//!
+//! Measures the `SequenceBuilder` hot loop three ways — the seed's
+//! owned-`Transition` path (three `to_vec` copies per step, fresh slab
+//! buffers per emitted sequence), the arena path (`push_slices` +
+//! `SequencePool` recycling), and the full pooled ingest path into a
+//! live replay — with a counting global allocator so the result is
+//! *allocations per transition*, not just wall time. The acceptance
+//! bar (ISSUE 4) is zero steady-state allocations per transition on the
+//! pooled builder path; the bench hard-asserts it, so the CI `--quick`
+//! smoke run enforces the property rather than just reporting it.
+//!
+//! The tables here regenerate EXPERIMENTS.md §Perf (transition path).
+//!
+//! `--quick` shrinks every loop (the CI smoke run).
+
+use rlarch::replay::{IngestQueue, ReplayConfig, SequenceReplay};
+use rlarch::rl::{SequenceBuilder, SequencePool, Transition};
+use rlarch::report::figure::Table;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Counts every allocator entry (alloc + realloc); frees are not
+/// interesting here. The counter is what makes "zero-allocation"
+/// checkable instead of inferred from timings.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_calls() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+/// AOT-default trajectory shape: obs 400 (20x20 frame-stack 4 omitted
+/// for brevity — same byte volume), LSTM 128, sequences 20 with
+/// overlap 10, an episode end every ~97 steps.
+const OBS_LEN: usize = 400;
+const HIDDEN: usize = 128;
+const SEQ_LEN: usize = 20;
+const OVERLAP: usize = 10;
+
+fn discount_at(i: usize) -> f32 {
+    if i % 97 == 96 {
+        0.0
+    } else {
+        0.99
+    }
+}
+
+struct PathResult {
+    name: &'static str,
+    steps: usize,
+    allocs: u64,
+    elapsed_s: f64,
+    sequences: u64,
+}
+
+impl PathResult {
+    fn allocs_per_step(&self) -> f64 {
+        self.allocs as f64 / self.steps as f64
+    }
+
+    fn ns_per_step(&self) -> f64 {
+        self.elapsed_s * 1e9 / self.steps as f64
+    }
+}
+
+/// The seed path: every transition owns three freshly allocated row
+/// copies, every emitted sequence allocates fresh slab buffers.
+fn seed_path(steps: usize, obs: &[f32], h: &[f32], c: &[f32]) -> PathResult {
+    let mut b = SequenceBuilder::new(SEQ_LEN, OVERLAP, OBS_LEN, HIDDEN, 0);
+    // Warmup: let internal capacities settle (they don't matter here,
+    // but keep the two paths symmetric).
+    for i in 0..SEQ_LEN * 4 {
+        let _ = b.push(Transition {
+            obs: obs.to_vec(),
+            action: i as i32,
+            reward: 1.0,
+            discount: discount_at(i),
+            h: h.to_vec(),
+            c: c.to_vec(),
+        });
+    }
+    let mut sequences = 0u64;
+    let a0 = alloc_calls();
+    let t0 = Instant::now();
+    for i in 0..steps {
+        if let Some(s) = b.push(Transition {
+            obs: obs.to_vec(),
+            action: i as i32,
+            reward: 1.0,
+            discount: discount_at(i),
+            h: h.to_vec(),
+            c: c.to_vec(),
+        }) {
+            sequences += 1;
+            std::hint::black_box(&s);
+        }
+    }
+    PathResult {
+        name: "seed push(Transition)",
+        steps,
+        allocs: alloc_calls() - a0,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        sequences,
+    }
+}
+
+/// The arena path: borrowed rows in, pooled slabs out, every emitted
+/// sequence recycled straight back (steady state: replay evictions and
+/// learner releases play that role in the real system).
+fn pooled_path(steps: usize, obs: &[f32], h: &[f32], c: &[f32]) -> PathResult {
+    let pool = Arc::new(SequencePool::new());
+    let mut b = SequenceBuilder::new(SEQ_LEN, OVERLAP, OBS_LEN, HIDDEN, 0)
+        .with_pool(pool.clone());
+    // Warmup primes the pool (first slabs are misses) and the free
+    // list's capacity.
+    for i in 0..SEQ_LEN * 4 {
+        if let Some(s) =
+            b.push_slices(obs, i as i32, 1.0, discount_at(i), h, c)
+        {
+            pool.put(s);
+        }
+    }
+    let mut sequences = 0u64;
+    let a0 = alloc_calls();
+    let t0 = Instant::now();
+    for i in 0..steps {
+        if let Some(s) =
+            b.push_slices(obs, i as i32, 1.0, discount_at(i), h, c)
+        {
+            sequences += 1;
+            pool.put(std::hint::black_box(s));
+        }
+    }
+    let result = PathResult {
+        name: "arena push_slices + pool",
+        steps,
+        allocs: alloc_calls() - a0,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        sequences,
+    };
+    assert_eq!(
+        result.allocs, 0,
+        "the pooled builder path must be allocation-free in steady state"
+    );
+    result
+}
+
+/// The full pooled transition path into a live sharded replay: builder
+/// → ingest queue → add_batch, evictions recycling into the pool. The
+/// only remaining per-sequence allocation is the `Arc` header replay
+/// wraps around each stored sequence.
+fn ingest_path(
+    steps: usize,
+    insert_batch: usize,
+    obs: &[f32],
+    h: &[f32],
+    c: &[f32],
+) -> (PathResult, u64) {
+    let pool = Arc::new(SequencePool::new());
+    let replay = Arc::new(
+        SequenceReplay::new(ReplayConfig {
+            capacity: 256,
+            shards: 4,
+            ..Default::default()
+        })
+        .with_pool(pool.clone()),
+    );
+    let mut b = SequenceBuilder::new(SEQ_LEN, OVERLAP, OBS_LEN, HIDDEN, 0)
+        .with_pool(pool.clone());
+    let mut q = IngestQueue::new(replay.clone(), insert_batch);
+    // Warmup fills the ring so steady state is pure eviction/recycle.
+    for i in 0..SEQ_LEN * 300 {
+        if let Some(s) =
+            b.push_slices(obs, i as i32, 1.0, discount_at(i), h, c)
+        {
+            q.push(s);
+        }
+    }
+    q.flush();
+    let mut sequences = 0u64;
+    let locks0 = replay.lock_acquisitions();
+    let a0 = alloc_calls();
+    let t0 = Instant::now();
+    for i in 0..steps {
+        if let Some(s) =
+            b.push_slices(obs, i as i32, 1.0, discount_at(i), h, c)
+        {
+            sequences += 1;
+            q.push(s);
+        }
+    }
+    q.flush();
+    let result = PathResult {
+        name: "arena + ingest into replay",
+        steps,
+        allocs: alloc_calls() - a0,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        sequences,
+    };
+    (result, replay.lock_acquisitions() - locks0)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let steps = if quick { 40_000 } else { 400_000 };
+    println!(
+        "# micro_trajectory — transition path (obs {OBS_LEN}, H={HIDDEN}, \
+         T={SEQ_LEN}/{OVERLAP})\n"
+    );
+
+    let obs = vec![0.5f32; OBS_LEN];
+    let h = vec![0.1f32; HIDDEN];
+    let c = vec![-0.1f32; HIDDEN];
+
+    let seed = seed_path(steps, &obs, &h, &c);
+    let pooled = pooled_path(steps, &obs, &h, &c);
+    let (ingest, ingest_locks) = ingest_path(steps, 8, &obs, &h, &c);
+
+    let mut t = Table::new(&[
+        "path",
+        "steps",
+        "sequences",
+        "allocs/transition",
+        "ns/transition",
+    ]);
+    let mut csv = String::from("path,steps,sequences,allocs_per_step,ns_per_step\n");
+    for r in [&seed, &pooled, &ingest] {
+        t.row(&[
+            r.name.to_string(),
+            r.steps.to_string(),
+            r.sequences.to_string(),
+            format!("{:.4}", r.allocs_per_step()),
+            format!("{:.0}", r.ns_per_step()),
+        ]);
+        csv.push_str(&format!(
+            "{},{},{},{},{}\n",
+            r.name,
+            r.steps,
+            r.sequences,
+            r.allocs_per_step(),
+            r.ns_per_step()
+        ));
+    }
+    println!("{}", t.to_markdown());
+    println!(
+        "pooled path steady-state allocations per transition: {} (hard \
+         requirement: 0)",
+        pooled.allocs_per_step()
+    );
+    println!(
+        "ingest path (insert_batch 8, 4 shards): {:.4} shard-lock \
+         acquisitions per sequence\n",
+        ingest_locks as f64 / ingest.sequences.max(1) as f64
+    );
+    let p = rlarch::report::write_csv("micro_trajectory", &csv);
+    println!("csv: {}", p.display());
+}

@@ -1,6 +1,6 @@
 //! Typed configuration for the whole stack, parsed from TOML (or built
 //! programmatically by examples/benches). Every struct has defaults that
-//! match DESIGN.md §10 (DGX-1 / V100 machine model + the paper's R2D2
+//! match DESIGN.md §11 (DGX-1 / V100 machine model + the paper's R2D2
 //! hyper-parameters scaled to the CPU testbed).
 
 use crate::util::json::Value;
@@ -33,6 +33,10 @@ fn get_str(v: &Value, path: &str, default: &str) -> String {
         .and_then(|x| x.as_str())
         .unwrap_or(default)
         .to_string()
+}
+
+fn get_bool(v: &Value, path: &str, default: bool) -> bool {
+    v.path(path).and_then(|x| x.as_bool()).unwrap_or(default)
 }
 
 // ---------------------------------------------------------------------------
@@ -222,6 +226,16 @@ pub struct ReplayBufferConfig {
     /// Independent ring+sum-tree shards, each behind its own mutex;
     /// must divide `capacity`. 1 = the classic single-mutex buffer.
     pub shards: usize,
+    /// Sequences each actor's ingest queue buffers per replay flush
+    /// (grouped by shard: one flush takes each shard lock at most
+    /// once). 1 = the seed's flush-per-sequence path, bit-for-bit;
+    /// must be <= capacity.
+    pub insert_batch: usize,
+    /// Recycle emitted sequence slabs through a shared `SequencePool`
+    /// (replay evictions and learner-released batches feed it). false =
+    /// the seed's allocate-per-sequence behavior; the emitted values
+    /// are identical either way.
+    pub pool: bool,
 }
 
 impl Default for ReplayBufferConfig {
@@ -231,6 +245,8 @@ impl Default for ReplayBufferConfig {
             alpha: 0.9,
             min_priority: 1e-3,
             shards: 1,
+            insert_batch: 1,
+            pool: true,
         }
     }
 }
@@ -243,6 +259,8 @@ impl ReplayBufferConfig {
             alpha: get_f64(v, "replay.alpha", d.alpha),
             min_priority: get_f64(v, "replay.min_priority", d.min_priority),
             shards: get_usize(v, "replay.shards", d.shards),
+            insert_batch: get_usize(v, "replay.insert_batch", d.insert_batch),
+            pool: get_bool(v, "replay.pool", d.pool),
         }
     }
 
@@ -268,6 +286,16 @@ impl ReplayBufferConfig {
         {
             return Err(ConfigError::Invalid(
                 "replay.shards must divide replay.capacity".into(),
+            ));
+        }
+        if self.insert_batch == 0 {
+            return Err(ConfigError::Invalid(
+                "replay.insert_batch must be > 0 (1 = unbatched)".into(),
+            ));
+        }
+        if self.insert_batch > self.capacity {
+            return Err(ConfigError::Invalid(
+                "replay.insert_batch must be <= replay.capacity".into(),
             ));
         }
         Ok(())
@@ -364,7 +392,7 @@ impl LearnerConfig {
 }
 
 // ---------------------------------------------------------------------------
-// simarch machine model (DESIGN.md §10)
+// simarch machine model (DESIGN.md §11)
 // ---------------------------------------------------------------------------
 
 /// V100-class GPU timing model parameters.
@@ -607,7 +635,17 @@ const SECTION_KEYS: &[(&str, &[&str])] = &[
             "n_step",
         ],
     ),
-    ("replay", &["capacity", "alpha", "min_priority", "shards"]),
+    (
+        "replay",
+        &[
+            "capacity",
+            "alpha",
+            "min_priority",
+            "shards",
+            "insert_batch",
+            "pool",
+        ],
+    ),
     (
         "gpu",
         &[
@@ -906,6 +944,38 @@ hw_threads = 40
             .unwrap_err()
             .to_string();
         assert!(err.contains("prefetch_depth"), "got: {err}");
+    }
+
+    #[test]
+    fn parses_insert_batch_and_pool() {
+        let cfg = SystemConfig::from_toml(
+            "[replay]\ninsert_batch = 8\npool = false\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.replay.insert_batch, 8);
+        assert!(!cfg.replay.pool);
+        // Seed-equivalent ingest (flush-per-sequence) is the default;
+        // pooling is on by default (it never changes emitted values).
+        let d = SystemConfig::default();
+        assert_eq!(d.replay.insert_batch, 1);
+        assert!(d.replay.pool);
+    }
+
+    #[test]
+    fn insert_batch_validation_bounds() {
+        let err = SystemConfig::from_toml("[replay]\ninsert_batch = 0\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("replay.insert_batch must be > 0"), "got: {err}");
+        let err = SystemConfig::from_toml(
+            "[replay]\ncapacity = 64\ninsert_batch = 128\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(
+            err.contains("replay.insert_batch must be <= replay.capacity"),
+            "got: {err}"
+        );
     }
 
     #[test]

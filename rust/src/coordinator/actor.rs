@@ -17,15 +17,26 @@
 //! per actor (double buffer): the step writes the post-step frame into
 //! the spare buffer while the pre-step frame stays addressable for
 //! transition recording, so the loop itself allocates no observation
-//! slabs per step (the seed's full-slab `obs.clone()` is gone; the
-//! per-transition row copies into sequence builders remain, as before).
+//! slabs per step (the seed's full-slab `obs.clone()` is gone).
+//!
+//! The transition path is allocation-free in steady state (DESIGN.md
+//! §8): transitions enter the per-slot builders as borrowed rows
+//! ([`SequenceBuilder::push_slices`] — the seed's three per-step
+//! `to_vec()` copies are gone), emitted sequence slabs are drawn from
+//! the replay's recycling [`crate::rl::SequencePool`] when one is
+//! attached (hit/miss counters → the `actor.pool_hit_rate` gauge), and
+//! completed sequences buffer in a per-actor
+//! [`IngestQueue`](crate::replay::IngestQueue) that commits
+//! `replay.insert_batch` of them per flush, taking each replay shard
+//! lock at most once. `insert_batch = 1` (the default) flushes each
+//! sequence immediately through the exact seed `add` path.
 
 use crate::config::SystemConfig;
 use crate::exec::ShutdownToken;
 use crate::metrics::Registry;
 use crate::policy::PolicyClient;
-use crate::replay::SequenceReplay;
-use crate::rl::{actor_epsilon, epsilon_greedy, SequenceBuilder, Transition};
+use crate::replay::{IngestQueue, SequenceReplay};
+use crate::rl::{actor_epsilon, epsilon_greedy, SequenceBuilder};
 use crate::runtime::ModelDims;
 use crate::util::prng::Pcg32;
 use crate::vecenv::VecEnv;
@@ -123,17 +134,26 @@ pub fn run_actor(args: ActorArgs) -> anyhow::Result<ActorStats> {
     let mut rngs: Vec<Pcg32> = (0..e)
         .map(|s| Pcg32::seeded(cfg.seed ^ (0xAC70 + (id * e + s) as u64)))
         .collect();
+    // Builders draw emitted slabs from the replay's recycling pool when
+    // one is attached; completed sequences buffer in the ingest queue
+    // and commit `insert_batch` per flush (1 = the seed path).
+    let pool = replay.pool().cloned();
     let mut builders: Vec<SequenceBuilder> = (0..e)
         .map(|s| {
-            SequenceBuilder::new(
+            let b = SequenceBuilder::new(
                 cfg.learner.seq_len(),
                 cfg.learner.seq_overlap,
                 obs_len,
                 hidden,
                 id * e + s,
-            )
+            );
+            match &pool {
+                Some(p) => b.with_pool(p.clone()),
+                None => b,
+            }
         })
         .collect();
+    let mut ingest = IngestQueue::new(replay.clone(), cfg.replay.insert_batch);
 
     let steps = metrics.counter("actor.env_steps");
     let episodes_c = metrics.counter("actor.episodes");
@@ -254,18 +274,20 @@ pub fn run_actor(args: ActorArgs) -> anyhow::Result<ActorStats> {
                     return_count += 1;
                 }
 
-                // Record the transition with the pre-step state.
+                // Record the transition with the pre-step state: rows
+                // borrowed straight from the slot slabs — nothing on
+                // this path heap-allocates per step.
                 let row = s * obs_len..(s + 1) * obs_len;
                 let hr = s * hidden..(s + 1) * hidden;
-                if let Some(seq) = builders[s].push(Transition {
-                    obs: prev_buf[row].to_vec(),
-                    action: actions[s] as i32,
-                    reward: step.reward,
+                if let Some(seq) = builders[s].push_slices(
+                    &prev_buf[row],
+                    actions[s] as i32,
+                    step.reward,
                     discount,
-                    h: h[hr.clone()].to_vec(),
-                    c: c[hr.clone()].to_vec(),
-                }) {
-                    replay.add(seq);
+                    &h[hr.clone()],
+                    &c[hr.clone()],
+                ) {
+                    ingest.push(seq);
                     seqs.inc();
                 }
 
@@ -307,9 +329,13 @@ pub fn run_actor(args: ActorArgs) -> anyhow::Result<ActorStats> {
 
     for b in &mut builders {
         if let Some(seq) = b.flush() {
-            replay.add(seq);
+            ingest.push(seq);
             seqs.inc();
         }
+    }
+    ingest.flush();
+    if let Some(p) = &pool {
+        metrics.gauge("actor.pool_hit_rate").set(p.hit_rate());
     }
 
     if let Some(err) = failure {

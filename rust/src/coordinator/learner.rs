@@ -18,6 +18,12 @@
 //! Pipelining trades priority freshness for overlap: batch k+1 is
 //! sampled under priorities as of batch k−1 (one train step staler than
 //! the serialized loop), the standard Ape-X/R2D2 relaxation.
+//!
+//! Both paths release their sampled sequence handles as soon as the
+//! batch is assembled: when the replay carries a recycling
+//! [`crate::rl::SequencePool`], a buffer whose ring slot was already
+//! overwritten recycles to the actors' sequence builders instead of
+//! hitting the allocator (DESIGN.md §8).
 
 use crate::config::LearnerConfig;
 use crate::exec::ShutdownToken;
@@ -194,7 +200,7 @@ impl LearnerCtx {
             let sampled = self
                 .sample_time
                 .time(|| self.replay.sample(self.cfg.train_batch, &mut rng));
-            let Some(sampled) = sampled else {
+            let Some(mut sampled) = sampled else {
                 self.waits_c.inc();
                 if self.shutdown.sleep_interruptible(Duration::from_millis(1)) {
                     break;
@@ -203,6 +209,13 @@ impl LearnerCtx {
             };
             self.assemble_time
                 .time(|| assemble_into(&mut pool, &sampled.sequences, &self.dims));
+            // The batch is copied out: release the sampled handles so
+            // replay-evicted buffers recycle into the sequence pool.
+            if let Some(p) = self.replay.pool() {
+                for s in sampled.sequences.drain(..) {
+                    p.release(s);
+                }
+            }
             let reply = self.train_time.time(|| self.backend.train_step(&mut pool))?;
             self.replay.update_priorities(
                 &sampled.slots,
@@ -262,7 +275,7 @@ impl LearnerCtx {
                         }
                         let sampled = sample_time
                             .time(|| replay.sample(train_batch, &mut rng));
-                        let Some(sampled) = sampled else {
+                        let Some(mut sampled) = sampled else {
                             waits_c.inc();
                             if shutdown
                                 .sleep_interruptible(Duration::from_millis(1))
@@ -276,6 +289,13 @@ impl LearnerCtx {
                         assemble_time.time(|| {
                             assemble_into(&mut batch, &sampled.sequences, &dims)
                         });
+                        // Copied out: release the handles so evicted
+                        // buffers recycle into the sequence pool.
+                        if let Some(p) = replay.pool() {
+                            for s in sampled.sequences.drain(..) {
+                                p.release(s);
+                            }
+                        }
                         let handoff = Prefetched {
                             batch,
                             slots: sampled.slots,

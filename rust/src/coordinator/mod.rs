@@ -2,9 +2,11 @@
 //!
 //! Wires the SEED-RL dataflow: N actor threads step environments (CPU
 //! side), a central inference batcher coalesces their observation slabs
-//! into batched accelerator calls, completed sequences land in sharded
-//! prioritized replay, and the learner thread trains the AOT'd R2D2
-//! graph and refreshes priorities. Actors reach inference through the
+//! into batched accelerator calls, completed sequences buffer in
+//! per-actor ingest queues and commit to sharded prioritized replay in
+//! `replay.insert_batch`-sized flushes (slabs recycling through the
+//! shared `SequencePool`; DESIGN.md §8), and the learner thread trains
+//! the AOT'd R2D2 graph and refreshes priorities. Actors reach inference through the
 //! split-phase `policy` layer (submit/wait), which lets them pipeline
 //! env stepping against in-flight inference; the learner mirrors that
 //! design with a prefetch stage (`learner.prefetch_depth`) that samples
@@ -33,6 +35,7 @@ use crate::exec::ShutdownToken;
 use crate::metrics::Registry;
 use crate::policy::{CentralClient, LocalClient, PolicyClient};
 use crate::replay::{ReplayConfig, SequenceReplay};
+use crate::rl::SequencePool;
 use crate::runtime::Backend;
 use std::sync::Arc;
 use std::time::Instant;
@@ -97,7 +100,17 @@ pub fn run(cfg: &SystemConfig, backend: Backend, metrics: Registry) -> anyhow::R
         dims.train_batch
     );
 
-    let replay = Arc::new(SequenceReplay::new(ReplayConfig::from(&cfg.replay)));
+    // The sequence recycling pool (DESIGN.md §8): builders draw emitted
+    // slabs from it, replay evictions and learner-released batches feed
+    // buffers back. `replay.pool = false` restores the seed's
+    // allocate-per-sequence behavior (the emitted values are identical
+    // either way).
+    let pool = cfg.replay.pool.then(|| Arc::new(SequencePool::new()));
+    let mut replay = SequenceReplay::new(ReplayConfig::from(&cfg.replay));
+    if let Some(p) = &pool {
+        replay = replay.with_pool(p.clone());
+    }
+    let replay = Arc::new(replay);
     let shutdown = ShutdownToken::new();
     let t0 = Instant::now();
 
@@ -187,10 +200,19 @@ pub fn run(cfg: &SystemConfig, backend: Backend, metrics: Registry) -> anyhow::R
     let batches = metrics.counter("batcher.batches").get();
     let items = metrics.counter("batcher.items").get();
     // Contended shard-lock acquisitions over the whole run (actors
-    // striping inserts vs the learner's sample/write-back passes).
+    // striping inserts vs the learner's sample/write-back passes), and
+    // total acquisitions (the batched-ingest amortization signal).
     metrics
         .counter("replay.shard_contention")
         .add(replay.shard_contention());
+    metrics
+        .counter("replay.lock_acquisitions")
+        .add(replay.lock_acquisitions());
+    if let Some(p) = &pool {
+        // Final pool effectiveness over the whole run (actors also set
+        // this at their own exit; last write wins with the same value).
+        metrics.gauge("actor.pool_hit_rate").set(p.hit_rate());
+    }
 
     Ok(RunReport {
         learner: learner_stats,

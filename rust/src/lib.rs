@@ -29,6 +29,12 @@
 //!   learner mirrors the actor pipeline: `learner.prefetch_depth`
 //!   overlaps batch sample/assembly with the in-flight train step
 //!   (1 = the seed's serialized loop, bit-for-bit; see DESIGN.md §7).
+//!   The transition path is arena-backed and allocation-free in steady
+//!   state: `rl::SequenceBuilder` writes borrowed rows straight into
+//!   pooled time-major slabs (`rl::SequencePool`), and per-actor
+//!   `replay::IngestQueue`s commit `replay.insert_batch` sequences per
+//!   shard-grouped flush, with evicted and learner-released buffers
+//!   recycling back to the pool (DESIGN.md §8).
 //! * [`simarch`] — the architectural simulator (GPU/CPU/power models);
 //!   its system model carries the same `envs_per_actor` and
 //!   `pipeline_depth` axes.

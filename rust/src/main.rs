@@ -73,6 +73,11 @@ fn load_config(parsed: &rlarch::cli::Parsed) -> anyhow::Result<SystemConfig> {
             cfg.learner.prefetch_depth = d;
         }
     }
+    if let Ok(b) = parsed.get_usize("insert-batch") {
+        if b > 0 {
+            cfg.replay.insert_batch = b;
+        }
+    }
     if let Ok(k) = parsed.get_usize("steps") {
         if k > 0 {
             cfg.learner.max_steps = k;
@@ -112,6 +117,11 @@ fn cmd_train(args: &[String]) -> i32 {
             "0",
             "override learner prefetch depth (1 = serialized)",
         )
+        .flag(
+            "insert-batch",
+            "0",
+            "override replay ingest batch (sequences per flush; 1 = unbatched)",
+        )
         .flag("steps", "0", "override learner steps")
         .flag("env", "", "override env (grid_pong|breakout|catch|nav_maze)")
         .flag("mode", "central", "central (SEED) or local (IMPALA-style)")
@@ -131,7 +141,7 @@ fn cmd_train(args: &[String]) -> i32 {
         let metrics = Registry::new();
         println!(
             "rlarch train: env={} actors={} envs/actor={} depth={} steps={} \
-             shards={} prefetch={} mode={:?}",
+             shards={} prefetch={} ingest={} pool={} mode={:?}",
             cfg.env.name,
             cfg.actors.num_actors,
             cfg.actors.envs_per_actor,
@@ -139,6 +149,8 @@ fn cmd_train(args: &[String]) -> i32 {
             cfg.learner.max_steps,
             cfg.replay.shards,
             cfg.learner.prefetch_depth,
+            cfg.replay.insert_batch,
+            cfg.replay.pool,
             cfg.mode
         );
         let report = coordinator::run(&cfg, backend, metrics.clone())?;

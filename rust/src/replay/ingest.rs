@@ -1,0 +1,180 @@
+//! Per-actor ingest queue: the producer-side half of batched replay
+//! inserts.
+//!
+//! Each actor thread owns one `IngestQueue`. Completed sequences buffer
+//! locally (no lock touched) until `insert_batch` of them are pending,
+//! then one [`SequenceReplay::add_batch`] flush commits them — grouped
+//! by shard, each shard lock taken at most once — so the per-sequence
+//! synchronization cost falls roughly as `1 / insert_batch` (measured
+//! in `micro_replay`; the simarch actor cycle carries the same
+//! amortization). `insert_batch = 1` flushes every push immediately
+//! through the identical generation/slot path as [`SequenceReplay::add`]
+//! — the seed behavior, bit-for-bit (asserted in
+//! `tests/replay_equivalence.rs`).
+//!
+//! Buffered sequences are invisible to the learner until flushed, so
+//! the queue trades up to `insert_batch - 1` sequences of replay
+//! freshness per actor for lock amortization — the same freshness-for-
+//! throughput trade the learner's prefetch pipeline makes (DESIGN.md
+//! §8). The queue flushes any remainder on drop, and actors flush
+//! explicitly at shutdown.
+
+use super::sequence::SequenceReplay;
+use crate::rl::Sequence;
+use std::sync::Arc;
+
+pub struct IngestQueue {
+    replay: Arc<SequenceReplay>,
+    insert_batch: usize,
+    buf: Vec<Sequence>,
+    flushes: u64,
+}
+
+impl IngestQueue {
+    /// `insert_batch` is clamped to >= 1 (1 = flush-per-sequence, the
+    /// seed path).
+    pub fn new(replay: Arc<SequenceReplay>, insert_batch: usize) -> Self {
+        let insert_batch = insert_batch.max(1);
+        Self {
+            replay,
+            insert_batch,
+            buf: Vec::with_capacity(insert_batch),
+            flushes: 0,
+        }
+    }
+
+    /// Buffer one completed sequence, flushing when `insert_batch` are
+    /// pending.
+    pub fn push(&mut self, seq: Sequence) {
+        self.buf.push(seq);
+        if self.buf.len() >= self.insert_batch {
+            self.flush();
+        }
+    }
+
+    /// Commit everything pending in one `add_batch` (no-op when empty).
+    pub fn flush(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        self.replay.add_batch(&mut self.buf);
+        self.flushes += 1;
+    }
+
+    /// Sequences buffered but not yet visible to the learner.
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Completed `add_batch` flushes so far.
+    pub fn flushes(&self) -> u64 {
+        self.flushes
+    }
+
+    pub fn insert_batch(&self) -> usize {
+        self.insert_batch
+    }
+}
+
+impl Drop for IngestQueue {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replay::ReplayConfig;
+
+    fn seq(tag: f32) -> Sequence {
+        Sequence {
+            obs: vec![tag; 8],
+            actions: vec![0; 2],
+            rewards: vec![tag; 2],
+            discounts: vec![0.9; 2],
+            h0: vec![0.0; 2],
+            c0: vec![0.0; 2],
+            actor_id: 0,
+            valid_len: 2,
+        }
+    }
+
+    #[test]
+    fn flushes_at_insert_batch_and_preserves_order() {
+        let r = Arc::new(SequenceReplay::new(ReplayConfig {
+            capacity: 16,
+            shards: 4,
+            ..Default::default()
+        }));
+        let mut q = IngestQueue::new(r.clone(), 4);
+        for i in 0..3 {
+            q.push(seq(i as f32));
+            assert_eq!(q.pending(), i + 1);
+            assert_eq!(r.len(), 0, "nothing visible before the flush");
+        }
+        q.push(seq(3.0));
+        assert_eq!(q.pending(), 0);
+        assert_eq!(q.flushes(), 1);
+        assert_eq!(r.len(), 4);
+        let tags: Vec<f32> = r.snapshot().iter().map(|s| s.rewards[0]).collect();
+        assert_eq!(tags, vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn one_flush_locks_each_shard_at_most_once() {
+        let r = Arc::new(SequenceReplay::new(ReplayConfig {
+            capacity: 64,
+            shards: 4,
+            ..Default::default()
+        }));
+        let mut q = IngestQueue::new(r.clone(), 16);
+        let before = r.lock_acquisitions();
+        for i in 0..16 {
+            q.push(seq(i as f32));
+        }
+        // 16 sequences over 4 shards: exactly 4 lock acquisitions, not
+        // 16 (the seed's flush-per-sequence cost).
+        assert_eq!(r.lock_acquisitions() - before, 4);
+        assert_eq!(r.len(), 16);
+    }
+
+    #[test]
+    fn insert_batch_one_flushes_every_push() {
+        let r = Arc::new(SequenceReplay::new(ReplayConfig {
+            capacity: 8,
+            ..Default::default()
+        }));
+        let mut q = IngestQueue::new(r.clone(), 1);
+        for i in 0..5 {
+            q.push(seq(i as f32));
+            assert_eq!(q.pending(), 0);
+        }
+        assert_eq!(q.flushes(), 5);
+        assert_eq!(r.len(), 5);
+    }
+
+    #[test]
+    fn drop_flushes_the_remainder() {
+        let r = Arc::new(SequenceReplay::new(ReplayConfig {
+            capacity: 8,
+            ..Default::default()
+        }));
+        {
+            let mut q = IngestQueue::new(r.clone(), 8);
+            q.push(seq(1.0));
+            q.push(seq(2.0));
+            assert_eq!(r.len(), 0);
+        }
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn zero_insert_batch_clamps_to_one() {
+        let r = Arc::new(SequenceReplay::new(ReplayConfig::default()));
+        let mut q = IngestQueue::new(r.clone(), 0);
+        assert_eq!(q.insert_batch(), 1);
+        q.push(seq(1.0));
+        assert_eq!(r.len(), 1);
+    }
+}

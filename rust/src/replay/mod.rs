@@ -1,10 +1,16 @@
 //! Prioritized sequence replay (R2D2 / Ape-X style): sum-tree sampling
 //! over fixed-length recurrent sequences with learner-refreshed
 //! priorities. This is the Reverb-equivalent substrate (the paper's
-//! reference stack uses DeepMind Reverb [3]).
+//! reference stack uses DeepMind Reverb [3]). Actor-side inserts go
+//! through the per-actor [`IngestQueue`], which batches them into
+//! one-lock-per-shard [`SequenceReplay::add_batch`] flushes
+//! (`replay.insert_batch`; 1 = the seed's flush-per-sequence path,
+//! bit-for-bit).
 
+pub mod ingest;
 pub mod sequence;
 pub mod sum_tree;
 
+pub use ingest::IngestQueue;
 pub use sequence::{ReplayConfig, SampledBatch, SequenceReplay};
 pub use sum_tree::SumTree;

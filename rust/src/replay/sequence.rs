@@ -25,9 +25,22 @@
 //! update whose tag no longer matches the slot's occupant is dropped as
 //! stale, so a slot overwritten between `sample` and `update_priorities`
 //! can never have the old batch's TD-error applied to the new sequence.
+//!
+//! Inserts can be batched: [`SequenceReplay::add_batch`] reserves a
+//! contiguous generation range with one cursor bump and groups the
+//! batch by shard so each flush takes each shard lock **at most once**
+//! (the per-actor [`super::IngestQueue`] is the producer-side buffer
+//! that feeds it). A batch of one is exactly [`SequenceReplay::add`] —
+//! same generation, same shard, same lock — which is what keeps
+//! `insert_batch = 1` bit-for-bit with the seed path. When a
+//! [`SequencePool`] is attached (`with_pool`), every eviction — a ring
+//! overwrite dropping its old occupant — releases the evicted
+//! sequence's buffers back to the pool, closing the
+//! pool → builder → ingest → replay → pool recycling loop (DESIGN.md
+//! §8).
 
 use super::sum_tree::SumTree;
-use crate::rl::Sequence;
+use crate::rl::{Sequence, SequencePool};
 use crate::util::prng::Pcg32;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
@@ -93,6 +106,13 @@ pub struct SequenceReplay {
     cursor: AtomicU64,
     /// Lock acquisitions that found a shard mutex already held.
     contention: AtomicU64,
+    /// Total shard-lock acquisitions (contended or not) — the batched
+    /// ingest's amortization signal: `micro_replay` reports
+    /// acquisitions-per-sequence across `insert_batch` settings.
+    lock_ops: AtomicU64,
+    /// Recycling pool evicted sequences are released into (none = the
+    /// seed behavior: evictions just drop).
+    pool: Option<Arc<SequencePool>>,
 }
 
 /// A sampled batch: shared sequence handles + global slot ids and insert
@@ -135,7 +155,23 @@ impl SequenceReplay {
             shards,
             cursor: AtomicU64::new(0),
             contention: AtomicU64::new(0),
+            lock_ops: AtomicU64::new(0),
+            pool: None,
         }
+    }
+
+    /// Attach a recycling pool: sequences evicted by ring overwrites are
+    /// released into it (buffer recycles once the last `Arc` holder lets
+    /// go). Builder-style, called before the replay is shared.
+    pub fn with_pool(mut self, pool: Arc<SequencePool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// The attached recycling pool, if any (actors draw builder slabs
+    /// from it; the learner releases sampled batches back into it).
+    pub fn pool(&self) -> Option<&Arc<SequencePool>> {
+        self.pool.as_ref()
     }
 
     pub fn len(&self) -> usize {
@@ -167,14 +203,53 @@ impl SequenceReplay {
         self.contention.load(Ordering::Relaxed)
     }
 
+    /// Total shard-lock acquisitions so far (contended or not): the
+    /// denominator check for batched ingest — one flush of `k`
+    /// sequences over `S` shards costs at most `min(k, S)` acquisitions
+    /// instead of `k`.
+    pub fn lock_acquisitions(&self) -> u64 {
+        self.lock_ops.load(Ordering::Relaxed)
+    }
+
     /// Lock shard `s`, counting the acquisition as contended when the
     /// mutex was already held.
     fn lock_shard(&self, s: usize) -> MutexGuard<'_, Shard> {
+        self.lock_ops.fetch_add(1, Ordering::Relaxed);
         if let Ok(g) = self.shards[s].try_lock() {
             return g;
         }
         self.contention.fetch_add(1, Ordering::Relaxed);
         self.shards[s].lock().unwrap()
+    }
+
+    /// Write `seq` into an already-locked shard's `local` slot under
+    /// `generation` — the shared slot-commit path of [`Self::add`] and
+    /// [`Self::add_batch`]. Evicted occupants are released to the
+    /// attached pool (if any).
+    fn insert_at(&self, g: &mut Shard, local: usize, seq: Sequence, generation: u64) {
+        if let Some(e) = &g.slots[local] {
+            // A wrap-racing older insert must not clobber a newer one.
+            if e.generation > generation {
+                if let Some(p) = &self.pool {
+                    p.put(seq);
+                }
+                return;
+            }
+        } else {
+            g.len += 1;
+        }
+        let prio = self.shaped(g.max_raw_priority);
+        let evicted = std::mem::replace(
+            &mut g.slots[local],
+            Some(SlotEntry {
+                seq: Arc::new(seq),
+                generation,
+            }),
+        );
+        if let (Some(p), Some(e)) = (&self.pool, evicted) {
+            p.release(e.seq);
+        }
+        g.tree.set(local, prio);
     }
 
     /// Insert at max priority; overwrites the oldest slot when full.
@@ -185,20 +260,50 @@ impl SequenceReplay {
         let n = self.shards.len();
         let (shard, local) = (global % n, global / n);
         let mut g = self.lock_shard(shard);
-        if let Some(e) = &g.slots[local] {
-            // A wrap-racing older insert must not clobber a newer one.
-            if e.generation > generation {
-                return;
-            }
-        } else {
-            g.len += 1;
+        self.insert_at(&mut g, local, seq, generation);
+    }
+
+    /// Insert a batch of sequences, reserving their contiguous
+    /// generation range with one cursor bump and taking each shard's
+    /// lock **at most once** — the amortization the per-actor
+    /// [`super::IngestQueue`] buys. Within each shard, slots commit in
+    /// generation order; across the whole batch the generation/slot
+    /// assignment is exactly what `len(batch)` consecutive [`Self::add`]
+    /// calls would produce, so a batch of one *is* `add`, bit-for-bit.
+    /// The vec is drained (emptied, capacity kept) so callers can reuse
+    /// its storage allocation-free.
+    pub fn add_batch(&self, batch: &mut Vec<Sequence>) {
+        let k = batch.len() as u64;
+        if k == 0 {
+            return;
         }
-        let prio = self.shaped(g.max_raw_priority);
-        g.slots[local] = Some(SlotEntry {
-            seq: Arc::new(seq),
-            generation,
-        });
-        g.tree.set(local, prio);
+        debug_assert!(
+            k as usize <= self.cfg.capacity,
+            "insert batch ({k}) larger than replay capacity ({})",
+            self.cfg.capacity
+        );
+        let base = self.cursor.fetch_add(k, Ordering::Relaxed);
+        let n = self.shards.len() as u64;
+        let cap = self.cfg.capacity as u64;
+        for s in 0..n {
+            // Shards divide the capacity, so item i's shard is
+            // (base + i) % n independent of ring wrap; the batch lands
+            // on shards cyclically starting from base's.
+            let first = (s + n - base % n) % n;
+            if first >= k {
+                continue;
+            }
+            let mut g = self.lock_shard(s as usize);
+            let mut i = first;
+            while i < k {
+                let generation = base + i;
+                let local = ((generation % cap) / n) as usize;
+                let seq = std::mem::take(&mut batch[i as usize]);
+                self.insert_at(&mut g, local, seq, generation);
+                i += n;
+            }
+        }
+        batch.clear();
     }
 
     /// Sample `batch` sequences (with replacement across the priority
@@ -612,6 +717,105 @@ mod tests {
         let q = allocate_rows(7, &[1.0, 1.0, 1.0]);
         assert_eq!(q.iter().sum::<usize>(), 7);
         assert!(q.iter().all(|&k| (2..=3).contains(&k)), "{q:?}");
+    }
+
+    #[test]
+    fn add_batch_matches_sequential_adds() {
+        // Any chunking of the insert stream through add_batch must land
+        // every sequence in the same slot with the same generation as
+        // one-at-a-time add() — including across ring wraps.
+        for shards in [1usize, 2, 4] {
+            for chunk in [1usize, 3, 4, 7] {
+                let golden = SequenceReplay::new(ReplayConfig {
+                    capacity: 8,
+                    shards,
+                    ..Default::default()
+                });
+                let batched = SequenceReplay::new(ReplayConfig {
+                    capacity: 8,
+                    shards,
+                    ..Default::default()
+                });
+                let mut pending: Vec<Sequence> = Vec::new();
+                for i in 0..19 {
+                    golden.add(seq(i as f32));
+                    pending.push(seq(i as f32));
+                    if pending.len() == chunk {
+                        batched.add_batch(&mut pending);
+                    }
+                }
+                batched.add_batch(&mut pending);
+                assert!(pending.is_empty());
+                assert_eq!(golden.len(), batched.len());
+                assert_eq!(golden.inserts(), batched.inserts());
+                let a: Vec<f32> =
+                    golden.snapshot().iter().map(|s| s.rewards[0]).collect();
+                let b: Vec<f32> =
+                    batched.snapshot().iter().map(|s| s.rewards[0]).collect();
+                assert_eq!(a, b, "shards={shards} chunk={chunk}");
+                // Identical buffer state: identical sample streams.
+                let mut r1 = Pcg32::seeded(5);
+                let mut r2 = Pcg32::seeded(5);
+                let s1 = golden.sample(4, &mut r1).unwrap();
+                let s2 = batched.sample(4, &mut r2).unwrap();
+                assert_eq!(s1.slots, s2.slots);
+                assert_eq!(s1.generations, s2.generations);
+            }
+        }
+    }
+
+    #[test]
+    fn add_batch_takes_each_shard_lock_at_most_once() {
+        let r = SequenceReplay::new(ReplayConfig {
+            capacity: 32,
+            shards: 4,
+            ..Default::default()
+        });
+        let mut batch: Vec<Sequence> = (0..8).map(|i| seq(i as f32)).collect();
+        let before = r.lock_acquisitions();
+        r.add_batch(&mut batch);
+        assert_eq!(r.lock_acquisitions() - before, 4);
+        // A batch smaller than the shard count touches only its shards.
+        let mut batch: Vec<Sequence> = (0..2).map(|i| seq(i as f32)).collect();
+        let before = r.lock_acquisitions();
+        r.add_batch(&mut batch);
+        assert_eq!(r.lock_acquisitions() - before, 2);
+    }
+
+    #[test]
+    fn eviction_releases_buffers_to_the_pool() {
+        use crate::rl::SequencePool;
+        let pool = Arc::new(SequencePool::with_capacity(16));
+        let r = SequenceReplay::new(ReplayConfig {
+            capacity: 4,
+            shards: 2,
+            ..Default::default()
+        })
+        .with_pool(pool.clone());
+        assert!(r.pool().is_some());
+        for i in 0..4 {
+            r.add(seq(i as f32));
+        }
+        assert_eq!(pool.free_len(), 0, "no evictions yet");
+        // One full wrap: 4 evictions, each buffer unshared -> recycled.
+        for i in 4..8 {
+            r.add(seq(i as f32));
+        }
+        assert_eq!(pool.free_len(), 4);
+        // A sampled handle keeps its buffer alive past eviction; the
+        // learner-side release recycles it once replay has let go.
+        let mut rng = Pcg32::seeded(9);
+        let held = r.sample(1, &mut rng).unwrap();
+        let arc = held.sequences[0].clone();
+        drop(held);
+        let evictions_before = pool.free_len();
+        for i in 8..12 {
+            r.add(seq(i as f32));
+        }
+        // 4 evictions, but the held slot's buffer could not recycle yet.
+        assert_eq!(pool.free_len(), evictions_before + 3);
+        pool.release(arc);
+        assert_eq!(pool.free_len(), evictions_before + 4);
     }
 
     #[test]

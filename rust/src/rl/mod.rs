@@ -10,7 +10,7 @@ pub mod trajectory;
 
 pub use epsilon::{actor_epsilon, LinearDecay};
 pub use returns::{episode_return, n_step_return, value_rescale, value_rescale_inv};
-pub use trajectory::{Sequence, SequenceBuilder, Transition};
+pub use trajectory::{Sequence, SequenceBuilder, SequencePool, Transition};
 
 /// Greedy argmax over a q-row; ties break to the lowest index.
 pub fn argmax(q: &[f32]) -> usize {

@@ -1,10 +1,43 @@
-//! Trajectory types and the R2D2 sequence slicer.
+//! Trajectory types and the R2D2 sequence slicer, arena-backed.
 //!
 //! Actors produce transitions; the learner consumes fixed-length
 //! sequences (burn_in + unroll) with the recurrent state snapshotted at
 //! the sequence start and adjacent sequences overlapping (R2D2 uses
-//! 80/40; our AOT default is 20/10, same ratio). Episode ends are
-//! zero-padded (discount 0 masks the pad in the loss).
+//! 80/40; our AOT default is 20/10, same ratio).
+//!
+//! ## Padding contract
+//!
+//! Every emitted [`Sequence`] carries full `seq_len`-sized buffers, no
+//! matter how short the real data is: a sequence cut by an episode end
+//! (or a shutdown [`SequenceBuilder::flush`]) is zero-padded past
+//! `valid_len` — obs rows 0.0, actions 0, rewards 0.0, discounts 0.0 —
+//! so the AOT train graph sees one fixed shape and the discount-0 pad
+//! masks itself out of the loss. Consumers must treat `valid_len`, not
+//! `seq_len()`, as the data length. `flush` additionally *drops the
+//! overlap invariant*: the partial sequence it emits is final, and the
+//! builder restarts empty — a builder reused after `flush` begins a
+//! fresh trajectory with no overlap carried from before the flush
+//! (asserted by `flush_then_reuse_starts_clean`).
+//!
+//! ## The zero-allocation path
+//!
+//! The builder writes transitions straight into the time-major slab of
+//! the `Sequence` it will eventually emit — there is no intermediate
+//! `Vec<Transition>` ring. [`SequenceBuilder::push_slices`] borrows the
+//! caller's obs/h/c rows (the actor hands it slices of its slot slabs),
+//! so in steady state a transition costs only `memcpy`s into
+//! preallocated buffers. Emitted slabs are drawn from a shared
+//! [`SequencePool`] when one is attached (`with_pool`): replay evictions
+//! and learner-released batches feed buffers back, and the hit/miss
+//! counters behind `actor.pool_hit_rate` expose how often the pool
+//! actually short-circuits the allocator. Without a pool the builder
+//! allocates a fresh slab per emitted sequence — the seed behavior —
+//! and either way the emitted *values* are identical bit-for-bit
+//! (property-tested against a verbatim seed replica in
+//! `tests/property_invariants.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// One actor transition: the observation fed to inference, the action
 /// taken, and the immediate outcome.
@@ -21,7 +54,7 @@ pub struct Transition {
 }
 
 /// A fixed-length training sequence (the replay/learner unit).
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Sequence {
     /// [T * obs_len], time-major.
     pub obs: Vec<f32>,
@@ -50,14 +83,148 @@ impl Sequence {
     }
 }
 
-/// Slices one actor's transition stream into overlapping sequences.
+/// Recycling arena for [`Sequence`] slab buffers.
+///
+/// Builders `acquire` zeroed, exact-size slabs; replay evictions and
+/// learner-released batches `release` their `Arc<Sequence>` handles back
+/// (the buffer recycles once the last holder lets go), and tests or
+/// benches can `put` owned sequences directly. Hit/miss counters feed
+/// the `actor.pool_hit_rate` gauge: a hit means the allocator was never
+/// involved in producing a sequence slab.
+pub struct SequencePool {
+    free: Mutex<Vec<Sequence>>,
+    /// Free-list cap; `put` beyond it drops the buffer instead of
+    /// growing without bound.
+    max_free: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for SequencePool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SequencePool {
+    pub fn new() -> Self {
+        // Generous default: a full default replay ring's worth of slabs.
+        Self::with_capacity(4_096)
+    }
+
+    pub fn with_capacity(max_free: usize) -> Self {
+        Self {
+            free: Mutex::new(Vec::new()),
+            max_free,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Take a zeroed `Sequence` with exactly the requested shape,
+    /// reusing a recycled slab's buffers when one is available (no
+    /// allocation when the recycled capacities already fit).
+    pub fn acquire(
+        &self,
+        seq_len: usize,
+        obs_len: usize,
+        hidden: usize,
+        actor_id: usize,
+    ) -> Sequence {
+        let recycled = self.free.lock().unwrap().pop();
+        let mut s = match recycled {
+            Some(s) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                s
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Sequence::default()
+            }
+        };
+        s.obs.clear();
+        s.obs.resize(seq_len * obs_len, 0.0);
+        s.actions.clear();
+        s.actions.resize(seq_len, 0);
+        s.rewards.clear();
+        s.rewards.resize(seq_len, 0.0);
+        s.discounts.clear();
+        s.discounts.resize(seq_len, 0.0);
+        s.h0.clear();
+        s.h0.resize(hidden, 0.0);
+        s.c0.clear();
+        s.c0.resize(hidden, 0.0);
+        s.actor_id = actor_id;
+        s.valid_len = 0;
+        s
+    }
+
+    /// Return an owned sequence's buffers to the free list (dropped if
+    /// the list is at capacity).
+    pub fn put(&self, seq: Sequence) {
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.max_free {
+            free.push(seq);
+        }
+    }
+
+    /// Recycle a shared handle if this is the last one (replay already
+    /// evicted the slot, or the learner was the final holder); a still-
+    /// shared handle is simply dropped.
+    pub fn release(&self, seq: Arc<Sequence>) {
+        if let Ok(s) = Arc::try_unwrap(seq) {
+            self.put(s);
+        }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of acquires served from recycled buffers (0 when the
+    /// pool has never been asked).
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits();
+        let m = self.misses();
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    /// Buffers currently parked on the free list (diagnostic/test API).
+    pub fn free_len(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+/// Slices one actor's transition stream into overlapping sequences,
+/// writing each transition directly into the time-major slab of the
+/// `Sequence` under construction (see the module docs for the padding
+/// contract and the allocation story).
 pub struct SequenceBuilder {
     seq_len: usize,
     overlap: usize,
     obs_len: usize,
     hidden: usize,
     actor_id: usize,
-    buf: Vec<Transition>,
+    pool: Option<Arc<SequencePool>>,
+    /// The slab being filled; emitted (and replaced) when complete.
+    cur: Sequence,
+    /// Transitions currently written into `cur`.
+    len: usize,
+    /// Recurrent state before each buffered transition, time-major
+    /// [seq_len, hidden]: `hs[i]` is the `h` the actor held when it
+    /// pushed `cur`'s transition `i`. Kept outside the `Sequence` (which
+    /// only stores the step-0 snapshot) so the overlap tail carried into
+    /// the next sequence still knows its start state.
+    hs: Vec<f32>,
+    cs: Vec<f32>,
 }
 
 impl SequenceBuilder {
@@ -69,73 +236,129 @@ impl SequenceBuilder {
         actor_id: usize,
     ) -> Self {
         assert!(overlap < seq_len, "overlap must be < seq_len");
-        Self {
+        let mut b = Self {
             seq_len,
             overlap,
             obs_len,
             hidden,
             actor_id,
-            buf: Vec::with_capacity(seq_len),
+            pool: None,
+            cur: Sequence::default(),
+            len: 0,
+            hs: vec![0.0; seq_len * hidden],
+            cs: vec![0.0; seq_len * hidden],
+        };
+        b.cur = b.fresh_slab();
+        b
+    }
+
+    /// Draw emitted slabs from (and thereby recycle through) `pool`.
+    pub fn with_pool(mut self, pool: Arc<SequencePool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    fn fresh_slab(&self) -> Sequence {
+        match &self.pool {
+            Some(p) => p.acquire(self.seq_len, self.obs_len, self.hidden, self.actor_id),
+            None => Sequence {
+                obs: vec![0.0; self.seq_len * self.obs_len],
+                actions: vec![0; self.seq_len],
+                rewards: vec![0.0; self.seq_len],
+                discounts: vec![0.0; self.seq_len],
+                h0: vec![0.0; self.hidden],
+                c0: vec![0.0; self.hidden],
+                actor_id: self.actor_id,
+                valid_len: 0,
+            },
         }
     }
 
-    /// Feed one transition; returns a completed sequence when available.
+    /// Feed one owned transition; returns a completed sequence when
+    /// available. Compatibility wrapper over [`Self::push_slices`].
     pub fn push(&mut self, t: Transition) -> Option<Sequence> {
-        debug_assert_eq!(t.obs.len(), self.obs_len);
-        debug_assert_eq!(t.h.len(), self.hidden);
-        let terminal = t.discount == 0.0;
-        self.buf.push(t);
-        if self.buf.len() == self.seq_len {
-            let seq = self.emit(self.seq_len);
-            // Keep the overlap tail for the next sequence.
-            self.buf.drain(..self.seq_len - self.overlap);
-            return Some(seq);
+        self.push_slices(&t.obs, t.action, t.reward, t.discount, &t.h, &t.c)
+    }
+
+    /// Feed one transition as borrowed rows — the zero-copy entry point:
+    /// the actor passes slices of its slot slabs and nothing is
+    /// heap-allocated on the way in.
+    pub fn push_slices(
+        &mut self,
+        obs: &[f32],
+        action: i32,
+        reward: f32,
+        discount: f32,
+        h: &[f32],
+        c: &[f32],
+    ) -> Option<Sequence> {
+        debug_assert_eq!(obs.len(), self.obs_len);
+        debug_assert_eq!(h.len(), self.hidden);
+        debug_assert_eq!(c.len(), self.hidden);
+        let i = self.len;
+        let ol = self.obs_len;
+        let hd = self.hidden;
+        self.cur.obs[i * ol..(i + 1) * ol].copy_from_slice(obs);
+        self.cur.actions[i] = action;
+        self.cur.rewards[i] = reward;
+        self.cur.discounts[i] = discount;
+        self.hs[i * hd..(i + 1) * hd].copy_from_slice(h);
+        self.cs[i * hd..(i + 1) * hd].copy_from_slice(c);
+        self.len += 1;
+        if self.len == self.seq_len {
+            return Some(self.emit_full());
         }
-        if terminal {
-            // Pad out the remainder and start fresh.
-            let seq = self.emit(self.buf.len());
-            self.buf.clear();
-            return Some(seq);
+        if discount == 0.0 {
+            // Terminal short of the boundary: the slab's tail is already
+            // zeroed (padding contract) — emit and start fresh.
+            return Some(self.emit_and_reset());
         }
         None
     }
 
-    /// Flush a partial buffer at shutdown (None if empty).
+    /// Flush a partial buffer at shutdown (None if empty). Drops the
+    /// overlap invariant: see the module docs.
     pub fn flush(&mut self) -> Option<Sequence> {
-        if self.buf.is_empty() {
+        if self.len == 0 {
             return None;
         }
-        let seq = self.emit(self.buf.len());
-        self.buf.clear();
-        Some(seq)
+        Some(self.emit_and_reset())
     }
 
     pub fn buffered(&self) -> usize {
-        self.buf.len()
+        self.len
     }
 
-    fn emit(&self, valid: usize) -> Sequence {
-        let t_len = self.seq_len;
-        let mut obs = vec![0.0f32; t_len * self.obs_len];
-        let mut actions = vec![0i32; t_len];
-        let mut rewards = vec![0.0f32; t_len];
-        let mut discounts = vec![0.0f32; t_len];
-        for (i, tr) in self.buf.iter().take(valid).enumerate() {
-            obs[i * self.obs_len..(i + 1) * self.obs_len].copy_from_slice(&tr.obs);
-            actions[i] = tr.action;
-            rewards[i] = tr.reward;
-            discounts[i] = tr.discount;
-        }
-        Sequence {
-            obs,
-            actions,
-            rewards,
-            discounts,
-            h0: self.buf[0].h.clone(),
-            c0: self.buf[0].c.clone(),
-            actor_id: self.actor_id,
-            valid_len: valid,
-        }
+    /// Emit the full slab, seeding the next one with the overlap tail.
+    fn emit_full(&mut self) -> Sequence {
+        let stride = self.seq_len - self.overlap;
+        let (ol, hd) = (self.obs_len, self.hidden);
+        let mut next = self.fresh_slab();
+        next.obs[..self.overlap * ol]
+            .copy_from_slice(&self.cur.obs[stride * ol..]);
+        next.actions[..self.overlap].copy_from_slice(&self.cur.actions[stride..]);
+        next.rewards[..self.overlap].copy_from_slice(&self.cur.rewards[stride..]);
+        next.discounts[..self.overlap]
+            .copy_from_slice(&self.cur.discounts[stride..]);
+        self.cur.h0.copy_from_slice(&self.hs[..hd]);
+        self.cur.c0.copy_from_slice(&self.cs[..hd]);
+        self.cur.valid_len = self.seq_len;
+        // Keep hs/cs aligned with the carried-over tail rows.
+        self.hs.copy_within(stride * hd.., 0);
+        self.cs.copy_within(stride * hd.., 0);
+        self.len = self.overlap;
+        std::mem::replace(&mut self.cur, next)
+    }
+
+    /// Emit the (partial, zero-padded) slab and restart empty — the
+    /// terminal / flush path, which carries no overlap forward.
+    fn emit_and_reset(&mut self) -> Sequence {
+        let next = self.fresh_slab();
+        self.cur.h0.copy_from_slice(&self.hs[..self.hidden]);
+        self.cur.c0.copy_from_slice(&self.cs[..self.hidden]);
+        self.cur.valid_len = self.len;
+        self.len = 0;
+        std::mem::replace(&mut self.cur, next)
     }
 }
 
@@ -169,6 +392,31 @@ mod tests {
         assert_eq!(seqs[1].actions, vec![2, 3, 4, 5]);
         assert_eq!(seqs[1].h0, vec![2.0, 2.0]);
         assert_eq!(seqs[0].valid_len, 4);
+    }
+
+    #[test]
+    fn deep_overlap_chains_recurrent_state() {
+        // overlap > stride: the next sequence's start state comes from a
+        // transition that itself arrived as carried-over tail — the
+        // staging shift must keep h0 exact across chained overlaps.
+        let mut b = SequenceBuilder::new(4, 3, 4, 2, 0);
+        let mut seqs = Vec::new();
+        for i in 0..8 {
+            if let Some(s) = b.push(tr(i as f32, 0.99)) {
+                seqs.push(s);
+            }
+        }
+        // Starts at 0, 1, 2, 3, 4: 5 sequences from 8 steps.
+        assert_eq!(seqs.len(), 5);
+        for (k, s) in seqs.iter().enumerate() {
+            assert_eq!(
+                s.actions,
+                (k as i32..k as i32 + 4).collect::<Vec<_>>(),
+                "sequence {k}"
+            );
+            assert_eq!(s.h0, vec![k as f32; 2], "sequence {k} start state");
+            assert_eq!(s.c0, vec![-(k as f32); 2], "sequence {k} start state");
+        }
     }
 
     #[test]
@@ -207,10 +455,128 @@ mod tests {
     }
 
     #[test]
+    fn flush_then_reuse_starts_clean() {
+        // Padding-contract regression: a builder reused after flush must
+        // start a fresh trajectory — no overlap tail, no stale slab
+        // rows, no stale recurrent state leaking from before the flush.
+        let mut b = SequenceBuilder::new(4, 2, 4, 2, 0);
+        b.push(tr(7.0, 0.9));
+        b.push(tr(8.0, 0.9));
+        b.push(tr(9.0, 0.9));
+        let flushed = b.flush().unwrap();
+        assert_eq!(flushed.valid_len, 3);
+        assert_eq!(b.buffered(), 0);
+        let mut seqs = Vec::new();
+        for i in 0..4 {
+            if let Some(s) = b.push(tr(i as f32, 0.9)) {
+                seqs.push(s);
+            }
+        }
+        assert_eq!(seqs.len(), 1);
+        // Entirely the new transitions: nothing from 7/8/9 leaked.
+        assert_eq!(seqs[0].actions, vec![0, 1, 2, 3]);
+        assert_eq!(seqs[0].h0, vec![0.0, 0.0]);
+        assert_eq!(seqs[0].obs[..4], [0.0; 4]);
+        assert_eq!(seqs[0].valid_len, 4);
+    }
+
+    #[test]
     fn reward_sum_ignores_padding() {
         let mut b = SequenceBuilder::new(5, 1, 4, 2, 0);
         b.push(tr(2.0, 0.9));
         let s = b.push(tr(3.0, 0.0)).unwrap();
         assert_eq!(s.reward_sum(), 5.0);
+    }
+
+    #[test]
+    fn push_slices_matches_push() {
+        let mut a = SequenceBuilder::new(4, 2, 3, 2, 5);
+        let mut b = SequenceBuilder::new(4, 2, 3, 2, 5);
+        for i in 0..13 {
+            let t = Transition {
+                obs: vec![i as f32; 3],
+                action: i,
+                reward: i as f32 * 0.5,
+                discount: if i % 5 == 4 { 0.0 } else { 0.97 },
+                h: vec![i as f32 * 0.1; 2],
+                c: vec![i as f32 * -0.1; 2],
+            };
+            let sa = a.push_slices(
+                &t.obs, t.action, t.reward, t.discount, &t.h, &t.c,
+            );
+            let sb = b.push(t);
+            assert_eq!(sa, sb, "step {i}");
+        }
+        assert_eq!(a.flush(), b.flush());
+    }
+
+    #[test]
+    fn pool_recycles_and_counts() {
+        let pool = Arc::new(SequencePool::with_capacity(8));
+        let mut b =
+            SequenceBuilder::new(3, 1, 2, 2, 0).with_pool(pool.clone());
+        let mut emitted = Vec::new();
+        for i in 0..9 {
+            if let Some(s) = b.push(tr(i as f32, 0.9)) {
+                emitted.push(s);
+            }
+        }
+        assert!(!emitted.is_empty());
+        // Nothing returned yet: every slab was a miss.
+        assert_eq!(pool.hits(), 0);
+        assert!(pool.misses() > 0);
+        for s in emitted {
+            pool.put(s);
+        }
+        let parked = pool.free_len();
+        assert!(parked > 0);
+        // With buffers parked, the next emits are hits, and acquire
+        // hands back fully zeroed, right-sized slabs.
+        let miss_before = pool.misses();
+        for i in 0..9 {
+            if let Some(s) = b.push(tr(i as f32, 0.9)) {
+                assert_eq!(s.seq_len(), 3);
+                assert_eq!(s.obs.len(), 6);
+                pool.put(s);
+            }
+        }
+        assert!(pool.hits() > 0);
+        assert_eq!(pool.misses(), miss_before, "no new allocations");
+        assert!(pool.hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn pooled_acquire_zeroes_stale_data() {
+        let pool = SequencePool::with_capacity(4);
+        pool.put(Sequence {
+            obs: vec![9.0; 6],
+            actions: vec![9; 3],
+            rewards: vec![9.0; 3],
+            discounts: vec![9.0; 3],
+            h0: vec![9.0; 2],
+            c0: vec![9.0; 2],
+            actor_id: 7,
+            valid_len: 3,
+        });
+        let s = pool.acquire(3, 2, 2, 1);
+        assert_eq!(s.obs, vec![0.0; 6]);
+        assert_eq!(s.actions, vec![0; 3]);
+        assert_eq!(s.rewards, vec![0.0; 3]);
+        assert_eq!(s.discounts, vec![0.0; 3]);
+        assert_eq!(s.h0, vec![0.0; 2]);
+        assert_eq!(s.actor_id, 1);
+        assert_eq!(s.valid_len, 0);
+        assert_eq!(pool.hits(), 1);
+    }
+
+    #[test]
+    fn release_recycles_only_last_handle() {
+        let pool = SequencePool::with_capacity(4);
+        let a = Arc::new(Sequence::default());
+        let b = a.clone();
+        pool.release(a); // still shared: dropped, not recycled
+        assert_eq!(pool.free_len(), 0);
+        pool.release(b); // last handle: recycled
+        assert_eq!(pool.free_len(), 1);
     }
 }

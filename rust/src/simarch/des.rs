@@ -41,7 +41,10 @@ pub fn simulate(model: &SystemModel, n: usize, sim_seconds: f64, dt: f64) -> Des
     // More groups than slots cannot help (matches the actor's clamp).
     let d = model.pipeline_depth.max(1).min(e);
     let rows_per_group = e as f64 / d as f64; // env steps per group cycle
-    let t_env = model.cpu.step_cost_us() * 1e-6;
+    // Per-step CPU work includes the (amortized) replay-ingest share,
+    // mirroring `SystemModel::steady_state`'s t_env term so the two
+    // models stay structurally comparable on the insert_batch axis.
+    let t_env = model.cpu.step_cost_us() * 1e-6 + model.insert_overhead_s();
     let t_cycle_env = rows_per_group * t_env; // CPU work per group cycle
     let t_train = model.train_time();
     // A train job occupies the learner for the whole train cycle

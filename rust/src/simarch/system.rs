@@ -78,6 +78,26 @@ pub struct SystemModel {
     /// becomes `max(t_train, t_sample + t_assemble)` — the learner-side
     /// mirror of the actor pipeline's `max(W, rtt + W/D)`.
     pub prefetch_depth: usize,
+    /// Sequences each actor emits per environment step: 1 / (seq_len -
+    /// overlap), the trajectory slicer's stride (paper-scale R2D2:
+    /// 1 / (80 - 40)).
+    pub seq_per_env: f64,
+    /// Synchronization cost of committing one sequence to replay at
+    /// `insert_batch = 1` — the shard-lock acquire/release plus ring
+    /// bookkeeping, seconds (the payload copy lives in
+    /// `actor_overhead_us`). Measured in `micro_replay`.
+    pub replay_insert_s: f64,
+    /// Sequences per ingest flush (the `replay.insert_batch` knob): a
+    /// flush takes each shard lock at most once, so the per-sequence
+    /// insert cost lands in the actor cycle amortized by this factor
+    /// (DESIGN.md §8).
+    pub insert_batch: usize,
+    /// Replay shard count (the `replay.shards` knob). A flush of `k`
+    /// sequences costs `min(k, shards)` lock round-trips, so the
+    /// amortization saturates once the batch no longer exceeds the
+    /// shard count — matching the counter-based `micro_replay`
+    /// measurement exactly.
+    pub replay_shards: usize,
 }
 
 /// One steady-state operating point.
@@ -146,6 +166,21 @@ impl SystemModel {
         }
     }
 
+    /// Per-env-step replay-ingest overhead on the actor CPU: the
+    /// per-sequence insert cost amortized by the ingest batch size,
+    /// times sequences per env step. A flush of `k` sequences over `S`
+    /// shards takes `min(k, S)` lock round-trips (each shard lock at
+    /// most once), so the per-sequence cost is
+    /// `replay_insert_s * min(k, S) / k` — at `insert_batch = 1` every
+    /// sequence pays the full round-trip, and the amortization
+    /// saturates once `k <= S` (batching below the shard count buys
+    /// nothing, exactly what the `micro_replay` lock counters show).
+    pub fn insert_overhead_s(&self) -> f64 {
+        let k = self.insert_batch.max(1) as f64;
+        let s = self.replay_shards.max(1) as f64;
+        self.seq_per_env * self.replay_insert_s * k.min(s) / k
+    }
+
     /// Solve the steady state for `n` actor threads (damped fixed
     /// point). Each thread drives `envs_per_actor` environments in
     /// lockstep: a thread's cycle is E serial env steps plus one
@@ -156,7 +191,9 @@ impl SystemModel {
         // More pipeline stages than slots cannot help (matches the
         // actor's clamp).
         let d = (self.pipeline_depth.max(1) as f64).min(e);
-        let t_env = self.cpu.step_cost_us() * 1e-6; // ideal per-step CPU time
+        // Ideal per-step CPU time: the env step itself plus the
+        // (amortized) replay-ingest share of each step.
+        let t_env = self.cpu.step_cost_us() * 1e-6 + self.insert_overhead_s();
         let t_train = self.train_time();
         // Learner-side cap: train steps complete one per train cycle
         // (GPU step + CPU sample/assemble, overlapped when prefetching),
@@ -287,6 +324,31 @@ impl SystemModel {
         m
     }
 
+    /// Clone with a different ingest batch size (the `replay.insert_batch`
+    /// sweep).
+    pub fn with_insert_batch(&self, k: usize) -> Self {
+        let mut m = self.clone();
+        m.insert_batch = k.max(1);
+        m
+    }
+
+    /// Clone with a different replay shard count (caps the ingest
+    /// amortization at `min(insert_batch, shards)` locks per flush).
+    pub fn with_replay_shards(&self, shards: usize) -> Self {
+        let mut m = self.clone();
+        m.replay_shards = shards.max(1);
+        m
+    }
+
+    /// Clone with different replay-ingest costs (sequences per env step,
+    /// per-sequence insert seconds).
+    pub fn with_ingest_cost(&self, seq_per_env: f64, insert_s: f64) -> Self {
+        let mut m = self.clone();
+        m.seq_per_env = seq_per_env.max(0.0);
+        m.replay_insert_s = insert_s.max(0.0);
+        m
+    }
+
     /// CPU/GPU ratio of this configuration (the paper's design metric).
     pub fn cpu_gpu_ratio(&self) -> f64 {
         self.cpu.cfg.hw_threads as f64 / self.gpu.cfg.num_sms as f64
@@ -323,6 +385,13 @@ pub fn default_system(infer_trace: Trace, train_trace: Trace) -> SystemModel {
         learner_sample_s: 20e-6,
         learner_assemble_s: 500e-6,
         prefetch_depth: cfg.learner.prefetch_depth,
+        // Paper-scale R2D2 slices sequences at stride 80 - 40 = 40 env
+        // steps; one unbatched insert costs a few microseconds of lock
+        // round-trip (EXPERIMENTS.md §Perf, `replay.add`).
+        seq_per_env: 1.0 / (80.0 - 40.0),
+        replay_insert_s: 3e-6,
+        insert_batch: cfg.replay.insert_batch,
+        replay_shards: cfg.replay.shards,
     }
 }
 
@@ -498,6 +567,63 @@ mod tests {
         let a = m.with_pipeline_depth(4).steady_state(8);
         let b = m.with_pipeline_depth(64).steady_state(8);
         assert_eq!(a.env_rate, b.env_rate);
+    }
+
+    #[test]
+    fn insert_batch_is_identity_at_zero_ingest_cost() {
+        let m = model().with_ingest_cost(1.0 / 40.0, 0.0);
+        let a = m.steady_state(16);
+        let b = m.with_insert_batch(16).steady_state(16);
+        assert_eq!(a.env_rate, b.env_rate);
+        assert_eq!(a.batch_size, b.batch_size);
+    }
+
+    #[test]
+    fn insert_batch_amortizes_ingest_cost_when_actor_bound() {
+        // Crank the per-sequence insert cost until it rivals the env
+        // step itself (heavy contention regime): batching the ingest
+        // must buy actor rate back, but never more than the serial
+        // cycle-time ratio.
+        let m = model().with_ingest_cost(0.5, 400e-6);
+        let serial = m.steady_state(16);
+        let batched = m.with_insert_batch(8).steady_state(16);
+        assert!(
+            batched.env_rate > 1.05 * serial.env_rate,
+            "insert_batch 8 {} vs 1 {}",
+            batched.env_rate,
+            serial.env_rate
+        );
+        let t_env = m.cpu.step_cost_us() * 1e-6;
+        let cycle_gain = (t_env + m.insert_overhead_s())
+            / (t_env + m.with_insert_batch(8).insert_overhead_s());
+        assert!(
+            batched.env_rate <= serial.env_rate * cycle_gain * 1.05,
+            "gain {} exceeds cycle ratio {cycle_gain}",
+            batched.env_rate / serial.env_rate
+        );
+    }
+
+    #[test]
+    fn insert_overhead_amortizes_inversely_with_batch() {
+        let m = model().with_ingest_cost(0.1, 10e-6);
+        let t1 = m.insert_overhead_s();
+        let t4 = m.with_insert_batch(4).insert_overhead_s();
+        assert!((t1 - 1e-6).abs() < 1e-12);
+        assert!((t4 - 0.25e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn insert_amortization_saturates_at_the_shard_count() {
+        // A flush never takes fewer locks than min(k, shards): with 4
+        // shards, batching 4 buys nothing (locks/seq stays 1.0, the
+        // micro_replay counter shape) and batching 16 caps at 4/16.
+        let m = model().with_ingest_cost(0.1, 10e-6).with_replay_shards(4);
+        let t1 = m.insert_overhead_s();
+        let t4 = m.with_insert_batch(4).insert_overhead_s();
+        let t16 = m.with_insert_batch(16).insert_overhead_s();
+        assert!((t1 - 1e-6).abs() < 1e-12);
+        assert!((t4 - 1e-6).abs() < 1e-12, "k <= shards must not amortize");
+        assert!((t16 - 0.25e-6).abs() < 1e-12);
     }
 
     #[test]

@@ -101,6 +101,12 @@ fn metrics_are_consistent_with_report() {
         snap["batcher.items"]
             <= snap["actor.env_steps"] + report.total_envs as f64
     );
+    // The default config runs the pooled transition path: the pool
+    // effectiveness gauge is published and sane.
+    let hit_rate = snap["actor.pool_hit_rate"];
+    assert!((0.0..=1.0).contains(&hit_rate), "pool hit rate {hit_rate}");
+    // Batched-ingest accounting is published even at insert_batch = 1.
+    assert!(snap["replay.lock_acquisitions"] > 0.0);
 }
 
 #[test]
@@ -396,6 +402,79 @@ fn pipeline_depth1_reproduces_serialized_actor_bit_for_bit() {
         for (i, (a, b)) in seqs.iter().zip(&golden).enumerate() {
             assert_eq!(a, b, "sequence {i} diverged (central={central})");
         }
+    }
+}
+
+#[test]
+fn pooled_batched_ingest_preserves_the_actor_replay_stream() {
+    // Acceptance (ISSUE 4): with the recycling pool attached and any
+    // single-actor insert_batch, the actor -> replay stream must be
+    // value-identical to the seed path — pooling only recycles buffers,
+    // batching only defers visibility; neither may change the emitted
+    // sequences or their order. A small ring forces evictions so the
+    // pool's recycle loop (evict -> release -> acquire) actually runs.
+    // Sampled-batch equality for identical buffer contents is pinned in
+    // tests/replay_equivalence.rs.
+    let (cfg, dims) = equivalence_cfg();
+    let rounds = 60u64;
+    let backend = Backend::Mock(Arc::new(MockModel::new(dims, 11)));
+    // Golden: the unpooled, unbatched policy actor (itself pinned to
+    // the verbatim seed loop by the equivalence test above).
+    let (golden_stats, golden) =
+        run_policy_actor(&cfg, dims, &backend, rounds, false);
+    assert!(golden.len() > 32, "workload too small to wrap the test ring");
+
+    for insert_batch in [1usize, 4] {
+        let mut cfg = cfg.clone();
+        cfg.replay.insert_batch = insert_batch;
+        let pool = Arc::new(rlarch::rl::SequencePool::new());
+        let replay = Arc::new(
+            SequenceReplay::new(ReplayConfig {
+                capacity: 32,
+                shards: 2,
+                ..Default::default()
+            })
+            .with_pool(pool.clone()),
+        );
+        let metrics = Registry::new();
+        let policy: Box<dyn PolicyClient> = Box::new(LocalClient::new(
+            backend.clone(),
+            cfg.batcher.max_batch,
+            dims,
+            &metrics,
+        ));
+        let stats = run_actor(ActorArgs {
+            id: 0,
+            cfg: cfg.clone(),
+            dims,
+            policy,
+            replay: replay.clone(),
+            metrics: metrics.clone(),
+            shutdown: ShutdownToken::new(),
+            max_rounds: Some(rounds),
+        })
+        .unwrap();
+        assert_eq!(stats.env_steps, golden_stats.env_steps);
+        assert_eq!(stats.episodes, golden_stats.episodes);
+        // The wrapped ring holds the newest 32 sequences: they must be
+        // byte-identical to the golden stream's tail.
+        let seqs = replay.snapshot();
+        assert_eq!(seqs.len(), 32, "insert_batch={insert_batch}");
+        let tail = &golden[golden.len() - 32..];
+        for (i, (a, b)) in seqs.iter().zip(tail).enumerate() {
+            assert_eq!(
+                a, b,
+                "sequence {i} diverged (insert_batch={insert_batch})"
+            );
+        }
+        // The ring wrapped, so evictions recycled buffers and later
+        // emits drew them from the pool.
+        assert!(
+            pool.hits() > 0,
+            "pool never recycled (insert_batch={insert_batch})"
+        );
+        let rate = metrics.gauge("actor.pool_hit_rate").get();
+        assert!((0.0..=1.0).contains(&rate), "hit rate {rate}");
     }
 }
 

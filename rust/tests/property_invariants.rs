@@ -4,10 +4,152 @@
 
 use rlarch::config::CpuModelConfig;
 use rlarch::replay::{ReplayConfig, SequenceReplay, SumTree};
-use rlarch::rl::{Sequence, SequenceBuilder, Transition};
+use rlarch::rl::{Sequence, SequenceBuilder, SequencePool, Transition};
 use rlarch::simarch::CpuModel;
 use rlarch::util::prng::Pcg32;
 use rlarch::util::quickcheck::{forall, prop_assert, prop_close};
+use std::sync::Arc;
+
+/// Verbatim replica of the seed `SequenceBuilder` (pre-arena): a
+/// `Vec<Transition>` ring sliced by an `emit` that allocates four fresh
+/// buffers per sequence. The golden reference the arena-backed builder
+/// must match byte for byte.
+struct SeedBuilder {
+    seq_len: usize,
+    overlap: usize,
+    obs_len: usize,
+    actor_id: usize,
+    buf: Vec<Transition>,
+}
+
+impl SeedBuilder {
+    fn new(seq_len: usize, overlap: usize, obs_len: usize, actor_id: usize) -> Self {
+        assert!(overlap < seq_len);
+        Self {
+            seq_len,
+            overlap,
+            obs_len,
+            actor_id,
+            buf: Vec::with_capacity(seq_len),
+        }
+    }
+
+    fn push(&mut self, t: Transition) -> Option<Sequence> {
+        let terminal = t.discount == 0.0;
+        self.buf.push(t);
+        if self.buf.len() == self.seq_len {
+            let seq = self.emit(self.seq_len);
+            self.buf.drain(..self.seq_len - self.overlap);
+            return Some(seq);
+        }
+        if terminal {
+            let seq = self.emit(self.buf.len());
+            self.buf.clear();
+            return Some(seq);
+        }
+        None
+    }
+
+    fn flush(&mut self) -> Option<Sequence> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let seq = self.emit(self.buf.len());
+        self.buf.clear();
+        Some(seq)
+    }
+
+    fn emit(&self, valid: usize) -> Sequence {
+        let t_len = self.seq_len;
+        let mut obs = vec![0.0f32; t_len * self.obs_len];
+        let mut actions = vec![0i32; t_len];
+        let mut rewards = vec![0.0f32; t_len];
+        let mut discounts = vec![0.0f32; t_len];
+        for (i, tr) in self.buf.iter().take(valid).enumerate() {
+            obs[i * self.obs_len..(i + 1) * self.obs_len].copy_from_slice(&tr.obs);
+            actions[i] = tr.action;
+            rewards[i] = tr.reward;
+            discounts[i] = tr.discount;
+        }
+        Sequence {
+            obs,
+            actions,
+            rewards,
+            discounts,
+            h0: self.buf[0].h.clone(),
+            c0: self.buf[0].c.clone(),
+            actor_id: self.actor_id,
+            valid_len: valid,
+        }
+    }
+}
+
+#[test]
+fn prop_pooled_slice_builder_matches_seed_push_path_byte_for_byte() {
+    // The tentpole equivalence: the arena-backed builder fed borrowed
+    // rows through a recycling pool must emit sequences byte-identical
+    // to the seed's owned-Transition path across randomized episode
+    // lengths, terminals, overlaps, and flush points.
+    forall(60, |g| {
+        let seq_len = g.usize(2..12);
+        let overlap = g.usize(0..seq_len);
+        let obs_len = g.usize(1..6);
+        let hidden = g.usize(1..5);
+        let actor_id = g.usize(0..9);
+        let pool = Arc::new(SequencePool::with_capacity(64));
+        let mut golden = SeedBuilder::new(seq_len, overlap, obs_len, actor_id);
+        let mut arena =
+            SequenceBuilder::new(seq_len, overlap, obs_len, hidden, actor_id)
+                .with_pool(pool.clone());
+        let n = g.usize(1..250);
+        let mut emitted = 0u32;
+        for i in 0..n {
+            let terminal = g.chance(0.08);
+            let obs: Vec<f32> =
+                (0..obs_len).map(|k| (i * 7 + k) as f32 * 0.25).collect();
+            let h: Vec<f32> =
+                (0..hidden).map(|k| (i * 3 + k) as f32 * 0.5).collect();
+            let c: Vec<f32> =
+                (0..hidden).map(|k| (i * 5 + k) as f32 * -0.5).collect();
+            let reward = i as f32 * 0.125;
+            let discount = if terminal { 0.0 } else { 0.93 };
+            let a = arena.push_slices(&obs, i as i32, reward, discount, &h, &c);
+            let b = golden.push(Transition {
+                obs,
+                action: i as i32,
+                reward,
+                discount,
+                h,
+                c,
+            });
+            match (a, b) {
+                (Some(x), Some(y)) => {
+                    prop_assert(
+                        x == y,
+                        &format!("sequence diverged at step {i}"),
+                    )?;
+                    emitted += 1;
+                    // Recycle through the pool so later emits exercise
+                    // reused (stale-content) buffers.
+                    pool.put(x);
+                }
+                (None, None) => {}
+                _ => return Err(format!("emit timing diverged at step {i}")),
+            }
+        }
+        let fa = arena.flush();
+        let fb = golden.flush();
+        prop_assert(fa == fb, "flush diverged")?;
+        prop_assert(
+            arena.buffered() == golden.buf.len(),
+            "buffered count diverged",
+        )?;
+        if emitted > 2 {
+            prop_assert(pool.hits() > 0, "pool never recycled")?;
+        }
+        Ok(())
+    });
+}
 
 #[test]
 fn prop_sumtree_total_equals_leaf_sum_under_any_op_sequence() {
