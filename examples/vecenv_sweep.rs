@@ -17,7 +17,8 @@
 //! Flags: --actors 1,2,4  --envs 1,2,4,8  --depths 1,2  --steps N
 //!        --env NAME  --infer-latency-us L  --json PATH.
 //!
-//! `--json PATH` appends the measured steps/s grid (plus a unix
+//! `--json PATH` appends the measured grid (env steps/s, mean/last
+//! batch occupancy, batcher launches/s, learner steps/s, plus a unix
 //! timestamp) to a JSON array at PATH — the repo's perf trajectory
 //! (`BENCH_vecenv.json`) accumulates one entry per recorded run.
 
@@ -109,12 +110,14 @@ fn main() -> anyhow::Result<()> {
         "envs in flight",
         "env steps/s",
         "mean batch",
+        "batcher/s",
+        "last batch",
         "learner steps/s",
         "episodes",
     ]);
     let mut csv = String::from(
         "actors,envs_per_actor,pipeline_depth,total_envs,env_steps_per_sec,\
-         mean_batch,learner_steps_per_sec\n",
+         mean_batch,batcher_steps_per_sec,last_batch_size,learner_steps_per_sec\n",
     );
     for &actors in &actor_counts {
         for &envs in &env_counts {
@@ -135,7 +138,8 @@ fn main() -> anyhow::Result<()> {
                     MockModel::new(dims, 11)
                         .with_infer_latency(Duration::from_micros(latency_us)),
                 ));
-                let report = coordinator::run(&cfg, backend, Registry::new())?;
+                let metrics = Registry::new();
+                let report = coordinator::run(&cfg, backend, metrics.clone())?;
                 if let Some(e) = &report.first_error {
                     anyhow::bail!(
                         "grid point actors={actors} envs={envs} depth={depth} \
@@ -144,6 +148,12 @@ fn main() -> anyhow::Result<()> {
                 }
                 let learner_rate = report.learner.steps as f64
                     / report.elapsed_seconds.max(1e-9);
+                // Batcher cadence + closing occupancy: launches/sec and
+                // the size of the last formed batch — the occupancy
+                // column of the BENCH_vecenv.json perf trajectory.
+                let batcher_rate = report.inference_batches as f64
+                    / report.elapsed_seconds.max(1e-9);
+                let last_batch = metrics.gauge("batcher.last_batch_size").get();
                 t.row(&[
                     actors.to_string(),
                     envs.to_string(),
@@ -151,11 +161,14 @@ fn main() -> anyhow::Result<()> {
                     report.total_envs.to_string(),
                     format!("{:.0}", report.env_steps_per_sec),
                     format!("{:.1}", report.mean_batch_occupancy),
+                    format!("{batcher_rate:.0}"),
+                    format!("{last_batch:.0}"),
                     format!("{learner_rate:.1}"),
                     report.episodes.to_string(),
                 ]);
                 csv.push_str(&format!(
-                    "{actors},{envs},{depth},{},{},{},{learner_rate}\n",
+                    "{actors},{envs},{depth},{},{},{},{batcher_rate},\
+                     {last_batch},{learner_rate}\n",
                     report.total_envs,
                     report.env_steps_per_sec,
                     report.mean_batch_occupancy
@@ -167,6 +180,8 @@ fn main() -> anyhow::Result<()> {
                     ("total_envs", report.total_envs.into()),
                     ("env_steps_per_sec", report.env_steps_per_sec.into()),
                     ("mean_batch", report.mean_batch_occupancy.into()),
+                    ("batcher_steps_per_sec", batcher_rate.into()),
+                    ("last_batch_size", last_batch.into()),
                     ("learner_steps_per_sec", learner_rate.into()),
                 ]));
             }

@@ -120,6 +120,20 @@ impl Default for BatcherConfig {
 }
 
 impl BatcherConfig {
+    /// Launch shape for a flush of `rows`: the smallest configured
+    /// bucket that fits (the padded-AOT ladder; DESIGN.md §5). A
+    /// validated config always has a bucket >= any flush (`max_batch`
+    /// is the largest bucket and flushes never exceed it); the
+    /// fallback is defensive. `SystemModel::launch_size` mirrors this
+    /// rule on the simulator side (pinned by a unit test below).
+    pub fn launch_size(&self, rows: usize) -> usize {
+        self.batch_sizes
+            .iter()
+            .copied()
+            .find(|&b| b >= rows)
+            .unwrap_or(self.max_batch)
+    }
+
     pub fn from_value(v: &Value) -> Self {
         let d = Self::default();
         let batch_sizes = v
@@ -138,6 +152,11 @@ impl BatcherConfig {
     pub fn validate(&self) -> Result<(), ConfigError> {
         if self.batch_sizes.is_empty() {
             return Err(ConfigError::Invalid("batch_sizes empty".into()));
+        }
+        if self.batch_sizes[0] == 0 {
+            return Err(ConfigError::Invalid(
+                "batch_sizes must be >= 1 (each is a compiled launch shape)".into(),
+            ));
         }
         if !self.batch_sizes.windows(2).all(|w| w[0] < w[1]) {
             return Err(ConfigError::Invalid(
@@ -863,6 +882,37 @@ hw_threads = 40
         b.batch_sizes = vec![1, 8];
         b.max_batch = 64;
         assert!(b.validate().is_err());
+        // A zero bucket is not a compilable launch shape.
+        b.batch_sizes = vec![0, 64];
+        assert!(b.validate().is_err());
+        // The seed flush policy: one bucket equal to the cap.
+        b.batch_sizes = vec![64];
+        b.validate().unwrap();
+    }
+
+    #[test]
+    fn launch_size_rounds_up_to_the_smallest_fitting_bucket() {
+        // The one bucket-rounding rule, shared in spirit with
+        // `SystemModel::launch_size`: smallest bucket >= the flush.
+        let b = BatcherConfig {
+            max_batch: 64,
+            timeout_us: 500,
+            batch_sizes: vec![1, 8, 32, 64],
+        };
+        assert_eq!(b.launch_size(1), 1);
+        assert_eq!(b.launch_size(2), 8);
+        assert_eq!(b.launch_size(8), 8);
+        assert_eq!(b.launch_size(9), 32);
+        assert_eq!(b.launch_size(33), 64);
+        assert_eq!(b.launch_size(64), 64);
+        let cap_only = BatcherConfig {
+            max_batch: 4,
+            timeout_us: 500,
+            batch_sizes: vec![4],
+        };
+        for n in 1..=4 {
+            assert_eq!(cap_only.launch_size(n), 4);
+        }
     }
 
     #[test]

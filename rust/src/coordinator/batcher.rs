@@ -4,63 +4,146 @@
 //! channel; the batcher thread greedily coalesces pending rows into
 //! batches of up to `max_batch`, flushing a partial batch after
 //! `timeout_us` so tail latency stays bounded when few actors are
-//! running. Each flushed batch becomes one `Backend::infer` call (one
-//! padded AOT executable launch), and the reply rows are routed back to
-//! the submitting actors.
+//! running. Each flushed batch becomes one backend launch, and the
+//! reply rows are routed back to the submitting actors.
 //!
-//! Protocol (since the policy layer, DESIGN.md §5): a vecenv actor's E
-//! rows travel as **one multi-row [`InferItem`] carrying contiguous
-//! slabs**, with a single reply channel per submission. The batcher may
-//! split a submission across several flushed batches (it never exceeds
-//! `max_batch` rows per GPU call); each batch sends one [`ReplyChunk`]
-//! back with `slot0`-addressed rows, and the submitter's `wait` scatters
-//! them into its `[E, hidden]` slabs. Inference failures are surfaced as
-//! error chunks plus a `batcher.errors` counter — never a silent drop.
+//! Protocol (the pooled slab protocol, DESIGN.md §5): a vecenv actor's
+//! E rows travel as one multi-row [`InferItem`] whose payload is a
+//! recycled [`InferSlab`] drawn from the handle's shared [`SlabPool`]
+//! (fed back by the batcher once the rows are copied into the assembly
+//! request). Replies ride a **persistent per-client mailbox** — no
+//! fresh channel per step — as [`ReplyChunk`]s that address a row range
+//! ([`ReplyRange`]) inside an `Arc`-shared output slab the batcher
+//! recycles once every chunk holder has scattered and dropped it. The
+//! batcher may split a submission across several flushed batches (it
+//! never exceeds `max_batch` rows per launch); chunks are `slot0`-
+//! addressed and `ticket`-tagged so one mailbox serves several
+//! in-flight submissions. In steady state the whole round-trip touches
+//! the allocator zero times (hard-asserted by `micro_batcher --quick`'s
+//! counting global allocator). Inference failures are surfaced as error
+//! chunks plus a `batcher.errors` counter — never a silent drop.
+//!
+//! Launch shapes model fixed-shape AOT executables: a flush of `n` rows
+//! is zero-padded up to the smallest configured `batcher.batch_sizes`
+//! bucket `>= n` (the padded rows are computed and discarded, so the
+//! reply stream is byte-identical to exact-shape launches — pinned by
+//! `tests/batcher_equivalence.rs`). `batch_sizes = [max_batch]` pads
+//! every partial flush to the cap; a denser ladder trades more compiled
+//! executables for less padding waste. `batcher.padded_rows` counts the
+//! waste; `batcher.last_launch_size` is the padded shape.
 //!
 //! Policy trade-off (paper Fig. 3 territory): a larger max_batch raises
 //! GPU efficiency; a longer timeout raises occupancy at low actor counts
-//! but adds latency to every actor's step. `micro_batcher` benches the
-//! policy surface.
+//! but adds latency to every actor's step; a denser bucket ladder cuts
+//! padding waste. `micro_batcher` benches the policy surface.
 
 use crate::config::BatcherConfig;
+use crate::exec::channel::{channel, mailbox, Receiver, RecvTimeoutError, Sender};
 use crate::metrics::Registry;
-use crate::runtime::{Backend, InferRequest};
+use crate::runtime::{Backend, InferReply, InferRequest, InferSlices, ModelDims};
 use std::collections::VecDeque;
-use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// One actor submission: `rows` observation/recurrent-state rows
-/// travelling together as contiguous row-major slabs. Replies arrive on
-/// `reply` as one or more [`ReplyChunk`]s (several when the rows span
-/// more than one flushed batch).
-pub struct InferItem {
-    pub actor: usize,
-    pub rows: usize,
-    /// `[rows * obs_len]` row-major observation slab.
+/// Contiguous row-major input slabs for one submission, recycled
+/// through the [`SlabPool`]: `[rows * obs_len]` observations plus
+/// `[rows * hidden]` recurrent state.
+#[derive(Default)]
+pub struct InferSlab {
     pub obs: Vec<f32>,
-    /// `[rows * hidden]` recurrent-state slabs.
     pub h: Vec<f32>,
     pub c: Vec<f32>,
-    pub reply: mpsc::Sender<ReplyChunk>,
+}
+
+impl InferSlab {
+    fn clear(&mut self) {
+        self.obs.clear();
+        self.h.clear();
+        self.c.clear();
+    }
+
+    /// Refill from borrowed rows, reusing the slab's capacity (the
+    /// policy client's copy into the submission — the only copy the
+    /// input side of the round-trip makes).
+    pub fn fill_from(&mut self, obs: &[f32], h: &[f32], c: &[f32]) {
+        self.clear();
+        self.obs.extend_from_slice(obs);
+        self.h.extend_from_slice(h);
+        self.c.extend_from_slice(c);
+    }
+}
+
+/// Free list of recycled input slabs, shared between every policy
+/// client and the batcher thread (which feeds slabs back once their
+/// rows are copied into the assembly request). Capacities settle at
+/// the largest submission each slab has carried, after which the
+/// acquire/release cycle never allocates.
+#[derive(Default)]
+pub struct SlabPool {
+    free: Mutex<Vec<InferSlab>>,
+}
+
+impl SlabPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pop a recycled slab (or a fresh empty one while warming up).
+    pub fn acquire(&self) -> InferSlab {
+        self.free.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Feed a slab back for reuse.
+    pub fn release(&self, mut slab: InferSlab) {
+        slab.clear();
+        self.free.lock().unwrap().push(slab);
+    }
+
+    /// Slabs currently parked in the free list (tests/observability).
+    pub fn free_count(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+/// One actor submission: `rows` rows travelling as one recycled
+/// [`InferSlab`]. Replies arrive on the submitter's mailbox as one or
+/// more [`ReplyChunk`]s (several when the rows span more than one
+/// flushed batch), each echoing `ticket`.
+pub struct InferItem {
+    pub actor: usize,
+    /// Caller-chosen demux tag echoed on every reply chunk, letting one
+    /// persistent mailbox serve several in-flight submissions. The
+    /// policy client uses a monotone per-submission counter so chunks
+    /// from a returned (e.g. errored-out) generation can never be
+    /// mistaken for a live one.
+    pub ticket: usize,
+    pub rows: usize,
+    pub slab: InferSlab,
+    /// Minted from the submitter's persistent mailbox
+    /// ([`crate::exec::channel::Receiver::sender`]); the mailbox reads
+    /// as disconnected only when no submission holds a route to it.
+    pub reply: Sender<ReplyChunk>,
 }
 
 /// A contiguous run of reply rows routed back to one submission.
 pub struct ReplyChunk {
+    /// The submission's demux tag, echoed back.
+    pub ticket: usize,
     /// First row (slot) of the submission this chunk covers.
     pub slot0: usize,
     pub rows: usize,
-    /// Row-major `[rows * A]` / `[rows * H]` slabs, or the inference
+    /// A row range in the batch's shared output slab, or the inference
     /// error message.
-    pub result: Result<ChunkData, String>,
+    pub result: Result<ReplyRange, String>,
 }
 
-/// Payload of a successful reply chunk.
-pub struct ChunkData {
-    pub q: Vec<f32>,
-    pub h: Vec<f32>,
-    pub c: Vec<f32>,
+/// `rows` reply rows starting at row `row0` of a shared output slab.
+/// Holding the `Arc` keeps the slab pinned; the batcher reuses it once
+/// every chunk holder has scattered and dropped its clone.
+pub struct ReplyRange {
+    pub slab: Arc<InferReply>,
+    pub row0: usize,
 }
 
 /// Per-actor single-row inference result (convenience API / tests).
@@ -74,23 +157,57 @@ pub struct ActorReply {
 /// Handle used by actors to submit observation slabs.
 #[derive(Clone)]
 pub struct BatcherHandle {
-    tx: mpsc::Sender<InferItem>,
+    tx: Sender<InferItem>,
+    dims: ModelDims,
+    pool: Arc<SlabPool>,
     first_error: Arc<Mutex<Option<String>>>,
 }
 
 impl BatcherHandle {
-    /// Queue a multi-row submission. Replies arrive on `item.reply`.
+    /// Model dimensions submissions are validated against.
+    pub fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    /// The shared input-slab pool (policy clients draw submission slabs
+    /// from it; the batcher feeds them back).
+    pub fn slab_pool(&self) -> Arc<SlabPool> {
+        self.pool.clone()
+    }
+
+    /// Queue a multi-row submission. Replies arrive on the mailbox
+    /// `item.reply` was minted from.
+    ///
+    /// Exact-dims validation happens here — once, at the call site, so
+    /// a malformed slab fails the submitting actor immediately with its
+    /// id in the message (the batcher loop itself trusts the queue).
     pub fn submit(&self, item: InferItem) -> anyhow::Result<()> {
-        anyhow::ensure!(item.rows > 0, "submission with no rows");
-        anyhow::ensure!(
-            item.obs.len() % item.rows == 0
-                && item.h.len() % item.rows == 0
-                && item.c.len() % item.rows == 0,
-            "submission slabs must be divisible by rows"
-        );
-        self.tx
-            .send(item)
-            .map_err(|_| anyhow::anyhow!("{}", self.gone_message()))
+        let d = &self.dims;
+        let ok = item.rows > 0
+            && item.slab.obs.len() == item.rows * d.obs_len
+            && item.slab.h.len() == item.rows * d.hidden
+            && item.slab.c.len() == item.rows * d.hidden;
+        if !ok {
+            let msg = format!(
+                "malformed submission from actor {}: {} rows, obs {}, h {}, c {} \
+                 (model wants obs {}/row, hidden {}/row)",
+                item.actor,
+                item.rows,
+                item.slab.obs.len(),
+                item.slab.h.len(),
+                item.slab.c.len(),
+                d.obs_len,
+                d.hidden
+            );
+            self.pool.release(item.slab);
+            anyhow::bail!(msg);
+        }
+        self.tx.send(item).map_err(|item| {
+            // Recycle the slab even on a dead batcher so the pool's
+            // steady state survives shutdown races.
+            self.pool.release(item.slab);
+            anyhow::anyhow!("{}", self.gone_message())
+        })
     }
 
     /// First inference failure the batcher recorded, if any.
@@ -108,7 +225,9 @@ impl BatcherHandle {
     }
 
     /// Blocking single-row round-trip: submit and wait for the routed
-    /// reply (tests / micro-benches; actors use the policy layer).
+    /// reply (tests / micro-benches; actors use the policy layer, which
+    /// holds a persistent mailbox — this convenience path allocates a
+    /// fresh one per call).
     pub fn infer(
         &self,
         actor: usize,
@@ -116,24 +235,29 @@ impl BatcherHandle {
         h: Vec<f32>,
         c: Vec<f32>,
     ) -> anyhow::Result<ActorReply> {
-        let (rtx, rrx) = mpsc::channel();
+        let mb = mailbox::<ReplyChunk>(2);
+        let mut slab = self.pool.acquire();
+        slab.fill_from(&obs, &h, &c);
         self.submit(InferItem {
             actor,
+            ticket: 0,
             rows: 1,
-            obs,
-            h,
-            c,
-            reply: rtx,
+            slab,
+            reply: mb.sender(),
         })?;
-        let chunk = rrx
+        let chunk = mb
             .recv()
-            .map_err(|_| anyhow::anyhow!("{}", self.gone_message()))?;
+            .ok_or_else(|| anyhow::anyhow!("{}", self.gone_message()))?;
         match chunk.result {
-            Ok(d) => Ok(ActorReply {
-                q: d.q,
-                h: d.h,
-                c: d.c,
-            }),
+            Ok(r) => {
+                let d = &self.dims;
+                let (a, hd, r0) = (d.num_actions, d.hidden, r.row0);
+                Ok(ActorReply {
+                    q: r.slab.q[r0 * a..(r0 + 1) * a].to_vec(),
+                    h: r.slab.h[r0 * hd..(r0 + 1) * hd].to_vec(),
+                    c: r.slab.c[r0 * hd..(r0 + 1) * hd].to_vec(),
+                })
+            }
             Err(e) => Err(anyhow::anyhow!("batcher inference failed: {e}")),
         }
     }
@@ -151,16 +275,24 @@ impl Batcher {
         backend: Backend,
         metrics: Registry,
     ) -> (Batcher, BatcherHandle) {
-        let (tx, rx) = mpsc::channel::<InferItem>();
+        let (tx, rx) = channel::<InferItem>(256);
+        let dims = backend.dims();
+        let pool = Arc::new(SlabPool::new());
         let first_error = Arc::new(Mutex::new(None));
         let cell = first_error.clone();
+        let loop_pool = pool.clone();
         let join = std::thread::Builder::new()
             .name("rlarch-batcher".into())
-            .spawn(move || run_batcher(cfg, backend, metrics, rx, cell))
+            .spawn(move || run_batcher(cfg, backend, metrics, rx, loop_pool, cell))
             .expect("spawn batcher");
         (
             Batcher { join: Some(join) },
-            BatcherHandle { tx, first_error },
+            BatcherHandle {
+                tx,
+                dims,
+                pool,
+                first_error,
+            },
         )
     }
 
@@ -186,49 +318,63 @@ struct Open {
     consumed: usize,
 }
 
+/// One reply route of the in-flight batch: `rows` rows going back to a
+/// submission, starting at its slot `slot0`.
+struct Route {
+    reply: Sender<ReplyChunk>,
+    ticket: usize,
+    slot0: usize,
+    rows: usize,
+}
+
 fn run_batcher(
     cfg: BatcherConfig,
     backend: Backend,
     metrics: Registry,
-    rx: mpsc::Receiver<InferItem>,
+    rx: Receiver<InferItem>,
+    pool: Arc<SlabPool>,
     first_error: Arc<Mutex<Option<String>>>,
 ) {
     let dims = backend.dims();
+    let (ol, hd) = (dims.obs_len, dims.hidden);
     let timeout = Duration::from_micros(cfg.timeout_us);
     let batches = metrics.counter("batcher.batches");
     let items = metrics.counter("batcher.items");
     let errors = metrics.counter("batcher.errors");
     let flush_timeout = metrics.counter("batcher.flush_timeout");
     let flush_full = metrics.counter("batcher.flush_full");
+    let padded_rows = metrics.counter("batcher.padded_rows");
     let occupancy = metrics.gauge("batcher.last_batch_size");
+    let launch_size = metrics.gauge("batcher.last_launch_size");
     let infer_time = metrics.timer("batcher.infer_seconds");
     let wait_time = metrics.timer("batcher.collect_seconds");
 
     let mut queue: VecDeque<Open> = VecDeque::new();
     let mut rows_avail = 0usize;
+    // Recycled assembly state: the request the batch is gathered into,
+    // the reply routing table, and the shared output slabs (an output
+    // slab is free again once its `Arc` is unique — every chunk holder
+    // scattered and dropped it). All of it reaches a fixed capacity
+    // after warmup; the steady-state loop never allocates.
+    let mut req = InferRequest {
+        n: 0,
+        h: Vec::new(),
+        c: Vec::new(),
+        obs: Vec::new(),
+    };
+    let mut routes: Vec<Route> = Vec::new();
+    let mut reply_slabs: Vec<Arc<InferReply>> = Vec::new();
 
-    // Accept a submission into the queue; malformed slabs are refused
-    // with an error chunk instead of poisoning the batch assembly.
+    // Accept a submission into the queue. Exact dims were validated at
+    // `BatcherHandle::submit` (the call site); the loop trusts them.
     let push = |queue: &mut VecDeque<Open>, rows_avail: &mut usize, item: InferItem| {
-        let ok = item.rows > 0
-            && item.obs.len() == item.rows * dims.obs_len
-            && item.h.len() == item.rows * dims.hidden
-            && item.c.len() == item.rows * dims.hidden;
-        if !ok {
-            let _ = item.reply.send(ReplyChunk {
-                slot0: 0,
-                rows: item.rows,
-                result: Err(format!(
-                    "malformed submission from actor {}: {} rows, obs {}, h {}, c {}",
-                    item.actor,
-                    item.rows,
-                    item.obs.len(),
-                    item.h.len(),
-                    item.c.len()
-                )),
-            });
-            return;
-        }
+        debug_assert!(
+            item.rows > 0
+                && item.slab.obs.len() == item.rows * ol
+                && item.slab.h.len() == item.rows * hd
+                && item.slab.c.len() == item.rows * hd,
+            "submission bypassed BatcherHandle::submit validation"
+        );
         *rows_avail += item.rows;
         queue.push_back(Open { item, consumed: 0 });
     };
@@ -238,11 +384,8 @@ fn run_batcher(
         // an oversized submission flow straight into the next one).
         if rows_avail == 0 {
             match rx.recv() {
-                Ok(item) => push(&mut queue, &mut rows_avail, item),
-                Err(_) => return, // all handles dropped
-            }
-            if rows_avail == 0 {
-                continue; // the submission was malformed
+                Some(item) => push(&mut queue, &mut rows_avail, item),
+                None => return, // all handles dropped
             }
         }
         let t_collect = Instant::now();
@@ -255,11 +398,11 @@ fn run_batcher(
             }
             match rx.recv_timeout(deadline - now) {
                 Ok(item) => push(&mut queue, &mut rows_avail, item),
-                Err(mpsc::RecvTimeoutError::Timeout) => {
+                Err(RecvTimeoutError::Timeout) => {
                     flush_timeout.inc();
                     break;
                 }
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
             }
         }
         if rows_avail >= cfg.max_batch {
@@ -267,64 +410,115 @@ fn run_batcher(
         }
         wait_time.record(t_collect.elapsed().as_secs_f64());
 
-        // Assemble up to max_batch rows off the queue front, consuming
-        // submissions partially where needed (rows > max_batch split
-        // across consecutive full batches, in slot order).
+        // Assemble up to max_batch rows off the queue front into the
+        // recycled request, consuming submissions partially where needed
+        // (rows > max_batch split across consecutive full batches, in
+        // slot order). Fully-consumed submissions feed their input slab
+        // back to the pool — the request holds the copies.
         let n = rows_avail.min(cfg.max_batch);
-        let mut req = InferRequest {
-            n,
-            h: Vec::with_capacity(n * dims.hidden),
-            c: Vec::with_capacity(n * dims.hidden),
-            obs: Vec::with_capacity(n * dims.obs_len),
-        };
-        // (reply sender, slot0 within the submission, rows in this batch)
-        let mut routes: Vec<(mpsc::Sender<ReplyChunk>, usize, usize)> = Vec::new();
+        req.h.clear();
+        req.c.clear();
+        req.obs.clear();
+        routes.clear();
         let mut taken = 0usize;
         while taken < n {
             let open = queue.front_mut().expect("rows_avail tracks queue rows");
             let k = (open.item.rows - open.consumed).min(n - taken);
             let (a, b) = (open.consumed, open.consumed + k);
-            req.h.extend_from_slice(&open.item.h[a * dims.hidden..b * dims.hidden]);
-            req.c.extend_from_slice(&open.item.c[a * dims.hidden..b * dims.hidden]);
-            req.obs
-                .extend_from_slice(&open.item.obs[a * dims.obs_len..b * dims.obs_len]);
-            routes.push((open.item.reply.clone(), open.consumed, k));
+            req.h.extend_from_slice(&open.item.slab.h[a * hd..b * hd]);
+            req.c.extend_from_slice(&open.item.slab.c[a * hd..b * hd]);
+            req.obs.extend_from_slice(&open.item.slab.obs[a * ol..b * ol]);
+            routes.push(Route {
+                reply: open.item.reply.clone(),
+                ticket: open.item.ticket,
+                slot0: open.consumed,
+                rows: k,
+            });
             open.consumed += k;
             taken += k;
             if open.consumed == open.item.rows {
-                queue.pop_front();
+                let done = queue.pop_front().expect("front exists");
+                pool.release(done.item.slab);
             }
         }
         rows_avail -= n;
 
-        let reply = infer_time.time(|| backend.infer(req));
+        // Padded-bucket launch: round the flush up to the smallest AOT
+        // bucket that fits (`BatcherConfig::launch_size` — the one copy
+        // of the rounding rule, mirrored by `SystemModel::launch_size`
+        // on the simulator side), zero-filling the pad rows (computed
+        // and discarded — the reply stream is invariant to the launch
+        // shape).
+        let launch = cfg.launch_size(n);
+        if launch > n {
+            req.h.resize(launch * hd, 0.0);
+            req.c.resize(launch * hd, 0.0);
+            req.obs.resize(launch * ol, 0.0);
+            padded_rows.add((launch - n) as u64);
+        }
+        req.n = launch;
+
+        // A free output slab: any whose Arc is unique again (all chunk
+        // holders scattered and dropped). Growth beyond the warmed-up
+        // set only happens while receivers still hold older replies.
+        let mut free = None;
+        for (i, slab) in reply_slabs.iter_mut().enumerate() {
+            if Arc::get_mut(slab).is_some() {
+                free = Some(i);
+                break;
+            }
+        }
+        let idx = free.unwrap_or_else(|| {
+            reply_slabs.push(Arc::new(InferReply {
+                q: Vec::new(),
+                h: Vec::new(),
+                c: Vec::new(),
+            }));
+            reply_slabs.len() - 1
+        });
+        let result = infer_time.time(|| {
+            let out = Arc::get_mut(&mut reply_slabs[idx])
+                .expect("free output slab is uniquely held");
+            backend.infer_into(
+                InferSlices {
+                    n: launch,
+                    h: &req.h,
+                    c: &req.c,
+                    obs: &req.obs,
+                },
+                out,
+            )
+        });
         batches.inc();
         items.add(n as u64);
         occupancy.set(n as f64);
+        launch_size.set(launch as f64);
 
-        match reply {
-            Ok(out) => {
-                let a = dims.num_actions;
-                let hd = dims.hidden;
+        match result {
+            Ok(()) => {
+                let slab = reply_slabs[idx].clone();
                 let mut off = 0usize;
-                for (tx, slot0, k) in routes {
-                    let _ = tx.send(ReplyChunk {
-                        slot0,
-                        rows: k,
-                        result: Ok(ChunkData {
-                            q: out.q[off * a..(off + k) * a].to_vec(),
-                            h: out.h[off * hd..(off + k) * hd].to_vec(),
-                            c: out.c[off * hd..(off + k) * hd].to_vec(),
+                for r in &routes {
+                    let _ = r.reply.send(ReplyChunk {
+                        ticket: r.ticket,
+                        slot0: r.slot0,
+                        rows: r.rows,
+                        result: Ok(ReplyRange {
+                            slab: slab.clone(),
+                            row0: off,
                         }),
                     });
-                    off += k;
+                    off += r.rows;
                 }
             }
             Err(e) => {
                 // Inference failure: fail this batch's submissions and
                 // everything still queued with the message, record it,
                 // and exit — waiters see the error, later submitters see
-                // a descriptive `gone_message`.
+                // a descriptive `gone_message`. Items still in the input
+                // channel are dropped when `rx` drops, which releases
+                // their mailbox routes so those waiters see disconnect
+                // (mapped to the same message).
                 errors.inc();
                 let msg = e.to_string();
                 let mut cell = first_error.lock().unwrap();
@@ -332,15 +526,17 @@ fn run_batcher(
                     *cell = Some(msg.clone());
                 }
                 drop(cell);
-                for (tx, slot0, k) in routes {
-                    let _ = tx.send(ReplyChunk {
-                        slot0,
-                        rows: k,
+                for r in &routes {
+                    let _ = r.reply.send(ReplyChunk {
+                        ticket: r.ticket,
+                        slot0: r.slot0,
+                        rows: r.rows,
                         result: Err(msg.clone()),
                     });
                 }
                 for open in queue.drain(..) {
                     let _ = open.item.reply.send(ReplyChunk {
+                        ticket: open.item.ticket,
                         slot0: open.consumed,
                         rows: open.item.rows - open.consumed,
                         result: Err(msg.clone()),
@@ -385,15 +581,20 @@ mod tests {
         rows: usize,
         obs: Vec<f32>,
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>, usize) {
-        let (rtx, rrx) = mpsc::channel();
+        let mb = mailbox::<ReplyChunk>(4);
+        let mut slab = handle.slab_pool().acquire();
+        slab.fill_from(
+            &obs,
+            &vec![0.0; rows * dims.hidden],
+            &vec![0.0; rows * dims.hidden],
+        );
         handle
             .submit(InferItem {
                 actor: 0,
+                ticket: 0,
                 rows,
-                obs,
-                h: vec![0.0; rows * dims.hidden],
-                c: vec![0.0; rows * dims.hidden],
-                reply: rtx,
+                slab,
+                reply: mb.sender(),
             })
             .unwrap();
         let mut q = vec![0.0f32; rows * dims.num_actions];
@@ -401,13 +602,14 @@ mod tests {
         let mut c = vec![0.0f32; rows * dims.hidden];
         let mut done = 0usize;
         let mut chunks = 0usize;
+        let (na, hd) = (dims.num_actions, dims.hidden);
         while done < rows {
-            let chunk = rrx.recv().expect("reply chunk");
+            let chunk = mb.recv().expect("reply chunk");
             let d = chunk.result.expect("inference ok");
-            let (s, k) = (chunk.slot0, chunk.rows);
-            q[s * dims.num_actions..(s + k) * dims.num_actions].copy_from_slice(&d.q);
-            h[s * dims.hidden..(s + k) * dims.hidden].copy_from_slice(&d.h);
-            c[s * dims.hidden..(s + k) * dims.hidden].copy_from_slice(&d.c);
+            let (s, k, r0) = (chunk.slot0, chunk.rows, d.row0);
+            q[s * na..(s + k) * na].copy_from_slice(&d.slab.q[r0 * na..(r0 + k) * na]);
+            h[s * hd..(s + k) * hd].copy_from_slice(&d.slab.h[r0 * hd..(r0 + k) * hd]);
+            c[s * hd..(s + k) * hd].copy_from_slice(&d.slab.c[r0 * hd..(r0 + k) * hd]);
             done += k;
             chunks += 1;
         }
@@ -428,6 +630,10 @@ mod tests {
         assert_eq!(m.counter("batcher.batches").get(), 1);
         assert_eq!(m.counter("batcher.items").get(), 1);
         assert!(m.counter("batcher.flush_timeout").get() >= 1);
+        // One bucket [8]: the 1-row flush padded up to the cap.
+        assert_eq!(m.counter("batcher.padded_rows").get(), 7);
+        assert_eq!(m.gauge("batcher.last_launch_size").get(), 8.0);
+        assert_eq!(m.gauge("batcher.last_batch_size").get(), 1.0);
     }
 
     #[test]
@@ -503,6 +709,8 @@ mod tests {
         assert_eq!(chunks, 1);
         assert_eq!(m.counter("batcher.items").get(), 5);
         assert_eq!(m.counter("batcher.batches").get(), 1);
+        // Bucket [8]: the 5-row flush launched as 8 with 3 pad rows.
+        assert_eq!(m.counter("batcher.padded_rows").get(), 3);
     }
 
     #[test]
@@ -562,6 +770,121 @@ mod tests {
         assert!(m.counter("batcher.batches").get() >= 4);
         assert_eq!(m.counter("batcher.items").get(), 16);
         assert!(m.gauge("batcher.last_batch_size").get() <= 4.0);
+        assert!(m.gauge("batcher.last_launch_size").get() <= 4.0);
+    }
+
+    #[test]
+    fn padded_bucket_launch_rounds_partial_flushes_up_the_ladder() {
+        // Ladder [2, 4, 8]: a 3-row flush launches as 4 (1 pad row), a
+        // 1-row flush as 2 — and the replies are byte-identical to
+        // direct exact-shape calls either way.
+        let (backend, dims) = mock_backend();
+        let m = Registry::new();
+        let bc = BatcherConfig {
+            max_batch: 8,
+            timeout_us: 300,
+            batch_sizes: vec![2, 4, 8],
+        };
+        let (batcher, handle) = Batcher::spawn(bc, backend.clone(), m.clone());
+        let mut obs = vec![0.0f32; 3 * dims.obs_len];
+        for i in 0..3 {
+            obs[i * dims.obs_len..(i + 1) * dims.obs_len].fill(0.1 + i as f32 * 0.2);
+        }
+        let (q, _, _, _) = submit_and_gather(&handle, &dims, 3, obs);
+        for i in 0..3 {
+            let direct = backend
+                .infer(InferRequest {
+                    n: 1,
+                    h: vec![0.0; dims.hidden],
+                    c: vec![0.0; dims.hidden],
+                    obs: vec![0.1 + i as f32 * 0.2; dims.obs_len],
+                })
+                .unwrap();
+            assert_eq!(
+                q[i * dims.num_actions..(i + 1) * dims.num_actions],
+                direct.q[..],
+                "padding corrupted row {i}"
+            );
+        }
+        assert_eq!(m.counter("batcher.padded_rows").get(), 1);
+        assert_eq!(m.gauge("batcher.last_launch_size").get(), 4.0);
+        assert_eq!(m.gauge("batcher.last_batch_size").get(), 3.0);
+        let out = handle
+            .infer(0, vec![0.5; dims.obs_len], vec![0.0; 4], vec![0.0; 4])
+            .unwrap();
+        assert_eq!(out.q.len(), 3);
+        assert_eq!(m.gauge("batcher.last_launch_size").get(), 2.0);
+        drop(handle);
+        batcher.join();
+    }
+
+    #[test]
+    fn submit_validates_exact_dims_at_the_call_site() {
+        let (backend, dims) = mock_backend();
+        let m = Registry::new();
+        let (batcher, handle) = Batcher::spawn(cfg(8, 200), backend, m.clone());
+        // Short obs row: must fail synchronously, naming the actor.
+        let mb = mailbox::<ReplyChunk>(2);
+        let mut slab = handle.slab_pool().acquire();
+        slab.fill_from(
+            &vec![0.5; dims.obs_len - 1],
+            &vec![0.0; dims.hidden],
+            &vec![0.0; dims.hidden],
+        );
+        let err = handle
+            .submit(InferItem {
+                actor: 7,
+                ticket: 0,
+                rows: 1,
+                slab,
+                reply: mb.sender(),
+            })
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("malformed submission from actor 7"),
+            "got: {err}"
+        );
+        // The rejected slab went back to the pool, not into the queue.
+        assert!(handle.slab_pool().free_count() >= 1);
+        // Zero rows are rejected the same way.
+        let slab = handle.slab_pool().acquire();
+        let err = handle
+            .submit(InferItem {
+                actor: 3,
+                ticket: 0,
+                rows: 0,
+                slab,
+                reply: mb.sender(),
+            })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("actor 3"), "got: {err}");
+        // The batcher never saw either submission.
+        let out = handle
+            .infer(0, vec![0.5; dims.obs_len], vec![0.0; 4], vec![0.0; 4])
+            .unwrap();
+        assert_eq!(out.q.len(), 3);
+        assert_eq!(m.counter("batcher.items").get(), 1);
+        drop(handle);
+        batcher.join();
+    }
+
+    #[test]
+    fn input_slabs_recycle_through_the_pool() {
+        let (backend, dims) = mock_backend();
+        let m = Registry::new();
+        let (batcher, handle) = Batcher::spawn(cfg(4, 200), backend, m.clone());
+        for _ in 0..8 {
+            handle
+                .infer(0, vec![0.5; dims.obs_len], vec![0.0; 4], vec![0.0; 4])
+                .unwrap();
+        }
+        // Sequential round-trips reuse one slab: after the last reply
+        // the batcher has fed it back.
+        assert_eq!(handle.slab_pool().free_count(), 1);
+        drop(handle);
+        batcher.join();
     }
 
     #[test]

@@ -2,7 +2,10 @@
 //!
 //! Wires the SEED-RL dataflow: N actor threads step environments (CPU
 //! side), a central inference batcher coalesces their observation slabs
-//! into batched accelerator calls, completed sequences buffer in
+//! into padded-bucket accelerator launches (the pooled slab protocol:
+//! recycled submission slabs, persistent reply mailboxes, `Arc`-shared
+//! output slabs — zero allocations per round-trip in steady state;
+//! DESIGN.md §5), completed sequences buffer in
 //! per-actor ingest queues and commit to sharded prioritized replay in
 //! `replay.insert_batch`-sized flushes (slabs recycling through the
 //! shared `SequencePool`; DESIGN.md §8), and the learner thread trains
@@ -27,7 +30,10 @@ pub mod batcher;
 pub mod learner;
 
 pub use actor::ActorStats;
-pub use batcher::{ActorReply, Batcher, BatcherHandle, ChunkData, InferItem, ReplyChunk};
+pub use batcher::{
+    ActorReply, Batcher, BatcherHandle, InferItem, InferSlab, ReplyChunk, ReplyRange,
+    SlabPool,
+};
 pub use learner::{BatchProbe, LearnerStats, assemble_batch, assemble_into};
 
 use crate::config::{InferenceMode, SystemConfig};

@@ -1,0 +1,299 @@
+//! Allocation-free blocking channels for the central inference path.
+//!
+//! `std::sync::mpsc` heap-allocates a queue node on every `send`, which
+//! makes it impossible for a round-trip built on it to pass the
+//! counting-allocator gate (`micro_batcher --quick`). This channel is
+//! the boring alternative: a `Mutex<VecDeque>` plus one `Condvar`. Sends
+//! push into a deque whose capacity settles at the steady-state
+//! in-flight population, so a warmed-up path never enters the allocator;
+//! receivers block on the condvar (timeout-aware, for the batcher's
+//! flush window).
+//!
+//! Two construction patterns:
+//!
+//! * [`channel`] — classic mpsc: the returned [`Sender`] (and its
+//!   clones) keep the channel open; `recv` reports disconnect once every
+//!   sender is gone. The batcher's input queue uses this, mirroring the
+//!   seed's "batcher exits when all handles drop" semantics.
+//! * [`mailbox`] — a receiver with **zero** initial senders; producers
+//!   are minted per message with [`Receiver::sender`]. Disconnect means
+//!   "nothing currently holds a route to this mailbox", which is exactly
+//!   the liveness question a policy client's `wait` needs to ask: every
+//!   in-flight submission holds a minted sender (inside the queued
+//!   `InferItem`, then inside the batcher's routing table), so the
+//!   count only reaches zero when every outstanding submission has been
+//!   answered or dropped — e.g. when the batcher died and drained.
+//!
+//! Dropping the [`Receiver`] closes the channel *and drops everything
+//! still queued*, so values holding resources (minted senders, pooled
+//! slabs) are released promptly instead of idling until the last sender
+//! goes away.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a timed receive returned without a value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecvTimeoutError {
+    /// No message arrived inside the window (senders may still exist).
+    Timeout,
+    /// Queue empty and no sender is alive.
+    Disconnected,
+}
+
+struct State<T> {
+    q: VecDeque<T>,
+    senders: usize,
+    rx_alive: bool,
+}
+
+struct Shared<T> {
+    state: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+/// Producer handle. Cloning registers another sender; dropping the last
+/// one disconnects the receiver.
+pub struct Sender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Consumer handle (single receiver; not cloneable).
+pub struct Receiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Classic mpsc pair. `capacity` presizes the deque (a hint: the queue
+/// still grows if the in-flight population exceeds it — growth is the
+/// warmup the zero-allocation gate excludes).
+pub fn channel<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    let shared = Arc::new(Shared {
+        state: Mutex::new(State {
+            q: VecDeque::with_capacity(capacity),
+            senders: 1,
+            rx_alive: true,
+        }),
+        cv: Condvar::new(),
+    });
+    (
+        Sender {
+            shared: shared.clone(),
+        },
+        Receiver { shared },
+    )
+}
+
+/// A receiver with no initial senders (see the module docs): mint one
+/// per producer with [`Receiver::sender`].
+pub fn mailbox<T>(capacity: usize) -> Receiver<T> {
+    let shared = Arc::new(Shared {
+        state: Mutex::new(State {
+            q: VecDeque::with_capacity(capacity),
+            senders: 0,
+            rx_alive: true,
+        }),
+        cv: Condvar::new(),
+    });
+    Receiver { shared }
+}
+
+impl<T> Sender<T> {
+    /// Queue a value. Returns it back if the receiver is gone.
+    pub fn send(&self, v: T) -> Result<(), T> {
+        let mut st = self.shared.state.lock().unwrap();
+        if !st.rx_alive {
+            return Err(v);
+        }
+        st.q.push_back(v);
+        drop(st);
+        self.shared.cv.notify_one();
+        Ok(())
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.shared.state.lock().unwrap().senders += 1;
+        Sender {
+            shared: self.shared.clone(),
+        }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.senders -= 1;
+        let gone = st.senders == 0;
+        drop(st);
+        if gone {
+            // Wake a receiver blocked in recv so it can see disconnect.
+            self.shared.cv.notify_all();
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Mint a counted producer for this receiver (the mailbox pattern).
+    pub fn sender(&self) -> Sender<T> {
+        self.shared.state.lock().unwrap().senders += 1;
+        Sender {
+            shared: self.shared.clone(),
+        }
+    }
+
+    /// Blocking receive; `None` once the queue is empty and no sender
+    /// is alive.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.q.pop_front() {
+                return Some(v);
+            }
+            if st.senders == 0 {
+                return None;
+            }
+            st = self.shared.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Blocking receive with a deadline window.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvTimeoutError> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.q.pop_front() {
+                return Ok(v);
+            }
+            if st.senders == 0 {
+                return Err(RecvTimeoutError::Disconnected);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvTimeoutError::Timeout);
+            }
+            let (guard, _) = self
+                .shared
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+        }
+    }
+
+    /// Non-blocking receive (tests / drain loops).
+    pub fn try_recv(&self) -> Option<T> {
+        self.shared.state.lock().unwrap().q.pop_front()
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.rx_alive = false;
+        // Take the queued values out, then drop them AFTER releasing
+        // the lock: anything they hold (minted mailbox senders, pooled
+        // slabs) must release immediately — and a queued value owning a
+        // Sender back to *this* channel would self-deadlock if its Drop
+        // re-locked the state mutex we are holding.
+        let drained = std::mem::take(&mut st.q);
+        drop(st);
+        drop(drained);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order_across_threads() {
+        let (tx, rx) = channel::<u32>(8);
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                for i in 0..100 {
+                    tx.send(i).unwrap();
+                }
+            });
+            for i in 0..100 {
+                assert_eq!(rx.recv(), Some(i));
+            }
+        });
+        // The spawned sender dropped: disconnect surfaces.
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn recv_timeout_times_out_then_delivers() {
+        let (tx, rx) = channel::<u8>(4);
+        assert_eq!(
+            rx.recv_timeout(Duration::from_micros(200)),
+            Err(RecvTimeoutError::Timeout)
+        );
+        tx.send(7).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(50)), Ok(7));
+        drop(tx);
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(50)),
+            Err(RecvTimeoutError::Disconnected)
+        );
+    }
+
+    #[test]
+    fn clone_keeps_channel_open_until_last_sender_drops() {
+        let (tx, rx) = channel::<u8>(4);
+        let tx2 = tx.clone();
+        drop(tx);
+        tx2.send(1).unwrap();
+        assert_eq!(rx.recv(), Some(1));
+        drop(tx2);
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn send_after_receiver_drop_returns_the_value() {
+        let (tx, rx) = channel::<String>(4);
+        drop(rx);
+        let back = tx.send("lost".into()).unwrap_err();
+        assert_eq!(back, "lost");
+    }
+
+    #[test]
+    fn mailbox_disconnects_only_while_no_minted_sender_lives() {
+        let mb = mailbox::<u8>(4);
+        // No producers yet: an empty mailbox reads as disconnected.
+        assert_eq!(
+            mb.recv_timeout(Duration::from_millis(1)),
+            Err(RecvTimeoutError::Disconnected)
+        );
+        let tx = mb.sender();
+        tx.send(3).unwrap();
+        drop(tx);
+        // Queued value survives the producer.
+        assert_eq!(mb.recv(), Some(3));
+        assert_eq!(mb.recv(), None);
+        // Minting a new producer revives the channel.
+        let tx = mb.sender();
+        tx.send(4).unwrap();
+        assert_eq!(mb.recv(), Some(4));
+    }
+
+    #[test]
+    fn receiver_drop_drops_queued_values() {
+        // A queued value holding a minted sender to another mailbox must
+        // be released when the receiver dies — the waiter on that other
+        // mailbox sees disconnect instead of hanging (the batcher-death
+        // drain path relies on this).
+        let inner = mailbox::<u8>(2);
+        let (tx, rx) = channel::<Sender<u8>>(2);
+        assert!(tx.send(inner.sender()).is_ok());
+        drop(rx); // drains the queue, dropping the minted sender
+        assert_eq!(
+            inner.recv_timeout(Duration::from_millis(1)),
+            Err(RecvTimeoutError::Disconnected)
+        );
+        drop(tx);
+    }
+}

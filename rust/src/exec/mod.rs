@@ -1,14 +1,19 @@
-//! Execution substrate: thread pool, shutdown tokens, rate limiting.
+//! Execution substrate: thread pool, channels, shutdown tokens, rate
+//! limiting.
 //!
 //! Tokio is not in the offline crate set; the coordinator's event loop is
-//! built on std threads + mpsc channels, which is also the honest model
+//! built on std threads + channels, which is also the honest model
 //! of SEED-RL's actor/learner processes (blocking env steps, a central
-//! batched inference service, and a learner thread).
+//! batched inference service, and a learner thread). The hot inference
+//! path uses [`channel`] instead of `std::sync::mpsc` because std mpsc
+//! allocates a queue node per send — see the module docs.
 
+pub mod channel;
 pub mod pool;
 pub mod rate;
 pub mod shutdown;
 
+pub use channel::{Receiver, RecvTimeoutError, Sender};
 pub use pool::ThreadPool;
 pub use rate::RateLimiter;
 pub use shutdown::ShutdownToken;

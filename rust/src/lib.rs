@@ -11,7 +11,12 @@
 //! * [`coordinator`] — L3: actors, central inference batcher, learner.
 //!   Each actor thread drives a [`vecenv::VecEnv`]; the
 //!   `actors.envs_per_actor` knob sets how many environments ride on one
-//!   thread (1 = the paper's baseline topology).
+//!   thread (1 = the paper's baseline topology). The batcher runs the
+//!   pooled slab protocol — recycled submission slabs, persistent reply
+//!   mailboxes, `Arc`-shared output slabs, zero allocations per
+//!   round-trip — and launches each flush at the smallest
+//!   `batcher.batch_sizes` bucket that fits (padded-AOT shapes; see
+//!   DESIGN.md §5).
 //! * [`policy`] — split-phase inference clients (`submit`/`wait`): the
 //!   seam between actors and inference. `actors.pipeline_depth` splits a
 //!   thread's env slots into groups so env stepping overlaps in-flight

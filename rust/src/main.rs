@@ -83,6 +83,29 @@ fn load_config(parsed: &rlarch::cli::Parsed) -> anyhow::Result<SystemConfig> {
             cfg.learner.max_steps = k;
         }
     }
+    if let Ok(mb) = parsed.get_usize("max-batch") {
+        if mb > 0 {
+            // Keep the bucket ladder valid: drop buckets above the new
+            // cap and make the cap the largest compiled shape.
+            cfg.batcher.max_batch = mb;
+            cfg.batcher.batch_sizes.retain(|&b| b < mb);
+            cfg.batcher.batch_sizes.push(mb);
+        }
+    }
+    if !parsed.get("batch-sizes").is_empty() {
+        // An explicit ladder wins over --max-batch: the largest bucket
+        // is the cap (validation requires it).
+        let sizes = parsed.get_usize_list("batch-sizes")?;
+        if let Some(&last) = sizes.last() {
+            cfg.batcher.max_batch = last;
+        }
+        cfg.batcher.batch_sizes = sizes;
+    }
+    if !parsed.get("timeout-us").is_empty() {
+        // Empty = unset: 0 is a meaningful value here (flush every
+        // submission immediately), so it cannot double as the sentinel.
+        cfg.batcher.timeout_us = parsed.get_u64("timeout-us")?;
+    }
     match parsed.get("env") {
         "" => {}
         e => cfg.env.name = e.to_string(),
@@ -123,6 +146,23 @@ fn cmd_train(args: &[String]) -> i32 {
             "override replay ingest batch (sequences per flush; 1 = unbatched)",
         )
         .flag("steps", "0", "override learner steps")
+        .flag(
+            "max-batch",
+            "0",
+            "override batcher row cap (rescales the bucket ladder to fit)",
+        )
+        .flag(
+            "batch-sizes",
+            "",
+            "override AOT launch-bucket ladder, ascending (largest = max batch); \
+             a single bucket equal to the cap pads every partial flush to it",
+        )
+        .flag(
+            "timeout-us",
+            "",
+            "override batcher flush timeout in microseconds (0 = flush \
+             every submission immediately)",
+        )
         .flag("env", "", "override env (grid_pong|breakout|catch|nav_maze)")
         .flag("mode", "central", "central (SEED) or local (IMPALA-style)")
         .flag("artifacts", "artifacts", "artifact directory");
@@ -141,7 +181,7 @@ fn cmd_train(args: &[String]) -> i32 {
         let metrics = Registry::new();
         println!(
             "rlarch train: env={} actors={} envs/actor={} depth={} steps={} \
-             shards={} prefetch={} ingest={} pool={} mode={:?}",
+             shards={} prefetch={} ingest={} pool={} buckets={:?} mode={:?}",
             cfg.env.name,
             cfg.actors.num_actors,
             cfg.actors.envs_per_actor,
@@ -151,6 +191,7 @@ fn cmd_train(args: &[String]) -> i32 {
             cfg.learner.prefetch_depth,
             cfg.replay.insert_batch,
             cfg.replay.pool,
+            cfg.batcher.batch_sizes,
             cfg.mode
         );
         let report = coordinator::run(&cfg, backend, metrics.clone())?;

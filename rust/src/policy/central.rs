@@ -1,28 +1,54 @@
-//! SEED-style split-phase client: one multi-row slab submission to the
-//! central batcher per `submit`, slot-addressed reply chunks scattered
-//! into the caller's slabs at `wait`.
+//! SEED-style split-phase client over the pooled slab protocol: one
+//! multi-row submission to the central batcher per `submit`, carried in
+//! a recycled `InferSlab`; `wait` scatters range-addressed reply
+//! chunks from the client's persistent mailbox straight into the
+//! caller's slabs. Steady state allocates nothing (the
+//! `micro_batcher --quick` gate).
 
 use super::PolicyClient;
-use crate::coordinator::batcher::{BatcherHandle, InferItem, ReplyChunk};
+use crate::coordinator::batcher::{BatcherHandle, InferItem, ReplyChunk, SlabPool};
+use crate::exec::channel::{mailbox, Receiver};
 use crate::metrics::{Gauge, Registry};
 use crate::runtime::ModelDims;
-use std::sync::mpsc;
+use std::sync::Arc;
 
 struct Pending {
-    rx: mpsc::Receiver<ReplyChunk>,
     rows: usize,
+    /// The wire tag this submission travels under (a monotone
+    /// per-client counter, not the caller's ticket): reply chunks echo
+    /// it, so a chunk from a generation whose `wait` already returned
+    /// (e.g. with an error, leaving sibling chunks in the mailbox) can
+    /// never be mistaken for a later submission reusing the ticket.
+    tag: usize,
 }
 
-/// Split-phase client over the central inference batcher. `submit`
-/// sends the whole row slab as one [`InferItem`] with a single reply
-/// channel; the batcher may serve it as several batches, and `wait`
-/// scatters each chunk by its slot offset — no per-row vectors, no
-/// per-row channels.
+/// Split-phase client over the central inference batcher.
+///
+/// Registered once: the client holds one persistent reply mailbox for
+/// its whole life; every submission mints a counted route to it
+/// (`ticket`-tagged, so several in-flight submissions demultiplex on
+/// one mailbox) and carries a recycled input slab from the batcher's
+/// shared [`SlabPool`]. `wait` scatters each chunk's rows from the
+/// batch's shared output slab by slot offset — no per-step channels, no
+/// per-row vectors, no reply copies beyond the one scatter into the
+/// caller's `[E, hidden]` buffers.
 pub struct CentralClient {
     handle: BatcherHandle,
+    pool: Arc<SlabPool>,
     actor: usize,
     dims: ModelDims,
+    /// Persistent reply mailbox; reads as disconnected exactly when no
+    /// in-flight submission holds a route to it (see `exec::channel`).
+    mailbox: Receiver<ReplyChunk>,
+    /// Chunks received while waiting on a different in-flight
+    /// submission, parked for its own `wait` (capacity settles; steady
+    /// state is allocation-free). Chunks whose tag matches no in-flight
+    /// submission are stale (their generation's `wait` already errored
+    /// out) and are discarded instead.
+    stash: Vec<ReplyChunk>,
     inflight: Vec<Option<Pending>>,
+    /// Next wire tag (see [`Pending::tag`]).
+    next_tag: usize,
     /// Shared across every actor's client: submissions currently in
     /// flight, pool-wide (incremented on submit, decremented on wait).
     inflight_gauge: Gauge,
@@ -35,13 +61,49 @@ impl CentralClient {
         dims: ModelDims,
         metrics: &Registry,
     ) -> Self {
+        let pool = handle.slab_pool();
         Self {
             handle,
+            pool,
             actor,
             dims,
+            mailbox: mailbox(8),
+            stash: Vec::new(),
             inflight: Vec::new(),
+            next_tag: 0,
             inflight_gauge: metrics.gauge("policy.inflight"),
         }
+    }
+
+    /// Does any in-flight submission travel under this wire tag?
+    fn tag_in_flight(&self, tag: usize) -> bool {
+        self.inflight.iter().flatten().any(|p| p.tag == tag)
+    }
+
+    /// Scatter one reply chunk into the output slabs; returns the rows
+    /// it covered.
+    fn scatter(
+        d: ModelDims,
+        n: usize,
+        chunk: ReplyChunk,
+        q: &mut [f32],
+        h: &mut [f32],
+        c: &mut [f32],
+    ) -> anyhow::Result<usize> {
+        let range = match chunk.result {
+            Ok(range) => range,
+            Err(e) => return Err(anyhow::anyhow!("central inference failed: {e}")),
+        };
+        let (s, k, r0) = (chunk.slot0, chunk.rows, range.row0);
+        anyhow::ensure!(s + k <= n, "chunk rows out of range");
+        let (na, hd) = (d.num_actions, d.hidden);
+        q[s * na..(s + k) * na]
+            .copy_from_slice(&range.slab.q[r0 * na..(r0 + k) * na]);
+        h[s * hd..(s + k) * hd]
+            .copy_from_slice(&range.slab.h[r0 * hd..(r0 + k) * hd]);
+        c[s * hd..(s + k) * hd]
+            .copy_from_slice(&range.slab.c[r0 * hd..(r0 + k) * hd]);
+        Ok(k)
     }
 }
 
@@ -66,13 +128,6 @@ impl PolicyClient for CentralClient {
         h: &[f32],
         c: &[f32],
     ) -> anyhow::Result<()> {
-        let d = &self.dims;
-        anyhow::ensure!(rows > 0, "submit with no rows");
-        anyhow::ensure!(obs.len() == rows * d.obs_len, "obs slab length");
-        anyhow::ensure!(
-            h.len() == rows * d.hidden && c.len() == rows * d.hidden,
-            "recurrent slab length"
-        );
         if self.inflight.len() <= ticket {
             self.inflight.resize_with(ticket + 1, || None);
         }
@@ -80,16 +135,21 @@ impl PolicyClient for CentralClient {
             self.inflight[ticket].is_none(),
             "ticket {ticket} already in flight"
         );
-        let (rtx, rrx) = mpsc::channel();
+        // Exact-dims validation happens once, in `handle.submit` (with
+        // this actor's id in the message) — copying first is safe, the
+        // slab just carries whatever lengths it was given.
+        let mut slab = self.pool.acquire();
+        slab.fill_from(obs, h, c);
+        let tag = self.next_tag;
+        self.next_tag = self.next_tag.wrapping_add(1);
         self.handle.submit(InferItem {
             actor: self.actor,
+            ticket: tag,
             rows,
-            obs: obs.to_vec(),
-            h: h.to_vec(),
-            c: c.to_vec(),
-            reply: rtx,
+            slab,
+            reply: self.mailbox.sender(),
         })?;
-        self.inflight[ticket] = Some(Pending { rx: rrx, rows });
+        self.inflight[ticket] = Some(Pending { rows, tag });
         self.inflight_gauge.add(1.0);
         Ok(())
     }
@@ -101,37 +161,54 @@ impl PolicyClient for CentralClient {
         h: &mut [f32],
         c: &mut [f32],
     ) -> anyhow::Result<()> {
-        let pending = self
-            .inflight
-            .get_mut(ticket)
-            .and_then(Option::take)
-            .ok_or_else(|| anyhow::anyhow!("wait on idle ticket {ticket}"))?;
-        self.inflight_gauge.add(-1.0);
-        let d = &self.dims;
-        let n = pending.rows;
+        let d = self.dims;
+        // Validate the caller's output slabs BEFORE taking the pending
+        // entry, so a rejected wait leaves the ticket in flight (a
+        // resubmit is refused) instead of freeing it with replies still
+        // en route.
+        let (n, tag) = {
+            let p = self
+                .inflight
+                .get(ticket)
+                .and_then(Option::as_ref)
+                .ok_or_else(|| anyhow::anyhow!("wait on idle ticket {ticket}"))?;
+            (p.rows, p.tag)
+        };
         anyhow::ensure!(q.len() == n * d.num_actions, "q slab length");
         anyhow::ensure!(
             h.len() == n * d.hidden && c.len() == n * d.hidden,
             "recurrent slab length"
         );
+        self.inflight[ticket] = None;
+        self.inflight_gauge.add(-1.0);
         let mut done = 0usize;
+        // First redeem chunks a previous wait parked for this
+        // submission; stash entries whose generation is no longer in
+        // flight (an earlier wait returned on an error chunk before its
+        // siblings arrived) are stale — discard them.
+        let mut i = 0;
+        while i < self.stash.len() {
+            if self.stash[i].ticket == tag {
+                let chunk = self.stash.swap_remove(i);
+                done += Self::scatter(d, n, chunk, q, h, c)?;
+            } else if !self.tag_in_flight(self.stash[i].ticket) {
+                self.stash.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
         while done < n {
-            let chunk = pending
-                .rx
+            let chunk = self
+                .mailbox
                 .recv()
-                .map_err(|_| anyhow::anyhow!("{}", self.handle.gone_message()))?;
-            let data = match chunk.result {
-                Ok(data) => data,
-                Err(e) => {
-                    return Err(anyhow::anyhow!("central inference failed: {e}"))
-                }
-            };
-            let (s, k) = (chunk.slot0, chunk.rows);
-            anyhow::ensure!(s + k <= n, "chunk rows out of range");
-            q[s * d.num_actions..(s + k) * d.num_actions].copy_from_slice(&data.q);
-            h[s * d.hidden..(s + k) * d.hidden].copy_from_slice(&data.h);
-            c[s * d.hidden..(s + k) * d.hidden].copy_from_slice(&data.c);
-            done += k;
+                .ok_or_else(|| anyhow::anyhow!("{}", self.handle.gone_message()))?;
+            if chunk.ticket == tag {
+                done += Self::scatter(d, n, chunk, q, h, c)?;
+            } else if self.tag_in_flight(chunk.ticket) {
+                // Another in-flight submission's reply: park it.
+                self.stash.push(chunk);
+            }
+            // else: a stale generation's leftover chunk — discard.
         }
         Ok(())
     }

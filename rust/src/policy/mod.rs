@@ -10,9 +10,12 @@
 //!
 //! Two implementations mirror the paper's Fig. 1 architectures:
 //!
-//! * [`CentralClient`] — SEED: one multi-row slab submission to the
-//!   central batcher per call; replies scatter straight into the
-//!   caller's `[rows, hidden]` slabs as slot-addressed chunks arrive.
+//! * [`CentralClient`] — SEED: one multi-row submission to the central
+//!   batcher per call, carried in a recycled slab from the batcher's
+//!   shared pool; replies arrive on the client's persistent mailbox as
+//!   range-addressed chunks into a shared output slab and scatter
+//!   straight into the caller's `[rows, hidden]` slabs. The steady-state
+//!   round-trip is allocation-free (the `micro_batcher --quick` gate).
 //!   Overlap is real: the GPU (or batcher thread) works between
 //!   `submit` and `wait`.
 //! * [`LocalClient`] — IMPALA baseline: direct backend calls, chunked

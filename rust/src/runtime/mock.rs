@@ -128,17 +128,48 @@ impl MockModel {
         Ok(self.infer_slices(req))
     }
 
+    /// Fallible in-place wrapper over [`MockModel::infer_slices_into`]
+    /// (the batcher's pooled reply path).
+    pub fn try_infer_slices_into(
+        &self,
+        req: InferSlices<'_>,
+        out: &mut InferReply,
+    ) -> anyhow::Result<()> {
+        if let Some(msg) = self.infer_error.lock().unwrap().as_ref() {
+            return Err(anyhow::anyhow!("{msg}"));
+        }
+        self.infer_slices_into(req, out);
+        Ok(())
+    }
+
     /// The mock forward pass over borrowed row slices (zero-copy).
     pub fn infer_slices(&self, req: InferSlices<'_>) -> InferReply {
+        let mut out = InferReply {
+            q: Vec::new(),
+            h: Vec::new(),
+            c: Vec::new(),
+        };
+        self.infer_slices_into(req, &mut out);
+        out
+    }
+
+    /// The mock forward pass writing into a caller-owned reply: the
+    /// output vectors are cleared and refilled in place, reusing their
+    /// capacity, so a recycled reply slab makes the call allocation-free
+    /// in steady state (the property `micro_batcher --quick` gates on).
+    pub fn infer_slices_into(&self, req: InferSlices<'_>, out: &mut InferReply) {
         let d = &self.dims;
         req.validate(d).expect("mock infer request shape");
         let lat = *self.infer_latency.lock().unwrap();
         if !lat.is_zero() {
             std::thread::sleep(lat);
         }
-        let mut q = vec![0.0f32; req.n * d.num_actions];
-        let mut h = vec![0.0f32; req.n * d.hidden];
-        let mut c = vec![0.0f32; req.n * d.hidden];
+        out.q.clear();
+        out.q.resize(req.n * d.num_actions, 0.0);
+        out.h.clear();
+        out.h.resize(req.n * d.hidden, 0.0);
+        out.c.clear();
+        out.c.resize(req.n * d.hidden, 0.0);
         for i in 0..req.n {
             let obs = &req.obs[i * d.obs_len..(i + 1) * d.obs_len];
             let h_in = &req.h[i * d.hidden..(i + 1) * d.hidden];
@@ -150,16 +181,15 @@ impl MockModel {
                 }
                 // Recurrent contribution keeps state relevant.
                 acc += h_in.iter().take(4).sum::<f32>() * 0.01 * (a as f32 + 1.0);
-                q[i * d.num_actions + a] = acc;
+                out.q[i * d.num_actions + a] = acc;
             }
             let obs_mean = obs.iter().sum::<f32>() / obs.len().max(1) as f32;
             for k in 0..d.hidden {
                 let idx = i * d.hidden + k;
-                c[idx] = self.decay[k] * c_in[k] + 0.1 * obs_mean;
-                h[idx] = c[idx].tanh();
+                out.c[idx] = self.decay[k] * c_in[k] + 0.1 * obs_mean;
+                out.h[idx] = out.c[idx].tanh();
             }
         }
-        InferReply { q, h, c }
     }
 
     /// Fallible wrapper: fails when an error was injected via
@@ -273,6 +303,38 @@ mod tests {
         assert_eq!(a.q, b.q);
         assert_eq!(a.h, b.h);
         assert_eq!(a.c, b.c);
+    }
+
+    #[test]
+    fn infer_into_matches_owned_reply_and_reuses_capacity() {
+        let d = dims();
+        let m = MockModel::new(d, 42);
+        let owned = req(3, &d, 0.4);
+        let a = m.infer(&owned);
+        let mut out = InferReply {
+            q: Vec::new(),
+            h: Vec::new(),
+            c: Vec::new(),
+        };
+        let slices = InferSlices {
+            n: 3,
+            h: &owned.h,
+            c: &owned.c,
+            obs: &owned.obs,
+        };
+        m.infer_slices_into(slices, &mut out);
+        assert_eq!(a.q, out.q);
+        assert_eq!(a.h, out.h);
+        assert_eq!(a.c, out.c);
+        // Steady state: a second fill of the same shape must reuse the
+        // buffers in place (no reallocation — pointer-stable).
+        let (pq, ph, pc) = (out.q.as_ptr(), out.h.as_ptr(), out.c.as_ptr());
+        m.infer_slices_into(slices, &mut out);
+        assert_eq!(a.q, out.q);
+        assert!(
+            pq == out.q.as_ptr() && ph == out.h.as_ptr() && pc == out.c.as_ptr(),
+            "in-place refill must not reallocate"
+        );
     }
 
     #[test]

@@ -125,6 +125,27 @@ impl Backend {
         }
     }
 
+    /// Blocking batched inference writing into a caller-owned reply (the
+    /// central batcher's pooled path): the mock fills `out` in place,
+    /// reusing whatever capacity it holds — steady state never enters
+    /// the allocator. The XLA path genuinely needs owned buffers at the
+    /// runtime-thread channel boundary, so there the reply replaces
+    /// `out` wholesale (pooling degrades to plain allocation, exactly
+    /// today's cost).
+    pub fn infer_into(
+        &self,
+        req: InferSlices<'_>,
+        out: &mut InferReply,
+    ) -> anyhow::Result<()> {
+        match self {
+            Backend::Xla(h) => {
+                *out = h.infer(InferRequest::from_slices(req))?;
+                Ok(())
+            }
+            Backend::Mock(m) => m.try_infer_slices_into(req, out),
+        }
+    }
+
     /// Blocking learner step (updates parameters in place).
     pub fn train(&self, batch: TrainBatch) -> anyhow::Result<TrainReply> {
         match self {

@@ -53,6 +53,15 @@ pub struct SystemModel {
     /// Batcher policy.
     pub max_batch: usize,
     pub batch_timeout_s: f64,
+    /// AOT launch buckets (ascending; the execution-side
+    /// `batcher.batch_sizes`): a flush of `n` rows launches as the
+    /// smallest bucket `>= n`, burning GPU time on the zero-padded rows.
+    /// Empty = exact-shape launches, the seed model's idealization (a
+    /// launch shape per possible batch size); `[max_batch]` is the
+    /// single-executable extreme that pads every partial flush to the
+    /// cap. The padded rows change *GPU efficiency only* — the reply
+    /// stream is shape-invariant (`tests/batcher_equivalence.rs`).
+    pub batch_buckets: Vec<usize>,
     /// Environments driven in lockstep by each actor thread (vecenv).
     /// One thread's cycle becomes E env steps + one batched round-trip,
     /// so E raises environments-in-flight (and the achievable batch
@@ -153,6 +162,26 @@ impl SystemModel {
         self.gpu.trace_time(&self.train_trace, Idealize::NONE)
     }
 
+    /// Launch shape for a flush of `rows`: the smallest configured
+    /// bucket that fits, or `rows` itself with no bucket ladder (the
+    /// exact-shape idealization) or when `rows` exceeds the ladder.
+    pub fn launch_size(&self, rows: usize) -> usize {
+        self.batch_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= rows)
+            .unwrap_or(rows)
+    }
+
+    /// Bucket-padding efficiency of a flush of `rows`: the fraction of
+    /// launched rows that carry real work (1.0 with an exact-shape
+    /// ladder; `n / bucket(n)` otherwise). The GPU-side cost of the
+    /// fixed-shape AOT executables the batcher models.
+    pub fn padding_efficiency(&self, rows: usize) -> f64 {
+        let rows = rows.max(1);
+        rows as f64 / self.launch_size(rows) as f64
+    }
+
     /// Learner train-cycle time: the GPU train step plus the CPU-side
     /// sample/assemble phases — serialized at `prefetch_depth` 1,
     /// overlapped (`max`) when the split-phase learner prefetches.
@@ -229,7 +258,10 @@ impl SystemModel {
             let window = self.batch_timeout_s.min(fill_time);
             let floor = (e / d).min(self.max_batch as f64);
             batch = (rate * window).clamp(floor, self.max_batch as f64);
-            let t_infer = self.infer_time(batch.round() as usize);
+            // Fixed-shape AOT launches: the GPU pays for the padded
+            // bucket, the actors only get `batch` rows of work out.
+            let t_infer =
+                self.infer_time(self.launch_size((batch.round() as usize).max(1)));
 
             // GPU occupancy: inference + training load.
             let gpu_load = rate * (t_infer / batch + self.train_per_env * t_train);
@@ -256,7 +288,7 @@ impl SystemModel {
             rate = 0.5 * rate + 0.5 * target; // damping
         }
 
-        let t_infer = self.infer_time(batch.round() as usize);
+        let t_infer = self.infer_time(self.launch_size((batch.round() as usize).max(1)));
         let gpu_util =
             (rate * (t_infer / batch + self.train_per_env * self.train_time())).min(1.0);
         let power_w = self
@@ -304,6 +336,14 @@ impl SystemModel {
     pub fn with_pipeline_depth(&self, depth: usize) -> Self {
         let mut m = self.clone();
         m.pipeline_depth = depth.max(1);
+        m
+    }
+
+    /// Clone with a different AOT launch-bucket ladder (the
+    /// `batcher.batch_sizes` sweep; empty = exact-shape launches).
+    pub fn with_batch_buckets(&self, buckets: Vec<usize>) -> Self {
+        let mut m = self.clone();
+        m.batch_buckets = buckets;
         m
     }
 
@@ -377,6 +417,12 @@ pub fn default_system(infer_trace: Trace, train_trace: Trace) -> SystemModel {
         train_per_env: 1.0 / ((80.0 - 40.0) * 64.0 * 8.0),
         max_batch: cfg.batcher.max_batch,
         batch_timeout_s: cfg.batcher.timeout_us as f64 * 1e-6,
+        // Exact-shape launches by default — the seed model's
+        // idealization, kept so the Fig. 3/4 baselines stay comparable
+        // across PRs; `with_batch_buckets(cfg.batcher.batch_sizes)`
+        // opts the model into the execution side's padded-AOT reality
+        // (the bucket-padding efficiency term).
+        batch_buckets: Vec::new(),
         envs_per_actor: cfg.actors.envs_per_actor,
         pipeline_depth: cfg.actors.pipeline_depth,
         // Measured on the CPU testbed (EXPERIMENTS.md §Perf): sampling
@@ -624,6 +670,68 @@ mod tests {
         assert!((t1 - 1e-6).abs() < 1e-12);
         assert!((t4 - 1e-6).abs() < 1e-12, "k <= shards must not amortize");
         assert!((t16 - 0.25e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn launch_size_rounds_up_the_bucket_ladder() {
+        let m = model().with_batch_buckets(vec![1, 8, 32, 64]);
+        assert_eq!(m.launch_size(1), 1);
+        assert_eq!(m.launch_size(2), 8);
+        assert_eq!(m.launch_size(8), 8);
+        assert_eq!(m.launch_size(9), 32);
+        assert_eq!(m.launch_size(33), 64);
+        // Beyond the ladder (and with no ladder): exact shapes.
+        assert_eq!(m.launch_size(70), 70);
+        assert_eq!(model().launch_size(40), 40);
+        assert!((m.padding_efficiency(5) - 5.0 / 8.0).abs() < 1e-12);
+        assert!((model().padding_efficiency(5) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_bucket_ladder_is_the_exact_shape_identity() {
+        // A bucket for every possible batch size pads nothing: the
+        // steady state must be bit-identical to the no-ladder model.
+        let m = model();
+        let dense = m.with_batch_buckets((1..=m.max_batch).collect());
+        let a = m.steady_state(16);
+        let b = dense.steady_state(16);
+        assert_eq!(a.env_rate, b.env_rate);
+        assert_eq!(a.batch_size, b.batch_size);
+        assert_eq!(a.rtt_s, b.rtt_s);
+    }
+
+    #[test]
+    fn coarse_buckets_pad_and_cost_rate_at_latency_bound_points() {
+        // A single max_batch bucket pads every partial flush to the
+        // cap: at few actors (small formed batches, latency-bound
+        // cycle) the inflated launch time must cost env rate, and a
+        // finer ladder must sit between the two.
+        let m = model();
+        let exact = m.steady_state(4);
+        let fine = m
+            .with_batch_buckets(vec![1, 2, 4, 8, 16, 32, 64])
+            .steady_state(4);
+        let coarse = m.with_batch_buckets(vec![64]).steady_state(4);
+        assert!(
+            coarse.env_rate < exact.env_rate,
+            "padding to the cap must cost rate when latency-bound: \
+             coarse {} vs exact {}",
+            coarse.env_rate,
+            exact.env_rate
+        );
+        assert!(
+            fine.env_rate >= coarse.env_rate,
+            "a finer ladder cannot pad more: fine {} vs coarse {}",
+            fine.env_rate,
+            coarse.env_rate
+        );
+        assert!(
+            coarse.env_rate > 0.1 * exact.env_rate,
+            "padding inflates one launch, it does not collapse the system: \
+             {} vs {}",
+            coarse.env_rate,
+            exact.env_rate
+        );
     }
 
     #[test]

@@ -1,0 +1,533 @@
+//! Central-path equivalence: the pooled, bucketed batcher (PR 5's slab
+//! protocol — recycled input slabs, persistent reply mailboxes,
+//! `Arc`-shared output slabs, padded-bucket launches) must replay the
+//! seed batcher's reply stream **byte-identically**. Padding changes
+//! launch shapes, pooling changes where buffers live; neither may
+//! change a single reply byte.
+//!
+//! The golden reference is a verbatim replica of the pre-pooling
+//! batcher (per-submission `std::sync::mpsc` reply channels, owned
+//! `Vec` payloads, a fresh `InferRequest` + routes `Vec` per batch,
+//! per-chunk `to_vec` reply copies, exact-shape launches), driven with
+//! the same submissions. A property test randomizes rows / max_batch /
+//! timeout / bucket ladders / submit-wait interleavings; a second test
+//! pins the inference-failure drain path.
+
+use rlarch::config::BatcherConfig;
+use rlarch::coordinator::Batcher;
+use rlarch::metrics::Registry;
+use rlarch::policy::{CentralClient, PolicyClient};
+use rlarch::runtime::{Backend, MockModel, ModelDims};
+use rlarch::util::quickcheck::{forall, prop_assert};
+use std::sync::Arc;
+
+/// Verbatim replica of the seed batcher (PR 2 protocol). Kept minimal:
+/// no metrics, exact-shape launches, flush at `max_batch` rows or the
+/// collection timeout — the flush policy the pooled batcher must
+/// reproduce bit-for-bit at `batch_sizes = [max_batch]`.
+mod seed {
+    use rlarch::config::BatcherConfig;
+    use rlarch::runtime::{Backend, InferRequest};
+    use std::collections::VecDeque;
+    use std::sync::mpsc;
+    use std::thread::JoinHandle;
+    use std::time::{Duration, Instant};
+
+    pub struct SeedItem {
+        pub rows: usize,
+        pub obs: Vec<f32>,
+        pub h: Vec<f32>,
+        pub c: Vec<f32>,
+        pub reply: mpsc::Sender<SeedChunk>,
+    }
+
+    pub struct SeedChunk {
+        pub slot0: usize,
+        pub rows: usize,
+        pub result: Result<SeedData, String>,
+    }
+
+    pub struct SeedData {
+        pub q: Vec<f32>,
+        pub h: Vec<f32>,
+        pub c: Vec<f32>,
+    }
+
+    pub struct SeedBatcher {
+        join: Option<JoinHandle<()>>,
+    }
+
+    impl SeedBatcher {
+        pub fn spawn(
+            cfg: BatcherConfig,
+            backend: Backend,
+        ) -> (SeedBatcher, mpsc::Sender<SeedItem>) {
+            let (tx, rx) = mpsc::channel::<SeedItem>();
+            let join = std::thread::Builder::new()
+                .name("seed-batcher-replica".into())
+                .spawn(move || run(cfg, backend, rx))
+                .expect("spawn seed batcher");
+            (SeedBatcher { join: Some(join) }, tx)
+        }
+
+        pub fn join(mut self) {
+            if let Some(j) = self.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+
+    struct Open {
+        item: SeedItem,
+        consumed: usize,
+    }
+
+    fn run(cfg: BatcherConfig, backend: Backend, rx: mpsc::Receiver<SeedItem>) {
+        let dims = backend.dims();
+        let timeout = Duration::from_micros(cfg.timeout_us);
+        let mut queue: VecDeque<Open> = VecDeque::new();
+        let mut rows_avail = 0usize;
+        let push = |queue: &mut VecDeque<Open>, rows_avail: &mut usize, item: SeedItem| {
+            *rows_avail += item.rows;
+            queue.push_back(Open { item, consumed: 0 });
+        };
+
+        loop {
+            if rows_avail == 0 {
+                match rx.recv() {
+                    Ok(item) => push(&mut queue, &mut rows_avail, item),
+                    Err(_) => return,
+                }
+            }
+            let deadline = Instant::now() + timeout;
+            while rows_avail < cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(item) => push(&mut queue, &mut rows_avail, item),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+
+            let n = rows_avail.min(cfg.max_batch);
+            let mut req = InferRequest {
+                n,
+                h: Vec::with_capacity(n * dims.hidden),
+                c: Vec::with_capacity(n * dims.hidden),
+                obs: Vec::with_capacity(n * dims.obs_len),
+            };
+            let mut routes: Vec<(mpsc::Sender<SeedChunk>, usize, usize)> = Vec::new();
+            let mut taken = 0usize;
+            while taken < n {
+                let open = queue.front_mut().expect("rows_avail tracks queue rows");
+                let k = (open.item.rows - open.consumed).min(n - taken);
+                let (a, b) = (open.consumed, open.consumed + k);
+                req.h
+                    .extend_from_slice(&open.item.h[a * dims.hidden..b * dims.hidden]);
+                req.c
+                    .extend_from_slice(&open.item.c[a * dims.hidden..b * dims.hidden]);
+                req.obs
+                    .extend_from_slice(&open.item.obs[a * dims.obs_len..b * dims.obs_len]);
+                routes.push((open.item.reply.clone(), open.consumed, k));
+                open.consumed += k;
+                taken += k;
+                if open.consumed == open.item.rows {
+                    queue.pop_front();
+                }
+            }
+            rows_avail -= n;
+
+            match backend.infer(req) {
+                Ok(out) => {
+                    let a = dims.num_actions;
+                    let hd = dims.hidden;
+                    let mut off = 0usize;
+                    for (tx, slot0, k) in routes {
+                        let _ = tx.send(SeedChunk {
+                            slot0,
+                            rows: k,
+                            result: Ok(SeedData {
+                                q: out.q[off * a..(off + k) * a].to_vec(),
+                                h: out.h[off * hd..(off + k) * hd].to_vec(),
+                                c: out.c[off * hd..(off + k) * hd].to_vec(),
+                            }),
+                        });
+                        off += k;
+                    }
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    for (tx, slot0, k) in routes {
+                        let _ = tx.send(SeedChunk {
+                            slot0,
+                            rows: k,
+                            result: Err(msg.clone()),
+                        });
+                    }
+                    for open in queue.drain(..) {
+                        let _ = open.item.reply.send(SeedChunk {
+                            slot0: open.consumed,
+                            rows: open.item.rows - open.consumed,
+                            result: Err(msg.clone()),
+                        });
+                    }
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn dims() -> ModelDims {
+    ModelDims {
+        obs_len: 6,
+        hidden: 3,
+        num_actions: 2,
+        seq_len: 4,
+        train_batch: 2,
+    }
+}
+
+/// One randomized submission's payload.
+struct Sub {
+    rows: usize,
+    obs: Vec<f32>,
+    h: Vec<f32>,
+    c: Vec<f32>,
+}
+
+type RowSlabs = (Vec<f32>, Vec<f32>, Vec<f32>);
+
+/// Drive the seed replica: submit in windows of `window`, gather each
+/// submission's chunks into slot-ordered row slabs.
+fn drive_seed(
+    cfg: &BatcherConfig,
+    backend: &Backend,
+    subs: &[Sub],
+    window: usize,
+) -> Vec<Result<RowSlabs, String>> {
+    let d = dims();
+    let (batcher, tx) = seed::SeedBatcher::spawn(cfg.clone(), backend.clone());
+    let mut out = Vec::new();
+    for group in subs.chunks(window) {
+        let mut rxs = Vec::new();
+        for sub in group {
+            let (rtx, rrx) = std::sync::mpsc::channel();
+            // A dead replica (failure-injection runs) refuses the send;
+            // record it like any other lost submission.
+            let sent = tx
+                .send(seed::SeedItem {
+                    rows: sub.rows,
+                    obs: sub.obs.clone(),
+                    h: sub.h.clone(),
+                    c: sub.c.clone(),
+                    reply: rtx,
+                })
+                .is_ok();
+            rxs.push((sub.rows, rrx, sent));
+        }
+        for (rows, rrx, sent) in rxs {
+            let mut q = vec![0.0f32; rows * d.num_actions];
+            let mut h = vec![0.0f32; rows * d.hidden];
+            let mut c = vec![0.0f32; rows * d.hidden];
+            let mut done = 0usize;
+            let mut failed = if sent {
+                None
+            } else {
+                Some("seed batcher gone".to_string())
+            };
+            while failed.is_none() && done < rows {
+                let chunk = match rrx.recv() {
+                    Ok(chunk) => chunk,
+                    Err(_) => {
+                        failed = Some("seed batcher gone".to_string());
+                        break;
+                    }
+                };
+                match chunk.result {
+                    Ok(data) => {
+                        let (s, k) = (chunk.slot0, chunk.rows);
+                        q[s * d.num_actions..(s + k) * d.num_actions]
+                            .copy_from_slice(&data.q);
+                        h[s * d.hidden..(s + k) * d.hidden].copy_from_slice(&data.h);
+                        c[s * d.hidden..(s + k) * d.hidden].copy_from_slice(&data.c);
+                        done += k;
+                    }
+                    Err(e) => {
+                        failed = Some(e);
+                        break;
+                    }
+                }
+            }
+            out.push(match failed {
+                Some(e) => Err(e),
+                None => Ok((q, h, c)),
+            });
+        }
+    }
+    drop(tx);
+    batcher.join();
+    out
+}
+
+/// Drive the pooled batcher through a real `CentralClient` with the
+/// same windowed interleaving (tickets 0..window in flight at once —
+/// the mailbox demux path).
+fn drive_pooled(
+    cfg: &BatcherConfig,
+    backend: &Backend,
+    subs: &[Sub],
+    window: usize,
+) -> Vec<Result<RowSlabs, String>> {
+    let d = dims();
+    let metrics = Registry::new();
+    let (batcher, handle) = Batcher::spawn(cfg.clone(), backend.clone(), metrics);
+    let client_metrics = Registry::new();
+    let mut client = CentralClient::new(handle.clone(), 0, d, &client_metrics);
+    let mut out = Vec::new();
+    'outer: for group in subs.chunks(window) {
+        for (t, sub) in group.iter().enumerate() {
+            if let Err(e) = client.submit(t, sub.rows, &sub.obs, &sub.h, &sub.c) {
+                // Batcher already died (failure-injection runs): record
+                // the whole group as failed — none of its results have
+                // been pushed yet — and move on.
+                for _ in group.iter() {
+                    out.push(Err(e.to_string()));
+                }
+                continue 'outer;
+            }
+        }
+        for (t, sub) in group.iter().enumerate() {
+            let mut q = vec![0.0f32; sub.rows * d.num_actions];
+            let mut h = vec![0.0f32; sub.rows * d.hidden];
+            let mut c = vec![0.0f32; sub.rows * d.hidden];
+            out.push(match client.wait(t, &mut q, &mut h, &mut c) {
+                Ok(()) => Ok((q, h, c)),
+                Err(e) => Err(e.to_string()),
+            });
+        }
+    }
+    drop(client);
+    drop(handle);
+    batcher.join();
+    out
+}
+
+fn random_sub(g: &mut rlarch::util::quickcheck::Gen, max_rows: usize) -> Sub {
+    let d = dims();
+    let rows = g.usize(1..max_rows + 1);
+    let mut fill = |len: usize| -> Vec<f32> {
+        (0..len).map(|_| g.rng().next_f32() - 0.5).collect()
+    };
+    Sub {
+        obs: fill(rows * d.obs_len),
+        h: fill(rows * d.hidden),
+        c: fill(rows * d.hidden),
+        rows,
+    }
+}
+
+#[test]
+fn prop_pooled_bucketed_batcher_replays_seed_reply_stream_byte_for_byte() {
+    // Randomized rows / max_batch / timeout / ladder / interleaving:
+    // every submission's scattered (q, h', c') must equal the seed
+    // replica's bit-for-bit. The `[max_batch]` ladder (the acceptance
+    // knob) runs every case; a random denser ladder runs on top.
+    forall(15, |g| {
+        let max_batch = g.usize(1..10);
+        let timeout_us = *g.pick(&[0u64, 100, 1_000, 5_000]);
+        let window = g.usize(1..4);
+        let n_subs = g.usize(6..12);
+        let subs: Vec<Sub> = (0..n_subs)
+            .map(|_| random_sub(g, 2 * max_batch + 3))
+            .collect();
+        let backend = Backend::Mock(Arc::new(MockModel::new(dims(), 13)));
+
+        let seed_cfg = BatcherConfig {
+            max_batch,
+            timeout_us,
+            batch_sizes: vec![max_batch],
+        };
+        let golden = drive_seed(&seed_cfg, &backend, &subs, window);
+
+        // Ladder 1: the seed flush policy knob, buckets = [max_batch].
+        let mut ladders = vec![vec![max_batch]];
+        // Ladder 2: a random denser ladder ending at the cap.
+        let mut ladder = vec![max_batch];
+        for _ in 0..g.usize(0..3) {
+            if max_batch > 1 {
+                ladder.push(g.usize(1..max_batch));
+            }
+        }
+        ladder.sort_unstable();
+        ladder.dedup();
+        ladders.push(ladder);
+
+        for batch_sizes in ladders {
+            let cfg = BatcherConfig {
+                max_batch,
+                timeout_us,
+                batch_sizes: batch_sizes.clone(),
+            };
+            let got = drive_pooled(&cfg, &backend, &subs, window);
+            prop_assert(
+                got.len() == golden.len(),
+                &format!("submission count diverged (ladder {batch_sizes:?})"),
+            )?;
+            for (i, (a, b)) in got.iter().zip(&golden).enumerate() {
+                let (a, b) = match (a, b) {
+                    (Ok(a), Ok(b)) => (a, b),
+                    other => {
+                        return Err(format!(
+                            "submission {i} health diverged: {:?} (ladder \
+                             {batch_sizes:?}, mb {max_batch}, to {timeout_us})",
+                            other.0.is_ok()
+                        ))
+                    }
+                };
+                prop_assert(
+                    a == b,
+                    &format!(
+                        "submission {i} reply bytes diverged (ladder \
+                         {batch_sizes:?}, mb {max_batch}, to {timeout_us}, \
+                         window {window})"
+                    ),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pooled_bucket_cap_ladder_pads_launches_without_changing_one_reply_byte() {
+    // Deterministic acceptance pin: cap-bucket ladder ([max_batch]) on
+    // a fixed workload with partial flushes and an oversized split —
+    // padding must be *observable* (padded_rows > 0) while the reply
+    // stream matches the exact-shape seed replica byte-for-byte.
+    let d = dims();
+    let backend = Backend::Mock(Arc::new(MockModel::new(d, 29)));
+    let mut g = rlarch::util::quickcheck::Gen::new(0xB0CE7);
+    let subs: Vec<Sub> = [1usize, 3, 9, 4, 2, 6, 1]
+        .iter()
+        .map(|&rows| {
+            let mut s = random_sub(&mut g, 1);
+            s.rows = rows;
+            s.obs = (0..rows * d.obs_len)
+                .map(|i| (i as f32 * 0.01).sin())
+                .collect();
+            s.h = (0..rows * d.hidden).map(|i| (i as f32 * 0.02).cos()).collect();
+            s.c = (0..rows * d.hidden).map(|i| i as f32 * 0.001).collect();
+            s
+        })
+        .collect();
+    let cfg = BatcherConfig {
+        max_batch: 4,
+        timeout_us: 300,
+        batch_sizes: vec![4],
+    };
+    let golden = drive_seed(&cfg, &backend, &subs, 2);
+
+    let metrics = Registry::new();
+    let (batcher, handle) = Batcher::spawn(cfg, backend, metrics.clone());
+    let mut client = CentralClient::new(handle.clone(), 0, d, &metrics);
+    let mut got = Vec::new();
+    for group in subs.chunks(2) {
+        for (t, sub) in group.iter().enumerate() {
+            client.submit(t, sub.rows, &sub.obs, &sub.h, &sub.c).unwrap();
+        }
+        for (t, sub) in group.iter().enumerate() {
+            let mut q = vec![0.0f32; sub.rows * d.num_actions];
+            let mut h = vec![0.0f32; sub.rows * d.hidden];
+            let mut c = vec![0.0f32; sub.rows * d.hidden];
+            client.wait(t, &mut q, &mut h, &mut c).unwrap();
+            got.push((q, h, c));
+        }
+    }
+    drop(client);
+    drop(handle);
+    batcher.join();
+
+    assert!(
+        metrics.counter("batcher.padded_rows").get() > 0,
+        "the cap ladder must actually pad partial flushes"
+    );
+    assert_eq!(got.len(), golden.len());
+    for (i, (a, b)) in got.iter().zip(&golden).enumerate() {
+        let b = b.as_ref().expect("seed replica healthy");
+        assert_eq!(a, b, "submission {i} diverged under cap-bucket padding");
+    }
+}
+
+#[test]
+fn inference_failure_drains_both_batchers_identically() {
+    // The drain path: a failing backend must error every in-flight and
+    // queued submission with the fault, record it as first_error, and
+    // name it on post-mortem submissions — in both implementations.
+    let d = dims();
+    let fault = "injected central fault";
+    let backend =
+        Backend::Mock(Arc::new(MockModel::new(d, 3).with_infer_error(fault)));
+    let mut g = rlarch::util::quickcheck::Gen::new(0xFA17);
+    let subs: Vec<Sub> = (0..5).map(|_| random_sub(&mut g, 9)).collect();
+    let cfg = BatcherConfig {
+        max_batch: 4,
+        timeout_us: 200,
+        batch_sizes: vec![4],
+    };
+
+    let golden = drive_seed(&cfg, &backend, &subs, 3);
+    for (i, r) in golden.iter().enumerate() {
+        let e = r.as_ref().expect_err("seed replica must fail");
+        assert!(
+            e.contains(fault) || e.contains("gone"),
+            "seed submission {i}: {e}"
+        );
+    }
+
+    let metrics = Registry::new();
+    let (batcher, handle) = Batcher::spawn(cfg, backend, metrics.clone());
+    let got = {
+        let mut client = CentralClient::new(handle.clone(), 0, d, &metrics);
+        let mut out = Vec::new();
+        for group in subs.chunks(3) {
+            let mut submitted = Vec::new();
+            for (t, sub) in group.iter().enumerate() {
+                match client.submit(t, sub.rows, &sub.obs, &sub.h, &sub.c) {
+                    Ok(()) => submitted.push((t, sub.rows)),
+                    Err(e) => out.push(Err::<RowSlabs, String>(e.to_string())),
+                }
+            }
+            for (t, rows) in submitted {
+                let mut q = vec![0.0f32; rows * d.num_actions];
+                let mut h = vec![0.0f32; rows * d.hidden];
+                let mut c = vec![0.0f32; rows * d.hidden];
+                out.push(match client.wait(t, &mut q, &mut h, &mut c) {
+                    Ok(()) => Ok((q, h, c)),
+                    Err(e) => Err(e.to_string()),
+                });
+            }
+        }
+        out
+    };
+    assert_eq!(got.len(), subs.len());
+    for (i, r) in got.iter().enumerate() {
+        let e = r.as_ref().expect_err("pooled batcher must fail every waiter");
+        assert!(
+            e.contains(fault),
+            "pooled submission {i} lost the fault message: {e}"
+        );
+    }
+    // Both record the same first error; post-mortem submits name it.
+    assert_eq!(metrics.counter("batcher.errors").get(), 1);
+    assert_eq!(handle.first_error().as_deref(), Some(fault));
+    let post = handle
+        .infer(0, vec![0.1; d.obs_len], vec![0.0; d.hidden], vec![0.0; d.hidden])
+        .unwrap_err()
+        .to_string();
+    assert!(post.contains(fault), "post-mortem lost the fault: {post}");
+    batcher.join();
+}
