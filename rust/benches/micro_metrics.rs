@@ -1,0 +1,215 @@
+//! Micro-bench: telemetry hot-path costs.
+//!
+//! Measures the instrumentation primitives the coordinator threads hit
+//! on every iteration — `Timer::record` (striped per-thread accumulators
+//! merged at snapshot) against the pre-stripe single-`Mutex<Summary>`
+//! baseline, and span emission through a `SpanRecorder` (enabled ring
+//! push and the disabled inert path) — under a counting global allocator
+//! so the result is *allocations per operation*, not just wall time.
+//! The acceptance bar (ISSUE 6) is zero steady-state allocations for
+//! striped-timer record and span emission; the bench hard-asserts it,
+//! so the CI `--quick` smoke run enforces the property rather than just
+//! reporting it.
+//!
+//! The tables here regenerate EXPERIMENTS.md §Perf (telemetry path).
+//!
+//! `--quick` shrinks every loop (the CI smoke run).
+
+use rlarch::metrics::Registry;
+use rlarch::report::figure::Table;
+use rlarch::telemetry::{SpanKind, SpanRecorder, Tracer};
+use rlarch::util::stats::Summary;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex};
+use std::time::Instant;
+
+/// Counts every allocator entry (alloc + realloc); frees are not
+/// interesting here. The counter is what makes "zero-allocation"
+/// checkable instead of inferred from timings.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_calls() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+/// Worker threads hammering the same primitive — the batcher + actors +
+/// learner population of a typical run.
+const THREADS: usize = 8;
+
+struct BenchResult {
+    name: String,
+    ops: u64,
+    allocs: u64,
+    elapsed_s: f64,
+}
+
+impl BenchResult {
+    fn allocs_per_op(&self) -> f64 {
+        self.allocs as f64 / self.ops as f64
+    }
+
+    fn ns_per_op(&self) -> f64 {
+        self.elapsed_s * 1e9 / self.ops as f64
+    }
+}
+
+/// Run `op` from `THREADS` threads, `ops_per_thread` times each, with a
+/// warmup pass per thread before the measured window. `local` builds
+/// per-thread state (stripe assignment, span recorder) during setup, so
+/// the measured window contains only the steady-state operation. The
+/// allocation/time window is bracketed by barriers: it opens after every
+/// thread has warmed up and closes before any thread exits, so thread
+/// spawn/teardown costs never leak into the measurement.
+fn contended<L, S, F>(name: &str, ops_per_thread: u64, local: S, op: F) -> BenchResult
+where
+    S: Fn() -> L + Sync,
+    F: Fn(&L) + Sync,
+{
+    let start = Barrier::new(THREADS + 1);
+    let done = Barrier::new(THREADS + 1);
+    let exit_gate = Barrier::new(THREADS + 1);
+    let mut allocs = 0;
+    let mut elapsed_s = 0.0;
+    std::thread::scope(|s| {
+        for _ in 0..THREADS {
+            s.spawn(|| {
+                let l = local();
+                for _ in 0..1_000 {
+                    op(&l);
+                }
+                start.wait();
+                for _ in 0..ops_per_thread {
+                    op(std::hint::black_box(&l));
+                }
+                done.wait();
+                exit_gate.wait();
+            });
+        }
+        start.wait();
+        let a0 = alloc_calls();
+        let t0 = Instant::now();
+        done.wait();
+        elapsed_s = t0.elapsed().as_secs_f64();
+        allocs = alloc_calls() - a0;
+        exit_gate.wait();
+    });
+    BenchResult {
+        name: name.to_string(),
+        ops: ops_per_thread * THREADS,
+        allocs,
+        elapsed_s,
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let ops = if quick { 20_000 } else { 200_000 };
+    println!("# micro_metrics — telemetry hot path ({THREADS} threads)\n");
+
+    // Pre-stripe baseline: every thread serializes on one summary lock.
+    let baseline_lock = Mutex::new(Summary::new());
+    let baseline = contended(
+        "timer: single Mutex<Summary> (baseline)",
+        ops,
+        || (),
+        |()| {
+            baseline_lock.lock().unwrap().add(1e-6);
+        },
+    );
+
+    // The shipped striped timer: thread-local stripe, merged at snapshot.
+    let registry = Registry::new();
+    let timer = registry.timer("bench.striped");
+    let striped = contended(
+        "timer: striped record",
+        ops,
+        || timer.clone(),
+        |t| t.record(1e-6),
+    );
+    assert_eq!(
+        striped.allocs, 0,
+        "striped Timer::record must be allocation-free in steady state"
+    );
+    let snap = timer.snapshot();
+    assert_eq!(
+        snap.count(),
+        striped.ops + (THREADS as u64) * 1_000,
+        "snapshot merge lost recordings"
+    );
+
+    // Span emission into per-thread rings (wrapping; drops are counted,
+    // never allocated), plus the disabled inert path every run pays when
+    // telemetry is off.
+    let tracer = Tracer::new(4_096);
+    let enabled = contended(
+        "span: enabled ring emission",
+        ops,
+        || tracer.recorder("bench"),
+        |r| {
+            let _sp = r.span(SpanKind::EnvStep);
+        },
+    );
+    assert_eq!(
+        enabled.allocs, 0,
+        "span emission must be allocation-free in steady state"
+    );
+    let disabled = contended(
+        "span: disabled recorder",
+        ops,
+        SpanRecorder::disabled,
+        |r| {
+            let _sp = r.span(SpanKind::EnvStep);
+        },
+    );
+    assert_eq!(
+        disabled.allocs, 0,
+        "the disabled span path must be allocation-free"
+    );
+
+    let mut t = Table::new(&["path", "ops", "allocs/op", "ns/op"]);
+    let mut csv = String::from("path,ops,allocs_per_op,ns_per_op\n");
+    for r in [&baseline, &striped, &enabled, &disabled] {
+        t.row(&[
+            r.name.clone(),
+            r.ops.to_string(),
+            format!("{:.4}", r.allocs_per_op()),
+            format!("{:.1}", r.ns_per_op()),
+        ]);
+        csv.push_str(&format!(
+            "{},{},{},{}\n",
+            r.name,
+            r.ops,
+            r.allocs_per_op(),
+            r.ns_per_op()
+        ));
+    }
+    println!("{}", t.to_markdown());
+    println!(
+        "striped vs mutex under {THREADS}-thread contention: {:.2}x\n",
+        baseline.ns_per_op() / striped.ns_per_op().max(1e-9)
+    );
+    let p = rlarch::report::write_csv("micro_metrics", &csv);
+    println!("csv: {}", p.display());
+}

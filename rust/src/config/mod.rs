@@ -8,7 +8,7 @@ pub mod types;
 pub use types::{
     ActorConfig, BatcherConfig, ConfigError, CpuModelConfig, EnvConfig,
     GpuModelConfig, InferenceMode, LearnerConfig, PowerModelConfig,
-    ReplayBufferConfig, SystemConfig,
+    ReplayBufferConfig, SystemConfig, TelemetryConfig,
 };
 
 use std::path::Path;

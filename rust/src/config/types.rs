@@ -561,6 +561,78 @@ impl PowerModelConfig {
     }
 }
 
+/// Telemetry: span tracing + registry sampling (all off by default; the
+/// disabled path is bit-for-bit and allocation-identical to an
+/// uninstrumented run).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemetryConfig {
+    /// Background sampler period for the JSONL time-series.
+    pub snapshot_interval_ms: usize,
+    /// Spans retained per instrumented thread (ring; oldest overwritten).
+    pub trace_capacity: usize,
+    /// Chrome trace-event JSON output path; empty = span tracing off.
+    pub trace_out: String,
+    /// JSONL metrics time-series output path; empty = sampler off.
+    pub metrics_out: String,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        Self {
+            snapshot_interval_ms: 200,
+            trace_capacity: 16_384,
+            trace_out: String::new(),
+            metrics_out: String::new(),
+        }
+    }
+}
+
+impl TelemetryConfig {
+    pub fn from_value(v: &Value) -> Self {
+        let d = Self::default();
+        Self {
+            snapshot_interval_ms: get_usize(
+                v,
+                "telemetry.snapshot_interval_ms",
+                d.snapshot_interval_ms,
+            ),
+            trace_capacity: get_usize(
+                v,
+                "telemetry.trace_capacity",
+                d.trace_capacity,
+            ),
+            trace_out: get_str(v, "telemetry.trace_out", &d.trace_out),
+            metrics_out: get_str(v, "telemetry.metrics_out", &d.metrics_out),
+        }
+    }
+
+    pub fn trace_enabled(&self) -> bool {
+        !self.trace_out.is_empty()
+    }
+
+    pub fn sampler_enabled(&self) -> bool {
+        !self.metrics_out.is_empty()
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.trace_enabled() || self.sampler_enabled()
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.snapshot_interval_ms == 0 {
+            return Err(ConfigError::Invalid(
+                "telemetry.snapshot_interval_ms must be > 0".into(),
+            ));
+        }
+        if self.trace_capacity == 0 {
+            return Err(ConfigError::Invalid(
+                "telemetry.trace_capacity must be > 0".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Top-level
 // ---------------------------------------------------------------------------
@@ -588,6 +660,7 @@ pub struct SystemConfig {
     pub gpu: GpuModelConfig,
     pub cpu: CpuModelConfig,
     pub power: PowerModelConfig,
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for SystemConfig {
@@ -605,6 +678,7 @@ impl Default for SystemConfig {
             gpu: GpuModelConfig::default(),
             cpu: CpuModelConfig::default(),
             power: PowerModelConfig::default(),
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -690,6 +764,15 @@ const SECTION_KEYS: &[(&str, &[&str])] = &[
         ],
     ),
     ("power", &["idle_w", "max_w", "sm_dynamic_frac", "util_exponent"]),
+    (
+        "telemetry",
+        &[
+            "snapshot_interval_ms",
+            "trace_capacity",
+            "trace_out",
+            "metrics_out",
+        ],
+    ),
 ];
 
 impl SystemConfig {
@@ -719,6 +802,7 @@ impl SystemConfig {
             gpu: GpuModelConfig::from_value(v),
             cpu: CpuModelConfig::from_value(v),
             power: PowerModelConfig::from_value(v),
+            telemetry: TelemetryConfig::from_value(v),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -734,6 +818,7 @@ impl SystemConfig {
         self.batcher.validate()?;
         self.learner.validate()?;
         self.replay.validate()?;
+        self.telemetry.validate()?;
         // Cross-section: the buffer must be able to hold a train batch
         // and the fill threshold the learner waits for.
         if self.replay.capacity < self.learner.train_batch {
@@ -1024,6 +1109,39 @@ hw_threads = 40
         .to_string();
         assert!(
             err.contains("replay.insert_batch must be <= replay.capacity"),
+            "got: {err}"
+        );
+    }
+
+    #[test]
+    fn parses_telemetry_section() {
+        let cfg = SystemConfig::from_toml(
+            "[telemetry]\nsnapshot_interval_ms = 50\ntrace_capacity = 1024\n\
+             trace_out = \"/tmp/trace.json\"\nmetrics_out = \"/tmp/m.jsonl\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.telemetry.snapshot_interval_ms, 50);
+        assert_eq!(cfg.telemetry.trace_capacity, 1024);
+        assert!(cfg.telemetry.trace_enabled());
+        assert!(cfg.telemetry.sampler_enabled());
+        // Telemetry is off by default: empty output paths.
+        let d = SystemConfig::default();
+        assert!(!d.telemetry.enabled());
+        assert_eq!(d.telemetry.snapshot_interval_ms, 200);
+
+        let err = SystemConfig::from_toml("[telemetry]\ntrace_file = \"x\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("unknown key `trace_file` in section `telemetry`"),
+            "got: {err}"
+        );
+        let err =
+            SystemConfig::from_toml("[telemetry]\nsnapshot_interval_ms = 0\n")
+                .unwrap_err()
+                .to_string();
+        assert!(
+            err.contains("telemetry.snapshot_interval_ms must be > 0"),
             "got: {err}"
         );
     }

@@ -38,6 +38,7 @@ use crate::policy::PolicyClient;
 use crate::replay::{IngestQueue, SequenceReplay};
 use crate::rl::{actor_epsilon, epsilon_greedy, SequenceBuilder};
 use crate::runtime::ModelDims;
+use crate::telemetry::SpanKind;
 use crate::util::prng::Pcg32;
 use crate::vecenv::VecEnv;
 use std::sync::Arc;
@@ -160,7 +161,12 @@ pub fn run_actor(args: ActorArgs) -> anyhow::Result<ActorStats> {
     let seqs = metrics.counter("actor.sequences");
     let step_time = metrics.timer("actor.step_seconds");
     let overlap_time = metrics.timer("actor.overlap_seconds");
+    // Pure CPU phase of a group iteration (action selection + env step +
+    // transition building + replay hand-off, no inference wait): the
+    // `t_env` term of the live CPU/GPU-ratio proxy.
+    let env_time = metrics.timer("actor.env_seconds");
     let return_gauge = metrics.gauge("actor.last_return");
+    let trace = metrics.span_recorder(format_args!("actor-{id}"));
 
     // Double-buffered contiguous [E, S, S, K] observation slabs plus
     // [E, hidden] recurrent-state slabs (h/c inputs and h_next/c_next
@@ -216,12 +222,16 @@ pub fn run_actor(args: ActorArgs) -> anyhow::Result<ActorStats> {
 
             // Redeem group g's in-flight inference: q plus next
             // recurrent state scatter straight into the slot rows.
-            if let Err(err) = policy.wait(
-                g,
-                &mut q[qrow],
-                &mut h_next[hrow.clone()],
-                &mut c_next[hrow.clone()],
-            ) {
+            let waited = {
+                let _sp = trace.span(SpanKind::PolicyWait);
+                policy.wait(
+                    g,
+                    &mut q[qrow],
+                    &mut h_next[hrow.clone()],
+                    &mut c_next[hrow.clone()],
+                )
+            };
+            if let Err(err) = waited {
                 if shutdown.is_signalled() {
                     break 'run; // teardown race, not a failure
                 }
@@ -231,6 +241,7 @@ pub fn run_actor(args: ActorArgs) -> anyhow::Result<ActorStats> {
                 break 'run;
             }
             let t_work = std::time::Instant::now();
+            let sp_env = trace.span(SpanKind::EnvStep);
 
             for s in start..start + len {
                 actions[s] = epsilon_greedy(
@@ -287,6 +298,7 @@ pub fn run_actor(args: ActorArgs) -> anyhow::Result<ActorStats> {
                     &h[hr.clone()],
                     &c[hr.clone()],
                 ) {
+                    let _sp = trace.span(SpanKind::ReplayInsert);
                     ingest.push(seq);
                     seqs.inc();
                 }
@@ -301,11 +313,16 @@ pub fn run_actor(args: ActorArgs) -> anyhow::Result<ActorStats> {
                 }
             }
 
+            drop(sp_env);
+            env_time.record(t_work.elapsed().as_secs_f64());
+
             // Put group g's next round in flight before touching the
             // other groups: at depth ≥ 2 their env work now overlaps it.
-            if let Err(err) =
+            let submitted = {
+                let _sp = trace.span(SpanKind::PolicySubmit);
                 policy.submit(g, len, &next_buf[orow], &h[hrow.clone()], &c[hrow])
-            {
+            };
+            if let Err(err) = submitted {
                 if shutdown.is_signalled() {
                     break 'run;
                 }

@@ -38,9 +38,10 @@
 //! padding waste. `micro_batcher` benches the policy surface.
 
 use crate::config::BatcherConfig;
-use crate::exec::channel::{channel, mailbox, Receiver, RecvTimeoutError, Sender};
+use crate::exec::channel::{channel_counted, mailbox, Receiver, RecvTimeoutError, Sender};
 use crate::metrics::Registry;
 use crate::runtime::{Backend, InferReply, InferRequest, InferSlices, ModelDims};
+use crate::telemetry::SpanKind;
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -275,7 +276,13 @@ impl Batcher {
         backend: Backend,
         metrics: Registry,
     ) -> (Batcher, BatcherHandle) {
-        let (tx, rx) = channel::<InferItem>(256);
+        // The input queue carries the doorbell counter: one condvar
+        // notify per submission (the doorbell-batching backlog item
+        // wants this measured).
+        let (tx, rx) = channel_counted::<InferItem>(
+            256,
+            metrics.counter("batcher.queue_wakeups"),
+        );
         let dims = backend.dims();
         let pool = Arc::new(SlabPool::new());
         let first_error = Arc::new(Mutex::new(None));
@@ -348,6 +355,7 @@ fn run_batcher(
     let launch_size = metrics.gauge("batcher.last_launch_size");
     let infer_time = metrics.timer("batcher.infer_seconds");
     let wait_time = metrics.timer("batcher.collect_seconds");
+    let trace = metrics.span_recorder(format_args!("batcher"));
 
     let mut queue: VecDeque<Open> = VecDeque::new();
     let mut rows_avail = 0usize;
@@ -389,6 +397,7 @@ fn run_batcher(
             }
         }
         let t_collect = Instant::now();
+        let sp_collect = trace.span(SpanKind::BatcherCollect);
         let deadline = t_collect + timeout;
         while rows_avail < cfg.max_batch {
             let now = Instant::now();
@@ -409,6 +418,7 @@ fn run_batcher(
             flush_full.inc();
         }
         wait_time.record(t_collect.elapsed().as_secs_f64());
+        drop(sp_collect);
 
         // Assemble up to max_batch rows off the queue front into the
         // recycled request, consuming submissions partially where needed
@@ -476,6 +486,7 @@ fn run_batcher(
             }));
             reply_slabs.len() - 1
         });
+        let sp_launch = trace.span(SpanKind::BatcherLaunch);
         let result = infer_time.time(|| {
             let out = Arc::get_mut(&mut reply_slabs[idx])
                 .expect("free output slab is uniquely held");
@@ -489,6 +500,7 @@ fn run_batcher(
                 out,
             )
         });
+        drop(sp_launch);
         batches.inc();
         items.add(n as u64);
         occupancy.set(n as f64);

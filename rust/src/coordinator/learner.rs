@@ -30,6 +30,7 @@ use crate::exec::ShutdownToken;
 use crate::metrics::{Counter, Gauge, Registry, Timer};
 use crate::replay::SequenceReplay;
 use crate::runtime::{Backend, ModelDims, TrainBatch, TrainReply};
+use crate::telemetry::{SpanKind, SpanRecorder};
 use crate::util::prng::Pcg32;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
@@ -171,6 +172,10 @@ struct LearnerCtx {
     assemble_time: Timer,
     occupancy_g: Gauge,
     loss_gauge: Gauge,
+    /// Registry handle kept so the prefetch thread can mint its own
+    /// span recorder (recorders are single-writer, one per thread).
+    metrics: Registry,
+    trace: SpanRecorder,
 }
 
 impl LearnerCtx {
@@ -197,9 +202,11 @@ impl LearnerCtx {
         while book.stats.steps < self.cfg.max_steps as u64
             && !self.shutdown.is_signalled()
         {
-            let sampled = self
-                .sample_time
-                .time(|| self.replay.sample(self.cfg.train_batch, &mut rng));
+            let sampled = {
+                let _sp = self.trace.span(SpanKind::ReplaySample);
+                self.sample_time
+                    .time(|| self.replay.sample(self.cfg.train_batch, &mut rng))
+            };
             let Some(mut sampled) = sampled else {
                 self.waits_c.inc();
                 if self.shutdown.sleep_interruptible(Duration::from_millis(1)) {
@@ -207,8 +214,12 @@ impl LearnerCtx {
                 }
                 continue;
             };
-            self.assemble_time
-                .time(|| assemble_into(&mut pool, &sampled.sequences, &self.dims));
+            {
+                let _sp = self.trace.span(SpanKind::LearnerAssemble);
+                self.assemble_time.time(|| {
+                    assemble_into(&mut pool, &sampled.sequences, &self.dims)
+                });
+            }
             // The batch is copied out: release the sampled handles so
             // replay-evicted buffers recycle into the sequence pool.
             if let Some(p) = self.replay.pool() {
@@ -216,7 +227,10 @@ impl LearnerCtx {
                     p.release(s);
                 }
             }
-            let reply = self.train_time.time(|| self.backend.train_step(&mut pool))?;
+            let reply = {
+                let _sp = self.trace.span(SpanKind::LearnerTrain);
+                self.train_time.time(|| self.backend.train_step(&mut pool))
+            }?;
             self.replay.update_priorities(
                 &sampled.slots,
                 &sampled.generations,
@@ -257,6 +271,9 @@ impl LearnerCtx {
                 let train_batch = self.cfg.train_batch;
                 let dims = self.dims;
                 let seed = self.seed;
+                let trace = self
+                    .metrics
+                    .span_recorder(format_args!("learner-prefetch"));
                 move || -> mpsc::Receiver<WriteBack> {
                     let mut rng = Pcg32::seeded(seed ^ 0x1EA8);
                     let mut pool: Vec<TrainBatch> = Vec::new();
@@ -273,8 +290,11 @@ impl LearnerCtx {
                             );
                             pool.push(wb.pool);
                         }
-                        let sampled = sample_time
-                            .time(|| replay.sample(train_batch, &mut rng));
+                        let sampled = {
+                            let _sp = trace.span(SpanKind::ReplaySample);
+                            sample_time
+                                .time(|| replay.sample(train_batch, &mut rng))
+                        };
                         let Some(mut sampled) = sampled else {
                             waits_c.inc();
                             if shutdown
@@ -286,9 +306,12 @@ impl LearnerCtx {
                         };
                         let mut batch =
                             pool.pop().unwrap_or_else(TrainBatch::empty);
-                        assemble_time.time(|| {
-                            assemble_into(&mut batch, &sampled.sequences, &dims)
-                        });
+                        {
+                            let _sp = trace.span(SpanKind::LearnerAssemble);
+                            assemble_time.time(|| {
+                                assemble_into(&mut batch, &sampled.sequences, &dims)
+                            });
+                        }
                         // Copied out: release the handles so evicted
                         // buffers recycle into the sequence pool.
                         if let Some(p) = replay.pool() {
@@ -339,8 +362,11 @@ impl LearnerCtx {
                 };
                 self.occupancy_g.set(hits as f64 / total as f64);
                 let Some(mut pf) = pf else { break };
-                match self.train_time.time(|| self.backend.train_step(&mut pf.batch))
-                {
+                let trained = {
+                    let _sp = self.trace.span(SpanKind::LearnerTrain);
+                    self.train_time.time(|| self.backend.train_step(&mut pf.batch))
+                };
+                match trained {
                     Ok(reply) => {
                         if let Some(probe) = on_batch.as_mut() {
                             probe(&pf.slots);
@@ -409,6 +435,8 @@ pub fn run_learner(args: LearnerArgs) -> anyhow::Result<LearnerStats> {
         assemble_time: metrics.timer("learner.assemble_seconds"),
         occupancy_g: metrics.gauge("learner.prefetch_occupancy"),
         loss_gauge: metrics.gauge("learner.loss"),
+        trace: metrics.span_recorder(format_args!("learner")),
+        metrics,
         cfg,
         dims,
         backend,

@@ -43,6 +43,7 @@ use crate::policy::{CentralClient, LocalClient, PolicyClient};
 use crate::replay::{ReplayConfig, SequenceReplay};
 use crate::rl::SequencePool;
 use crate::runtime::Backend;
+use crate::telemetry::Telemetry;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -118,6 +119,16 @@ pub fn run(cfg: &SystemConfig, backend: Backend, metrics: Registry) -> anyhow::R
     }
     let replay = Arc::new(replay);
     let shutdown = ShutdownToken::new();
+
+    // Telemetry (DESIGN.md §12): install the span tracer before any
+    // worker thread mints a recorder, and start the background registry
+    // sampler. Both are off by default ([`crate::config::TelemetryConfig`]);
+    // the disabled path hands out inert recorders, so the dataflow below
+    // is bit-for-bit identical to an uninstrumented run.
+    let telemetry = Telemetry::from_config(&cfg.telemetry);
+    telemetry.install(&metrics);
+    let sampler = telemetry.start_sampler(&metrics)?;
+
     let t0 = Instant::now();
 
     // Central mode: one batcher in front of the backend.
@@ -219,6 +230,14 @@ pub fn run(cfg: &SystemConfig, backend: Backend, metrics: Registry) -> anyhow::R
         // this at their own exit; last write wins with the same value).
         metrics.gauge("actor.pool_hit_rate").set(p.hit_rate());
     }
+
+    // Stop the sampler after the final metric writes above so its
+    // guaranteed last tick captures the complete run, then flush the
+    // span rings to the Chrome trace file.
+    if let Some(s) = sampler {
+        s.stop()?;
+    }
+    telemetry.write_trace()?;
 
     Ok(RunReport {
         learner: learner_stats,

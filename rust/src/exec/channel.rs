@@ -29,6 +29,7 @@
 //! slabs) are released promptly instead of idling until the last sender
 //! goes away.
 
+use crate::metrics::Counter;
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -51,6 +52,12 @@ struct State<T> {
 struct Shared<T> {
     state: Mutex<State<T>>,
     cv: Condvar,
+    /// Optional doorbell counter: one `inc` per `send`-side
+    /// `notify_one`. The batcher's input queue attaches
+    /// `batcher.queue_wakeups` here — the measurement prerequisite for
+    /// doorbell batching (ROADMAP): how many condvar wakeups the
+    /// current one-notify-per-submission protocol actually pays.
+    wakeups: Option<Counter>,
 }
 
 /// Producer handle. Cloning registers another sender; dropping the last
@@ -68,6 +75,23 @@ pub struct Receiver<T> {
 /// still grows if the in-flight population exceeds it — growth is the
 /// warmup the zero-allocation gate excludes).
 pub fn channel<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    channel_inner(capacity, None)
+}
+
+/// [`channel`] with a wakeup counter attached: every `send`-side
+/// condvar notify bumps it. Used for the batcher input queue
+/// (`batcher.queue_wakeups`).
+pub fn channel_counted<T>(
+    capacity: usize,
+    wakeups: Counter,
+) -> (Sender<T>, Receiver<T>) {
+    channel_inner(capacity, Some(wakeups))
+}
+
+fn channel_inner<T>(
+    capacity: usize,
+    wakeups: Option<Counter>,
+) -> (Sender<T>, Receiver<T>) {
     let shared = Arc::new(Shared {
         state: Mutex::new(State {
             q: VecDeque::with_capacity(capacity),
@@ -75,6 +99,7 @@ pub fn channel<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
             rx_alive: true,
         }),
         cv: Condvar::new(),
+        wakeups,
     });
     (
         Sender {
@@ -94,6 +119,7 @@ pub fn mailbox<T>(capacity: usize) -> Receiver<T> {
             rx_alive: true,
         }),
         cv: Condvar::new(),
+        wakeups: None,
     });
     Receiver { shared }
 }
@@ -108,6 +134,9 @@ impl<T> Sender<T> {
         st.q.push_back(v);
         drop(st);
         self.shared.cv.notify_one();
+        if let Some(c) = &self.shared.wakeups {
+            c.inc();
+        }
         Ok(())
     }
 }
@@ -278,6 +307,27 @@ mod tests {
         let tx = mb.sender();
         tx.send(4).unwrap();
         assert_eq!(mb.recv(), Some(4));
+    }
+
+    #[test]
+    fn counted_channel_counts_one_wakeup_per_send() {
+        let c = Counter::default();
+        let (tx, rx) = channel_counted::<u8>(4, c.clone());
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(c.get(), 5, "one notify per successful send");
+        for _ in 0..5 {
+            rx.recv();
+        }
+        drop(rx);
+        // A rejected send (receiver gone) never notified: no count.
+        assert!(tx.send(9).is_err());
+        assert_eq!(c.get(), 5);
+        // The plain constructor stays uncounted.
+        let (tx2, _rx2) = channel::<u8>(4);
+        tx2.send(1).unwrap();
+        assert_eq!(c.get(), 5);
     }
 
     #[test]

@@ -13,7 +13,7 @@ pub mod pool;
 pub mod rate;
 pub mod shutdown;
 
-pub use channel::{Receiver, RecvTimeoutError, Sender};
+pub use channel::{channel_counted, Receiver, RecvTimeoutError, Sender};
 pub use pool::ThreadPool;
 pub use rate::RateLimiter;
 pub use shutdown::ShutdownToken;

@@ -43,6 +43,14 @@
 //! * [`simarch`] — the architectural simulator (GPU/CPU/power models);
 //!   its system model carries the same `envs_per_actor` and
 //!   `pipeline_depth` axes.
+//! * [`telemetry`] — the observability layer (DESIGN.md §12): striped
+//!   hot-path timers (in [`metrics`]), lock-free per-thread span rings
+//!   rendered as Chrome trace JSON (`--trace-out`), and a background
+//!   registry sampler emitting a JSONL time-series with derived gauges
+//!   (live CPU/GPU-ratio proxy) plus an end-of-run Fig. 2-style phase
+//!   attribution compared against the simarch model
+//!   (`telemetry.model_drift`). Off by default; the disabled path is
+//!   bit-for-bit and allocation-identical to an uninstrumented run.
 //! * [`util`], [`exec`], [`config`], [`cli`], [`metrics`], [`report`] —
 //!   dependency-free infrastructure (the offline crate set has no
 //!   tokio/serde/clap/criterion).
@@ -59,5 +67,6 @@ pub mod report;
 pub mod simarch;
 pub mod rl;
 pub mod runtime;
+pub mod telemetry;
 pub mod util;
 pub mod vecenv;

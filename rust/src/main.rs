@@ -17,9 +17,15 @@ use rlarch::config::{InferenceMode, SystemConfig};
 use rlarch::coordinator;
 use rlarch::metrics::Registry;
 use rlarch::report::figure::{ascii_bar, Table};
-use rlarch::runtime::{Backend, XlaServer};
-use rlarch::simarch::{default_system, GpuModel, TraceSet};
+use rlarch::runtime::{Backend, MockModel, ModelDims, XlaServer};
+use rlarch::simarch::{
+    default_system, synthetic_paper_train_trace, synthetic_paper_trace, GpuModel,
+    TraceSet,
+};
+use rlarch::telemetry;
+use rlarch::vecenv::VecEnv;
 use std::path::Path;
+use std::sync::Arc;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -113,6 +119,21 @@ fn load_config(parsed: &rlarch::cli::Parsed) -> anyhow::Result<SystemConfig> {
     if parsed.get("mode") == "local" {
         cfg.mode = InferenceMode::Local;
     }
+    // Telemetry knobs (train-only flags; absent on other subcommands the
+    // getters fall through to the config/defaults).
+    match parsed.get("trace-out") {
+        "" => {}
+        p => cfg.telemetry.trace_out = p.to_string(),
+    }
+    match parsed.get("metrics-out") {
+        "" => {}
+        p => cfg.telemetry.metrics_out = p.to_string(),
+    }
+    if let Ok(ms) = parsed.get_usize("snapshot-interval-ms") {
+        if ms > 0 {
+            cfg.telemetry.snapshot_interval_ms = ms;
+        }
+    }
     // CLI overrides can invalidate a config that parsed cleanly (e.g.
     // --replay-shards that does not divide the capacity): re-validate
     // here so that fails before the runtime spawns.
@@ -165,6 +186,29 @@ fn cmd_train(args: &[String]) -> i32 {
         )
         .flag("env", "", "override env (grid_pong|breakout|catch|nav_maze)")
         .flag("mode", "central", "central (SEED) or local (IMPALA-style)")
+        .flag(
+            "backend",
+            "xla",
+            "xla (AOT artifacts via PJRT) or mock (deterministic in-process \
+             model; no artifacts needed — CI smoke)",
+        )
+        .flag(
+            "trace-out",
+            "",
+            "write hot-path spans as Chrome trace-event JSON here (enables \
+             span tracing; open in chrome://tracing or Perfetto)",
+        )
+        .flag(
+            "metrics-out",
+            "",
+            "write the sampled metrics time-series as JSONL here (enables \
+             the background registry sampler)",
+        )
+        .flag(
+            "snapshot-interval-ms",
+            "0",
+            "override telemetry sampler period (default from config: 200)",
+        )
         .flag("artifacts", "artifacts", "artifact directory");
     let parsed = match cli.parse(args) {
         Ok(p) => p,
@@ -176,8 +220,31 @@ fn cmd_train(args: &[String]) -> i32 {
     let run = || -> anyhow::Result<()> {
         let cfg = load_config(&parsed)?;
         let dir = Path::new(parsed.get("artifacts"));
-        let (_server, handle) = XlaServer::spawn(dir, None, true)?;
-        let backend = Backend::Xla(handle);
+        // The server handle must outlive the run (dropping it tears the
+        // PJRT process down), hence the keepalive outside the match.
+        let mut _server = None;
+        let backend = match parsed.get("backend") {
+            "xla" => {
+                let (srv, handle) = XlaServer::spawn(dir, None, true)?;
+                _server = Some(srv);
+                Backend::Xla(handle)
+            }
+            "mock" => {
+                // Probe one env instance for the observation shape; the
+                // rest of the dims follow the learner config.
+                let probe = VecEnv::from_config(&cfg.env, 1, cfg.seed)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                let dims = ModelDims {
+                    obs_len: probe.obs_len(),
+                    hidden: 16,
+                    num_actions: rlarch::env::NUM_ACTIONS,
+                    seq_len: cfg.learner.seq_len(),
+                    train_batch: cfg.learner.train_batch,
+                };
+                Backend::Mock(Arc::new(MockModel::new(dims, cfg.seed)))
+            }
+            other => anyhow::bail!("unknown --backend `{other}` (xla|mock)"),
+        };
         let metrics = Registry::new();
         println!(
             "rlarch train: env={} actors={} envs/actor={} depth={} steps={} \
@@ -218,6 +285,41 @@ fn cmd_train(args: &[String]) -> i32 {
             report.learner.target_syncs,
             report.mean_batch_occupancy
         );
+        // Self-validate the telemetry outputs: a run that claims to have
+        // written a trace/time-series must have written parseable ones
+        // (the CI smoke relies on this failing loudly).
+        if cfg.telemetry.trace_enabled() {
+            let events = telemetry::validate_trace_file(&cfg.telemetry.trace_out)?;
+            println!(
+                "trace: {events} span events -> {}",
+                cfg.telemetry.trace_out
+            );
+        }
+        if cfg.telemetry.sampler_enabled() {
+            let samples =
+                telemetry::validate_metrics_file(&cfg.telemetry.metrics_out)?;
+            println!(
+                "metrics: {samples} samples -> {}",
+                cfg.telemetry.metrics_out
+            );
+        }
+        // Fig. 2-style phase attribution: measured busy-share per phase
+        // vs the architectural model's steady-state prediction (kernel
+        // traces when present, the synthetic paper-scale traces
+        // otherwise), with the drift exported as `telemetry.model_drift`.
+        let model = load_traces(parsed.get("artifacts")).unwrap_or_else(|_| {
+            default_system(
+                synthetic_paper_trace(1, 1, 64),
+                synthetic_paper_train_trace(2, 80, 16),
+            )
+        });
+        if let Some(table) = telemetry::attribution_report(
+            &metrics,
+            Some(&model),
+            cfg.actors.num_actors,
+        ) {
+            println!("\nphase attribution (measured vs model):\n{table}");
+        }
         Ok(())
     };
     match run() {

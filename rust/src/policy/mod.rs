@@ -27,6 +27,12 @@
 //! Tickets are caller-chosen small integers (the actor uses its slot
 //! group index), at most one outstanding submission per ticket. The
 //! `policy.inflight` gauge tracks outstanding submissions.
+//!
+//! Telemetry (DESIGN.md §12) observes this seam from the caller's
+//! side: the actor loop wraps each `submit`/`wait` call in
+//! `policy_submit`/`policy_wait` spans, so both client kinds are
+//! covered identically without instrumentation inside the clients —
+//! keeping these hot paths free of even the disabled-recorder check.
 
 mod central;
 mod local;

@@ -24,5 +24,5 @@ pub mod trace;
 pub use cpu::CpuModel;
 pub use gpu::{Breakdown, GpuModel, GpuTuning, Idealize};
 pub use power::PowerModel;
-pub use system::{default_system, InferScaling, SystemModel, SystemPoint};
+pub use system::{default_system, InferScaling, PhaseShares, SystemModel, SystemPoint};
 pub use trace::{synthetic_paper_train_trace, synthetic_paper_trace, synthetic_train_trace, KernelDesc, Trace, TraceSet};

@@ -129,6 +129,20 @@ pub struct SystemPoint {
     pub rtt_s: f64,
 }
 
+/// Fig. 2-style phase attribution: the fraction of total busy time each
+/// pipeline phase claims (shares sum to 1 when any phase is non-zero).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseShares {
+    /// Env stepping (actor CPU).
+    pub env: f64,
+    /// Batched inference (GPU, amortized per env step).
+    pub infer: f64,
+    /// Train step (GPU, amortized per env step).
+    pub train: f64,
+    /// Replay service: actor-side insert + learner-side sample/assemble.
+    pub replay: f64,
+}
+
 impl SystemModel {
     /// Inference time for a batch of `b` on the current GPU model.
     pub fn infer_time(&self, b: usize) -> f64 {
@@ -303,6 +317,38 @@ impl SystemModel {
             power_w,
             perf_per_watt: rate / power_w,
             rtt_s: rtt,
+        }
+    }
+
+    /// Model-predicted Fig. 2-style phase attribution at `n` actors:
+    /// the share of total busy time each phase claims per env step at
+    /// the steady-state operating point. The live telemetry pipeline
+    /// compares its measured breakdown against this and exports the
+    /// gap as `telemetry.model_drift`.
+    pub fn phase_shares(&self, n: usize) -> PhaseShares {
+        let point = self.steady_state(n);
+        let batch = point.batch_size.max(1.0);
+        // Busy seconds per env step, by phase.
+        let env = self.cpu.step_cost_us() * 1e-6;
+        let infer =
+            self.infer_time(self.launch_size((batch.round() as usize).max(1))) / batch;
+        let train = self.train_per_env * self.train_time();
+        let replay = self.insert_overhead_s()
+            + self.train_per_env * (self.learner_sample_s + self.learner_assemble_s);
+        let total = env + infer + train + replay;
+        if total <= 0.0 {
+            return PhaseShares {
+                env: 0.0,
+                infer: 0.0,
+                train: 0.0,
+                replay: 0.0,
+            };
+        }
+        PhaseShares {
+            env: env / total,
+            infer: infer / total,
+            train: train / total,
+            replay: replay / total,
         }
     }
 
@@ -496,6 +542,26 @@ mod tests {
     fn batch_size_grows_with_actors() {
         let m = model();
         assert!(m.steady_state(64).batch_size > m.steady_state(2).batch_size);
+    }
+
+    #[test]
+    fn phase_shares_are_a_distribution_and_env_dominates_at_scale() {
+        let m = model();
+        for n in [4, 40, 256] {
+            let p = m.phase_shares(n);
+            let total = p.env + p.infer + p.train + p.replay;
+            assert!((total - 1.0).abs() < 1e-9, "shares must sum to 1, n={n}");
+            for s in [p.env, p.infer, p.train, p.replay] {
+                assert!((0.0..=1.0).contains(&s));
+            }
+        }
+        // The paper's Fig. 2 finding: env stepping is the dominant CPU
+        // phase for Atari-class workloads.
+        let p = m.phase_shares(40);
+        assert!(
+            p.env > p.infer && p.env > p.train,
+            "env share {p:?} should dominate"
+        );
     }
 
     #[test]

@@ -1,0 +1,186 @@
+//! Telemetry: the observability layer over the SEED dataflow.
+//!
+//! Three pillars, all config-gated and off by default (the disabled
+//! path is bit-for-bit and allocation-identical to an uninstrumented
+//! run):
+//!
+//! 1. **Striped hot-path timers** live in `metrics/` (per-thread stripe
+//!    accumulators merged at snapshot; see `metrics::Timer`).
+//! 2. **Span tracing** ([`span`]): lock-free per-thread rings of
+//!    structured phase spans rendered as Chrome trace-event JSON
+//!    (`rlarch train --trace-out`).
+//! 3. **Phase attribution** ([`sampler`], [`phase`]): a background
+//!    thread samples the registry into a JSONL time-series with derived
+//!    gauges (steps/s, batch occupancy, padding efficiency, live
+//!    CPU/GPU-ratio proxy), and the end of run renders a Fig. 2-style
+//!    breakdown compared against `SystemModel::steady_state`
+//!    (`telemetry.model_drift`).
+//!
+//! [`Telemetry`] is the lifecycle handle the coordinator drives:
+//! `install` the tracer into the metrics registry, `start_sampler`
+//! before the workers spawn, `write_trace` after they join.
+
+pub mod phase;
+pub mod sampler;
+pub mod span;
+
+pub use phase::{attribution_report, MeasuredPhases, MODEL_DRIFT};
+pub use sampler::{SamplerHandle, CPU_GPU_RATIO};
+pub use span::{SpanKind, SpanRecorder, Tracer};
+
+use crate::config::TelemetryConfig;
+use crate::metrics::Registry;
+use crate::util::json::Value;
+use std::sync::Arc;
+
+/// Per-run telemetry lifecycle, built from the `[telemetry]` config
+/// section. With default config this is a no-op shell: no tracer, no
+/// sampler, no files.
+pub struct Telemetry {
+    cfg: TelemetryConfig,
+    tracer: Option<Arc<Tracer>>,
+}
+
+impl Telemetry {
+    pub fn disabled() -> Telemetry {
+        Telemetry {
+            cfg: TelemetryConfig::default(),
+            tracer: None,
+        }
+    }
+
+    pub fn from_config(cfg: &TelemetryConfig) -> Telemetry {
+        Telemetry {
+            cfg: cfg.clone(),
+            tracer: cfg
+                .trace_enabled()
+                .then(|| Tracer::new(cfg.trace_capacity)),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    /// Make span recorders fetched from `metrics` live (tracing runs
+    /// only).
+    pub fn install(&self, metrics: &Registry) {
+        if let Some(t) = &self.tracer {
+            metrics.install_tracer(t.clone());
+        }
+    }
+
+    /// Spawn the background registry sampler if `metrics_out` is set.
+    pub fn start_sampler(
+        &self,
+        metrics: &Registry,
+    ) -> anyhow::Result<Option<SamplerHandle>> {
+        if !self.cfg.sampler_enabled() {
+            return Ok(None);
+        }
+        Ok(Some(sampler::start(
+            metrics.clone(),
+            &self.cfg.metrics_out,
+            self.cfg.snapshot_interval_ms,
+        )?))
+    }
+
+    /// Write the Chrome trace to `trace_out` (tracing runs only; call
+    /// after the instrumented threads have joined). Returns the path
+    /// and span count when a trace was written.
+    pub fn write_trace(&self) -> anyhow::Result<Option<(String, usize)>> {
+        let Some(tracer) = &self.tracer else {
+            return Ok(None);
+        };
+        let path = &self.cfg.trace_out;
+        let doc = tracer.chrome_trace();
+        std::fs::write(path, doc.to_string())
+            .map_err(|e| anyhow::anyhow!("telemetry.trace_out `{path}`: {e}"))?;
+        Ok(Some((path.clone(), tracer.span_count())))
+    }
+}
+
+/// Validate an emitted Chrome trace: parses as JSON and carries a
+/// non-empty `traceEvents` array. Returns the event count. Used by the
+/// CLI after a `--trace-out` run and by the CI smoke gate.
+pub fn validate_trace_file(path: &str) -> anyhow::Result<usize> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read trace `{path}`: {e}"))?;
+    let v = Value::parse(&text)
+        .map_err(|e| anyhow::anyhow!("trace `{path}` is not valid JSON: {e}"))?;
+    let events = v
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("trace `{path}` lacks traceEvents[]"))?;
+    if events.is_empty() {
+        anyhow::bail!("trace `{path}` has no events");
+    }
+    Ok(events.len())
+}
+
+/// Validate an emitted JSONL metrics series: every non-empty line
+/// parses as a JSON object with a numeric `t`. Returns the line count.
+pub fn validate_metrics_file(path: &str) -> anyhow::Result<usize> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read metrics `{path}`: {e}"))?;
+    let mut n = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Value::parse(line).map_err(|e| {
+            anyhow::anyhow!("metrics `{path}` line {}: invalid JSON: {e}", i + 1)
+        })?;
+        if v.get("t").and_then(|t| t.as_f64()).is_none() {
+            anyhow::bail!("metrics `{path}` line {} lacks numeric `t`", i + 1);
+        }
+        n += 1;
+    }
+    if n == 0 {
+        anyhow::bail!("metrics `{path}` is empty");
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_telemetry_is_inert() {
+        let t = Telemetry::disabled();
+        assert!(!t.enabled());
+        let metrics = Registry::new();
+        t.install(&metrics);
+        assert!(metrics.tracer().is_none());
+        assert!(t.start_sampler(&metrics).unwrap().is_none());
+        assert!(t.write_trace().unwrap().is_none());
+        // Recorders fetched through the registry come back inert.
+        assert!(!metrics.span_recorder(format_args!("actor-0")).enabled());
+    }
+
+    #[test]
+    fn trace_write_and_validate_roundtrip() {
+        let dir = std::env::temp_dir().join("rlarch_telemetry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        let cfg = TelemetryConfig {
+            trace_out: path.to_str().unwrap().to_string(),
+            ..Default::default()
+        };
+        let t = Telemetry::from_config(&cfg);
+        assert!(t.enabled());
+        let metrics = Registry::new();
+        t.install(&metrics);
+        let rec = metrics.span_recorder(format_args!("worker-{}", 0));
+        assert!(rec.enabled());
+        {
+            let _g = rec.span(SpanKind::EnvStep);
+        }
+        let (written, spans) = t.write_trace().unwrap().unwrap();
+        assert_eq!(spans, 1);
+        // Metadata event + 1 span event.
+        assert_eq!(validate_trace_file(&written).unwrap(), 2);
+        assert!(validate_metrics_file(&written).is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! End-of-run Fig. 2-style phase attribution: measured busy time per
+//! pipeline phase (from timer `.sum`s), rendered as a breakdown table
+//! and compared against `SystemModel::steady_state`'s prediction. The
+//! mean absolute share gap is exported as the `telemetry.model_drift`
+//! gauge so calibration regressions are a single number.
+
+use crate::metrics::Registry;
+use crate::simarch::{PhaseShares, SystemModel};
+use std::collections::BTreeMap;
+
+/// Gauge exporting the model-vs-measured drift (mean absolute share
+/// difference across the four phases, in [0, 1]).
+pub const MODEL_DRIFT: &str = "telemetry.model_drift";
+
+/// Measured busy seconds per phase, summed across threads.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MeasuredPhases {
+    pub env_s: f64,
+    pub infer_s: f64,
+    pub train_s: f64,
+    pub replay_s: f64,
+}
+
+impl MeasuredPhases {
+    /// Pull the phase sums out of a registry snapshot. Phases map to
+    /// the metric inventory as: env = `actor.env_seconds` (env stepping
+    /// + transition building + replay hand-off), infer =
+    /// `batcher.infer_seconds`, train = `learner.train_seconds`,
+    /// replay = `learner.sample_seconds` + `learner.assemble_seconds`.
+    pub fn from_snapshot(snap: &BTreeMap<String, f64>) -> MeasuredPhases {
+        let get = |k: &str| snap.get(k).copied().unwrap_or(0.0);
+        MeasuredPhases {
+            env_s: get("actor.env_seconds.sum"),
+            infer_s: get("batcher.infer_seconds.sum"),
+            train_s: get("learner.train_seconds.sum"),
+            replay_s: get("learner.sample_seconds.sum")
+                + get("learner.assemble_seconds.sum"),
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.env_s + self.infer_s + self.train_s + self.replay_s
+    }
+
+    pub fn shares(&self) -> PhaseShares {
+        let total = self.total();
+        if total <= 0.0 {
+            return PhaseShares::default();
+        }
+        PhaseShares {
+            env: self.env_s / total,
+            infer: self.infer_s / total,
+            train: self.train_s / total,
+            replay: self.replay_s / total,
+        }
+    }
+}
+
+fn share_drift(a: &PhaseShares, b: &PhaseShares) -> f64 {
+    ((a.env - b.env).abs()
+        + (a.infer - b.infer).abs()
+        + (a.train - b.train).abs()
+        + (a.replay - b.replay).abs())
+        / 4.0
+}
+
+/// Render the Fig. 2-style breakdown table and, when a model is
+/// supplied, set `telemetry.model_drift` in the registry. Returns
+/// `None` when nothing was measured (e.g. a run that never trained).
+pub fn attribution_report(
+    metrics: &Registry,
+    model: Option<&SystemModel>,
+    actors: usize,
+) -> Option<String> {
+    let snap = metrics.snapshot();
+    let measured = MeasuredPhases::from_snapshot(&snap);
+    if measured.total() <= 0.0 {
+        return None;
+    }
+    let shares = measured.shares();
+    let predicted = model.map(|m| m.phase_shares(actors.max(1)));
+    let drift = predicted.map(|p| share_drift(&shares, &p));
+    if let Some(d) = drift {
+        metrics.gauge(MODEL_DRIFT).set(d);
+    }
+
+    let rows: [(&str, f64, f64, Option<f64>); 4] = [
+        ("env", measured.env_s, shares.env, predicted.map(|p| p.env)),
+        (
+            "infer",
+            measured.infer_s,
+            shares.infer,
+            predicted.map(|p| p.infer),
+        ),
+        (
+            "train",
+            measured.train_s,
+            shares.train,
+            predicted.map(|p| p.train),
+        ),
+        (
+            "replay",
+            measured.replay_s,
+            shares.replay,
+            predicted.map(|p| p.replay),
+        ),
+    ];
+    let mut out = String::from(
+        "| phase | busy s | measured share | model share | gap (pp) |\n\
+         |---|---|---|---|---|\n",
+    );
+    for (name, busy, share, pred) in rows {
+        let (model_col, gap_col) = match pred {
+            Some(p) => (
+                format!("{:.1}%", p * 100.0),
+                format!("{:+.1}", (share - p) * 100.0),
+            ),
+            None => ("-".into(), "-".into()),
+        };
+        out.push_str(&format!(
+            "| {name} | {busy:.3} | {:.1}% | {model_col} | {gap_col} |\n",
+            share * 100.0
+        ));
+    }
+    if let Some(d) = drift {
+        out.push_str(&format!(
+            "\ntelemetry.model_drift = {d:.4} (mean |measured - model| share)\n"
+        ));
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simarch::{
+        default_system, synthetic_paper_trace, synthetic_paper_train_trace,
+    };
+
+    fn fake_measured(metrics: &Registry) {
+        metrics.timer("actor.env_seconds").record(0.6);
+        metrics.timer("batcher.infer_seconds").record(0.2);
+        metrics.timer("learner.train_seconds").record(0.1);
+        metrics.timer("learner.sample_seconds").record(0.05);
+        metrics.timer("learner.assemble_seconds").record(0.05);
+    }
+
+    #[test]
+    fn measured_shares_from_snapshot() {
+        let metrics = Registry::new();
+        fake_measured(&metrics);
+        let m = MeasuredPhases::from_snapshot(&metrics.snapshot());
+        assert!((m.total() - 1.0).abs() < 1e-9);
+        let s = m.shares();
+        assert!((s.env - 0.6).abs() < 1e-9);
+        assert!((s.replay - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn attribution_sets_drift_gauge_and_renders_table() {
+        let metrics = Registry::new();
+        fake_measured(&metrics);
+        let model = default_system(
+            synthetic_paper_trace(1, 1, 64),
+            synthetic_paper_train_trace(2, 80, 16),
+        );
+        let table = attribution_report(&metrics, Some(&model), 4).unwrap();
+        for phase in ["env", "infer", "train", "replay"] {
+            assert!(table.contains(&format!("| {phase} |")), "{table}");
+        }
+        assert!(table.contains("telemetry.model_drift"), "{table}");
+        let drift = metrics.gauge(MODEL_DRIFT).get();
+        assert!(
+            (0.0..=1.0).contains(&drift) && metrics.gauge(MODEL_DRIFT).written(),
+            "drift {drift}"
+        );
+    }
+
+    #[test]
+    fn attribution_without_model_or_measurement() {
+        let metrics = Registry::new();
+        assert!(attribution_report(&metrics, None, 4).is_none());
+        fake_measured(&metrics);
+        let table = attribution_report(&metrics, None, 4).unwrap();
+        assert!(table.contains("| env |"));
+        assert!(!metrics.gauge(MODEL_DRIFT).written());
+    }
+}

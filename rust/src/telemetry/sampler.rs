@@ -1,0 +1,242 @@
+//! Background registry sampler: a thread that snapshots the metrics
+//! registry every `telemetry.snapshot_interval_ms` into a JSONL
+//! time-series and publishes derived gauges — steps/s, inference batch
+//! occupancy, padding efficiency, and the paper's live CPU/GPU-ratio
+//! proxy `(t_env + t_replay) / (t_infer + t_train)` — back into the
+//! registry under `telemetry.*`.
+//!
+//! Each output line is one flat JSON object: `t` (seconds since sampler
+//! start), every metric from `Registry::snapshot`, and the derived
+//! gauges. Rates are computed from deltas between consecutive
+//! snapshots; the CPU/GPU ratio from cumulative timer `.sum`s.
+
+use crate::metrics::Registry;
+use crate::util::json::Value;
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Derived-gauge names (also the JSONL keys).
+pub const STEPS_PER_SEC: &str = "telemetry.steps_per_sec";
+pub const BATCH_OCCUPANCY: &str = "telemetry.batch_occupancy";
+pub const PADDING_EFFICIENCY: &str = "telemetry.padding_efficiency";
+pub const CPU_GPU_RATIO: &str = "telemetry.cpu_gpu_ratio";
+
+/// Counters a rate/ratio is derived from, carried between ticks.
+#[derive(Default)]
+struct Window {
+    t: f64,
+    env_steps: f64,
+    items: f64,
+    batches: f64,
+    padded_rows: f64,
+}
+
+/// Handle to the running sampler thread. `stop` signals it, joins it,
+/// and returns how many samples were written (always ≥ 1: a final
+/// snapshot is taken on shutdown so even sub-interval runs produce a
+/// time-series).
+pub struct SamplerHandle {
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<std::io::Result<u64>>>,
+}
+
+impl SamplerHandle {
+    pub fn stop(mut self) -> anyhow::Result<u64> {
+        self.stop.store(true, Ordering::Relaxed);
+        let n = self
+            .join
+            .take()
+            .expect("sampler joined twice")
+            .join()
+            .map_err(|_| anyhow::anyhow!("telemetry sampler thread panicked"))??;
+        Ok(n)
+    }
+}
+
+impl Drop for SamplerHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Spawn the sampler. The output file is created eagerly so a bad path
+/// fails the run up front, not silently from a background thread.
+pub fn start(
+    metrics: Registry,
+    path: &str,
+    interval_ms: usize,
+) -> anyhow::Result<SamplerHandle> {
+    let file = File::create(path)
+        .map_err(|e| anyhow::anyhow!("telemetry.metrics_out `{path}`: {e}"))?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let interval = Duration::from_millis(interval_ms.max(1) as u64);
+    let join = std::thread::Builder::new()
+        .name("rlarch-telemetry".into())
+        .spawn(move || run_sampler(metrics, file, interval, stop2))
+        .expect("spawn telemetry sampler");
+    Ok(SamplerHandle {
+        stop,
+        join: Some(join),
+    })
+}
+
+fn run_sampler(
+    metrics: Registry,
+    file: File,
+    interval: Duration,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<u64> {
+    let mut out = BufWriter::new(file);
+    let t0 = Instant::now();
+    let mut prev = Window::default();
+    let mut samples = 0u64;
+    let slice = Duration::from_millis(10).min(interval);
+    'run: loop {
+        let deadline = Instant::now() + interval;
+        while Instant::now() < deadline {
+            if stop.load(Ordering::Relaxed) {
+                break 'run;
+            }
+            std::thread::sleep(slice);
+        }
+        tick(&metrics, &mut out, t0, &mut prev)?;
+        samples += 1;
+    }
+    // Final snapshot so the series always covers the end of the run.
+    tick(&metrics, &mut out, t0, &mut prev)?;
+    samples += 1;
+    out.flush()?;
+    Ok(samples)
+}
+
+fn tick(
+    metrics: &Registry,
+    out: &mut BufWriter<File>,
+    t0: Instant,
+    prev: &mut Window,
+) -> std::io::Result<()> {
+    let snap = metrics.snapshot();
+    let t = t0.elapsed().as_secs_f64();
+    let derived = derive(metrics, &snap, t, prev);
+
+    let mut kvs: Vec<(String, Value)> = Vec::with_capacity(snap.len() + 5);
+    kvs.push(("t".into(), Value::Num(t)));
+    for (k, v) in &snap {
+        kvs.push((k.clone(), Value::Num(*v)));
+    }
+    for (k, v) in derived {
+        kvs.push((k.into(), Value::Num(v)));
+    }
+    let line = Value::Obj(kvs).to_string();
+    out.write_all(line.as_bytes())?;
+    out.write_all(b"\n")?;
+    out.flush()
+}
+
+/// Compute the derived gauges from the snapshot, publish them into the
+/// registry, and return them for the JSONL line. Rate-style gauges use
+/// the delta since the previous tick; the CPU/GPU ratio uses cumulative
+/// busy seconds (stable from the first sample onward).
+fn derive(
+    metrics: &Registry,
+    snap: &BTreeMap<String, f64>,
+    t: f64,
+    prev: &mut Window,
+) -> Vec<(&'static str, f64)> {
+    let get = |k: &str| snap.get(k).copied().unwrap_or(0.0);
+    let cur = Window {
+        t,
+        env_steps: get("actor.env_steps"),
+        items: get("batcher.items"),
+        batches: get("batcher.batches"),
+        padded_rows: get("batcher.padded_rows"),
+    };
+    let dt = (cur.t - prev.t).max(1e-9);
+    let d_items = cur.items - prev.items;
+    let d_batches = cur.batches - prev.batches;
+    let d_padded = cur.padded_rows - prev.padded_rows;
+
+    let mut out = Vec::with_capacity(4);
+    out.push((STEPS_PER_SEC, (cur.env_steps - prev.env_steps) / dt));
+    if d_batches > 0.0 {
+        out.push((BATCH_OCCUPANCY, d_items / d_batches));
+        out.push((PADDING_EFFICIENCY, d_items / (d_items + d_padded).max(1.0)));
+    }
+    // The paper's live bottleneck proxy: CPU-side busy time (env
+    // stepping + replay service) vs GPU-side busy time (inference +
+    // training), from cumulative timer sums.
+    let cpu_s = get("actor.env_seconds.sum")
+        + get("learner.sample_seconds.sum")
+        + get("learner.assemble_seconds.sum");
+    let gpu_s = get("batcher.infer_seconds.sum") + get("learner.train_seconds.sum");
+    if gpu_s > 0.0 {
+        out.push((CPU_GPU_RATIO, cpu_s / gpu_s));
+    }
+    for (k, v) in &out {
+        metrics.gauge(k).set(*v);
+    }
+    *prev = cur;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampler_writes_parseable_jsonl_with_derived_gauges() {
+        let dir = std::env::temp_dir().join("rlarch_sampler_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("metrics.jsonl");
+        let metrics = Registry::new();
+        // Simulate a running system.
+        metrics.counter("actor.env_steps").add(100);
+        metrics.counter("batcher.items").add(100);
+        metrics.counter("batcher.batches").add(20);
+        metrics.counter("batcher.padded_rows").add(28);
+        metrics.timer("actor.env_seconds").record(0.4);
+        metrics.timer("batcher.infer_seconds").record(0.1);
+        metrics.timer("learner.train_seconds").record(0.1);
+
+        let handle =
+            start(metrics.clone(), path.to_str().unwrap(), 5).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        metrics.counter("actor.env_steps").add(50);
+        let samples = handle.stop().unwrap();
+        assert!(samples >= 2, "expected multiple ticks, got {samples}");
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> =
+            text.lines().filter(|l| !l.trim().is_empty()).collect();
+        assert_eq!(lines.len() as u64, samples);
+        for line in &lines {
+            let v = Value::parse(line).expect("JSONL line must parse");
+            assert!(v.get("t").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(v.get("actor.env_steps").is_some());
+        }
+        // First tick sees all cumulative state as a delta: occupancy and
+        // the cpu/gpu ratio are present and sane.
+        let first = Value::parse(lines[0]).unwrap();
+        let occ = first.get(BATCH_OCCUPANCY).unwrap().as_f64().unwrap();
+        assert!((occ - 5.0).abs() < 1e-9, "occupancy {occ}");
+        let pad = first.get(PADDING_EFFICIENCY).unwrap().as_f64().unwrap();
+        assert!((pad - 100.0 / 128.0).abs() < 1e-9, "padding {pad}");
+        let ratio = first.get(CPU_GPU_RATIO).unwrap().as_f64().unwrap();
+        assert!((ratio - 2.0).abs() < 1e-9, "cpu/gpu ratio {ratio}");
+        // Derived gauges are published back into the registry.
+        assert!(metrics.gauge(STEPS_PER_SEC).written());
+        assert!((metrics.gauge(CPU_GPU_RATIO).get() - 2.0).abs() < 1e-9);
+
+        let bad = start(Registry::new(), "/nonexistent-dir/x.jsonl", 5);
+        assert!(bad.is_err(), "bad path must fail eagerly");
+    }
+}

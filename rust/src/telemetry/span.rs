@@ -1,0 +1,367 @@
+//! Structured span tracing: a lock-free per-thread ring of phase spans.
+//!
+//! Each instrumented thread registers one `SpanRing` with the shared
+//! [`Tracer`] and records spans through a [`SpanRecorder`] — a
+//! single-writer handle whose hot path is two relaxed atomic stores into
+//! a preallocated slot (no locks, no allocation; `micro_metrics` pins
+//! this at 0 steady-state allocations). The coordinator drains all rings
+//! after its worker threads join and renders them as Chrome trace-event
+//! JSON (`chrome://tracing` / Perfetto), making pipeline overlap
+//! (`pipeline_depth`, learner prefetch) visually inspectable.
+//!
+//! Slots are pairs of `AtomicU64` (start_us, dur_us<<8 | kind), so a
+//! drain that races a still-live writer can at worst observe one torn
+//! span — never undefined behavior. In practice `Tracer::drain` runs
+//! post-join when every writer has quiesced.
+
+use crate::util::json::{obj, Value};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Pipeline phases a span can describe. Encoded as a `u8` in the ring
+/// so a slot stays two machine words.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// Actor: action selection + env stepping + transition building +
+    /// replay hand-off for one slot group.
+    EnvStep = 0,
+    /// Actor → batcher submission (enqueue side).
+    PolicySubmit = 1,
+    /// Actor blocked waiting for an inference reply.
+    PolicyWait = 2,
+    /// Batcher: collecting rows until the flush condition (size/timeout).
+    BatcherCollect = 3,
+    /// Batcher: padded-bucket launch on the backend (flush → launch).
+    BatcherLaunch = 4,
+    /// Actor-side replay insert (ingest push, including deferred flush).
+    ReplayInsert = 5,
+    /// Learner-side prioritized sampling.
+    ReplaySample = 6,
+    /// Learner: batch assembly from sampled sequences.
+    LearnerAssemble = 7,
+    /// Learner: backend train step.
+    LearnerTrain = 8,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::EnvStep => "env_step",
+            SpanKind::PolicySubmit => "policy_submit",
+            SpanKind::PolicyWait => "policy_wait",
+            SpanKind::BatcherCollect => "batcher_collect",
+            SpanKind::BatcherLaunch => "batcher_launch",
+            SpanKind::ReplayInsert => "replay_insert",
+            SpanKind::ReplaySample => "replay_sample",
+            SpanKind::LearnerAssemble => "learner_assemble",
+            SpanKind::LearnerTrain => "learner_train",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<SpanKind> {
+        Some(match v {
+            0 => SpanKind::EnvStep,
+            1 => SpanKind::PolicySubmit,
+            2 => SpanKind::PolicyWait,
+            3 => SpanKind::BatcherCollect,
+            4 => SpanKind::BatcherLaunch,
+            5 => SpanKind::ReplayInsert,
+            6 => SpanKind::ReplaySample,
+            7 => SpanKind::LearnerAssemble,
+            8 => SpanKind::LearnerTrain,
+            _ => return None,
+        })
+    }
+}
+
+/// A completed span, decoded from a ring slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// Start, microseconds since the tracer epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+/// One ring slot: `a` = start_us, `b` = dur_us << 8 | kind. Durations
+/// cap at 2^56 µs (~2k years), far beyond any run.
+struct Slot {
+    a: AtomicU64,
+    b: AtomicU64,
+}
+
+const SLOT_EMPTY: u64 = u64::MAX;
+
+/// Fixed-capacity single-writer span ring. The owning thread writes via
+/// its `SpanRecorder`; older spans are overwritten on wrap (the trace
+/// keeps the newest `capacity` spans per thread).
+pub struct SpanRing {
+    label: String,
+    tid: u32,
+    slots: Box<[Slot]>,
+    /// Total spans ever pushed (not wrapped).
+    head: AtomicUsize,
+}
+
+impl SpanRing {
+    fn new(label: String, tid: u32, capacity: usize) -> Self {
+        let slots = (0..capacity.max(1))
+            .map(|_| Slot {
+                a: AtomicU64::new(SLOT_EMPTY),
+                b: AtomicU64::new(SLOT_EMPTY),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        Self {
+            label,
+            tid,
+            slots,
+            head: AtomicUsize::new(0),
+        }
+    }
+
+    /// Hot path: two relaxed stores + a release bump. No locks, no
+    /// allocation.
+    fn push(&self, kind: SpanKind, start_us: u64, dur_us: u64) {
+        let h = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[h % self.slots.len()];
+        slot.a.store(start_us, Ordering::Relaxed);
+        slot.b
+            .store((dur_us << 8) | kind as u64, Ordering::Relaxed);
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Spans dropped to wrap-around (total pushed minus retained).
+    pub fn dropped(&self) -> u64 {
+        let h = self.head.load(Ordering::Acquire);
+        h.saturating_sub(self.slots.len()) as u64
+    }
+
+    /// Decode retained spans in push order (oldest retained first).
+    pub fn collect(&self) -> Vec<Span> {
+        let h = self.head.load(Ordering::Acquire);
+        let cap = self.slots.len();
+        let n = h.min(cap);
+        let mut out = Vec::with_capacity(n);
+        for i in (h - n)..h {
+            let slot = &self.slots[i % cap];
+            let a = slot.a.load(Ordering::Relaxed);
+            let b = slot.b.load(Ordering::Relaxed);
+            if a == SLOT_EMPTY || b == SLOT_EMPTY {
+                continue;
+            }
+            if let Some(kind) = SpanKind::from_u8((b & 0xFF) as u8) {
+                out.push(Span {
+                    kind,
+                    start_us: a,
+                    dur_us: b >> 8,
+                });
+            }
+        }
+        out
+    }
+}
+
+/// Shared tracer: the registration point for per-thread rings and the
+/// post-run drain/render side. Created once per run when `--trace-out`
+/// is set; absent (and therefore zero-cost) otherwise.
+pub struct Tracer {
+    epoch: Instant,
+    capacity: usize,
+    rings: Mutex<Vec<Arc<SpanRing>>>,
+}
+
+impl Tracer {
+    pub fn new(span_capacity: usize) -> Arc<Tracer> {
+        Arc::new(Tracer {
+            epoch: Instant::now(),
+            capacity: span_capacity.max(1),
+            rings: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Register a ring for the calling thread and hand back its
+    /// single-writer recorder. Allocation happens here (startup), never
+    /// on the record path.
+    pub fn recorder(self: &Arc<Tracer>, label: &str) -> SpanRecorder {
+        let mut rings = self.rings.lock().unwrap();
+        let tid = rings.len() as u32 + 1;
+        let ring = Arc::new(SpanRing::new(label.to_string(), tid, self.capacity));
+        rings.push(ring.clone());
+        SpanRecorder {
+            inner: Some(RecorderInner {
+                ring,
+                epoch: self.epoch,
+            }),
+        }
+    }
+
+    /// All registered rings (drain after the writers have joined).
+    pub fn rings(&self) -> Vec<Arc<SpanRing>> {
+        self.rings.lock().unwrap().clone()
+    }
+
+    /// Total spans recorded across every ring (retained, post-wrap).
+    pub fn span_count(&self) -> usize {
+        self.rings().iter().map(|r| r.collect().len()).sum()
+    }
+
+    /// Render every ring as a Chrome trace-event JSON document
+    /// (`{"traceEvents": [...]}`): one complete-event (`"ph":"X"`) per
+    /// span plus a thread-name metadata event per ring.
+    pub fn chrome_trace(&self) -> Value {
+        let mut events: Vec<Value> = Vec::new();
+        for ring in self.rings() {
+            events.push(obj(&[
+                ("name", Value::from("thread_name")),
+                ("ph", Value::from("M")),
+                ("pid", Value::from(1u64)),
+                ("tid", Value::from(ring.tid as u64)),
+                (
+                    "args",
+                    obj(&[("name", Value::from(ring.label.as_str()))]),
+                ),
+            ]));
+            for s in ring.collect() {
+                events.push(obj(&[
+                    ("name", Value::from(s.kind.name())),
+                    ("cat", Value::from("rlarch")),
+                    ("ph", Value::from("X")),
+                    ("ts", Value::from(s.start_us)),
+                    ("dur", Value::from(s.dur_us)),
+                    ("pid", Value::from(1u64)),
+                    ("tid", Value::from(ring.tid as u64)),
+                ]));
+            }
+        }
+        obj(&[("traceEvents", Value::Arr(events))])
+    }
+}
+
+struct RecorderInner {
+    ring: Arc<SpanRing>,
+    epoch: Instant,
+}
+
+/// Per-thread span writer. `inner == None` is the disabled recorder:
+/// `span()` returns an inert guard without reading the clock, so the
+/// disabled path stays bit-for-bit and allocation-identical to an
+/// uninstrumented build.
+///
+/// Deliberately not `Clone`: one recorder (and so one ring writer) per
+/// thread is the single-writer contract the lock-free ring relies on.
+pub struct SpanRecorder {
+    inner: Option<RecorderInner>,
+}
+
+impl SpanRecorder {
+    pub fn disabled() -> SpanRecorder {
+        SpanRecorder { inner: None }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Open a span; it records itself into the ring when dropped.
+    #[inline]
+    pub fn span(&self, kind: SpanKind) -> SpanGuard<'_> {
+        SpanGuard {
+            open: self
+                .inner
+                .as_ref()
+                .map(|inner| (inner, kind, Instant::now())),
+        }
+    }
+}
+
+/// RAII span: measures from `SpanRecorder::span` to drop.
+pub struct SpanGuard<'a> {
+    open: Option<(&'a RecorderInner, SpanKind, Instant)>,
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        if let Some((inner, kind, t0)) = self.open.take() {
+            let start_us = t0.duration_since(inner.epoch).as_micros() as u64;
+            let dur_us = t0.elapsed().as_micros() as u64;
+            inner.ring.push(kind, start_us, dur_us);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let rec = SpanRecorder::disabled();
+        assert!(!rec.enabled());
+        for _ in 0..10 {
+            let _g = rec.span(SpanKind::EnvStep);
+        }
+    }
+
+    #[test]
+    fn spans_record_in_order() {
+        let tracer = Tracer::new(64);
+        let rec = tracer.recorder("worker");
+        for kind in [SpanKind::EnvStep, SpanKind::PolicyWait, SpanKind::EnvStep] {
+            let _g = rec.span(kind);
+        }
+        let rings = tracer.rings();
+        assert_eq!(rings.len(), 1);
+        let spans = rings[0].collect();
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].kind, SpanKind::EnvStep);
+        assert_eq!(spans[1].kind, SpanKind::PolicyWait);
+        assert!(spans.windows(2).all(|w| w[0].start_us <= w[1].start_us));
+        assert_eq!(rings[0].dropped(), 0);
+    }
+
+    #[test]
+    fn ring_wraps_keeping_newest() {
+        let tracer = Tracer::new(4);
+        let rec = tracer.recorder("w");
+        for _ in 0..10 {
+            let _g = rec.span(SpanKind::LearnerTrain);
+        }
+        let ring = &tracer.rings()[0];
+        assert_eq!(ring.collect().len(), 4);
+        assert_eq!(ring.dropped(), 6);
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let tracer = Tracer::new(16);
+        let a = tracer.recorder("actor-0");
+        let b = tracer.recorder("learner");
+        {
+            let _g = a.span(SpanKind::EnvStep);
+        }
+        {
+            let _g = b.span(SpanKind::LearnerTrain);
+        }
+        let doc = tracer.chrome_trace();
+        // Round-trips through the in-tree JSON parser.
+        let parsed = Value::parse(&doc.to_string()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 metadata + 2 span events.
+        assert_eq!(events.len(), 4);
+        let names: Vec<&str> = events
+            .iter()
+            .filter_map(|e| e.get("name").and_then(|n| n.as_str()))
+            .collect();
+        assert!(names.contains(&"env_step"));
+        assert!(names.contains(&"learner_train"));
+        let span = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("env_step"))
+            .unwrap();
+        assert_eq!(span.get("ph").unwrap().as_str().unwrap(), "X");
+        assert!(span.get("ts").unwrap().as_f64().is_some());
+    }
+}

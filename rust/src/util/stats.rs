@@ -34,6 +34,17 @@ impl Summary {
         self.n
     }
 
+    /// Total of all recorded values (`mean * n`). Welford tracks the
+    /// running mean, so the sum is reconstructed; exact up to fp
+    /// rounding, which is what offline rate derivation needs.
+    pub fn sum(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean * self.n as f64
+        }
+    }
+
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             f64::NAN
@@ -199,6 +210,8 @@ mod tests {
         assert!((s.std() - 2.138089935299395).abs() < 1e-9);
         assert_eq!(s.min(), 2.0);
         assert_eq!(s.max(), 9.0);
+        assert!((s.sum() - 40.0).abs() < 1e-9);
+        assert_eq!(Summary::new().sum(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! End-to-end telemetry acceptance (ISSUE 6).
+//!
+//! Two properties:
+//!
+//! 1. **Non-perturbation**: with a span tracer installed (telemetry
+//!    enabled), the instrumented actor loop must produce bit-for-bit
+//!    the same replay stream as the default (telemetry-off) run —
+//!    instrumentation observes the dataflow, it never steers it.
+//! 2. **Emission**: an enabled full-system mock run writes a parseable
+//!    Chrome trace containing the expected phase spans, a JSONL
+//!    time-series carrying the live CPU/GPU-ratio gauge, and renders a
+//!    Fig. 2-style phase-attribution table with `telemetry.model_drift`.
+
+use rlarch::config::SystemConfig;
+use rlarch::coordinator;
+use rlarch::coordinator::actor::{run_actor, ActorArgs};
+use rlarch::exec::ShutdownToken;
+use rlarch::metrics::Registry;
+use rlarch::policy::{LocalClient, PolicyClient};
+use rlarch::replay::{ReplayConfig, SequenceReplay};
+use rlarch::rl::Sequence;
+use rlarch::runtime::{Backend, MockModel, ModelDims};
+use rlarch::telemetry::{self, SpanKind, Tracer};
+use rlarch::util::json::Value;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Deterministic single-actor workload (mirrors the coordinator_e2e
+/// equivalence config): 3 env slots, one thread, local inference.
+fn equivalence_cfg() -> (SystemConfig, ModelDims) {
+    let mut cfg = SystemConfig::default();
+    cfg.env.name = "catch".into();
+    cfg.env.step_cost_us = 0;
+    cfg.env.frame_stack = 4;
+    cfg.actors.num_actors = 1;
+    cfg.actors.envs_per_actor = 3;
+    cfg.learner.burn_in = 2;
+    cfg.learner.unroll_len = 4;
+    cfg.learner.seq_overlap = 2;
+    cfg.batcher.max_batch = 2;
+    cfg.batcher.batch_sizes = vec![1, 2];
+    cfg.batcher.timeout_us = 200;
+    let dims = ModelDims {
+        obs_len: 400,
+        hidden: 8,
+        num_actions: 4,
+        seq_len: 6,
+        train_batch: 2,
+    };
+    (cfg, dims)
+}
+
+/// Run the actor loop against a given registry (with or without a
+/// tracer installed) and return its replay stream.
+fn run_traced_actor(
+    cfg: &SystemConfig,
+    dims: ModelDims,
+    backend: &Backend,
+    rounds: u64,
+    metrics: Registry,
+) -> Vec<Arc<Sequence>> {
+    let replay = Arc::new(SequenceReplay::new(ReplayConfig {
+        capacity: 4_096,
+        ..Default::default()
+    }));
+    let policy: Box<dyn PolicyClient> = Box::new(LocalClient::new(
+        backend.clone(),
+        cfg.batcher.max_batch,
+        dims,
+        &metrics,
+    ));
+    run_actor(ActorArgs {
+        id: 0,
+        cfg: cfg.clone(),
+        dims,
+        policy,
+        replay: replay.clone(),
+        metrics,
+        shutdown: ShutdownToken::new(),
+        max_rounds: Some(rounds),
+    })
+    .unwrap();
+    replay.snapshot()
+}
+
+#[test]
+fn traced_actor_run_is_bit_for_bit_identical_to_untraced() {
+    let (cfg, dims) = equivalence_cfg();
+    let rounds = 60u64;
+    let backend = Backend::Mock(Arc::new(MockModel::new(dims, 11)));
+
+    // Golden: the default registry — no tracer, inert recorders.
+    let golden = run_traced_actor(&cfg, dims, &backend, rounds, Registry::new());
+    assert!(!golden.is_empty(), "workload produced no sequences");
+
+    // Traced: same workload with live span recorders on every phase.
+    let metrics = Registry::new();
+    let tracer = Tracer::new(1_024);
+    metrics.install_tracer(tracer.clone());
+    let traced = run_traced_actor(&cfg, dims, &backend, rounds, metrics);
+
+    assert_eq!(traced.len(), golden.len(), "sequence count diverged");
+    for (i, (a, b)) in traced.iter().zip(&golden).enumerate() {
+        assert_eq!(a, b, "sequence {i} diverged under tracing");
+    }
+    // And the tracer actually observed the run: env-step and policy
+    // spans from the actor thread.
+    assert!(tracer.span_count() > 0, "no spans recorded");
+    let kinds: Vec<SpanKind> = tracer
+        .rings()
+        .iter()
+        .flat_map(|r| r.collect())
+        .map(|s| s.kind)
+        .collect();
+    for want in [SpanKind::EnvStep, SpanKind::PolicySubmit, SpanKind::PolicyWait]
+    {
+        assert!(
+            kinds.contains(&want),
+            "missing {} spans in {kinds:?}",
+            want.name()
+        );
+    }
+}
+
+fn temp_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("rlarch_telemetry_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn enabled_run_emits_trace_jsonl_and_phase_attribution() {
+    let trace_path = temp_path("trace.json");
+    let metrics_path = temp_path("metrics.jsonl");
+    let _ = std::fs::remove_file(&trace_path);
+    let _ = std::fs::remove_file(&metrics_path);
+
+    let mut cfg = SystemConfig::default();
+    cfg.env.name = "catch".into();
+    cfg.env.frame_stack = 4;
+    cfg.actors.num_actors = 4;
+    cfg.learner.burn_in = 2;
+    cfg.learner.unroll_len = 4;
+    cfg.learner.seq_overlap = 2;
+    cfg.learner.train_batch = 4;
+    cfg.learner.min_replay = 8;
+    cfg.learner.max_steps = 30;
+    cfg.learner.target_update_interval = 10;
+    cfg.replay.capacity = 512;
+    cfg.batcher.max_batch = 8;
+    cfg.batcher.batch_sizes = vec![1, 8];
+    cfg.batcher.timeout_us = 1_000;
+    cfg.telemetry.trace_out = trace_path.to_str().unwrap().to_string();
+    cfg.telemetry.metrics_out = metrics_path.to_str().unwrap().to_string();
+    cfg.telemetry.snapshot_interval_ms = 5;
+    let dims = ModelDims {
+        obs_len: 400,
+        hidden: 8,
+        num_actions: 4,
+        seq_len: 6,
+        train_batch: 4,
+    };
+    let backend = Backend::Mock(Arc::new(MockModel::new(dims, 11)));
+    let metrics = Registry::new();
+    let report = coordinator::run(&cfg, backend, metrics.clone()).unwrap();
+    assert_eq!(report.learner.steps, 30);
+    assert!(report.first_error.is_none(), "{:?}", report.first_error);
+
+    // Chrome trace: parseable, and every pipeline phase shows up.
+    let events =
+        telemetry::validate_trace_file(trace_path.to_str().unwrap()).unwrap();
+    assert!(events > 0);
+    let doc =
+        Value::parse(&std::fs::read_to_string(&trace_path).unwrap()).unwrap();
+    let names: Vec<String> = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .unwrap()
+        .iter()
+        .filter_map(|e| e.get("name").and_then(|n| n.as_str()))
+        .map(str::to_string)
+        .collect();
+    for phase in [
+        "env_step",
+        "policy_submit",
+        "policy_wait",
+        "batcher_collect",
+        "batcher_launch",
+        "replay_insert",
+        "replay_sample",
+        "learner_assemble",
+        "learner_train",
+    ] {
+        assert!(names.iter().any(|n| n == phase), "trace lacks {phase} spans");
+    }
+
+    // JSONL time-series: parseable, and the guaranteed final tick
+    // carries the live CPU/GPU-ratio proxy plus the other derived
+    // gauges.
+    let samples =
+        telemetry::validate_metrics_file(metrics_path.to_str().unwrap())
+            .unwrap();
+    assert!(samples >= 1);
+    let text = std::fs::read_to_string(&metrics_path).unwrap();
+    let last = Value::parse(text.lines().rev().find(|l| !l.trim().is_empty()).unwrap())
+        .unwrap();
+    let ratio = last
+        .get(telemetry::CPU_GPU_RATIO)
+        .and_then(|v| v.as_f64())
+        .expect("final sample lacks telemetry.cpu_gpu_ratio");
+    assert!(ratio > 0.0 && ratio.is_finite(), "ratio {ratio}");
+    assert!(last.get("telemetry.steps_per_sec").is_some());
+    assert!(last.get("actor.env_seconds.sum").is_some());
+    assert!(last.get("batcher.queue_wakeups").is_some());
+    assert_eq!(metrics.gauge(telemetry::CPU_GPU_RATIO).get(), ratio);
+
+    // Phase attribution vs the architectural model, drift exported.
+    let model = rlarch::simarch::default_system(
+        rlarch::simarch::synthetic_paper_trace(1, 1, 64),
+        rlarch::simarch::synthetic_paper_train_trace(2, 80, 16),
+    );
+    let table = telemetry::attribution_report(
+        &metrics,
+        Some(&model),
+        cfg.actors.num_actors,
+    )
+    .expect("no attribution despite recorded phases");
+    for needle in ["env", "infer", "train", "replay", "telemetry.model_drift"] {
+        assert!(table.contains(needle), "attribution table lacks {needle}:\n{table}");
+    }
+    let drift = metrics.gauge(telemetry::MODEL_DRIFT).get();
+    assert!((0.0..=1.0).contains(&drift), "drift {drift}");
+}
+
+#[test]
+fn disabled_run_writes_no_telemetry_files() {
+    // Defaults off: the coordinator must not create trace/metrics files
+    // (their paths are empty — nothing to write) and the wakeup counter
+    // still counts (it is unconditional plumbing, not telemetry-gated).
+    let mut cfg = SystemConfig::default();
+    cfg.env.name = "catch".into();
+    cfg.env.frame_stack = 4;
+    cfg.actors.num_actors = 1;
+    cfg.learner.burn_in = 2;
+    cfg.learner.unroll_len = 4;
+    cfg.learner.seq_overlap = 2;
+    cfg.learner.train_batch = 2;
+    cfg.learner.min_replay = 4;
+    cfg.learner.max_steps = 5;
+    cfg.replay.capacity = 256;
+    cfg.batcher.max_batch = 2;
+    cfg.batcher.batch_sizes = vec![1, 2];
+    let dims = ModelDims {
+        obs_len: 400,
+        hidden: 8,
+        num_actions: 4,
+        seq_len: 6,
+        train_batch: 2,
+    };
+    assert!(!cfg.telemetry.enabled());
+    let backend = Backend::Mock(Arc::new(MockModel::new(dims, 7)));
+    let metrics = Registry::new();
+    let report = coordinator::run(&cfg, backend, metrics.clone()).unwrap();
+    assert_eq!(report.learner.steps, 5);
+    assert!(metrics.tracer().is_none(), "tracer installed on a default run");
+    assert!(
+        metrics.counter("batcher.queue_wakeups").get() > 0,
+        "doorbell counter must count regardless of telemetry"
+    );
+}
