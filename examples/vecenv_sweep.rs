@@ -15,12 +15,18 @@
 //!     cargo run --release --example vecenv_sweep
 //!
 //! Flags: --actors 1,2,4  --envs 1,2,4,8  --depths 1,2  --steps N
-//!        --env NAME  --infer-latency-us L  --json PATH.
+//!        --env NAME  --infer-latency-us L  --batch-native  --json PATH.
+//!
+//! `--batch-native` steps every grid point's env slots through the SoA
+//! engine (`env.batch_native`, DESIGN.md §13) instead of the per-slot
+//! path — bit-for-bit identical trajectories, so any rate delta is
+//! engine overhead alone.
 //!
 //! `--json PATH` appends the measured grid (env steps/s, mean/last
-//! batch occupancy, batcher launches/s, learner steps/s, plus a unix
-//! timestamp) to a JSON array at PATH — the repo's perf trajectory
-//! (`BENCH_vecenv.json`) accumulates one entry per recorded run.
+//! batch occupancy, batcher launches/s, learner steps/s, a
+//! `batch_native` engine tag per row, plus a unix timestamp) to a JSON
+//! array at PATH — the repo's perf trajectory (`BENCH_vecenv.json`)
+//! accumulates one entry per recorded run.
 
 use rlarch::cli::Cli;
 use rlarch::config::{InferenceMode, SystemConfig};
@@ -43,11 +49,13 @@ fn sweep_cfg(
     depth: usize,
     prefetch: usize,
     steps: usize,
+    batch_native: bool,
 ) -> SystemConfig {
     let mut cfg = SystemConfig::default();
     cfg.mode = InferenceMode::Central;
     cfg.env.name = env.to_string();
     cfg.env.step_cost_us = 100; // ALE-class env weight: makes CPU time real
+    cfg.env.batch_native = batch_native;
     cfg.actors.num_actors = actors;
     cfg.actors.envs_per_actor = envs;
     cfg.actors.pipeline_depth = depth;
@@ -85,6 +93,11 @@ fn main() -> anyhow::Result<()> {
         "250",
         "injected mock inference latency (GPU time to overlap)",
     )
+    .switch(
+        "batch-native",
+        "step env slots through the batch-native SoA engine (cost only; \
+         trajectories are bit-for-bit identical)",
+    )
     .flag(
         "json",
         "",
@@ -98,6 +111,7 @@ fn main() -> anyhow::Result<()> {
     let steps = parsed.get_usize("steps")?;
     let latency_us = parsed.get_u64("infer-latency-us")?;
     let env_name = parsed.get("env").to_string();
+    let batch_native = parsed.get_switch("batch-native");
 
     let json_path = parsed.get("json").to_string();
     let mut json_rows: Vec<Value> = Vec::new();
@@ -125,8 +139,15 @@ fn main() -> anyhow::Result<()> {
                 if depth > envs {
                     continue; // clamps to envs anyway: skip duplicates
                 }
-                let cfg =
-                    sweep_cfg(&env_name, actors, envs, depth, prefetch, steps);
+                let cfg = sweep_cfg(
+                    &env_name,
+                    actors,
+                    envs,
+                    depth,
+                    prefetch,
+                    steps,
+                    batch_native,
+                );
                 let dims = ModelDims {
                     obs_len: 400,
                     hidden: 16,
@@ -183,6 +204,7 @@ fn main() -> anyhow::Result<()> {
                     ("batcher_steps_per_sec", batcher_rate.into()),
                     ("last_batch_size", last_batch.into()),
                     ("learner_steps_per_sec", learner_rate.into()),
+                    ("batch_native", batch_native.into()),
                 ]));
             }
         }

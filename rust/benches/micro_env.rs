@@ -1,18 +1,149 @@
 //! Micro-bench: environment suite step rates (the CPU-side workload the
 //! paper's actor sweep is made of), per game, with and without the
-//! frame-stack wrapper, plus the step-cost calibration knob.
+//! frame-stack wrapper, plus the step-cost calibration knob — and the
+//! batch-native SoA engine (DESIGN.md §13): a per-slot-vs-`step_all`
+//! E-sweep whose speedup calibrates `SystemModel::env_dispatch_s`, plus
+//! a counting-global-allocator gate hard-asserting that the SoA
+//! engine's steady-state `step_all` never enters the allocator (the
+//! property that lets one call step E slots with no per-slot dispatch
+//! or allocation overhead).
+//!
+//! The tables here regenerate EXPERIMENTS.md §Perf (env step path).
+//!
+//! `--quick` shrinks every loop (the CI smoke run); the allocation gate
+//! is asserted in both modes.
 
 use rlarch::config::EnvConfig;
 use rlarch::env::wrappers::Wrapped;
-use rlarch::env::{make_env, new_frame, registered_envs};
+use rlarch::env::{make_batch_env, make_env, new_frame, registered_envs};
 use rlarch::report::figure::Table;
 use rlarch::report::write_csv;
 use rlarch::util::prng::Pcg32;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
+/// Counts every allocator entry (alloc + realloc); frees are not
+/// interesting here. Same gate pattern as `micro_trajectory`: the
+/// counter makes "zero-allocation" checkable instead of inferred.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_calls() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+fn env_cfg(name: &str) -> EnvConfig {
+    EnvConfig {
+        name: name.to_string(),
+        ..Default::default()
+    }
+}
+
+/// Step E per-slot `Wrapped` instances for `rounds` rounds; rows/s.
+fn per_slot_rate(name: &str, e: usize, rounds: usize) -> f64 {
+    let cfg = env_cfg(name);
+    let mut slots: Vec<Wrapped> = (0..e)
+        .map(|i| Wrapped::from_config(&cfg, i as u64).unwrap())
+        .collect();
+    let obs_len = slots[0].obs_len();
+    let mut obs = vec![0.0f32; e * obs_len];
+    for (i, w) in slots.iter_mut().enumerate() {
+        w.reset(&mut obs[i * obs_len..(i + 1) * obs_len]);
+    }
+    let mut rng = Pcg32::seeded(3);
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        for (i, w) in slots.iter_mut().enumerate() {
+            w.step(rng.index(4), &mut obs[i * obs_len..(i + 1) * obs_len]);
+        }
+    }
+    (rounds * e) as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Step the same E slots through one batch-native `step_all`; rows/s.
+fn soa_rate(name: &str, e: usize, rounds: usize) -> f64 {
+    let cfg = env_cfg(name);
+    let mut benv = make_batch_env(&cfg, e, 0).unwrap();
+    let mut obs = vec![0.0f32; e * benv.obs_len()];
+    benv.reset_all(&mut obs);
+    let mut actions = vec![0usize; e];
+    let mut steps = Vec::with_capacity(e);
+    let mut rng = Pcg32::seeded(3);
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        for a in actions.iter_mut() {
+            *a = rng.index(4);
+        }
+        steps.clear();
+        benv.step_all(&actions, &mut obs, &mut steps);
+    }
+    (rounds * e) as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// The CI gate: a warmed-up SoA engine must step all E slots without a
+/// single allocator entry — across every registered env (NavMaze's
+/// in-episode resets regenerate mazes on fixed scratch, so even its
+/// auto-reset path must stay clean).
+fn assert_step_all_allocation_free(e: usize, rounds: usize) {
+    for name in registered_envs() {
+        let cfg = env_cfg(name);
+        let mut benv = make_batch_env(&cfg, e, 0).unwrap();
+        let mut obs = vec![0.0f32; e * benv.obs_len()];
+        benv.reset_all(&mut obs);
+        let mut actions = vec![0usize; e];
+        let mut steps = Vec::with_capacity(e);
+        let mut rng = Pcg32::seeded(5);
+        // Warmup: several episodes' worth, so auto-resets happen both
+        // inside and after the measured window.
+        for _ in 0..64 {
+            for a in actions.iter_mut() {
+                *a = rng.index(4);
+            }
+            steps.clear();
+            benv.step_all(&actions, &mut obs, &mut steps);
+        }
+        let a0 = alloc_calls();
+        for _ in 0..rounds {
+            for a in actions.iter_mut() {
+                *a = rng.index(4);
+            }
+            steps.clear();
+            benv.step_all(&actions, &mut obs, &mut steps);
+        }
+        let allocs = alloc_calls() - a0;
+        assert_eq!(
+            allocs, 0,
+            "{name}: SoA step_all allocated {allocs} times over {rounds} \
+             rounds x {e} slots (hard requirement: 0 in steady state)"
+        );
+    }
+}
+
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
     println!("# micro_env — environment step rates\n");
-    let steps = 200_000;
+    let steps = if quick { 20_000 } else { 200_000 };
     let mut t = Table::new(&["env", "raw steps/s", "wrapped steps/s (stack=4)"]);
     let mut csv = String::from("env,raw_rate,wrapped_rate\n");
     for name in registered_envs() {
@@ -30,10 +161,7 @@ fn main() {
         let raw = steps as f64 / t0.elapsed().as_secs_f64();
 
         // Wrapped (sticky + stack + episode bookkeeping).
-        let cfg = EnvConfig {
-            name: name.to_string(),
-            ..Default::default()
-        };
+        let cfg = env_cfg(name);
         let mut w = Wrapped::from_config(&cfg, 0).unwrap();
         let mut obs = vec![0.0f32; w.obs_len()];
         w.reset(&mut obs);
@@ -52,6 +180,46 @@ fn main() {
     }
     println!("{}", t.to_markdown());
 
+    // Per-slot vs batch-native SoA engine across the vecenv E range:
+    // identical work per row (same games, same wrappers' semantics), so
+    // the ratio isolates per-slot dispatch + scattered-state overhead.
+    // The per-row gap at large E divided into a per-call budget is the
+    // measurement that feeds `SystemModel::env_dispatch_s`.
+    let e_list: &[usize] = if quick { &[1, 8] } else { &[1, 4, 16, 64] };
+    let mut st = Table::new(&[
+        "env",
+        "E",
+        "per-slot rows/s",
+        "soa rows/s",
+        "soa/per-slot",
+    ]);
+    let mut soa_csv = String::from("env,e,per_slot_rate,soa_rate,speedup\n");
+    for name in registered_envs() {
+        for &e in e_list {
+            let rounds = (steps / e).max(200);
+            let ps = per_slot_rate(name, e, rounds);
+            let soa = soa_rate(name, e, rounds);
+            st.row(&[
+                name.to_string(),
+                e.to_string(),
+                format!("{ps:.0}"),
+                format!("{soa:.0}"),
+                format!("{:.2}", soa / ps),
+            ]);
+            soa_csv.push_str(&format!("{name},{e},{ps},{soa},{}\n", soa / ps));
+        }
+    }
+    println!("{}", st.to_markdown());
+
+    // The allocation gate runs in both modes — CI enforces the property
+    // via `--quick` rather than just reporting it.
+    let gate_rounds = if quick { 2_000 } else { 20_000 };
+    assert_step_all_allocation_free(16, gate_rounds);
+    println!(
+        "soa step_all steady-state allocator entries over {gate_rounds} \
+         rounds x 16 slots, all envs: 0 (hard requirement)\n"
+    );
+
     // Step-cost calibration: the knob that emulates ALE-weight envs.
     let mut ct = Table::new(&["step_cost_us", "measured steps/s", "target steps/s"]);
     for cost in [0u64, 50, 125, 500] {
@@ -63,7 +231,17 @@ fn main() {
         let mut w = Wrapped::from_config(&cfg, 0).unwrap();
         let mut obs = vec![0.0f32; w.obs_len()];
         w.reset(&mut obs);
-        let n = if cost == 0 { 100_000 } else { 2_000 };
+        let n = if cost == 0 {
+            if quick {
+                10_000
+            } else {
+                100_000
+            }
+        } else if quick {
+            500
+        } else {
+            2_000
+        };
         let t0 = Instant::now();
         for i in 0..n {
             w.step(i % 3, &mut obs);
@@ -86,5 +264,7 @@ fn main() {
     }
     println!("{}", ct.to_markdown());
     let p = write_csv("micro_env", &csv);
+    println!("csv: {}", p.display());
+    let p = write_csv("micro_env_soa", &soa_csv);
     println!("csv: {}", p.display());
 }

@@ -59,6 +59,13 @@ pub struct EnvConfig {
     pub step_cost_us: u64,
     /// Environment RNG base seed.
     pub seed: u64,
+    /// Step each actor's E slots through the batch-native SoA engine
+    /// (`env::soa`): struct-of-arrays state and one vectorized
+    /// frame-stack shift per call instead of E per-slot deque
+    /// rotations. false (default) = the per-slot `Wrapped` path; the
+    /// two are bit-for-bit equivalent (property + e2e tests), so this
+    /// knob changes cost only.
+    pub batch_native: bool,
 }
 
 impl Default for EnvConfig {
@@ -70,6 +77,7 @@ impl Default for EnvConfig {
             max_episode_len: 2_000,
             step_cost_us: 0,
             seed: 2020,
+            batch_native: false,
         }
     }
 }
@@ -89,6 +97,7 @@ impl EnvConfig {
             step_cost_us: get_f64(v, "env.step_cost_us", d.step_cost_us as f64)
                 as u64,
             seed: get_f64(v, "env.seed", d.seed as f64) as u64,
+            batch_native: get_bool(v, "env.batch_native", d.batch_native),
         }
     }
 }
@@ -699,6 +708,7 @@ const SECTION_KEYS: &[(&str, &[&str])] = &[
             "max_episode_len",
             "step_cost_us",
             "seed",
+            "batch_native",
         ],
     ),
     (
@@ -1079,6 +1089,15 @@ hw_threads = 40
             .unwrap_err()
             .to_string();
         assert!(err.contains("prefetch_depth"), "got: {err}");
+    }
+
+    #[test]
+    fn parses_batch_native() {
+        let cfg = SystemConfig::from_toml("[env]\nbatch_native = true\n").unwrap();
+        assert!(cfg.env.batch_native);
+        // The per-slot `Wrapped` path stays the default (bit-for-bit
+        // reference; the SoA engine is opt-in).
+        assert!(!SystemConfig::default().env.batch_native);
     }
 
     #[test]

@@ -279,7 +279,7 @@ pub fn run_actor(args: ActorArgs) -> anyhow::Result<ActorStats> {
 
                 if step.done {
                     episodes_c.inc();
-                    let last = venv.slot(s).last_return as f64;
+                    let last = venv.last_return(s) as f64;
                     return_gauge.set(last);
                     return_sum += last;
                     return_count += 1;
@@ -518,6 +518,46 @@ mod tests {
         })
         .unwrap();
         assert_eq!(stats.env_steps, 25 * 3);
+    }
+
+    #[test]
+    fn batch_native_actor_matches_per_slot_actor() {
+        // A bounded deterministic run (mock backend, max_rounds) must
+        // produce identical terminal stats on either env engine: the
+        // SoA path changes cost, not behavior.
+        let run = |batch_native: bool| {
+            let (mut cfg, dims) = test_cfg();
+            cfg.actors.envs_per_actor = 3;
+            cfg.actors.pipeline_depth = 2;
+            cfg.env.batch_native = batch_native;
+            let replay = Arc::new(SequenceReplay::new(ReplayConfig::default()));
+            let backend = Backend::Mock(Arc::new(MockModel::new(dims, 3)));
+            let metrics = Registry::new();
+            let policy: Box<dyn PolicyClient> = Box::new(LocalClient::new(
+                backend,
+                cfg.batcher.max_batch,
+                dims,
+                &metrics,
+            ));
+            let stats = run_actor(ActorArgs {
+                id: 0,
+                cfg,
+                dims,
+                policy,
+                replay: replay.clone(),
+                metrics,
+                shutdown: ShutdownToken::new(),
+                max_rounds: Some(40),
+            })
+            .unwrap();
+            (
+                stats.env_steps,
+                stats.episodes,
+                stats.mean_return,
+                replay.len(),
+            )
+        };
+        assert_eq!(run(false), run(true));
     }
 
     #[test]

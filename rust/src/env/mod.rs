@@ -17,9 +17,11 @@ pub mod catch;
 pub mod grid_pong;
 pub mod nav_maze;
 pub mod registry;
+pub mod soa;
 pub mod wrappers;
 
 pub use registry::{make_env, registered_envs};
+pub use soa::{make_batch_env, BatchEnv};
 pub use wrappers::{FrameStack, StepCost, StickyActions, Wrapped};
 
 /// Grid side length shared by the whole suite (matches the AOT'd agent's

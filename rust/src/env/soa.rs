@@ -1,0 +1,988 @@
+//! Batch-native environment engine: one call steps all E slots over
+//! struct-of-arrays state (DESIGN.md §13).
+//!
+//! The per-slot path ([`super::wrappers::Wrapped`] behind
+//! [`crate::vecenv::VecEnv`]) pays E object dispatches, E frame-stack
+//! deque rotations, and E row copies per batched step — the dominant
+//! actor-side CPU term the paper measures. The SoA engine keeps every
+//! logical plane contiguous across slots instead: one `[E, S, S]` grid
+//! buffer, one `[E, S, S, K]` stacked-observation slab, and one `[E]`
+//! array per scalar (episode returns, step counts, sticky-action state,
+//! RNG streams). A step over a slot range is then four passes:
+//!
+//!   1. per-slot game dynamics into the grid plane (scalar SoA fields),
+//!   2. ONE `copy_within` over the shared observation slab — the
+//!      vectorized frame-stack shift replacing E deque rotations (every
+//!      position moves one channel left; the cross-cell bleed lands only
+//!      on newest-channel positions, which pass 3 rewrites),
+//!   3. per-slot scatter of the new frame into the newest channel (done
+//!      slots refill all K channels, the stack-reset semantics),
+//!   4. one contiguous copy of the stepped sub-slab into the caller's
+//!      observation rows.
+//!
+//! Every buffer is preallocated at construction, so steady-state
+//! `step_all` performs zero heap allocations (gated by `micro_env` in
+//! CI). Behavior is bit-for-bit identical to the per-slot path — same
+//! RNG streams, same step order, same auto-reset and truncation
+//! semantics — asserted per game by the tests below and across random
+//! configurations by `tests/property_invariants.rs`. This is the CuLE
+//! direction (PAPERS.md, 1907.08467): batch-native layout first, the
+//! stepping stone to GPU-resident envs.
+
+use super::{Step, GRID};
+use crate::config::EnvConfig;
+use crate::util::prng::Pcg32;
+use std::time::{Duration, Instant};
+
+const CELLS: usize = GRID * GRID;
+
+/// A batch-native environment engine: E env slots stepped through one
+/// call over struct-of-arrays state. The dispatch seam `VecEnv` selects
+/// with `env.batch_native` (the per-slot `Wrapped` path is the
+/// bit-for-bit reference).
+pub trait BatchEnv: Send {
+    /// Environment slots behind this engine.
+    fn num_envs(&self) -> usize;
+
+    /// Per-slot observation length (S * S * K floats).
+    fn obs_len(&self) -> usize;
+
+    /// Reset every slot; write all initial observations into
+    /// `obs_batch` (`[E, S, S, K]`).
+    fn reset_all(&mut self, obs_batch: &mut [f32]);
+
+    /// Step the contiguous slot range `start .. start + actions.len()`
+    /// in one call; write each slot's post-step observation into its
+    /// row of `obs_rows` and append one `Step` per slot to `steps` (in
+    /// slot order). Slots whose episode ends auto-reset.
+    fn step_range(
+        &mut self,
+        start: usize,
+        actions: &[usize],
+        obs_rows: &mut [f32],
+        steps: &mut Vec<Step>,
+    );
+
+    /// Step all E slots in one call (`step_range` over the whole pool).
+    fn step_all(&mut self, actions: &[usize], obs_batch: &mut [f32], steps: &mut Vec<Step>) {
+        self.step_range(0, actions, obs_batch, steps);
+    }
+
+    /// Total env steps across all slots.
+    fn total_steps(&self) -> u64;
+
+    /// Completed episodes across all slots.
+    fn episodes_completed(&self) -> u64;
+
+    /// Return of `slot`'s last completed episode.
+    fn last_return(&self, slot: usize) -> f32;
+
+    /// Environment name (shared by every slot).
+    fn name(&self) -> &'static str;
+}
+
+/// Build the SoA engine for `cfg.name` with `num_envs` slots. Slot `i`
+/// uses instance seed `base_instance_seed + i` — the same layout as
+/// `VecEnv`'s per-slot construction, so the two paths share RNG streams
+/// exactly.
+pub fn make_batch_env(
+    cfg: &EnvConfig,
+    num_envs: usize,
+    base_instance_seed: u64,
+) -> anyhow::Result<Box<dyn BatchEnv>> {
+    anyhow::ensure!(num_envs > 0, "batch env needs at least one slot");
+    // Per-slot game seeds, identical to `Wrapped::from_config`'s
+    // `cfg.seed ^ instance_seed`.
+    let seeds: Vec<u64> = (0..num_envs)
+        .map(|i| cfg.seed ^ (base_instance_seed + i as u64))
+        .collect();
+    Ok(match cfg.name.as_str() {
+        "catch" => Box::new(SoaEngine::new(CatchSoa::new(&seeds), cfg, base_instance_seed)),
+        "grid_pong" => Box::new(SoaEngine::new(
+            GridPongSoa::new(&seeds),
+            cfg,
+            base_instance_seed,
+        )),
+        "breakout" => Box::new(SoaEngine::new(
+            BreakoutSoa::new(&seeds),
+            cfg,
+            base_instance_seed,
+        )),
+        "nav_maze" => Box::new(SoaEngine::new(
+            NavMazeSoa::new(&seeds),
+            cfg,
+            base_instance_seed,
+        )),
+        other => anyhow::bail!(
+            "unknown env `{other}` (registered: {:?})",
+            super::registry::registered_envs()
+        ),
+    })
+}
+
+/// Game dynamics over struct-of-arrays state: every field is an `[E]`
+/// plane indexed by slot. `reset_slot`/`step_slot` must replicate the
+/// per-slot `Environment` impl bit-for-bit (same RNG draw order) — the
+/// equivalence tests pin this per game.
+pub trait SoaGame: Send {
+    fn name(&self) -> &'static str;
+    /// Slots this game's planes were built for.
+    fn num_envs(&self) -> usize;
+    /// Reset slot `i` to a fresh episode; render into its grid row.
+    fn reset_slot(&mut self, i: usize, frame: &mut [f32]);
+    /// Advance slot `i` one step; render into its grid row.
+    fn step_slot(&mut self, i: usize, action: usize, frame: &mut [f32]) -> Step;
+}
+
+/// The shared engine: wrapper semantics (sticky actions, step cost,
+/// frame stacking, episode bookkeeping) over any [`SoaGame`], with all
+/// wrapper state SoA as well.
+pub struct SoaEngine<G: SoaGame> {
+    game: G,
+    e: usize,
+    k: usize,
+    /// `[E, S, S]` raw frame plane (one grid row per slot).
+    grid: Vec<f32>,
+    /// `[E, S, S, K]` stacked channel-last observation slab.
+    stack: Vec<f32>,
+    sticky_prob: f64,
+    sticky_rng: Vec<Pcg32>,
+    last_action: Vec<usize>,
+    cost: Duration,
+    max_episode_len: usize,
+    episode_return: Vec<f32>,
+    episode_len: Vec<usize>,
+    episodes_completed: Vec<u64>,
+    total_steps: Vec<u64>,
+    last_return: Vec<f32>,
+}
+
+impl<G: SoaGame> SoaEngine<G> {
+    pub fn new(game: G, cfg: &EnvConfig, base_instance_seed: u64) -> Self {
+        let e = game.num_envs();
+        let k = cfg.frame_stack.max(1);
+        // Sticky-action RNG streams match the per-slot wrapper's seed
+        // layout exactly.
+        let sticky_rng = (0..e)
+            .map(|i| {
+                let instance = base_instance_seed + i as u64;
+                Pcg32::seeded(cfg.seed.wrapping_add(instance).wrapping_mul(0x9E37))
+            })
+            .collect();
+        Self {
+            game,
+            e,
+            k,
+            grid: vec![0.0; e * CELLS],
+            stack: vec![0.0; e * CELLS * k],
+            sticky_prob: cfg.sticky_action_prob,
+            sticky_rng,
+            last_action: vec![0; e],
+            cost: Duration::from_micros(cfg.step_cost_us),
+            max_episode_len: cfg.max_episode_len,
+            episode_return: vec![0.0; e],
+            episode_len: vec![0; e],
+            episodes_completed: vec![0; e],
+            total_steps: vec![0; e],
+            last_return: vec![0.0; e],
+        }
+    }
+
+    /// Emulate heavier simulators exactly like the per-slot `StepCost`
+    /// wrapper: spin below 50us (sleep granularity), sleep above, skip
+    /// at zero.
+    fn burn(&self) {
+        if self.cost.is_zero() {
+            return;
+        }
+        if self.cost < Duration::from_micros(50) {
+            let t0 = Instant::now();
+            while t0.elapsed() < self.cost {
+                std::hint::spin_loop();
+            }
+        } else {
+            std::thread::sleep(self.cost);
+        }
+    }
+}
+
+impl<G: SoaGame> BatchEnv for SoaEngine<G> {
+    fn num_envs(&self) -> usize {
+        self.e
+    }
+
+    fn obs_len(&self) -> usize {
+        CELLS * self.k
+    }
+
+    fn reset_all(&mut self, obs_batch: &mut [f32]) {
+        assert_eq!(obs_batch.len(), self.e * CELLS * self.k, "obs batch size");
+        let k = self.k;
+        for i in 0..self.e {
+            self.last_action[i] = 0;
+            self.game
+                .reset_slot(i, &mut self.grid[i * CELLS..(i + 1) * CELLS]);
+            self.episode_return[i] = 0.0;
+            self.episode_len[i] = 0;
+            // Stack reset: K copies of the initial frame, channel-last.
+            let frame = &self.grid[i * CELLS..(i + 1) * CELLS];
+            let row = &mut self.stack[i * CELLS * k..(i + 1) * CELLS * k];
+            for (cell, &v) in frame.iter().enumerate() {
+                row[cell * k..(cell + 1) * k].fill(v);
+            }
+        }
+        obs_batch.copy_from_slice(&self.stack);
+    }
+
+    fn step_range(
+        &mut self,
+        start: usize,
+        actions: &[usize],
+        obs_rows: &mut [f32],
+        steps: &mut Vec<Step>,
+    ) {
+        let len = actions.len();
+        let k = self.k;
+        assert!(start + len <= self.e, "slot range out of bounds");
+        assert_eq!(obs_rows.len(), len * CELLS * k, "obs rows size");
+        if len == 0 {
+            return;
+        }
+
+        // Pass 1: dynamics + episode bookkeeping, slot by slot over the
+        // SoA planes (identical order and RNG draws to the per-slot
+        // wrapper chain: step cost, then sticky draw, then game step).
+        for (j, &action) in actions.iter().enumerate() {
+            let i = start + j;
+            self.burn();
+            let effective = if self.sticky_rng[i].chance(self.sticky_prob) {
+                self.last_action[i]
+            } else {
+                action
+            };
+            self.last_action[i] = effective;
+            let mut step =
+                self.game
+                    .step_slot(i, effective, &mut self.grid[i * CELLS..(i + 1) * CELLS]);
+            self.episode_return[i] += step.reward;
+            self.episode_len[i] += 1;
+            self.total_steps[i] += 1;
+            if !step.done && self.episode_len[i] >= self.max_episode_len {
+                step.done = true;
+                step.truncated = true;
+            }
+            if step.done {
+                self.episodes_completed[i] += 1;
+                self.last_return[i] = self.episode_return[i];
+                // Auto-reset: sticky state clears (the wrapper chain's
+                // reset), the game redraws its episode RNG, bookkeeping
+                // zeroes.
+                self.last_action[i] = 0;
+                self.game
+                    .reset_slot(i, &mut self.grid[i * CELLS..(i + 1) * CELLS]);
+                self.episode_return[i] = 0.0;
+                self.episode_len[i] = 0;
+            }
+            steps.push(step);
+        }
+
+        // Pass 2: the vectorized frame-stack shift — one copy_within
+        // over the stepped `[len, S, S, K]` sub-slab. Every channel
+        // moves one slot toward "older"; the only positions that pick
+        // up a neighbouring cell's value are the newest-channel ones,
+        // and pass 3 rewrites exactly those.
+        let a = start * CELLS * k;
+        let b = (start + len) * CELLS * k;
+        if k > 1 {
+            self.stack.copy_within(a + 1..b, a);
+        }
+
+        // Pass 3: scatter the post-step frames into the newest channel;
+        // done slots refill all K channels (stack reset on the next
+        // episode's initial frame).
+        let newly = &steps[steps.len() - len..];
+        for (j, step) in newly.iter().enumerate() {
+            let i = start + j;
+            let frame = &self.grid[i * CELLS..(i + 1) * CELLS];
+            let row = &mut self.stack[i * CELLS * k..(i + 1) * CELLS * k];
+            if step.done {
+                for (cell, &v) in frame.iter().enumerate() {
+                    row[cell * k..(cell + 1) * k].fill(v);
+                }
+            } else {
+                for (cell, &v) in frame.iter().enumerate() {
+                    row[cell * k + k - 1] = v;
+                }
+            }
+        }
+
+        // Pass 4: hand the stepped sub-slab to the caller in one copy.
+        obs_rows.copy_from_slice(&self.stack[a..b]);
+    }
+
+    fn total_steps(&self) -> u64 {
+        self.total_steps.iter().sum()
+    }
+
+    fn episodes_completed(&self) -> u64 {
+        self.episodes_completed.iter().sum()
+    }
+
+    fn last_return(&self, slot: usize) -> f32 {
+        self.last_return[slot]
+    }
+
+    fn name(&self) -> &'static str {
+        self.game.name()
+    }
+}
+
+#[inline]
+fn put(frame: &mut [f32], row: usize, col: usize, v: f32) {
+    debug_assert!(row < GRID && col < GRID);
+    frame[row * GRID + col] = v;
+}
+
+// ---------------------------------------------------------------------------
+// Catch (SoA planes of `super::catch::Catch`)
+// ---------------------------------------------------------------------------
+
+pub struct CatchSoa {
+    rng: Vec<Pcg32>,
+    ball_row: Vec<usize>,
+    ball_col: Vec<usize>,
+    paddle_col: Vec<usize>,
+}
+
+impl CatchSoa {
+    pub fn new(seeds: &[u64]) -> Self {
+        Self {
+            rng: seeds.iter().map(|&s| Pcg32::seeded(s)).collect(),
+            ball_row: vec![0; seeds.len()],
+            ball_col: vec![0; seeds.len()],
+            paddle_col: vec![GRID / 2; seeds.len()],
+        }
+    }
+
+    fn render_slot(&self, i: usize, frame: &mut [f32]) {
+        frame.fill(0.0);
+        put(frame, self.ball_row[i], self.ball_col[i], 1.0);
+        put(frame, GRID - 1, self.paddle_col[i], 0.5);
+    }
+}
+
+impl SoaGame for CatchSoa {
+    fn name(&self) -> &'static str {
+        "catch"
+    }
+
+    fn num_envs(&self) -> usize {
+        self.rng.len()
+    }
+
+    fn reset_slot(&mut self, i: usize, frame: &mut [f32]) {
+        self.ball_row[i] = 0;
+        self.ball_col[i] = self.rng[i].index(GRID);
+        self.paddle_col[i] = GRID / 2;
+        self.render_slot(i, frame);
+    }
+
+    fn step_slot(&mut self, i: usize, action: usize, frame: &mut [f32]) -> Step {
+        if self.ball_row[i] >= GRID - 1 {
+            // Stepping a finished episode (caller should reset): no-op.
+            return Step::terminal(0.0);
+        }
+        match action {
+            1 => self.paddle_col[i] = self.paddle_col[i].saturating_sub(1),
+            2 => self.paddle_col[i] = (self.paddle_col[i] + 1).min(GRID - 1),
+            _ => {}
+        }
+        self.ball_row[i] += 1;
+        let step = if self.ball_row[i] == GRID - 1 {
+            if self.ball_col[i] == self.paddle_col[i] {
+                Step::terminal(1.0)
+            } else {
+                Step::terminal(-1.0)
+            }
+        } else {
+            Step::cont(0.0)
+        };
+        self.render_slot(i, frame);
+        step
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GridPong (SoA planes of `super::grid_pong::GridPong`)
+// ---------------------------------------------------------------------------
+
+const PONG_LIVES: u32 = 3;
+const PONG_PADDLE_W: usize = 2;
+
+pub struct GridPongSoa {
+    rng: Vec<Pcg32>,
+    ball_r: Vec<i32>,
+    ball_c: Vec<i32>,
+    vel_r: Vec<i32>,
+    vel_c: Vec<i32>,
+    paddle: Vec<usize>,
+    lives: Vec<u32>,
+}
+
+impl GridPongSoa {
+    pub fn new(seeds: &[u64]) -> Self {
+        Self {
+            rng: seeds.iter().map(|&s| Pcg32::seeded(s)).collect(),
+            ball_r: vec![0; seeds.len()],
+            ball_c: vec![0; seeds.len()],
+            vel_r: vec![1; seeds.len()],
+            vel_c: vec![1; seeds.len()],
+            paddle: vec![GRID / 2; seeds.len()],
+            lives: vec![PONG_LIVES; seeds.len()],
+        }
+    }
+
+    fn serve_slot(&mut self, i: usize) {
+        self.ball_r[i] = 1;
+        self.ball_c[i] = 1 + self.rng[i].index(GRID - 2) as i32;
+        self.vel_r[i] = 1;
+        self.vel_c[i] = if self.rng[i].chance(0.5) { 1 } else { -1 };
+    }
+
+    fn render_slot(&self, i: usize, frame: &mut [f32]) {
+        frame.fill(0.0);
+        if self.ball_r[i] >= 0 {
+            put(frame, self.ball_r[i] as usize, self.ball_c[i] as usize, 1.0);
+        }
+        for p in 0..PONG_PADDLE_W {
+            put(frame, GRID - 1, (self.paddle[i] + p).min(GRID - 1), 0.5);
+        }
+        // Lives indicator in the top-left corner (dimmer).
+        for l in 0..self.lives[i] as usize {
+            put(frame, 0, l, 0.25_f32.max(frame[l]));
+        }
+    }
+
+    fn paddle_covers(&self, i: usize, col: i32) -> bool {
+        col >= self.paddle[i] as i32 && col < (self.paddle[i] + PONG_PADDLE_W) as i32
+    }
+}
+
+impl SoaGame for GridPongSoa {
+    fn name(&self) -> &'static str {
+        "grid_pong"
+    }
+
+    fn num_envs(&self) -> usize {
+        self.rng.len()
+    }
+
+    fn reset_slot(&mut self, i: usize, frame: &mut [f32]) {
+        self.lives[i] = PONG_LIVES;
+        self.paddle[i] = GRID / 2;
+        self.serve_slot(i);
+        self.render_slot(i, frame);
+    }
+
+    fn step_slot(&mut self, i: usize, action: usize, frame: &mut [f32]) -> Step {
+        match action {
+            1 => self.paddle[i] = self.paddle[i].saturating_sub(1),
+            2 => self.paddle[i] = (self.paddle[i] + 1).min(GRID - PONG_PADDLE_W),
+            _ => {}
+        }
+
+        // Ball dynamics with wall bounces.
+        let mut nr = self.ball_r[i] + self.vel_r[i];
+        let mut nc = self.ball_c[i] + self.vel_c[i];
+        if nc < 0 {
+            nc = 1;
+            self.vel_c[i] = 1;
+        } else if nc >= GRID as i32 {
+            nc = GRID as i32 - 2;
+            self.vel_c[i] = -1;
+        }
+        if nr < 0 {
+            nr = 1;
+            self.vel_r[i] = 1;
+        }
+
+        let mut reward = 0.0;
+        let mut done = false;
+        if nr >= (GRID - 1) as i32 {
+            // Reached the paddle row.
+            if self.paddle_covers(i, nc) {
+                reward = 1.0;
+                self.vel_r[i] = -1;
+                nr = (GRID - 2) as i32;
+            } else {
+                reward = -1.0;
+                self.lives[i] -= 1;
+                if self.lives[i] == 0 {
+                    done = true;
+                } else {
+                    self.serve_slot(i);
+                    self.render_slot(i, frame);
+                    return Step::cont(reward);
+                }
+            }
+        }
+        self.ball_r[i] = nr;
+        self.ball_c[i] = nc;
+        self.render_slot(i, frame);
+        Step {
+            reward,
+            done,
+            truncated: false,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Breakout (SoA planes of `super::breakout::Breakout`)
+// ---------------------------------------------------------------------------
+
+const BK_LIVES: u32 = 3;
+const BK_PADDLE_W: usize = 3;
+const BK_BRICK_ROWS: usize = 3;
+const BK_BRICKS: usize = BK_BRICK_ROWS * GRID;
+
+pub struct BreakoutSoa {
+    rng: Vec<Pcg32>,
+    /// `[E, BRICK_ROWS, GRID]` brick plane, flattened.
+    bricks: Vec<bool>,
+    ball_r: Vec<i32>,
+    ball_c: Vec<i32>,
+    vel_r: Vec<i32>,
+    vel_c: Vec<i32>,
+    ball_live: Vec<bool>,
+    paddle: Vec<usize>,
+    lives: Vec<u32>,
+}
+
+impl BreakoutSoa {
+    pub fn new(seeds: &[u64]) -> Self {
+        Self {
+            rng: seeds.iter().map(|&s| Pcg32::seeded(s)).collect(),
+            bricks: vec![true; seeds.len() * BK_BRICKS],
+            ball_r: vec![0; seeds.len()],
+            ball_c: vec![0; seeds.len()],
+            vel_r: vec![0; seeds.len()],
+            vel_c: vec![0; seeds.len()],
+            ball_live: vec![false; seeds.len()],
+            paddle: vec![GRID / 2 - 1; seeds.len()],
+            lives: vec![BK_LIVES; seeds.len()],
+        }
+    }
+
+    fn serve_slot(&mut self, i: usize) {
+        self.ball_r[i] = (BK_BRICK_ROWS + 2) as i32;
+        self.ball_c[i] = self.rng[i].index(GRID) as i32;
+        self.vel_r[i] = 1;
+        self.vel_c[i] = if self.rng[i].chance(0.5) { 1 } else { -1 };
+        self.ball_live[i] = true;
+    }
+
+    fn bricks_left(&self, i: usize) -> usize {
+        self.bricks[i * BK_BRICKS..(i + 1) * BK_BRICKS]
+            .iter()
+            .filter(|&&b| b)
+            .count()
+    }
+
+    fn render_slot(&self, i: usize, frame: &mut [f32]) {
+        frame.fill(0.0);
+        let bricks = &self.bricks[i * BK_BRICKS..(i + 1) * BK_BRICKS];
+        for r in 0..BK_BRICK_ROWS {
+            for c in 0..GRID {
+                if bricks[r * GRID + c] {
+                    put(frame, r + 1, c, 0.75);
+                }
+            }
+        }
+        if self.ball_live[i] {
+            put(frame, self.ball_r[i] as usize, self.ball_c[i] as usize, 1.0);
+        }
+        for p in 0..BK_PADDLE_W {
+            put(frame, GRID - 1, (self.paddle[i] + p).min(GRID - 1), 0.5);
+        }
+    }
+
+    fn paddle_covers(&self, i: usize, col: i32) -> bool {
+        col >= self.paddle[i] as i32 && col < (self.paddle[i] + BK_PADDLE_W) as i32
+    }
+}
+
+impl SoaGame for BreakoutSoa {
+    fn name(&self) -> &'static str {
+        "breakout"
+    }
+
+    fn num_envs(&self) -> usize {
+        self.rng.len()
+    }
+
+    fn reset_slot(&mut self, i: usize, frame: &mut [f32]) {
+        self.bricks[i * BK_BRICKS..(i + 1) * BK_BRICKS].fill(true);
+        self.lives[i] = BK_LIVES;
+        self.paddle[i] = GRID / 2 - 1;
+        self.ball_live[i] = false;
+        self.serve_slot(i);
+        self.render_slot(i, frame);
+    }
+
+    fn step_slot(&mut self, i: usize, action: usize, frame: &mut [f32]) -> Step {
+        if self.lives[i] == 0 || self.bricks_left(i) == 0 {
+            // Stepping a finished episode (caller should reset): no-op.
+            return Step::terminal(0.0);
+        }
+        match action {
+            1 => self.paddle[i] = self.paddle[i].saturating_sub(1),
+            2 => self.paddle[i] = (self.paddle[i] + 1).min(GRID - BK_PADDLE_W),
+            3 if !self.ball_live[i] => self.serve_slot(i),
+            _ => {}
+        }
+        if !self.ball_live[i] {
+            self.render_slot(i, frame);
+            return Step::cont(0.0);
+        }
+
+        let mut reward = 0.0;
+        // Move with wall bounces.
+        let mut nr = self.ball_r[i] + self.vel_r[i];
+        let mut nc = self.ball_c[i] + self.vel_c[i];
+        if nc < 0 {
+            nc = 1;
+            self.vel_c[i] = 1;
+        } else if nc >= GRID as i32 {
+            nc = GRID as i32 - 2;
+            self.vel_c[i] = -1;
+        }
+        if nr <= 0 {
+            nr = 1;
+            self.vel_r[i] = 1;
+        }
+
+        // Brick collision.
+        if (1..=BK_BRICK_ROWS as i32).contains(&nr) {
+            let idx = i * BK_BRICKS + (nr - 1) as usize * GRID + nc as usize;
+            if self.bricks[idx] {
+                self.bricks[idx] = false;
+                reward += 1.0;
+                self.vel_r[i] = -self.vel_r[i];
+                nr = self.ball_r[i]; // bounce back the way it came
+            }
+        }
+
+        let mut done = false;
+        if nr >= (GRID - 1) as i32 {
+            if self.paddle_covers(i, nc) {
+                self.vel_r[i] = -1;
+                nr = (GRID - 2) as i32;
+                // English: paddle edge redirects the ball.
+                if nc == self.paddle[i] as i32 {
+                    self.vel_c[i] = -1;
+                } else if nc == (self.paddle[i] + BK_PADDLE_W - 1) as i32 {
+                    self.vel_c[i] = 1;
+                }
+            } else {
+                reward -= 1.0;
+                self.lives[i] -= 1;
+                self.ball_live[i] = false;
+                if self.lives[i] == 0 {
+                    done = true;
+                }
+            }
+        }
+        if self.ball_live[i] {
+            self.ball_r[i] = nr;
+            self.ball_c[i] = nc;
+        }
+        if self.bricks_left(i) == 0 {
+            done = true;
+        }
+        self.render_slot(i, frame);
+        Step {
+            reward,
+            done,
+            truncated: false,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NavMaze (SoA planes of `super::nav_maze::NavMaze`)
+// ---------------------------------------------------------------------------
+
+const NM_STEP_PENALTY: f32 = -0.01;
+const NM_MAX_STEPS: usize = 400;
+/// Half-resolution lattice side (odd cells 1, 3, .., GRID-1).
+const NM_LATTICE: usize = GRID / 2;
+
+pub struct NavMazeSoa {
+    rng: Vec<Pcg32>,
+    /// `[E, GRID, GRID]` wall plane, flattened.
+    walls: Vec<bool>,
+    agent: Vec<(usize, usize)>,
+    goal: Vec<(usize, usize)>,
+    steps: Vec<usize>,
+}
+
+impl NavMazeSoa {
+    pub fn new(seeds: &[u64]) -> Self {
+        let e = seeds.len();
+        let mut m = Self {
+            rng: seeds.iter().map(|&s| Pcg32::seeded(s)).collect(),
+            walls: vec![false; e * CELLS],
+            agent: vec![(0, 0); e],
+            goal: vec![(GRID - 1, GRID - 1); e],
+            steps: vec![0; e],
+        };
+        // The per-slot env generates a maze at construction (drawing
+        // from its RNG) and again on every reset; replicate the
+        // construction-time draw so the streams line up.
+        for i in 0..e {
+            m.generate_slot(i);
+        }
+        m
+    }
+
+    /// Recursive-backtracker over odd cells, identical draw order to
+    /// the per-slot env but with fixed-size scratch (no allocation):
+    /// the DFS stack and visited set live on the call stack.
+    fn generate_slot(&mut self, i: usize) {
+        let walls = &mut self.walls[i * CELLS..(i + 1) * CELLS];
+        walls.fill(true);
+        let cells = |j: usize| 2 * j + 1;
+        let n = NM_LATTICE;
+        let mut visited = [[false; NM_LATTICE]; NM_LATTICE];
+        let mut stack = [(0usize, 0usize); NM_LATTICE * NM_LATTICE];
+        let mut sp = 1usize;
+        stack[0] = (0, 0);
+        visited[0][0] = true;
+        walls[cells(0) * GRID + cells(0)] = false;
+        while sp > 0 {
+            let (r, c) = stack[sp - 1];
+            let mut neighbours = [(0usize, 0usize); 4];
+            let mut count = 0;
+            if r > 0 && !visited[r - 1][c] {
+                neighbours[count] = (r - 1, c);
+                count += 1;
+            }
+            if r + 1 < n && !visited[r + 1][c] {
+                neighbours[count] = (r + 1, c);
+                count += 1;
+            }
+            if c > 0 && !visited[r][c - 1] {
+                neighbours[count] = (r, c - 1);
+                count += 1;
+            }
+            if c + 1 < n && !visited[r][c + 1] {
+                neighbours[count] = (r, c + 1);
+                count += 1;
+            }
+            if count == 0 {
+                sp -= 1;
+                continue;
+            }
+            let (nr, nc) = neighbours[self.rng[i].index(count)];
+            visited[nr][nc] = true;
+            // Carve destination and the wall between.
+            walls[cells(nr) * GRID + cells(nc)] = false;
+            let wall_r = (cells(r) + cells(nr)) / 2;
+            let wall_c = (cells(c) + cells(nc)) / 2;
+            walls[wall_r * GRID + wall_c] = false;
+            stack[sp] = (nr, nc);
+            sp += 1;
+        }
+        // Agent at the first carved cell, goal at the last.
+        self.agent[i] = (cells(0), cells(0));
+        self.goal[i] = (cells(n - 1), cells(n - 1));
+        self.steps[i] = 0;
+    }
+
+    fn render_slot(&self, i: usize, frame: &mut [f32]) {
+        let walls = &self.walls[i * CELLS..(i + 1) * CELLS];
+        for (out, &w) in frame.iter_mut().zip(walls) {
+            *out = if w { 0.25 } else { 0.0 };
+        }
+        put(frame, self.goal[i].0, self.goal[i].1, 0.75);
+        put(frame, self.agent[i].0, self.agent[i].1, 1.0);
+    }
+}
+
+impl SoaGame for NavMazeSoa {
+    fn name(&self) -> &'static str {
+        "nav_maze"
+    }
+
+    fn num_envs(&self) -> usize {
+        self.rng.len()
+    }
+
+    fn reset_slot(&mut self, i: usize, frame: &mut [f32]) {
+        self.generate_slot(i);
+        self.render_slot(i, frame);
+    }
+
+    fn step_slot(&mut self, i: usize, action: usize, frame: &mut [f32]) -> Step {
+        let (r, c) = self.agent[i];
+        let (nr, nc) = match action {
+            0 => (r.saturating_sub(1), c),
+            1 => ((r + 1).min(GRID - 1), c),
+            2 => (r, c.saturating_sub(1)),
+            3 => (r, (c + 1).min(GRID - 1)),
+            _ => (r, c),
+        };
+        if !self.walls[i * CELLS + nr * GRID + nc] {
+            self.agent[i] = (nr, nc);
+        }
+        self.steps[i] += 1;
+        let step = if self.agent[i] == self.goal[i] {
+            Step::terminal(1.0)
+        } else if self.steps[i] >= NM_MAX_STEPS {
+            Step {
+                reward: NM_STEP_PENALTY,
+                done: true,
+                truncated: true,
+            }
+        } else {
+            Step::cont(NM_STEP_PENALTY)
+        };
+        self.render_slot(i, frame);
+        step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::wrappers::Wrapped;
+
+    fn cfg(name: &str, k: usize, sticky: f64, max_len: usize, seed: u64) -> EnvConfig {
+        EnvConfig {
+            name: name.into(),
+            frame_stack: k,
+            sticky_action_prob: sticky,
+            max_episode_len: max_len,
+            step_cost_us: 0,
+            seed,
+            batch_native: true,
+        }
+    }
+
+    /// Drive the SoA engine and E independent `Wrapped` replicas with
+    /// the same seed layout; everything observable must be identical.
+    fn assert_matches_wrapped(name: &str, e: usize, k: usize, sticky: f64, steps: usize) {
+        let c = cfg(name, k, sticky, 37, 11);
+        let base = 5u64;
+        let mut soa = make_batch_env(&c, e, base).unwrap();
+        let mut solos: Vec<Wrapped> = (0..e)
+            .map(|i| Wrapped::from_config(&c, base + i as u64).unwrap())
+            .collect();
+
+        let obs_len = soa.obs_len();
+        assert_eq!(obs_len, solos[0].obs_len());
+        let mut obs_b = vec![0.0f32; e * obs_len];
+        let mut obs_s = vec![vec![0.0f32; obs_len]; e];
+        soa.reset_all(&mut obs_b);
+        for (s, o) in solos.iter_mut().zip(&mut obs_s) {
+            s.reset(o);
+        }
+        for (i, o) in obs_s.iter().enumerate() {
+            assert_eq!(&obs_b[i * obs_len..(i + 1) * obs_len], &o[..], "reset obs {i}");
+        }
+
+        let mut step_buf = Vec::with_capacity(e);
+        for t in 0..steps {
+            let actions: Vec<usize> = (0..e).map(|i| (t * 7 + i * 3) % 4).collect();
+            step_buf.clear();
+            soa.step_all(&actions, &mut obs_b, &mut step_buf);
+            for i in 0..e {
+                let ss = solos[i].step(actions[i], &mut obs_s[i]);
+                assert_eq!(step_buf[i], ss, "{name} slot {i} step {t}");
+                assert_eq!(
+                    &obs_b[i * obs_len..(i + 1) * obs_len],
+                    &obs_s[i][..],
+                    "{name} slot {i} obs at step {t}"
+                );
+            }
+        }
+        assert_eq!(
+            soa.total_steps(),
+            solos.iter().map(|s| s.total_steps).sum::<u64>()
+        );
+        assert_eq!(
+            soa.episodes_completed(),
+            solos.iter().map(|s| s.episodes_completed).sum::<u64>()
+        );
+        for (i, s) in solos.iter().enumerate() {
+            assert_eq!(soa.last_return(i), s.last_return, "{name} last_return {i}");
+        }
+    }
+
+    #[test]
+    fn catch_soa_matches_wrapped() {
+        assert_matches_wrapped("catch", 3, 4, 0.25, 200);
+    }
+
+    #[test]
+    fn grid_pong_soa_matches_wrapped() {
+        assert_matches_wrapped("grid_pong", 2, 3, 0.3, 250);
+    }
+
+    #[test]
+    fn breakout_soa_matches_wrapped() {
+        assert_matches_wrapped("breakout", 2, 4, 0.25, 300);
+    }
+
+    #[test]
+    fn nav_maze_soa_matches_wrapped() {
+        assert_matches_wrapped("nav_maze", 2, 2, 0.2, 150);
+    }
+
+    #[test]
+    fn frame_stack_one_matches_wrapped() {
+        // k = 1 skips the vectorized shift entirely (every position is
+        // the newest channel); the equivalence must still hold.
+        assert_matches_wrapped("catch", 2, 1, 0.25, 120);
+    }
+
+    #[test]
+    fn step_range_matches_step_all_per_group() {
+        let c = cfg("grid_pong", 4, 0.25, 100, 9);
+        let e = 5;
+        let mut whole = make_batch_env(&c, e, 2).unwrap();
+        let mut split = make_batch_env(&c, e, 2).unwrap();
+        let n = whole.obs_len();
+        let mut obs_w = vec![0.0f32; e * n];
+        let mut obs_s = vec![0.0f32; e * n];
+        whole.reset_all(&mut obs_w);
+        split.reset_all(&mut obs_s);
+        let mut steps_w = Vec::with_capacity(e);
+        let mut steps_s = Vec::with_capacity(e);
+        for t in 0..100usize {
+            let actions: Vec<usize> = (0..e).map(|i| (t + i) % 4).collect();
+            steps_w.clear();
+            whole.step_all(&actions, &mut obs_w, &mut steps_w);
+            steps_s.clear();
+            for (start, len) in [(0usize, 3usize), (3, 2)] {
+                split.step_range(
+                    start,
+                    &actions[start..start + len],
+                    &mut obs_s[start * n..(start + len) * n],
+                    &mut steps_s,
+                );
+            }
+            assert_eq!(steps_w, steps_s, "step {t}");
+            assert_eq!(obs_w, obs_s, "obs at step {t}");
+        }
+        assert_eq!(whole.total_steps(), split.total_steps());
+    }
+
+    #[test]
+    fn factory_rejects_unknown_env() {
+        let c = cfg("pong_3d", 4, 0.0, 10, 0);
+        let err = make_batch_env(&c, 1, 1).unwrap_err().to_string();
+        assert!(err.contains("unknown env `pong_3d`"), "got: {err}");
+    }
+}

@@ -332,6 +332,7 @@ mod tests {
             max_episode_len: 50,
             step_cost_us: 0,
             seed: 1,
+            batch_native: false,
         };
         let mut w = Wrapped::from_config(&cfg, 0).unwrap();
         let mut obs = vec![0.0; w.obs_len()];
@@ -356,6 +357,7 @@ mod tests {
             max_episode_len: 10,
             step_cost_us: 0,
             seed: 3,
+            batch_native: false,
         };
         let mut w = Wrapped::from_config(&cfg, 0).unwrap();
         let mut obs = vec![0.0; w.obs_len()];

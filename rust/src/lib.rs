@@ -26,7 +26,13 @@
 //!   stepped in lockstep behind one contiguous `[E, S, S, K]`
 //!   observation buffer, decoupling environments-in-flight from CPU
 //!   threads consumed (the CuLE-style lever on the paper's CPU/GPU
-//!   ratio; see DESIGN.md §4).
+//!   ratio; see DESIGN.md §4). Two interchangeable engines sit behind
+//!   it: the per-slot path (one `Wrapped` per slot — the default) and
+//!   the batch-native struct-of-arrays engine ([`env::BatchEnv`],
+//!   `env.batch_native = true`), whose single `step_all` advances all E
+//!   slots over one contiguous grid slab with one vectorized
+//!   frame-stack rotation — bit-for-bit equivalent trajectories,
+//!   allocation-free in steady state (DESIGN.md §13).
 //! * [`runtime`] — PJRT loading/execution of the AOT HLO artifacts.
 //! * [`env`], [`replay`], [`rl`] — RL substrates (ALE-like suite, R2D2
 //!   prioritized sequence replay striped over `replay.shards`

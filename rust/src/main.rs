@@ -119,6 +119,9 @@ fn load_config(parsed: &rlarch::cli::Parsed) -> anyhow::Result<SystemConfig> {
     if parsed.get("mode") == "local" {
         cfg.mode = InferenceMode::Local;
     }
+    if parsed.get_switch("batch-native") {
+        cfg.env.batch_native = true;
+    }
     // Telemetry knobs (train-only flags; absent on other subcommands the
     // getters fall through to the config/defaults).
     match parsed.get("trace-out") {
@@ -185,6 +188,11 @@ fn cmd_train(args: &[String]) -> i32 {
              every submission immediately)",
         )
         .flag("env", "", "override env (grid_pong|breakout|catch|nav_maze)")
+        .switch(
+            "batch-native",
+            "step env slots through the batch-native SoA engine (bit-for-bit \
+             equivalent to the per-slot path; cost only)",
+        )
         .flag("mode", "central", "central (SEED) or local (IMPALA-style)")
         .flag(
             "backend",
@@ -247,9 +255,10 @@ fn cmd_train(args: &[String]) -> i32 {
         };
         let metrics = Registry::new();
         println!(
-            "rlarch train: env={} actors={} envs/actor={} depth={} steps={} \
+            "rlarch train: env={} batch_native={} actors={} envs/actor={} depth={} steps={} \
              shards={} prefetch={} ingest={} pool={} buckets={:?} mode={:?}",
             cfg.env.name,
+            cfg.env.batch_native,
             cfg.actors.num_actors,
             cfg.actors.envs_per_actor,
             cfg.actors.pipeline_depth,

@@ -41,10 +41,14 @@ pub fn simulate(model: &SystemModel, n: usize, sim_seconds: f64, dt: f64) -> Des
     // More groups than slots cannot help (matches the actor's clamp).
     let d = model.pipeline_depth.max(1).min(e);
     let rows_per_group = e as f64 / d as f64; // env steps per group cycle
-    // Per-step CPU work includes the (amortized) replay-ingest share,
-    // mirroring `SystemModel::steady_state`'s t_env term so the two
-    // models stay structurally comparable on the insert_batch axis.
-    let t_env = model.cpu.step_cost_us() * 1e-6 + model.insert_overhead_s();
+    // Per-step CPU work includes the (amortized) replay-ingest share
+    // and the per-call dispatch share (amortized over the slot group on
+    // the batch-native engine), mirroring `SystemModel::steady_state`'s
+    // t_env term so the two models stay structurally comparable on the
+    // insert_batch and batch_native axes.
+    let t_env = model.cpu.step_cost_us() * 1e-6
+        + model.insert_overhead_s()
+        + model.env_dispatch_term();
     let t_cycle_env = rows_per_group * t_env; // CPU work per group cycle
     let t_train = model.train_time();
     // A train job occupies the learner for the whole train cycle
@@ -72,9 +76,13 @@ pub fn simulate(model: &SystemModel, n: usize, sim_seconds: f64, dt: f64) -> Des
 
     // Agent i is group (i % d) of thread (i / d).
     let mut agents = vec![ActorState::EnvWork(t_cycle_env); n * d];
+    // Rows still waiting in the batcher per Pending agent (a group's
+    // rows can be split across flushes — row-level packing).
+    let mut pending_rows = vec![0.0f64; n * d];
     let mut now = 0.0f64;
-    // GPU: FIFO queue of (is_train, batch agents) + one in-flight job.
-    let mut gpu_queue: std::collections::VecDeque<(bool, Vec<usize>)> =
+    // GPU: FIFO queue of (is_train, agents released on completion, rows
+    // of real work in the batch) + one in-flight job.
+    let mut gpu_queue: std::collections::VecDeque<(bool, Vec<usize>, f64)> =
         std::collections::VecDeque::new();
     let mut gpu_inflight: Option<(f64, bool, Vec<usize>)> = None;
 
@@ -119,6 +127,7 @@ pub fn simulate(model: &SystemModel, n: usize, sim_seconds: f64, dt: f64) -> Des
                         }
                         env_steps_since_train += rows_per_group;
                         agents[i] = ActorState::Pending(now);
+                        pending_rows[i] = rows_per_group;
                     }
                 }
             }
@@ -127,41 +136,57 @@ pub fn simulate(model: &SystemModel, n: usize, sim_seconds: f64, dt: f64) -> Des
         // 2) Learner: enqueue a train job when enough env steps arrived.
         while env_steps_since_train >= train_every {
             env_steps_since_train -= train_every;
-            gpu_queue.push_back((true, Vec::new()));
+            gpu_queue.push_back((true, Vec::new(), 0.0));
         }
 
         // 3) Batcher: flush when full or the oldest submit times out.
-        let pending: Vec<usize> = agents
+        // Row-level packing, like the real batcher: rows are taken FIFO
+        // (submit order) across group boundaries up to max_batch, so a
+        // group's rows can be split across two flushes — the agent
+        // stays Pending (original timestamp) until its last row is
+        // taken, and returns to EnvWork when the batch holding that row
+        // completes. This closes the old whole-group approximation's
+        // ~2x occupancy under-report for non-divisor group sizes (e.g.
+        // 40-row groups under a 64 cap), pinned by
+        // `des_row_packing_fills_batches_for_non_divisor_groups`.
+        let mut pending: Vec<(f64, usize)> = agents
             .iter()
             .enumerate()
-            .filter_map(|(i, s)| matches!(s, ActorState::Pending(_)).then_some(i))
-            .collect();
-        let oldest = pending
-            .iter()
-            .filter_map(|&i| match agents[i] {
-                ActorState::Pending(t) => Some(t),
+            .filter_map(|(i, s)| match s {
+                ActorState::Pending(t) => Some((*t, i)),
                 _ => None,
             })
-            .fold(f64::INFINITY, f64::min);
-        // Each pending group holds E/D rows; flush on max_batch rows or
-        // the oldest submission timing out. Granularity approximation:
-        // the DES keeps a group's rows together, while the real batcher
-        // packs rows across group boundaries up to max_batch — for
-        // non-divisor group sizes (e.g. 40 of 64) the DES under-reports
-        // occupancy by up to ~2x at saturation. That sits inside the
-        // structural tolerance the DES is used at (see tests); row-level
-        // packing would need per-row resume tracking.
-        let should_flush = pending.len() as f64 * rows_per_group
-            >= model.max_batch as f64
+            .collect();
+        pending.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let total_rows: f64 = pending.iter().map(|&(_, i)| pending_rows[i]).sum();
+        let oldest = pending
+            .first()
+            .map(|&(t, _)| t)
+            .unwrap_or(f64::INFINITY);
+        let should_flush = total_rows >= model.max_batch as f64
             || (!pending.is_empty() && now - oldest >= model.batch_timeout_s);
         if should_flush {
-            let per_batch =
-                ((model.max_batch as f64 / rows_per_group) as usize).max(1);
-            let batch: Vec<usize> = pending.into_iter().take(per_batch).collect();
-            for &i in &batch {
-                agents[i] = ActorState::OnGpu;
+            let mut capacity = model.max_batch as f64;
+            let mut taken = 0.0f64;
+            let mut released = Vec::new();
+            for &(_, i) in &pending {
+                if capacity <= 1e-12 {
+                    break;
+                }
+                let take = pending_rows[i].min(capacity);
+                capacity -= take;
+                taken += take;
+                if take >= pending_rows[i] - 1e-12 {
+                    // Last row of this group taken: the agent rides this
+                    // batch to the GPU.
+                    pending_rows[i] = 0.0;
+                    agents[i] = ActorState::OnGpu;
+                    released.push(i);
+                } else {
+                    pending_rows[i] -= take;
+                }
             }
-            gpu_queue.push_back((false, batch));
+            gpu_queue.push_back((false, released, taken));
         }
 
         // 4) GPU: complete and start jobs.
@@ -177,30 +202,22 @@ pub fn simulate(model: &SystemModel, n: usize, sim_seconds: f64, dt: f64) -> Des
             }
         }
         if gpu_inflight.is_none() {
-            if let Some((is_train, batch)) = gpu_queue.pop_front() {
+            if let Some((is_train, batch, rows_f)) = gpu_queue.pop_front() {
                 let service = if is_train {
                     t_train_cycle
                 } else {
-                    // The real batcher never exceeds max_batch rows per
-                    // GPU call: a flush of rows > max_batch (E > cap) is
-                    // served as ceil(rows / cap) back-to-back batches —
-                    // each launched at its padded AOT bucket shape
-                    // (`launch_size`; exact when no ladder is set), the
-                    // DES mirror of the analytic bucket-padding term.
-                    let rows_f = (batch.len() as f64 * rows_per_group).max(1.0);
-                    let rows = rows_f.round().max(1.0) as usize;
-                    let full = rows / model.max_batch;
-                    let rem = rows % model.max_batch;
-                    let mut service = full as f64
-                        * model.infer_time(model.launch_size(model.max_batch));
-                    if rem > 0 {
-                        service += model.infer_time(model.launch_size(rem));
-                    }
+                    // Row packing bounds every flush at max_batch rows,
+                    // so each batch is one GPU call — launched at its
+                    // padded AOT bucket shape (`launch_size`; exact when
+                    // no ladder is set), the DES mirror of the analytic
+                    // bucket-padding term.
+                    let rows_f = rows_f.max(1.0);
+                    let rows = (rows_f.round().max(1.0) as usize).min(model.max_batch);
                     if measuring {
-                        batches += full as u64 + u64::from(rem > 0);
+                        batches += 1;
                         batch_items += rows_f;
                     }
-                    service
+                    model.infer_time(model.launch_size(rows))
                 };
                 gpu_inflight = Some((now + service, is_train, batch));
             }
@@ -302,10 +319,11 @@ mod tests {
 
     #[test]
     fn des_non_divisor_envs_per_actor_stays_within_tolerance() {
-        // E = 40 does not divide max_batch = 64: the DES keeps each
-        // thread's rows together (mean batch ~40) while the analytic
-        // model lets occupancy approach the cap. The two must still
-        // agree structurally, and batches must respect the hard cap.
+        // E = 40 does not divide max_batch = 64: the row-packing
+        // batcher fills flushes across group boundaries (like the real
+        // one), so DES occupancy approaches the cap just as the
+        // analytic model's does. The two must agree structurally, and
+        // batches must respect the hard cap.
         let m = model().with_envs_per_actor(40);
         let des = simulate(&m, 4, 0.25, 20e-6);
         let ana = m.steady_state(4);
@@ -321,6 +339,62 @@ mod tests {
             "DES occupancy {} exceeds the max_batch cap {}",
             des.mean_batch,
             m.max_batch
+        );
+    }
+
+    #[test]
+    fn des_row_packing_fills_batches_for_non_divisor_groups() {
+        // Regression pin for the old whole-group approximation: with
+        // 40-row groups under a 64-row cap it could never form a batch
+        // above 40 rows (~2x occupancy under-report at saturation).
+        // Row-level packing must push the mean formed batch close to
+        // the cap once the timeout is long enough that full flushes
+        // dominate — while never exceeding it.
+        let mut m = model().with_envs_per_actor(40);
+        m.batch_timeout_s = 10e-3;
+        let des = simulate(&m, 4, 0.25, 20e-6);
+        assert!(
+            des.mean_batch > 48.0,
+            "row packing should fill batches past the 40-row group size: mean {} vs cap {}",
+            des.mean_batch,
+            m.max_batch
+        );
+        assert!(
+            des.mean_batch <= m.max_batch as f64 + 1e-9,
+            "occupancy {} exceeds the cap {}",
+            des.mean_batch,
+            m.max_batch
+        );
+    }
+
+    #[test]
+    fn des_batch_native_identity_and_amortized_gain() {
+        // Zero dispatch cost: toggling the engine changes nothing (the
+        // deterministic simulation must agree exactly). A heavy
+        // per-call cost: the SoA engine's amortization must raise the
+        // simulated rate, mirroring the analytic term.
+        let base = model().with_envs_per_actor(8);
+        let a = simulate(&base, 4, 0.25, 20e-6);
+        let b = simulate(&base.with_batch_native(true), 4, 0.25, 20e-6);
+        assert_eq!(a.env_rate, b.env_rate);
+        assert_eq!(a.gpu_util, b.gpu_util);
+
+        let costed = base.with_env_dispatch(400e-6);
+        let per_slot = simulate(&costed, 4, 0.25, 20e-6);
+        let soa = simulate(&costed.with_batch_native(true), 4, 0.25, 20e-6);
+        assert!(
+            soa.env_rate > per_slot.env_rate,
+            "batch-native DES rate {} <= per-slot {}",
+            soa.env_rate,
+            per_slot.env_rate
+        );
+        let ana = costed.with_batch_native(true).steady_state(4);
+        let ratio = soa.env_rate / ana.env_rate;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "DES {} vs analytic {} (ratio {ratio})",
+            soa.env_rate,
+            ana.env_rate
         );
     }
 

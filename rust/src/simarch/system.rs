@@ -107,6 +107,18 @@ pub struct SystemModel {
     /// shard count — matching the counter-based `micro_replay`
     /// measurement exactly.
     pub replay_shards: usize,
+    /// Fixed per-call overhead of an environment stepping call, seconds
+    /// — virtual dispatch, per-slot frame-stack rotation bookkeeping,
+    /// cache refills on scattered per-slot state. On the per-slot
+    /// engine every env step is its own call and pays this in full; the
+    /// batch-native SoA engine (`env.batch_native`, DESIGN.md §13)
+    /// makes one call per slot group, amortizing it over the group's
+    /// rows. Measured by the `micro_env` per-slot-vs-SoA sweep; 0 (the
+    /// default) keeps both engine models identical.
+    pub env_dispatch_s: f64,
+    /// Mirror of the `env.batch_native` execution knob: selects which
+    /// way `env_dispatch_s` enters the actor cycle.
+    pub batch_native: bool,
 }
 
 /// One steady-state operating point.
@@ -224,6 +236,22 @@ impl SystemModel {
         self.seq_per_env * self.replay_insert_s * k.min(s) / k
     }
 
+    /// Per-env-step share of the fixed per-call stepping overhead
+    /// (`env_dispatch_s`). The per-slot engine pays it on every step
+    /// (one call per slot); the batch-native SoA engine makes one call
+    /// per slot group of `E / D` rows, so each step carries `D / E` of
+    /// it — the amortization the CuLE-style layout buys. At
+    /// `env_dispatch_s = 0` (the default) both engines are identical.
+    pub fn env_dispatch_term(&self) -> f64 {
+        if self.batch_native {
+            let e = self.envs_per_actor.max(1) as f64;
+            let d = (self.pipeline_depth.max(1) as f64).min(e);
+            self.env_dispatch_s * d / e
+        } else {
+            self.env_dispatch_s
+        }
+    }
+
     /// Solve the steady state for `n` actor threads (damped fixed
     /// point). Each thread drives `envs_per_actor` environments in
     /// lockstep: a thread's cycle is E serial env steps plus one
@@ -235,8 +263,11 @@ impl SystemModel {
         // actor's clamp).
         let d = (self.pipeline_depth.max(1) as f64).min(e);
         // Ideal per-step CPU time: the env step itself plus the
-        // (amortized) replay-ingest share of each step.
-        let t_env = self.cpu.step_cost_us() * 1e-6 + self.insert_overhead_s();
+        // (amortized) replay-ingest and per-call dispatch shares of
+        // each step.
+        let t_env = self.cpu.step_cost_us() * 1e-6
+            + self.insert_overhead_s()
+            + self.env_dispatch_term();
         let t_train = self.train_time();
         // Learner-side cap: train steps complete one per train cycle
         // (GPU step + CPU sample/assemble, overlapped when prefetching),
@@ -329,7 +360,7 @@ impl SystemModel {
         let point = self.steady_state(n);
         let batch = point.batch_size.max(1.0);
         // Busy seconds per env step, by phase.
-        let env = self.cpu.step_cost_us() * 1e-6;
+        let env = self.cpu.step_cost_us() * 1e-6 + self.env_dispatch_term();
         let infer =
             self.infer_time(self.launch_size((batch.round() as usize).max(1))) / batch;
         let train = self.train_per_env * self.train_time();
@@ -435,6 +466,22 @@ impl SystemModel {
         m
     }
 
+    /// Clone with a different fixed per-call env stepping overhead
+    /// (seconds; the `micro_env` per-slot-vs-SoA gap).
+    pub fn with_env_dispatch(&self, dispatch_s: f64) -> Self {
+        let mut m = self.clone();
+        m.env_dispatch_s = dispatch_s.max(0.0);
+        m
+    }
+
+    /// Clone with the batch-native env engine toggled (mirrors the
+    /// `env.batch_native` execution knob).
+    pub fn with_batch_native(&self, on: bool) -> Self {
+        let mut m = self.clone();
+        m.batch_native = on;
+        m
+    }
+
     /// CPU/GPU ratio of this configuration (the paper's design metric).
     pub fn cpu_gpu_ratio(&self) -> f64 {
         self.cpu.cfg.hw_threads as f64 / self.gpu.cfg.num_sms as f64
@@ -484,6 +531,12 @@ pub fn default_system(infer_trace: Trace, train_trace: Trace) -> SystemModel {
         replay_insert_s: 3e-6,
         insert_batch: cfg.replay.insert_batch,
         replay_shards: cfg.replay.shards,
+        // 0 until the `micro_env` per-slot-vs-SoA sweep is measured on
+        // a toolchain-equipped host (provenance rule: no invented
+        // numbers) — at 0 both engine models are identical, keeping the
+        // Fig. 3/4 baselines untouched.
+        env_dispatch_s: 0.0,
+        batch_native: cfg.env.batch_native,
     }
 }
 
@@ -736,6 +789,62 @@ mod tests {
         assert!((t1 - 1e-6).abs() < 1e-12);
         assert!((t4 - 1e-6).abs() < 1e-12, "k <= shards must not amortize");
         assert!((t16 - 0.25e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_native_is_identity_at_zero_dispatch_cost() {
+        // The default model carries env_dispatch_s = 0: toggling the
+        // engine must change nothing (mirrors the execution-side
+        // bit-for-bit equivalence).
+        let m = model().with_envs_per_actor(8);
+        let a = m.steady_state(16);
+        let b = m.with_batch_native(true).steady_state(16);
+        assert_eq!(a.env_rate, b.env_rate);
+        assert_eq!(a.batch_size, b.batch_size);
+        assert_eq!(a.rtt_s, b.rtt_s);
+        assert_eq!(m.phase_shares(16), m.with_batch_native(true).phase_shares(16));
+    }
+
+    #[test]
+    fn env_dispatch_term_amortizes_over_the_slot_group() {
+        // Per-slot: every step pays the full per-call cost. Batch
+        // native: one call per group of E/D rows, so each step carries
+        // D/E of it; E = 1 makes the engines identical again.
+        let m = model().with_env_dispatch(10e-6).with_envs_per_actor(8);
+        assert!((m.env_dispatch_term() - 10e-6).abs() < 1e-18);
+        let b = m.with_batch_native(true);
+        assert!((b.env_dispatch_term() - 10e-6 / 8.0).abs() < 1e-18);
+        let piped = b.with_pipeline_depth(2);
+        assert!((piped.env_dispatch_term() - 10e-6 * 2.0 / 8.0).abs() < 1e-18);
+        let single = m.with_envs_per_actor(1);
+        assert_eq!(
+            single.env_dispatch_term(),
+            single.with_batch_native(true).env_dispatch_term()
+        );
+    }
+
+    #[test]
+    fn batch_native_amortizes_dispatch_cost_when_actor_bound() {
+        // Crank the per-call cost until it rivals the env step itself:
+        // the SoA engine must buy actor rate back, but never more than
+        // the serial cycle-time ratio.
+        let m = model().with_env_dispatch(400e-6).with_envs_per_actor(8);
+        let per_slot = m.steady_state(16);
+        let soa = m.with_batch_native(true).steady_state(16);
+        assert!(
+            soa.env_rate > 1.05 * per_slot.env_rate,
+            "batch-native {} vs per-slot {}",
+            soa.env_rate,
+            per_slot.env_rate
+        );
+        let base = m.cpu.step_cost_us() * 1e-6 + m.insert_overhead_s();
+        let cycle_gain = (base + m.env_dispatch_term())
+            / (base + m.with_batch_native(true).env_dispatch_term());
+        assert!(
+            soa.env_rate <= per_slot.env_rate * cycle_gain * 1.05,
+            "gain {} exceeds cycle ratio {cycle_gain}",
+            soa.env_rate / per_slot.env_rate
+        );
     }
 
     #[test]

@@ -18,37 +18,68 @@
 //! With `envs_per_actor = 1` a `VecEnv` is bit-for-bit the seed's
 //! single-env actor: slot seeds, sticky-action RNG streams, and reset
 //! semantics are identical (asserted by the tests below).
+//!
+//! `VecEnv` is also the dispatch seam for the batch-native SoA engine
+//! (DESIGN.md §13): with `env.batch_native = true` the E slots live in
+//! one [`BatchEnv`] stepping struct-of-arrays state in a single call
+//! per group, instead of E per-slot [`Wrapped`] instances. The two
+//! engines share the seed layout and are bit-for-bit equivalent
+//! (property + e2e tests); the knob changes cost only.
 
 use crate::config::EnvConfig;
+use crate::env::soa::{make_batch_env, BatchEnv};
 use crate::env::wrappers::Wrapped;
 use crate::env::Step;
 
-/// A batched environment engine: E wrapped env instances stepped in
-/// lockstep, rendering into one contiguous observation buffer.
+/// The two interchangeable stepping engines behind [`VecEnv`].
+enum Engine {
+    /// E independent `Wrapped` instances, stepped slot-by-slot (the
+    /// bit-for-bit reference path; default).
+    PerSlot(Vec<Wrapped>),
+    /// The batch-native SoA engine (`env::soa`): one call steps a whole
+    /// slot range over struct-of-arrays state. Opt-in via
+    /// `env.batch_native`.
+    Batch(Box<dyn BatchEnv>),
+}
+
+/// A batched environment engine: E env instances stepped in lockstep,
+/// rendering into one contiguous observation buffer.
 pub struct VecEnv {
-    slots: Vec<Wrapped>,
+    engine: Engine,
+    num_envs: usize,
     obs_len: usize,
     last_steps: Vec<Step>,
 }
 
 impl VecEnv {
-    /// Build `num_envs` wrapped instances. Slot `i` gets instance seed
+    /// Build `num_envs` env slots. Slot `i` gets instance seed
     /// `base_instance_seed + i`, so a pool of actors can hand out
     /// disjoint seed ranges (actor `a` with E envs uses base
     /// `a * E + 1`, matching the seed layout of `a + 1` at E = 1).
+    /// `cfg.batch_native` selects the engine; both use the same
+    /// per-slot seed layout, so the choice is invisible to callers.
     pub fn from_config(
         cfg: &EnvConfig,
         num_envs: usize,
         base_instance_seed: u64,
     ) -> anyhow::Result<Self> {
         anyhow::ensure!(num_envs > 0, "vecenv needs at least one environment");
-        let mut slots = Vec::with_capacity(num_envs);
-        for i in 0..num_envs {
-            slots.push(Wrapped::from_config(cfg, base_instance_seed + i as u64)?);
-        }
-        let obs_len = slots[0].obs_len();
+        let engine = if cfg.batch_native {
+            Engine::Batch(make_batch_env(cfg, num_envs, base_instance_seed)?)
+        } else {
+            let mut slots = Vec::with_capacity(num_envs);
+            for i in 0..num_envs {
+                slots.push(Wrapped::from_config(cfg, base_instance_seed + i as u64)?);
+            }
+            Engine::PerSlot(slots)
+        };
+        let obs_len = match &engine {
+            Engine::PerSlot(slots) => slots[0].obs_len(),
+            Engine::Batch(b) => b.obs_len(),
+        };
         Ok(Self {
-            slots,
+            engine,
+            num_envs,
             obs_len,
             last_steps: Vec::with_capacity(num_envs),
         })
@@ -56,7 +87,7 @@ impl VecEnv {
 
     /// Environments in flight behind this engine.
     pub fn num_envs(&self) -> usize {
-        self.slots.len()
+        self.num_envs
     }
 
     /// Per-slot observation length (S * S * K floats).
@@ -66,7 +97,7 @@ impl VecEnv {
 
     /// Length of the full `[E, S, S, K]` observation buffer.
     pub fn obs_batch_len(&self) -> usize {
-        self.slots.len() * self.obs_len
+        self.num_envs * self.obs_len
     }
 
     /// Allocate a zeroed observation batch of the right size.
@@ -77,12 +108,16 @@ impl VecEnv {
     /// Reset every slot; write all initial observations into `obs_batch`.
     pub fn reset_all(&mut self, obs_batch: &mut [f32]) {
         assert_eq!(obs_batch.len(), self.obs_batch_len(), "obs batch size");
-        for (slot, obs) in self
-            .slots
-            .iter_mut()
-            .zip(obs_batch.chunks_exact_mut(self.obs_len))
-        {
-            slot.reset(obs);
+        match &mut self.engine {
+            Engine::PerSlot(slots) => {
+                for (slot, obs) in slots
+                    .iter_mut()
+                    .zip(obs_batch.chunks_exact_mut(self.obs_len))
+                {
+                    slot.reset(obs);
+                }
+            }
+            Engine::Batch(b) => b.reset_all(obs_batch),
         }
     }
 
@@ -92,7 +127,7 @@ impl VecEnv {
     /// observation, and the returned `Step` has `done = true`). Returns
     /// one `Step` per slot, in slot order.
     pub fn step_all(&mut self, actions: &[usize], obs_batch: &mut [f32]) -> &[Step] {
-        assert_eq!(actions.len(), self.slots.len(), "one action per slot");
+        assert_eq!(actions.len(), self.num_envs, "one action per slot");
         assert_eq!(obs_batch.len(), self.obs_batch_len(), "obs batch size");
         self.step_range(0, actions, obs_batch)
     }
@@ -110,37 +145,68 @@ impl VecEnv {
         obs_rows: &mut [f32],
     ) -> &[Step] {
         let k = actions.len();
-        assert!(start + k <= self.slots.len(), "slot range out of bounds");
+        assert!(start + k <= self.num_envs, "slot range out of bounds");
         assert_eq!(obs_rows.len(), k * self.obs_len, "obs rows size");
         self.last_steps.clear();
-        for ((slot, &action), obs) in self.slots[start..start + k]
-            .iter_mut()
-            .zip(actions)
-            .zip(obs_rows.chunks_exact_mut(self.obs_len))
-        {
-            self.last_steps.push(slot.step(action, obs));
+        match &mut self.engine {
+            Engine::PerSlot(slots) => {
+                for ((slot, &action), obs) in slots[start..start + k]
+                    .iter_mut()
+                    .zip(actions)
+                    .zip(obs_rows.chunks_exact_mut(self.obs_len))
+                {
+                    self.last_steps.push(slot.step(action, obs));
+                }
+            }
+            Engine::Batch(b) => b.step_range(start, actions, obs_rows, &mut self.last_steps),
         }
         &self.last_steps
     }
 
-    /// Per-slot episode state (returns, lengths, counters).
+    /// Per-slot episode state (returns, lengths, counters). Only the
+    /// per-slot engine exposes `Wrapped` internals; callers that need
+    /// engine-independent state use [`VecEnv::last_return`] and the
+    /// aggregate counters.
     pub fn slot(&self, i: usize) -> &Wrapped {
-        &self.slots[i]
+        match &self.engine {
+            Engine::PerSlot(slots) => &slots[i],
+            Engine::Batch(_) => panic!(
+                "per-slot state is not exposed by the batch-native engine; \
+                 use last_return()/total_steps()/episodes_completed()"
+            ),
+        }
+    }
+
+    /// Return of slot `i`'s last completed episode (engine-independent).
+    pub fn last_return(&self, i: usize) -> f32 {
+        match &self.engine {
+            Engine::PerSlot(slots) => slots[i].last_return,
+            Engine::Batch(b) => b.last_return(i),
+        }
     }
 
     /// Total env steps across all slots.
     pub fn total_steps(&self) -> u64 {
-        self.slots.iter().map(|s| s.total_steps).sum()
+        match &self.engine {
+            Engine::PerSlot(slots) => slots.iter().map(|s| s.total_steps).sum(),
+            Engine::Batch(b) => b.total_steps(),
+        }
     }
 
     /// Completed episodes across all slots.
     pub fn episodes_completed(&self) -> u64 {
-        self.slots.iter().map(|s| s.episodes_completed).sum()
+        match &self.engine {
+            Engine::PerSlot(slots) => slots.iter().map(|s| s.episodes_completed).sum(),
+            Engine::Batch(b) => b.episodes_completed(),
+        }
     }
 
     /// Environment name (shared by every slot).
     pub fn name(&self) -> &'static str {
-        self.slots[0].name()
+        match &self.engine {
+            Engine::PerSlot(slots) => slots[0].name(),
+            Engine::Batch(b) => b.name(),
+        }
     }
 }
 
@@ -156,6 +222,7 @@ mod tests {
             max_episode_len: 100,
             step_cost_us: 0,
             seed: 7,
+            batch_native: false,
         }
     }
 
@@ -315,5 +382,82 @@ mod tests {
         let mut obs = venv.new_obs_batch();
         venv.reset_all(&mut obs);
         venv.step_all(&[0], &mut obs);
+    }
+
+    #[test]
+    fn batch_native_engine_matches_per_slot_bit_for_bit() {
+        // The dispatch seam: the same VecEnv API over either engine
+        // must produce identical observations, Steps, and counters for
+        // every env in the suite.
+        for name in ["catch", "grid_pong", "breakout", "nav_maze"] {
+            let per_slot_cfg = cfg(name);
+            let batch_cfg = EnvConfig {
+                batch_native: true,
+                ..cfg(name)
+            };
+            let e = 3;
+            let mut a = VecEnv::from_config(&per_slot_cfg, e, 4).unwrap();
+            let mut b = VecEnv::from_config(&batch_cfg, e, 4).unwrap();
+            let mut obs_a = a.new_obs_batch();
+            let mut obs_b = b.new_obs_batch();
+            a.reset_all(&mut obs_a);
+            b.reset_all(&mut obs_b);
+            assert_eq!(obs_a, obs_b, "{name} reset obs");
+            for i in 0..150usize {
+                let actions: Vec<usize> = (0..e).map(|k| (i + 2 * k) % 4).collect();
+                let sa: Vec<Step> = a.step_all(&actions, &mut obs_a).to_vec();
+                let sb: Vec<Step> = b.step_all(&actions, &mut obs_b).to_vec();
+                assert_eq!(sa, sb, "{name} steps at {i}");
+                assert_eq!(obs_a, obs_b, "{name} obs at {i}");
+            }
+            assert_eq!(a.total_steps(), b.total_steps(), "{name}");
+            assert_eq!(a.episodes_completed(), b.episodes_completed(), "{name}");
+            for s in 0..e {
+                assert_eq!(a.last_return(s), b.last_return(s), "{name} slot {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_native_step_range_matches_per_slot_groups() {
+        // pipeline_depth grouping goes through step_range on both
+        // engines; group-wise stepping must agree across the seam.
+        let per_slot_cfg = cfg("breakout");
+        let batch_cfg = EnvConfig {
+            batch_native: true,
+            ..cfg("breakout")
+        };
+        let e = 5;
+        let mut a = VecEnv::from_config(&per_slot_cfg, e, 2).unwrap();
+        let mut b = VecEnv::from_config(&batch_cfg, e, 2).unwrap();
+        let mut obs_a = a.new_obs_batch();
+        let mut obs_b = b.new_obs_batch();
+        a.reset_all(&mut obs_a);
+        b.reset_all(&mut obs_b);
+        let n = a.obs_len();
+        for i in 0..120usize {
+            let actions: Vec<usize> = (0..e).map(|k| (i + k) % 4).collect();
+            for (start, len) in [(0usize, 2usize), (2, 3)] {
+                let sa: Vec<Step> = a
+                    .step_range(start, &actions[start..start + len], &mut obs_a[start * n..(start + len) * n])
+                    .to_vec();
+                let sb: Vec<Step> = b
+                    .step_range(start, &actions[start..start + len], &mut obs_b[start * n..(start + len) * n])
+                    .to_vec();
+                assert_eq!(sa, sb, "group ({start},{len}) at {i}");
+            }
+            assert_eq!(obs_a, obs_b, "obs at {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not exposed by the batch-native engine")]
+    fn slot_access_panics_on_batch_engine() {
+        let c = EnvConfig {
+            batch_native: true,
+            ..cfg("catch")
+        };
+        let venv = VecEnv::from_config(&c, 2, 1).unwrap();
+        let _ = venv.slot(0);
     }
 }

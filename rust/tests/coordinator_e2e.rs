@@ -773,6 +773,92 @@ fn prefetch_depth2_beats_depth1_at_identical_sampled_batches() {
 }
 
 #[test]
+fn batch_native_defaults_off_and_off_means_the_per_slot_engine() {
+    // PR 6 compatibility pin: `env.batch_native` must default to false,
+    // and an explicit false must be indistinguishable from the implicit
+    // default — same actor stats, same replay stream, through the full
+    // central-batcher policy path.
+    let (cfg, dims) = equivalence_cfg();
+    assert!(
+        !cfg.env.batch_native,
+        "batch_native must default to the per-slot engine"
+    );
+    let rounds = 60u64;
+    let backend = Backend::Mock(Arc::new(MockModel::new(dims, 11)));
+    let (s_default, seqs_default) =
+        run_policy_actor(&cfg, dims, &backend, rounds, true);
+    let mut explicit = cfg.clone();
+    explicit.env.batch_native = false;
+    let (s_off, seqs_off) = run_policy_actor(&explicit, dims, &backend, rounds, true);
+    assert_eq!(s_default.env_steps, s_off.env_steps);
+    assert_eq!(s_default.episodes, s_off.episodes);
+    assert_eq!(seqs_default, seqs_off);
+}
+
+#[test]
+fn batch_native_actor_reproduces_per_slot_stream_bit_for_bit() {
+    // Tentpole acceptance: the SoA engine behind `batch_native = true`
+    // is a cost model, not a semantics change — the full policy-layer
+    // actor must emit the identical replay stream, through both the
+    // central batcher and the local client, at depth 1 and with
+    // pipelined slot groups.
+    let (base, dims) = equivalence_cfg();
+    let rounds = 60u64;
+    let backend = Backend::Mock(Arc::new(MockModel::new(dims, 11)));
+    for (envs, depth) in [(3usize, 1usize), (4, 2)] {
+        let mut cfg = base.clone();
+        cfg.actors.envs_per_actor = envs;
+        cfg.actors.pipeline_depth = depth;
+        for central in [true, false] {
+            let (s_slot, seqs_slot) =
+                run_policy_actor(&cfg, dims, &backend, rounds, central);
+            let mut soa = cfg.clone();
+            soa.env.batch_native = true;
+            let (s_soa, seqs_soa) =
+                run_policy_actor(&soa, dims, &backend, rounds, central);
+            let tag = format!("envs={envs} depth={depth} central={central}");
+            assert_eq!(s_slot.env_steps, s_soa.env_steps, "{tag}");
+            assert_eq!(s_slot.episodes, s_soa.episodes, "{tag}");
+            assert_eq!(
+                seqs_slot.len(),
+                seqs_soa.len(),
+                "sequence count diverged ({tag})"
+            );
+            for (i, (a, b)) in seqs_slot.iter().zip(&seqs_soa).enumerate() {
+                assert_eq!(a, b, "sequence {i} diverged ({tag})");
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_native_full_coordinator_run_terminates_on_every_env() {
+    // E2E smoke: the SoA engine under the full multi-threaded
+    // coordinator (actors + batcher + learner) for each registered env.
+    for env in rlarch::env::registered_envs() {
+        let mut cfg = small_cfg();
+        cfg.env.name = env.to_string();
+        cfg.env.batch_native = true;
+        cfg.learner.max_steps = 5;
+        let dims = ModelDims {
+            obs_len: 400,
+            hidden: 8,
+            num_actions: 4,
+            seq_len: cfg.learner.seq_len(),
+            train_batch: cfg.learner.train_batch,
+        };
+        let report = coordinator::run(
+            &cfg,
+            Backend::Mock(Arc::new(MockModel::new(dims, 6))),
+            Registry::new(),
+        )
+        .unwrap();
+        assert_eq!(report.learner.steps, 5, "env {env}");
+        assert!(report.env_steps > 0, "env {env}");
+    }
+}
+
+#[test]
 fn all_registered_envs_run_e2e_with_mock() {
     for env in rlarch::env::registered_envs() {
         let mut cfg = small_cfg();

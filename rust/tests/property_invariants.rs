@@ -332,6 +332,7 @@ fn prop_vecenv_slots_equal_independent_wrapped_envs() {
             max_episode_len: g.usize(10..80),
             step_cost_us: 0,
             seed: g.u64(0..1 << 40),
+            batch_native: false,
         };
         let e = g.usize(1..5);
         let base = g.u64(1..1 << 20);
@@ -360,6 +361,81 @@ fn prop_vecenv_slots_equal_independent_wrapped_envs() {
                     &format!("{name}: slot {k} obs {i} diverged"),
                 )?;
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_soa_engine_equals_per_slot_wrapped_byte_for_byte() {
+    // The batch-native SoA engine (env::soa) must be byte-identical to
+    // E independent per-slot `Wrapped` replicas with the same seed
+    // layout, across random envs, seeds, frame-stack depths, sticky
+    // probabilities, episode lengths (auto-resets included), and action
+    // sequences: obs rows, rewards, done flags, and episode stats.
+    use rlarch::config::EnvConfig;
+    use rlarch::env::soa::make_batch_env;
+    use rlarch::env::wrappers::Wrapped;
+    forall(15, |g| {
+        let name = *g.pick(&["catch", "grid_pong", "breakout", "nav_maze"]);
+        let cfg = EnvConfig {
+            name: name.to_string(),
+            frame_stack: g.usize(1..5),
+            sticky_action_prob: g.f64(0.0..0.5),
+            max_episode_len: g.usize(10..80),
+            step_cost_us: 0,
+            seed: g.u64(0..1 << 40),
+            batch_native: true,
+        };
+        let e = g.usize(1..5);
+        let base = g.u64(1..1 << 20);
+        let mut soa = make_batch_env(&cfg, e, base).map_err(|x| x.to_string())?;
+        let mut solos: Vec<Wrapped> = (0..e)
+            .map(|i| Wrapped::from_config(&cfg, base + i as u64).unwrap())
+            .collect();
+        let obs_len = soa.obs_len();
+        let mut obs = vec![0.0f32; e * obs_len];
+        soa.reset_all(&mut obs);
+        let mut obs_s = vec![vec![0.0f32; obs_len]; e];
+        for (s, o) in solos.iter_mut().zip(&mut obs_s) {
+            s.reset(o);
+        }
+        for k in 0..e {
+            prop_assert(
+                obs[k * obs_len..(k + 1) * obs_len] == obs_s[k][..],
+                &format!("{name}: slot {k} reset obs diverged"),
+            )?;
+        }
+        let mut steps = Vec::with_capacity(e);
+        for i in 0..g.usize(10..150) {
+            let actions: Vec<usize> = (0..e).map(|_| g.usize(0..4)).collect();
+            steps.clear();
+            soa.step_all(&actions, &mut obs, &mut steps);
+            for k in 0..e {
+                let ss = solos[k].step(actions[k], &mut obs_s[k]);
+                prop_assert(
+                    steps[k] == ss,
+                    &format!("{name}: slot {k} step {i} diverged"),
+                )?;
+                prop_assert(
+                    obs[k * obs_len..(k + 1) * obs_len] == obs_s[k][..],
+                    &format!("{name}: slot {k} obs {i} diverged"),
+                )?;
+            }
+        }
+        prop_assert(
+            soa.total_steps() == solos.iter().map(|s| s.total_steps).sum::<u64>(),
+            &format!("{name}: total_steps diverged"),
+        )?;
+        prop_assert(
+            soa.episodes_completed() == solos.iter().map(|s| s.episodes_completed).sum::<u64>(),
+            &format!("{name}: episodes_completed diverged"),
+        )?;
+        for (k, s) in solos.iter().enumerate() {
+            prop_assert(
+                soa.last_return(k) == s.last_return,
+                &format!("{name}: slot {k} last_return diverged"),
+            )?;
         }
         Ok(())
     });

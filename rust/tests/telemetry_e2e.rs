@@ -236,7 +236,9 @@ fn enabled_run_emits_trace_jsonl_and_phase_attribution() {
 fn disabled_run_writes_no_telemetry_files() {
     // Defaults off: the coordinator must not create trace/metrics files
     // (their paths are empty — nothing to write) and the wakeup counter
-    // still counts (it is unconditional plumbing, not telemetry-gated).
+    // still counts (it is unconditional plumbing, not telemetry-gated;
+    // with doorbell batching it counts notifies actually issued, and the
+    // batcher parks between round-trips so a run always rings it).
     let mut cfg = SystemConfig::default();
     cfg.env.name = "catch".into();
     cfg.env.frame_stack = 4;
