@@ -24,9 +24,10 @@
 //!
 //! `--json PATH` appends the measured grid (env steps/s, mean/last
 //! batch occupancy, batcher launches/s, learner steps/s, a
-//! `batch_native` engine tag per row, plus a unix timestamp) to a JSON
-//! array at PATH — the repo's perf trajectory (`BENCH_vecenv.json`)
-//! accumulates one entry per recorded run.
+//! `batch_native` engine tag per row, transport frames/s + bytes/s —
+//! identically 0 in-process, live under a `[fleet]` run — plus a unix
+//! timestamp) to a JSON array at PATH — the repo's perf trajectory
+//! (`BENCH_vecenv.json`) accumulates one entry per recorded run.
 
 use rlarch::cli::Cli;
 use rlarch::config::{InferenceMode, SystemConfig};
@@ -131,7 +132,8 @@ fn main() -> anyhow::Result<()> {
     ]);
     let mut csv = String::from(
         "actors,envs_per_actor,pipeline_depth,total_envs,env_steps_per_sec,\
-         mean_batch,batcher_steps_per_sec,last_batch_size,learner_steps_per_sec\n",
+         mean_batch,batcher_steps_per_sec,last_batch_size,learner_steps_per_sec,\
+         transport_frames_per_sec,transport_bytes_per_sec\n",
     );
     for &actors in &actor_counts {
         for &envs in &env_counts {
@@ -175,6 +177,19 @@ fn main() -> anyhow::Result<()> {
                 let batcher_rate = report.inference_batches as f64
                     / report.elapsed_seconds.max(1e-9);
                 let last_batch = metrics.gauge("batcher.last_batch_size").get();
+                // Fleet transport traffic (frames + payload bytes both
+                // directions). Identically 0 in-process — the columns
+                // exist so a `[fleet]` run's rows land in the same
+                // trajectory schema as single-process rows.
+                let el = report.elapsed_seconds.max(1e-9);
+                let transport_frames = (metrics.counter("fleet.tx_frames").get()
+                    + metrics.counter("fleet.rx_frames").get())
+                    as f64;
+                let transport_bytes = (metrics.counter("fleet.tx_bytes").get()
+                    + metrics.counter("fleet.rx_bytes").get())
+                    as f64;
+                let transport_frames_rate = transport_frames / el;
+                let transport_bytes_rate = transport_bytes / el;
                 t.row(&[
                     actors.to_string(),
                     envs.to_string(),
@@ -189,7 +204,8 @@ fn main() -> anyhow::Result<()> {
                 ]);
                 csv.push_str(&format!(
                     "{actors},{envs},{depth},{},{},{},{batcher_rate},\
-                     {last_batch},{learner_rate}\n",
+                     {last_batch},{learner_rate},{transport_frames_rate},\
+                     {transport_bytes_rate}\n",
                     report.total_envs,
                     report.env_steps_per_sec,
                     report.mean_batch_occupancy
@@ -205,6 +221,8 @@ fn main() -> anyhow::Result<()> {
                     ("last_batch_size", last_batch.into()),
                     ("learner_steps_per_sec", learner_rate.into()),
                     ("batch_native", batch_native.into()),
+                    ("transport_frames_per_sec", transport_frames_rate.into()),
+                    ("transport_bytes_per_sec", transport_bytes_rate.into()),
                 ]));
             }
         }

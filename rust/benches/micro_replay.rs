@@ -5,21 +5,60 @@
 //! the learner-side substrate (Reverb-equivalent). The tables here
 //! regenerate EXPERIMENTS.md §Perf.
 //!
-//! `--quick` shrinks every loop (the CI smoke run).
+//! Also carries the counting-global-allocator gate for the
+//! generation-pinned sample path: a warmed-up
+//! `SequenceReplay::sample_into` (reused scratch/slots/generations,
+//! borrowed rows visited under the shard lock) must never enter the
+//! allocator — the property that removes the learner's per-batch `Arc`
+//! churn (DESIGN.md §8).
+//!
+//! `--quick` shrinks every loop (the CI smoke run); the allocation
+//! gate is asserted in both modes.
 
 use rlarch::config::LearnerConfig;
 use rlarch::coordinator::learner::{run_learner, LearnerArgs};
 use rlarch::exec::ShutdownToken;
 use rlarch::metrics::Registry;
-use rlarch::replay::{IngestQueue, ReplayConfig, SequenceReplay};
+use rlarch::replay::{IngestQueue, ReplayConfig, SampleScratch, SequenceReplay};
 use rlarch::report::figure::Table;
 use rlarch::report::{bench, BenchResult};
 use rlarch::rl::Sequence;
 use rlarch::runtime::{Backend, MockModel, ModelDims};
 use rlarch::util::prng::Pcg32;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Counts every allocator entry (alloc + realloc); frees are not
+/// interesting here. Same gate pattern as `micro_env` /
+/// `micro_transport`.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_calls() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
 
 fn seq(obs_len: usize, t: usize, hidden: usize, tag: f32) -> Sequence {
     Sequence {
@@ -174,6 +213,19 @@ fn main() {
         std::hint::black_box(r.sample(16, &mut rng).unwrap());
     }));
 
+    // Generation-pinned sample path: same draws, borrowed rows, reused
+    // scratch — the learner's steady-state path (no Arc clones).
+    let mut scratch = SampleScratch::new();
+    let (mut slots, mut gens) = (Vec::new(), Vec::new());
+    let mut sink = 0.0f32;
+    results.push(bench("replay.sample_into_b16", warm_s, iters_s, || {
+        let ok = r.sample_into(16, &mut rng, &mut scratch, &mut slots, &mut gens, |_, s| {
+            sink += s.obs[0];
+        });
+        assert!(ok);
+    }));
+    std::hint::black_box(sink);
+
     // update priorities for 16 slots
     let batch = r.sample(16, &mut rng).unwrap();
     let prios = vec![0.5f32; 16];
@@ -187,6 +239,39 @@ fn main() {
         let b = r.sample(16, &mut rng).unwrap();
         r.update_priorities(&b.slots, &b.generations, &prios);
     }));
+
+    // The allocation gate (both modes): a warmed-up sample_into with
+    // reused scratch/slots/generations must never enter the allocator —
+    // the ISSUE 8 satellite acceptance for the Arc-churn removal.
+    let gate_iters = if quick { 500 } else { 10_000 };
+    {
+        let mut scratch = SampleScratch::new();
+        let (mut slots, mut gens) = (Vec::new(), Vec::new());
+        let mut sink = 0.0f32;
+        for _ in 0..8 {
+            r.sample_into(16, &mut rng, &mut scratch, &mut slots, &mut gens, |_, s| {
+                sink += s.obs[0];
+            });
+        }
+        let a0 = alloc_calls();
+        for _ in 0..gate_iters {
+            let ok = r.sample_into(16, &mut rng, &mut scratch, &mut slots, &mut gens, |_, s| {
+                sink += s.obs[0];
+            });
+            assert!(ok);
+        }
+        let allocs = alloc_calls() - a0;
+        assert_eq!(
+            allocs, 0,
+            "sample_into allocated {allocs} times over {gate_iters} \
+             steady-state b16 draws (hard requirement: 0)"
+        );
+        std::hint::black_box(sink);
+        println!(
+            "\nsample_into steady-state allocator entries over {gate_iters} \
+             b16 draws: 0 (hard requirement)\n"
+        );
+    }
 
     println!("{}", BenchResult::markdown_header());
     for r in &results {

@@ -1,0 +1,245 @@
+//! Micro-bench: the fleet wire codec (DESIGN.md §14) — encode/decode
+//! rates for submit, reply, and sequence frames at the shapes the
+//! actor hot path actually ships, plus a counting-global-allocator
+//! gate hard-asserting that steady-state encode and decode never enter
+//! the allocator. Encoders reuse one `Vec<u8>` whose capacity settles;
+//! decoders fill caller-provided `Vec<f32>`s — the property that makes
+//! the socket path copy-light instead of malloc-bound.
+//!
+//! The throughput table feeds the transport bytes/s columns in
+//! EXPERIMENTS.md §Perf.
+//!
+//! `--quick` shrinks every loop (the CI smoke run); the allocation
+//! gate is asserted in both modes.
+
+use rlarch::report::{bench, BenchResult};
+use rlarch::rl::Sequence;
+use rlarch::transport::frame::{
+    decode_reply_ok, decode_sequence, decode_submit, encode_reply_ok, encode_sequence,
+    encode_submit, parse_header, payload,
+};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counts every allocator entry (alloc + realloc); frees are not
+/// interesting here. Same gate pattern as `micro_env` /
+/// `micro_trajectory`: the counter makes "zero-allocation" checkable
+/// instead of inferred.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_calls() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+/// The shapes the fleet ships: paper-baseline obs (84x84-ish stack →
+/// 400 here), R2D2 hidden state, and the submission row counts the
+/// `envs_per_actor` axis produces.
+const OBS_LEN: usize = 400;
+const HIDDEN: usize = 128;
+const NUM_ACTIONS: usize = 4;
+const SEQ_LEN: usize = 20;
+
+fn seq(tag: f32) -> Sequence {
+    Sequence {
+        obs: vec![tag; SEQ_LEN * OBS_LEN],
+        actions: vec![1; SEQ_LEN],
+        rewards: vec![tag; SEQ_LEN],
+        discounts: vec![0.99; SEQ_LEN],
+        h0: vec![0.0; HIDDEN],
+        c0: vec![0.0; HIDDEN],
+        actor_id: 0,
+        valid_len: SEQ_LEN,
+    }
+}
+
+/// The CI gate: after one warmup round settles every buffer's
+/// capacity, `iters` full encode→decode round-trips of submit, reply,
+/// and sequence frames must not enter the allocator once.
+fn assert_codec_allocation_free(rows: usize, iters: usize) {
+    let obs: Vec<f32> = (0..rows * OBS_LEN).map(|i| i as f32 * 0.5).collect();
+    let h: Vec<f32> = (0..rows * HIDDEN).map(|i| -(i as f32)).collect();
+    let c: Vec<f32> = (0..rows * HIDDEN).map(|i| 0.25 * i as f32).collect();
+    let q: Vec<f32> = (0..rows * NUM_ACTIONS).map(|i| i as f32 * 0.1).collect();
+    let s = seq(1.0);
+
+    let mut buf = Vec::new();
+    let (mut o2, mut h2, mut c2) = (Vec::new(), Vec::new(), Vec::new());
+    let (mut q2, mut hh2, mut cc2) = (Vec::new(), Vec::new(), Vec::new());
+    let mut s2 = Sequence::default();
+
+    let mut round = |buf: &mut Vec<u8>,
+                     o2: &mut Vec<f32>,
+                     h2: &mut Vec<f32>,
+                     c2: &mut Vec<f32>,
+                     q2: &mut Vec<f32>,
+                     hh2: &mut Vec<f32>,
+                     cc2: &mut Vec<f32>,
+                     s2: &mut Sequence| {
+        encode_submit(buf, 42, rows, &obs, &h, &c);
+        let fr = &buf[4..];
+        let hd = parse_header(fr).unwrap();
+        decode_submit(payload(fr), hd.rows as usize, OBS_LEN, HIDDEN, o2, h2, c2).unwrap();
+
+        encode_reply_ok(buf, 42, 0, rows, &q, &h, &c);
+        let fr = &buf[4..];
+        let hd = parse_header(fr).unwrap();
+        decode_reply_ok(payload(fr), hd.rows as usize, NUM_ACTIONS, HIDDEN, q2, hh2, cc2)
+            .unwrap();
+
+        encode_sequence(buf, &s);
+        let fr = &buf[4..];
+        parse_header(fr).unwrap();
+        decode_sequence(payload(fr), OBS_LEN, HIDDEN, s2).unwrap();
+    };
+
+    // Warmup: capacities settle (encode buf grows to the largest frame,
+    // decode vecs to their row counts).
+    for _ in 0..4 {
+        round(
+            &mut buf, &mut o2, &mut h2, &mut c2, &mut q2, &mut hh2, &mut cc2, &mut s2,
+        );
+    }
+    let a0 = alloc_calls();
+    for _ in 0..iters {
+        round(
+            &mut buf, &mut o2, &mut h2, &mut c2, &mut q2, &mut hh2, &mut cc2, &mut s2,
+        );
+    }
+    let allocs = alloc_calls() - a0;
+    assert_eq!(
+        allocs, 0,
+        "frame codec allocated {allocs} times over {iters} steady-state \
+         encode+decode round-trips x {rows} rows (hard requirement: 0)"
+    );
+    // The decoded data actually round-tripped — the gate is not
+    // measuring a short-circuited path.
+    assert_eq!(o2, obs);
+    assert_eq!(q2, q);
+    assert_eq!(s2, s);
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    println!(
+        "# micro_transport — fleet wire codec (obs {OBS_LEN}, H={HIDDEN}, T={SEQ_LEN})\n"
+    );
+    let (warm, iters) = if quick { (10, 200) } else { (100, 5_000) };
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut bytes_per: Vec<(String, usize)> = Vec::new();
+
+    for &rows in &[1usize, 8, 32] {
+        let obs: Vec<f32> = (0..rows * OBS_LEN).map(|i| i as f32 * 0.5).collect();
+        let h = vec![0.5f32; rows * HIDDEN];
+        let c = vec![-0.5f32; rows * HIDDEN];
+        let q = vec![0.1f32; rows * NUM_ACTIONS];
+
+        let mut buf = Vec::new();
+        encode_submit(&mut buf, 1, rows, &obs, &h, &c);
+        bytes_per.push((format!("submit_r{rows}"), buf.len()));
+        results.push(bench(&format!("frame.encode_submit_r{rows}"), warm, iters, || {
+            encode_submit(&mut buf, 1, rows, &obs, &h, &c);
+        }));
+
+        let mut sub = Vec::new();
+        encode_submit(&mut sub, 1, rows, &obs, &h, &c);
+        let (mut o2, mut h2, mut c2) = (Vec::new(), Vec::new(), Vec::new());
+        results.push(bench(&format!("frame.decode_submit_r{rows}"), warm, iters, || {
+            let fr = &sub[4..];
+            decode_submit(payload(fr), rows, OBS_LEN, HIDDEN, &mut o2, &mut h2, &mut c2)
+                .unwrap();
+        }));
+
+        let mut rep = Vec::new();
+        encode_reply_ok(&mut rep, 1, 0, rows, &q, &h, &c);
+        bytes_per.push((format!("reply_r{rows}"), rep.len()));
+        let mut buf2 = Vec::new();
+        results.push(bench(&format!("frame.encode_reply_r{rows}"), warm, iters, || {
+            encode_reply_ok(&mut buf2, 1, 0, rows, &q, &h, &c);
+        }));
+        let (mut q2, mut hh2, mut cc2) = (Vec::new(), Vec::new(), Vec::new());
+        results.push(bench(&format!("frame.decode_reply_r{rows}"), warm, iters, || {
+            let fr = &rep[4..];
+            decode_reply_ok(payload(fr), rows, NUM_ACTIONS, HIDDEN, &mut q2, &mut hh2, &mut cc2)
+                .unwrap();
+        }));
+    }
+
+    // Sequence frames (worker → central replay, once per T env steps).
+    let s = seq(1.0);
+    let mut buf = Vec::new();
+    encode_sequence(&mut buf, &s);
+    bytes_per.push(("sequence".into(), buf.len()));
+    results.push(bench("frame.encode_sequence", warm, iters, || {
+        encode_sequence(&mut buf, &s);
+    }));
+    let mut enc = Vec::new();
+    encode_sequence(&mut enc, &s);
+    let mut s2 = Sequence::default();
+    results.push(bench("frame.decode_sequence", warm, iters, || {
+        let fr = &enc[4..];
+        decode_sequence(payload(fr), OBS_LEN, HIDDEN, &mut s2).unwrap();
+    }));
+
+    println!("{}", BenchResult::markdown_header());
+    for r in &results {
+        println!("{}", r.to_markdown_row());
+    }
+
+    // Frame sizes + implied single-core codec bandwidth: frame bytes
+    // over the matching encode mean. This is the number the simarch
+    // `net_bandwidth_bps` term is calibrated against (a socket can't
+    // beat its serializer).
+    println!("\n# frame sizes and single-core encode bandwidth\n");
+    let mut csv = String::from("name,mean_s,p95_s,frame_bytes,encode_gbps\n");
+    for r in &results {
+        let bytes = bytes_per
+            .iter()
+            .find(|(n, _)| r.name.ends_with(n.as_str()) || r.name.contains(&format!("_{n}")))
+            .map(|(_, b)| *b)
+            .unwrap_or(0);
+        let gbps = if r.name.contains("encode") && bytes > 0 && r.mean_s > 0.0 {
+            bytes as f64 * 8.0 / r.mean_s / 1e9
+        } else {
+            0.0
+        };
+        if r.name.contains("encode") && bytes > 0 {
+            println!("{}: {bytes} B/frame, {gbps:.2} Gbit/s", r.name);
+        }
+        csv.push_str(&format!(
+            "{},{},{},{bytes},{gbps}\n",
+            r.name, r.mean_s, r.p95_s
+        ));
+    }
+    let p = rlarch::report::write_csv("micro_transport", &csv);
+    println!("\ncsv: {}", p.display());
+
+    // The allocation gate runs in both modes — CI enforces the property
+    // via `--quick` rather than just reporting it.
+    let gate_iters = if quick { 500 } else { 10_000 };
+    assert_codec_allocation_free(8, gate_iters);
+    println!(
+        "\nframe codec steady-state allocator entries over {gate_iters} \
+         encode+decode round-trips x 8 rows: 0 (hard requirement)"
+    );
+}

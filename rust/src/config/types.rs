@@ -642,6 +642,77 @@ impl TelemetryConfig {
     }
 }
 
+/// Fleet transport: the distributed actor data plane (`rlarch serve` /
+/// `rlarch actor --connect`; DESIGN.md §14). Both addresses empty (the
+/// default) = single-process mode, bit-for-bit the seed path — the
+/// transport layer is never constructed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetConfig {
+    /// Coordinator listen address (`tcp:host:port`, `host:port`, or
+    /// `uds:/path`). Empty = do not serve.
+    pub listen: String,
+    /// Worker connect address (same forms). Empty = in-process actors.
+    pub connect: String,
+    /// Per-connection in-flight row budget on the server; submissions
+    /// beyond it are shed with a retryable error reply
+    /// (`fleet.shed_rows`) instead of queuing without bound.
+    pub max_inflight_rows: usize,
+    /// Dial attempts a worker makes beyond the first (connect and
+    /// reconnect) before giving up.
+    pub connect_retries: usize,
+    /// Initial reconnect backoff in milliseconds (doubles per attempt,
+    /// capped at 2 s); also the pause before a shed submission retries.
+    pub backoff_ms: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            listen: String::new(),
+            connect: String::new(),
+            max_inflight_rows: 4_096,
+            connect_retries: 40,
+            backoff_ms: 50,
+        }
+    }
+}
+
+impl FleetConfig {
+    pub fn from_value(v: &Value) -> Self {
+        let d = Self::default();
+        Self {
+            listen: get_str(v, "fleet.listen", &d.listen),
+            connect: get_str(v, "fleet.connect", &d.connect),
+            max_inflight_rows: get_usize(
+                v,
+                "fleet.max_inflight_rows",
+                d.max_inflight_rows,
+            ),
+            connect_retries: get_usize(
+                v,
+                "fleet.connect_retries",
+                d.connect_retries,
+            ),
+            backoff_ms: get_f64(v, "fleet.backoff_ms", d.backoff_ms as f64)
+                as u64,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.max_inflight_rows == 0 {
+            return Err(ConfigError::Invalid(
+                "fleet.max_inflight_rows must be > 0".into(),
+            ));
+        }
+        if self.backoff_ms == 0 {
+            return Err(ConfigError::Invalid(
+                "fleet.backoff_ms must be > 0".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Top-level
 // ---------------------------------------------------------------------------
@@ -670,6 +741,7 @@ pub struct SystemConfig {
     pub cpu: CpuModelConfig,
     pub power: PowerModelConfig,
     pub telemetry: TelemetryConfig,
+    pub fleet: FleetConfig,
 }
 
 impl Default for SystemConfig {
@@ -688,6 +760,7 @@ impl Default for SystemConfig {
             cpu: CpuModelConfig::default(),
             power: PowerModelConfig::default(),
             telemetry: TelemetryConfig::default(),
+            fleet: FleetConfig::default(),
         }
     }
 }
@@ -783,6 +856,16 @@ const SECTION_KEYS: &[(&str, &[&str])] = &[
             "metrics_out",
         ],
     ),
+    (
+        "fleet",
+        &[
+            "listen",
+            "connect",
+            "max_inflight_rows",
+            "connect_retries",
+            "backoff_ms",
+        ],
+    ),
 ];
 
 impl SystemConfig {
@@ -813,6 +896,7 @@ impl SystemConfig {
             cpu: CpuModelConfig::from_value(v),
             power: PowerModelConfig::from_value(v),
             telemetry: TelemetryConfig::from_value(v),
+            fleet: FleetConfig::from_value(v),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -829,6 +913,7 @@ impl SystemConfig {
         self.learner.validate()?;
         self.replay.validate()?;
         self.telemetry.validate()?;
+        self.fleet.validate()?;
         // Cross-section: the buffer must be able to hold a train batch
         // and the fill threshold the learner waits for.
         if self.replay.capacity < self.learner.train_batch {

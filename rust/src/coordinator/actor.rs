@@ -35,7 +35,7 @@ use crate::config::SystemConfig;
 use crate::exec::ShutdownToken;
 use crate::metrics::Registry;
 use crate::policy::PolicyClient;
-use crate::replay::{IngestQueue, SequenceReplay};
+use crate::replay::{IngestQueue, SequenceSink};
 use crate::rl::{actor_epsilon, epsilon_greedy, SequenceBuilder};
 use crate::runtime::ModelDims;
 use crate::telemetry::SpanKind;
@@ -47,9 +47,13 @@ pub struct ActorArgs {
     pub id: usize,
     pub cfg: SystemConfig,
     pub dims: ModelDims,
-    /// Split-phase inference client (central batcher or local backend).
+    /// Split-phase inference client (central batcher, local backend, or
+    /// a fleet worker's remote connection).
     pub policy: Box<dyn PolicyClient>,
-    pub replay: Arc<SequenceReplay>,
+    /// Where completed sequences go: the in-process replay, or a
+    /// [`crate::transport::RemoteIngest`] shipping them to the
+    /// coordinator — the actor loop is identical either way.
+    pub replay: Arc<dyn SequenceSink>,
     pub metrics: Registry,
     pub shutdown: ShutdownToken,
     /// Stop after this many rounds (a round steps every env slot once);
@@ -135,10 +139,10 @@ pub fn run_actor(args: ActorArgs) -> anyhow::Result<ActorStats> {
     let mut rngs: Vec<Pcg32> = (0..e)
         .map(|s| Pcg32::seeded(cfg.seed ^ (0xAC70 + (id * e + s) as u64)))
         .collect();
-    // Builders draw emitted slabs from the replay's recycling pool when
+    // Builders draw emitted slabs from the sink's recycling pool when
     // one is attached; completed sequences buffer in the ingest queue
     // and commit `insert_batch` per flush (1 = the seed path).
-    let pool = replay.pool().cloned();
+    let pool = replay.recycle_pool();
     let mut builders: Vec<SequenceBuilder> = (0..e)
         .map(|s| {
             let b = SequenceBuilder::new(

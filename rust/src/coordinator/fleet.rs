@@ -1,0 +1,317 @@
+//! Fleet orchestration: the multi-process deployment of the same
+//! SEED-style dataflow `run()` wires in one process (DESIGN.md §14).
+//!
+//! [`run_serve`] is the coordinator process (`rlarch serve`): the
+//! backend, batcher, replay, and learner live here, exactly as in
+//! [`super::run`], but instead of spawning actor threads it spawns a
+//! [`FleetServer`] that multiplexes remote actor connections into the
+//! batcher and remote sequence streams into the replay. [`run_worker`]
+//! is an actor process (`rlarch actor --connect`): it runs the
+//! unmodified [`actor::run_actor`] loop over a [`RemoteClient`] policy
+//! and a [`RemoteIngest`] sink — the split-phase `PolicyClient` trait
+//! and the `SequenceSink` seam are the only process boundary.
+//!
+//! ```text
+//!  worker 0..W      (TCP / UDS)          coordinator
+//!  actors ──submit──► RemoteClient ═══► FleetServer ──► batcher ──► Backend
+//!     ▲                                      │                         │
+//!     └──── wait ◄── reply chunks ◄══════════┴── slot-addressed ◄──────┘
+//!  actors ──sequences──► RemoteIngest ═══► serve_ingest ──► SequenceReplay
+//!                                                              ▲
+//!                                                    learner ──┘ (train)
+//! ```
+//!
+//! Determinism: a loopback fleet with the same seeds, the same
+//! fleet-global actor-id layout (`id_base` partitioning
+//! `cfg.actors.num_actors`), and the same backend produces the same
+//! replay stream as the in-process central path — inference is
+//! deterministic, the wire preserves f32 bits, and every actor derives
+//! its RNG and epsilon from its fleet-global id
+//! (`tests/transport_fleet.rs`).
+
+use super::batcher::Batcher;
+use super::{actor, learner, weighted_mean_return, ActorStats, LearnerStats};
+use crate::config::{InferenceMode, SystemConfig};
+use crate::exec::ShutdownToken;
+use crate::metrics::Registry;
+use crate::policy::PolicyClient;
+use crate::replay::{ReplayConfig, SequenceReplay, SequenceSink};
+use crate::rl::SequencePool;
+use crate::runtime::{Backend, ModelDims};
+use crate::telemetry::Telemetry;
+use crate::transport::{
+    Addr, FleetServer, FleetServerOpts, Listener, RemoteClient, RemoteClientOpts,
+    RemoteIngest,
+};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Outcome of a coordinator (`serve`) run.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub learner: LearnerStats,
+    pub elapsed_seconds: f64,
+    /// Sequences committed to replay (all of them arrived by wire).
+    pub sequences: u64,
+    /// Connections accepted over the run (infer + ingest).
+    pub accepts: u64,
+    /// Connections that died mid-stream (no goodbye).
+    pub disconnects: u64,
+    /// Accepts that followed a death: workers coming back.
+    pub reconnects: u64,
+    /// Rows shed by per-connection backpressure.
+    pub shed_rows: u64,
+    pub inference_batches: u64,
+    pub mean_batch_occupancy: f64,
+    pub batcher_errors: u64,
+}
+
+/// Outcome of a worker (`actor --connect`) run.
+#[derive(Clone, Debug)]
+pub struct WorkerReport {
+    pub actors: Vec<ActorStats>,
+    pub elapsed_seconds: f64,
+    pub env_steps: u64,
+    pub episodes: u64,
+    pub mean_return: f64,
+    /// First actor failure, if any. A worker whose server drained
+    /// cleanly reports the goodbye here for actors that were mid-`wait`
+    /// when it landed; callers treat it as informational when
+    /// `env_steps > 0` and the shutdown was server-initiated.
+    pub first_error: Option<String>,
+}
+
+/// Run the coordinator side of a fleet: backend + batcher + replay +
+/// learner in this process, remote actors over `cfg.fleet.listen`.
+///
+/// Blocks until the learner completes `cfg.learner.max_steps` steps,
+/// then drains: the fleet server flushes every outstanding reply, sends
+/// `Goodbye` on each connection (the workers' shutdown signal), and
+/// closes before the batcher is joined.
+pub fn run_serve(
+    cfg: &SystemConfig,
+    backend: Backend,
+    metrics: Registry,
+) -> anyhow::Result<ServeReport> {
+    cfg.validate()
+        .map_err(|e| anyhow::anyhow!("config: {e}"))?;
+    anyhow::ensure!(
+        !cfg.fleet.listen.is_empty(),
+        "fleet.listen is empty: nothing to serve on (set [fleet] listen or --listen)"
+    );
+    anyhow::ensure!(
+        cfg.mode == InferenceMode::Central,
+        "fleet serving requires mode = \"central\" (remote actors share the batcher)"
+    );
+    let dims = backend.dims();
+    anyhow::ensure!(
+        dims.seq_len == cfg.learner.seq_len(),
+        "learner seq_len {} != model seq_len {} (burn_in+unroll must match the AOT graph)",
+        cfg.learner.seq_len(),
+        dims.seq_len
+    );
+    anyhow::ensure!(
+        dims.train_batch == cfg.learner.train_batch,
+        "learner train_batch {} != model train_batch {}",
+        cfg.learner.train_batch,
+        dims.train_batch
+    );
+    let listener = Listener::bind(&Addr::parse(&cfg.fleet.listen)?)?;
+
+    let pool = cfg.replay.pool.then(|| Arc::new(SequencePool::new()));
+    let mut replay = SequenceReplay::new(ReplayConfig::from(&cfg.replay));
+    if let Some(p) = &pool {
+        replay = replay.with_pool(p.clone());
+    }
+    let replay = Arc::new(replay);
+    let shutdown = ShutdownToken::new();
+
+    let telemetry = Telemetry::from_config(&cfg.telemetry);
+    telemetry.install(&metrics);
+    let sampler = telemetry.start_sampler(&metrics)?;
+
+    let t0 = Instant::now();
+    let (batcher, handle) = Batcher::spawn(cfg.batcher.clone(), backend.clone(), metrics.clone());
+    let server = FleetServer::spawn(
+        listener,
+        handle.clone(),
+        replay.clone(),
+        FleetServerOpts {
+            max_inflight_rows: cfg.fleet.max_inflight_rows,
+            insert_batch: cfg.replay.insert_batch,
+        },
+        metrics.clone(),
+        shutdown.clone(),
+    );
+
+    // The learner runs on this thread; data arrives by wire.
+    let learner_result = learner::run_learner(learner::LearnerArgs {
+        cfg: cfg.learner.clone(),
+        dims,
+        backend: backend.clone(),
+        replay: replay.clone(),
+        metrics: metrics.clone(),
+        shutdown: shutdown.clone(),
+        loss_every: 10,
+        seed: cfg.seed,
+        on_batch: None,
+    });
+    // run_learner signals shutdown on its happy path; a train failure
+    // must still drain the fleet before this function returns.
+    shutdown.signal();
+
+    // Drain order matters: the server's writers must flush outstanding
+    // reply chunks (they hold ReplyRange borrows of batcher output
+    // slabs) and say goodbye before the batcher can be joined.
+    server.join();
+    drop(handle);
+    batcher.join();
+
+    let elapsed = t0.elapsed().as_secs_f64();
+    metrics
+        .counter("replay.shard_contention")
+        .add(replay.shard_contention());
+    metrics
+        .counter("replay.lock_acquisitions")
+        .add(replay.lock_acquisitions());
+    if let Some(p) = &pool {
+        metrics.gauge("actor.pool_hit_rate").set(p.hit_rate());
+    }
+    if let Some(s) = sampler {
+        s.stop()?;
+    }
+    telemetry.write_trace()?;
+
+    let batches = metrics.counter("batcher.batches").get();
+    let items = metrics.counter("batcher.items").get();
+    Ok(ServeReport {
+        learner: learner_result?,
+        elapsed_seconds: elapsed,
+        sequences: replay.inserts(),
+        accepts: metrics.counter("fleet.accepts").get(),
+        disconnects: metrics.counter("fleet.disconnects").get(),
+        reconnects: metrics.counter("fleet.reconnects").get(),
+        shed_rows: metrics.counter("fleet.shed_rows").get(),
+        inference_batches: batches,
+        mean_batch_occupancy: if batches > 0 {
+            items as f64 / batches as f64
+        } else {
+            0.0
+        },
+        batcher_errors: metrics.counter("batcher.errors").get(),
+    })
+}
+
+/// Run one worker process: `local_actors` actor threads over
+/// `cfg.fleet.connect`, with fleet-global ids `id_base ..`.
+///
+/// `dims` must match the coordinator backend's (the handshake rejects a
+/// mismatch); `cfg.actors.num_actors` stays the *fleet-wide* total so
+/// every worker derives the same epsilon spectrum and env-seed layout
+/// as the in-process run — `id_base` picks this worker's slice of it.
+///
+/// Actor failures do not abort the report: a server drain lands as a
+/// goodbye mid-`wait` in whichever actors were blocked, and the rest
+/// exit on the signalled token. The caller decides what a nonzero
+/// `first_error` means from `env_steps`.
+pub fn run_worker(
+    cfg: &SystemConfig,
+    dims: ModelDims,
+    id_base: usize,
+    local_actors: usize,
+    max_rounds: Option<u64>,
+    metrics: Registry,
+) -> anyhow::Result<WorkerReport> {
+    cfg.validate()
+        .map_err(|e| anyhow::anyhow!("config: {e}"))?;
+    anyhow::ensure!(
+        !cfg.fleet.connect.is_empty(),
+        "fleet.connect is empty: nowhere to connect (set [fleet] connect or --connect)"
+    );
+    anyhow::ensure!(local_actors > 0, "worker needs at least one actor thread");
+    anyhow::ensure!(
+        id_base + local_actors <= cfg.actors.num_actors,
+        "worker ids {id_base}..{} exceed the fleet-wide actors.num_actors {} \
+         (every worker must carve its slice from the same global layout)",
+        id_base + local_actors,
+        cfg.actors.num_actors
+    );
+    let addr = Addr::parse(&cfg.fleet.connect)?;
+    let opts = RemoteClientOpts {
+        connect_retries: cfg.fleet.connect_retries,
+        backoff_ms: cfg.fleet.backoff_ms,
+    };
+    let shutdown = ShutdownToken::new();
+    // One ingest connection per worker process, shared by its actors.
+    let ingest = Arc::new(RemoteIngest::connect(
+        &addr,
+        dims,
+        &opts,
+        &metrics,
+        shutdown.clone(),
+    )?);
+
+    let t0 = Instant::now();
+    let (actor_stats, actor_errors) = std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for t in 0..local_actors {
+            let id = id_base + t;
+            let (addr, cfg, ingest, metrics, shutdown) = (
+                &addr,
+                cfg.clone(),
+                ingest.clone() as Arc<dyn SequenceSink>,
+                metrics.clone(),
+                shutdown.clone(),
+            );
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("rlarch-actor-{id}"))
+                    .spawn_scoped(s, move || -> anyhow::Result<ActorStats> {
+                        let client = RemoteClient::connect(
+                            addr,
+                            id,
+                            dims,
+                            opts,
+                            &metrics,
+                            shutdown.clone(),
+                        )?;
+                        let policy: Box<dyn PolicyClient> = Box::new(client);
+                        actor::run_actor(actor::ActorArgs {
+                            id,
+                            cfg,
+                            dims,
+                            policy,
+                            replay: ingest,
+                            metrics,
+                            shutdown,
+                            max_rounds,
+                        })
+                    })
+                    .expect("spawn worker actor"),
+            );
+        }
+        let mut stats = Vec::new();
+        let mut errors: Vec<String> = Vec::new();
+        for j in joins {
+            match j.join().expect("actor panicked") {
+                Ok(st) => stats.push(st),
+                Err(e) => errors.push(e.to_string()),
+            }
+        }
+        (stats, errors)
+    });
+    // All actors are down: commit the drain marker on the ingest link
+    // so the coordinator logs a clean departure.
+    ingest.goodbye();
+
+    let env_steps: u64 = actor_stats.iter().map(|a| a.env_steps).sum();
+    let episodes: u64 = actor_stats.iter().map(|a| a.episodes).sum();
+    Ok(WorkerReport {
+        elapsed_seconds: t0.elapsed().as_secs_f64(),
+        env_steps,
+        episodes,
+        mean_return: weighted_mean_return(&actor_stats),
+        actors: actor_stats,
+        first_error: actor_errors.first().cloned(),
+    })
+}

@@ -19,11 +19,14 @@
 //! sampled under priorities as of batch k−1 (one train step staler than
 //! the serialized loop), the standard Ape-X/R2D2 relaxation.
 //!
-//! Both paths release their sampled sequence handles as soon as the
-//! batch is assembled: when the replay carries a recycling
-//! [`crate::rl::SequencePool`], a buffer whose ring slot was already
-//! overwritten recycles to the actors' sequence builders instead of
-//! hitting the allocator (DESIGN.md §8).
+//! Both paths sample through the borrow-visiting
+//! [`SequenceReplay::sample_into`]: rows copy into the (pooled) train
+//! batch under the owning shard's lock, so the sample path takes no
+//! `Arc` handles at all — no refcount churn per row, and an evicted
+//! buffer recycles to the actors' sequence builders the moment the ring
+//! overwrites it, since the replay's own reference is the only one
+//! (DESIGN.md §8). The sample path is allocation-free at steady state,
+//! hard-asserted by the counting-allocator gate in `micro_replay`.
 
 use crate::config::LearnerConfig;
 use crate::exec::ShutdownToken;
@@ -67,15 +70,11 @@ pub struct LearnerArgs {
     pub on_batch: Option<BatchProbe>,
 }
 
-/// Assemble a `TrainBatch` from sampled sequences into a caller-owned
-/// (pooled) buffer, reusing whatever capacity it already holds
-/// (batch-major layout, matching the AOT ABI).
-pub fn assemble_into<S: std::ops::Deref<Target = crate::rl::Sequence>>(
-    batch: &mut TrainBatch,
-    sequences: &[S],
-    dims: &ModelDims,
-) {
-    let b = sequences.len();
+/// Reset a `TrainBatch` buffer for `b` sequences of length
+/// `dims.seq_len`, keeping whatever capacity it already holds. Rows are
+/// then appended one at a time with [`assemble_push`] — the shape the
+/// borrow-sampling [`SequenceReplay::sample_into`] visit path needs.
+pub fn assemble_begin(batch: &mut TrainBatch, b: usize, dims: &ModelDims) {
     let t = dims.seq_len;
     batch.batch = b;
     batch.obs.clear();
@@ -90,15 +89,32 @@ pub fn assemble_into<S: std::ops::Deref<Target = crate::rl::Sequence>>(
     batch.h0.reserve(b * dims.hidden);
     batch.c0.clear();
     batch.c0.reserve(b * dims.hidden);
+}
+
+/// Append one sequence's rows to a batch begun with [`assemble_begin`]
+/// (batch-major layout, matching the AOT ABI). Allocation-free once the
+/// buffer has reached shape.
+pub fn assemble_push(batch: &mut TrainBatch, seq: &crate::rl::Sequence, dims: &ModelDims) {
+    debug_assert_eq!(seq.seq_len(), dims.seq_len, "sequence length mismatch");
+    batch.obs.extend_from_slice(&seq.obs);
+    batch.actions.extend_from_slice(&seq.actions);
+    batch.rewards.extend_from_slice(&seq.rewards);
+    batch.discounts.extend_from_slice(&seq.discounts);
+    batch.h0.extend_from_slice(&seq.h0);
+    batch.c0.extend_from_slice(&seq.c0);
+}
+
+/// Assemble a `TrainBatch` from sampled sequences into a caller-owned
+/// (pooled) buffer, reusing whatever capacity it already holds
+/// (batch-major layout, matching the AOT ABI).
+pub fn assemble_into<S: std::ops::Deref<Target = crate::rl::Sequence>>(
+    batch: &mut TrainBatch,
+    sequences: &[S],
+    dims: &ModelDims,
+) {
+    assemble_begin(batch, sequences.len(), dims);
     for seq in sequences {
-        let seq: &crate::rl::Sequence = seq;
-        debug_assert_eq!(seq.seq_len(), t, "sequence length mismatch");
-        batch.obs.extend_from_slice(&seq.obs);
-        batch.actions.extend_from_slice(&seq.actions);
-        batch.rewards.extend_from_slice(&seq.rewards);
-        batch.discounts.extend_from_slice(&seq.discounts);
-        batch.h0.extend_from_slice(&seq.h0);
-        batch.c0.extend_from_slice(&seq.c0);
+        assemble_push(batch, seq, dims);
     }
 }
 
@@ -192,6 +208,15 @@ impl LearnerCtx {
 
     /// The seed's serialized loop: sample → assemble → train →
     /// write-back, strictly in sequence (one reused batch buffer).
+    ///
+    /// Sampling and assembly are fused through
+    /// [`SequenceReplay::sample_into`]: each drawn sequence is copied
+    /// into the batch as a borrow pinned under its shard lock — no
+    /// `Arc` clone/release churn per row, no handle vec, and (scratch +
+    /// slot/generation vecs reused) no steady-state allocation on the
+    /// sample path (hard-asserted in `micro_replay --quick`). The
+    /// `learner.sample_seconds` / `learner.assemble_seconds` split is
+    /// preserved by subtracting the measured in-visit assembly time.
     fn run_serial(
         &self,
         book: &mut Book,
@@ -199,45 +224,53 @@ impl LearnerCtx {
     ) -> anyhow::Result<()> {
         let mut rng = Pcg32::seeded(self.seed ^ 0x1EA8);
         let mut pool = TrainBatch::empty();
+        let mut scratch = crate::replay::SampleScratch::new();
+        let mut slots: Vec<usize> = Vec::new();
+        let mut generations: Vec<u64> = Vec::new();
         while book.stats.steps < self.cfg.max_steps as u64
             && !self.shutdown.is_signalled()
         {
-            let sampled = {
+            let b = self.cfg.train_batch;
+            let t0 = std::time::Instant::now();
+            let mut t_asm = 0.0f64;
+            let ok = {
                 let _sp = self.trace.span(SpanKind::ReplaySample);
-                self.sample_time
-                    .time(|| self.replay.sample(self.cfg.train_batch, &mut rng))
+                let (pool, dims, t_asm) = (&mut pool, &self.dims, &mut t_asm);
+                self.replay.sample_into(
+                    b,
+                    &mut rng,
+                    &mut scratch,
+                    &mut slots,
+                    &mut generations,
+                    |row, seq| {
+                        let ta = std::time::Instant::now();
+                        if row == 0 {
+                            assemble_begin(pool, b, dims);
+                        }
+                        assemble_push(pool, seq, dims);
+                        *t_asm += ta.elapsed().as_secs_f64();
+                    },
+                )
             };
-            let Some(mut sampled) = sampled else {
+            if !ok {
+                self.sample_time.record(t0.elapsed().as_secs_f64());
                 self.waits_c.inc();
                 if self.shutdown.sleep_interruptible(Duration::from_millis(1)) {
                     break;
                 }
                 continue;
-            };
-            {
-                let _sp = self.trace.span(SpanKind::LearnerAssemble);
-                self.assemble_time.time(|| {
-                    assemble_into(&mut pool, &sampled.sequences, &self.dims)
-                });
             }
-            // The batch is copied out: release the sampled handles so
-            // replay-evicted buffers recycle into the sequence pool.
-            if let Some(p) = self.replay.pool() {
-                for s in sampled.sequences.drain(..) {
-                    p.release(s);
-                }
-            }
+            self.assemble_time.record(t_asm);
+            self.sample_time
+                .record((t0.elapsed().as_secs_f64() - t_asm).max(0.0));
             let reply = {
                 let _sp = self.trace.span(SpanKind::LearnerTrain);
                 self.train_time.time(|| self.backend.train_step(&mut pool))
             }?;
-            self.replay.update_priorities(
-                &sampled.slots,
-                &sampled.generations,
-                &reply.priorities,
-            );
+            self.replay
+                .update_priorities(&slots, &generations, &reply.priorities);
             if let Some(probe) = on_batch.as_mut() {
-                probe(&sampled.slots);
+                probe(&slots);
             }
             self.record(book, &reply)?;
         }
@@ -276,7 +309,12 @@ impl LearnerCtx {
                     .span_recorder(format_args!("learner-prefetch"));
                 move || -> mpsc::Receiver<WriteBack> {
                     let mut rng = Pcg32::seeded(seed ^ 0x1EA8);
-                    let mut pool: Vec<TrainBatch> = Vec::new();
+                    // Recycled (batch, slots, generations) buffer sets:
+                    // write-backs return them, hand-offs take them, so
+                    // the steady-state prefetch loop allocates nothing.
+                    let mut free: Vec<(TrainBatch, Vec<usize>, Vec<u64>)> =
+                        Vec::new();
+                    let mut scratch = crate::replay::SampleScratch::new();
                     while !stop_ref.load(Ordering::Relaxed)
                         && !shutdown.is_signalled()
                     {
@@ -288,14 +326,39 @@ impl LearnerCtx {
                                 &wb.generations,
                                 &wb.priorities,
                             );
-                            pool.push(wb.pool);
+                            free.push((wb.pool, wb.slots, wb.generations));
                         }
-                        let sampled = {
+                        let (mut batch, mut slots, mut generations) =
+                            free.pop().unwrap_or_else(|| {
+                                (TrainBatch::empty(), Vec::new(), Vec::new())
+                            });
+                        // Fused sample + assemble: rows copy into the
+                        // batch as borrows under the shard lock (see
+                        // run_serial; same timer attribution).
+                        let t0 = std::time::Instant::now();
+                        let mut t_asm = 0.0f64;
+                        let ok = {
                             let _sp = trace.span(SpanKind::ReplaySample);
-                            sample_time
-                                .time(|| replay.sample(train_batch, &mut rng))
+                            let (batch, t_asm) = (&mut batch, &mut t_asm);
+                            replay.sample_into(
+                                train_batch,
+                                &mut rng,
+                                &mut scratch,
+                                &mut slots,
+                                &mut generations,
+                                |row, seq| {
+                                    let ta = std::time::Instant::now();
+                                    if row == 0 {
+                                        assemble_begin(batch, train_batch, &dims);
+                                    }
+                                    assemble_push(batch, seq, &dims);
+                                    *t_asm += ta.elapsed().as_secs_f64();
+                                },
+                            )
                         };
-                        let Some(mut sampled) = sampled else {
+                        if !ok {
+                            sample_time.record(t0.elapsed().as_secs_f64());
+                            free.push((batch, slots, generations));
                             waits_c.inc();
                             if shutdown
                                 .sleep_interruptible(Duration::from_millis(1))
@@ -303,26 +366,15 @@ impl LearnerCtx {
                                 break;
                             }
                             continue;
-                        };
-                        let mut batch =
-                            pool.pop().unwrap_or_else(TrainBatch::empty);
-                        {
-                            let _sp = trace.span(SpanKind::LearnerAssemble);
-                            assemble_time.time(|| {
-                                assemble_into(&mut batch, &sampled.sequences, &dims)
-                            });
                         }
-                        // Copied out: release the handles so evicted
-                        // buffers recycle into the sequence pool.
-                        if let Some(p) = replay.pool() {
-                            for s in sampled.sequences.drain(..) {
-                                p.release(s);
-                            }
-                        }
+                        assemble_time.record(t_asm);
+                        sample_time.record(
+                            (t0.elapsed().as_secs_f64() - t_asm).max(0.0),
+                        );
                         let handoff = Prefetched {
                             batch,
-                            slots: sampled.slots,
-                            generations: sampled.generations,
+                            slots,
+                            generations,
                         };
                         if ready_tx.send(handoff).is_err() {
                             break; // train side exited

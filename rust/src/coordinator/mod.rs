@@ -27,6 +27,7 @@
 
 pub mod actor;
 pub mod batcher;
+pub mod fleet;
 pub mod learner;
 
 pub use actor::ActorStats;
@@ -34,7 +35,10 @@ pub use batcher::{
     ActorReply, Batcher, BatcherHandle, InferItem, InferSlab, ReplyChunk, ReplyRange,
     SlabPool,
 };
-pub use learner::{BatchProbe, LearnerStats, assemble_batch, assemble_into};
+pub use fleet::{ServeReport, WorkerReport, run_serve, run_worker};
+pub use learner::{
+    BatchProbe, LearnerStats, assemble_batch, assemble_begin, assemble_into, assemble_push,
+};
 
 use crate::config::{InferenceMode, SystemConfig};
 use crate::exec::ShutdownToken;

@@ -46,9 +46,21 @@
 //!   `replay::IngestQueue`s commit `replay.insert_batch` sequences per
 //!   shard-grouped flush, with evicted and learner-released buffers
 //!   recycling back to the pool (DESIGN.md §8).
+//! * [`transport`] — the fleet data plane (DESIGN.md §14):
+//!   length-prefixed slab frames over TCP / Unix-domain sockets,
+//!   serialized straight from the pooled slab protocol's recycled
+//!   buffers (allocation-free in steady state). `transport::RemoteClient`
+//!   implements the split-phase [`policy`] trait over a socket — the
+//!   unmodified actor loop runs in a worker process (`rlarch actor
+//!   --connect`) — and `transport::FleetServer` multiplexes many remote
+//!   actors into the batcher (`rlarch serve`) with per-connection
+//!   backpressure (bounded in-flight rows, shed-and-retry), reconnect
+//!   with backoff, and clean drain. `[fleet]` addresses empty (the
+//!   default) = single-process mode, bit-for-bit the seed path.
 //! * [`simarch`] — the architectural simulator (GPU/CPU/power models);
 //!   its system model carries the same `envs_per_actor` and
-//!   `pipeline_depth` axes.
+//!   `pipeline_depth` axes, plus fleet network terms (`net_rtt_s`,
+//!   bandwidth) that default to the in-process identity.
 //! * [`telemetry`] — the observability layer (DESIGN.md §12): striped
 //!   hot-path timers (in [`metrics`]), lock-free per-thread span rings
 //!   rendered as Chrome trace JSON (`--trace-out`), and a background
@@ -74,5 +86,6 @@ pub mod simarch;
 pub mod rl;
 pub mod runtime;
 pub mod telemetry;
+pub mod transport;
 pub mod util;
 pub mod vecenv;

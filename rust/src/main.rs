@@ -3,6 +3,10 @@
 //! ```text
 //! rlarch train     [--config cfg.toml] [--actors N] [--steps K] ...
 //!                  run the real SEED coordinator on the AOT artifacts
+//! rlarch serve     [--listen uds:/run/fleet.sock] [--steps K] ...
+//!                  fleet coordinator: learner + batcher here, actors remote
+//! rlarch actor     --connect uds:/run/fleet.sock [--id B] [--local-actors N]
+//!                  fleet worker: actor threads over a remote coordinator
 //! rlarch sweep     [--actors 4,8,...,256]      Fig. 3 on the simulator
 //! rlarch smsweep   [--sms 80,60,...,2]         Fig. 4 on the simulator
 //! rlarch breakdown                              Fig. 2 on the simulator
@@ -33,13 +37,15 @@ fn main() {
     let rest: &[String] = if args.is_empty() { &[] } else { &args[1..] };
     let code = match sub {
         "train" => cmd_train(rest),
+        "serve" => cmd_serve(rest),
+        "actor" => cmd_actor(rest),
         "sweep" => cmd_sweep(rest),
         "smsweep" => cmd_smsweep(rest),
         "breakdown" => cmd_breakdown(rest),
         "info" => cmd_info(rest),
         _ => {
             eprintln!(
-                "usage: rlarch <train|sweep|smsweep|breakdown|info> [flags]\n\
+                "usage: rlarch <train|serve|actor|sweep|smsweep|breakdown|info> [flags]\n\
                  run `rlarch <subcommand> --help` for flags"
             );
             2
@@ -237,20 +243,7 @@ fn cmd_train(args: &[String]) -> i32 {
                 _server = Some(srv);
                 Backend::Xla(handle)
             }
-            "mock" => {
-                // Probe one env instance for the observation shape; the
-                // rest of the dims follow the learner config.
-                let probe = VecEnv::from_config(&cfg.env, 1, cfg.seed)
-                    .map_err(|e| anyhow::anyhow!("{e}"))?;
-                let dims = ModelDims {
-                    obs_len: probe.obs_len(),
-                    hidden: 16,
-                    num_actions: rlarch::env::NUM_ACTIONS,
-                    seq_len: cfg.learner.seq_len(),
-                    train_batch: cfg.learner.train_batch,
-                };
-                Backend::Mock(Arc::new(MockModel::new(dims, cfg.seed)))
-            }
+            "mock" => Backend::Mock(Arc::new(MockModel::new(mock_dims(&cfg)?, cfg.seed))),
             other => anyhow::bail!("unknown --backend `{other}` (xla|mock)"),
         };
         let metrics = Registry::new();
@@ -328,6 +321,219 @@ fn cmd_train(args: &[String]) -> i32 {
             cfg.actors.num_actors,
         ) {
             println!("\nphase attribution (measured vs model):\n{table}");
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+/// Mock-backend model dims: probe one env instance for the observation
+/// shape; the rest follow the learner config. `serve` and `actor`
+/// processes sharing a config derive identical dims from this — the
+/// transport handshake rejects any disagreement.
+fn mock_dims(cfg: &SystemConfig) -> anyhow::Result<ModelDims> {
+    let probe =
+        VecEnv::from_config(&cfg.env, 1, cfg.seed).map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok(ModelDims {
+        obs_len: probe.obs_len(),
+        hidden: 16,
+        num_actions: rlarch::env::NUM_ACTIONS,
+        seq_len: cfg.learner.seq_len(),
+        train_batch: cfg.learner.train_batch,
+    })
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let cli = Cli::new(
+        "rlarch serve",
+        "fleet coordinator: learner + batcher + replay here, actors connect remotely",
+    )
+    .flag("config", "", "TOML config path (default: built-in)")
+    .flag(
+        "listen",
+        "",
+        "override fleet.listen (tcp:host:port or uds:/path)",
+    )
+    .flag(
+        "actors",
+        "0",
+        "override the FLEET-WIDE actor total (workers carve id slices from it)",
+    )
+    .flag("steps", "0", "override learner steps")
+    .flag("replay-shards", "0", "override replay shard count")
+    .flag("prefetch-depth", "0", "override learner prefetch depth")
+    .flag(
+        "insert-batch",
+        "0",
+        "override replay ingest batch (also the wire-ingest commit batch)",
+    )
+    .flag(
+        "max-inflight-rows",
+        "0",
+        "override fleet.max_inflight_rows (per-connection shed budget)",
+    )
+    .flag("env", "", "override env (grid_pong|breakout|catch|nav_maze)")
+    .flag(
+        "backend",
+        "xla",
+        "xla (AOT artifacts via PJRT) or mock (deterministic in-process model)",
+    )
+    .flag("artifacts", "artifacts", "artifact directory");
+    let parsed = match cli.parse(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let run = || -> anyhow::Result<()> {
+        let mut cfg = load_config(&parsed)?;
+        match parsed.get("listen") {
+            "" => {}
+            a => cfg.fleet.listen = a.to_string(),
+        }
+        if let Ok(n) = parsed.get_usize("max-inflight-rows") {
+            if n > 0 {
+                cfg.fleet.max_inflight_rows = n;
+            }
+        }
+        let mut _server = None;
+        let backend = match parsed.get("backend") {
+            "xla" => {
+                let (srv, handle) =
+                    XlaServer::spawn(Path::new(parsed.get("artifacts")), None, true)?;
+                _server = Some(srv);
+                Backend::Xla(handle)
+            }
+            "mock" => Backend::Mock(Arc::new(MockModel::new(mock_dims(&cfg)?, cfg.seed))),
+            other => anyhow::bail!("unknown --backend `{other}` (xla|mock)"),
+        };
+        let metrics = Registry::new();
+        println!(
+            "rlarch serve: listen={} fleet_actors={} envs/actor={} steps={} \
+             shards={} ingest={} max_inflight_rows={}",
+            cfg.fleet.listen,
+            cfg.actors.num_actors,
+            cfg.actors.envs_per_actor,
+            cfg.learner.max_steps,
+            cfg.replay.shards,
+            cfg.replay.insert_batch,
+            cfg.fleet.max_inflight_rows
+        );
+        let report = coordinator::run_serve(&cfg, backend, metrics)?;
+        println!(
+            "drained in {:.1}s: learner {} steps (loss {:.4} -> {:.4}), \
+             {} sequences by wire; accepts {}, disconnects {}, reconnects {}, \
+             shed rows {}; batcher occupancy {:.1}",
+            report.elapsed_seconds,
+            report.learner.steps,
+            report.learner.first_loss,
+            report.learner.final_loss,
+            report.sequences,
+            report.accepts,
+            report.disconnects,
+            report.reconnects,
+            report.shed_rows,
+            report.mean_batch_occupancy
+        );
+        anyhow::ensure!(
+            report.batcher_errors == 0,
+            "{} batcher error(s) during the run",
+            report.batcher_errors
+        );
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_actor(args: &[String]) -> i32 {
+    let cli = Cli::new(
+        "rlarch actor",
+        "fleet worker: actor threads driving envs against a remote coordinator",
+    )
+    .flag("config", "", "TOML config path (must match the server's)")
+    .flag(
+        "connect",
+        "",
+        "override fleet.connect (tcp:host:port or uds:/path)",
+    )
+    .flag("id", "0", "fleet-global id of this worker's first actor")
+    .flag("local-actors", "1", "actor threads in this process")
+    .flag(
+        "actors",
+        "0",
+        "override the FLEET-WIDE actor total (must match the server's)",
+    )
+    .flag("envs-per-actor", "0", "override envs per actor thread (vecenv)")
+    .flag("pipeline-depth", "0", "override actor pipeline depth")
+    .flag(
+        "max-rounds",
+        "",
+        "stop after this many env rounds (default: run until server drain)",
+    )
+    .flag("env", "", "override env (must match the server's)");
+    let parsed = match cli.parse(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let run = || -> anyhow::Result<()> {
+        let mut cfg = load_config(&parsed)?;
+        match parsed.get("connect") {
+            "" => {}
+            a => cfg.fleet.connect = a.to_string(),
+        }
+        let id_base = parsed.get_usize("id")?;
+        let local_actors = parsed.get_usize("local-actors")?.max(1);
+        let max_rounds = match parsed.get("max-rounds") {
+            "" => None,
+            _ => Some(parsed.get_u64("max-rounds")?),
+        };
+        // Workers carry no backend: dims derive from the shared config
+        // (mock convention) and the handshake validates them against
+        // the server's actual model.
+        let dims = mock_dims(&cfg)?;
+        println!(
+            "rlarch actor: connect={} ids {}..{} of fleet {} envs/actor={} depth={}",
+            cfg.fleet.connect,
+            id_base,
+            id_base + local_actors,
+            cfg.actors.num_actors,
+            cfg.actors.envs_per_actor,
+            cfg.actors.pipeline_depth
+        );
+        let report = coordinator::run_worker(
+            &cfg,
+            dims,
+            id_base,
+            local_actors,
+            max_rounds,
+            Registry::new(),
+        )?;
+        println!(
+            "worker done in {:.1}s: {} env steps, {} episodes, mean return {:.2}",
+            report.elapsed_seconds, report.env_steps, report.episodes, report.mean_return
+        );
+        match &report.first_error {
+            Some(e) if report.env_steps == 0 => {
+                anyhow::bail!("no env steps completed: {e}")
+            }
+            Some(e) => println!("note: {e} (server drain reached this worker mid-wait)"),
+            None => {}
         }
         Ok(())
     };

@@ -19,12 +19,12 @@
 //! §8). The queue flushes any remainder on drop, and actors flush
 //! explicitly at shutdown.
 
-use super::sequence::SequenceReplay;
+use super::SequenceSink;
 use crate::rl::Sequence;
 use std::sync::Arc;
 
 pub struct IngestQueue {
-    replay: Arc<SequenceReplay>,
+    replay: Arc<dyn SequenceSink>,
     insert_batch: usize,
     buf: Vec<Sequence>,
     flushes: u64,
@@ -32,8 +32,9 @@ pub struct IngestQueue {
 
 impl IngestQueue {
     /// `insert_batch` is clamped to >= 1 (1 = flush-per-sequence, the
-    /// seed path).
-    pub fn new(replay: Arc<SequenceReplay>, insert_batch: usize) -> Self {
+    /// seed path). The sink is any [`SequenceSink`] — the in-process
+    /// replay, or a transport client in a fleet worker.
+    pub fn new(replay: Arc<dyn SequenceSink>, insert_batch: usize) -> Self {
         let insert_batch = insert_batch.max(1);
         Self {
             replay,
@@ -85,7 +86,7 @@ impl Drop for IngestQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::replay::ReplayConfig;
+    use crate::replay::{ReplayConfig, SequenceReplay};
 
     fn seq(tag: f32) -> Sequence {
         Sequence {

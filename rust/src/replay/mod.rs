@@ -6,11 +6,41 @@
 //! one-lock-per-shard [`SequenceReplay::add_batch`] flushes
 //! (`replay.insert_batch`; 1 = the seed's flush-per-sequence path,
 //! bit-for-bit).
+//!
+//! The ingest queue feeds a [`SequenceSink`] — the seam that lets the
+//! same actor loop write into the in-process [`SequenceReplay`] or, in
+//! a fleet worker, into a [`crate::transport::RemoteIngest`] that ships
+//! sequences to the coordinator over a socket (DESIGN.md §14).
 
 pub mod ingest;
 pub mod sequence;
 pub mod sum_tree;
 
 pub use ingest::IngestQueue;
-pub use sequence::{ReplayConfig, SampledBatch, SequenceReplay};
+pub use sequence::{ReplayConfig, SampleScratch, SampledBatch, SequenceReplay};
 pub use sum_tree::SumTree;
+
+use crate::rl::{Sequence, SequencePool};
+use std::sync::Arc;
+
+/// Where completed sequences go: the in-process replay buffer, or a
+/// transport client shipping them to a remote coordinator. Implementors
+/// drain the batch (empty it, keep its capacity) so the producer-side
+/// [`IngestQueue`] buffer stays allocation-free.
+pub trait SequenceSink: Send + Sync {
+    /// Consume a batch of completed sequences. The vec is drained.
+    fn add_batch(&self, batch: &mut Vec<Sequence>);
+    /// The recycling pool actors should draw builder slabs from, if the
+    /// sink recycles (the replay's eviction pool, or a remote client's
+    /// local send-side pool).
+    fn recycle_pool(&self) -> Option<Arc<SequencePool>>;
+}
+
+impl SequenceSink for SequenceReplay {
+    fn add_batch(&self, batch: &mut Vec<Sequence>) {
+        SequenceReplay::add_batch(self, batch)
+    }
+    fn recycle_pool(&self) -> Option<Arc<SequencePool>> {
+        self.pool().cloned()
+    }
+}

@@ -119,7 +119,9 @@ pub struct SequenceReplay {
 /// generations for the priority refresh. `Arc` keeps sampling
 /// allocation-free on the sequence payload (a clone of a 32 KiB obs
 /// sequence per row dominated the sample path; see EXPERIMENTS.md
-/// §Perf).
+/// §Perf). The learner's hot path uses [`SequenceReplay::sample_into`]
+/// instead, which skips even the `Arc` refcount churn by visiting rows
+/// as borrows under the shard lock.
 pub struct SampledBatch {
     pub sequences: Vec<Arc<Sequence>>,
     pub slots: Vec<usize>,
@@ -127,6 +129,23 @@ pub struct SampledBatch {
     /// [`SequenceReplay::update_priorities`] so updates racing an
     /// overwrite are dropped instead of retagging the new occupant.
     pub generations: Vec<u64>,
+}
+
+/// Reusable sampling workspace: the per-shard mass/quota/remainder
+/// buffers [`SequenceReplay::sample_into`] would otherwise allocate per
+/// call. One per sampling thread; contents are scratch, valid only
+/// within a call.
+#[derive(Default)]
+pub struct SampleScratch {
+    masses: Vec<f64>,
+    quotas: Vec<usize>,
+    remainders: Vec<(f64, usize)>,
+}
+
+impl SampleScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
 }
 
 impl SequenceReplay {
@@ -314,27 +333,91 @@ impl SequenceReplay {
     /// one `next_f64` per row. Returns None until the buffer holds
     /// >= batch items.
     pub fn sample(&self, batch: usize, rng: &mut Pcg32) -> Option<SampledBatch> {
+        let mut scratch = SampleScratch::new();
+        let mut sequences = Vec::with_capacity(batch);
+        let mut slots = Vec::with_capacity(batch);
+        let mut generations = Vec::with_capacity(batch);
+        let ok = self.sample_with(batch, rng, &mut scratch, |_, slot, generation, e| {
+            sequences.push(e.seq.clone());
+            slots.push(slot);
+            generations.push(generation);
+        });
+        if !ok {
+            return None;
+        }
+        Some(SampledBatch {
+            sequences,
+            slots,
+            generations,
+        })
+    }
+
+    /// The zero-`Arc`-churn sample path: identical RNG stream, slot
+    /// choices, and generation tags as [`Self::sample`], but each drawn
+    /// sequence is handed to `visit(row, &seq)` as a **borrow pinned
+    /// under its shard lock** — no refcount traffic, no handle vec, and
+    /// (with a reused `scratch`/`slots`/`generations`) no allocation at
+    /// steady state. The generation tags still land in `generations`
+    /// for the post-train priority refresh, so the stale-update guard
+    /// is unchanged. `visit` runs inside a shard critical section: copy
+    /// the rows out (the learner's batch assembly) and return — calling
+    /// back into the replay from `visit` deadlocks.
+    ///
+    /// Returns false (without touching `visit`) until the buffer holds
+    /// >= `batch` items. `slots`/`generations` are cleared and refilled.
+    pub fn sample_into(
+        &self,
+        batch: usize,
+        rng: &mut Pcg32,
+        scratch: &mut SampleScratch,
+        slots: &mut Vec<usize>,
+        generations: &mut Vec<u64>,
+        mut visit: impl FnMut(usize, &Sequence),
+    ) -> bool {
+        slots.clear();
+        generations.clear();
+        self.sample_with(batch, rng, scratch, |row, slot, generation, e| {
+            slots.push(slot);
+            generations.push(generation);
+            visit(row, &e.seq);
+        })
+    }
+
+    /// Shared stratified-sampling core of [`Self::sample`] and
+    /// [`Self::sample_into`]: `row(i, global_slot, generation, entry)`
+    /// fires once per drawn row, in draw order, under the owning
+    /// shard's lock. Consumes exactly one `next_f64` per row.
+    fn sample_with(
+        &self,
+        batch: usize,
+        rng: &mut Pcg32,
+        scratch: &mut SampleScratch,
+        mut row: impl FnMut(usize, usize, u64, &SlotEntry),
+    ) -> bool {
         let n = self.shards.len();
         // Pass 1: shard priority masses (short per-shard critical
         // sections; entries are never removed, so a mass observed > 0
         // stays > 0 for pass 2).
         let mut len = 0usize;
-        let mut masses = Vec::with_capacity(n);
+        scratch.masses.clear();
         for s in 0..n {
             let g = self.lock_shard(s);
             len += g.len;
-            masses.push(g.tree.total());
+            scratch.masses.push(g.tree.total());
         }
-        let total: f64 = masses.iter().sum();
+        let total: f64 = scratch.masses.iter().sum();
         if len < batch || total <= 0.0 {
-            return None;
+            return false;
         }
-        let quotas = allocate_rows(batch, &masses);
-        let mut sequences = Vec::with_capacity(batch);
-        let mut slots = Vec::with_capacity(batch);
-        let mut generations = Vec::with_capacity(batch);
+        allocate_rows_into(
+            batch,
+            &scratch.masses,
+            &mut scratch.quotas,
+            &mut scratch.remainders,
+        );
+        let mut r = 0usize;
         // Pass 2: stratified sampling within each shard that drew rows.
-        for (s, &k) in quotas.iter().enumerate() {
+        for (s, &k) in scratch.quotas.iter().enumerate() {
             if k == 0 {
                 continue;
             }
@@ -345,9 +428,8 @@ impl SequenceReplay {
                 let local = g.tree.sample(u);
                 match &g.slots[local] {
                     Some(e) => {
-                        sequences.push(e.seq.clone());
-                        slots.push(local * n + s);
-                        generations.push(e.generation);
+                        row(r, local * n + s, e.generation, e);
+                        r += 1;
                     }
                     None => {
                         // Tree/slot mismatch is a bug: priorities for
@@ -357,11 +439,7 @@ impl SequenceReplay {
                 }
             }
         }
-        Some(SampledBatch {
-            sequences,
-            slots,
-            generations,
-        })
+        true
     }
 
     /// Refresh priorities (raw TD-error magnitudes) after a train step.
@@ -460,10 +538,26 @@ impl SequenceReplay {
 /// priority masses. Deterministic (no RNG): exact quotas are floored,
 /// then leftover rows go to the largest fractional remainders (ties to
 /// the lower shard index). Zero-mass shards never receive rows.
+#[cfg(test)]
 fn allocate_rows(batch: usize, masses: &[f64]) -> Vec<usize> {
+    let mut quotas = Vec::new();
+    let mut remainders = Vec::new();
+    allocate_rows_into(batch, masses, &mut quotas, &mut remainders);
+    quotas
+}
+
+/// Allocation-free body of `allocate_rows`: writes quotas into reused
+/// scratch vecs (cleared first) so the steady-state sample path never
+/// allocates.
+fn allocate_rows_into(
+    batch: usize,
+    masses: &[f64],
+    quotas: &mut Vec<usize>,
+    remainders: &mut Vec<(f64, usize)>,
+) {
     let total: f64 = masses.iter().sum();
-    let mut quotas = Vec::with_capacity(masses.len());
-    let mut remainders = Vec::with_capacity(masses.len());
+    quotas.clear();
+    remainders.clear();
     let mut assigned = 0usize;
     for (i, &m) in masses.iter().enumerate() {
         let exact = batch as f64 * m / total;
@@ -477,7 +571,7 @@ fn allocate_rows(batch: usize, masses: &[f64]) -> Vec<usize> {
     remainders.sort_by(|a, b| {
         b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1))
     });
-    for &(_, i) in &remainders {
+    for &(_, i) in remainders.iter() {
         if assigned == batch {
             break;
         }
@@ -494,7 +588,6 @@ fn allocate_rows(batch: usize, masses: &[f64]) -> Vec<usize> {
         }
         i += 1;
     }
-    quotas
 }
 
 #[cfg(test)]
@@ -705,6 +798,70 @@ mod tests {
         for c in counts {
             assert!((1_500..2_500).contains(&c), "{counts:?}");
         }
+    }
+
+    #[test]
+    fn sample_into_matches_sample_exactly() {
+        // The borrow path must consume the same RNG stream and return
+        // the same slots/generations/row data as the Arc path — at 1
+        // shard and sharded.
+        for shards in [1usize, 4] {
+            let mk = || {
+                let r = SequenceReplay::new(ReplayConfig {
+                    capacity: 16,
+                    shards,
+                    ..Default::default()
+                });
+                for i in 0..12 {
+                    r.add(seq(i as f32));
+                }
+                r
+            };
+            let (a, b) = (mk(), mk());
+            let mut rng_a = Pcg32::seeded(11);
+            let mut rng_b = Pcg32::seeded(11);
+            let mut scratch = SampleScratch::new();
+            let mut slots = Vec::new();
+            let mut generations = Vec::new();
+            for round in 0..5 {
+                let got = a.sample(6, &mut rng_a).unwrap();
+                let mut rows: Vec<f32> = Vec::new();
+                let ok = b.sample_into(
+                    6,
+                    &mut rng_b,
+                    &mut scratch,
+                    &mut slots,
+                    &mut generations,
+                    |row, s| {
+                        assert_eq!(row, rows.len(), "rows visit in draw order");
+                        rows.push(s.rewards[0]);
+                    },
+                );
+                assert!(ok, "round {round}");
+                assert_eq!(slots, got.slots, "shards={shards} round={round}");
+                assert_eq!(generations, got.generations);
+                let want: Vec<f32> =
+                    got.sequences.iter().map(|s| s.rewards[0]).collect();
+                assert_eq!(rows, want);
+            }
+        }
+    }
+
+    #[test]
+    fn sample_into_underfilled_returns_false_without_visiting() {
+        let r = SequenceReplay::new(ReplayConfig {
+            capacity: 8,
+            ..Default::default()
+        });
+        r.add(seq(0.0));
+        let mut rng = Pcg32::seeded(0);
+        let mut scratch = SampleScratch::new();
+        let (mut slots, mut generations) = (vec![9], vec![9u64]);
+        let ok = r.sample_into(4, &mut rng, &mut scratch, &mut slots, &mut generations, |_, _| {
+            panic!("visit must not fire on an underfilled buffer");
+        });
+        assert!(!ok);
+        assert!(slots.is_empty() && generations.is_empty());
     }
 
     #[test]

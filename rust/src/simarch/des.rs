@@ -16,6 +16,9 @@ enum ActorState {
     Pending(f64),
     /// In flight on the GPU.
     OnGpu,
+    /// Reply in transit on the fleet transport until this timestamp
+    /// (only entered when the model carries a non-zero network term).
+    NetDelay(f64),
 }
 
 /// DES results over the measurement window.
@@ -62,6 +65,10 @@ pub fn simulate(model: &SystemModel, n: usize, sim_seconds: f64, dt: f64) -> Des
     // tolerance the DES is used at (see the batcher note below for the
     // same trade), and modelling the learner as a second server would
     // need per-thread resume tracking.
+    // Fleet-transport round trip per submission (DESIGN.md §14): 0 for
+    // the in-process deployment, in which case the NetDelay state is
+    // never entered and the simulation is bit-for-bit the seed path.
+    let t_net = model.net_round_trip_s(rows_per_group);
     let t_train_cycle = model.train_cycle().max(t_train);
     let train_busy_frac = if t_train_cycle > 0.0 {
         (t_train / t_train_cycle).min(1.0)
@@ -98,6 +105,17 @@ pub fn simulate(model: &SystemModel, n: usize, sim_seconds: f64, dt: f64) -> Des
 
     while now < total {
         let measuring = now >= warmup;
+
+        // 0) Network: release agents whose reply transit has elapsed.
+        if t_net > 0.0 {
+            for a in agents.iter_mut() {
+                if let ActorState::NetDelay(until) = a {
+                    if now >= *until {
+                        *a = ActorState::EnvWork(t_cycle_env);
+                    }
+                }
+            }
+        }
 
         // 1) CPU: distribute capacity among env-working agents. The
         // hardware sees *threads* busy, not groups: a thread's working
@@ -196,7 +214,11 @@ pub fn simulate(model: &SystemModel, n: usize, sim_seconds: f64, dt: f64) -> Des
                     train_steps += 1;
                 }
                 for &i in batch {
-                    agents[i] = ActorState::EnvWork(t_cycle_env);
+                    agents[i] = if t_net > 0.0 {
+                        ActorState::NetDelay(now + t_net)
+                    } else {
+                        ActorState::EnvWork(t_cycle_env)
+                    };
                 }
                 gpu_inflight = None;
             }
@@ -458,6 +480,38 @@ mod tests {
             (0.5..2.0).contains(&ratio),
             "padded DES {} vs analytic {} (ratio {ratio})",
             padded.env_rate,
+            ana.env_rate
+        );
+    }
+
+    #[test]
+    fn des_network_identity_at_zero_and_delay_costs_rate() {
+        // Zero network terms (the default): the NetDelay state is never
+        // entered, so the deterministic simulation must agree exactly
+        // with the seed path. A real round-trip latency must cost
+        // simulated rate at a latency-bound point, and stay structurally
+        // close to the analytic model carrying the same term.
+        let base = model().with_envs_per_actor(8);
+        let a = simulate(&base, 4, 0.25, 20e-6);
+        let b = simulate(&base.with_network(0.0, 0.0, 0.0), 4, 0.25, 20e-6);
+        assert_eq!(a.env_rate, b.env_rate);
+        assert_eq!(a.gpu_util, b.gpu_util);
+        assert_eq!(a.mean_batch, b.mean_batch);
+
+        let wan = base.with_network(5e-3, 0.0, 0.0);
+        let delayed = simulate(&wan, 4, 0.25, 20e-6);
+        assert!(
+            delayed.env_rate < a.env_rate,
+            "5ms rtt must cost DES rate: {} vs {}",
+            delayed.env_rate,
+            a.env_rate
+        );
+        let ana = wan.steady_state(4);
+        let ratio = delayed.env_rate / ana.env_rate;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "DES {} vs analytic {} (ratio {ratio})",
+            delayed.env_rate,
             ana.env_rate
         );
     }

@@ -119,6 +119,18 @@ pub struct SystemModel {
     /// Mirror of the `env.batch_native` execution knob: selects which
     /// way `env_dispatch_s` enters the actor cycle.
     pub batch_native: bool,
+    /// Fixed network round-trip latency an actor's inference submission
+    /// pays when the fleet transport (DESIGN.md §14) separates actors
+    /// from the batcher, seconds. 0 (the default) models the in-process
+    /// deployment — the identity, bit-for-bit.
+    pub net_rtt_s: f64,
+    /// Wire bytes per environment-step row, both directions combined
+    /// (obs + recurrent state out, q-values + recurrent state back,
+    /// plus frame headers). Only meaningful with a finite bandwidth.
+    pub net_bytes_per_row: f64,
+    /// Link bandwidth in bytes/second; 0 (the default) = no bandwidth
+    /// term (infinite link), keeping the identity exact.
+    pub net_bandwidth_bps: f64,
 }
 
 /// One steady-state operating point.
@@ -252,6 +264,19 @@ impl SystemModel {
         }
     }
 
+    /// Network round-trip a submission of `rows` env-step rows pays on
+    /// the fleet transport: the fixed latency plus the serialization
+    /// time of its bytes on the link. Both terms default to 0 — the
+    /// in-process identity (no transport, no cost).
+    pub fn net_round_trip_s(&self, rows: f64) -> f64 {
+        let transfer = if self.net_bandwidth_bps > 0.0 {
+            rows * self.net_bytes_per_row / self.net_bandwidth_bps
+        } else {
+            0.0
+        };
+        self.net_rtt_s.max(0.0) + transfer
+    }
+
     /// Solve the steady state for `n` actor threads (damped fixed
     /// point). Each thread drives `envs_per_actor` environments in
     /// lockstep: a thread's cycle is E serial env steps plus one
@@ -315,8 +340,10 @@ impl SystemModel {
             let inflation = 1.0 / (1.0 - rho);
             // Actors cycle near-synchronously, so the typical wait is
             // most of the collection window (validated against the DES).
+            // A fleet deployment adds the submission's network round
+            // trip on top (0 in-process — the exact identity).
             let t_wait = window * 0.75;
-            rtt = t_wait + t_infer * inflation;
+            rtt = t_wait + t_infer * inflation + self.net_round_trip_s(e / d);
 
             // Concurrency-limited rate: n threads, each producing E env
             // steps per pipelined cycle max(W, rtt + W/D) with
@@ -482,6 +509,17 @@ impl SystemModel {
         m
     }
 
+    /// Clone with fleet-transport network terms (fixed round-trip
+    /// seconds, wire bytes per env-step row, link bytes/second;
+    /// all 0 = the in-process identity).
+    pub fn with_network(&self, rtt_s: f64, bytes_per_row: f64, bandwidth_bps: f64) -> Self {
+        let mut m = self.clone();
+        m.net_rtt_s = rtt_s.max(0.0);
+        m.net_bytes_per_row = bytes_per_row.max(0.0);
+        m.net_bandwidth_bps = bandwidth_bps.max(0.0);
+        m
+    }
+
     /// CPU/GPU ratio of this configuration (the paper's design metric).
     pub fn cpu_gpu_ratio(&self) -> f64 {
         self.cpu.cfg.hw_threads as f64 / self.gpu.cfg.num_sms as f64
@@ -537,6 +575,14 @@ pub fn default_system(infer_trace: Trace, train_trace: Trace) -> SystemModel {
         // Fig. 3/4 baselines untouched.
         env_dispatch_s: 0.0,
         batch_native: cfg.env.batch_native,
+        // 0 until a loopback/TCP fleet RTT is measured through the
+        // `fleet.rtt_seconds` timer on a toolchain-equipped host
+        // (provenance rule: no invented numbers) — at 0 the model is the
+        // in-process deployment, keeping the Fig. 3/4 baselines
+        // untouched.
+        net_rtt_s: 0.0,
+        net_bytes_per_row: 0.0,
+        net_bandwidth_bps: 0.0,
     }
 }
 
@@ -907,6 +953,65 @@ mod tests {
             coarse.env_rate,
             exact.env_rate
         );
+    }
+
+    #[test]
+    fn network_zero_is_the_identity() {
+        // The defaults model the in-process deployment: the explicit
+        // zero-network clone must be bit-identical, and the round-trip
+        // helper must contribute exactly nothing.
+        let m = model().with_envs_per_actor(8);
+        assert_eq!(m.net_round_trip_s(8.0), 0.0);
+        let a = m.steady_state(16);
+        let b = m.with_network(0.0, 0.0, 0.0).steady_state(16);
+        assert_eq!(a.env_rate, b.env_rate);
+        assert_eq!(a.batch_size, b.batch_size);
+        assert_eq!(a.rtt_s, b.rtt_s);
+        // Bytes-per-row without a finite bandwidth is still free.
+        let c = m.with_network(0.0, 1e6, 0.0).steady_state(16);
+        assert_eq!(a.env_rate, c.env_rate);
+        assert_eq!(a.rtt_s, c.rtt_s);
+    }
+
+    #[test]
+    fn network_rtt_lowers_rate_when_latency_bound() {
+        // Few threads, the cycle is latency-bound: a network round trip
+        // on every submission must cost env rate, monotonically in the
+        // latency, and surface in the actor-visible rtt.
+        let m = model().with_envs_per_actor(8);
+        let local = m.steady_state(4);
+        let lan = m.with_network(200e-6, 0.0, 0.0).steady_state(4);
+        let wan = m.with_network(5e-3, 0.0, 0.0).steady_state(4);
+        assert!(
+            lan.env_rate < local.env_rate,
+            "200us rtt must cost rate: {} vs {}",
+            lan.env_rate,
+            local.env_rate
+        );
+        assert!(
+            wan.env_rate < lan.env_rate,
+            "5ms rtt must cost more: {} vs {}",
+            wan.env_rate,
+            lan.env_rate
+        );
+        assert!(wan.rtt_s > local.rtt_s + 4e-3);
+        // Bandwidth term alone: serializing each submission's bytes on
+        // a finite link must also cost rate.
+        let thin = m.with_network(0.0, 100e3, 1e9).steady_state(4);
+        assert!(
+            thin.env_rate < local.env_rate,
+            "100kB/row over 1GB/s must cost rate: {} vs {}",
+            thin.env_rate,
+            local.env_rate
+        );
+    }
+
+    #[test]
+    fn net_round_trip_combines_latency_and_transfer() {
+        let m = model().with_network(1e-3, 1000.0, 1e6);
+        // 8 rows * 1000 B / 1e6 B/s = 8 ms of transfer + 1 ms fixed.
+        assert!((m.net_round_trip_s(8.0) - 9e-3).abs() < 1e-12);
+        assert!((m.net_round_trip_s(0.0) - 1e-3).abs() < 1e-12);
     }
 
     #[test]

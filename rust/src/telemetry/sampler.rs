@@ -174,9 +174,14 @@ fn derive(
     // The paper's live bottleneck proxy: CPU-side busy time (env
     // stepping + replay service) vs GPU-side busy time (inference +
     // training), from cumulative timer sums.
+    // Fleet frame codec time is CPU-side work the transport adds on the
+    // coordinator (0 in-process): it belongs on the CPU side of the
+    // ratio the same way replay service does.
     let cpu_s = get("actor.env_seconds.sum")
         + get("learner.sample_seconds.sum")
-        + get("learner.assemble_seconds.sum");
+        + get("learner.assemble_seconds.sum")
+        + get("fleet.encode_seconds.sum")
+        + get("fleet.decode_seconds.sum");
     let gpu_s = get("batcher.infer_seconds.sum") + get("learner.train_seconds.sum");
     if gpu_s > 0.0 {
         out.push((CPU_GPU_RATIO, cpu_s / gpu_s));

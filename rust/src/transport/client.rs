@@ -1,0 +1,601 @@
+//! The worker-process side of the fleet: [`RemoteClient`] (split-phase
+//! inference over a socket) and [`RemoteIngest`] (sequence shipping to
+//! the central replay).
+//!
+//! `RemoteClient` is the wire twin of
+//! [`CentralClient`](crate::policy::CentralClient): same persistent-
+//! mailbox demultiplexing (here the socket is the mailbox), same
+//! monotone wire tags distinct from caller tickets, same stash for
+//! out-of-tag reply chunks. The differences are the failure modes a
+//! socket adds, all absorbed below the [`PolicyClient`] trait so
+//! `coordinator::actor` runs unmodified:
+//!
+//! * **Reconnect-with-backoff** — a broken connection re-dials,
+//!   re-handshakes, and re-sends every retained in-flight submission
+//!   frame in tag order. Inference is deterministic and scattering is
+//!   idempotent, so at-least-once resubmission is safe; replies from
+//!   the dead connection are discarded wholesale.
+//! * **Shed retry** — the server bounds in-flight rows per connection;
+//!   an over-budget submission comes back as a `shed:` error reply and
+//!   is simply re-sent after an interruptible pause (backpressure as a
+//!   counter and a delay, never a stall or a crash).
+//! * **Goodbye** — the server's clean-drain marker signals this
+//!   worker's shutdown token so every local actor thread winds down.
+
+use super::frame::{self, FrameKind, Role};
+use super::{dial, Addr, FrameReader, ReadOutcome, Stream};
+use crate::exec::ShutdownToken;
+use crate::metrics::{Counter, Gauge, Registry, Timer};
+use crate::policy::PolicyClient;
+use crate::replay::SequenceSink;
+use crate::rl::{Sequence, SequencePool};
+use crate::runtime::ModelDims;
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Prefix of the reply-error message the server uses to shed an
+/// over-budget submission. Clients treat it as "try again", not as an
+/// inference failure.
+pub const SHED_PREFIX: &str = "shed:";
+
+/// How long a blocked read may hold the socket before the reader polls
+/// the shutdown token (partial frames resume across these slices).
+const READ_SLICE: Duration = Duration::from_millis(50);
+
+/// Connection knobs shared by both worker-side endpoints (mirrors the
+/// `[fleet]` config section).
+#[derive(Clone, Copy, Debug)]
+pub struct RemoteClientOpts {
+    /// Re-dial attempts beyond the first, per (re)connect.
+    pub connect_retries: usize,
+    /// Initial re-dial backoff; doubles per attempt, capped at 2 s.
+    pub backoff_ms: u64,
+}
+
+impl Default for RemoteClientOpts {
+    fn default() -> Self {
+        Self {
+            connect_retries: 40,
+            backoff_ms: 50,
+        }
+    }
+}
+
+fn hello_for(role: Role, actor_id: usize, d: &ModelDims) -> frame::Hello {
+    frame::Hello {
+        role,
+        actor_id: actor_id as u32,
+        obs_len: d.obs_len as u32,
+        hidden: d.hidden as u32,
+        num_actions: d.num_actions as u32,
+        seq_len: d.seq_len as u32,
+    }
+}
+
+/// Dial + handshake: send our hello, require a dims-matching hello ack.
+/// Returns the write half and a frame reader over the read half.
+fn establish(
+    addr: &Addr,
+    hello: &frame::Hello,
+    opts: &RemoteClientOpts,
+    shutdown: &ShutdownToken,
+) -> anyhow::Result<(Stream, FrameReader)> {
+    let stream = dial(addr, opts.connect_retries, opts.backoff_ms, Some(shutdown))?;
+    stream.set_read_timeout(Some(READ_SLICE))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = FrameReader::new(stream);
+    let mut buf = Vec::new();
+    frame::encode_hello(&mut buf, hello);
+    writer.write_all(&buf)?;
+    match reader.read_frame(&|| shutdown.is_signalled())? {
+        ReadOutcome::Frame => {}
+        ReadOutcome::Eof => anyhow::bail!("server closed the connection during handshake"),
+        ReadOutcome::Stopped => anyhow::bail!("shutdown during handshake"),
+    }
+    let hd = frame::parse_header(reader.frame())?;
+    if hd.kind == FrameKind::ReplyErr {
+        let msg = frame::decode_reply_err(frame::payload(reader.frame()))?;
+        anyhow::bail!("server refused connection: {msg}");
+    }
+    anyhow::ensure!(
+        hd.kind == FrameKind::Hello,
+        "expected hello ack, got {:?}",
+        hd.kind
+    );
+    let ack = frame::decode_hello(frame::payload(reader.frame()))?;
+    anyhow::ensure!(
+        ack.obs_len == hello.obs_len
+            && ack.hidden == hello.hidden
+            && ack.num_actions == hello.num_actions
+            && ack.seq_len == hello.seq_len,
+        "model dims mismatch: server acked {ack:?}, worker sent {hello:?}"
+    );
+    Ok((writer, reader))
+}
+
+/// One in-flight submission: the retained encoded frame is what makes
+/// reconnect resend (and shed retry) possible without the caller's
+/// involvement.
+struct Pending {
+    rows: usize,
+    tag: u64,
+    buf: Vec<u8>,
+    t0: Instant,
+}
+
+/// Split-phase [`PolicyClient`] over a fleet connection (see the module
+/// docs). One per remote actor thread; each owns its socket and its tag
+/// space.
+pub struct RemoteClient {
+    addr: Addr,
+    hello: frame::Hello,
+    opts: RemoteClientOpts,
+    shutdown: ShutdownToken,
+    writer: Stream,
+    reader: FrameReader,
+    dims: ModelDims,
+    inflight: Vec<Option<Pending>>,
+    /// Recycled submission-frame buffers (capacity settles after
+    /// warmup: submit encodes into one of these, zero-alloc).
+    buf_free: Vec<Vec<u8>>,
+    /// Raw reply frames for other in-flight tags, parked for their own
+    /// `wait`; recycled through `stash_free`.
+    stash: Vec<Vec<u8>>,
+    stash_free: Vec<Vec<u8>>,
+    /// Decode scratch rows (reply payload lands here, then scatters
+    /// into the caller's slabs).
+    sq: Vec<f32>,
+    sh: Vec<f32>,
+    sc: Vec<f32>,
+    next_tag: u64,
+    tx_frames: Counter,
+    tx_bytes: Counter,
+    rx_frames: Counter,
+    rx_bytes: Counter,
+    reconnects: Counter,
+    resubmits: Counter,
+    rtt: Timer,
+    inflight_gauge: Gauge,
+}
+
+impl RemoteClient {
+    /// Dial `addr` (with backoff) and handshake as an infer connection
+    /// for fleet-global actor `actor`.
+    pub fn connect(
+        addr: &Addr,
+        actor: usize,
+        dims: ModelDims,
+        opts: RemoteClientOpts,
+        metrics: &Registry,
+        shutdown: ShutdownToken,
+    ) -> anyhow::Result<Self> {
+        let hello = hello_for(Role::Infer, actor, &dims);
+        let (writer, reader) = establish(addr, &hello, &opts, &shutdown)?;
+        Ok(Self {
+            addr: addr.clone(),
+            hello,
+            opts,
+            shutdown,
+            writer,
+            reader,
+            dims,
+            inflight: Vec::new(),
+            buf_free: Vec::new(),
+            stash: Vec::new(),
+            stash_free: Vec::new(),
+            sq: Vec::new(),
+            sh: Vec::new(),
+            sc: Vec::new(),
+            next_tag: 0,
+            tx_frames: metrics.counter("fleet.tx_frames"),
+            tx_bytes: metrics.counter("fleet.tx_bytes"),
+            rx_frames: metrics.counter("fleet.rx_frames"),
+            rx_bytes: metrics.counter("fleet.rx_bytes"),
+            reconnects: metrics.counter("fleet.client_reconnects"),
+            resubmits: metrics.counter("fleet.resubmits"),
+            rtt: metrics.timer("fleet.rtt_seconds"),
+            inflight_gauge: metrics.gauge("policy.inflight"),
+        })
+    }
+
+    fn tag_live(&self, tag: u64) -> bool {
+        self.inflight.iter().flatten().any(|p| p.tag == tag)
+    }
+
+    /// Re-dial, re-handshake, and re-send every retained in-flight
+    /// frame in tag order. Replies stashed from the dead connection are
+    /// dropped wholesale — the resent submissions regenerate them.
+    fn recover(&mut self, why: &str) -> anyhow::Result<()> {
+        'attempt: for _ in 0..=self.opts.connect_retries {
+            if self.shutdown.is_signalled() {
+                anyhow::bail!("shutdown during reconnect ({why})");
+            }
+            let (w, r) = match establish(&self.addr, &self.hello, &self.opts, &self.shutdown)
+            {
+                Ok(pair) => pair,
+                Err(_) => continue 'attempt,
+            };
+            self.writer = w;
+            self.reader = r;
+            self.reconnects.inc();
+            while let Some(b) = self.stash.pop() {
+                self.stash_free.push(b);
+            }
+            let mut order: Vec<usize> = (0..self.inflight.len())
+                .filter(|&i| self.inflight[i].is_some())
+                .collect();
+            order.sort_by_key(|&i| self.inflight[i].as_ref().expect("filtered").tag);
+            for i in order {
+                if self.resend(i).is_err() {
+                    continue 'attempt;
+                }
+            }
+            return Ok(());
+        }
+        anyhow::bail!(
+            "reconnect to {} failed after {} attempts ({why})",
+            self.addr,
+            self.opts.connect_retries + 1
+        )
+    }
+
+    /// Re-send the retained frame of in-flight slot `i`.
+    fn resend(&mut self, i: usize) -> std::io::Result<()> {
+        let buf = std::mem::take(&mut self.inflight[i].as_mut().expect("in flight").buf);
+        let res = self.writer.write_all(&buf);
+        self.tx_frames.inc();
+        self.tx_bytes.add(buf.len() as u64);
+        self.inflight[i].as_mut().expect("in flight").buf = buf;
+        res
+    }
+
+    /// Shed retry: pause briefly (interruptibly), then re-send the shed
+    /// submission.
+    fn retry_shed(&mut self, i: usize) -> anyhow::Result<()> {
+        self.resubmits.inc();
+        if self
+            .shutdown
+            .sleep_interruptible(Duration::from_millis(self.opts.backoff_ms.max(1)))
+        {
+            anyhow::bail!("shutdown while backing off a shed submission");
+        }
+        if self.resend(i).is_err() {
+            self.recover("resending a shed submission")?;
+        }
+        Ok(())
+    }
+}
+
+/// Decode one reply-ok frame into the scratch rows and scatter them
+/// into the caller's `[n, ·]` output slabs. Free function so the caller
+/// can hold disjoint borrows of the reader's frame and the scratch.
+#[allow(clippy::too_many_arguments)]
+fn scatter_reply(
+    fr: &[u8],
+    hd: frame::FrameHeader,
+    d: &ModelDims,
+    n: usize,
+    sq: &mut Vec<f32>,
+    sh: &mut Vec<f32>,
+    sc: &mut Vec<f32>,
+    q: &mut [f32],
+    h: &mut [f32],
+    c: &mut [f32],
+) -> anyhow::Result<usize> {
+    let (s, k) = (hd.slot0 as usize, hd.rows as usize);
+    anyhow::ensure!(s + k <= n, "reply chunk rows out of range");
+    frame::decode_reply_ok(frame::payload(fr), k, d.num_actions, d.hidden, sq, sh, sc)?;
+    let (na, hid) = (d.num_actions, d.hidden);
+    q[s * na..(s + k) * na].copy_from_slice(sq);
+    h[s * hid..(s + k) * hid].copy_from_slice(sh);
+    c[s * hid..(s + k) * hid].copy_from_slice(sc);
+    Ok(k)
+}
+
+impl Drop for RemoteClient {
+    fn drop(&mut self) {
+        // Same contract as CentralClient: give abandoned submissions'
+        // gauge increments back. A best-effort goodbye tells the server
+        // this is a clean departure, not a death.
+        let abandoned = self.inflight.iter().filter(|p| p.is_some()).count();
+        if abandoned > 0 {
+            self.inflight_gauge.add(-(abandoned as f64));
+        }
+        let mut buf = self.buf_free.pop().unwrap_or_default();
+        frame::encode_goodbye(&mut buf);
+        let _ = self.writer.write_all(&buf);
+        self.writer.shutdown_write();
+    }
+}
+
+impl PolicyClient for RemoteClient {
+    fn submit(
+        &mut self,
+        ticket: usize,
+        rows: usize,
+        obs: &[f32],
+        h: &[f32],
+        c: &[f32],
+    ) -> anyhow::Result<()> {
+        if self.inflight.len() <= ticket {
+            self.inflight.resize_with(ticket + 1, || None);
+        }
+        anyhow::ensure!(
+            self.inflight[ticket].is_none(),
+            "ticket {ticket} already in flight"
+        );
+        let d = &self.dims;
+        anyhow::ensure!(
+            rows > 0
+                && obs.len() == rows * d.obs_len
+                && h.len() == rows * d.hidden
+                && c.len() == rows * d.hidden,
+            "malformed submission: {rows} rows, obs {}, h {}, c {}",
+            obs.len(),
+            h.len(),
+            c.len()
+        );
+        let mut buf = self.buf_free.pop().unwrap_or_default();
+        let tag = self.next_tag;
+        self.next_tag = self.next_tag.wrapping_add(1);
+        frame::encode_submit(&mut buf, tag, rows, obs, h, c);
+        let wrote = self.writer.write_all(&buf);
+        self.tx_frames.inc();
+        self.tx_bytes.add(buf.len() as u64);
+        self.inflight[ticket] = Some(Pending {
+            rows,
+            tag,
+            buf,
+            t0: Instant::now(),
+        });
+        self.inflight_gauge.add(1.0);
+        if wrote.is_err() {
+            self.recover("submit write failed")?;
+        }
+        Ok(())
+    }
+
+    fn wait(
+        &mut self,
+        ticket: usize,
+        q: &mut [f32],
+        h: &mut [f32],
+        c: &mut [f32],
+    ) -> anyhow::Result<()> {
+        let d = self.dims;
+        let (n, tag) = {
+            let p = self
+                .inflight
+                .get(ticket)
+                .and_then(Option::as_ref)
+                .ok_or_else(|| anyhow::anyhow!("wait on idle ticket {ticket}"))?;
+            (p.rows, p.tag)
+        };
+        anyhow::ensure!(q.len() == n * d.num_actions, "q slab length");
+        anyhow::ensure!(
+            h.len() == n * d.hidden && c.len() == n * d.hidden,
+            "recurrent slab length"
+        );
+        // Unlike CentralClient, the pending entry stays live until the
+        // last row lands: its retained frame is the reconnect/shed
+        // resend source. Terminal exits below clear it explicitly.
+        let mut done = 0usize;
+        // Redeem parked frames first (stale tags recycle silently).
+        let mut i = 0;
+        while i < self.stash.len() {
+            let fhd = frame::parse_header(&self.stash[i])?;
+            if fhd.ticket == tag {
+                let fr = self.stash.swap_remove(i);
+                if fhd.kind == FrameKind::ReplyOk {
+                    done += scatter_reply(
+                        &fr, fhd, &d, n, &mut self.sq, &mut self.sh, &mut self.sc, q, h, c,
+                    )?;
+                    self.stash_free.push(fr);
+                } else {
+                    let msg = frame::decode_reply_err(frame::payload(&fr))?.to_string();
+                    self.stash_free.push(fr);
+                    if msg.starts_with(SHED_PREFIX) {
+                        let idx = ticket; // shed covers this whole submission
+                        self.retry_shed(idx)?;
+                        done = 0;
+                    } else {
+                        let p = self.inflight[ticket].take().expect("in flight");
+                        self.buf_free.push(p.buf);
+                        self.inflight_gauge.add(-1.0);
+                        anyhow::bail!("remote inference failed: {msg}");
+                    }
+                }
+            } else if !self.tag_live(fhd.ticket) {
+                let fr = self.stash.swap_remove(i);
+                self.stash_free.push(fr);
+            } else {
+                i += 1;
+            }
+        }
+        let sd = self.shutdown.clone();
+        let stop = move || sd.is_signalled();
+        while done < n {
+            match self.reader.read_frame(&stop) {
+                Ok(ReadOutcome::Frame) => {}
+                Ok(ReadOutcome::Stopped) => {
+                    anyhow::bail!("shutdown while waiting for inference replies")
+                }
+                Ok(ReadOutcome::Eof) => {
+                    self.recover("server closed the connection")?;
+                    done = 0;
+                    continue;
+                }
+                Err(e) => {
+                    if self.shutdown.is_signalled() {
+                        anyhow::bail!("shutdown while waiting for inference replies");
+                    }
+                    self.recover(&format!("read failed: {e}"))?;
+                    done = 0;
+                    continue;
+                }
+            }
+            self.rx_frames.inc();
+            self.rx_bytes.add((self.reader.frame().len() + 4) as u64);
+            let hd = frame::parse_header(self.reader.frame())?;
+            match hd.kind {
+                FrameKind::Goodbye => {
+                    // Server drain: wind the whole worker down.
+                    self.shutdown.signal();
+                    anyhow::bail!("server sent goodbye (drain)");
+                }
+                FrameKind::ReplyOk | FrameKind::ReplyErr => {}
+                k => anyhow::bail!("unexpected {k:?} frame on infer connection"),
+            }
+            if hd.ticket == tag {
+                if hd.kind == FrameKind::ReplyOk {
+                    done += scatter_reply(
+                        self.reader.frame(),
+                        hd,
+                        &d,
+                        n,
+                        &mut self.sq,
+                        &mut self.sh,
+                        &mut self.sc,
+                        q,
+                        h,
+                        c,
+                    )?;
+                } else {
+                    let shed = {
+                        let msg = frame::decode_reply_err(frame::payload(self.reader.frame()))?;
+                        msg.starts_with(SHED_PREFIX).then_some(())
+                            .ok_or_else(|| anyhow::anyhow!("remote inference failed: {msg}"))
+                    };
+                    match shed {
+                        Ok(()) => {
+                            self.retry_shed(ticket)?;
+                            done = 0;
+                        }
+                        Err(e) => {
+                            let p = self.inflight[ticket].take().expect("in flight");
+                            self.buf_free.push(p.buf);
+                            self.inflight_gauge.add(-1.0);
+                            return Err(e);
+                        }
+                    }
+                }
+            } else if let Some(idx) = self
+                .inflight
+                .iter()
+                .position(|p| p.as_ref().is_some_and(|p| p.tag == hd.ticket))
+            {
+                let shed = hd.kind == FrameKind::ReplyErr
+                    && frame::decode_reply_err(frame::payload(self.reader.frame()))
+                        .map(|m| m.starts_with(SHED_PREFIX))
+                        .unwrap_or(false);
+                if shed {
+                    self.retry_shed(idx)?;
+                } else {
+                    // Another live submission's reply: park the raw
+                    // frame for its own wait.
+                    let mut b = self.stash_free.pop().unwrap_or_default();
+                    b.clear();
+                    b.extend_from_slice(self.reader.frame());
+                    self.stash.push(b);
+                }
+            }
+            // else: stale tag (an errored-out generation) — discard.
+        }
+        let p = self.inflight[ticket].take().expect("in flight");
+        self.rtt.record(p.t0.elapsed().as_secs_f64());
+        self.buf_free.push(p.buf);
+        self.inflight_gauge.add(-1.0);
+        Ok(())
+    }
+}
+
+/// Shared [`SequenceSink`] shipping completed sequences to the central
+/// replay over one per-process ingest connection. Worker-local slabs
+/// recycle through the attached [`SequencePool`] the moment their bytes
+/// are on the wire, so the worker's sequence path stays allocation-free
+/// exactly like the in-process one.
+pub struct RemoteIngest {
+    state: Mutex<IngestState>,
+    pool: Arc<SequencePool>,
+    shutdown: ShutdownToken,
+    errors: Counter,
+}
+
+struct IngestState {
+    writer: Stream,
+    buf: Vec<u8>,
+    failed: bool,
+    tx_frames: Counter,
+    tx_bytes: Counter,
+}
+
+impl RemoteIngest {
+    pub fn connect(
+        addr: &Addr,
+        dims: ModelDims,
+        opts: &RemoteClientOpts,
+        metrics: &Registry,
+        shutdown: ShutdownToken,
+    ) -> anyhow::Result<Self> {
+        let hello = hello_for(Role::Ingest, 0, &dims);
+        let (writer, _reader) = establish(addr, &hello, opts, &shutdown)?;
+        Ok(Self {
+            state: Mutex::new(IngestState {
+                writer,
+                buf: Vec::new(),
+                failed: false,
+                tx_frames: metrics.counter("fleet.tx_frames"),
+                tx_bytes: metrics.counter("fleet.tx_bytes"),
+            }),
+            pool: Arc::new(SequencePool::new()),
+            shutdown,
+            errors: metrics.counter("fleet.ingest_errors"),
+        })
+    }
+
+    /// Clean-drain marker: goodbye + half-close, so the server commits
+    /// everything received and logs a clean departure.
+    pub fn goodbye(&self) {
+        let mut st = self.state.lock().unwrap();
+        let st = &mut *st;
+        if !st.failed {
+            frame::encode_goodbye(&mut st.buf);
+            let _ = st.writer.write_all(&st.buf);
+        }
+        st.writer.shutdown_write();
+    }
+}
+
+impl SequenceSink for RemoteIngest {
+    fn add_batch(&self, batch: &mut Vec<Sequence>) {
+        let mut st = self.state.lock().unwrap();
+        let st = &mut *st;
+        for seq in batch.drain(..) {
+            if !st.failed {
+                frame::encode_sequence(&mut st.buf, &seq);
+                match st.writer.write_all(&st.buf) {
+                    Ok(()) => {
+                        st.tx_frames.inc();
+                        st.tx_bytes.add(st.buf.len() as u64);
+                    }
+                    Err(_) => {
+                        // A dead ingest link makes further training
+                        // pointless for this worker: flag it, stop
+                        // writing, and wind the process down. The drain
+                        // below still recycles every slab.
+                        st.failed = true;
+                        self.errors.inc();
+                        self.shutdown.signal();
+                    }
+                }
+            }
+            self.pool.put(seq);
+        }
+    }
+
+    fn recycle_pool(&self) -> Option<Arc<SequencePool>> {
+        Some(self.pool.clone())
+    }
+}

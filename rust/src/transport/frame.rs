@@ -1,0 +1,526 @@
+//! Length-prefixed slab frames: the wire image of the pooled slab
+//! protocol (DESIGN.md §5, §14).
+//!
+//! Every frame is `[len: u32 LE][header: 20 bytes][payload]` where `len`
+//! counts everything after itself. The header is `[magic: u16][kind:
+//! u8][reserved: u8][ticket: u64][slot0: u32][rows: u32]`, all
+//! little-endian — `ticket`/`slot0`/`rows` mirror the in-process
+//! [`ReplyChunk`](crate::coordinator::ReplyChunk) addressing exactly, so
+//! a decoded reply frame scatters with the same arithmetic as a local
+//! chunk. Payloads are raw little-endian `f32`/`i32` rows serialized
+//! straight from (and into) recycled buffers: encoders write into a
+//! reusable `Vec<u8>` whose capacity settles, decoders fill
+//! caller-provided `Vec<f32>`s — steady state touches the allocator
+//! zero times (hard-asserted by `micro_transport --quick`).
+//!
+//! Decoding is defensive at every boundary the bytes cross: bad magic,
+//! unknown kind, truncated headers, and payload lengths that disagree
+//! with `rows * dims` are all hard errors (never a panic, never a
+//! silent mis-scatter) — property-tested in `tests/transport_fleet.rs`
+//! against random rows/dims/tickets and corrupted byte streams.
+
+use crate::rl::Sequence;
+
+/// Header magic: a corrupt or desynchronized stream fails loudly.
+pub const MAGIC: u16 = 0xAF7E;
+/// Header bytes after the 4-byte length prefix.
+pub const HEADER_LEN: usize = 20;
+/// Upper bound on `len` (1 GiB): a corrupt length prefix must not turn
+/// into an attempted giant allocation.
+pub const MAX_FRAME_LEN: usize = 1 << 30;
+
+/// What a frame carries. `Submit`/`ReplyOk`/`ReplyErr` are the wire
+/// image of the in-process batcher protocol; `Sequence` ships completed
+/// training sequences to the central replay; `Hello`/`Goodbye` bracket
+/// a connection's life.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Connection handshake: role + model dims (both directions).
+    Hello,
+    /// Obs submission: `rows` of obs + h + c, ticket-tagged.
+    Submit,
+    /// Reply rows `slot0 .. slot0 + rows` of submission `ticket`.
+    ReplyOk,
+    /// Inference error for rows `slot0 .. slot0 + rows` of `ticket`.
+    ReplyErr,
+    /// One completed training sequence for the central replay.
+    Sequence,
+    /// Clean-drain marker: the sender will transmit nothing further.
+    Goodbye,
+}
+
+impl FrameKind {
+    fn to_u8(self) -> u8 {
+        match self {
+            FrameKind::Hello => 1,
+            FrameKind::Submit => 2,
+            FrameKind::ReplyOk => 3,
+            FrameKind::ReplyErr => 4,
+            FrameKind::Sequence => 5,
+            FrameKind::Goodbye => 6,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            1 => FrameKind::Hello,
+            2 => FrameKind::Submit,
+            3 => FrameKind::ReplyOk,
+            4 => FrameKind::ReplyErr,
+            5 => FrameKind::Sequence,
+            6 => FrameKind::Goodbye,
+            _ => return None,
+        })
+    }
+}
+
+/// Decoded frame header (the 20 bytes after the length prefix).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub kind: FrameKind,
+    /// The submission's demux tag (the client's wire tag), echoed on
+    /// reply frames. Unused (0) for hello/sequence/goodbye.
+    pub ticket: u64,
+    /// First submission row a reply frame covers (0 otherwise).
+    pub slot0: u32,
+    /// Row count: submission/reply rows, or `valid_len` for sequences.
+    pub rows: u32,
+}
+
+/// What end of the fleet a connection serves, declared in its hello.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// Split-phase inference round-trips (one per remote actor thread).
+    Infer,
+    /// Sequence ingest into the central replay (one per worker process).
+    Ingest,
+}
+
+/// Handshake payload: both sides exchange it and refuse mismatched
+/// model shapes up front instead of mis-scattering rows later.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hello {
+    pub role: Role,
+    /// Fleet-global actor id (0 for ingest connections / server acks).
+    pub actor_id: u32,
+    pub obs_len: u32,
+    pub hidden: u32,
+    pub num_actions: u32,
+    pub seq_len: u32,
+}
+
+// ---------------------------------------------------------------------
+// Encoding: every encoder clears `buf` and leaves one complete frame
+// (length prefix included) in it, reusing the buffer's capacity.
+// ---------------------------------------------------------------------
+
+fn begin_frame(buf: &mut Vec<u8>, kind: FrameKind, ticket: u64, slot0: u32, rows: u32) {
+    buf.clear();
+    buf.extend_from_slice(&0u32.to_le_bytes()); // length, patched below
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.push(kind.to_u8());
+    buf.push(0); // reserved
+    buf.extend_from_slice(&ticket.to_le_bytes());
+    buf.extend_from_slice(&slot0.to_le_bytes());
+    buf.extend_from_slice(&rows.to_le_bytes());
+}
+
+fn finish_frame(buf: &mut Vec<u8>) {
+    let len = (buf.len() - 4) as u32;
+    buf[0..4].copy_from_slice(&len.to_le_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    buf.reserve(xs.len() * 4);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_i32s(buf: &mut Vec<u8>, xs: &[i32]) {
+    buf.reserve(xs.len() * 4);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+pub fn encode_hello(buf: &mut Vec<u8>, hello: &Hello) {
+    begin_frame(buf, FrameKind::Hello, 0, 0, 0);
+    buf.push(match hello.role {
+        Role::Infer => 1,
+        Role::Ingest => 2,
+    });
+    buf.extend_from_slice(&[0u8; 3]); // padding
+    for v in [
+        hello.actor_id,
+        hello.obs_len,
+        hello.hidden,
+        hello.num_actions,
+        hello.seq_len,
+    ] {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    finish_frame(buf);
+}
+
+/// Serialize one obs submission straight from the caller's borrowed
+/// rows (the same slices a [`crate::coordinator::InferSlab`] is filled
+/// from — the wire path makes exactly the one copy the in-process path
+/// makes).
+pub fn encode_submit(
+    buf: &mut Vec<u8>,
+    ticket: u64,
+    rows: usize,
+    obs: &[f32],
+    h: &[f32],
+    c: &[f32],
+) {
+    begin_frame(buf, FrameKind::Submit, ticket, 0, rows as u32);
+    put_f32s(buf, obs);
+    put_f32s(buf, h);
+    put_f32s(buf, c);
+    finish_frame(buf);
+}
+
+/// Serialize one reply chunk's rows straight from the batcher's shared
+/// output slab (the borrowed slices are `[row0 .. row0 + rows]` of a
+/// [`crate::coordinator::ReplyRange`]).
+pub fn encode_reply_ok(
+    buf: &mut Vec<u8>,
+    ticket: u64,
+    slot0: u32,
+    rows: usize,
+    q: &[f32],
+    h: &[f32],
+    c: &[f32],
+) {
+    begin_frame(buf, FrameKind::ReplyOk, ticket, slot0, rows as u32);
+    put_f32s(buf, q);
+    put_f32s(buf, h);
+    put_f32s(buf, c);
+    finish_frame(buf);
+}
+
+pub fn encode_reply_err(buf: &mut Vec<u8>, ticket: u64, slot0: u32, rows: usize, msg: &str) {
+    begin_frame(buf, FrameKind::ReplyErr, ticket, slot0, rows as u32);
+    buf.extend_from_slice(msg.as_bytes());
+    finish_frame(buf);
+}
+
+/// Serialize one completed training sequence (worker → central replay).
+/// The payload leads with its own shape header so the receiver can
+/// validate against its model dims before trusting any row arithmetic.
+pub fn encode_sequence(buf: &mut Vec<u8>, seq: &Sequence) {
+    let t = seq.seq_len();
+    let obs_len = if t == 0 { 0 } else { seq.obs.len() / t };
+    let hidden = seq.h0.len();
+    begin_frame(buf, FrameKind::Sequence, 0, 0, seq.valid_len as u32);
+    for v in [
+        t as u32,
+        obs_len as u32,
+        hidden as u32,
+        seq.actor_id as u32,
+        seq.valid_len as u32,
+    ] {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    put_f32s(buf, &seq.obs);
+    put_i32s(buf, &seq.actions);
+    put_f32s(buf, &seq.rewards);
+    put_f32s(buf, &seq.discounts);
+    put_f32s(buf, &seq.h0);
+    put_f32s(buf, &seq.c0);
+    finish_frame(buf);
+}
+
+pub fn encode_goodbye(buf: &mut Vec<u8>) {
+    begin_frame(buf, FrameKind::Goodbye, 0, 0, 0);
+    finish_frame(buf);
+}
+
+// ---------------------------------------------------------------------
+// Decoding: `frame` is the `len` bytes after the length prefix.
+// ---------------------------------------------------------------------
+
+/// Parse and validate the 20-byte header at the front of `frame`.
+pub fn parse_header(frame: &[u8]) -> anyhow::Result<FrameHeader> {
+    anyhow::ensure!(
+        frame.len() >= HEADER_LEN,
+        "truncated frame header: {} bytes",
+        frame.len()
+    );
+    let magic = u16::from_le_bytes([frame[0], frame[1]]);
+    anyhow::ensure!(magic == MAGIC, "bad frame magic {magic:#06x}");
+    let kind = FrameKind::from_u8(frame[2])
+        .ok_or_else(|| anyhow::anyhow!("unknown frame kind {}", frame[2]))?;
+    let ticket = u64::from_le_bytes(frame[4..12].try_into().unwrap());
+    let slot0 = u32::from_le_bytes(frame[12..16].try_into().unwrap());
+    let rows = u32::from_le_bytes(frame[16..20].try_into().unwrap());
+    Ok(FrameHeader {
+        kind,
+        ticket,
+        slot0,
+        rows,
+    })
+}
+
+/// The payload bytes of a parsed frame.
+pub fn payload(frame: &[u8]) -> &[u8] {
+    &frame[HEADER_LEN..]
+}
+
+fn get_f32s(src: &[u8], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(src.len() / 4);
+    for w in src.chunks_exact(4) {
+        out.push(f32::from_le_bytes([w[0], w[1], w[2], w[3]]));
+    }
+}
+
+fn get_i32s(src: &[u8], out: &mut Vec<i32>) {
+    out.clear();
+    out.reserve(src.len() / 4);
+    for w in src.chunks_exact(4) {
+        out.push(i32::from_le_bytes([w[0], w[1], w[2], w[3]]));
+    }
+}
+
+pub fn decode_hello(pl: &[u8]) -> anyhow::Result<Hello> {
+    anyhow::ensure!(pl.len() == 24, "hello payload length {}", pl.len());
+    let role = match pl[0] {
+        1 => Role::Infer,
+        2 => Role::Ingest,
+        r => anyhow::bail!("unknown hello role {r}"),
+    };
+    let u = |i: usize| u32::from_le_bytes(pl[i..i + 4].try_into().unwrap());
+    Ok(Hello {
+        role,
+        actor_id: u(4),
+        obs_len: u(8),
+        hidden: u(12),
+        num_actions: u(16),
+        seq_len: u(20),
+    })
+}
+
+/// Decode a submit payload into recycled slab buffers, validating the
+/// payload length against `rows * dims` exactly.
+pub fn decode_submit(
+    pl: &[u8],
+    rows: usize,
+    obs_len: usize,
+    hidden: usize,
+    obs: &mut Vec<f32>,
+    h: &mut Vec<f32>,
+    c: &mut Vec<f32>,
+) -> anyhow::Result<()> {
+    let want = rows * (obs_len + 2 * hidden) * 4;
+    anyhow::ensure!(
+        rows > 0 && pl.len() == want,
+        "submit payload {} bytes, want {want} ({rows} rows)",
+        pl.len()
+    );
+    let ob = rows * obs_len * 4;
+    let hb = rows * hidden * 4;
+    get_f32s(&pl[..ob], obs);
+    get_f32s(&pl[ob..ob + hb], h);
+    get_f32s(&pl[ob + hb..], c);
+    Ok(())
+}
+
+/// Decode a reply-ok payload (`rows` of q + h + c) into recycled
+/// buffers, validating the payload length against `rows * dims`.
+pub fn decode_reply_ok(
+    pl: &[u8],
+    rows: usize,
+    num_actions: usize,
+    hidden: usize,
+    q: &mut Vec<f32>,
+    h: &mut Vec<f32>,
+    c: &mut Vec<f32>,
+) -> anyhow::Result<()> {
+    let want = rows * (num_actions + 2 * hidden) * 4;
+    anyhow::ensure!(
+        rows > 0 && pl.len() == want,
+        "reply payload {} bytes, want {want} ({rows} rows)",
+        pl.len()
+    );
+    let qb = rows * num_actions * 4;
+    let hb = rows * hidden * 4;
+    get_f32s(&pl[..qb], q);
+    get_f32s(&pl[qb..qb + hb], h);
+    get_f32s(&pl[qb + hb..], c);
+    Ok(())
+}
+
+pub fn decode_reply_err(pl: &[u8]) -> anyhow::Result<&str> {
+    std::str::from_utf8(pl).map_err(|e| anyhow::anyhow!("reply error not utf-8: {e}"))
+}
+
+/// Decode a sequence payload into a recycled [`Sequence`], validating
+/// its self-described shape against the payload length and the
+/// receiver's expected dims.
+pub fn decode_sequence(
+    pl: &[u8],
+    want_obs_len: usize,
+    want_hidden: usize,
+    out: &mut Sequence,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(pl.len() >= 20, "sequence payload too short: {}", pl.len());
+    let u = |i: usize| u32::from_le_bytes(pl[i..i + 4].try_into().unwrap()) as usize;
+    let (t, obs_len, hidden) = (u(0), u(4), u(8));
+    let (actor_id, valid_len) = (u(12), u(16));
+    anyhow::ensure!(
+        obs_len == want_obs_len && hidden == want_hidden,
+        "sequence dims obs_len {obs_len}/hidden {hidden}, want {want_obs_len}/{want_hidden}"
+    );
+    anyhow::ensure!(valid_len <= t, "sequence valid_len {valid_len} > seq_len {t}");
+    let want = 20 + (t * obs_len + 3 * t + 2 * hidden) * 4;
+    anyhow::ensure!(
+        pl.len() == want,
+        "sequence payload {} bytes, want {want}",
+        pl.len()
+    );
+    let mut at = 20usize;
+    let mut take = |n: usize| {
+        let s = &pl[at..at + n * 4];
+        at += n * 4;
+        s
+    };
+    get_f32s(take(t * obs_len), &mut out.obs);
+    get_i32s(take(t), &mut out.actions);
+    get_f32s(take(t), &mut out.rewards);
+    get_f32s(take(t), &mut out.discounts);
+    get_f32s(take(hidden), &mut out.h0);
+    get_f32s(take(hidden), &mut out.c0);
+    out.actor_id = actor_id;
+    out.valid_len = valid_len;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strip_len(buf: &[u8]) -> &[u8] {
+        let len = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+        assert_eq!(len, buf.len() - 4, "length prefix covers the frame");
+        &buf[4..]
+    }
+
+    #[test]
+    fn submit_roundtrip() {
+        let (rows, obs_len, hidden) = (3usize, 5usize, 2usize);
+        let obs: Vec<f32> = (0..rows * obs_len).map(|i| i as f32).collect();
+        let h: Vec<f32> = (0..rows * hidden).map(|i| -(i as f32)).collect();
+        let c: Vec<f32> = (0..rows * hidden).map(|i| 0.5 * i as f32).collect();
+        let mut buf = Vec::new();
+        encode_submit(&mut buf, 42, rows, &obs, &h, &c);
+        let frame = strip_len(&buf);
+        let hd = parse_header(frame).unwrap();
+        assert_eq!(hd.kind, FrameKind::Submit);
+        assert_eq!(hd.ticket, 42);
+        assert_eq!(hd.rows, rows as u32);
+        let (mut o2, mut h2, mut c2) = (Vec::new(), Vec::new(), Vec::new());
+        decode_submit(payload(frame), rows, obs_len, hidden, &mut o2, &mut h2, &mut c2)
+            .unwrap();
+        assert_eq!(o2, obs);
+        assert_eq!(h2, h);
+        assert_eq!(c2, c);
+    }
+
+    #[test]
+    fn reply_roundtrip_and_err() {
+        let (rows, na, hidden) = (2usize, 4usize, 3usize);
+        let q: Vec<f32> = (0..rows * na).map(|i| i as f32 * 0.1).collect();
+        let h = vec![1.0f32; rows * hidden];
+        let c = vec![2.0f32; rows * hidden];
+        let mut buf = Vec::new();
+        encode_reply_ok(&mut buf, 7, 5, rows, &q, &h, &c);
+        let frame = strip_len(&buf);
+        let hd = parse_header(frame).unwrap();
+        assert_eq!((hd.kind, hd.ticket, hd.slot0), (FrameKind::ReplyOk, 7, 5));
+        let (mut q2, mut h2, mut c2) = (Vec::new(), Vec::new(), Vec::new());
+        decode_reply_ok(payload(frame), rows, na, hidden, &mut q2, &mut h2, &mut c2)
+            .unwrap();
+        assert_eq!(q2, q);
+
+        encode_reply_err(&mut buf, 9, 0, 3, "backend exploded");
+        let frame = strip_len(&buf);
+        assert_eq!(parse_header(frame).unwrap().kind, FrameKind::ReplyErr);
+        assert_eq!(decode_reply_err(payload(frame)).unwrap(), "backend exploded");
+    }
+
+    #[test]
+    fn hello_and_goodbye_roundtrip() {
+        let hello = Hello {
+            role: Role::Ingest,
+            actor_id: 3,
+            obs_len: 400,
+            hidden: 16,
+            num_actions: 4,
+            seq_len: 30,
+        };
+        let mut buf = Vec::new();
+        encode_hello(&mut buf, &hello);
+        let frame = strip_len(&buf);
+        assert_eq!(parse_header(frame).unwrap().kind, FrameKind::Hello);
+        assert_eq!(decode_hello(payload(frame)).unwrap(), hello);
+
+        encode_goodbye(&mut buf);
+        let frame = strip_len(&buf);
+        assert_eq!(parse_header(frame).unwrap().kind, FrameKind::Goodbye);
+        assert!(payload(frame).is_empty());
+    }
+
+    #[test]
+    fn sequence_roundtrip() {
+        let seq = Sequence {
+            obs: (0..12).map(|i| i as f32).collect(),
+            actions: vec![1, 2, 3],
+            rewards: vec![0.5, -1.0, 0.0],
+            discounts: vec![0.99, 0.99, 0.0],
+            h0: vec![0.1, 0.2],
+            c0: vec![-0.1, -0.2],
+            actor_id: 7,
+            valid_len: 3,
+        };
+        let mut buf = Vec::new();
+        encode_sequence(&mut buf, &seq);
+        let frame = strip_len(&buf);
+        assert_eq!(parse_header(frame).unwrap().kind, FrameKind::Sequence);
+        let mut out = Sequence::default();
+        decode_sequence(payload(frame), 4, 2, &mut out).unwrap();
+        assert_eq!(out, seq);
+        // Dim mismatch is refused before any row arithmetic.
+        assert!(decode_sequence(payload(frame), 5, 2, &mut out).is_err());
+    }
+
+    #[test]
+    fn corrupt_headers_are_rejected() {
+        let mut buf = Vec::new();
+        encode_goodbye(&mut buf);
+        let mut frame = strip_len(&buf).to_vec();
+        assert!(parse_header(&frame).is_ok());
+        // Bad magic.
+        frame[0] ^= 0xFF;
+        assert!(parse_header(&frame).is_err());
+        frame[0] ^= 0xFF;
+        // Unknown kind.
+        frame[2] = 99;
+        assert!(parse_header(&frame).is_err());
+        // Truncated header.
+        assert!(parse_header(&frame[..HEADER_LEN - 1]).is_err());
+    }
+
+    #[test]
+    fn payload_length_mismatches_are_rejected() {
+        let (mut o, mut h, mut c) = (Vec::new(), Vec::new(), Vec::new());
+        // One byte short of 1 row x (2 + 2*1) f32s.
+        let pl = vec![0u8; 4 * 4 - 1];
+        assert!(decode_submit(&pl, 1, 2, 1, &mut o, &mut h, &mut c).is_err());
+        // Zero rows is never valid.
+        assert!(decode_submit(&[], 0, 2, 1, &mut o, &mut h, &mut c).is_err());
+        assert!(decode_reply_ok(&pl, 1, 2, 1, &mut o, &mut h, &mut c).is_err());
+    }
+}

@@ -1,0 +1,447 @@
+//! The fleet transport layer: slab frames over TCP / Unix-domain
+//! sockets (DESIGN.md §14).
+//!
+//! This is ROADMAP open item 1 — scaling the SEED-style central-
+//! inference architecture past one process, the SRL direction
+//! (PAPERS.md, 2306.16688). The layer has three stories:
+//!
+//! * [`frame`] — the codec: length-prefixed frames whose payloads are
+//!   the pooled slab protocol's buffers serialized verbatim (obs
+//!   submissions out, `ReplyRange`-shaped reply chunks back,
+//!   ticket-tagged), plus sequence-ingest and hello/goodbye control
+//!   frames. Encode and decode reuse caller buffers: the wire path is
+//!   allocation-free in steady state, like the in-process path it
+//!   mirrors (`micro_transport --quick` gate).
+//! * [`client`] — the worker side: [`RemoteClient`] implements the
+//!   split-phase [`crate::policy::PolicyClient`] over a socket (so
+//!   `coordinator::actor` runs unmodified in a worker process) with
+//!   reconnect-with-backoff and in-flight resubmission, and
+//!   [`RemoteIngest`] ships completed sequences to the central replay
+//!   through the same [`crate::replay::SequenceSink`] seam the local
+//!   buffer implements.
+//! * [`server`] — the coordinator side: [`FleetServer`] multiplexes
+//!   many remote actor connections into the existing pooled batcher
+//!   (one reader + one writer thread per connection, recycled slabs,
+//!   per-connection mailboxes), with bounded in-flight rows per
+//!   connection (excess submissions are shed as error replies and
+//!   counted in `fleet.shed_rows`, never a stall) and a clean drain on
+//!   shutdown (flush outstanding replies, send goodbye, close).
+//!
+//! This module holds what both sides share: the `tcp:`/`uds:` address
+//! scheme, the [`Stream`]/[`Listener`] abstraction over the two socket
+//! families, dial-with-backoff, and the timeout-tolerant
+//! [`FrameReader`] both ends read frames through.
+
+pub mod client;
+pub mod frame;
+pub mod server;
+
+pub use client::{RemoteClient, RemoteClientOpts, RemoteIngest};
+pub use server::{FleetServer, FleetServerOpts};
+
+use crate::exec::ShutdownToken;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// A parsed fleet address: `tcp:host:port` (or bare `host:port`) for
+/// TCP, `uds:/path` (or `unix:/path`) for Unix-domain sockets.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Addr {
+    Tcp(String),
+    Unix(PathBuf),
+}
+
+impl Addr {
+    pub fn parse(s: &str) -> anyhow::Result<Addr> {
+        let s = s.trim();
+        anyhow::ensure!(!s.is_empty(), "empty fleet address");
+        if let Some(p) = s.strip_prefix("uds:").or_else(|| s.strip_prefix("unix:")) {
+            anyhow::ensure!(!p.is_empty(), "empty uds path in fleet address `{s}`");
+            return Ok(Addr::Unix(PathBuf::from(p)));
+        }
+        let hp = s.strip_prefix("tcp:").unwrap_or(s);
+        anyhow::ensure!(
+            hp.rsplit_once(':')
+                .is_some_and(|(h, p)| !h.is_empty() && p.parse::<u16>().is_ok()),
+            "fleet address `{s}` is not tcp:host:port or uds:/path"
+        );
+        Ok(Addr::Tcp(hp.to_string()))
+    }
+}
+
+impl std::fmt::Display for Addr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Addr::Tcp(hp) => write!(f, "tcp:{hp}"),
+            Addr::Unix(p) => write!(f, "uds:{}", p.display()),
+        }
+    }
+}
+
+/// One connected socket of either family. Delegates `Read`/`Write`;
+/// `try_clone` splits it into independently-owned read/write halves.
+pub enum Stream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Stream {
+    pub fn try_clone(&self) -> std::io::Result<Stream> {
+        Ok(match self {
+            Stream::Tcp(s) => Stream::Tcp(s.try_clone()?),
+            Stream::Unix(s) => Stream::Unix(s.try_clone()?),
+        })
+    }
+
+    /// Bound the blocking window of reads so readers can poll a
+    /// shutdown token between attempts (the [`FrameReader`] resumes a
+    /// partial frame across timeouts without losing sync).
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(d),
+            Stream::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+
+    pub fn set_write_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_write_timeout(d),
+            Stream::Unix(s) => s.set_write_timeout(d),
+        }
+    }
+
+    /// Disable Nagle on TCP (latency over throughput: inference
+    /// round-trips are the actor's critical path); no-op on UDS.
+    pub fn set_nodelay(&self) {
+        if let Stream::Tcp(s) = self {
+            let _ = s.set_nodelay(true);
+        }
+    }
+
+    /// Half-close the write side so the peer's reader sees EOF.
+    pub fn shutdown_write(&self) {
+        let _ = match self {
+            Stream::Tcp(s) => s.shutdown(std::net::Shutdown::Write),
+            Stream::Unix(s) => s.shutdown(std::net::Shutdown::Write),
+        };
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound, non-blocking listener of either family; the server's accept
+/// loop polls it between shutdown checks.
+pub enum Listener {
+    Tcp(TcpListener),
+    Unix(UnixListener),
+}
+
+impl Listener {
+    /// Bind `addr`. A stale UDS socket file from a previous run is
+    /// removed first (the standard idiom — nothing can be connected to
+    /// it once its listener is gone).
+    pub fn bind(addr: &Addr) -> anyhow::Result<Listener> {
+        let l = match addr {
+            Addr::Tcp(hp) => Listener::Tcp(
+                TcpListener::bind(hp)
+                    .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?,
+            ),
+            Addr::Unix(p) => {
+                let _ = std::fs::remove_file(p);
+                Listener::Unix(
+                    UnixListener::bind(p)
+                        .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?,
+                )
+            }
+        };
+        match &l {
+            Listener::Tcp(s) => s.set_nonblocking(true)?,
+            Listener::Unix(s) => s.set_nonblocking(true)?,
+        }
+        Ok(l)
+    }
+
+    /// The actual bound TCP address (port 0 resolution for tests); the
+    /// configured path for UDS.
+    pub fn local_addr(&self) -> anyhow::Result<Addr> {
+        Ok(match self {
+            Listener::Tcp(s) => Addr::Tcp(s.local_addr()?.to_string()),
+            Listener::Unix(s) => Addr::Unix(
+                s.local_addr()?
+                    .as_pathname()
+                    .map(PathBuf::from)
+                    .unwrap_or_default(),
+            ),
+        })
+    }
+
+    /// Non-blocking accept: `Ok(None)` when nothing is pending.
+    pub fn poll_accept(&self) -> std::io::Result<Option<Stream>> {
+        let r = match self {
+            Listener::Tcp(s) => s.accept().map(|(c, _)| Stream::Tcp(c)),
+            Listener::Unix(s) => s.accept().map(|(c, _)| Stream::Unix(c)),
+        };
+        match r {
+            Ok(c) => {
+                // Accepted sockets inherit non-blocking on some
+                // platforms: force blocking, reads are timeout-bounded.
+                match &c {
+                    Stream::Tcp(s) => s.set_nonblocking(false)?,
+                    Stream::Unix(s) => s.set_nonblocking(false)?,
+                }
+                Ok(Some(c))
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+}
+
+/// Dial `addr`, retrying with exponential backoff (`backoff_ms`
+/// doubling per attempt, capped at 2 s) up to `retries + 1` attempts.
+/// A signalled shutdown token aborts the wait early.
+pub fn dial(
+    addr: &Addr,
+    retries: usize,
+    backoff_ms: u64,
+    shutdown: Option<&ShutdownToken>,
+) -> anyhow::Result<Stream> {
+    let mut wait = Duration::from_millis(backoff_ms.max(1));
+    let cap = Duration::from_secs(2);
+    let mut last: Option<std::io::Error> = None;
+    for attempt in 0..=retries {
+        if let Some(t) = shutdown {
+            if t.is_signalled() {
+                anyhow::bail!("dial {addr}: shutdown signalled");
+            }
+        }
+        let r = match addr {
+            Addr::Tcp(hp) => TcpStream::connect(hp).map(Stream::Tcp),
+            Addr::Unix(p) => UnixStream::connect(p).map(Stream::Unix),
+        };
+        match r {
+            Ok(s) => {
+                s.set_nodelay();
+                return Ok(s);
+            }
+            Err(e) => last = Some(e),
+        }
+        if attempt < retries {
+            match shutdown {
+                Some(t) => {
+                    if t.sleep_interruptible(wait) {
+                        anyhow::bail!("dial {addr}: shutdown signalled");
+                    }
+                }
+                None => std::thread::sleep(wait),
+            }
+            wait = (wait * 2).min(cap);
+        }
+    }
+    anyhow::bail!(
+        "dial {addr}: {} (after {} attempts)",
+        last.expect("at least one attempt"),
+        retries + 1
+    )
+}
+
+/// Why [`FrameReader::read_frame`] returned without a frame.
+#[derive(Debug, PartialEq, Eq)]
+pub enum ReadOutcome {
+    /// A whole frame is in the reader's buffer.
+    Frame,
+    /// Clean EOF on a frame boundary (peer closed).
+    Eof,
+    /// The stop predicate fired between read attempts.
+    Stopped,
+}
+
+/// Reads length-prefixed frames off a [`Stream`], tolerant of read
+/// timeouts (a partial frame resumes across them — sync is never lost)
+/// and polling a caller predicate so a blocked reader can notice
+/// shutdown. The frame buffer is reused across reads: steady state
+/// allocates nothing once capacity covers the largest frame seen.
+pub struct FrameReader {
+    stream: Stream,
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    pub fn new(stream: Stream) -> Self {
+        Self {
+            stream,
+            buf: Vec::new(),
+        }
+    }
+
+    /// Read one whole frame into the internal buffer. On
+    /// [`ReadOutcome::Frame`], [`Self::frame`] holds the header +
+    /// payload bytes (the length prefix already consumed and
+    /// validated).
+    pub fn read_frame(&mut self, stop: &dyn Fn() -> bool) -> anyhow::Result<ReadOutcome> {
+        let mut len4 = [0u8; 4];
+        match self.fill(&mut len4, true, stop)? {
+            ReadOutcome::Frame => {}
+            other => return Ok(other),
+        }
+        let len = u32::from_le_bytes(len4) as usize;
+        anyhow::ensure!(
+            (frame::HEADER_LEN..=frame::MAX_FRAME_LEN).contains(&len),
+            "frame length {len} out of bounds"
+        );
+        self.buf.clear();
+        self.buf.resize(len, 0);
+        let mut at = 0usize;
+        while at < len {
+            // Borrow-split: fill a tail slice of the owned buffer.
+            let mut tail = std::mem::take(&mut self.buf);
+            let r = self.fill(&mut tail[at..], false, stop);
+            self.buf = tail;
+            match r? {
+                ReadOutcome::Frame => at = len,
+                ReadOutcome::Stopped => return Ok(ReadOutcome::Stopped),
+                ReadOutcome::Eof => unreachable!("mid-frame EOF is an error"),
+            }
+        }
+        Ok(ReadOutcome::Frame)
+    }
+
+    /// The bytes of the last frame read (header + payload).
+    pub fn frame(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Fill `out` completely. `clean_eof_ok`: an EOF before the first
+    /// byte is a clean close (frame boundary); mid-buffer EOF is always
+    /// an error.
+    fn fill(
+        &mut self,
+        out: &mut [u8],
+        clean_eof_ok: bool,
+        stop: &dyn Fn() -> bool,
+    ) -> anyhow::Result<ReadOutcome> {
+        let mut at = 0usize;
+        while at < out.len() {
+            match self.stream.read(&mut out[at..]) {
+                Ok(0) => {
+                    if at == 0 && clean_eof_ok {
+                        return Ok(ReadOutcome::Eof);
+                    }
+                    anyhow::bail!("connection closed mid-frame ({at} bytes in)");
+                }
+                Ok(n) => at += n,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if stop() {
+                        return Ok(ReadOutcome::Stopped);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(anyhow::anyhow!("read failed: {e}")),
+            }
+        }
+        Ok(ReadOutcome::Frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_parses_both_schemes() {
+        assert_eq!(
+            Addr::parse("tcp:127.0.0.1:7777").unwrap(),
+            Addr::Tcp("127.0.0.1:7777".into())
+        );
+        assert_eq!(
+            Addr::parse("127.0.0.1:7777").unwrap(),
+            Addr::Tcp("127.0.0.1:7777".into())
+        );
+        assert_eq!(
+            Addr::parse("uds:/tmp/x.sock").unwrap(),
+            Addr::Unix(PathBuf::from("/tmp/x.sock"))
+        );
+        assert_eq!(
+            Addr::parse("unix:/tmp/x.sock").unwrap(),
+            Addr::Unix(PathBuf::from("/tmp/x.sock"))
+        );
+        assert!(Addr::parse("").is_err());
+        assert!(Addr::parse("uds:").is_err());
+        assert!(Addr::parse("no-port-here").is_err());
+        assert!(Addr::parse("host:notaport").is_err());
+    }
+
+    #[test]
+    fn frame_reader_roundtrips_over_uds() {
+        let dir = std::env::temp_dir().join("rlarch_transport_mod_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("rt_{}.sock", std::process::id()));
+        let addr = Addr::Unix(path.clone());
+        let listener = Listener::bind(&addr).unwrap();
+        let client = dial(&addr, 0, 1, None).unwrap();
+        let served = loop {
+            if let Some(s) = listener.poll_accept().unwrap() {
+                break s;
+            }
+        };
+        // Client writes two frames; server reads them back intact.
+        let mut w = client;
+        let mut buf = Vec::new();
+        frame::encode_goodbye(&mut buf);
+        std::io::Write::write_all(&mut w, &buf).unwrap();
+        frame::encode_submit(&mut buf, 5, 1, &[1.0, 2.0], &[3.0], &[4.0]);
+        std::io::Write::write_all(&mut w, &buf).unwrap();
+        drop(w);
+
+        let mut r = FrameReader::new(served);
+        assert_eq!(r.read_frame(&|| false).unwrap(), ReadOutcome::Frame);
+        assert_eq!(
+            frame::parse_header(r.frame()).unwrap().kind,
+            frame::FrameKind::Goodbye
+        );
+        assert_eq!(r.read_frame(&|| false).unwrap(), ReadOutcome::Frame);
+        let hd = frame::parse_header(r.frame()).unwrap();
+        assert_eq!((hd.kind, hd.ticket), (frame::FrameKind::Submit, 5));
+        // Peer gone: clean EOF on the boundary.
+        assert_eq!(r.read_frame(&|| false).unwrap(), ReadOutcome::Eof);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn dial_fails_after_retries() {
+        let addr = Addr::Unix(PathBuf::from("/nonexistent/rlarch/fleet.sock"));
+        let err = dial(&addr, 2, 1, None).unwrap_err().to_string();
+        assert!(err.contains("3 attempts"), "{err}");
+    }
+}

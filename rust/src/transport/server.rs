@@ -1,0 +1,496 @@
+//! The coordinator side of the fleet: [`FleetServer`] multiplexes many
+//! remote actor connections into the existing pooled batcher and the
+//! central replay (DESIGN.md §14).
+//!
+//! Topology: one non-blocking accept loop; per connection a reader
+//! thread (the connection's own thread) and, for infer connections, one
+//! writer thread. The reader decodes `Submit` frames straight into
+//! recycled [`InferSlab`]s and submits them to the batcher exactly like
+//! a local policy client — same `InferItem`, same validation, same
+//! reply mailbox pattern (a counted channel whose senders ride inside
+//! the queued items, so the writer's drain ends precisely when every
+//! outstanding reply has been routed). The writer serializes
+//! [`ReplyChunk`]s back onto the wire borrowing rows directly from the
+//! batch's shared output slab — the socket path adds zero copies over
+//! the in-process scatter.
+//!
+//! Backpressure: each connection carries a bounded in-flight row budget
+//! (`fleet.max_inflight_rows`). A submission that would exceed it is
+//! *shed* — answered immediately with a `shed:`-prefixed error reply
+//! the client retries after a pause — and counted in `fleet.shed_rows`:
+//! a slow consumer costs itself a counter and a delay, never a stall of
+//! the batcher or of other connections.
+//!
+//! Lifecycle: a connection ends cleanly on a `Goodbye` frame; a bare
+//! EOF or read error is an unexpected death (`fleet.disconnects`) whose
+//! in-flight replies are drained to a dead socket and counted as
+//! `fleet.shed_inflight_rows`. An accept arriving after any death
+//! increments `fleet.reconnects`. On server shutdown the readers stop
+//! accepting new work, the writers drain every outstanding reply, send
+//! `Goodbye`, and close — the clean-drain handshake the workers' clients
+//! turn into their own shutdown.
+
+use super::frame::{self, FrameKind, Role};
+use super::{Addr, FrameReader, Listener, ReadOutcome, Stream};
+use crate::coordinator::batcher::{BatcherHandle, InferItem, ReplyChunk};
+use crate::exec::channel::channel;
+use crate::exec::ShutdownToken;
+use crate::metrics::Registry;
+use crate::replay::{IngestQueue, SequenceSink};
+use crate::transport::client::SHED_PREFIX;
+use std::io::Write;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How long a blocked connection read may hold the socket before the
+/// reader polls the shutdown token.
+const READ_SLICE: Duration = Duration::from_millis(50);
+
+/// Server-side fleet knobs (mirrors the `[fleet]` config section).
+#[derive(Clone, Copy, Debug)]
+pub struct FleetServerOpts {
+    /// Per-connection in-flight row budget; submissions beyond it are
+    /// shed (error reply + counter), not queued.
+    pub max_inflight_rows: usize,
+    /// Ingest batching into the replay (one `add_batch` per this many
+    /// received sequences; same knob as `replay.insert_batch`).
+    pub insert_batch: usize,
+}
+
+impl Default for FleetServerOpts {
+    fn default() -> Self {
+        Self {
+            max_inflight_rows: 4096,
+            insert_batch: 1,
+        }
+    }
+}
+
+/// The fleet-aware server. `spawn` starts the accept loop; `join`
+/// (after the shared token is signalled) waits for the drain.
+pub struct FleetServer {
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    uds_path: Option<std::path::PathBuf>,
+}
+
+impl FleetServer {
+    pub fn spawn(
+        listener: Listener,
+        handle: BatcherHandle,
+        sink: Arc<dyn SequenceSink>,
+        opts: FleetServerOpts,
+        metrics: Registry,
+        shutdown: ShutdownToken,
+    ) -> FleetServer {
+        let uds_path = match listener.local_addr() {
+            Ok(Addr::Unix(p)) => Some(p),
+            _ => None,
+        };
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let conns2 = conns.clone();
+        let accept = std::thread::Builder::new()
+            .name("rlarch-fleet-accept".into())
+            .spawn(move || {
+                accept_loop(listener, handle, sink, opts, metrics, shutdown, conns2)
+            })
+            .expect("spawn fleet accept loop");
+        FleetServer {
+            accept: Some(accept),
+            conns,
+            uds_path,
+        }
+    }
+
+    /// Wait for the accept loop and every connection thread to finish
+    /// (signal the shared shutdown token first).
+    pub fn join(mut self) {
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        let handles = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        if let Some(p) = self.uds_path.take() {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn accept_loop(
+    listener: Listener,
+    handle: BatcherHandle,
+    sink: Arc<dyn SequenceSink>,
+    opts: FleetServerOpts,
+    metrics: Registry,
+    shutdown: ShutdownToken,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    let accepts = metrics.counter("fleet.accepts");
+    let disconnects = metrics.counter("fleet.disconnects");
+    let reconnects = metrics.counter("fleet.reconnects");
+    let connections = metrics.gauge("fleet.connections");
+    connections.set(0.0);
+    let mut reconnects_counted = 0u64;
+    while !shutdown.is_signalled() {
+        match listener.poll_accept() {
+            Ok(Some(stream)) => {
+                accepts.inc();
+                // An accept arriving after an unexpected death is a
+                // worker coming back: the kill-and-reconnect signal.
+                if disconnects.get() > reconnects_counted {
+                    reconnects.inc();
+                    reconnects_counted += 1;
+                }
+                let handle = handle.clone();
+                let sink = sink.clone();
+                let metrics = metrics.clone();
+                let shutdown = shutdown.clone();
+                let h = std::thread::Builder::new()
+                    .name("rlarch-fleet-conn".into())
+                    .spawn(move || serve_conn(stream, handle, sink, opts, metrics, shutdown))
+                    .expect("spawn fleet connection");
+                conns.lock().unwrap().push(h);
+            }
+            Ok(None) | Err(_) => {
+                if shutdown.sleep_interruptible(Duration::from_millis(5)) {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Handshake, then dispatch on the connection's declared role.
+fn serve_conn(
+    stream: Stream,
+    handle: BatcherHandle,
+    sink: Arc<dyn SequenceSink>,
+    opts: FleetServerOpts,
+    metrics: Registry,
+    shutdown: ShutdownToken,
+) {
+    let connections = metrics.gauge("fleet.connections");
+    connections.add(1.0);
+    let clean = serve_conn_inner(stream, handle, sink, opts, &metrics, shutdown);
+    connections.add(-1.0);
+    if !clean {
+        metrics.counter("fleet.disconnects").inc();
+    }
+}
+
+/// Returns whether the connection ended cleanly (goodbye or refused
+/// handshake, as opposed to dying mid-stream).
+fn serve_conn_inner(
+    stream: Stream,
+    handle: BatcherHandle,
+    sink: Arc<dyn SequenceSink>,
+    opts: FleetServerOpts,
+    metrics: &Registry,
+    shutdown: ShutdownToken,
+) -> bool {
+    if stream.set_read_timeout(Some(READ_SLICE)).is_err()
+        || stream.set_write_timeout(Some(Duration::from_secs(5))).is_err()
+    {
+        return false;
+    }
+    stream.set_nodelay();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return false,
+    };
+    let mut reader = FrameReader::new(stream);
+    let sd = shutdown.clone();
+    let stop = move || sd.is_signalled();
+    match reader.read_frame(&stop) {
+        Ok(ReadOutcome::Frame) => {}
+        _ => return true, // never got a hello: nothing was in flight
+    }
+    let hello = match frame::parse_header(reader.frame()).and_then(|hd| {
+        anyhow::ensure!(hd.kind == FrameKind::Hello, "expected hello, got {:?}", hd.kind);
+        frame::decode_hello(frame::payload(reader.frame()))
+    }) {
+        Ok(h) => h,
+        Err(_) => return false,
+    };
+    let d = handle.dims();
+    let mut buf = Vec::new();
+    let dims_ok = hello.obs_len as usize == d.obs_len
+        && hello.hidden as usize == d.hidden
+        && hello.num_actions as usize == d.num_actions
+        && hello.seq_len as usize == d.seq_len;
+    if !dims_ok {
+        frame::encode_reply_err(
+            &mut buf,
+            0,
+            0,
+            0,
+            &format!(
+                "model dims mismatch: server {d:?}, worker hello {hello:?}"
+            ),
+        );
+        let _ = writer.write_all(&buf);
+        return true; // refused up front: clean
+    }
+    // Ack with the server's dims (echoing the worker's actor id).
+    let ack = frame::Hello {
+        role: hello.role,
+        actor_id: hello.actor_id,
+        obs_len: d.obs_len as u32,
+        hidden: d.hidden as u32,
+        num_actions: d.num_actions as u32,
+        seq_len: d.seq_len as u32,
+    };
+    frame::encode_hello(&mut buf, &ack);
+    if writer.write_all(&buf).is_err() {
+        return false;
+    }
+    match hello.role {
+        Role::Infer => serve_infer(
+            reader,
+            writer,
+            hello.actor_id as usize,
+            handle,
+            opts,
+            metrics,
+            shutdown,
+        ),
+        Role::Ingest => serve_ingest(reader, sink, d, opts, metrics, shutdown),
+    }
+}
+
+/// One remote actor's inference connection: reader decodes submissions
+/// into the batcher; a writer thread routes reply chunks back.
+fn serve_infer(
+    mut reader: FrameReader,
+    mut writer: Stream,
+    actor: usize,
+    handle: BatcherHandle,
+    opts: FleetServerOpts,
+    metrics: &Registry,
+    shutdown: ShutdownToken,
+) -> bool {
+    let d = handle.dims();
+    let pool = handle.slab_pool();
+    let rx_frames = metrics.counter("fleet.rx_frames");
+    let rx_bytes = metrics.counter("fleet.rx_bytes");
+    let shed_rows = metrics.counter("fleet.shed_rows");
+    let decode_time = metrics.timer("fleet.decode_seconds");
+    // The reply route: the reader holds the root sender and clones it
+    // into every queued item; the writer drains the receiver until all
+    // senders are gone — i.e. the reader exited AND every outstanding
+    // submission was answered. That disconnect IS the drain barrier.
+    let (tx, rx) = channel::<ReplyChunk>(64);
+    let rows_inflight = Arc::new(AtomicUsize::new(0));
+
+    let writer_rows_inflight = rows_inflight.clone();
+    let tx_frames = metrics.counter("fleet.tx_frames");
+    let tx_bytes = metrics.counter("fleet.tx_bytes");
+    let shed_inflight = metrics.counter("fleet.shed_inflight_rows");
+    let encode_time = metrics.timer("fleet.encode_seconds");
+    let writer_thread = std::thread::Builder::new()
+        .name("rlarch-fleet-writer".into())
+        .spawn(move || {
+            let (na, hid) = (d.num_actions, d.hidden);
+            let mut wbuf = Vec::new();
+            let mut broken = false;
+            while let Some(chunk) = rx.recv() {
+                match &chunk.result {
+                    Ok(range) => {
+                        let (k, r0) = (chunk.rows, range.row0);
+                        encode_time.time(|| {
+                            frame::encode_reply_ok(
+                                &mut wbuf,
+                                chunk.ticket as u64,
+                                chunk.slot0 as u32,
+                                k,
+                                &range.slab.q[r0 * na..(r0 + k) * na],
+                                &range.slab.h[r0 * hid..(r0 + k) * hid],
+                                &range.slab.c[r0 * hid..(r0 + k) * hid],
+                            )
+                        });
+                    }
+                    Err(msg) => frame::encode_reply_err(
+                        &mut wbuf,
+                        chunk.ticket as u64,
+                        chunk.slot0 as u32,
+                        chunk.rows,
+                        msg,
+                    ),
+                }
+                if broken || writer.write_all(&wbuf).is_err() {
+                    // Dead socket: keep draining so in-flight rows keep
+                    // releasing, but count what the peer never saw.
+                    broken = true;
+                    shed_inflight.add(chunk.rows as u64);
+                } else {
+                    tx_frames.inc();
+                    tx_bytes.add(wbuf.len() as u64);
+                }
+                writer_rows_inflight.fetch_sub(chunk.rows, Ordering::AcqRel);
+            }
+            // Drain complete. Best-effort goodbye: on server shutdown
+            // this is the clean-drain marker the worker turns into its
+            // own exit; on a dead socket the write just fails.
+            if !broken {
+                frame::encode_goodbye(&mut wbuf);
+                let _ = writer.write_all(&wbuf);
+            }
+            writer.shutdown_write();
+        })
+        .expect("spawn fleet reply writer");
+
+    let sd = shutdown.clone();
+    let stop = move || sd.is_signalled();
+    let mut clean = false;
+    loop {
+        match reader.read_frame(&stop) {
+            Ok(ReadOutcome::Frame) => {}
+            Ok(ReadOutcome::Stopped) => {
+                // Server drain: stop accepting submissions; the writer
+                // flushes what's in flight and says goodbye.
+                clean = true;
+                break;
+            }
+            Ok(ReadOutcome::Eof) | Err(_) => break,
+        }
+        rx_frames.inc();
+        rx_bytes.add((reader.frame().len() + 4) as u64);
+        let hd = match frame::parse_header(reader.frame()) {
+            Ok(hd) => hd,
+            Err(_) => break,
+        };
+        match hd.kind {
+            FrameKind::Goodbye => {
+                clean = true;
+                break;
+            }
+            FrameKind::Submit => {}
+            _ => break, // protocol violation
+        }
+        let rows = hd.rows as usize;
+        let mut slab = pool.acquire();
+        let decoded = decode_time.time(|| {
+            frame::decode_submit(
+                frame::payload(reader.frame()),
+                rows,
+                d.obs_len,
+                d.hidden,
+                &mut slab.obs,
+                &mut slab.h,
+                &mut slab.c,
+            )
+        });
+        if decoded.is_err() {
+            pool.release(slab);
+            break; // garbage payload: kill the connection
+        }
+        // Budget check. The count is incremented for shed submissions
+        // too — their synthetic error chunk flows through the writer,
+        // which decrements uniformly per chunk.
+        let before = rows_inflight.fetch_add(rows, Ordering::AcqRel);
+        if before + rows > opts.max_inflight_rows {
+            shed_rows.add(rows as u64);
+            pool.release(slab);
+            let _ = tx.send(ReplyChunk {
+                ticket: hd.ticket as usize,
+                slot0: 0,
+                rows,
+                result: Err(format!(
+                    "{SHED_PREFIX} connection over its {} in-flight row budget",
+                    opts.max_inflight_rows
+                )),
+            });
+            continue;
+        }
+        if let Err(e) = handle.submit(InferItem {
+            actor,
+            ticket: hd.ticket as usize,
+            rows,
+            slab,
+            reply: tx.clone(),
+        }) {
+            // Batcher gone (or refused the item — it released the slab
+            // either way): answer with the error instead of stalling.
+            let _ = tx.send(ReplyChunk {
+                ticket: hd.ticket as usize,
+                slot0: 0,
+                rows,
+                result: Err(e.to_string()),
+            });
+        }
+    }
+    drop(tx);
+    let _ = writer_thread.join();
+    clean
+}
+
+/// One worker process's sequence-ingest connection: decode `Sequence`
+/// frames into recycled slabs and batch them into the central replay.
+fn serve_ingest(
+    mut reader: FrameReader,
+    sink: Arc<dyn SequenceSink>,
+    d: crate::runtime::ModelDims,
+    opts: FleetServerOpts,
+    metrics: &Registry,
+    shutdown: ShutdownToken,
+) -> bool {
+    let rx_frames = metrics.counter("fleet.rx_frames");
+    let rx_bytes = metrics.counter("fleet.rx_bytes");
+    let rx_seqs = metrics.counter("fleet.rx_sequences");
+    let decode_time = metrics.timer("fleet.decode_seconds");
+    let pool = sink.recycle_pool();
+    let mut ingest = IngestQueue::new(sink.clone(), opts.insert_batch);
+    let sd = shutdown.clone();
+    let stop = move || sd.is_signalled();
+    let mut clean = false;
+    loop {
+        match reader.read_frame(&stop) {
+            Ok(ReadOutcome::Frame) => {}
+            Ok(ReadOutcome::Stopped) => {
+                clean = true;
+                break;
+            }
+            Ok(ReadOutcome::Eof) | Err(_) => break,
+        }
+        rx_frames.inc();
+        rx_bytes.add((reader.frame().len() + 4) as u64);
+        let hd = match frame::parse_header(reader.frame()) {
+            Ok(hd) => hd,
+            Err(_) => break,
+        };
+        match hd.kind {
+            FrameKind::Goodbye => {
+                clean = true;
+                break;
+            }
+            FrameKind::Sequence => {}
+            _ => break,
+        }
+        let mut seq = match &pool {
+            Some(p) => p.acquire(d.seq_len, d.obs_len, d.hidden, 0),
+            None => Default::default(),
+        };
+        let decoded = decode_time.time(|| {
+            frame::decode_sequence(frame::payload(reader.frame()), d.obs_len, d.hidden, &mut seq)
+        });
+        match decoded {
+            Ok(()) => {
+                rx_seqs.inc();
+                ingest.push(seq);
+            }
+            Err(_) => {
+                if let Some(p) = &pool {
+                    p.put(seq);
+                }
+                break;
+            }
+        }
+    }
+    ingest.flush();
+    clean
+}

@@ -1,0 +1,644 @@
+//! Fleet transport integration (DESIGN.md §14): wire-codec property
+//! tests against random shapes and corrupted streams, loopback
+//! UDS fleet equivalence against the in-process central path,
+//! backpressure shedding, and the kill-and-reconnect lifecycle.
+//!
+//! The "processes" here are threads with separate metric registries and
+//! shutdown tokens talking over a real Unix-domain socket — the same
+//! frames, same handshake, same drain protocol as `rlarch serve` /
+//! `rlarch actor --connect`, minus the fork.
+
+use rlarch::config::{BatcherConfig, SystemConfig};
+use rlarch::coordinator::actor::{run_actor, ActorArgs};
+use rlarch::coordinator::Batcher;
+use rlarch::exec::ShutdownToken;
+use rlarch::metrics::Registry;
+use rlarch::policy::{CentralClient, PolicyClient};
+use rlarch::replay::{ReplayConfig, SequenceReplay};
+use rlarch::rl::Sequence;
+use rlarch::runtime::{Backend, MockModel, ModelDims};
+use rlarch::transport::frame::{self, FrameKind, Role};
+use rlarch::transport::{
+    dial, Addr, FleetServer, FleetServerOpts, Listener, RemoteClient, RemoteClientOpts,
+    RemoteIngest,
+};
+use rlarch::util::prng::Pcg32;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Codec property tests
+// ---------------------------------------------------------------------------
+
+fn strip_len(buf: &[u8]) -> &[u8] {
+    let len = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+    assert_eq!(len, buf.len() - 4, "length prefix covers the frame");
+    &buf[4..]
+}
+
+#[test]
+fn codec_roundtrips_random_rows_dims_and_tickets() {
+    // Property: for random (rows, obs_len, hidden, num_actions, ticket,
+    // slot0), encode → parse → decode is the identity on every field.
+    let mut rng = Pcg32::seeded(0xF1EE7);
+    let mut buf = Vec::new();
+    for case in 0..200 {
+        let rows = 1 + rng.index(32);
+        let obs_len = 1 + rng.index(64);
+        let hidden = 1 + rng.index(32);
+        let na = 1 + rng.index(8);
+        let ticket = rng.next_u64();
+        let slot0 = rng.next_u32() >> 8;
+        let fill = |n: usize, rng: &mut Pcg32| -> Vec<f32> {
+            (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+        };
+
+        let obs = fill(rows * obs_len, &mut rng);
+        let h = fill(rows * hidden, &mut rng);
+        let c = fill(rows * hidden, &mut rng);
+        frame::encode_submit(&mut buf, ticket, rows, &obs, &h, &c);
+        let fr = strip_len(&buf);
+        let hd = frame::parse_header(fr).unwrap();
+        assert_eq!(
+            (hd.kind, hd.ticket, hd.rows),
+            (FrameKind::Submit, ticket, rows as u32),
+            "case {case}"
+        );
+        let (mut o2, mut h2, mut c2) = (Vec::new(), Vec::new(), Vec::new());
+        frame::decode_submit(
+            frame::payload(fr),
+            rows,
+            obs_len,
+            hidden,
+            &mut o2,
+            &mut h2,
+            &mut c2,
+        )
+        .unwrap();
+        assert_eq!((o2, h2, c2), (obs, h, c), "case {case}");
+
+        let q = fill(rows * na, &mut rng);
+        let qh = fill(rows * hidden, &mut rng);
+        let qc = fill(rows * hidden, &mut rng);
+        frame::encode_reply_ok(&mut buf, ticket, slot0, rows, &q, &qh, &qc);
+        let fr = strip_len(&buf);
+        let hd = frame::parse_header(fr).unwrap();
+        assert_eq!((hd.ticket, hd.slot0, hd.rows), (ticket, slot0, rows as u32));
+        let (mut q2, mut h2, mut c2) = (Vec::new(), Vec::new(), Vec::new());
+        frame::decode_reply_ok(
+            frame::payload(fr),
+            rows,
+            na,
+            hidden,
+            &mut q2,
+            &mut h2,
+            &mut c2,
+        )
+        .unwrap();
+        assert_eq!((q2, h2, c2), (q, qh, qc), "case {case}");
+
+        // A decode against the WRONG dims must fail, never mis-scatter
+        // (payload length disagrees with rows * dims).
+        let (mut o3, mut h3, mut c3) = (Vec::new(), Vec::new(), Vec::new());
+        frame::encode_submit(&mut buf, ticket, rows, &obs, &h, &c);
+        let fr = strip_len(&buf);
+        assert!(
+            frame::decode_submit(
+                frame::payload(fr),
+                rows,
+                obs_len + 1,
+                hidden,
+                &mut o3,
+                &mut h3,
+                &mut c3,
+            )
+            .is_err(),
+            "case {case}: wrong obs_len must be rejected"
+        );
+
+        let t = 1 + rng.index(12);
+        let seq = Sequence {
+            obs: fill(t * obs_len, &mut rng),
+            actions: (0..t).map(|_| rng.index(na) as i32).collect(),
+            rewards: fill(t, &mut rng),
+            discounts: fill(t, &mut rng),
+            h0: fill(hidden, &mut rng),
+            c0: fill(hidden, &mut rng),
+            actor_id: rng.index(64),
+            valid_len: 1 + rng.index(t),
+        };
+        frame::encode_sequence(&mut buf, &seq);
+        let fr = strip_len(&buf);
+        let mut out = Sequence::default();
+        frame::decode_sequence(frame::payload(fr), obs_len, hidden, &mut out).unwrap();
+        assert_eq!(out, seq, "case {case}");
+    }
+}
+
+#[test]
+fn codec_rejects_truncation_and_corruption() {
+    // Property: any single corrupted header byte of interest (magic,
+    // kind) and any truncation of header or payload is a hard error.
+    let mut rng = Pcg32::seeded(0xBAD);
+    let mut buf = Vec::new();
+    for _ in 0..100 {
+        let rows = 1 + rng.index(8);
+        let obs_len = 1 + rng.index(16);
+        let hidden = 1 + rng.index(8);
+        let obs: Vec<f32> = (0..rows * obs_len).map(|_| rng.next_f32()).collect();
+        let h = vec![0.5f32; rows * hidden];
+        let c = vec![0.5f32; rows * hidden];
+        frame::encode_submit(&mut buf, rng.next_u64(), rows, &obs, &h, &c);
+        let fr = strip_len(&buf).to_vec();
+
+        // Truncated header.
+        let cut = rng.index(frame::HEADER_LEN);
+        assert!(frame::parse_header(&fr[..cut]).is_err());
+        // Bad magic.
+        let mut bad = fr.clone();
+        bad[rng.index(2)] ^= 0x40;
+        assert!(frame::parse_header(&bad).is_err());
+        // Unknown kind.
+        let mut bad = fr.clone();
+        bad[2] = 7 + rng.index(200) as u8;
+        assert!(frame::parse_header(&bad).is_err());
+        // Truncated payload: length disagrees with rows * dims.
+        let (mut o2, mut h2, mut c2) = (Vec::new(), Vec::new(), Vec::new());
+        let pl = frame::payload(&fr);
+        let cut = rng.index(pl.len());
+        assert!(frame::decode_submit(
+            &pl[..cut],
+            rows,
+            obs_len,
+            hidden,
+            &mut o2,
+            &mut h2,
+            &mut c2
+        )
+        .is_err());
+        // Truncated sequence payloads never panic either.
+        let seq = Sequence {
+            obs: vec![1.0; 2 * obs_len],
+            actions: vec![0; 2],
+            rewards: vec![0.0; 2],
+            discounts: vec![0.9; 2],
+            h0: vec![0.0; hidden],
+            c0: vec![0.0; hidden],
+            actor_id: 0,
+            valid_len: 2,
+        };
+        frame::encode_sequence(&mut buf, &seq);
+        let fr = strip_len(&buf);
+        let pl = frame::payload(fr);
+        let cut = rng.index(pl.len());
+        let mut out = Sequence::default();
+        assert!(frame::decode_sequence(&pl[..cut], obs_len, hidden, &mut out).is_err());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Loopback fleet harness
+// ---------------------------------------------------------------------------
+
+fn uds_addr(tag: &str) -> Addr {
+    let path = std::env::temp_dir().join(format!(
+        "rlarch_fleet_{tag}_{}.sock",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    Addr::Unix(path)
+}
+
+fn wait_for(mut cond: impl FnMut() -> bool, what: &str) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "timed out waiting for {what}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// The deterministic fleet workload: 2 actors x 3 env slots on catch,
+/// a batch cap below the slot count (multi-row submissions split).
+fn fleet_cfg() -> (SystemConfig, ModelDims) {
+    let mut cfg = SystemConfig::default();
+    cfg.env.name = "catch".into();
+    cfg.env.step_cost_us = 0;
+    cfg.env.frame_stack = 4;
+    cfg.actors.num_actors = 2;
+    cfg.actors.envs_per_actor = 3;
+    cfg.learner.burn_in = 2;
+    cfg.learner.unroll_len = 4;
+    cfg.learner.seq_overlap = 2;
+    cfg.learner.train_batch = 4;
+    cfg.batcher.max_batch = 8;
+    cfg.batcher.batch_sizes = vec![1, 8];
+    cfg.batcher.timeout_us = 200;
+    let dims = ModelDims {
+        obs_len: 400,
+        hidden: 8,
+        num_actions: 4,
+        seq_len: 6,
+        train_batch: 4,
+    };
+    (cfg, dims)
+}
+
+/// Group a replay snapshot by emitting env slot; per-slot order is
+/// emission order, which both paths must preserve.
+fn by_slot(seqs: &[Arc<Sequence>]) -> BTreeMap<usize, Vec<Arc<Sequence>>> {
+    let mut m: BTreeMap<usize, Vec<Arc<Sequence>>> = BTreeMap::new();
+    for s in seqs {
+        m.entry(s.actor_id).or_default().push(s.clone());
+    }
+    m
+}
+
+#[test]
+fn loopback_uds_fleet_matches_the_in_process_central_path() {
+    // Tentpole acceptance: a 1-server + 2-actor loopback fleet run over
+    // UDS must produce the same replay stream (per env slot) as the
+    // same actors running in-process against the same central batcher.
+    let (cfg, dims) = fleet_cfg();
+    let rounds = 60u64;
+
+    // --- In-process reference: 2 actor threads, one batcher, local
+    // replay (the seed central path).
+    let reference = {
+        let backend = Backend::Mock(Arc::new(MockModel::new(dims, 11)));
+        let metrics = Registry::new();
+        let replay = Arc::new(SequenceReplay::new(ReplayConfig {
+            capacity: 4_096,
+            ..Default::default()
+        }));
+        let (batcher, handle) =
+            Batcher::spawn(cfg.batcher.clone(), backend, metrics.clone());
+        let stats: Vec<_> = std::thread::scope(|s| {
+            let joins: Vec<_> = (0..cfg.actors.num_actors)
+                .map(|id| {
+                    let cfg = cfg.clone();
+                    let handle = handle.clone();
+                    let metrics = metrics.clone();
+                    let replay = replay.clone();
+                    s.spawn(move || {
+                        let policy: Box<dyn PolicyClient> = Box::new(
+                            CentralClient::new(handle, id, dims, &metrics),
+                        );
+                        run_actor(ActorArgs {
+                            id,
+                            cfg,
+                            dims,
+                            policy,
+                            replay,
+                            metrics,
+                            shutdown: ShutdownToken::new(),
+                            max_rounds: Some(rounds),
+                        })
+                        .unwrap()
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        drop(handle);
+        batcher.join();
+        (stats, replay.snapshot())
+    };
+
+    // --- Loopback fleet: same batcher config behind a FleetServer on a
+    // UDS socket; the same 2 actors run as remote workers with their
+    // own registries and shutdown tokens (process stand-ins).
+    let addr = uds_addr("equiv");
+    let backend = Backend::Mock(Arc::new(MockModel::new(dims, 11)));
+    let server_metrics = Registry::new();
+    let server_shutdown = ShutdownToken::new();
+    let replay = Arc::new(SequenceReplay::new(ReplayConfig {
+        capacity: 4_096,
+        ..Default::default()
+    }));
+    let (batcher, handle) =
+        Batcher::spawn(cfg.batcher.clone(), backend, server_metrics.clone());
+    let listener = Listener::bind(&addr).unwrap();
+    let server = FleetServer::spawn(
+        listener,
+        handle.clone(),
+        replay.clone(),
+        FleetServerOpts::default(),
+        server_metrics.clone(),
+        server_shutdown.clone(),
+    );
+
+    let worker_metrics = Registry::new();
+    let worker_shutdown = ShutdownToken::new();
+    let opts = RemoteClientOpts::default();
+    let ingest = Arc::new(
+        RemoteIngest::connect(
+            &addr,
+            dims,
+            &opts,
+            &worker_metrics,
+            worker_shutdown.clone(),
+        )
+        .unwrap(),
+    );
+    let fleet_stats: Vec<_> = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..cfg.actors.num_actors)
+            .map(|id| {
+                let cfg = cfg.clone();
+                let addr = addr.clone();
+                let metrics = worker_metrics.clone();
+                let shutdown = worker_shutdown.clone();
+                let ingest = ingest.clone();
+                s.spawn(move || {
+                    let policy: Box<dyn PolicyClient> = Box::new(
+                        RemoteClient::connect(
+                            &addr,
+                            id,
+                            dims,
+                            opts,
+                            &metrics,
+                            shutdown.clone(),
+                        )
+                        .unwrap(),
+                    );
+                    run_actor(ActorArgs {
+                        id,
+                        cfg,
+                        dims,
+                        policy,
+                        replay: ingest,
+                        metrics,
+                        shutdown,
+                        max_rounds: Some(rounds),
+                    })
+                    .unwrap()
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    ingest.goodbye();
+    // Everything the workers sent is in flight at most briefly; wait
+    // for the ingest connection to land every sequence, then drain.
+    let want = reference.1.len() as u64;
+    let rx = server_metrics.counter("fleet.rx_sequences");
+    wait_for(|| rx.get() >= want, "all sequences to arrive");
+    server_shutdown.signal();
+    server.join();
+    drop(handle);
+    batcher.join();
+
+    // Same per-actor stats...
+    for (a, b) in reference.0.iter().zip(&fleet_stats) {
+        assert_eq!(a.env_steps, b.env_steps);
+        assert_eq!(a.episodes, b.episodes);
+    }
+    // ...and the same replay stream, slot by slot, byte for byte.
+    let golden = by_slot(&reference.1);
+    let fleet = by_slot(&replay.snapshot());
+    assert!(!golden.is_empty(), "reference produced no sequences");
+    assert_eq!(
+        fleet.keys().collect::<Vec<_>>(),
+        golden.keys().collect::<Vec<_>>()
+    );
+    for (slot, gold) in &golden {
+        let got = &fleet[slot];
+        assert_eq!(got.len(), gold.len(), "slot {slot} sequence count");
+        for (i, (a, b)) in got.iter().zip(gold).enumerate() {
+            assert_eq!(a, b, "slot {slot} sequence {i} diverged");
+        }
+    }
+
+    // The fleet telemetry was live on both sides.
+    assert!(worker_metrics.counter("fleet.tx_frames").get() > 0);
+    assert!(worker_metrics.counter("fleet.tx_bytes").get() > 0);
+    let snap = worker_metrics.snapshot();
+    assert!(snap["fleet.rtt_seconds.count"] > 0.0, "client RTT timer");
+    assert_eq!(server_metrics.counter("fleet.rx_sequences").get(), want);
+    assert!(server_metrics.counter("fleet.accepts").get() >= 3); // 2 infer + 1 ingest
+    assert_eq!(server_metrics.counter("fleet.disconnects").get(), 0);
+    let ssnap = server_metrics.snapshot();
+    assert!(ssnap["fleet.encode_seconds.count"] > 0.0);
+    assert!(ssnap["fleet.decode_seconds.count"] > 0.0);
+    assert_eq!(ssnap["fleet.connections"], 0.0, "all connections drained");
+}
+
+fn policy_dims() -> ModelDims {
+    ModelDims {
+        obs_len: 8,
+        hidden: 4,
+        num_actions: 3,
+        seq_len: 4,
+        train_batch: 2,
+    }
+}
+
+/// One manual split-phase round-trip through a remote client.
+fn roundtrip(client: &mut RemoteClient, d: &ModelDims, tag: f32) {
+    let obs = vec![tag; d.obs_len];
+    let h = vec![0.0f32; d.hidden];
+    let c = vec![0.0f32; d.hidden];
+    client.submit(0, 1, &obs, &h, &c).unwrap();
+    let mut q = vec![0.0f32; d.num_actions];
+    let (mut h2, mut c2) = (vec![0.0f32; d.hidden], vec![0.0f32; d.hidden]);
+    client.wait(0, &mut q, &mut h2, &mut c2).unwrap();
+    assert!(q.iter().all(|v| v.is_finite()));
+}
+
+struct TestServer {
+    server: Option<FleetServer>,
+    batcher: Option<Batcher>,
+    handle: Option<rlarch::coordinator::BatcherHandle>,
+    metrics: Registry,
+    shutdown: ShutdownToken,
+    addr: Addr,
+}
+
+impl TestServer {
+    fn start(tag: &str, d: ModelDims, batcher_cfg: BatcherConfig, opts: FleetServerOpts) -> Self {
+        let addr = uds_addr(tag);
+        let backend = Backend::Mock(Arc::new(MockModel::new(d, 7)));
+        let metrics = Registry::new();
+        let shutdown = ShutdownToken::new();
+        let sink = Arc::new(SequenceReplay::new(ReplayConfig {
+            capacity: 64,
+            ..Default::default()
+        }));
+        let (batcher, handle) = Batcher::spawn(batcher_cfg, backend, metrics.clone());
+        let listener = Listener::bind(&addr).unwrap();
+        let server = FleetServer::spawn(
+            listener,
+            handle.clone(),
+            sink,
+            opts,
+            metrics.clone(),
+            shutdown.clone(),
+        );
+        TestServer {
+            server: Some(server),
+            batcher: Some(batcher),
+            handle: Some(handle),
+            metrics,
+            shutdown,
+            addr,
+        }
+    }
+
+    fn stop(mut self) {
+        self.shutdown.signal();
+        self.server.take().unwrap().join();
+        drop(self.handle.take());
+        self.batcher.take().unwrap().join();
+    }
+}
+
+#[test]
+fn killed_worker_is_counted_and_survivors_plus_rejoiners_proceed() {
+    // Kill-and-reconnect e2e: an uncleanly dying connection is counted
+    // as a disconnect (its in-flight replies shed, not stalled), the
+    // other connection keeps round-tripping, and a later connect is
+    // counted as the reconnect and serves traffic normally.
+    let d = policy_dims();
+    let srv = TestServer::start(
+        "kill",
+        d,
+        BatcherConfig::default(),
+        FleetServerOpts::default(),
+    );
+    let opts = RemoteClientOpts::default();
+
+    let wm = Registry::new();
+    let mut survivor = RemoteClient::connect(
+        &srv.addr,
+        0,
+        d,
+        opts,
+        &wm,
+        ShutdownToken::new(),
+    )
+    .unwrap();
+    roundtrip(&mut survivor, &d, 0.25);
+
+    // The victim: a raw connection that completes the handshake, then
+    // dies without a goodbye (a killed worker process).
+    {
+        let mut stream = dial(&srv.addr, 3, 10, None).unwrap();
+        let mut buf = Vec::new();
+        frame::encode_hello(
+            &mut buf,
+            &frame::Hello {
+                role: Role::Infer,
+                actor_id: 1,
+                obs_len: d.obs_len as u32,
+                hidden: d.hidden as u32,
+                num_actions: d.num_actions as u32,
+                seq_len: d.seq_len as u32,
+            },
+        );
+        stream.write_all(&buf).unwrap();
+        let conns = srv.metrics.gauge("fleet.connections");
+        wait_for(|| conns.get() >= 2.0, "victim connection to register");
+        // drop(stream): the unclean death.
+    }
+    let disconnects = srv.metrics.counter("fleet.disconnects");
+    wait_for(|| disconnects.get() >= 1, "the death to be counted");
+
+    // The survivor never noticed.
+    roundtrip(&mut survivor, &d, 0.5);
+
+    // The rejoiner: a fresh connect after a recorded death is the
+    // kill-and-reconnect signal, and serves traffic like any other.
+    let mut rejoiner = RemoteClient::connect(
+        &srv.addr,
+        1,
+        d,
+        opts,
+        &wm,
+        ShutdownToken::new(),
+    )
+    .unwrap();
+    let reconnects = srv.metrics.counter("fleet.reconnects");
+    wait_for(|| reconnects.get() >= 1, "the reconnect to be counted");
+    roundtrip(&mut rejoiner, &d, 0.75);
+
+    drop(survivor);
+    drop(rejoiner);
+    srv.stop();
+}
+
+#[test]
+fn over_budget_submissions_are_shed_and_transparently_retried() {
+    // Backpressure acceptance: with a 1-row in-flight budget and slow
+    // inference, the second of two back-to-back submissions must be
+    // shed (counter, error reply) — and the client's shed-retry loop
+    // must still complete both round-trips without error.
+    let d = policy_dims();
+    let bcfg = BatcherConfig {
+        max_batch: 4,
+        timeout_us: 200,
+        batch_sizes: vec![1, 4],
+    };
+    let addr = uds_addr("shed");
+    let backend = Backend::Mock(Arc::new(
+        MockModel::new(d, 7).with_infer_latency(Duration::from_millis(40)),
+    ));
+    let metrics = Registry::new();
+    let shutdown = ShutdownToken::new();
+    let sink = Arc::new(SequenceReplay::new(ReplayConfig {
+        capacity: 64,
+        ..Default::default()
+    }));
+    let (batcher, handle) = Batcher::spawn(bcfg, backend, metrics.clone());
+    let listener = Listener::bind(&addr).unwrap();
+    let server = FleetServer::spawn(
+        listener,
+        handle.clone(),
+        sink,
+        FleetServerOpts {
+            max_inflight_rows: 1,
+            insert_batch: 1,
+        },
+        metrics.clone(),
+        shutdown.clone(),
+    );
+
+    let wm = Registry::new();
+    let mut client = RemoteClient::connect(
+        &addr,
+        0,
+        d,
+        RemoteClientOpts::default(),
+        &wm,
+        ShutdownToken::new(),
+    )
+    .unwrap();
+    let obs = vec![0.5f32; d.obs_len];
+    let h = vec![0.0f32; d.hidden];
+    let c = vec![0.0f32; d.hidden];
+    // Two tickets in flight against a 1-row budget: the second arrives
+    // while the first sits under 40ms of inference latency → shed.
+    client.submit(0, 1, &obs, &h, &c).unwrap();
+    client.submit(1, 1, &obs, &h, &c).unwrap();
+    let mut q = vec![0.0f32; d.num_actions];
+    let (mut h2, mut c2) = (vec![0.0f32; d.hidden], vec![0.0f32; d.hidden]);
+    client.wait(0, &mut q, &mut h2, &mut c2).unwrap();
+    client.wait(1, &mut q, &mut h2, &mut c2).unwrap();
+    assert!(
+        metrics.counter("fleet.shed_rows").get() >= 1,
+        "the over-budget submission was shed"
+    );
+    assert!(
+        wm.counter("fleet.resubmits").get() >= 1,
+        "the client retried the shed ticket"
+    );
+
+    drop(client);
+    shutdown.signal();
+    server.join();
+    drop(handle);
+    batcher.join();
+}
