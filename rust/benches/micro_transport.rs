@@ -9,17 +9,24 @@
 //! The throughput table feeds the transport bytes/s columns in
 //! EXPERIMENTS.md §Perf.
 //!
+//! The fault-tolerance control plane (DESIGN.md §15) gets the same
+//! treatment: the ping/pong codec and the heartbeat / liveness /
+//! deadline state machines run once per quiet interval on *every*
+//! connection, so their steady state is gated allocation-free too.
+//!
 //! `--quick` shrinks every loop (the CI smoke run); the allocation
-//! gate is asserted in both modes.
+//! gates are asserted in both modes.
 
 use rlarch::report::{bench, BenchResult};
 use rlarch::rl::Sequence;
 use rlarch::transport::frame::{
-    decode_reply_ok, decode_sequence, decode_submit, encode_reply_ok, encode_sequence,
-    encode_submit, parse_header, payload,
+    decode_reply_ok, decode_sequence, decode_submit, encode_ping, encode_pong,
+    encode_reply_ok, encode_sequence, encode_submit, parse_header, payload, FrameKind,
 };
+use rlarch::transport::{DeadlineEwma, Heartbeat, Liveness};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
 
 /// Counts every allocator entry (alloc + realloc); frees are not
 /// interesting here. Same gate pattern as `micro_env` /
@@ -139,6 +146,48 @@ fn assert_codec_allocation_free(rows: usize, iters: usize) {
     assert_eq!(s2, s);
 }
 
+/// The §15 gate: one simulated quiet connection ticking at 1ms for
+/// `iters` ticks — heartbeats firing, pongs answered, the liveness
+/// window refreshed, the deadline estimator folding RTT samples. After
+/// the ping buffer's capacity settles the whole control plane must not
+/// enter the allocator once: these state machines run on every live
+/// connection forever, so any per-tick allocation is a leak-shaped tax.
+fn assert_liveness_allocation_free(iters: usize) {
+    let t0 = Instant::now();
+    let mut hb = Heartbeat::new(Duration::from_millis(5), t0);
+    let mut lv = Liveness::new(Duration::from_millis(20), t0);
+    let mut dl = DeadlineEwma::new(Duration::from_millis(20), 4.0);
+    let mut buf = Vec::new();
+    encode_ping(&mut buf, 0); // warmup: the 24-byte capacity settles
+    let mut now = t0;
+    let mut pings = 0u64;
+    let a0 = alloc_calls();
+    for i in 0..iters {
+        now += Duration::from_millis(1);
+        if hb.due(now) {
+            encode_ping(&mut buf, i as u64);
+            let hd = parse_header(&buf[4..]).unwrap();
+            assert_eq!(hd.kind, FrameKind::Ping);
+            encode_pong(&mut buf, hd.ticket);
+            let hd = parse_header(&buf[4..]).unwrap();
+            assert_eq!(hd.kind, FrameKind::Pong);
+            hb.sent(now);
+            lv.touch(now);
+            pings += 1;
+        }
+        dl.observe(Duration::from_micros(500 + (i as u64 % 7) * 100));
+        assert!(dl.deadline() >= Duration::from_millis(20));
+        assert!(!lv.stale(now), "a heartbeating connection never goes stale");
+    }
+    let allocs = alloc_calls() - a0;
+    assert_eq!(
+        allocs, 0,
+        "heartbeat/liveness/deadline control plane allocated {allocs} times \
+         over {iters} ticks ({pings} ping/pong round-trips; hard requirement: 0)"
+    );
+    assert!(pings > 0, "the heartbeat never fired — the gate measured nothing");
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     println!(
@@ -201,6 +250,21 @@ fn main() {
         decode_sequence(payload(fr), OBS_LEN, HIDDEN, &mut s2).unwrap();
     }));
 
+    // Control-plane ping/pong (DESIGN.md §15): header-only 24-byte
+    // frames, one per quiet heartbeat interval per connection.
+    let mut pbuf = Vec::new();
+    encode_ping(&mut pbuf, 1);
+    bytes_per.push(("ping".into(), pbuf.len()));
+    results.push(bench("frame.encode_ping", warm, iters, || {
+        encode_ping(&mut pbuf, 1);
+    }));
+    let mut ping = Vec::new();
+    encode_ping(&mut ping, 7);
+    results.push(bench("frame.parse_ping", warm, iters, || {
+        let hd = parse_header(&ping[4..]).unwrap();
+        assert_eq!((hd.kind, hd.ticket), (FrameKind::Ping, 7));
+    }));
+
     println!("{}", BenchResult::markdown_header());
     for r in &results {
         println!("{}", r.to_markdown_row());
@@ -241,5 +305,12 @@ fn main() {
     println!(
         "\nframe codec steady-state allocator entries over {gate_iters} \
          encode+decode round-trips x 8 rows: 0 (hard requirement)"
+    );
+
+    let live_iters = if quick { 2_000 } else { 50_000 };
+    assert_liveness_allocation_free(live_iters);
+    println!(
+        "heartbeat/liveness/deadline control plane allocator entries over \
+         {live_iters} 1ms ticks: 0 (hard requirement)"
     );
 }

@@ -6,8 +6,8 @@ pub mod toml;
 pub mod types;
 
 pub use types::{
-    ActorConfig, BatcherConfig, ConfigError, CpuModelConfig, EnvConfig,
-    GpuModelConfig, InferenceMode, LearnerConfig, PowerModelConfig,
+    ActorConfig, BatcherConfig, ConfigError, CpuModelConfig, EnvConfig, FaultsConfig,
+    FleetConfig, GpuModelConfig, InferenceMode, LearnerConfig, PowerModelConfig,
     ReplayBufferConfig, SystemConfig, TelemetryConfig,
 };
 

@@ -663,6 +663,28 @@ pub struct FleetConfig {
     /// Initial reconnect backoff in milliseconds (doubles per attempt,
     /// capped at 2 s); also the pause before a shed submission retries.
     pub backoff_ms: u64,
+    /// Client heartbeat period: an idle-waiting client sends a `Ping`
+    /// every this many ms so the server sees it as live. 0 (default) =
+    /// no heartbeats — bit-for-bit the PR 8 wire stream.
+    pub heartbeat_interval_ms: u64,
+    /// Liveness window: the server reaps an infer connection with no
+    /// complete frame for this many ms (failing its in-flight tickets
+    /// with attribution), and the client arms a per-ticket deadline
+    /// floored at this value (seeded from the `fleet.rtt_seconds`
+    /// EWMA) that reconnects-and-resubmits instead of hanging. 0
+    /// (default) = never reap, never time out — the PR 8 behavior.
+    pub liveness_timeout_ms: u64,
+    /// Panicked actor threads a worker restarts (with backoff) before
+    /// reporting the actor as failed (`fleet.actor_restarts` counts
+    /// every restart).
+    pub actor_restart_budget: usize,
+    /// Coordinator checkpoint directory: empty (default) = no
+    /// snapshots. With a directory, `run_serve` snapshots learner
+    /// progress every `checkpoint_every` steps and resumes from the
+    /// latest snapshot on restart (bumping the handshake generation).
+    pub checkpoint_dir: String,
+    /// Learner steps between snapshots (when `checkpoint_dir` is set).
+    pub checkpoint_every: u64,
 }
 
 impl Default for FleetConfig {
@@ -673,6 +695,11 @@ impl Default for FleetConfig {
             max_inflight_rows: 4_096,
             connect_retries: 40,
             backoff_ms: 50,
+            heartbeat_interval_ms: 0,
+            liveness_timeout_ms: 0,
+            actor_restart_budget: 2,
+            checkpoint_dir: String::new(),
+            checkpoint_every: 25,
         }
     }
 }
@@ -695,6 +722,27 @@ impl FleetConfig {
             ),
             backoff_ms: get_f64(v, "fleet.backoff_ms", d.backoff_ms as f64)
                 as u64,
+            heartbeat_interval_ms: get_f64(
+                v,
+                "fleet.heartbeat_interval_ms",
+                d.heartbeat_interval_ms as f64,
+            ) as u64,
+            liveness_timeout_ms: get_f64(
+                v,
+                "fleet.liveness_timeout_ms",
+                d.liveness_timeout_ms as f64,
+            ) as u64,
+            actor_restart_budget: get_usize(
+                v,
+                "fleet.actor_restart_budget",
+                d.actor_restart_budget,
+            ),
+            checkpoint_dir: get_str(v, "fleet.checkpoint_dir", &d.checkpoint_dir),
+            checkpoint_every: get_f64(
+                v,
+                "fleet.checkpoint_every",
+                d.checkpoint_every as f64,
+            ) as u64,
         }
     }
 
@@ -707,6 +755,167 @@ impl FleetConfig {
         if self.backoff_ms == 0 {
             return Err(ConfigError::Invalid(
                 "fleet.backoff_ms must be > 0".into(),
+            ));
+        }
+        if self.heartbeat_interval_ms > 0
+            && self.liveness_timeout_ms > 0
+            && self.liveness_timeout_ms <= self.heartbeat_interval_ms
+        {
+            return Err(ConfigError::Invalid(
+                "fleet.liveness_timeout_ms must exceed heartbeat_interval_ms \
+                 (a healthy client must fit a ping inside the window)"
+                    .into(),
+            ));
+        }
+        if !self.checkpoint_dir.is_empty() && self.checkpoint_every == 0 {
+            return Err(ConfigError::Invalid(
+                "fleet.checkpoint_every must be > 0 when checkpoint_dir is set"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Deterministic fault injection (`[faults]`; DESIGN.md §15). All rates
+/// zero and `panic_actor < 0` (the default) = the plan is never
+/// constructed and every path is bit-for-bit the fault-free one —
+/// pinned by the PR 9 equivalence test. Rates are per-frame (or
+/// per-infer-call for `stall_rate`) Bernoulli probabilities drawn from
+/// a PCG stream seeded by `seed`, so a given plan replays exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultsConfig {
+    /// Root seed of the fault plan's PCG streams.
+    pub seed: u64,
+    /// Probability a received frame is silently dropped (the client's
+    /// ticket deadline is what notices).
+    pub drop_rate: f64,
+    /// Probability a received frame is delayed by `delay_ms`.
+    pub delay_rate: f64,
+    pub delay_ms: u64,
+    /// Probability a received frame is truncated before parsing
+    /// (always rejected: counted in `fleet.bad_frames`).
+    pub truncate_rate: f64,
+    /// Probability a received frame's header magic is corrupted
+    /// (always rejected: counted in `fleet.bad_frames`).
+    pub corrupt_rate: f64,
+    /// Probability a received frame kills its connection outright.
+    pub kill_rate: f64,
+    /// Probability one mock inference call stalls for `stall_ms`.
+    pub stall_rate: f64,
+    pub stall_ms: u64,
+    /// Fleet-global actor id whose thread panics (-1 = none).
+    pub panic_actor: i64,
+    /// Submit round at which that actor panics (one-shot).
+    pub panic_at_step: u64,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        Self {
+            seed: 2020,
+            drop_rate: 0.0,
+            delay_rate: 0.0,
+            delay_ms: 5,
+            truncate_rate: 0.0,
+            corrupt_rate: 0.0,
+            kill_rate: 0.0,
+            stall_rate: 0.0,
+            stall_ms: 20,
+            panic_actor: -1,
+            panic_at_step: 3,
+        }
+    }
+}
+
+impl FaultsConfig {
+    pub fn from_value(v: &Value) -> Self {
+        let d = Self::default();
+        Self {
+            seed: get_f64(v, "faults.seed", d.seed as f64) as u64,
+            drop_rate: get_f64(v, "faults.drop_rate", d.drop_rate),
+            delay_rate: get_f64(v, "faults.delay_rate", d.delay_rate),
+            delay_ms: get_f64(v, "faults.delay_ms", d.delay_ms as f64) as u64,
+            truncate_rate: get_f64(v, "faults.truncate_rate", d.truncate_rate),
+            corrupt_rate: get_f64(v, "faults.corrupt_rate", d.corrupt_rate),
+            kill_rate: get_f64(v, "faults.kill_rate", d.kill_rate),
+            stall_rate: get_f64(v, "faults.stall_rate", d.stall_rate),
+            stall_ms: get_f64(v, "faults.stall_ms", d.stall_ms as f64) as u64,
+            panic_actor: get_f64(v, "faults.panic_actor", d.panic_actor as f64)
+                as i64,
+            panic_at_step: get_f64(
+                v,
+                "faults.panic_at_step",
+                d.panic_at_step as f64,
+            ) as u64,
+        }
+    }
+
+    /// Whether any fault is configured at all (false = the plan is
+    /// never built and the injection seams cost nothing).
+    pub fn enabled(&self) -> bool {
+        self.drop_rate > 0.0
+            || self.delay_rate > 0.0
+            || self.truncate_rate > 0.0
+            || self.corrupt_rate > 0.0
+            || self.kill_rate > 0.0
+            || self.stall_rate > 0.0
+            || self.panic_actor >= 0
+    }
+
+    /// Parse a compact CLI spec: `"seed=7,corrupt_rate=0.02,kill_rate=0.01"`.
+    /// Keys mirror the `[faults]` section exactly; unknown keys are errors.
+    pub fn from_spec(spec: &str) -> Result<Self, ConfigError> {
+        let mut cfg = Self::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (k, v) = part.split_once('=').ok_or_else(|| {
+                ConfigError::Invalid(format!("faults spec `{part}`: want key=value"))
+            })?;
+            let num = v.trim().parse::<f64>().map_err(|_| {
+                ConfigError::Invalid(format!("faults spec `{part}`: bad number"))
+            })?;
+            match k.trim() {
+                "seed" => cfg.seed = num as u64,
+                "drop_rate" => cfg.drop_rate = num,
+                "delay_rate" => cfg.delay_rate = num,
+                "delay_ms" => cfg.delay_ms = num as u64,
+                "truncate_rate" => cfg.truncate_rate = num,
+                "corrupt_rate" => cfg.corrupt_rate = num,
+                "kill_rate" => cfg.kill_rate = num,
+                "stall_rate" => cfg.stall_rate = num,
+                "stall_ms" => cfg.stall_ms = num as u64,
+                "panic_actor" => cfg.panic_actor = num as i64,
+                "panic_at_step" => cfg.panic_at_step = num as u64,
+                other => {
+                    return Err(ConfigError::Invalid(format!(
+                        "unknown faults spec key `{other}`"
+                    )))
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        for (name, r) in [
+            ("drop_rate", self.drop_rate),
+            ("delay_rate", self.delay_rate),
+            ("truncate_rate", self.truncate_rate),
+            ("corrupt_rate", self.corrupt_rate),
+            ("kill_rate", self.kill_rate),
+            ("stall_rate", self.stall_rate),
+        ] {
+            if !(0.0..=1.0).contains(&r) {
+                return Err(ConfigError::Invalid(format!(
+                    "faults.{name} must be in [0, 1], got {r}"
+                )));
+            }
+        }
+        if self.panic_actor >= 0 && self.panic_at_step == 0 {
+            return Err(ConfigError::Invalid(
+                "faults.panic_at_step must be >= 1 when panic_actor is set"
+                    .into(),
             ));
         }
         Ok(())
@@ -742,6 +951,7 @@ pub struct SystemConfig {
     pub power: PowerModelConfig,
     pub telemetry: TelemetryConfig,
     pub fleet: FleetConfig,
+    pub faults: FaultsConfig,
 }
 
 impl Default for SystemConfig {
@@ -761,6 +971,7 @@ impl Default for SystemConfig {
             power: PowerModelConfig::default(),
             telemetry: TelemetryConfig::default(),
             fleet: FleetConfig::default(),
+            faults: FaultsConfig::default(),
         }
     }
 }
@@ -864,6 +1075,27 @@ const SECTION_KEYS: &[(&str, &[&str])] = &[
             "max_inflight_rows",
             "connect_retries",
             "backoff_ms",
+            "heartbeat_interval_ms",
+            "liveness_timeout_ms",
+            "actor_restart_budget",
+            "checkpoint_dir",
+            "checkpoint_every",
+        ],
+    ),
+    (
+        "faults",
+        &[
+            "seed",
+            "drop_rate",
+            "delay_rate",
+            "delay_ms",
+            "truncate_rate",
+            "corrupt_rate",
+            "kill_rate",
+            "stall_rate",
+            "stall_ms",
+            "panic_actor",
+            "panic_at_step",
         ],
     ),
 ];
@@ -897,6 +1129,7 @@ impl SystemConfig {
             power: PowerModelConfig::from_value(v),
             telemetry: TelemetryConfig::from_value(v),
             fleet: FleetConfig::from_value(v),
+            faults: FaultsConfig::from_value(v),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -914,6 +1147,7 @@ impl SystemConfig {
         self.replay.validate()?;
         self.telemetry.validate()?;
         self.fleet.validate()?;
+        self.faults.validate()?;
         // Cross-section: the buffer must be able to hold a train batch
         // and the fill threshold the learner waits for.
         if self.replay.capacity < self.learner.train_batch {

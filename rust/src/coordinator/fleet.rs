@@ -1,5 +1,6 @@
 //! Fleet orchestration: the multi-process deployment of the same
-//! SEED-style dataflow `run()` wires in one process (DESIGN.md §14).
+//! SEED-style dataflow `run()` wires in one process (DESIGN.md §14;
+//! fault tolerance §15).
 //!
 //! [`run_serve`] is the coordinator process (`rlarch serve`): the
 //! backend, batcher, replay, and learner live here, exactly as in
@@ -28,23 +29,46 @@
 //! deterministic, the wire preserves f32 bits, and every actor derives
 //! its RNG and epsilon from its fleet-global id
 //! (`tests/transport_fleet.rs`).
+//!
+//! Fault tolerance (DESIGN.md §15):
+//!
+//! * **Supervision** — each worker actor thread runs under a
+//!   restart-with-budget supervisor: a panic is caught, counted in
+//!   `fleet.actor_restarts`, and the actor reconnects and restarts
+//!   after an interruptible backoff, up to
+//!   `fleet.actor_restart_budget` restarts before it is declared
+//!   failed (surfaced in `WorkerReport::first_error`).
+//! * **Checkpoint/restore** — with `fleet.checkpoint_dir` set the
+//!   coordinator snapshots the learner every `fleet.checkpoint_every`
+//!   steps (model step count + params via the mock backend, replay
+//!   cursor, config seed) with a write-temp-then-rename protocol, and
+//!   resumes from the newest snapshot on restart. Each incarnation
+//!   bumps a generation tag carried in the `Hello` handshake, so a
+//!   restarted server refuses workers still synced to the previous
+//!   incarnation until they resync fresh.
+//! * **Fault injection** — an armed `[faults]` plan is threaded into
+//!   the server's per-connection readers and the mock backend's stall
+//!   seam; all-off (the default) constructs nothing and is bit-for-bit
+//!   the plain path.
 
 use super::batcher::Batcher;
 use super::{actor, learner, weighted_mean_return, ActorStats, LearnerStats};
 use crate::config::{InferenceMode, SystemConfig};
 use crate::exec::ShutdownToken;
+use crate::fault::FaultPlan;
 use crate::metrics::Registry;
 use crate::policy::PolicyClient;
 use crate::replay::{ReplayConfig, SequenceReplay, SequenceSink};
 use crate::rl::SequencePool;
-use crate::runtime::{Backend, ModelDims};
+use crate::runtime::{checkpoint, Backend, MockModel, ModelDims, Tensor};
 use crate::telemetry::Telemetry;
 use crate::transport::{
     Addr, FleetServer, FleetServerOpts, Listener, RemoteClient, RemoteClientOpts,
     RemoteIngest,
 };
-use std::sync::Arc;
-use std::time::Instant;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Outcome of a coordinator (`serve`) run.
 #[derive(Clone, Debug)]
@@ -64,6 +88,21 @@ pub struct ServeReport {
     pub inference_batches: u64,
     pub mean_batch_occupancy: f64,
     pub batcher_errors: u64,
+    /// Server incarnation (0 = checkpointing off; first checkpointed
+    /// run is generation 1, each resume bumps it).
+    pub generation: u32,
+    /// Learner steps restored from a checkpoint before this run's own
+    /// training began.
+    pub resumed_steps: u64,
+    /// Snapshots written this run (`fleet.checkpoints`).
+    pub checkpoints: u64,
+    /// First attributed fleet error (`conn N (<peer>): ...`), if any —
+    /// reaps, bad frames, protocol violations, spawn failures.
+    pub first_error: Option<String>,
+    /// The coordinator-side fault plan's injection ledger, when a
+    /// `[faults]` plan was armed — the chaos soak reconciles `fleet.*`
+    /// metrics against it (e.g. `bad_frames == truncated + corrupted`).
+    pub injected: Option<crate::fault::InjectedFaults>,
 }
 
 /// Outcome of a worker (`actor --connect`) run.
@@ -74,11 +113,83 @@ pub struct WorkerReport {
     pub env_steps: u64,
     pub episodes: u64,
     pub mean_return: f64,
+    /// Supervisor restarts across this worker's actors
+    /// (`fleet.actor_restarts`).
+    pub actor_restarts: u64,
     /// First actor failure, if any. A worker whose server drained
     /// cleanly reports the goodbye here for actors that were mid-`wait`
     /// when it landed; callers treat it as informational when
     /// `env_steps > 0` and the shutdown was server-initiated.
     pub first_error: Option<String>,
+}
+
+/// Coordinator snapshot metadata (DESIGN.md §15): a flat `key=value`
+/// text file next to the params bundle. Both files are written to a
+/// temp name and renamed into place, so a crash mid-snapshot leaves
+/// the previous checkpoint intact.
+struct FleetCheckpoint {
+    generation: u32,
+    steps: u64,
+    sequences: u64,
+    seed: u64,
+}
+
+impl FleetCheckpoint {
+    fn state_path(dir: &Path) -> PathBuf {
+        dir.join("state.kv")
+    }
+
+    fn params_path(dir: &Path) -> PathBuf {
+        dir.join("params.bin")
+    }
+
+    fn load(dir: &Path) -> anyhow::Result<Option<FleetCheckpoint>> {
+        let path = Self::state_path(dir);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => anyhow::bail!("read {path:?}: {e}"),
+        };
+        let mut ck = FleetCheckpoint {
+            generation: 0,
+            steps: 0,
+            sequences: 0,
+            seed: 0,
+        };
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad checkpoint line `{line}` in {path:?}"))?;
+            match k {
+                "generation" => ck.generation = v.parse()?,
+                "steps" => ck.steps = v.parse()?,
+                "sequences" => ck.sequences = v.parse()?,
+                "seed" => ck.seed = v.parse()?,
+                other => anyhow::bail!("unknown checkpoint key `{other}` in {path:?}"),
+            }
+        }
+        anyhow::ensure!(ck.generation > 0, "checkpoint {path:?} has no generation");
+        Ok(Some(ck))
+    }
+
+    fn save(&self, dir: &Path, params: &[Tensor]) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let ptmp = dir.join("params.bin.tmp");
+        checkpoint::save_params(&ptmp, params)?;
+        std::fs::rename(&ptmp, Self::params_path(dir))?;
+        let text = format!(
+            "generation={}\nsteps={}\nsequences={}\nseed={}\n",
+            self.generation, self.steps, self.sequences, self.seed
+        );
+        let stmp = dir.join("state.kv.tmp");
+        std::fs::write(&stmp, text)?;
+        std::fs::rename(&stmp, Self::state_path(dir))?;
+        Ok(())
+    }
 }
 
 /// Run the coordinator side of a fleet: backend + batcher + replay +
@@ -118,6 +229,49 @@ pub fn run_serve(
     );
     let listener = Listener::bind(&Addr::parse(&cfg.fleet.listen)?)?;
 
+    // Fault plan (None at the all-off default) and its mock-backend
+    // stall seam.
+    let fault_plan = FaultPlan::from_config(&cfg.faults);
+    let mock: Option<Arc<MockModel>> = match &backend {
+        Backend::Mock(m) => Some(m.clone()),
+        _ => None,
+    };
+    if let (Some(plan), Some(m)) = (&fault_plan, &mock) {
+        m.set_infer_stall(plan);
+    }
+
+    // Checkpoint resume: adopt the newest snapshot's learner step and
+    // verify its params against the backend before serving anything.
+    let ckpt_dir = (!cfg.fleet.checkpoint_dir.is_empty())
+        .then(|| PathBuf::from(&cfg.fleet.checkpoint_dir));
+    let mut generation: u32 = 0;
+    let mut resumed_steps: u64 = 0;
+    if let Some(dir) = &ckpt_dir {
+        let m = mock.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "fleet.checkpoint_dir requires the mock backend (params snapshotting)"
+            )
+        })?;
+        generation = 1;
+        if let Some(saved) = FleetCheckpoint::load(dir)? {
+            anyhow::ensure!(
+                saved.seed == cfg.seed,
+                "checkpoint in {dir:?} was written with seed {}, config has {}",
+                saved.seed,
+                cfg.seed
+            );
+            let disk = checkpoint::load_params(&FleetCheckpoint::params_path(dir))?;
+            anyhow::ensure!(
+                disk == m.params(),
+                "checkpoint params in {dir:?} do not match the backend \
+                 (different seed or model dims?)"
+            );
+            m.set_steps(saved.steps);
+            resumed_steps = saved.steps;
+            generation = saved.generation + 1;
+        }
+    }
+
     let pool = cfg.replay.pool.then(|| Arc::new(SequencePool::new()));
     let mut replay = SequenceReplay::new(ReplayConfig::from(&cfg.replay));
     if let Some(p) = &pool {
@@ -139,10 +293,54 @@ pub fn run_serve(
         FleetServerOpts {
             max_inflight_rows: cfg.fleet.max_inflight_rows,
             insert_batch: cfg.replay.insert_batch,
+            liveness_timeout_ms: cfg.fleet.liveness_timeout_ms,
+            generation,
+            faults: fault_plan.clone(),
         },
         metrics.clone(),
         shutdown.clone(),
     );
+    let fleet_errors = server.error_slot();
+
+    // Periodic snapshots ride the learner's per-batch probe: every
+    // `fleet.checkpoint_every` trained steps, persist the model step
+    // count, params, and replay cursor.
+    let on_batch: Option<learner::BatchProbe> = match (&ckpt_dir, &mock) {
+        (Some(dir), Some(m)) => {
+            let dir = dir.clone();
+            let m = m.clone();
+            let replay = replay.clone();
+            let every = cfg.fleet.checkpoint_every.max(1);
+            let seed = cfg.seed;
+            let saved_c = metrics.counter("fleet.checkpoints");
+            let failed_c = metrics.counter("fleet.checkpoint_errors");
+            let errslot = fleet_errors.clone();
+            let mut batches = 0u64;
+            Some(Box::new(move |_slots: &[usize]| {
+                batches += 1;
+                if batches % every != 0 {
+                    return;
+                }
+                let ck = FleetCheckpoint {
+                    generation,
+                    steps: m.steps(),
+                    sequences: replay.inserts(),
+                    seed,
+                };
+                match ck.save(&dir, &m.params()) {
+                    Ok(()) => saved_c.inc(),
+                    Err(e) => {
+                        failed_c.inc();
+                        let mut g = errslot.lock().unwrap();
+                        if g.is_none() {
+                            *g = Some(format!("checkpoint save failed: {e}"));
+                        }
+                    }
+                }
+            }) as learner::BatchProbe)
+        }
+        _ => None,
+    };
 
     // The learner runs on this thread; data arrives by wire.
     let learner_result = learner::run_learner(learner::LearnerArgs {
@@ -154,11 +352,32 @@ pub fn run_serve(
         shutdown: shutdown.clone(),
         loss_every: 10,
         seed: cfg.seed,
-        on_batch: None,
+        on_batch,
     });
     // run_learner signals shutdown on its happy path; a train failure
     // must still drain the fleet before this function returns.
     shutdown.signal();
+
+    // A final snapshot pins the completed run, so a restart with a
+    // larger step budget resumes exactly at `max_steps`.
+    if let (Some(dir), Some(m), Ok(_)) = (&ckpt_dir, &mock, &learner_result) {
+        let ck = FleetCheckpoint {
+            generation,
+            steps: m.steps(),
+            sequences: replay.inserts(),
+            seed: cfg.seed,
+        };
+        match ck.save(dir, &m.params()) {
+            Ok(()) => metrics.counter("fleet.checkpoints").inc(),
+            Err(e) => {
+                metrics.counter("fleet.checkpoint_errors").inc();
+                let mut g = fleet_errors.lock().unwrap();
+                if g.is_none() {
+                    *g = Some(format!("final checkpoint save failed: {e}"));
+                }
+            }
+        }
+    }
 
     // Drain order matters: the server's writers must flush outstanding
     // reply chunks (they hold ReplyRange borrows of batcher output
@@ -184,6 +403,7 @@ pub fn run_serve(
 
     let batches = metrics.counter("batcher.batches").get();
     let items = metrics.counter("batcher.items").get();
+    let first_error = fleet_errors.lock().unwrap().clone();
     Ok(ServeReport {
         learner: learner_result?,
         elapsed_seconds: elapsed,
@@ -199,7 +419,97 @@ pub fn run_serve(
             0.0
         },
         batcher_errors: metrics.counter("batcher.errors").get(),
+        generation,
+        resumed_steps,
+        checkpoints: metrics.counter("fleet.checkpoints").get(),
+        first_error,
+        injected: fault_plan.as_ref().map(|p| p.injected()),
     })
+}
+
+/// Chaos seam: a [`PolicyClient`] wrapper that panics on its `at`-th
+/// submission — but only if it wins the plan's one-shot panic claim,
+/// so the supervisor's restart count under a plan is deterministic
+/// (the restarted actor's fresh wrapper never fires again).
+struct PanicAt {
+    inner: Box<dyn PolicyClient>,
+    at: u64,
+    calls: u64,
+    plan: Arc<FaultPlan>,
+}
+
+impl PolicyClient for PanicAt {
+    fn submit(
+        &mut self,
+        ticket: usize,
+        rows: usize,
+        obs: &[f32],
+        h: &[f32],
+        c: &[f32],
+    ) -> anyhow::Result<()> {
+        self.calls += 1;
+        if self.calls == self.at && self.plan.take_panic() {
+            panic!("injected actor panic (fault plan, submit #{})", self.calls);
+        }
+        self.inner.submit(ticket, rows, obs, h, c)
+    }
+
+    fn wait(
+        &mut self,
+        ticket: usize,
+        q: &mut [f32],
+        h: &mut [f32],
+        c: &mut [f32],
+    ) -> anyhow::Result<()> {
+        self.inner.wait(ticket, q, h, c)
+    }
+}
+
+/// One restartable attempt of fleet actor `id`: connect, wrap in the
+/// fault plan's panic seam if it targets this actor, run.
+#[allow(clippy::too_many_arguments)]
+fn actor_attempt(
+    addr: &Addr,
+    id: usize,
+    dims: ModelDims,
+    opts: RemoteClientOpts,
+    cfg: &SystemConfig,
+    fault_plan: &Option<Arc<FaultPlan>>,
+    ingest: &Arc<RemoteIngest>,
+    metrics: &Registry,
+    shutdown: &ShutdownToken,
+    max_rounds: Option<u64>,
+) -> anyhow::Result<ActorStats> {
+    let client = RemoteClient::connect(addr, id, dims, opts, metrics, shutdown.clone())?;
+    let mut policy: Box<dyn PolicyClient> = Box::new(client);
+    if let Some(plan) = fault_plan {
+        if let Some(at) = plan.actor_panic_at(id) {
+            policy = Box::new(PanicAt {
+                inner: policy,
+                at,
+                calls: 0,
+                plan: plan.clone(),
+            });
+        }
+    }
+    actor::run_actor(actor::ActorArgs {
+        id,
+        cfg: cfg.clone(),
+        dims,
+        policy,
+        replay: ingest.clone() as Arc<dyn SequenceSink>,
+        metrics: metrics.clone(),
+        shutdown: shutdown.clone(),
+        max_rounds,
+    })
+}
+
+/// Render a caught panic payload for error reports.
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> &str {
+    p.downcast_ref::<&str>()
+        .copied()
+        .or_else(|| p.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
 }
 
 /// Run one worker process: `local_actors` actor threads over
@@ -209,6 +519,13 @@ pub fn run_serve(
 /// mismatch); `cfg.actors.num_actors` stays the *fleet-wide* total so
 /// every worker derives the same epsilon spectrum and env-seed layout
 /// as the in-process run — `id_base` picks this worker's slice of it.
+///
+/// Each actor thread is supervised: a panic (never an `Err`) is
+/// caught, counted in `fleet.actor_restarts`, and retried from a fresh
+/// connection after an interruptible backoff, up to
+/// `fleet.actor_restart_budget` restarts. A restarted actor restarts
+/// its episode stream from scratch — the replay is a distribution, not
+/// a ledger, so at-least-once episode delivery is the contract.
 ///
 /// Actor failures do not abort the report: a server drain lands as a
 /// goodbye mid-`wait` in whichever actors were blocked, and the rest
@@ -240,7 +557,10 @@ pub fn run_worker(
     let opts = RemoteClientOpts {
         connect_retries: cfg.fleet.connect_retries,
         backoff_ms: cfg.fleet.backoff_ms,
+        heartbeat_ms: cfg.fleet.heartbeat_interval_ms,
+        liveness_ms: cfg.fleet.liveness_timeout_ms,
     };
+    let fault_plan = FaultPlan::from_config(&cfg.faults);
     let shutdown = ShutdownToken::new();
     // One ingest connection per worker process, shared by its actors.
     let ingest = Arc::new(RemoteIngest::connect(
@@ -251,54 +571,87 @@ pub fn run_worker(
         shutdown.clone(),
     )?);
 
+    let restarts_c = metrics.counter("fleet.actor_restarts");
+    let spawn_failures = metrics.counter("fleet.spawn_failures");
+    let restart_budget = cfg.fleet.actor_restart_budget;
+    let backoff = Duration::from_millis(cfg.fleet.backoff_ms.max(1));
+
     let t0 = Instant::now();
-    let (actor_stats, actor_errors) = std::thread::scope(|s| {
+    let errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let actor_stats = std::thread::scope(|s| {
         let mut joins = Vec::new();
         for t in 0..local_actors {
             let id = id_base + t;
-            let (addr, cfg, ingest, metrics, shutdown) = (
+            let (addr, cfg, fault_plan, ingest, metrics, shutdown, restarts_c) = (
                 &addr,
-                cfg.clone(),
-                ingest.clone() as Arc<dyn SequenceSink>,
+                cfg,
+                &fault_plan,
+                &ingest,
                 metrics.clone(),
                 shutdown.clone(),
+                restarts_c.clone(),
             );
-            joins.push(
-                std::thread::Builder::new()
-                    .name(format!("rlarch-actor-{id}"))
-                    .spawn_scoped(s, move || -> anyhow::Result<ActorStats> {
-                        let client = RemoteClient::connect(
-                            addr,
-                            id,
-                            dims,
-                            opts,
-                            &metrics,
-                            shutdown.clone(),
-                        )?;
-                        let policy: Box<dyn PolicyClient> = Box::new(client);
-                        actor::run_actor(actor::ActorArgs {
-                            id,
-                            cfg,
-                            dims,
-                            policy,
-                            replay: ingest,
-                            metrics,
-                            shutdown,
-                            max_rounds,
-                        })
-                    })
-                    .expect("spawn worker actor"),
-            );
-        }
-        let mut stats = Vec::new();
-        let mut errors: Vec<String> = Vec::new();
-        for j in joins {
-            match j.join().expect("actor panicked") {
-                Ok(st) => stats.push(st),
-                Err(e) => errors.push(e.to_string()),
+            let spawned = std::thread::Builder::new()
+                .name(format!("rlarch-actor-{id}"))
+                .spawn_scoped(s, move || -> anyhow::Result<ActorStats> {
+                    // The supervisor: restart-with-budget around the
+                    // whole attempt (connect + actor loop), so a panic
+                    // mid-episode reconnects from scratch.
+                    let mut restarts = 0usize;
+                    loop {
+                        let attempt =
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                actor_attempt(
+                                    addr, id, dims, opts, cfg, fault_plan, ingest,
+                                    &metrics, &shutdown, max_rounds,
+                                )
+                            }));
+                        match attempt {
+                            Ok(result) => return result,
+                            Err(p) => {
+                                restarts_c.inc();
+                                let msg = panic_msg(p.as_ref());
+                                if restarts >= restart_budget || shutdown.is_signalled() {
+                                    anyhow::bail!(
+                                        "actor {id} panicked: {msg} \
+                                         (restart budget {restart_budget} exhausted)"
+                                    );
+                                }
+                                restarts += 1;
+                                if shutdown.sleep_interruptible(backoff) {
+                                    anyhow::bail!(
+                                        "actor {id} panicked: {msg} (shutdown during backoff)"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                });
+            match spawned {
+                Ok(h) => joins.push(h),
+                Err(e) => {
+                    spawn_failures.inc();
+                    errors
+                        .lock()
+                        .unwrap()
+                        .push(format!("spawn actor {id} thread: {e}"));
+                }
             }
         }
-        (stats, errors)
+        let mut stats = Vec::new();
+        for j in joins {
+            match j.join() {
+                Ok(Ok(st)) => stats.push(st),
+                Ok(Err(e)) => errors.lock().unwrap().push(e.to_string()),
+                // The supervisor catches actor panics; reaching here
+                // means the supervisor itself died. Record, don't abort.
+                Err(p) => errors
+                    .lock()
+                    .unwrap()
+                    .push(format!("actor supervisor panicked: {}", panic_msg(p.as_ref()))),
+            }
+        }
+        stats
     });
     // All actors are down: commit the drain marker on the ingest link
     // so the coordinator logs a clean departure.
@@ -306,12 +659,14 @@ pub fn run_worker(
 
     let env_steps: u64 = actor_stats.iter().map(|a| a.env_steps).sum();
     let episodes: u64 = actor_stats.iter().map(|a| a.episodes).sum();
+    let first_error = errors.lock().unwrap().first().cloned();
     Ok(WorkerReport {
         elapsed_seconds: t0.elapsed().as_secs_f64(),
         env_steps,
         episodes,
         mean_return: weighted_mean_return(&actor_stats),
+        actor_restarts: restarts_c.get(),
         actors: actor_stats,
-        first_error: actor_errors.first().cloned(),
+        first_error,
     })
 }

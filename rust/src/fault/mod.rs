@@ -1,0 +1,358 @@
+//! Deterministic fault injection for the fleet (DESIGN.md §15).
+//!
+//! A [`FaultPlan`] is a seeded schedule of the failures a production
+//! fleet actually sees — lost and delayed frames, corrupted bytes,
+//! killed connections, stalled inference, panicking actor threads —
+//! threaded into the transport and mock-backend seams behind the
+//! `[faults]` config section. Every decision is drawn from a PCG
+//! stream derived from `faults.seed` and a per-site id, so a given
+//! plan replays exactly and every injected fault is counted in the
+//! plan's own ledger (the chaos tests assert the `fleet.*` metrics
+//! reconcile against it). With the section at its all-zero default the
+//! plan is never constructed: the seams hold an `Option` that is
+//! `None`, and the fault-free paths are bit-for-bit identical to a
+//! build without this module (pinned by the PR 9 equivalence test).
+
+use crate::config::FaultsConfig;
+use crate::util::prng::Pcg32;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// What to do with one received frame. Sampled per frame in a fixed
+/// order (kill, drop, delay, truncate, corrupt) so a schedule replays
+/// bit-for-bit for a given (seed, site, connection epoch) triple.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameFault {
+    /// No fault: process the frame normally.
+    Deliver,
+    /// Kill the connection outright (the peer sees EOF and recovers).
+    Kill,
+    /// Silently discard the frame (a lost packet; the client's ticket
+    /// deadline is the mechanism that notices).
+    Drop,
+    /// Hold the frame for the configured delay, then deliver it.
+    Delay(Duration),
+    /// Truncate the frame bytes before parsing (always rejected).
+    Truncate,
+    /// Flip the header magic before parsing (always rejected).
+    Corrupt,
+}
+
+/// Ledger of everything a plan injected, by kind. The chaos soak
+/// asserts the `fleet.*` metrics account for every entry.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct InjectedFaults {
+    pub killed: u64,
+    pub dropped: u64,
+    pub delayed: u64,
+    pub truncated: u64,
+    pub corrupted: u64,
+    pub stalled: u64,
+    pub panics: u64,
+}
+
+/// The seeded fault schedule, shared by every seam (`Arc`). Holds the
+/// configured rates plus the atomic injection ledger; per-connection
+/// randomness lives in the [`ConnFaults`] handles it hands out.
+pub struct FaultPlan {
+    cfg: FaultsConfig,
+    killed: AtomicU64,
+    dropped: AtomicU64,
+    delayed: AtomicU64,
+    truncated: AtomicU64,
+    corrupted: AtomicU64,
+    stalled: AtomicU64,
+    panics: AtomicU64,
+    /// The actor panic fires exactly once per plan: a restarted actor
+    /// must make progress, not re-panic forever, so the supervisor's
+    /// restart count under this plan is deterministic.
+    panic_fired: AtomicBool,
+    /// Per-site connection epochs: each reconnection of a site draws
+    /// the next stream in that site's seeded chain. Without this, a
+    /// schedule that breaks a connection on its first frame would
+    /// replay identically on every retry and livelock the site.
+    epochs: Mutex<HashMap<u64, u64>>,
+}
+
+impl FaultPlan {
+    /// Build the shared plan, or `None` when the config is all-off —
+    /// the seams then cost one `Option` check and the wire paths stay
+    /// bit-for-bit the fault-free ones.
+    pub fn from_config(cfg: &FaultsConfig) -> Option<Arc<FaultPlan>> {
+        cfg.enabled().then(|| {
+            Arc::new(FaultPlan {
+                cfg: cfg.clone(),
+                killed: AtomicU64::new(0),
+                dropped: AtomicU64::new(0),
+                delayed: AtomicU64::new(0),
+                truncated: AtomicU64::new(0),
+                corrupted: AtomicU64::new(0),
+                stalled: AtomicU64::new(0),
+                panics: AtomicU64::new(0),
+                panic_fired: AtomicBool::new(false),
+                epochs: Mutex::new(HashMap::new()),
+            })
+        })
+    }
+
+    /// The per-site frame-fault stream for connection site `site`
+    /// (infer connections use `actor_id + 1`, ingest uses 0). The
+    /// stream depends only on (seed, site, per-site epoch) — the
+    /// epoch is how many connections the site has opened before, so
+    /// accept order *across* sites never matters, while a reconnected
+    /// site advances to the next stream in its chain instead of
+    /// replaying the fate that just killed it.
+    pub fn conn(self: &Arc<Self>, site: u64) -> ConnFaults {
+        let epoch = {
+            let mut g = self.epochs.lock().unwrap();
+            let e = g.entry(site).or_insert(0);
+            let cur = *e;
+            *e += 1;
+            cur
+        };
+        let mut sm = crate::util::prng::SplitMix64::new(self.cfg.seed ^ site);
+        let mut state = sm.next_u64();
+        for _ in 0..epoch {
+            state = sm.next_u64();
+        }
+        ConnFaults {
+            rng: Pcg32::new(state, site.wrapping_mul(2).wrapping_add(1)),
+            plan: self.clone(),
+        }
+    }
+
+    /// The mock-inference stall schedule, if configured:
+    /// `(rate, stall, seed)` for [`crate::runtime::MockModel`]'s seam.
+    pub fn infer_stall(&self) -> Option<(f64, Duration, u64)> {
+        (self.cfg.stall_rate > 0.0).then(|| {
+            (
+                self.cfg.stall_rate,
+                Duration::from_millis(self.cfg.stall_ms),
+                self.cfg.seed,
+            )
+        })
+    }
+
+    /// The submit round at which fleet-global actor `id` should panic,
+    /// if this plan targets it.
+    pub fn actor_panic_at(&self, id: usize) -> Option<u64> {
+        (self.cfg.panic_actor >= 0 && self.cfg.panic_actor as usize == id)
+            .then_some(self.cfg.panic_at_step)
+    }
+
+    /// Claim the one-shot actor panic. True exactly once per plan.
+    pub fn take_panic(&self) -> bool {
+        let first = !self.panic_fired.swap(true, Ordering::AcqRel);
+        if first {
+            self.panics.fetch_add(1, Ordering::Relaxed);
+        }
+        first
+    }
+
+    /// Record an injected mock-inference stall (the model's seam calls
+    /// this so the ledger covers every kind).
+    pub fn note_stall(&self) {
+        self.stalled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot the injection ledger.
+    pub fn injected(&self) -> InjectedFaults {
+        InjectedFaults {
+            killed: self.killed.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            delayed: self.delayed.load(Ordering::Relaxed),
+            truncated: self.truncated.load(Ordering::Relaxed),
+            corrupted: self.corrupted.load(Ordering::Relaxed),
+            stalled: self.stalled.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One connection's handle on the plan: a private PCG stream plus the
+/// shared ledger. Lives in the server's per-connection reader.
+pub struct ConnFaults {
+    rng: Pcg32,
+    plan: Arc<FaultPlan>,
+}
+
+impl ConnFaults {
+    /// Decide the fate of the next received frame and record it in the
+    /// ledger. Exactly one fault (the first that fires in kill → drop
+    /// → delay → truncate → corrupt order) applies per frame.
+    pub fn sample(&mut self) -> FrameFault {
+        let cfg = &self.plan.cfg;
+        if cfg.kill_rate > 0.0 && self.rng.chance(cfg.kill_rate) {
+            self.plan.killed.fetch_add(1, Ordering::Relaxed);
+            return FrameFault::Kill;
+        }
+        if cfg.drop_rate > 0.0 && self.rng.chance(cfg.drop_rate) {
+            self.plan.dropped.fetch_add(1, Ordering::Relaxed);
+            return FrameFault::Drop;
+        }
+        if cfg.delay_rate > 0.0 && self.rng.chance(cfg.delay_rate) {
+            self.plan.delayed.fetch_add(1, Ordering::Relaxed);
+            return FrameFault::Delay(Duration::from_millis(cfg.delay_ms));
+        }
+        if cfg.truncate_rate > 0.0 && self.rng.chance(cfg.truncate_rate) {
+            self.plan.truncated.fetch_add(1, Ordering::Relaxed);
+            return FrameFault::Truncate;
+        }
+        if cfg.corrupt_rate > 0.0 && self.rng.chance(cfg.corrupt_rate) {
+            self.plan.corrupted.fetch_add(1, Ordering::Relaxed);
+            return FrameFault::Corrupt;
+        }
+        FrameFault::Deliver
+    }
+
+    /// Apply a byte-mutating fault to a copy of the frame. `Truncate`
+    /// cuts at a random point strictly inside the frame (possibly
+    /// inside the header); `Corrupt` flips the magic, which
+    /// `parse_header` always rejects — both are *guaranteed* to be
+    /// refused by the defensive decoder, which is what makes
+    /// `fleet.bad_frames` reconcile exactly against the ledger.
+    pub fn mutate(&mut self, bytes: &mut Vec<u8>, fault: FrameFault) {
+        match fault {
+            FrameFault::Truncate => {
+                let keep = self.rng.index(bytes.len().max(1));
+                bytes.truncate(keep);
+            }
+            FrameFault::Corrupt => {
+                if !bytes.is_empty() {
+                    bytes[0] ^= 0x5A;
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(cfg: FaultsConfig) -> Arc<FaultPlan> {
+        FaultPlan::from_config(&cfg).expect("enabled plan")
+    }
+
+    #[test]
+    fn disabled_config_builds_no_plan() {
+        assert!(FaultPlan::from_config(&FaultsConfig::default()).is_none());
+        let on = FaultsConfig {
+            corrupt_rate: 0.5,
+            ..Default::default()
+        };
+        assert!(FaultPlan::from_config(&on).is_some());
+    }
+
+    #[test]
+    fn schedules_replay_for_the_same_seed_and_site() {
+        let cfg = FaultsConfig {
+            seed: 7,
+            drop_rate: 0.2,
+            delay_rate: 0.2,
+            kill_rate: 0.05,
+            truncate_rate: 0.1,
+            corrupt_rate: 0.1,
+            ..Default::default()
+        };
+        let (pa, pb) = (plan(cfg.clone()), plan(cfg));
+        let mut a = pa.conn(3);
+        let mut b = pb.conn(3);
+        let sa: Vec<FrameFault> = (0..256).map(|_| a.sample()).collect();
+        let sb: Vec<FrameFault> = (0..256).map(|_| b.sample()).collect();
+        assert_eq!(sa, sb);
+        assert_eq!(pa.injected(), pb.injected());
+        // A different site draws a different (still seeded) schedule.
+        let mut c = pa.conn(4);
+        let sc: Vec<FrameFault> = (0..256).map(|_| c.sample()).collect();
+        assert_ne!(sa, sc);
+        // A reconnection of the same site advances to the next epoch:
+        // a fresh stream (no first-frame livelock), but still the same
+        // stream on both plans (replayable).
+        let mut a2 = pa.conn(3);
+        let mut b2 = pb.conn(3);
+        let sa2: Vec<FrameFault> = (0..256).map(|_| a2.sample()).collect();
+        let sb2: Vec<FrameFault> = (0..256).map(|_| b2.sample()).collect();
+        assert_eq!(sa2, sb2);
+        assert_ne!(sa, sa2, "epoch 1 must not replay epoch 0");
+    }
+
+    #[test]
+    fn ledger_counts_every_sampled_fault() {
+        let p = plan(FaultsConfig {
+            seed: 11,
+            drop_rate: 0.5,
+            ..Default::default()
+        });
+        let mut c = p.conn(1);
+        let dropped = (0..1000)
+            .filter(|_| c.sample() == FrameFault::Drop)
+            .count() as u64;
+        assert!(dropped > 0);
+        assert_eq!(p.injected().dropped, dropped);
+        assert_eq!(p.injected().killed, 0);
+    }
+
+    #[test]
+    fn mutations_are_always_rejected_by_the_decoder() {
+        let p = plan(FaultsConfig {
+            seed: 5,
+            truncate_rate: 1.0,
+            ..Default::default()
+        });
+        let mut c = p.conn(0);
+        let mut buf = Vec::new();
+        for i in 0..64u64 {
+            crate::transport::frame::encode_submit(
+                &mut buf,
+                i,
+                1,
+                &[1.0, 2.0],
+                &[3.0],
+                &[4.0],
+            );
+            let mut frame = buf[4..].to_vec();
+            let fault = if i % 2 == 0 {
+                FrameFault::Truncate
+            } else {
+                FrameFault::Corrupt
+            };
+            c.mutate(&mut frame, fault);
+            let rejected = match crate::transport::frame::parse_header(&frame) {
+                Err(_) => true,
+                Ok(hd) => {
+                    let (mut o, mut h, mut cc) =
+                        (Vec::new(), Vec::new(), Vec::new());
+                    crate::transport::frame::decode_submit(
+                        crate::transport::frame::payload(&frame),
+                        hd.rows as usize,
+                        2,
+                        1,
+                        &mut o,
+                        &mut h,
+                        &mut cc,
+                    )
+                    .is_err()
+                }
+            };
+            assert!(rejected, "mutated frame {i} must not decode");
+        }
+    }
+
+    #[test]
+    fn actor_panic_is_one_shot_and_targeted() {
+        let p = plan(FaultsConfig {
+            panic_actor: 2,
+            panic_at_step: 5,
+            ..Default::default()
+        });
+        assert_eq!(p.actor_panic_at(2), Some(5));
+        assert_eq!(p.actor_panic_at(1), None);
+        assert!(p.take_panic());
+        assert!(!p.take_panic(), "panic fires exactly once per plan");
+        assert_eq!(p.injected().panics, 1);
+    }
+}

@@ -57,10 +57,22 @@
 //!   backpressure (bounded in-flight rows, shed-and-retry), reconnect
 //!   with backoff, and clean drain. `[fleet]` addresses empty (the
 //!   default) = single-process mode, bit-for-bit the seed path.
+//! * [`fault`] — deterministic fault injection (DESIGN.md §15): a
+//!   seeded `FaultPlan` (`[faults]` config, all rates default 0.0 =
+//!   bit-for-bit off) drives drop/delay/truncate/corrupt/kill on wire
+//!   frames, stalled mock replies, and one-shot actor panics from
+//!   per-`(seed, site, connection-epoch)` streams, with an injected-
+//!   fault ledger the chaos soak reconciles against transport
+//!   counters. The fault-*tolerance* half lives where the faults land:
+//!   heartbeat/liveness/deadline state machines in [`transport`],
+//!   restart-with-budget supervision and checkpoint/restore with a
+//!   generation fence in [`coordinator`].
 //! * [`simarch`] — the architectural simulator (GPU/CPU/power models);
 //!   its system model carries the same `envs_per_actor` and
 //!   `pipeline_depth` axes, plus fleet network terms (`net_rtt_s`,
-//!   bandwidth) that default to the in-process identity.
+//!   bandwidth) and a fault availability term (`fault_rate` ×
+//!   `fault_recovery_s`) that default to the in-process, fault-free
+//!   identity.
 //! * [`telemetry`] — the observability layer (DESIGN.md §12): striped
 //!   hot-path timers (in [`metrics`]), lock-free per-thread span rings
 //!   rendered as Chrome trace JSON (`--trace-out`), and a background
@@ -78,6 +90,7 @@ pub mod config;
 pub mod coordinator;
 pub mod env;
 pub mod exec;
+pub mod fault;
 pub mod metrics;
 pub mod policy;
 pub mod replay;

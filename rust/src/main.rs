@@ -17,7 +17,7 @@
 //! PJRT; the simulator subcommands consume `artifacts/kernel_trace.json`.
 
 use rlarch::cli::Cli;
-use rlarch::config::{InferenceMode, SystemConfig};
+use rlarch::config::{FaultsConfig, InferenceMode, SystemConfig};
 use rlarch::coordinator;
 use rlarch::metrics::Registry;
 use rlarch::report::figure::{ascii_bar, Table};
@@ -378,6 +378,26 @@ fn cmd_serve(args: &[String]) -> i32 {
         "0",
         "override fleet.max_inflight_rows (per-connection shed budget)",
     )
+    .flag(
+        "liveness-ms",
+        "",
+        "override fleet.liveness_timeout_ms (reap silent connections; 0 = off)",
+    )
+    .flag(
+        "checkpoint-dir",
+        "",
+        "override fleet.checkpoint_dir (snapshot learner state here; resumes if present)",
+    )
+    .flag(
+        "checkpoint-every",
+        "0",
+        "override fleet.checkpoint_every (trained batches between snapshots)",
+    )
+    .flag(
+        "faults",
+        "",
+        "fault plan spec, e.g. seed=7,corrupt_rate=0.02,stall_rate=0.01 ([faults] keys)",
+    )
     .flag("env", "", "override env (grid_pong|breakout|catch|nav_maze)")
     .flag(
         "backend",
@@ -402,6 +422,21 @@ fn cmd_serve(args: &[String]) -> i32 {
             if n > 0 {
                 cfg.fleet.max_inflight_rows = n;
             }
+        }
+        if !parsed.get("liveness-ms").is_empty() {
+            cfg.fleet.liveness_timeout_ms = parsed.get_u64("liveness-ms")?;
+        }
+        if !parsed.get("checkpoint-dir").is_empty() {
+            cfg.fleet.checkpoint_dir = parsed.get("checkpoint-dir").to_string();
+        }
+        if let Ok(n) = parsed.get_u64("checkpoint-every") {
+            if n > 0 {
+                cfg.fleet.checkpoint_every = n;
+            }
+        }
+        if !parsed.get("faults").is_empty() {
+            cfg.faults = FaultsConfig::from_spec(parsed.get("faults"))
+                .map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
         }
         let mut _server = None;
         let backend = match parsed.get("backend") {
@@ -442,6 +477,28 @@ fn cmd_serve(args: &[String]) -> i32 {
             report.shed_rows,
             report.mean_batch_occupancy
         );
+        if report.generation > 0 {
+            println!(
+                "checkpointing: generation {} ({} snapshot(s), resumed from step {})",
+                report.generation, report.checkpoints, report.resumed_steps
+            );
+        }
+        if let Some(inj) = &report.injected {
+            println!(
+                "fault injection: killed {} dropped {} delayed {} truncated {} \
+                 corrupted {} stalled {} panics {}",
+                inj.killed,
+                inj.dropped,
+                inj.delayed,
+                inj.truncated,
+                inj.corrupted,
+                inj.stalled,
+                inj.panics
+            );
+        }
+        if let Some(e) = &report.first_error {
+            println!("first fleet error: {e}");
+        }
         anyhow::ensure!(
             report.batcher_errors == 0,
             "{} batcher error(s) during the run",
@@ -483,6 +540,26 @@ fn cmd_actor(args: &[String]) -> i32 {
         "",
         "stop after this many env rounds (default: run until server drain)",
     )
+    .flag(
+        "heartbeat-ms",
+        "",
+        "override fleet.heartbeat_interval_ms (ping the server when idle; 0 = off)",
+    )
+    .flag(
+        "liveness-ms",
+        "",
+        "override fleet.liveness_timeout_ms (per-ticket deadline floor; 0 = off)",
+    )
+    .flag(
+        "actor-restarts",
+        "",
+        "override fleet.actor_restart_budget (supervisor restarts per actor)",
+    )
+    .flag(
+        "faults",
+        "",
+        "fault plan spec, e.g. seed=7,panic_actor=0,panic_at_step=3 ([faults] keys)",
+    )
     .flag("env", "", "override env (must match the server's)");
     let parsed = match cli.parse(args) {
         Ok(p) => p,
@@ -503,6 +580,19 @@ fn cmd_actor(args: &[String]) -> i32 {
             "" => None,
             _ => Some(parsed.get_u64("max-rounds")?),
         };
+        if !parsed.get("heartbeat-ms").is_empty() {
+            cfg.fleet.heartbeat_interval_ms = parsed.get_u64("heartbeat-ms")?;
+        }
+        if !parsed.get("liveness-ms").is_empty() {
+            cfg.fleet.liveness_timeout_ms = parsed.get_u64("liveness-ms")?;
+        }
+        if !parsed.get("actor-restarts").is_empty() {
+            cfg.fleet.actor_restart_budget = parsed.get_usize("actor-restarts")?;
+        }
+        if !parsed.get("faults").is_empty() {
+            cfg.faults = FaultsConfig::from_spec(parsed.get("faults"))
+                .map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
+        }
         // Workers carry no backend: dims derive from the shared config
         // (mock convention) and the handshake validates them against
         // the server's actual model.
@@ -525,8 +615,13 @@ fn cmd_actor(args: &[String]) -> i32 {
             Registry::new(),
         )?;
         println!(
-            "worker done in {:.1}s: {} env steps, {} episodes, mean return {:.2}",
-            report.elapsed_seconds, report.env_steps, report.episodes, report.mean_return
+            "worker done in {:.1}s: {} env steps, {} episodes, mean return {:.2}, \
+             {} supervisor restart(s)",
+            report.elapsed_seconds,
+            report.env_steps,
+            report.episodes,
+            report.mean_return,
+            report.actor_restarts
         );
         match &report.first_error {
             Some(e) if report.env_steps == 0 => {

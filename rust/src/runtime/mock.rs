@@ -11,7 +11,18 @@
 use super::{InferReply, InferRequest, InferSlices, ModelDims, TrainBatch, TrainReply};
 use crate::util::prng::Pcg32;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+
+/// Seeded inference-stall schedule (DESIGN.md §15): with probability
+/// `rate` per call, sleep `stall` before computing — the mock-backend
+/// seam for the fault plan's `stall_rate`. Deterministic draw per call
+/// in call order; every fired stall is reported to the plan's ledger.
+struct StallState {
+    rng: Pcg32,
+    rate: f64,
+    stall: std::time::Duration,
+    plan: Arc<crate::fault::FaultPlan>,
+}
 
 pub struct MockModel {
     dims: ModelDims,
@@ -30,6 +41,9 @@ pub struct MockModel {
     /// Optional injected inference/train failures (failure-path tests).
     infer_error: Mutex<Option<String>>,
     train_error: Mutex<Option<String>>,
+    /// Optional seeded inference stalls (armed by a fault plan; `None`
+    /// is the bit-for-bit fault-free path).
+    infer_stall: Mutex<Option<StallState>>,
 }
 
 impl MockModel {
@@ -49,6 +63,7 @@ impl MockModel {
             train_latency: Mutex::new(std::time::Duration::ZERO),
             infer_error: Mutex::new(None),
             train_error: Mutex::new(None),
+            infer_stall: Mutex::new(None),
         }
     }
 
@@ -87,6 +102,40 @@ impl MockModel {
     pub fn with_train_error(self, msg: &str) -> Self {
         *self.train_error.lock().unwrap() = Some(msg.to_string());
         self
+    }
+
+    /// Arm the seeded inference-stall seam from a fault plan
+    /// (non-consuming: the model is usually already behind an `Arc`
+    /// inside a [`super::Backend`] when the plan is wired in).
+    pub fn set_infer_stall(&self, plan: &Arc<crate::fault::FaultPlan>) {
+        *self.infer_stall.lock().unwrap() =
+            plan.infer_stall().map(|(rate, stall, seed)| StallState {
+                // A dedicated stream id keeps the stall schedule
+                // independent of the transport's per-site streams.
+                rng: Pcg32::new(seed, 0x57A11),
+                rate,
+                stall,
+                plan: plan.clone(),
+            });
+    }
+
+    /// Fast-forward the train-step counter (checkpoint resume: the
+    /// restored learner continues the loss/priority schedule from
+    /// where the snapshot left it).
+    pub fn set_steps(&self, steps: u64) {
+        self.step.store(steps, Ordering::Relaxed);
+    }
+
+    /// The mock's learned state as tensors (checkpointing): the fixed
+    /// projection and the recurrence decay, in a stable order.
+    pub fn params(&self) -> Vec<crate::runtime::Tensor> {
+        vec![
+            crate::runtime::Tensor::from_f32(
+                vec![self.dims.obs_len, self.dims.num_actions],
+                self.w_obs.clone(),
+            ),
+            crate::runtime::Tensor::from_f32(vec![self.dims.hidden], self.decay.clone()),
+        ]
     }
 
     pub fn dims(&self) -> ModelDims {
@@ -163,6 +212,12 @@ impl MockModel {
         let lat = *self.infer_latency.lock().unwrap();
         if !lat.is_zero() {
             std::thread::sleep(lat);
+        }
+        if let Some(st) = self.infer_stall.lock().unwrap().as_mut() {
+            if st.rng.chance(st.rate) {
+                st.plan.note_stall();
+                std::thread::sleep(st.stall);
+            }
         }
         out.q.clear();
         out.q.resize(req.n * d.num_actions, 0.0);

@@ -19,6 +19,12 @@ enum ActorState {
     /// Reply in transit on the fleet transport until this timestamp
     /// (only entered when the model carries a non-zero network term).
     NetDelay(f64),
+    /// Stalled recovering from an injected fault until the first
+    /// timestamp, carrying the group's preserved remaining env work —
+    /// 0 when the fault struck a pending submission, which is lost and
+    /// resubmitted after recovery (only entered when the model carries
+    /// a non-zero fault rate).
+    Recovering(f64, f64),
 }
 
 /// DES results over the measurement window.
@@ -69,6 +75,27 @@ pub fn simulate(model: &SystemModel, n: usize, sim_seconds: f64, dt: f64) -> Des
     // the in-process deployment, in which case the NetDelay state is
     // never entered and the simulation is bit-for-bit the seed path.
     let t_net = model.net_round_trip_s(rows_per_group);
+    // Fault clocks (DESIGN.md §15): with a non-zero fault rate each
+    // actor thread draws a fault every 1/rate seconds of wall-clock,
+    // staggered across threads so recoveries do not synchronize. A
+    // fault kills the thread's link: groups stepping env work stall in
+    // place for the recovery time (their progress survives — the
+    // ticket deadline resubmits the same observations), groups waiting
+    // in the batcher lose the in-flight submission and resubmit it
+    // after recovery, and a reply already in GPU service survives (the
+    // scatter lands before the reconnect). Recovery consumes no CPU —
+    // the thread is blocked on the transport, not working. At the
+    // default rate 0 no clock exists and the simulation is bit-for-bit
+    // the fault-free path.
+    let fault_period = if model.fault_rate > 0.0 {
+        1.0 / model.fault_rate
+    } else {
+        f64::INFINITY
+    };
+    let t_recover = model.fault_recovery_s.max(0.0);
+    let mut next_fault: Vec<f64> = (0..n)
+        .map(|t| fault_period * (t as f64 + 1.0) / n.max(1) as f64)
+        .collect();
     let t_train_cycle = model.train_cycle().max(t_train);
     let train_busy_frac = if t_train_cycle > 0.0 {
         (t_train / t_train_cycle).min(1.0)
@@ -112,6 +139,43 @@ pub fn simulate(model: &SystemModel, n: usize, sim_seconds: f64, dt: f64) -> Des
                 if let ActorState::NetDelay(until) = a {
                     if now >= *until {
                         *a = ActorState::EnvWork(t_cycle_env);
+                    }
+                }
+            }
+        }
+
+        // 0b) Faults: release recovered agents, then stall due threads.
+        if fault_period.is_finite() {
+            for i in 0..agents.len() {
+                if let ActorState::Recovering(until, rem) = agents[i] {
+                    if now >= until {
+                        agents[i] = if rem > 0.0 {
+                            ActorState::EnvWork(rem)
+                        } else {
+                            // The lost submission goes back to the
+                            // batcher; its env steps were already
+                            // counted when the group finished stepping.
+                            pending_rows[i] = rows_per_group;
+                            ActorState::Pending(now)
+                        };
+                    }
+                }
+            }
+            for t in 0..n {
+                if now >= next_fault[t] {
+                    next_fault[t] += fault_period;
+                    for g in 0..d {
+                        let i = t * d + g;
+                        match agents[i] {
+                            ActorState::EnvWork(rem) => {
+                                agents[i] = ActorState::Recovering(now + t_recover, rem);
+                            }
+                            ActorState::Pending(_) => {
+                                pending_rows[i] = 0.0;
+                                agents[i] = ActorState::Recovering(now + t_recover, 0.0);
+                            }
+                            _ => {}
+                        }
                     }
                 }
             }
@@ -512,6 +576,41 @@ mod tests {
             (0.5..2.0).contains(&ratio),
             "DES {} vs analytic {} (ratio {ratio})",
             delayed.env_rate,
+            ana.env_rate
+        );
+    }
+
+    #[test]
+    fn des_fault_identity_at_zero_and_recovery_costs_rate() {
+        // Zero fault rate (the default): no fault clock exists and the
+        // Recovering state is never entered, so the deterministic
+        // simulation must agree exactly with the fault-free path. A
+        // real fault rate must cost simulated rate — threads stall for
+        // the recovery time on every fault — and stay structurally
+        // close to the analytic model carrying the same availability
+        // term.
+        let base = model().with_envs_per_actor(8);
+        let a = simulate(&base, 4, 0.25, 20e-6);
+        let b = simulate(&base.with_faults(0.0, 0.0), 4, 0.25, 20e-6);
+        assert_eq!(a.env_rate, b.env_rate);
+        assert_eq!(a.gpu_util, b.gpu_util);
+        assert_eq!(a.mean_batch, b.mean_batch);
+
+        // 20 faults/s x 20ms recovery: a 40% availability dilation.
+        let flaky = base.with_faults(20.0, 0.02);
+        let stalled = simulate(&flaky, 4, 0.25, 20e-6);
+        assert!(
+            stalled.env_rate < a.env_rate,
+            "20 faults/s x 20ms recovery must cost DES rate: {} vs {}",
+            stalled.env_rate,
+            a.env_rate
+        );
+        let ana = flaky.steady_state(4);
+        let ratio = stalled.env_rate / ana.env_rate;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "DES {} vs analytic {} (ratio {ratio})",
+            stalled.env_rate,
             ana.env_rate
         );
     }

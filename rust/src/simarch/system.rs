@@ -131,6 +131,17 @@ pub struct SystemModel {
     /// Link bandwidth in bytes/second; 0 (the default) = no bandwidth
     /// term (infinite link), keeping the identity exact.
     pub net_bandwidth_bps: f64,
+    /// Fault arrivals per actor thread, faults/second — the
+    /// fault-tolerance layer's availability term (DESIGN.md §15):
+    /// reaped heartbeats, killed links, ticket-deadline resubmissions,
+    /// supervised actor restarts. 0 (the default) models the
+    /// fault-free deployment — the identity, bit-for-bit.
+    pub fault_rate: f64,
+    /// Wall-clock seconds one fault stalls the afflicted actor thread:
+    /// detection (liveness timeout or ticket deadline), the reconnect
+    /// handshake, and resubmission of the lost round. Only meaningful
+    /// with a non-zero `fault_rate`.
+    pub fault_recovery_s: f64,
 }
 
 /// One steady-state operating point.
@@ -277,6 +288,15 @@ impl SystemModel {
         self.net_rtt_s.max(0.0) + transfer
     }
 
+    /// Availability dilation of the fault model: each actor thread
+    /// loses `fault_rate * fault_recovery_s` seconds of progress per
+    /// second of wall-clock (renewal-reward over the fault arrivals),
+    /// so every env step effectively takes `1 + rate * recovery` times
+    /// longer. Exactly 1 at the default zero rate — the identity.
+    pub fn fault_slowdown(&self) -> f64 {
+        1.0 + self.fault_rate.max(0.0) * self.fault_recovery_s.max(0.0)
+    }
+
     /// Solve the steady state for `n` actor threads (damped fixed
     /// point). Each thread drives `envs_per_actor` environments in
     /// lockstep: a thread's cycle is E serial env steps plus one
@@ -289,10 +309,13 @@ impl SystemModel {
         let d = (self.pipeline_depth.max(1) as f64).min(e);
         // Ideal per-step CPU time: the env step itself plus the
         // (amortized) replay-ingest and per-call dispatch shares of
-        // each step.
-        let t_env = self.cpu.step_cost_us() * 1e-6
+        // each step. Fault-recovery stalls ride on the thread's cycle,
+        // dilating every step by the availability factor (exactly 1 at
+        // the default zero fault rate — the identity).
+        let t_env = (self.cpu.step_cost_us() * 1e-6
             + self.insert_overhead_s()
-            + self.env_dispatch_term();
+            + self.env_dispatch_term())
+            * self.fault_slowdown();
         let t_train = self.train_time();
         // Learner-side cap: train steps complete one per train cycle
         // (GPU step + CPU sample/assemble, overlapped when prefetching),
@@ -520,6 +543,16 @@ impl SystemModel {
         m
     }
 
+    /// Clone with fault-tolerance availability terms (faults per
+    /// actor-thread-second, recovery seconds per fault; both 0 = the
+    /// fault-free identity).
+    pub fn with_faults(&self, rate: f64, recovery_s: f64) -> Self {
+        let mut m = self.clone();
+        m.fault_rate = rate.max(0.0);
+        m.fault_recovery_s = recovery_s.max(0.0);
+        m
+    }
+
     /// CPU/GPU ratio of this configuration (the paper's design metric).
     pub fn cpu_gpu_ratio(&self) -> f64 {
         self.cpu.cfg.hw_threads as f64 / self.gpu.cfg.num_sms as f64
@@ -583,6 +616,14 @@ pub fn default_system(infer_trace: Trace, train_trace: Trace) -> SystemModel {
         net_rtt_s: 0.0,
         net_bytes_per_row: 0.0,
         net_bandwidth_bps: 0.0,
+        // 0 until a measured fault/recovery profile exists from a chaos
+        // soak on a toolchain-equipped host (provenance rule: no
+        // invented numbers) — at 0 the model is the fault-free
+        // deployment, keeping the Fig. 3/4 baselines untouched. The
+        // `[faults]` execution knobs are per-frame probabilities, not
+        // per-second rates, so no automatic mapping is attempted.
+        fault_rate: 0.0,
+        fault_recovery_s: 0.0,
     }
 }
 
@@ -1012,6 +1053,55 @@ mod tests {
         // 8 rows * 1000 B / 1e6 B/s = 8 ms of transfer + 1 ms fixed.
         assert!((m.net_round_trip_s(8.0) - 9e-3).abs() < 1e-12);
         assert!((m.net_round_trip_s(0.0) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn faults_zero_is_the_identity() {
+        // The defaults model the fault-free deployment: the explicit
+        // zero-fault clone must be bit-identical, and the availability
+        // factor must be exactly 1.
+        let m = model().with_envs_per_actor(8);
+        assert_eq!(m.fault_slowdown(), 1.0);
+        let a = m.steady_state(16);
+        let b = m.with_faults(0.0, 0.0).steady_state(16);
+        assert_eq!(a.env_rate, b.env_rate);
+        assert_eq!(a.batch_size, b.batch_size);
+        assert_eq!(a.rtt_s, b.rtt_s);
+        // A fault rate with a zero recovery cost is still free.
+        let c = m.with_faults(0.5, 0.0).steady_state(16);
+        assert_eq!(a.env_rate, c.env_rate);
+        assert_eq!(a.rtt_s, c.rtt_s);
+    }
+
+    #[test]
+    fn fault_recovery_lowers_rate_and_dilation_bounds_the_damage() {
+        // Each fault stalls a thread for the recovery time, so useful
+        // rate must fall, monotonically in the rate × recovery product
+        // — and the availability dilation bounds how far it can fall
+        // (a stall is not a collapse).
+        let m = model().with_envs_per_actor(8);
+        let clean = m.steady_state(4);
+        let flaky = m.with_faults(0.5, 0.2).steady_state(4); // 10% lost
+        let broken = m.with_faults(2.0, 0.5).steady_state(4); // 2x dilation
+        assert!(
+            flaky.env_rate < clean.env_rate,
+            "0.5 faults/s x 200ms must cost rate: {} vs {}",
+            flaky.env_rate,
+            clean.env_rate
+        );
+        assert!(
+            broken.env_rate < flaky.env_rate,
+            "2 faults/s x 500ms must cost more: {} vs {}",
+            broken.env_rate,
+            flaky.env_rate
+        );
+        let dilation = m.with_faults(2.0, 0.5).fault_slowdown();
+        assert!(
+            broken.env_rate > clean.env_rate / dilation * 0.5,
+            "a 2x dilation cannot collapse the system: {} vs clean {}",
+            broken.env_rate,
+            clean.env_rate
+        );
     }
 
     #[test]

@@ -23,7 +23,7 @@
 //!   worker's shutdown token so every local actor thread winds down.
 
 use super::frame::{self, FrameKind, Role};
-use super::{dial, Addr, FrameReader, ReadOutcome, Stream};
+use super::{dial, Addr, DeadlineEwma, FrameReader, Heartbeat, ReadOutcome, Stream};
 use crate::exec::ShutdownToken;
 use crate::metrics::{Counter, Gauge, Registry, Timer};
 use crate::policy::PolicyClient;
@@ -39,9 +39,20 @@ use std::time::{Duration, Instant};
 /// inference failure.
 pub const SHED_PREFIX: &str = "shed:";
 
+/// Prefix of the handshake-refusal message a restarted server sends a
+/// worker synced to a previous incarnation. Clients resync by
+/// re-handshaking at generation 0.
+pub const STALE_GEN_PREFIX: &str = "stale generation";
+
 /// How long a blocked read may hold the socket before the reader polls
 /// the shutdown token (partial frames resume across these slices).
 const READ_SLICE: Duration = Duration::from_millis(50);
+
+/// Ticket deadlines arm at this multiple of the smoothed round-trip
+/// time (floored by `fleet.liveness_timeout_ms`): late enough that
+/// batching jitter never fires it, early enough to notice a dead
+/// server inside a few RTTs.
+const DEADLINE_RTT_MULT: f64 = 4.0;
 
 /// Connection knobs shared by both worker-side endpoints (mirrors the
 /// `[fleet]` config section).
@@ -51,6 +62,14 @@ pub struct RemoteClientOpts {
     pub connect_retries: usize,
     /// Initial re-dial backoff; doubles per attempt, capped at 2 s.
     pub backoff_ms: u64,
+    /// Send a `Ping` after this much quiet on the infer connection
+    /// (0 = never; pair with the server's liveness window).
+    pub heartbeat_ms: u64,
+    /// Per-ticket reply deadline floor; 0 disables deadlines. The
+    /// armed deadline is `max(this, DEADLINE_RTT_MULT * ewma-rtt)` —
+    /// a lapsed deadline reconnects and resubmits rather than erroring
+    /// (at-least-once, same as any broken-socket recovery).
+    pub liveness_ms: u64,
 }
 
 impl Default for RemoteClientOpts {
@@ -58,6 +77,8 @@ impl Default for RemoteClientOpts {
         Self {
             connect_retries: 40,
             backoff_ms: 50,
+            heartbeat_ms: 0,
+            liveness_ms: 0,
         }
     }
 }
@@ -70,49 +91,66 @@ fn hello_for(role: Role, actor_id: usize, d: &ModelDims) -> frame::Hello {
         hidden: d.hidden as u32,
         num_actions: d.num_actions as u32,
         seq_len: d.seq_len as u32,
+        // Fresh connections always sync from scratch; `establish`
+        // adopts the server's generation from the ack for reconnects.
+        generation: 0,
     }
 }
 
 /// Dial + handshake: send our hello, require a dims-matching hello ack.
-/// Returns the write half and a frame reader over the read half.
+/// Returns the write half and a frame reader over the read half. The
+/// hello is mutable for the generation fence: the ack's generation is
+/// adopted (so reconnects prove they were synced to this incarnation),
+/// and a `stale generation` refusal resyncs by re-handshaking at 0.
 fn establish(
     addr: &Addr,
-    hello: &frame::Hello,
+    hello: &mut frame::Hello,
     opts: &RemoteClientOpts,
     shutdown: &ShutdownToken,
 ) -> anyhow::Result<(Stream, FrameReader)> {
-    let stream = dial(addr, opts.connect_retries, opts.backoff_ms, Some(shutdown))?;
-    stream.set_read_timeout(Some(READ_SLICE))?;
-    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
-    let mut writer = stream.try_clone()?;
-    let mut reader = FrameReader::new(stream);
-    let mut buf = Vec::new();
-    frame::encode_hello(&mut buf, hello);
-    writer.write_all(&buf)?;
-    match reader.read_frame(&|| shutdown.is_signalled())? {
-        ReadOutcome::Frame => {}
-        ReadOutcome::Eof => anyhow::bail!("server closed the connection during handshake"),
-        ReadOutcome::Stopped => anyhow::bail!("shutdown during handshake"),
+    loop {
+        let stream = dial(addr, opts.connect_retries, opts.backoff_ms, Some(shutdown))?;
+        stream.set_read_timeout(Some(READ_SLICE))?;
+        stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = FrameReader::new(stream);
+        let mut buf = Vec::new();
+        frame::encode_hello(&mut buf, hello);
+        writer.write_all(&buf)?;
+        match reader.read_frame(&|| shutdown.is_signalled())? {
+            ReadOutcome::Frame => {}
+            ReadOutcome::Eof => anyhow::bail!("server closed the connection during handshake"),
+            ReadOutcome::Stopped => anyhow::bail!("shutdown during handshake"),
+            ReadOutcome::TimedOut => anyhow::bail!("handshake timed out"),
+        }
+        let hd = frame::parse_header(reader.frame())?;
+        if hd.kind == FrameKind::ReplyErr {
+            let msg = frame::decode_reply_err(frame::payload(reader.frame()))?;
+            if msg.starts_with(STALE_GEN_PREFIX) && hello.generation != 0 {
+                // The server restarted since we last synced: resync
+                // fresh. In-flight work is resent by the caller, so
+                // nothing is lost crossing the generation fence.
+                hello.generation = 0;
+                continue;
+            }
+            anyhow::bail!("server refused connection: {msg}");
+        }
+        anyhow::ensure!(
+            hd.kind == FrameKind::Hello,
+            "expected hello ack, got {:?}",
+            hd.kind
+        );
+        let ack = frame::decode_hello(frame::payload(reader.frame()))?;
+        anyhow::ensure!(
+            ack.obs_len == hello.obs_len
+                && ack.hidden == hello.hidden
+                && ack.num_actions == hello.num_actions
+                && ack.seq_len == hello.seq_len,
+            "model dims mismatch: server acked {ack:?}, worker sent {hello:?}"
+        );
+        hello.generation = ack.generation;
+        return Ok((writer, reader));
     }
-    let hd = frame::parse_header(reader.frame())?;
-    if hd.kind == FrameKind::ReplyErr {
-        let msg = frame::decode_reply_err(frame::payload(reader.frame()))?;
-        anyhow::bail!("server refused connection: {msg}");
-    }
-    anyhow::ensure!(
-        hd.kind == FrameKind::Hello,
-        "expected hello ack, got {:?}",
-        hd.kind
-    );
-    let ack = frame::decode_hello(frame::payload(reader.frame()))?;
-    anyhow::ensure!(
-        ack.obs_len == hello.obs_len
-            && ack.hidden == hello.hidden
-            && ack.num_actions == hello.num_actions
-            && ack.seq_len == hello.seq_len,
-        "model dims mismatch: server acked {ack:?}, worker sent {hello:?}"
-    );
-    Ok((writer, reader))
 }
 
 /// One in-flight submission: the retained encoded frame is what makes
@@ -150,12 +188,20 @@ pub struct RemoteClient {
     sh: Vec<f32>,
     sc: Vec<f32>,
     next_tag: u64,
+    /// Ping scheduler (`heartbeat_ms > 0`): any write is proof of
+    /// life, so only idle connections actually ping.
+    heartbeat: Option<Heartbeat>,
+    /// Ticket-deadline estimator (`liveness_ms > 0`).
+    deadline: Option<DeadlineEwma>,
+    ping_buf: Vec<u8>,
+    ping_nonce: u64,
     tx_frames: Counter,
     tx_bytes: Counter,
     rx_frames: Counter,
     rx_bytes: Counter,
     reconnects: Counter,
     resubmits: Counter,
+    timeouts: Counter,
     rtt: Timer,
     inflight_gauge: Gauge,
 }
@@ -171,12 +217,11 @@ impl RemoteClient {
         metrics: &Registry,
         shutdown: ShutdownToken,
     ) -> anyhow::Result<Self> {
-        let hello = hello_for(Role::Infer, actor, &dims);
-        let (writer, reader) = establish(addr, &hello, &opts, &shutdown)?;
+        let mut hello = hello_for(Role::Infer, actor, &dims);
+        let (writer, reader) = establish(addr, &mut hello, &opts, &shutdown)?;
         Ok(Self {
             addr: addr.clone(),
             hello,
-            opts,
             shutdown,
             writer,
             reader,
@@ -189,12 +234,25 @@ impl RemoteClient {
             sh: Vec::new(),
             sc: Vec::new(),
             next_tag: 0,
+            heartbeat: (opts.heartbeat_ms > 0).then(|| {
+                Heartbeat::new(Duration::from_millis(opts.heartbeat_ms), Instant::now())
+            }),
+            deadline: (opts.liveness_ms > 0).then(|| {
+                DeadlineEwma::new(
+                    Duration::from_millis(opts.liveness_ms),
+                    DEADLINE_RTT_MULT,
+                )
+            }),
+            ping_buf: Vec::new(),
+            ping_nonce: 0,
+            opts,
             tx_frames: metrics.counter("fleet.tx_frames"),
             tx_bytes: metrics.counter("fleet.tx_bytes"),
             rx_frames: metrics.counter("fleet.rx_frames"),
             rx_bytes: metrics.counter("fleet.rx_bytes"),
             reconnects: metrics.counter("fleet.client_reconnects"),
             resubmits: metrics.counter("fleet.resubmits"),
+            timeouts: metrics.counter("fleet.timeouts"),
             rtt: metrics.timer("fleet.rtt_seconds"),
             inflight_gauge: metrics.gauge("policy.inflight"),
         })
@@ -212,14 +270,17 @@ impl RemoteClient {
             if self.shutdown.is_signalled() {
                 anyhow::bail!("shutdown during reconnect ({why})");
             }
-            let (w, r) = match establish(&self.addr, &self.hello, &self.opts, &self.shutdown)
-            {
-                Ok(pair) => pair,
-                Err(_) => continue 'attempt,
-            };
+            let (w, r) =
+                match establish(&self.addr, &mut self.hello, &self.opts, &self.shutdown) {
+                    Ok(pair) => pair,
+                    Err(_) => continue 'attempt,
+                };
             self.writer = w;
             self.reader = r;
             self.reconnects.inc();
+            if let Some(hb) = &mut self.heartbeat {
+                hb.sent(Instant::now());
+            }
             while let Some(b) = self.stash.pop() {
                 self.stash_free.push(b);
             }
@@ -344,6 +405,10 @@ impl PolicyClient for RemoteClient {
         let wrote = self.writer.write_all(&buf);
         self.tx_frames.inc();
         self.tx_bytes.add(buf.len() as u64);
+        if let Some(hb) = &mut self.heartbeat {
+            // Any frame is proof of life: submissions defer the ping.
+            hb.sent(Instant::now());
+        }
         self.inflight[ticket] = Some(Pending {
             rows,
             tag,
@@ -417,10 +482,52 @@ impl PolicyClient for RemoteClient {
         let sd = self.shutdown.clone();
         let stop = move || sd.is_signalled();
         while done < n {
-            match self.reader.read_frame(&stop) {
+            // The wake-up is the earlier of this ticket's deadline and
+            // the next owed heartbeat; both paths reuse buffers and
+            // counters only (zero-alloc, `micro_transport` gate).
+            let deadline_at = self.deadline.as_ref().map(|dl| {
+                self.inflight[ticket].as_ref().expect("in flight").t0 + dl.deadline()
+            });
+            let ping_at = self.heartbeat.as_ref().map(|hb| hb.next_due());
+            let wake = match (deadline_at, ping_at) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+            match self.reader.read_frame_until(&stop, wake) {
                 Ok(ReadOutcome::Frame) => {}
                 Ok(ReadOutcome::Stopped) => {
                     anyhow::bail!("shutdown while waiting for inference replies")
+                }
+                Ok(ReadOutcome::TimedOut) => {
+                    let now = Instant::now();
+                    if deadline_at.is_some_and(|at| now >= at) {
+                        // The reply is overdue far past the smoothed
+                        // RTT: assume the connection (or our ticket) is
+                        // lost and take the proven broken-socket path —
+                        // reconnect, resend, re-arm.
+                        self.timeouts.inc();
+                        self.recover("ticket deadline exceeded")?;
+                        if let Some(p) = self.inflight[ticket].as_mut() {
+                            p.t0 = Instant::now();
+                        }
+                        done = 0;
+                        continue;
+                    }
+                    if self.heartbeat.as_ref().is_some_and(|hb| hb.due(now)) {
+                        self.ping_nonce = self.ping_nonce.wrapping_add(1);
+                        frame::encode_ping(&mut self.ping_buf, self.ping_nonce);
+                        if self.writer.write_all(&self.ping_buf).is_err() {
+                            self.recover("ping write failed")?;
+                            done = 0;
+                        } else {
+                            self.tx_frames.inc();
+                            self.tx_bytes.add(self.ping_buf.len() as u64);
+                        }
+                        if let Some(hb) = &mut self.heartbeat {
+                            hb.sent(Instant::now());
+                        }
+                    }
+                    continue;
                 }
                 Ok(ReadOutcome::Eof) => {
                     self.recover("server closed the connection")?;
@@ -445,6 +552,8 @@ impl PolicyClient for RemoteClient {
                     self.shutdown.signal();
                     anyhow::bail!("server sent goodbye (drain)");
                 }
+                // Heartbeat echo: receiving it was the point.
+                FrameKind::Pong => continue,
                 FrameKind::ReplyOk | FrameKind::ReplyErr => {}
                 k => anyhow::bail!("unexpected {k:?} frame on infer connection"),
             }
@@ -504,7 +613,11 @@ impl PolicyClient for RemoteClient {
             // else: stale tag (an errored-out generation) — discard.
         }
         let p = self.inflight[ticket].take().expect("in flight");
-        self.rtt.record(p.t0.elapsed().as_secs_f64());
+        let rtt = p.t0.elapsed();
+        self.rtt.record(rtt.as_secs_f64());
+        if let Some(dl) = &mut self.deadline {
+            dl.observe(rtt);
+        }
         self.buf_free.push(p.buf);
         self.inflight_gauge.add(-1.0);
         Ok(())
@@ -516,6 +629,12 @@ impl PolicyClient for RemoteClient {
 /// recycle through the attached [`SequencePool`] the moment their bytes
 /// are on the wire, so the worker's sequence path stays allocation-free
 /// exactly like the in-process one.
+///
+/// A broken link re-dials and re-handshakes once per failed frame
+/// (`fleet.ingest_errors` + `fleet.client_reconnects`): sequences that
+/// were in flight on the dead socket are dropped — the replay is a
+/// distribution, not a ledger — and only an unrecoverable link signals
+/// worker shutdown.
 pub struct RemoteIngest {
     state: Mutex<IngestState>,
     pool: Arc<SequencePool>,
@@ -527,8 +646,12 @@ struct IngestState {
     writer: Stream,
     buf: Vec<u8>,
     failed: bool,
+    addr: Addr,
+    hello: frame::Hello,
+    opts: RemoteClientOpts,
     tx_frames: Counter,
     tx_bytes: Counter,
+    reconnects: Counter,
 }
 
 impl RemoteIngest {
@@ -539,15 +662,19 @@ impl RemoteIngest {
         metrics: &Registry,
         shutdown: ShutdownToken,
     ) -> anyhow::Result<Self> {
-        let hello = hello_for(Role::Ingest, 0, &dims);
-        let (writer, _reader) = establish(addr, &hello, opts, &shutdown)?;
+        let mut hello = hello_for(Role::Ingest, 0, &dims);
+        let (writer, _reader) = establish(addr, &mut hello, opts, &shutdown)?;
         Ok(Self {
             state: Mutex::new(IngestState {
                 writer,
                 buf: Vec::new(),
                 failed: false,
+                addr: addr.clone(),
+                hello,
+                opts: *opts,
                 tx_frames: metrics.counter("fleet.tx_frames"),
                 tx_bytes: metrics.counter("fleet.tx_bytes"),
+                reconnects: metrics.counter("fleet.client_reconnects"),
             }),
             pool: Arc::new(SequencePool::new()),
             shutdown,
@@ -575,20 +702,33 @@ impl SequenceSink for RemoteIngest {
         for seq in batch.drain(..) {
             if !st.failed {
                 frame::encode_sequence(&mut st.buf, &seq);
-                match st.writer.write_all(&st.buf) {
-                    Ok(()) => {
-                        st.tx_frames.inc();
-                        st.tx_bytes.add(st.buf.len() as u64);
+                let mut sent = st.writer.write_all(&st.buf).is_ok();
+                if !sent && !self.shutdown.is_signalled() {
+                    // The link died. Sequences already on the dead
+                    // socket are lost — the replay is a distribution,
+                    // losing a few is safe — but this frame is intact:
+                    // reconnect (the handshake resyncs the generation
+                    // fence) and resend it.
+                    self.errors.inc();
+                    if let Ok((w, _)) =
+                        establish(&st.addr, &mut st.hello, &st.opts, &self.shutdown)
+                    {
+                        st.writer = w;
+                        st.reconnects.inc();
+                        sent = st.writer.write_all(&st.buf).is_ok();
                     }
-                    Err(_) => {
-                        // A dead ingest link makes further training
-                        // pointless for this worker: flag it, stop
-                        // writing, and wind the process down. The drain
-                        // below still recycles every slab.
-                        st.failed = true;
-                        self.errors.inc();
-                        self.shutdown.signal();
-                    }
+                }
+                if sent {
+                    st.tx_frames.inc();
+                    st.tx_bytes.add(st.buf.len() as u64);
+                } else {
+                    // A dead, unrecoverable ingest link makes further
+                    // training pointless for this worker: flag it, stop
+                    // writing, and wind the process down. The drain
+                    // below still recycles every slab.
+                    st.failed = true;
+                    self.errors.inc();
+                    self.shutdown.signal();
                 }
             }
             self.pool.put(seq);

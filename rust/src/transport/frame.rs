@@ -47,6 +47,11 @@ pub enum FrameKind {
     Sequence,
     /// Clean-drain marker: the sender will transmit nothing further.
     Goodbye,
+    /// Heartbeat probe (client → server), nonce in `ticket`. Header
+    /// only: the liveness path moves 24 bytes and allocates nothing.
+    Ping,
+    /// Heartbeat echo (server → client), same nonce in `ticket`.
+    Pong,
 }
 
 impl FrameKind {
@@ -58,6 +63,8 @@ impl FrameKind {
             FrameKind::ReplyErr => 4,
             FrameKind::Sequence => 5,
             FrameKind::Goodbye => 6,
+            FrameKind::Ping => 7,
+            FrameKind::Pong => 8,
         }
     }
 
@@ -69,6 +76,8 @@ impl FrameKind {
             4 => FrameKind::ReplyErr,
             5 => FrameKind::Sequence,
             6 => FrameKind::Goodbye,
+            7 => FrameKind::Ping,
+            8 => FrameKind::Pong,
             _ => return None,
         })
     }
@@ -107,6 +116,13 @@ pub struct Hello {
     pub hidden: u32,
     pub num_actions: u32,
     pub seq_len: u32,
+    /// Server incarnation tag. Workers send 0 (fresh — always
+    /// accepted) or the generation they last synced with; a restarted
+    /// server (generation bumped by checkpoint resume) refuses a
+    /// non-zero mismatch with a `stale generation` error until the
+    /// worker resyncs by re-handshaking at 0. Server acks always carry
+    /// the current generation.
+    pub generation: u32,
 }
 
 // ---------------------------------------------------------------------
@@ -157,9 +173,22 @@ pub fn encode_hello(buf: &mut Vec<u8>, hello: &Hello) {
         hello.hidden,
         hello.num_actions,
         hello.seq_len,
+        hello.generation,
     ] {
         buf.extend_from_slice(&v.to_le_bytes());
     }
+    finish_frame(buf);
+}
+
+/// Heartbeat probe: header-only, `nonce` rides in the ticket field.
+pub fn encode_ping(buf: &mut Vec<u8>, nonce: u64) {
+    begin_frame(buf, FrameKind::Ping, nonce, 0, 0);
+    finish_frame(buf);
+}
+
+/// Heartbeat echo: header-only, echoing the probe's nonce.
+pub fn encode_pong(buf: &mut Vec<u8>, nonce: u64) {
+    begin_frame(buf, FrameKind::Pong, nonce, 0, 0);
     finish_frame(buf);
 }
 
@@ -286,7 +315,7 @@ fn get_i32s(src: &[u8], out: &mut Vec<i32>) {
 }
 
 pub fn decode_hello(pl: &[u8]) -> anyhow::Result<Hello> {
-    anyhow::ensure!(pl.len() == 24, "hello payload length {}", pl.len());
+    anyhow::ensure!(pl.len() == 28, "hello payload length {}", pl.len());
     let role = match pl[0] {
         1 => Role::Infer,
         2 => Role::Ingest,
@@ -300,6 +329,7 @@ pub fn decode_hello(pl: &[u8]) -> anyhow::Result<Hello> {
         hidden: u(12),
         num_actions: u(16),
         seq_len: u(20),
+        generation: u(24),
     })
 }
 
@@ -460,6 +490,7 @@ mod tests {
             hidden: 16,
             num_actions: 4,
             seq_len: 30,
+            generation: 2,
         };
         let mut buf = Vec::new();
         encode_hello(&mut buf, &hello);
@@ -470,6 +501,22 @@ mod tests {
         encode_goodbye(&mut buf);
         let frame = strip_len(&buf);
         assert_eq!(parse_header(frame).unwrap().kind, FrameKind::Goodbye);
+        assert!(payload(frame).is_empty());
+    }
+
+    #[test]
+    fn ping_pong_roundtrip_header_only() {
+        let mut buf = Vec::new();
+        encode_ping(&mut buf, 0xDEAD_BEEF_0042);
+        let frame = strip_len(&buf);
+        let hd = parse_header(frame).unwrap();
+        assert_eq!((hd.kind, hd.ticket), (FrameKind::Ping, 0xDEAD_BEEF_0042));
+        assert!(payload(frame).is_empty());
+
+        encode_pong(&mut buf, 7);
+        let frame = strip_len(&buf);
+        let hd = parse_header(frame).unwrap();
+        assert_eq!((hd.kind, hd.ticket), (FrameKind::Pong, 7));
         assert!(payload(frame).is_empty());
     }
 

@@ -1,0 +1,177 @@
+//! Heartbeat and deadline state machines for the fleet (DESIGN.md §15).
+//!
+//! Three tiny pure structs — no I/O, no clocks of their own — so the
+//! transport loops stay testable and the hot paths stay allocation-free
+//! (gated in `micro_transport --quick` next to the codec gates):
+//!
+//! * [`Heartbeat`] decides when the client owes the server a `Ping`.
+//! * [`Liveness`] is the server's per-connection staleness window: any
+//!   completed frame (including `Ping`) refreshes it; when it lapses
+//!   the connection is reaped and its in-flight tickets failed with
+//!   attribution.
+//! * [`DeadlineEwma`] seeds the client's per-ticket deadline from a
+//!   smoothed round-trip estimate (`fleet.rtt_seconds`), floored by the
+//!   configured liveness window so a cold estimate never fires early.
+//!
+//! Every method takes `now: Instant` explicitly; the unit tests drive
+//! them with synthetic clocks.
+
+use std::time::{Duration, Instant};
+
+/// Exponentially-weighted RTT estimate that turns into a per-ticket
+/// deadline: `max(floor, mult * ewma)`. Starts at the floor until the
+/// first observation lands.
+#[derive(Clone, Copy, Debug)]
+pub struct DeadlineEwma {
+    ewma_s: f64,
+    floor_s: f64,
+    mult: f64,
+}
+
+impl DeadlineEwma {
+    /// `floor` is the configured liveness window (the deadline never
+    /// undercuts it); `mult` scales the smoothed RTT into a deadline.
+    pub fn new(floor: Duration, mult: f64) -> Self {
+        DeadlineEwma {
+            ewma_s: 0.0,
+            floor_s: floor.as_secs_f64(),
+            mult,
+        }
+    }
+
+    /// Fold one completed round-trip into the estimate (0.9/0.1 blend,
+    /// first sample adopted outright).
+    pub fn observe(&mut self, rtt: Duration) {
+        let s = rtt.as_secs_f64();
+        self.ewma_s = if self.ewma_s == 0.0 {
+            s
+        } else {
+            0.9 * self.ewma_s + 0.1 * s
+        };
+    }
+
+    /// The deadline to arm for the next ticket.
+    pub fn deadline(&self) -> Duration {
+        Duration::from_secs_f64((self.mult * self.ewma_s).max(self.floor_s))
+    }
+}
+
+/// Client-side ping scheduler: one `Ping` per quiet interval.
+#[derive(Clone, Copy, Debug)]
+pub struct Heartbeat {
+    every: Duration,
+    last_tx: Instant,
+}
+
+impl Heartbeat {
+    pub fn new(every: Duration, now: Instant) -> Self {
+        Heartbeat { every, last_tx: now }
+    }
+
+    /// When the next ping is owed (send at or after this instant).
+    pub fn next_due(&self) -> Instant {
+        self.last_tx + self.every
+    }
+
+    /// True when a ping is owed now; callers send and then [`Self::sent`].
+    pub fn due(&self, now: Instant) -> bool {
+        now >= self.next_due()
+    }
+
+    /// Record a transmitted ping (or any frame — traffic is proof of
+    /// life, so a busy connection pings less).
+    pub fn sent(&mut self, now: Instant) {
+        self.last_tx = now;
+    }
+}
+
+/// Server-side staleness window: reap the connection when no complete
+/// frame has arrived for `window`.
+#[derive(Clone, Copy, Debug)]
+pub struct Liveness {
+    window: Duration,
+    last_rx: Instant,
+}
+
+impl Liveness {
+    pub fn new(window: Duration, now: Instant) -> Self {
+        Liveness { window, last_rx: now }
+    }
+
+    /// Record a completed inbound frame.
+    pub fn touch(&mut self, now: Instant) {
+        self.last_rx = now;
+    }
+
+    /// The instant at which the connection becomes reapable — feed this
+    /// to `FrameReader::read_frame_until` as the wake deadline.
+    pub fn deadline(&self) -> Instant {
+        self.last_rx + self.window
+    }
+
+    /// True once the window has lapsed with no inbound frame.
+    pub fn stale(&self, now: Instant) -> bool {
+        now >= self.deadline()
+    }
+
+    /// How long the connection had been silent at `now` (for the
+    /// attributed reap error).
+    pub fn silent_for(&self, now: Instant) -> Duration {
+        now.saturating_duration_since(self.last_rx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_starts_at_floor_and_tracks_rtt() {
+        let mut d = DeadlineEwma::new(Duration::from_millis(100), 4.0);
+        assert_eq!(d.deadline(), Duration::from_millis(100));
+        d.observe(Duration::from_millis(50));
+        // 4 * 50ms = 200ms beats the floor.
+        assert_eq!(d.deadline(), Duration::from_millis(200));
+        // A fast outlier can't drag the deadline under the floor.
+        for _ in 0..200 {
+            d.observe(Duration::from_millis(1));
+        }
+        assert_eq!(d.deadline(), Duration::from_millis(100));
+    }
+
+    #[test]
+    fn ewma_blends_toward_new_observations() {
+        let mut d = DeadlineEwma::new(Duration::ZERO, 1.0);
+        d.observe(Duration::from_secs(1));
+        d.observe(Duration::from_secs(2));
+        let s = d.deadline().as_secs_f64();
+        assert!((s - 1.1).abs() < 1e-9, "0.9*1 + 0.1*2 = 1.1, got {s}");
+    }
+
+    #[test]
+    fn heartbeat_fires_once_per_quiet_interval() {
+        let t0 = Instant::now();
+        let mut hb = Heartbeat::new(Duration::from_millis(10), t0);
+        assert!(!hb.due(t0));
+        assert!(hb.due(t0 + Duration::from_millis(10)));
+        hb.sent(t0 + Duration::from_millis(10));
+        assert!(!hb.due(t0 + Duration::from_millis(15)));
+        assert!(hb.due(t0 + Duration::from_millis(20)));
+        assert_eq!(hb.next_due(), t0 + Duration::from_millis(20));
+    }
+
+    #[test]
+    fn liveness_reaps_only_after_a_silent_window() {
+        let t0 = Instant::now();
+        let mut lv = Liveness::new(Duration::from_millis(30), t0);
+        assert!(!lv.stale(t0 + Duration::from_millis(29)));
+        assert!(lv.stale(t0 + Duration::from_millis(30)));
+        lv.touch(t0 + Duration::from_millis(25));
+        assert!(!lv.stale(t0 + Duration::from_millis(54)));
+        assert!(lv.stale(t0 + Duration::from_millis(55)));
+        assert_eq!(
+            lv.silent_for(t0 + Duration::from_millis(40)),
+            Duration::from_millis(15)
+        );
+    }
+}

@@ -34,9 +34,11 @@
 
 pub mod client;
 pub mod frame;
+pub mod liveness;
 pub mod server;
 
 pub use client::{RemoteClient, RemoteClientOpts, RemoteIngest};
+pub use liveness::{DeadlineEwma, Heartbeat, Liveness};
 pub use server::{FleetServer, FleetServerOpts};
 
 use crate::exec::ShutdownToken;
@@ -44,7 +46,7 @@ use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// A parsed fleet address: `tcp:host:port` (or bare `host:port`) for
 /// TCP, `uds:/path` (or `unix:/path`) for Unix-domain sockets.
@@ -127,6 +129,32 @@ impl Stream {
             Stream::Tcp(s) => s.shutdown(std::net::Shutdown::Write),
             Stream::Unix(s) => s.shutdown(std::net::Shutdown::Write),
         };
+    }
+
+    /// Close both directions: the peer's blocked reads fail immediately
+    /// (liveness reaping uses this so a reaped-but-alive client notices
+    /// at its next read slice instead of at its next write).
+    pub fn shutdown_both(&self) {
+        let _ = match self {
+            Stream::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+            Stream::Unix(s) => s.shutdown(std::net::Shutdown::Both),
+        };
+    }
+
+    /// Human-readable peer identity for error attribution (`conn N
+    /// (<peer>)` in fleet errors). Allocates; error/log paths only.
+    pub fn peer_desc(&self) -> String {
+        match self {
+            Stream::Tcp(s) => s
+                .peer_addr()
+                .map(|a| format!("tcp:{a}"))
+                .unwrap_or_else(|_| "tcp:?".into()),
+            Stream::Unix(s) => s
+                .peer_addr()
+                .ok()
+                .and_then(|a| a.as_pathname().map(|p| format!("uds:{}", p.display())))
+                .unwrap_or_else(|| "uds:@".into()),
+        }
     }
 }
 
@@ -280,6 +308,11 @@ pub enum ReadOutcome {
     Eof,
     /// The stop predicate fired between read attempts.
     Stopped,
+    /// The caller's wake-up instant passed without a complete frame
+    /// ([`FrameReader::read_frame_until`] only; partial progress is
+    /// retained and the next call resumes the same frame). Heartbeat
+    /// sends, ticket deadlines, and liveness reaping all hang off this.
+    TimedOut,
 }
 
 /// Reads length-prefixed frames off a [`Stream`], tolerant of read
@@ -287,9 +320,18 @@ pub enum ReadOutcome {
 /// and polling a caller predicate so a blocked reader can notice
 /// shutdown. The frame buffer is reused across reads: steady state
 /// allocates nothing once capacity covers the largest frame seen.
+/// Partial progress (length prefix and body position) lives in the
+/// reader itself, so a [`ReadOutcome::TimedOut`] return mid-frame
+/// resumes at the exact byte on the next call — deadline wake-ups
+/// never desynchronize the stream.
 pub struct FrameReader {
     stream: Stream,
     buf: Vec<u8>,
+    /// Partial length prefix (valid up to `at` while `!in_body`).
+    len4: [u8; 4],
+    /// Resume offset into `len4` or `buf`.
+    at: usize,
+    in_body: bool,
 }
 
 impl FrameReader {
@@ -297,6 +339,9 @@ impl FrameReader {
         Self {
             stream,
             buf: Vec::new(),
+            len4: [0u8; 4],
+            at: 0,
+            in_body: false,
         }
     }
 
@@ -305,57 +350,63 @@ impl FrameReader {
     /// payload bytes (the length prefix already consumed and
     /// validated).
     pub fn read_frame(&mut self, stop: &dyn Fn() -> bool) -> anyhow::Result<ReadOutcome> {
-        let mut len4 = [0u8; 4];
-        match self.fill(&mut len4, true, stop)? {
-            ReadOutcome::Frame => {}
-            other => return Ok(other),
-        }
-        let len = u32::from_le_bytes(len4) as usize;
-        anyhow::ensure!(
-            (frame::HEADER_LEN..=frame::MAX_FRAME_LEN).contains(&len),
-            "frame length {len} out of bounds"
-        );
-        self.buf.clear();
-        self.buf.resize(len, 0);
-        let mut at = 0usize;
-        while at < len {
-            // Borrow-split: fill a tail slice of the owned buffer.
-            let mut tail = std::mem::take(&mut self.buf);
-            let r = self.fill(&mut tail[at..], false, stop);
-            self.buf = tail;
-            match r? {
-                ReadOutcome::Frame => at = len,
-                ReadOutcome::Stopped => return Ok(ReadOutcome::Stopped),
-                ReadOutcome::Eof => unreachable!("mid-frame EOF is an error"),
-            }
-        }
-        Ok(ReadOutcome::Frame)
+        self.read_frame_until(stop, None)
     }
 
-    /// The bytes of the last frame read (header + payload).
-    pub fn frame(&self) -> &[u8] {
-        &self.buf
-    }
-
-    /// Fill `out` completely. `clean_eof_ok`: an EOF before the first
-    /// byte is a clean close (frame boundary); mid-buffer EOF is always
-    /// an error.
-    fn fill(
+    /// [`Self::read_frame`] with a wake-up: once `wake` passes without
+    /// a complete frame, returns [`ReadOutcome::TimedOut`] (checked at
+    /// read-timeout granularity — the socket's read timeout, 50 ms on
+    /// fleet connections, bounds the overshoot). State is kept so the
+    /// caller can act (send a ping, fail a deadline, reap) and call
+    /// again without losing a partially-received frame.
+    pub fn read_frame_until(
         &mut self,
-        out: &mut [u8],
-        clean_eof_ok: bool,
         stop: &dyn Fn() -> bool,
+        wake: Option<Instant>,
     ) -> anyhow::Result<ReadOutcome> {
-        let mut at = 0usize;
-        while at < out.len() {
-            match self.stream.read(&mut out[at..]) {
-                Ok(0) => {
-                    if at == 0 && clean_eof_ok {
-                        return Ok(ReadOutcome::Eof);
+        if !self.in_body {
+            while self.at < 4 {
+                let at = self.at;
+                match self.stream.read(&mut self.len4[at..]) {
+                    Ok(0) => {
+                        if at == 0 {
+                            return Ok(ReadOutcome::Eof);
+                        }
+                        anyhow::bail!("connection closed mid-frame ({at} bytes in)");
                     }
-                    anyhow::bail!("connection closed mid-frame ({at} bytes in)");
+                    Ok(n) => self.at += n,
+                    Err(e)
+                        if matches!(
+                            e.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        ) =>
+                    {
+                        if stop() {
+                            return Ok(ReadOutcome::Stopped);
+                        }
+                        if wake.is_some_and(|w| Instant::now() >= w) {
+                            return Ok(ReadOutcome::TimedOut);
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(e) => return Err(anyhow::anyhow!("read failed: {e}")),
                 }
-                Ok(n) => at += n,
+            }
+            let len = u32::from_le_bytes(self.len4) as usize;
+            anyhow::ensure!(
+                (frame::HEADER_LEN..=frame::MAX_FRAME_LEN).contains(&len),
+                "frame length {len} out of bounds"
+            );
+            self.buf.clear();
+            self.buf.resize(len, 0);
+            self.at = 0;
+            self.in_body = true;
+        }
+        while self.at < self.buf.len() {
+            let at = self.at;
+            match self.stream.read(&mut self.buf[at..]) {
+                Ok(0) => anyhow::bail!("connection closed mid-frame ({} bytes in)", at + 4),
+                Ok(n) => self.at += n,
                 Err(e)
                     if matches!(
                         e.kind(),
@@ -365,12 +416,29 @@ impl FrameReader {
                     if stop() {
                         return Ok(ReadOutcome::Stopped);
                     }
+                    if wake.is_some_and(|w| Instant::now() >= w) {
+                        return Ok(ReadOutcome::TimedOut);
+                    }
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
                 Err(e) => return Err(anyhow::anyhow!("read failed: {e}")),
             }
         }
+        self.at = 0;
+        self.in_body = false;
         Ok(ReadOutcome::Frame)
+    }
+
+    /// The bytes of the last frame read (header + payload).
+    pub fn frame(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Tear the underlying socket down in both directions (liveness
+    /// reaping and injected kills): the peer's blocked reads and
+    /// writes fail immediately instead of at their next timeout.
+    pub fn shutdown_both(&self) {
+        self.stream.shutdown_both();
     }
 }
 

@@ -1,6 +1,6 @@
 //! The coordinator side of the fleet: [`FleetServer`] multiplexes many
 //! remote actor connections into the existing pooled batcher and the
-//! central replay (DESIGN.md §14).
+//! central replay (DESIGN.md §14; fault tolerance §15).
 //!
 //! Topology: one non-blocking accept loop; per connection a reader
 //! thread (the connection's own thread) and, for infer connections, one
@@ -28,28 +28,48 @@
 //! increments `fleet.reconnects`. On server shutdown the readers stop
 //! accepting new work, the writers drain every outstanding reply, send
 //! `Goodbye`, and close — the clean-drain handshake the workers' clients
-//! turn into their own shutdown.
+//! turn into their own shutdown. `Goodbye` is *only* sent on a clean
+//! end (drain or peer goodbye): a connection that dies mid-stream is
+//! torn down without one, so the worker's client recovers and resubmits
+//! instead of mistaking the death for a fleet shutdown.
+//!
+//! Liveness (DESIGN.md §15): with `fleet.liveness_timeout_ms` set, a
+//! client heartbeats idle infer connections with `Ping` frames the
+//! reader answers with `Pong`; any completed inbound frame counts as
+//! proof of life. A connection silent past the window is *reaped* —
+//! counted in `fleet.reaped`, its first error attributed (`conn N
+//! (<peer>)`), its in-flight replies shed, and its socket shut down so
+//! a live-but-wedged peer notices immediately.
+//!
+//! Fault injection (DESIGN.md §15): when a seeded
+//! [`crate::fault::FaultPlan`] is armed, the reader consults a
+//! per-connection schedule after every received frame and kills,
+//! drops, delays, truncates, or corrupts it before processing.
+//! Mutated frames are guaranteed decode rejections, so every one lands
+//! in `fleet.bad_frames` — the chaos tests reconcile the metrics
+//! against the plan's ledger exactly.
 
 use super::frame::{self, FrameKind, Role};
-use super::{Addr, FrameReader, Listener, ReadOutcome, Stream};
+use super::{Addr, FrameReader, Listener, Liveness, ReadOutcome, Stream};
 use crate::coordinator::batcher::{BatcherHandle, InferItem, ReplyChunk};
 use crate::exec::channel::channel;
 use crate::exec::ShutdownToken;
+use crate::fault::{ConnFaults, FaultPlan, FrameFault};
 use crate::metrics::Registry;
 use crate::replay::{IngestQueue, SequenceSink};
-use crate::transport::client::SHED_PREFIX;
+use crate::transport::client::{SHED_PREFIX, STALE_GEN_PREFIX};
 use std::io::Write;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// How long a blocked connection read may hold the socket before the
 /// reader polls the shutdown token.
 const READ_SLICE: Duration = Duration::from_millis(50);
 
 /// Server-side fleet knobs (mirrors the `[fleet]` config section).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone)]
 pub struct FleetServerOpts {
     /// Per-connection in-flight row budget; submissions beyond it are
     /// shed (error reply + counter), not queued.
@@ -57,6 +77,17 @@ pub struct FleetServerOpts {
     /// Ingest batching into the replay (one `add_batch` per this many
     /// received sequences; same knob as `replay.insert_batch`).
     pub insert_batch: usize,
+    /// Reap an infer connection silent for this long (0 = never; the
+    /// client heartbeats with `Ping` at a shorter interval).
+    pub liveness_timeout_ms: u64,
+    /// Server incarnation tag echoed in `Hello` acks; a worker whose
+    /// hello carries a different non-zero generation is refused with a
+    /// `stale generation` error until it resyncs at 0. Bumped by
+    /// checkpoint resume so restarted servers shed stale workers.
+    pub generation: u32,
+    /// The armed fault schedule, if any (`None` = the bit-for-bit
+    /// fault-free wire path).
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for FleetServerOpts {
@@ -64,7 +95,19 @@ impl Default for FleetServerOpts {
         Self {
             max_inflight_rows: 4096,
             insert_batch: 1,
+            liveness_timeout_ms: 0,
+            generation: 0,
+            faults: None,
         }
+    }
+}
+
+/// Record the first attributed fleet error; later errors only show up
+/// in counters. The message closure runs only when the slot is empty.
+fn note_first(slot: &Mutex<Option<String>>, msg: impl FnOnce() -> String) {
+    let mut g = slot.lock().unwrap();
+    if g.is_none() {
+        *g = Some(msg());
     }
 }
 
@@ -74,6 +117,7 @@ pub struct FleetServer {
     accept: Option<JoinHandle<()>>,
     conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
     uds_path: Option<std::path::PathBuf>,
+    errors: Arc<Mutex<Option<String>>>,
 }
 
 impl FleetServer {
@@ -90,18 +134,36 @@ impl FleetServer {
             _ => None,
         };
         let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let errors: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
         let conns2 = conns.clone();
-        let accept = std::thread::Builder::new()
+        let errors2 = errors.clone();
+        let spawn_failures = metrics.counter("fleet.spawn_failures");
+        let accept = match std::thread::Builder::new()
             .name("rlarch-fleet-accept".into())
             .spawn(move || {
-                accept_loop(listener, handle, sink, opts, metrics, shutdown, conns2)
-            })
-            .expect("spawn fleet accept loop");
+                accept_loop(listener, handle, sink, opts, metrics, shutdown, conns2, errors2)
+            }) {
+            Ok(h) => Some(h),
+            Err(e) => {
+                // No accept loop means no fleet — decline gracefully
+                // instead of panicking; the report surfaces the error.
+                spawn_failures.inc();
+                note_first(&errors, || format!("spawn fleet accept loop: {e}"));
+                None
+            }
+        };
         FleetServer {
-            accept: Some(accept),
+            accept,
             conns,
             uds_path,
+            errors,
         }
+    }
+
+    /// Shared slot holding the first attributed fleet error (clone it
+    /// before [`Self::join`] consumes the server; read it after).
+    pub fn error_slot(&self) -> Arc<Mutex<Option<String>>> {
+        self.errors.clone()
     }
 
     /// Wait for the accept loop and every connection thread to finish
@@ -129,32 +191,50 @@ fn accept_loop(
     metrics: Registry,
     shutdown: ShutdownToken,
     conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    errors: Arc<Mutex<Option<String>>>,
 ) {
     let accepts = metrics.counter("fleet.accepts");
     let disconnects = metrics.counter("fleet.disconnects");
     let reconnects = metrics.counter("fleet.reconnects");
+    let spawn_failures = metrics.counter("fleet.spawn_failures");
     let connections = metrics.gauge("fleet.connections");
     connections.set(0.0);
     let mut reconnects_counted = 0u64;
+    let mut conn_id = 0u64;
     while !shutdown.is_signalled() {
         match listener.poll_accept() {
             Ok(Some(stream)) => {
                 accepts.inc();
+                conn_id += 1;
                 // An accept arriving after an unexpected death is a
                 // worker coming back: the kill-and-reconnect signal.
                 if disconnects.get() > reconnects_counted {
                     reconnects.inc();
                     reconnects_counted += 1;
                 }
+                let id = conn_id;
                 let handle = handle.clone();
                 let sink = sink.clone();
+                let opts = opts.clone();
                 let metrics = metrics.clone();
                 let shutdown = shutdown.clone();
-                let h = std::thread::Builder::new()
+                let errors2 = errors.clone();
+                let spawned = std::thread::Builder::new()
                     .name("rlarch-fleet-conn".into())
-                    .spawn(move || serve_conn(stream, handle, sink, opts, metrics, shutdown))
-                    .expect("spawn fleet connection");
-                conns.lock().unwrap().push(h);
+                    .spawn(move || {
+                        serve_conn(stream, id, handle, sink, opts, metrics, shutdown, errors2)
+                    });
+                match spawned {
+                    Ok(h) => conns.lock().unwrap().push(h),
+                    Err(e) => {
+                        // Declined: the moved-in stream was dropped, so
+                        // the peer sees EOF and retries with backoff.
+                        spawn_failures.inc();
+                        note_first(&errors, || {
+                            format!("conn {id}: spawn connection thread: {e}")
+                        });
+                    }
+                }
             }
             Ok(None) | Err(_) => {
                 if shutdown.sleep_interruptible(Duration::from_millis(5)) {
@@ -166,17 +246,20 @@ fn accept_loop(
 }
 
 /// Handshake, then dispatch on the connection's declared role.
+#[allow(clippy::too_many_arguments)]
 fn serve_conn(
     stream: Stream,
+    conn_id: u64,
     handle: BatcherHandle,
     sink: Arc<dyn SequenceSink>,
     opts: FleetServerOpts,
     metrics: Registry,
     shutdown: ShutdownToken,
+    errors: Arc<Mutex<Option<String>>>,
 ) {
     let connections = metrics.gauge("fleet.connections");
     connections.add(1.0);
-    let clean = serve_conn_inner(stream, handle, sink, opts, &metrics, shutdown);
+    let clean = serve_conn_inner(stream, conn_id, handle, sink, opts, &metrics, shutdown, &errors);
     connections.add(-1.0);
     if !clean {
         metrics.counter("fleet.disconnects").inc();
@@ -185,14 +268,18 @@ fn serve_conn(
 
 /// Returns whether the connection ended cleanly (goodbye or refused
 /// handshake, as opposed to dying mid-stream).
+#[allow(clippy::too_many_arguments)]
 fn serve_conn_inner(
     stream: Stream,
+    conn_id: u64,
     handle: BatcherHandle,
     sink: Arc<dyn SequenceSink>,
     opts: FleetServerOpts,
     metrics: &Registry,
     shutdown: ShutdownToken,
+    errors: &Mutex<Option<String>>,
 ) -> bool {
+    let peer = stream.peer_desc();
     if stream.set_read_timeout(Some(READ_SLICE)).is_err()
         || stream.set_write_timeout(Some(Duration::from_secs(5))).is_err()
     {
@@ -206,8 +293,20 @@ fn serve_conn_inner(
     let mut reader = FrameReader::new(stream);
     let sd = shutdown.clone();
     let stop = move || sd.is_signalled();
-    match reader.read_frame(&stop) {
+    // A connection that never completes a hello inside the liveness
+    // window is holding a thread hostage: reap it like any stale conn.
+    let hello_wake = (opts.liveness_timeout_ms > 0)
+        .then(|| Instant::now() + Duration::from_millis(opts.liveness_timeout_ms));
+    match reader.read_frame_until(&stop, hello_wake) {
         Ok(ReadOutcome::Frame) => {}
+        Ok(ReadOutcome::TimedOut) => {
+            metrics.counter("fleet.reaped").inc();
+            note_first(errors, || {
+                format!("conn {conn_id} ({peer}): reaped before handshake")
+            });
+            reader.shutdown_both();
+            return true; // nothing was in flight
+        }
         _ => return true, // never got a hello: nothing was in flight
     }
     let hello = match frame::parse_header(reader.frame()).and_then(|hd| {
@@ -215,7 +314,11 @@ fn serve_conn_inner(
         frame::decode_hello(frame::payload(reader.frame()))
     }) {
         Ok(h) => h,
-        Err(_) => return false,
+        Err(e) => {
+            metrics.counter("fleet.bad_frames").inc();
+            note_first(errors, || format!("conn {conn_id} ({peer}): bad hello: {e}"));
+            return false;
+        }
     };
     let d = handle.dims();
     let mut buf = Vec::new();
@@ -224,6 +327,9 @@ fn serve_conn_inner(
         && hello.num_actions as usize == d.num_actions
         && hello.seq_len as usize == d.seq_len;
     if !dims_ok {
+        note_first(errors, || {
+            format!("conn {conn_id} ({peer}): model dims mismatch: server {d:?}, worker hello {hello:?}")
+        });
         frame::encode_reply_err(
             &mut buf,
             0,
@@ -236,7 +342,31 @@ fn serve_conn_inner(
         let _ = writer.write_all(&buf);
         return true; // refused up front: clean
     }
-    // Ack with the server's dims (echoing the worker's actor id).
+    // Generation fence: a worker synced to a previous server
+    // incarnation is refused until it re-handshakes fresh (generation
+    // 0), so a restored checkpoint never mixes in stale in-flight work.
+    if hello.generation != 0 && hello.generation != opts.generation {
+        note_first(errors, || {
+            format!(
+                "conn {conn_id} ({peer}): stale generation {} (server at {})",
+                hello.generation, opts.generation
+            )
+        });
+        frame::encode_reply_err(
+            &mut buf,
+            0,
+            0,
+            0,
+            &format!(
+                "{STALE_GEN_PREFIX}: server is at generation {}, worker synced to {}",
+                opts.generation, hello.generation
+            ),
+        );
+        let _ = writer.write_all(&buf);
+        return true; // refused up front: clean
+    }
+    // Ack with the server's dims and generation (echoing the worker's
+    // actor id); the worker adopts the generation for reconnects.
     let ack = frame::Hello {
         role: hello.role,
         actor_id: hello.actor_id,
@@ -244,41 +374,66 @@ fn serve_conn_inner(
         hidden: d.hidden as u32,
         num_actions: d.num_actions as u32,
         seq_len: d.seq_len as u32,
+        generation: opts.generation,
     };
     frame::encode_hello(&mut buf, &ack);
     if writer.write_all(&buf).is_err() {
         return false;
     }
     match hello.role {
-        Role::Infer => serve_infer(
+        Role::Infer => serve_infer(InferConn {
             reader,
             writer,
-            hello.actor_id as usize,
+            conn_id,
+            peer,
+            actor: hello.actor_id as usize,
             handle,
             opts,
             metrics,
             shutdown,
-        ),
-        Role::Ingest => serve_ingest(reader, sink, d, opts, metrics, shutdown),
+            errors,
+        }),
+        Role::Ingest => serve_ingest(reader, conn_id, peer, sink, d, opts, metrics, shutdown, errors),
     }
+}
+
+/// Everything one infer connection's reader needs (bundled so the
+/// serve function stays inside the argument-count lint).
+struct InferConn<'a> {
+    reader: FrameReader,
+    writer: Stream,
+    conn_id: u64,
+    peer: String,
+    actor: usize,
+    handle: BatcherHandle,
+    opts: FleetServerOpts,
+    metrics: &'a Registry,
+    shutdown: ShutdownToken,
+    errors: &'a Mutex<Option<String>>,
 }
 
 /// One remote actor's inference connection: reader decodes submissions
 /// into the batcher; a writer thread routes reply chunks back.
-fn serve_infer(
-    mut reader: FrameReader,
-    mut writer: Stream,
-    actor: usize,
-    handle: BatcherHandle,
-    opts: FleetServerOpts,
-    metrics: &Registry,
-    shutdown: ShutdownToken,
-) -> bool {
+fn serve_infer(conn: InferConn<'_>) -> bool {
+    let InferConn {
+        mut reader,
+        writer,
+        conn_id,
+        peer,
+        actor,
+        handle,
+        opts,
+        metrics,
+        shutdown,
+        errors,
+    } = conn;
     let d = handle.dims();
     let pool = handle.slab_pool();
     let rx_frames = metrics.counter("fleet.rx_frames");
     let rx_bytes = metrics.counter("fleet.rx_bytes");
     let shed_rows = metrics.counter("fleet.shed_rows");
+    let bad_frames = metrics.counter("fleet.bad_frames");
+    let reaped = metrics.counter("fleet.reaped");
     let decode_time = metrics.timer("fleet.decode_seconds");
     // The reply route: the reader holds the root sender and clones it
     // into every queued item; the writer drains the receiver until all
@@ -286,13 +441,23 @@ fn serve_infer(
     // submission was answered. That disconnect IS the drain barrier.
     let (tx, rx) = channel::<ReplyChunk>(64);
     let rows_inflight = Arc::new(AtomicUsize::new(0));
+    // The write half is shared: the writer thread serializes reply
+    // chunks through it, the reader answers `Ping` with `Pong` (the
+    // mutex is uncontended — pings only flow on idle connections).
+    let writer = Arc::new(Mutex::new(writer));
+    // Set by the reader before it releases the drain barrier: goodbye
+    // is only for clean ends, never for a death the client must treat
+    // as a reconnect signal.
+    let goodbye_ok = Arc::new(AtomicBool::new(false));
 
+    let writer2 = writer.clone();
+    let goodbye_ok2 = goodbye_ok.clone();
     let writer_rows_inflight = rows_inflight.clone();
     let tx_frames = metrics.counter("fleet.tx_frames");
     let tx_bytes = metrics.counter("fleet.tx_bytes");
     let shed_inflight = metrics.counter("fleet.shed_inflight_rows");
     let encode_time = metrics.timer("fleet.encode_seconds");
-    let writer_thread = std::thread::Builder::new()
+    let spawned = std::thread::Builder::new()
         .name("rlarch-fleet-writer".into())
         .spawn(move || {
             let (na, hid) = (d.num_actions, d.hidden);
@@ -322,7 +487,7 @@ fn serve_infer(
                         msg,
                     ),
                 }
-                if broken || writer.write_all(&wbuf).is_err() {
+                if broken || writer2.lock().unwrap().write_all(&wbuf).is_err() {
                     // Dead socket: keep draining so in-flight rows keep
                     // releasing, but count what the peer never saw.
                     broken = true;
@@ -333,50 +498,151 @@ fn serve_infer(
                 }
                 writer_rows_inflight.fetch_sub(chunk.rows, Ordering::AcqRel);
             }
-            // Drain complete. Best-effort goodbye: on server shutdown
-            // this is the clean-drain marker the worker turns into its
-            // own exit; on a dead socket the write just fails.
-            if !broken {
+            // Drain complete. Best-effort goodbye on a *clean* end only
+            // (server shutdown or peer goodbye): it is the clean-drain
+            // marker the worker turns into its own exit. A death stays
+            // a death — the peer recovers instead of shutting down.
+            let mut w = writer2.lock().unwrap();
+            if !broken && goodbye_ok2.load(Ordering::Acquire) {
                 frame::encode_goodbye(&mut wbuf);
-                let _ = writer.write_all(&wbuf);
+                let _ = w.write_all(&wbuf);
             }
-            writer.shutdown_write();
-        })
-        .expect("spawn fleet reply writer");
+            w.shutdown_write();
+        });
+    let writer_thread = match spawned {
+        Ok(h) => h,
+        Err(e) => {
+            metrics.counter("fleet.spawn_failures").inc();
+            note_first(errors, || {
+                format!("conn {conn_id} ({peer}): spawn reply writer: {e}")
+            });
+            return false; // decline: nothing was submitted yet
+        }
+    };
 
+    let pong_tx_frames = metrics.counter("fleet.tx_frames");
+    let pong_tx_bytes = metrics.counter("fleet.tx_bytes");
+    let mut pong_buf = Vec::new();
+    let mut faults = opts.faults.as_ref().map(|p| p.conn(actor as u64 + 1));
+    let mut scratch: Vec<u8> = Vec::new();
+    let mut liveness = (opts.liveness_timeout_ms > 0).then(|| {
+        Liveness::new(
+            Duration::from_millis(opts.liveness_timeout_ms),
+            Instant::now(),
+        )
+    });
     let sd = shutdown.clone();
     let stop = move || sd.is_signalled();
     let mut clean = false;
     loop {
-        match reader.read_frame(&stop) {
-            Ok(ReadOutcome::Frame) => {}
+        let wake = liveness.as_ref().map(|l| l.deadline());
+        match reader.read_frame_until(&stop, wake) {
+            Ok(ReadOutcome::Frame) => {
+                if let Some(l) = liveness.as_mut() {
+                    l.touch(Instant::now());
+                }
+            }
             Ok(ReadOutcome::Stopped) => {
                 // Server drain: stop accepting submissions; the writer
                 // flushes what's in flight and says goodbye.
                 clean = true;
                 break;
             }
-            Ok(ReadOutcome::Eof) | Err(_) => break,
+            Ok(ReadOutcome::TimedOut) => {
+                let l = liveness.as_ref().expect("timeout implies liveness");
+                let silent = l.silent_for(Instant::now()).as_millis();
+                reaped.inc();
+                note_first(errors, || {
+                    format!(
+                        "conn {conn_id} ({peer}, infer actor {actor}) reaped: \
+                         no frames for {silent} ms"
+                    )
+                });
+                // Shut the socket down so a wedged-but-alive peer sees
+                // the reap now; in-flight replies shed to it uniformly.
+                reader.shutdown_both();
+                break;
+            }
+            Ok(ReadOutcome::Eof) => {
+                note_first(errors, || {
+                    format!("conn {conn_id} ({peer}, infer actor {actor}): unexpected eof")
+                });
+                break;
+            }
+            Err(e) => {
+                note_first(errors, || {
+                    format!("conn {conn_id} ({peer}, infer actor {actor}): {e}")
+                });
+                break;
+            }
         }
         rx_frames.inc();
         rx_bytes.add((reader.frame().len() + 4) as u64);
-        let hd = match frame::parse_header(reader.frame()) {
+        // Armed fault plan: decide this frame's fate before processing.
+        let mut mutated = false;
+        if let Some(cf) = faults.as_mut() {
+            match cf.sample() {
+                FrameFault::Deliver => {}
+                FrameFault::Kill => {
+                    note_first(errors, || {
+                        format!("conn {conn_id} ({peer}): injected kill")
+                    });
+                    reader.shutdown_both();
+                    break;
+                }
+                FrameFault::Drop => continue,
+                FrameFault::Delay(dur) => std::thread::sleep(dur),
+                f @ (FrameFault::Truncate | FrameFault::Corrupt) => {
+                    scratch.clear();
+                    scratch.extend_from_slice(reader.frame());
+                    cf.mutate(&mut scratch, f);
+                    mutated = true;
+                }
+            }
+        }
+        let fr: &[u8] = if mutated { &scratch } else { reader.frame() };
+        let hd = match frame::parse_header(fr) {
             Ok(hd) => hd,
-            Err(_) => break,
+            Err(e) => {
+                bad_frames.inc();
+                note_first(errors, || {
+                    format!("conn {conn_id} ({peer}, infer actor {actor}): bad frame: {e}")
+                });
+                break;
+            }
         };
         match hd.kind {
             FrameKind::Goodbye => {
                 clean = true;
                 break;
             }
+            FrameKind::Ping => {
+                // Proof of life; echo the nonce through the shared
+                // write half (reusing the buffer: zero-alloc).
+                frame::encode_pong(&mut pong_buf, hd.ticket);
+                if writer.lock().unwrap().write_all(&pong_buf).is_ok() {
+                    pong_tx_frames.inc();
+                    pong_tx_bytes.add(pong_buf.len() as u64);
+                }
+                continue;
+            }
             FrameKind::Submit => {}
-            _ => break, // protocol violation
+            _ => {
+                note_first(errors, || {
+                    format!(
+                        "conn {conn_id} ({peer}, infer actor {actor}): \
+                         protocol violation: unexpected {:?}",
+                        hd.kind
+                    )
+                });
+                break;
+            }
         }
         let rows = hd.rows as usize;
         let mut slab = pool.acquire();
         let decoded = decode_time.time(|| {
             frame::decode_submit(
-                frame::payload(reader.frame()),
+                frame::payload(fr),
                 rows,
                 d.obs_len,
                 d.hidden,
@@ -385,8 +651,12 @@ fn serve_infer(
                 &mut slab.c,
             )
         });
-        if decoded.is_err() {
+        if let Err(e) = decoded {
             pool.release(slab);
+            bad_frames.inc();
+            note_first(errors, || {
+                format!("conn {conn_id} ({peer}, infer actor {actor}): bad submit: {e}")
+            });
             break; // garbage payload: kill the connection
         }
         // Budget check. The count is incremented for shed submissions
@@ -416,6 +686,9 @@ fn serve_infer(
         }) {
             // Batcher gone (or refused the item — it released the slab
             // either way): answer with the error instead of stalling.
+            note_first(errors, || {
+                format!("conn {conn_id} ({peer}, infer actor {actor}): submit: {e}")
+            });
             let _ = tx.send(ReplyChunk {
                 ticket: hd.ticket as usize,
                 slot0: 0,
@@ -424,6 +697,7 @@ fn serve_infer(
             });
         }
     }
+    goodbye_ok.store(clean, Ordering::Release);
     drop(tx);
     let _ = writer_thread.join();
     clean
@@ -431,20 +705,29 @@ fn serve_infer(
 
 /// One worker process's sequence-ingest connection: decode `Sequence`
 /// frames into recycled slabs and batch them into the central replay.
+#[allow(clippy::too_many_arguments)]
 fn serve_ingest(
     mut reader: FrameReader,
+    conn_id: u64,
+    peer: String,
     sink: Arc<dyn SequenceSink>,
     d: crate::runtime::ModelDims,
     opts: FleetServerOpts,
     metrics: &Registry,
     shutdown: ShutdownToken,
+    errors: &Mutex<Option<String>>,
 ) -> bool {
     let rx_frames = metrics.counter("fleet.rx_frames");
     let rx_bytes = metrics.counter("fleet.rx_bytes");
     let rx_seqs = metrics.counter("fleet.rx_sequences");
+    let bad_frames = metrics.counter("fleet.bad_frames");
     let decode_time = metrics.timer("fleet.decode_seconds");
     let pool = sink.recycle_pool();
     let mut ingest = IngestQueue::new(sink.clone(), opts.insert_batch);
+    // Ingest faults use site 0 (infer connections use actor_id + 1) so
+    // every connection's schedule depends only on (seed, site).
+    let mut faults = opts.faults.as_ref().map(|p| p.conn(0));
+    let mut scratch: Vec<u8> = Vec::new();
     let sd = shutdown.clone();
     let stop = move || sd.is_signalled();
     let mut clean = false;
@@ -455,38 +738,92 @@ fn serve_ingest(
                 clean = true;
                 break;
             }
-            Ok(ReadOutcome::Eof) | Err(_) => break,
+            Ok(ReadOutcome::TimedOut) => unreachable!("no wake deadline on ingest"),
+            Ok(ReadOutcome::Eof) => {
+                note_first(errors, || {
+                    format!("conn {conn_id} ({peer}, ingest): unexpected eof")
+                });
+                break;
+            }
+            Err(e) => {
+                note_first(errors, || format!("conn {conn_id} ({peer}, ingest): {e}"));
+                break;
+            }
         }
         rx_frames.inc();
         rx_bytes.add((reader.frame().len() + 4) as u64);
-        let hd = match frame::parse_header(reader.frame()) {
+        let mut mutated = false;
+        if let Some(cf) = faults.as_mut() {
+            match cf.sample() {
+                FrameFault::Deliver => {}
+                FrameFault::Kill => {
+                    note_first(errors, || {
+                        format!("conn {conn_id} ({peer}, ingest): injected kill")
+                    });
+                    reader.shutdown_both();
+                    break;
+                }
+                FrameFault::Drop => continue,
+                FrameFault::Delay(dur) => std::thread::sleep(dur),
+                f @ (FrameFault::Truncate | FrameFault::Corrupt) => {
+                    scratch.clear();
+                    scratch.extend_from_slice(reader.frame());
+                    cf.mutate(&mut scratch, f);
+                    mutated = true;
+                }
+            }
+        }
+        let fr: &[u8] = if mutated { &scratch } else { reader.frame() };
+        let hd = match frame::parse_header(fr) {
             Ok(hd) => hd,
-            Err(_) => break,
+            Err(e) => {
+                bad_frames.inc();
+                note_first(errors, || {
+                    format!("conn {conn_id} ({peer}, ingest): bad frame: {e}")
+                });
+                break;
+            }
         };
         match hd.kind {
             FrameKind::Goodbye => {
                 clean = true;
                 break;
             }
+            // A ping on the one-way ingest path has no reply channel;
+            // receiving it was already the proof of life.
+            FrameKind::Ping => continue,
             FrameKind::Sequence => {}
-            _ => break,
+            _ => {
+                note_first(errors, || {
+                    format!(
+                        "conn {conn_id} ({peer}, ingest): protocol violation: \
+                         unexpected {:?}",
+                        hd.kind
+                    )
+                });
+                break;
+            }
         }
         let mut seq = match &pool {
             Some(p) => p.acquire(d.seq_len, d.obs_len, d.hidden, 0),
             None => Default::default(),
         };
         let decoded = decode_time.time(|| {
-            frame::decode_sequence(frame::payload(reader.frame()), d.obs_len, d.hidden, &mut seq)
+            frame::decode_sequence(frame::payload(fr), d.obs_len, d.hidden, &mut seq)
         });
         match decoded {
             Ok(()) => {
                 rx_seqs.inc();
                 ingest.push(seq);
             }
-            Err(_) => {
+            Err(e) => {
                 if let Some(p) = &pool {
                     p.put(seq);
                 }
+                bad_frames.inc();
+                note_first(errors, || {
+                    format!("conn {conn_id} ({peer}, ingest): bad sequence: {e}")
+                });
                 break;
             }
         }

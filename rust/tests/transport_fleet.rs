@@ -8,10 +8,11 @@
 //! frames, same handshake, same drain protocol as `rlarch serve` /
 //! `rlarch actor --connect`, minus the fork.
 
-use rlarch::config::{BatcherConfig, SystemConfig};
+use rlarch::config::{BatcherConfig, FaultsConfig, SystemConfig};
 use rlarch::coordinator::actor::{run_actor, ActorArgs};
-use rlarch::coordinator::Batcher;
+use rlarch::coordinator::{run_serve, run_worker, Batcher};
 use rlarch::exec::ShutdownToken;
+use rlarch::fault::{FaultPlan, FrameFault};
 use rlarch::metrics::Registry;
 use rlarch::policy::{CentralClient, PolicyClient};
 use rlarch::replay::{ReplayConfig, SequenceReplay};
@@ -19,8 +20,8 @@ use rlarch::rl::Sequence;
 use rlarch::runtime::{Backend, MockModel, ModelDims};
 use rlarch::transport::frame::{self, FrameKind, Role};
 use rlarch::transport::{
-    dial, Addr, FleetServer, FleetServerOpts, Listener, RemoteClient, RemoteClientOpts,
-    RemoteIngest,
+    dial, Addr, FleetServer, FleetServerOpts, FrameReader, Listener, ReadOutcome,
+    RemoteClient, RemoteClientOpts, RemoteIngest, Stream,
 };
 use rlarch::util::prng::Pcg32;
 use std::collections::BTreeMap;
@@ -160,9 +161,9 @@ fn codec_rejects_truncation_and_corruption() {
         let mut bad = fr.clone();
         bad[rng.index(2)] ^= 0x40;
         assert!(frame::parse_header(&bad).is_err());
-        // Unknown kind.
+        // Unknown kind (Ping=7 / Pong=8 are the last valid ones).
         let mut bad = fr.clone();
-        bad[2] = 7 + rng.index(200) as u8;
+        bad[2] = 9 + rng.index(200) as u8;
         assert!(frame::parse_header(&bad).is_err());
         // Truncated payload: length disagrees with rows * dims.
         let (mut o2, mut h2, mut c2) = (Vec::new(), Vec::new(), Vec::new());
@@ -537,6 +538,7 @@ fn killed_worker_is_counted_and_survivors_plus_rejoiners_proceed() {
                 hidden: d.hidden as u32,
                 num_actions: d.num_actions as u32,
                 seq_len: d.seq_len as u32,
+                generation: 0,
             },
         );
         stream.write_all(&buf).unwrap();
@@ -601,6 +603,7 @@ fn over_budget_submissions_are_shed_and_transparently_retried() {
         FleetServerOpts {
             max_inflight_rows: 1,
             insert_batch: 1,
+            ..Default::default()
         },
         metrics.clone(),
         shutdown.clone(),
@@ -641,4 +644,541 @@ fn over_budget_submissions_are_shed_and_transparently_retried() {
     server.join();
     drop(handle);
     batcher.join();
+}
+
+// ---------------------------------------------------------------------------
+// Fault tolerance (DESIGN.md §15)
+// ---------------------------------------------------------------------------
+
+/// Dial + manual handshake, returning the write half and a reader that
+/// has consumed the server's one reply frame (hello ack or refusal) —
+/// callers inspect `reader.frame()`.
+fn raw_handshake(
+    addr: &Addr,
+    d: ModelDims,
+    actor_id: u32,
+    generation: u32,
+) -> (Stream, FrameReader) {
+    let stream = dial(addr, 3, 10, None).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_millis(50)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = FrameReader::new(stream);
+    let mut buf = Vec::new();
+    frame::encode_hello(
+        &mut buf,
+        &frame::Hello {
+            role: Role::Infer,
+            actor_id,
+            obs_len: d.obs_len as u32,
+            hidden: d.hidden as u32,
+            num_actions: d.num_actions as u32,
+            seq_len: d.seq_len as u32,
+            generation,
+        },
+    );
+    writer.write_all(&buf).unwrap();
+    assert_eq!(reader.read_frame(&|| false).unwrap(), ReadOutcome::Frame);
+    (writer, reader)
+}
+
+#[test]
+fn fault_plan_mutations_never_panic_the_decoder() {
+    // FaultPlan-driven corruption fuzz over random frame kinds:
+    // whatever the plan's truncate/corrupt stream does to a frame, the
+    // defensive decode path (parse, then kind-specific decode) must
+    // reject it — never panic, never mis-scatter — and the plan's
+    // ledger must count exactly the mutated frames.
+    let plan = FaultPlan::from_config(&FaultsConfig {
+        seed: 0xC0FFEE,
+        truncate_rate: 0.5,
+        corrupt_rate: 0.5,
+        ..Default::default()
+    })
+    .expect("armed plan");
+    let mut faults = plan.conn(42);
+    let mut rng = Pcg32::seeded(0xFA17);
+    let mut buf = Vec::new();
+    let mut mutated = 0u64;
+    for case in 0..300 {
+        let rows = 1 + rng.index(4);
+        let obs_len = 1 + rng.index(8);
+        let hidden = 1 + rng.index(4);
+        let na = 1 + rng.index(4);
+        match rng.index(4) {
+            0 => frame::encode_submit(
+                &mut buf,
+                rng.next_u64(),
+                rows,
+                &vec![0.5; rows * obs_len],
+                &vec![0.0; rows * hidden],
+                &vec![0.0; rows * hidden],
+            ),
+            1 => frame::encode_reply_ok(
+                &mut buf,
+                rng.next_u64(),
+                0,
+                rows,
+                &vec![0.5; rows * na],
+                &vec![0.0; rows * hidden],
+                &vec![0.0; rows * hidden],
+            ),
+            2 => frame::encode_sequence(
+                &mut buf,
+                &Sequence {
+                    obs: vec![1.0; 2 * obs_len],
+                    actions: vec![0; 2],
+                    rewards: vec![0.0; 2],
+                    discounts: vec![0.9; 2],
+                    h0: vec![0.0; hidden],
+                    c0: vec![0.0; hidden],
+                    actor_id: 0,
+                    valid_len: 2,
+                },
+            ),
+            _ => frame::encode_ping(&mut buf, rng.next_u64()),
+        }
+        let mut fr = strip_len(&buf).to_vec();
+        let fault = faults.sample();
+        let mutating = matches!(fault, FrameFault::Truncate | FrameFault::Corrupt);
+        faults.mutate(&mut fr, fault);
+        if !mutating {
+            continue;
+        }
+        mutated += 1;
+        let rejected = match frame::parse_header(&fr) {
+            Err(_) => true,
+            Ok(hd) => match hd.kind {
+                FrameKind::Submit => {
+                    let (mut o, mut h, mut c) = (Vec::new(), Vec::new(), Vec::new());
+                    frame::decode_submit(
+                        frame::payload(&fr),
+                        hd.rows as usize,
+                        obs_len,
+                        hidden,
+                        &mut o,
+                        &mut h,
+                        &mut c,
+                    )
+                    .is_err()
+                }
+                FrameKind::Sequence => {
+                    let mut out = Sequence::default();
+                    frame::decode_sequence(frame::payload(&fr), obs_len, hidden, &mut out)
+                        .is_err()
+                }
+                FrameKind::ReplyOk => {
+                    let (mut q, mut h, mut c) = (Vec::new(), Vec::new(), Vec::new());
+                    frame::decode_reply_ok(
+                        frame::payload(&fr),
+                        hd.rows as usize,
+                        na,
+                        hidden,
+                        &mut q,
+                        &mut h,
+                        &mut c,
+                    )
+                    .is_err()
+                }
+                // Header-only kinds: a truncation never leaves a whole
+                // header behind, so reaching here would mean delivery.
+                _ => true,
+            },
+        };
+        assert!(rejected, "case {case}: mutated frame must be rejected");
+    }
+    assert!(mutated > 0, "the plan never drew a mutating fault");
+    let inj = plan.injected();
+    assert_eq!(inj.truncated + inj.corrupted, mutated, "ledger reconciles");
+}
+
+#[test]
+fn plan_mutated_frames_on_the_wire_increment_bad_frames() {
+    // The server half of the same property: a plan-mutated frame
+    // arriving on a real connection is rejected and counted in
+    // `fleet.bad_frames`, the connection is closed, and the server
+    // stays healthy for the next one.
+    let d = policy_dims();
+    let srv = TestServer::start(
+        "badframes",
+        d,
+        BatcherConfig::default(),
+        FleetServerOpts::default(),
+    );
+    let plan = FaultPlan::from_config(&FaultsConfig {
+        seed: 3,
+        truncate_rate: 1.0,
+        ..Default::default()
+    })
+    .unwrap();
+    let bad = srv.metrics.counter("fleet.bad_frames");
+    for i in 0..2u64 {
+        let (mut writer, _reader) = raw_handshake(&srv.addr, d, 0, 0);
+        let mut buf = Vec::new();
+        frame::encode_submit(
+            &mut buf,
+            i,
+            1,
+            &vec![0.5; d.obs_len],
+            &vec![0.0; d.hidden],
+            &vec![0.0; d.hidden],
+        );
+        let mut fr = buf[4..].to_vec();
+        let mut faults = plan.conn(7);
+        let fault = faults.sample();
+        assert_eq!(fault, FrameFault::Truncate, "rate 1.0 always truncates");
+        faults.mutate(&mut fr, fault);
+        let mut wire = (fr.len() as u32).to_le_bytes().to_vec();
+        wire.extend_from_slice(&fr);
+        writer.write_all(&wire).unwrap();
+        wait_for(|| bad.get() >= i + 1, "the bad frame to be counted");
+    }
+    // A clean client still round-trips after the garbage.
+    let wm = Registry::new();
+    let mut client = RemoteClient::connect(
+        &srv.addr,
+        0,
+        d,
+        RemoteClientOpts::default(),
+        &wm,
+        ShutdownToken::new(),
+    )
+    .unwrap();
+    roundtrip(&mut client, &d, 0.5);
+    drop(client);
+    srv.stop();
+}
+
+#[test]
+fn silent_connection_is_reaped_and_a_heartbeating_waiter_is_not() {
+    // Liveness: a handshaked connection that goes silent past the
+    // window is reaped (counted + attributed); a client blocked in a
+    // long `wait` survives the same window because its heartbeat pings
+    // are proof of life.
+    let d = policy_dims();
+    let addr = uds_addr("reap");
+    let backend = Backend::Mock(Arc::new(
+        MockModel::new(d, 7).with_infer_latency(Duration::from_millis(300)),
+    ));
+    let metrics = Registry::new();
+    let shutdown = ShutdownToken::new();
+    let sink = Arc::new(SequenceReplay::new(ReplayConfig {
+        capacity: 64,
+        ..Default::default()
+    }));
+    let (batcher, handle) =
+        Batcher::spawn(BatcherConfig::default(), backend, metrics.clone());
+    let listener = Listener::bind(&addr).unwrap();
+    let server = FleetServer::spawn(
+        listener,
+        handle.clone(),
+        sink,
+        FleetServerOpts {
+            liveness_timeout_ms: 120,
+            ..Default::default()
+        },
+        metrics.clone(),
+        shutdown.clone(),
+    );
+    let errors = server.error_slot();
+
+    // The victim handshakes, then never speaks again.
+    let (_silent_writer, _silent_reader) = raw_handshake(&addr, d, 1, 0);
+
+    // The waiter: 300ms replies against a 120ms window — only its 40ms
+    // heartbeat keeps the connection alive through the wait.
+    let wm = Registry::new();
+    let mut client = RemoteClient::connect(
+        &addr,
+        0,
+        d,
+        RemoteClientOpts {
+            heartbeat_ms: 40,
+            ..Default::default()
+        },
+        &wm,
+        ShutdownToken::new(),
+    )
+    .unwrap();
+    roundtrip(&mut client, &d, 0.5);
+    let reaped = metrics.counter("fleet.reaped");
+    wait_for(|| reaped.get() >= 1, "the silent connection to be reaped");
+    let msg = errors.lock().unwrap().clone().expect("attributed reap");
+    assert!(msg.contains("reaped"), "unexpected first error: {msg}");
+    assert_eq!(reaped.get(), 1, "only the silent connection was reaped");
+    // The heartbeating client is still on its original connection.
+    roundtrip(&mut client, &d, 0.75);
+    assert_eq!(wm.counter("fleet.client_reconnects").get(), 0);
+
+    drop(client);
+    shutdown.signal();
+    server.join();
+    drop(handle);
+    batcher.join();
+}
+
+#[test]
+fn ticket_deadline_reconnects_and_resubmits_through_a_mute_server() {
+    // Deadline: a server that swallows submissions without replying
+    // must trip the client's per-ticket deadline (EWMA floor =
+    // liveness_ms), which reconnects, resends the retained frame, and
+    // completes against the next (honest) incarnation.
+    let d = policy_dims();
+    let addr = uds_addr("deadline");
+    let listener = Listener::bind(&addr).unwrap();
+    let srv = std::thread::spawn(move || {
+        // One handler thread per connection: the reconnecting client
+        // holds its dead connection open until the new handshake
+        // completes, so the accept loop must keep accepting.
+        let mut handlers = Vec::new();
+        for conn in 1..=2 {
+            let stream = loop {
+                if let Some(s) = listener.poll_accept().unwrap() {
+                    break s;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            };
+            handlers.push(std::thread::spawn(move || {
+                let mut buf = Vec::new();
+                let mut writer = stream.try_clone().unwrap();
+                let mut reader = FrameReader::new(stream);
+                assert_eq!(reader.read_frame(&|| false).unwrap(), ReadOutcome::Frame);
+                let hello = frame::decode_hello(frame::payload(reader.frame())).unwrap();
+                frame::encode_hello(&mut buf, &hello);
+                writer.write_all(&buf).unwrap();
+                loop {
+                    match reader.read_frame(&|| false) {
+                        Ok(ReadOutcome::Frame) => {}
+                        _ => break, // EOF: the client moved on (or is done)
+                    }
+                    let hd = frame::parse_header(reader.frame()).unwrap();
+                    // Connection 1 is mute; connection 2 answers.
+                    if conn == 2 && hd.kind == FrameKind::Submit {
+                        frame::encode_reply_ok(
+                            &mut buf,
+                            hd.ticket,
+                            0,
+                            1,
+                            &vec![0.25; d.num_actions],
+                            &vec![0.0; d.hidden],
+                            &vec![0.0; d.hidden],
+                        );
+                        writer.write_all(&buf).unwrap();
+                    }
+                }
+            }));
+        }
+        for h in handlers {
+            h.join().unwrap();
+        }
+    });
+
+    let wm = Registry::new();
+    let mut client = RemoteClient::connect(
+        &addr,
+        0,
+        d,
+        RemoteClientOpts {
+            liveness_ms: 80,
+            ..Default::default()
+        },
+        &wm,
+        ShutdownToken::new(),
+    )
+    .unwrap();
+    roundtrip(&mut client, &d, 0.5);
+    assert!(wm.counter("fleet.timeouts").get() >= 1, "deadline tripped");
+    assert!(
+        wm.counter("fleet.client_reconnects").get() >= 1,
+        "deadline recovery reconnected"
+    );
+    drop(client);
+    srv.join().unwrap();
+}
+
+#[test]
+fn stale_generation_handshake_is_refused_until_resync() {
+    // Generation fence: a worker claiming sync to an older incarnation
+    // is refused with the `stale generation` marker; a fresh handshake
+    // (generation 0, which is how RemoteClient::establish resyncs) is
+    // accepted and serves.
+    let d = policy_dims();
+    let srv = TestServer::start(
+        "stalegen",
+        d,
+        BatcherConfig::default(),
+        FleetServerOpts {
+            generation: 5,
+            ..Default::default()
+        },
+    );
+    let (_writer, reader) = raw_handshake(&srv.addr, d, 0, 3);
+    let hd = frame::parse_header(reader.frame()).unwrap();
+    assert_eq!(hd.kind, FrameKind::ReplyErr, "stale worker is refused");
+    let msg = frame::decode_reply_err(frame::payload(reader.frame())).unwrap();
+    assert!(msg.starts_with("stale generation"), "got: {msg}");
+
+    let wm = Registry::new();
+    let mut client = RemoteClient::connect(
+        &srv.addr,
+        0,
+        d,
+        RemoteClientOpts::default(),
+        &wm,
+        ShutdownToken::new(),
+    )
+    .unwrap();
+    roundtrip(&mut client, &d, 0.5);
+    drop(client);
+    srv.stop();
+}
+
+#[test]
+fn injected_actor_panic_is_supervised_and_restarted_within_budget() {
+    // Supervision: the plan's one-shot panic kills an actor thread
+    // mid-run; the worker supervisor catches it, counts the restart,
+    // reconnects, and the fleet completes with no actor failure.
+    let (mut cfg, dims) = fleet_cfg();
+    let srv = TestServer::start("panic", dims, cfg.batcher.clone(), FleetServerOpts::default());
+    cfg.fleet.connect = srv.addr.to_string();
+    cfg.faults.panic_actor = 1;
+    cfg.faults.panic_at_step = 4;
+    let wm = Registry::new();
+    let report =
+        run_worker(&cfg, dims, 0, cfg.actors.num_actors, Some(12), wm.clone()).unwrap();
+    assert_eq!(report.actor_restarts, 1, "one-shot panic restarts exactly once");
+    assert!(
+        report.first_error.is_none(),
+        "budget covers one panic: {:?}",
+        report.first_error
+    );
+    assert_eq!(report.actors.len(), cfg.actors.num_actors);
+    assert!(report.env_steps > 0);
+    assert_eq!(wm.counter("fleet.actor_restarts").get(), 1);
+    srv.stop();
+}
+
+/// One serve + worker incarnation over `addr`; returns the serve
+/// report (the worker's is drain-dependent, see `WorkerReport` docs).
+fn serve_once(
+    cfg: &SystemConfig,
+    dims: ModelDims,
+    server_metrics: Registry,
+) -> rlarch::coordinator::ServeReport {
+    let backend = Backend::Mock(Arc::new(MockModel::new(dims, cfg.seed)));
+    let scfg = cfg.clone();
+    let serve =
+        std::thread::spawn(move || run_serve(&scfg, backend, server_metrics).unwrap());
+    let wcfg = cfg.clone();
+    let worker = std::thread::spawn(move || {
+        run_worker(&wcfg, dims, 0, wcfg.actors.num_actors, None, Registry::new()).unwrap()
+    });
+    let report = serve.join().unwrap();
+    worker.join().unwrap();
+    report
+}
+
+#[test]
+fn serve_checkpoints_and_a_restart_resumes_with_a_generation_bump() {
+    // Checkpoint/restore: run 1 snapshots periodically and on
+    // completion; run 2 (same seed, bigger step budget) adopts the
+    // final snapshot — learner steps resume, generation bumps, and a
+    // worker synced fresh is accepted by the new incarnation.
+    let (mut cfg, dims) = fleet_cfg();
+    let addr = uds_addr("ckpt");
+    cfg.fleet.listen = addr.to_string();
+    cfg.fleet.connect = addr.to_string();
+    cfg.learner.min_replay = 8;
+    cfg.learner.max_steps = 12;
+    let ckdir = std::env::temp_dir().join(format!("rlarch_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ckdir);
+    cfg.fleet.checkpoint_dir = ckdir.to_string_lossy().into_owned();
+    cfg.fleet.checkpoint_every = 5;
+
+    let r1 = serve_once(&cfg, dims, Registry::new());
+    assert_eq!(r1.generation, 1, "first checkpointed incarnation");
+    assert_eq!(r1.resumed_steps, 0);
+    assert!(r1.checkpoints >= 1, "periodic + final snapshots");
+    assert_eq!(r1.learner.steps, 12);
+    assert!(ckdir.join("state.kv").exists(), "state snapshot on disk");
+    assert!(ckdir.join("params.bin").exists(), "params snapshot on disk");
+
+    cfg.learner.max_steps = 20;
+    let r2 = serve_once(&cfg, dims, Registry::new());
+    assert_eq!(r2.generation, 2, "each incarnation bumps the generation");
+    assert_eq!(r2.resumed_steps, 12, "resumed at run 1's final step");
+    assert_eq!(r2.learner.steps, 20, "trained only the remaining steps");
+    let _ = std::fs::remove_dir_all(&ckdir);
+}
+
+#[test]
+fn chaos_soak_completes_with_every_fault_accounted() {
+    // The headline: a loopback fleet under a seeded plan of drops,
+    // delays, corruption, truncation, kills, inference stalls, and an
+    // actor panic still completes training — zero hung tickets — and
+    // the `fleet.*` metrics reconcile against the plan's own ledger.
+    let (mut cfg, dims) = fleet_cfg();
+    let addr = uds_addr("chaos");
+    cfg.fleet.listen = addr.to_string();
+    cfg.fleet.connect = addr.to_string();
+    cfg.learner.min_replay = 8;
+    cfg.learner.max_steps = 25;
+    cfg.fleet.heartbeat_interval_ms = 40;
+    cfg.fleet.liveness_timeout_ms = 150;
+    cfg.faults = FaultsConfig {
+        seed: 2020,
+        drop_rate: 0.01,
+        delay_rate: 0.05,
+        delay_ms: 2,
+        truncate_rate: 0.01,
+        corrupt_rate: 0.01,
+        kill_rate: 0.005,
+        stall_rate: 0.05,
+        stall_ms: 5,
+        panic_actor: 0,
+        panic_at_step: 3,
+    };
+
+    let sm = Registry::new();
+    let backend = Backend::Mock(Arc::new(MockModel::new(dims, cfg.seed)));
+    let scfg = cfg.clone();
+    let sm2 = sm.clone();
+    let serve = std::thread::spawn(move || run_serve(&scfg, backend, sm2).unwrap());
+    let wm = Registry::new();
+    let wcfg = cfg.clone();
+    let wm2 = wm.clone();
+    let worker = std::thread::spawn(move || {
+        run_worker(&wcfg, dims, 0, wcfg.actors.num_actors, None, wm2).unwrap()
+    });
+    let report = serve.join().unwrap();
+    let wreport = worker.join().unwrap();
+
+    assert_eq!(report.learner.steps, 25, "the learner completed under chaos");
+    let inj = report.injected.expect("armed plan records a ledger");
+    assert!(
+        inj.killed
+            + inj.dropped
+            + inj.delayed
+            + inj.truncated
+            + inj.corrupted
+            + inj.stalled
+            > 0,
+        "the plan actually fired: {inj:?}"
+    );
+    // Every mutated frame was rejected by the decoder and counted —
+    // nothing corrupt was ever delivered.
+    assert_eq!(
+        sm.counter("fleet.bad_frames").get(),
+        inj.truncated + inj.corrupted,
+        "bad_frames reconciles against the ledger: {inj:?}"
+    );
+    // Every injected kill closed a connection the server noticed.
+    assert!(
+        sm.counter("fleet.disconnects").get() >= inj.killed,
+        "kills surface as disconnects: {inj:?}"
+    );
+    // The one-shot actor panic restarted exactly once, within budget.
+    assert_eq!(wreport.actor_restarts, 1);
+    assert_eq!(wm.counter("fleet.actor_restarts").get(), 1);
 }
