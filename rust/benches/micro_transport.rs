@@ -14,6 +14,10 @@
 //! deadline state machines run once per quiet interval on *every*
 //! connection, so their steady state is gated allocation-free too.
 //!
+//! So does the serving gate (DESIGN.md §16): admission decisions,
+//! in-flight row accounting, and breaker feeding sit on every `Submit`
+//! of every connection, and are gated allocation-free the same way.
+//!
 //! `--quick` shrinks every loop (the CI smoke run); the allocation
 //! gates are asserted in both modes.
 
@@ -188,6 +192,99 @@ fn assert_liveness_allocation_free(iters: usize) {
     assert!(pings > 0, "the heartbeat never fired — the gate measured nothing");
 }
 
+/// The §16 gate: the serving-gate hot path — the admission switch,
+/// global in-flight accounting, overload-ladder decisions across all
+/// three priority classes, and breaker feeding — ticking once per
+/// millisecond of synthetic clock. The gate is consulted on *every*
+/// submission of every connection, so after construction it must never
+/// enter the allocator: shed reasons are `&'static`, the policy is
+/// Copy-struct arithmetic, and the breaker is a clock-free state
+/// machine. Backend failures come in bursts of 8 so the breaker walks
+/// closed → open → half-open → closed (and the fail-fast path runs).
+fn assert_admission_allocation_free(iters: usize) {
+    use rlarch::serve::{
+        AdmissionDecision, AdmissionPolicy, CircuitBreaker, PriorityClass,
+        ServeGate,
+    };
+    let t0 = Instant::now();
+    let gate = ServeGate::new(
+        Some(AdmissionPolicy::new(
+            Duration::from_millis(8),
+            64,
+            256,
+            Duration::from_millis(4),
+            t0,
+        )),
+        Some(CircuitBreaker::new(3, Duration::from_millis(5), t0)),
+    );
+    let classes =
+        [PriorityClass::Actor, PriorityClass::Eval, PriorityClass::Bulk];
+    let mut now = t0;
+    let mut admitted = 0u64;
+    let a0 = alloc_calls();
+    // The mixed loop: every hot-path operation in serve_infer's order,
+    // classes rotating, backend failures in bursts of 8 ticks.
+    for i in 0..iters {
+        now += Duration::from_millis(1);
+        let class = classes[i % 3];
+        let queued = gate.begin_rows(8);
+        if gate.breaker_allow(now)
+            && gate.is_admitting()
+            && gate.decide(class, 8, queued, now) == AdmissionDecision::Admit
+        {
+            admitted += 1;
+            if (i / 8) % 2 == 0 {
+                gate.breaker_on_failure(now);
+            } else {
+                gate.breaker_on_success();
+            }
+        }
+        gate.end_rows(8);
+        if i % 97 == 0 {
+            // The reload drain switch flips on the hot path too.
+            gate.set_admitting(false);
+            gate.set_admitting(true);
+        }
+    }
+    // Deterministic coda, still under the gate: saturate the overload
+    // window with bulk rows until the ladder sheds, then walk the
+    // breaker through open → fail-fast → half-open probe → closed.
+    now += Duration::from_millis(1);
+    let mut bulk_shed = 0u64;
+    for _ in 0..20 {
+        let queued = gate.begin_rows(8);
+        if gate.decide(PriorityClass::Bulk, 8, queued, now)
+            != AdmissionDecision::Admit
+        {
+            bulk_shed += 1;
+        }
+        gate.end_rows(8);
+    }
+    for _ in 0..3 {
+        gate.breaker_on_failure(now);
+    }
+    let open_rejects = !gate.breaker_allow(now);
+    now += Duration::from_millis(6); // past the cooloff
+    let half_open_probe = gate.breaker_allow(now);
+    gate.breaker_on_success();
+    let closed_again = gate.breaker_allow(now);
+
+    let allocs = alloc_calls() - a0;
+    assert_eq!(
+        allocs, 0,
+        "serving gate allocated {allocs} times over {iters} admission \
+         decisions (hard requirement: 0)"
+    );
+    assert_eq!(gate.inflight_rows(), 0, "begin/end row accounting balanced");
+    assert!(admitted > 0, "the mixed loop admitted nothing");
+    assert!(bulk_shed > 0, "the overload ladder never shed bulk traffic");
+    assert!(
+        open_rejects && half_open_probe && closed_again,
+        "breaker cycle broke (open {open_rejects}, probe {half_open_probe}, \
+         closed {closed_again})"
+    );
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     println!(
@@ -312,5 +409,12 @@ fn main() {
     println!(
         "heartbeat/liveness/deadline control plane allocator entries over \
          {live_iters} 1ms ticks: 0 (hard requirement)"
+    );
+
+    let admit_iters = if quick { 2_000 } else { 50_000 };
+    assert_admission_allocation_free(admit_iters);
+    println!(
+        "serving gate (admission + breaker) allocator entries over \
+         {admit_iters} decisions: 0 (hard requirement)"
     );
 }

@@ -8,7 +8,7 @@ pub mod types;
 pub use types::{
     ActorConfig, BatcherConfig, ConfigError, CpuModelConfig, EnvConfig, FaultsConfig,
     FleetConfig, GpuModelConfig, InferenceMode, LearnerConfig, PowerModelConfig,
-    ReplayBufferConfig, SystemConfig, TelemetryConfig,
+    ReplayBufferConfig, ServeConfig, SystemConfig, TelemetryConfig,
 };
 
 use std::path::Path;

@@ -685,6 +685,10 @@ pub struct FleetConfig {
     pub checkpoint_dir: String,
     /// Learner steps between snapshots (when `checkpoint_dir` is set).
     pub checkpoint_every: u64,
+    /// Bound on how long a hot-reload or graceful shutdown waits for
+    /// in-flight tickets to drain before force-proceeding (stragglers
+    /// are failed with an attributed error; `serve.drain_timeouts`).
+    pub drain_timeout_ms: u64,
 }
 
 impl Default for FleetConfig {
@@ -700,6 +704,7 @@ impl Default for FleetConfig {
             actor_restart_budget: 2,
             checkpoint_dir: String::new(),
             checkpoint_every: 25,
+            drain_timeout_ms: 2_000,
         }
     }
 }
@@ -742,6 +747,11 @@ impl FleetConfig {
                 v,
                 "fleet.checkpoint_every",
                 d.checkpoint_every as f64,
+            ) as u64,
+            drain_timeout_ms: get_f64(
+                v,
+                "fleet.drain_timeout_ms",
+                d.drain_timeout_ms as f64,
             ) as u64,
         }
     }
@@ -922,6 +932,109 @@ impl FaultsConfig {
     }
 }
 
+/// Resilient policy serving (`[serve]`; DESIGN.md §16): the control
+/// socket, circuit breaker, and admission-control knobs around
+/// `rlarch serve`. Everything defaults off — with this section at its
+/// defaults the serving gate is never constructed and the data plane
+/// is bit-for-bit the PR 9 path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Control-plane listen address (`tcp:host:port` / `uds:/path`);
+    /// empty (default) = no control socket.
+    pub control: String,
+    /// Consecutive backend errors that trip the circuit breaker open
+    /// (fail-fast shed replies while open). 0 (default) = no breaker.
+    pub backend_failure_threshold: usize,
+    /// How long an open breaker waits before admitting one half-open
+    /// probe to the backend.
+    pub breaker_cooloff_ms: u64,
+    /// Bound on fleet-wide admitted-and-unreplied rows; non-`actor`
+    /// submissions beyond it are shed. 0 (default) = unbounded.
+    pub admission_rows: usize,
+    /// Sliding window of the overload detector (8 buckets).
+    pub overload_window_ms: u64,
+    /// Admitted rows per window at which the overload ladder starts
+    /// shedding: `bulk` at 1x, `eval` too at 1.5x, `actor` never.
+    /// 0 (default) = detector off.
+    pub overload_rows: usize,
+    /// Deadline target for non-`actor` traffic: shed when the queued
+    /// backlog divided by observed window throughput exceeds this.
+    /// 0 (default) = no deadline shedding.
+    pub deadline_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            control: String::new(),
+            backend_failure_threshold: 0,
+            breaker_cooloff_ms: 1_000,
+            admission_rows: 0,
+            overload_window_ms: 1_000,
+            overload_rows: 0,
+            deadline_ms: 0,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Whether any serving feature is configured (false = the serve
+    /// gate is never built; bit-for-bit the PR 9 data plane).
+    pub fn enabled(&self) -> bool {
+        !self.control.is_empty()
+            || self.backend_failure_threshold > 0
+            || self.admission_rows > 0
+            || self.overload_rows > 0
+            || self.deadline_ms > 0
+    }
+
+    pub fn from_value(v: &Value) -> Self {
+        let d = Self::default();
+        Self {
+            control: get_str(v, "serve.control", &d.control),
+            backend_failure_threshold: get_usize(
+                v,
+                "serve.backend_failure_threshold",
+                d.backend_failure_threshold,
+            ),
+            breaker_cooloff_ms: get_f64(
+                v,
+                "serve.breaker_cooloff_ms",
+                d.breaker_cooloff_ms as f64,
+            ) as u64,
+            admission_rows: get_usize(v, "serve.admission_rows", d.admission_rows),
+            overload_window_ms: get_f64(
+                v,
+                "serve.overload_window_ms",
+                d.overload_window_ms as f64,
+            ) as u64,
+            overload_rows: get_usize(v, "serve.overload_rows", d.overload_rows),
+            deadline_ms: get_f64(v, "serve.deadline_ms", d.deadline_ms as f64)
+                as u64,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.backend_failure_threshold > 0 && self.breaker_cooloff_ms == 0 {
+            return Err(ConfigError::Invalid(
+                "serve.breaker_cooloff_ms must be > 0 when \
+                 backend_failure_threshold is set"
+                    .into(),
+            ));
+        }
+        if (self.overload_rows > 0 || self.deadline_ms > 0)
+            && self.overload_window_ms == 0
+        {
+            return Err(ConfigError::Invalid(
+                "serve.overload_window_ms must be > 0 when overload_rows or \
+                 deadline_ms is set"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Top-level
 // ---------------------------------------------------------------------------
@@ -952,6 +1065,7 @@ pub struct SystemConfig {
     pub telemetry: TelemetryConfig,
     pub fleet: FleetConfig,
     pub faults: FaultsConfig,
+    pub serve: ServeConfig,
 }
 
 impl Default for SystemConfig {
@@ -972,6 +1086,7 @@ impl Default for SystemConfig {
             telemetry: TelemetryConfig::default(),
             fleet: FleetConfig::default(),
             faults: FaultsConfig::default(),
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -1080,6 +1195,19 @@ const SECTION_KEYS: &[(&str, &[&str])] = &[
             "actor_restart_budget",
             "checkpoint_dir",
             "checkpoint_every",
+            "drain_timeout_ms",
+        ],
+    ),
+    (
+        "serve",
+        &[
+            "control",
+            "backend_failure_threshold",
+            "breaker_cooloff_ms",
+            "admission_rows",
+            "overload_window_ms",
+            "overload_rows",
+            "deadline_ms",
         ],
     ),
     (
@@ -1130,6 +1258,7 @@ impl SystemConfig {
             telemetry: TelemetryConfig::from_value(v),
             fleet: FleetConfig::from_value(v),
             faults: FaultsConfig::from_value(v),
+            serve: ServeConfig::from_value(v),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -1148,6 +1277,7 @@ impl SystemConfig {
         self.telemetry.validate()?;
         self.fleet.validate()?;
         self.faults.validate()?;
+        self.serve.validate()?;
         // Cross-section: the buffer must be able to hold a train batch
         // and the fill threshold the learner waits for.
         if self.replay.capacity < self.learner.train_batch {
@@ -1482,6 +1612,51 @@ hw_threads = 40
             err.contains("telemetry.snapshot_interval_ms must be > 0"),
             "got: {err}"
         );
+    }
+
+    #[test]
+    fn parses_serve_section_and_defaults_off() {
+        let cfg = SystemConfig::from_toml(
+            "[serve]\ncontrol = \"uds:/tmp/ctl.sock\"\n\
+             backend_failure_threshold = 3\nbreaker_cooloff_ms = 250\n\
+             admission_rows = 512\noverload_window_ms = 400\n\
+             overload_rows = 1000\ndeadline_ms = 50\n\
+             [fleet]\ndrain_timeout_ms = 750\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.control, "uds:/tmp/ctl.sock");
+        assert_eq!(cfg.serve.backend_failure_threshold, 3);
+        assert_eq!(cfg.serve.breaker_cooloff_ms, 250);
+        assert_eq!(cfg.serve.admission_rows, 512);
+        assert_eq!(cfg.serve.overload_window_ms, 400);
+        assert_eq!(cfg.serve.overload_rows, 1000);
+        assert_eq!(cfg.serve.deadline_ms, 50);
+        assert_eq!(cfg.fleet.drain_timeout_ms, 750);
+        assert!(cfg.serve.enabled());
+        // Everything off by default: the PR 9 identity path.
+        let d = SystemConfig::default();
+        assert!(!d.serve.enabled());
+        assert_eq!(d.fleet.drain_timeout_ms, 2_000);
+
+        let err = SystemConfig::from_toml("[serve]\ncontorl = \"x\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("unknown key `contorl` in section `serve`"),
+            "got: {err}"
+        );
+        let err = SystemConfig::from_toml(
+            "[serve]\nbackend_failure_threshold = 2\nbreaker_cooloff_ms = 0\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("breaker_cooloff_ms"), "got: {err}");
+        let err = SystemConfig::from_toml(
+            "[serve]\noverload_rows = 10\noverload_window_ms = 0\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("overload_window_ms"), "got: {err}");
     }
 
     #[test]

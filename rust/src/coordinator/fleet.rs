@@ -61,12 +61,14 @@ use crate::policy::PolicyClient;
 use crate::replay::{ReplayConfig, SequenceReplay, SequenceSink};
 use crate::rl::SequencePool;
 use crate::runtime::{checkpoint, Backend, MockModel, ModelDims, Tensor};
+use crate::serve::{control, BreakerState, Command, ControlServer, ServeGate};
 use crate::telemetry::Telemetry;
 use crate::transport::{
-    Addr, FleetServer, FleetServerOpts, Listener, RemoteClient, RemoteClientOpts,
-    RemoteIngest,
+    Addr, ConnRegistry, FleetServer, FleetServerOpts, Listener, RemoteClient,
+    RemoteClientOpts, RemoteIngest,
 };
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -96,6 +98,8 @@ pub struct ServeReport {
     pub resumed_steps: u64,
     /// Snapshots written this run (`fleet.checkpoints`).
     pub checkpoints: u64,
+    /// Checkpoint hot-reloads served under traffic (`fleet.reloads`).
+    pub reloads: u64,
     /// First attributed fleet error (`conn N (<peer>): ...`), if any —
     /// reaps, bad frames, protocol violations, spawn failures.
     pub first_error: Option<String>,
@@ -192,13 +196,178 @@ impl FleetCheckpoint {
     }
 }
 
+/// Everything the serving control plane needs, captured once when the
+/// control socket is armed (`[serve] control` / `--control`).
+struct ControlCtx {
+    gate: Arc<ServeGate>,
+    gen_cell: Arc<AtomicU32>,
+    registry: ConnRegistry,
+    mock: Option<Arc<MockModel>>,
+    metrics: Registry,
+    shutdown: ShutdownToken,
+    drain_timeout: Duration,
+    cfg_seed: u64,
+    replay: Arc<SequenceReplay>,
+}
+
+/// Pause admission and wait (bounded) for the in-flight row count to
+/// reach zero. Returns the drain duration and whether it ran dry.
+fn drain_inflight(
+    gate: &ServeGate,
+    timeout: Duration,
+    shutdown: &ShutdownToken,
+) -> (Duration, bool) {
+    let t0 = Instant::now();
+    gate.set_admitting(false);
+    while gate.inflight_rows() > 0 {
+        if t0.elapsed() >= timeout {
+            return (t0.elapsed(), false);
+        }
+        if shutdown.sleep_interruptible(Duration::from_millis(2)) {
+            break;
+        }
+    }
+    (t0.elapsed(), true)
+}
+
+/// Checkpoint hot-reload under traffic (DESIGN.md §16): pause
+/// admission, drain in-flight tickets (bounded by
+/// `fleet.drain_timeout_ms`; stragglers are force-failed by severing
+/// their connections, attributed in `fleet.shed_inflight_rows`), load
+/// and verify the snapshot, swap the model step count, bump the
+/// generation fence, sever the data conns so every worker resyncs
+/// behind it, and resume. The caller restores admission on error.
+fn do_reload(ctx: &ControlCtx, dir: &str) -> Result<String, String> {
+    let m = ctx
+        .mock
+        .as_ref()
+        .ok_or_else(|| "reload requires the mock backend (params snapshotting)".to_string())?;
+    let dir_p = Path::new(dir);
+    let (drained, dry) = drain_inflight(&ctx.gate, ctx.drain_timeout, &ctx.shutdown);
+    let mut severed = 0usize;
+    if !dry {
+        // Straggler tickets past the drain bound: force-fail them by
+        // severing their connections — the in-flight replies shed to
+        // dead sockets (`fleet.shed_inflight_rows`) and the workers'
+        // clients recover and resubmit behind the new fence.
+        ctx.metrics.counter("serve.drain_timeouts").inc();
+        severed += ctx.registry.sever_all();
+    }
+    let saved = FleetCheckpoint::load(dir_p)
+        .map_err(|e| format!("reload: {e}"))?
+        .ok_or_else(|| format!("reload: no checkpoint in {dir}"))?;
+    if saved.seed != ctx.cfg_seed {
+        return Err(format!(
+            "reload: checkpoint seed {} != config seed {}",
+            saved.seed, ctx.cfg_seed
+        ));
+    }
+    let disk = checkpoint::load_params(&FleetCheckpoint::params_path(dir_p))
+        .map_err(|e| format!("reload: {e}"))?;
+    if disk != m.params() {
+        return Err(format!(
+            "reload: checkpoint params in {dir} do not match the backend \
+             (different seed or model dims?)"
+        ));
+    }
+    // The swap proper: model state, then the fence, then the resync
+    // kick. Workers reconnecting between the store and the sever just
+    // resync once, exactly like after a checkpoint restore.
+    m.set_steps(saved.steps);
+    let cur = ctx.gen_cell.load(Ordering::Acquire);
+    let newg = cur.max(saved.generation) + 1;
+    ctx.gen_cell.store(newg, Ordering::Release);
+    severed += ctx.registry.sever_all();
+    ctx.gate.set_admitting(true);
+    ctx.metrics.counter("fleet.reloads").inc();
+    let drain_ms = drained.as_secs_f64() * 1e3;
+    ctx.metrics.gauge("serve.drain_ms").set(drain_ms);
+    Ok(format!(
+        "reloaded {dir}: generation {newg}, steps {}, severed {severed} conns, \
+         drain {drain_ms:.1} ms",
+        saved.steps
+    ))
+}
+
+/// One-line `stats` reply: `key=value` pairs the CI smoke and any
+/// scripted operator can grep.
+fn stats_line(ctx: &ControlCtx) -> String {
+    let c = |n: &str| ctx.metrics.counter(n).get();
+    let breaker = match ctx.gate.breaker_state() {
+        None => "off",
+        Some(BreakerState::Closed) => "closed",
+        Some(BreakerState::Open) => "open",
+        Some(BreakerState::HalfOpen) => "half-open",
+    };
+    let steps = ctx.mock.as_ref().map_or(0, |m| m.steps());
+    format!(
+        "generation={} admitting={} inflight_rows={} steps={steps} sequences={} \
+         reloads={} checkpoints={} drain_timeouts={} sheds_actor={} sheds_eval={} \
+         sheds_bulk={} paused_sheds={} breaker_sheds={} breaker={breaker}",
+        ctx.gen_cell.load(Ordering::Acquire),
+        ctx.gate.is_admitting(),
+        ctx.gate.inflight_rows(),
+        ctx.replay.inserts(),
+        c("fleet.reloads"),
+        c("fleet.checkpoints"),
+        c("serve.drain_timeouts"),
+        c("serve.admission_sheds_actor"),
+        c("serve.admission_sheds_eval"),
+        c("serve.admission_sheds_bulk"),
+        c("serve.paused_sheds"),
+        c("serve.breaker_sheds"),
+    )
+}
+
+/// Build the control-command handler run by the [`ControlServer`]
+/// thread. Reload failures resume admission before replying, so a bad
+/// snapshot path never wedges the service.
+fn control_handler(ctx: ControlCtx) -> control::Handler {
+    Box::new(move |cmd| match cmd {
+        Command::Health => Ok("healthy".to_string()),
+        Command::Ready => {
+            let generation = ctx.gen_cell.load(Ordering::Acquire);
+            if ctx.gate.is_admitting() {
+                Ok(format!("ready generation={generation}"))
+            } else {
+                Err("not ready: admission paused (drain in progress)".to_string())
+            }
+        }
+        Command::Stats => Ok(stats_line(&ctx)),
+        Command::Reload(dir) => {
+            let r = do_reload(&ctx, &dir);
+            if r.is_err() {
+                ctx.gate.set_admitting(true);
+            }
+            r
+        }
+        Command::Shutdown => {
+            // Graceful drain: stop admitting, run the in-flight rows
+            // dry (bounded), then signal — the learner exits with its
+            // partial stats, `run_serve` writes the final checkpoint,
+            // and the fleet server goodbyes every worker.
+            let (drained, dry) = drain_inflight(&ctx.gate, ctx.drain_timeout, &ctx.shutdown);
+            if !dry {
+                ctx.metrics.counter("serve.drain_timeouts").inc();
+            }
+            let drain_ms = drained.as_secs_f64() * 1e3;
+            ctx.metrics.gauge("serve.drain_ms").set(drain_ms);
+            ctx.shutdown.signal();
+            Ok(format!("shutting down: drained in {drain_ms:.1} ms"))
+        }
+    })
+}
+
 /// Run the coordinator side of a fleet: backend + batcher + replay +
 /// learner in this process, remote actors over `cfg.fleet.listen`.
 ///
-/// Blocks until the learner completes `cfg.learner.max_steps` steps,
-/// then drains: the fleet server flushes every outstanding reply, sends
-/// `Goodbye` on each connection (the workers' shutdown signal), and
-/// closes before the batcher is joined.
+/// Blocks until the learner completes `cfg.learner.max_steps` steps —
+/// or, with `[serve] control` armed, until a `shutdown` control command
+/// runs the graceful drain (stop admitting → drain in-flight rows →
+/// signal; the learner returns its partial stats) — then drains: the
+/// fleet server flushes every outstanding reply, sends `Goodbye` on
+/// each connection (the workers' shutdown signal), and closes before
+/// the batcher is joined.
 pub fn run_serve(
     cfg: &SystemConfig,
     backend: Backend,
@@ -286,6 +455,9 @@ pub fn run_serve(
 
     let t0 = Instant::now();
     let (batcher, handle) = Batcher::spawn(cfg.batcher.clone(), backend.clone(), metrics.clone());
+    // The serving gate exists only when a `[serve]` feature is on; the
+    // default is `None` and the data plane is bit-for-bit the PR 9 path.
+    let gate = ServeGate::from_config(&cfg.serve, Instant::now());
     let server = FleetServer::spawn(
         listener,
         handle.clone(),
@@ -296,11 +468,34 @@ pub fn run_serve(
             liveness_timeout_ms: cfg.fleet.liveness_timeout_ms,
             generation,
             faults: fault_plan.clone(),
+            gate: gate.clone(),
         },
         metrics.clone(),
         shutdown.clone(),
     );
     let fleet_errors = server.error_slot();
+    let gen_cell = server.generation_cell();
+    let control_server = if cfg.serve.control.is_empty() {
+        None
+    } else {
+        let ctx = ControlCtx {
+            gate: gate.clone().expect("control socket implies the serving gate"),
+            gen_cell: gen_cell.clone(),
+            registry: server.conn_registry(),
+            mock: mock.clone(),
+            metrics: metrics.clone(),
+            shutdown: shutdown.clone(),
+            drain_timeout: Duration::from_millis(cfg.fleet.drain_timeout_ms),
+            cfg_seed: cfg.seed,
+            replay: replay.clone(),
+        };
+        let ctl_addr = Addr::parse(&cfg.serve.control)?;
+        Some(ControlServer::spawn(
+            &ctl_addr,
+            shutdown.clone(),
+            control_handler(ctx),
+        )?)
+    };
 
     // Periodic snapshots ride the learner's per-batch probe: every
     // `fleet.checkpoint_every` trained steps, persist the model step
@@ -315,6 +510,7 @@ pub fn run_serve(
             let saved_c = metrics.counter("fleet.checkpoints");
             let failed_c = metrics.counter("fleet.checkpoint_errors");
             let errslot = fleet_errors.clone();
+            let gen_cell = gen_cell.clone();
             let mut batches = 0u64;
             Some(Box::new(move |_slots: &[usize]| {
                 batches += 1;
@@ -322,7 +518,9 @@ pub fn run_serve(
                     return;
                 }
                 let ck = FleetCheckpoint {
-                    generation,
+                    // The live fence: a hot-reload mid-run moves it, and
+                    // the next snapshot must carry the bumped value.
+                    generation: gen_cell.load(Ordering::Acquire),
                     steps: m.steps(),
                     sequences: replay.inserts(),
                     seed,
@@ -362,7 +560,7 @@ pub fn run_serve(
     // larger step budget resumes exactly at `max_steps`.
     if let (Some(dir), Some(m), Ok(_)) = (&ckpt_dir, &mock, &learner_result) {
         let ck = FleetCheckpoint {
-            generation,
+            generation: gen_cell.load(Ordering::Acquire),
             steps: m.steps(),
             sequences: replay.inserts(),
             seed: cfg.seed,
@@ -385,6 +583,9 @@ pub fn run_serve(
     server.join();
     drop(handle);
     batcher.join();
+    if let Some(c) = control_server {
+        c.join();
+    }
 
     let elapsed = t0.elapsed().as_secs_f64();
     metrics
@@ -419,9 +620,10 @@ pub fn run_serve(
             0.0
         },
         batcher_errors: metrics.counter("batcher.errors").get(),
-        generation,
+        generation: gen_cell.load(Ordering::Acquire),
         resumed_steps,
         checkpoints: metrics.counter("fleet.checkpoints").get(),
+        reloads: metrics.counter("fleet.reloads").get(),
         first_error,
         injected: fault_plan.as_ref().map(|p| p.injected()),
     })
@@ -559,6 +761,9 @@ pub fn run_worker(
         backoff_ms: cfg.fleet.backoff_ms,
         heartbeat_ms: cfg.fleet.heartbeat_interval_ms,
         liveness_ms: cfg.fleet.liveness_timeout_ms,
+        // Training workers are always `actor` class: the admission
+        // ladder never sheds them by policy.
+        class: 0,
     };
     let fault_plan = FaultPlan::from_config(&cfg.faults);
     let shutdown = ShutdownToken::new();

@@ -67,12 +67,26 @@
 //!   heartbeat/liveness/deadline state machines in [`transport`],
 //!   restart-with-budget supervision and checkpoint/restore with a
 //!   generation fence in [`coordinator`].
+//! * [`serve`] — resilient policy serving (DESIGN.md §16): the
+//!   batcher-as-a-service envelope around the fleet server. A
+//!   line-delimited text control socket (`rlarch serve --control`,
+//!   driven by `rlarch ctl`) exposes `health`/`ready`/`stats`,
+//!   checkpoint hot-reload under traffic (drain in-flight tickets,
+//!   swap the snapshot, bump the `Hello` generation so workers
+//!   resync), and graceful shutdown (stop admitting → drain →
+//!   checkpoint → goodbye). Per-connection priority classes (`actor`
+//!   > `eval` > `bulk` in `Hello`), a sliding-window overload
+//!   detector + bounded admission queue with deadline-aware shedding,
+//!   and a consecutive-failure circuit breaker all reuse the
+//!   transport's `shed:` reply flow. `[serve]` defaults off =
+//!   bit-for-bit the PR 9 data plane.
 //! * [`simarch`] — the architectural simulator (GPU/CPU/power models);
 //!   its system model carries the same `envs_per_actor` and
 //!   `pipeline_depth` axes, plus fleet network terms (`net_rtt_s`,
-//!   bandwidth) and a fault availability term (`fault_rate` ×
-//!   `fault_recovery_s`) that default to the in-process, fault-free
-//!   identity.
+//!   bandwidth), a fault availability term (`fault_rate` ×
+//!   `fault_recovery_s`), and a reload availability term
+//!   (`reload_rate` × `reload_stall_s`) that default to the
+//!   in-process, fault-free identity.
 //! * [`telemetry`] — the observability layer (DESIGN.md §12): striped
 //!   hot-path timers (in [`metrics`]), lock-free per-thread span rings
 //!   rendered as Chrome trace JSON (`--trace-out`), and a background
@@ -98,6 +112,7 @@ pub mod report;
 pub mod simarch;
 pub mod rl;
 pub mod runtime;
+pub mod serve;
 pub mod telemetry;
 pub mod transport;
 pub mod util;

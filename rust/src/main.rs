@@ -7,6 +7,8 @@
 //!                  fleet coordinator: learner + batcher here, actors remote
 //! rlarch actor     --connect uds:/run/fleet.sock [--id B] [--local-actors N]
 //!                  fleet worker: actor threads over a remote coordinator
+//! rlarch ctl       --connect uds:/run/ctl.sock --cmd "reload /ckpt"
+//!                  drive a serving coordinator's control socket
 //! rlarch sweep     [--actors 4,8,...,256]      Fig. 3 on the simulator
 //! rlarch smsweep   [--sms 80,60,...,2]         Fig. 4 on the simulator
 //! rlarch breakdown                              Fig. 2 on the simulator
@@ -39,13 +41,14 @@ fn main() {
         "train" => cmd_train(rest),
         "serve" => cmd_serve(rest),
         "actor" => cmd_actor(rest),
+        "ctl" => cmd_ctl(rest),
         "sweep" => cmd_sweep(rest),
         "smsweep" => cmd_smsweep(rest),
         "breakdown" => cmd_breakdown(rest),
         "info" => cmd_info(rest),
         _ => {
             eprintln!(
-                "usage: rlarch <train|serve|actor|sweep|smsweep|breakdown|info> [flags]\n\
+                "usage: rlarch <train|serve|actor|ctl|sweep|smsweep|breakdown|info> [flags]\n\
                  run `rlarch <subcommand> --help` for flags"
             );
             2
@@ -394,6 +397,17 @@ fn cmd_serve(args: &[String]) -> i32 {
         "override fleet.checkpoint_every (trained batches between snapshots)",
     )
     .flag(
+        "control",
+        "",
+        "override serve.control: bind the line-delimited control socket here \
+         (health/ready/stats/reload/shutdown via `rlarch ctl`)",
+    )
+    .flag(
+        "drain-timeout-ms",
+        "0",
+        "override fleet.drain_timeout_ms (bound on reload/shutdown drains)",
+    )
+    .flag(
         "faults",
         "",
         "fault plan spec, e.g. seed=7,corrupt_rate=0.02,stall_rate=0.01 ([faults] keys)",
@@ -434,6 +448,15 @@ fn cmd_serve(args: &[String]) -> i32 {
                 cfg.fleet.checkpoint_every = n;
             }
         }
+        match parsed.get("control") {
+            "" => {}
+            a => cfg.serve.control = a.to_string(),
+        }
+        if let Ok(n) = parsed.get_u64("drain-timeout-ms") {
+            if n > 0 {
+                cfg.fleet.drain_timeout_ms = n;
+            }
+        }
         if !parsed.get("faults").is_empty() {
             cfg.faults = FaultsConfig::from_spec(parsed.get("faults"))
                 .map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
@@ -461,6 +484,12 @@ fn cmd_serve(args: &[String]) -> i32 {
             cfg.replay.insert_batch,
             cfg.fleet.max_inflight_rows
         );
+        if !cfg.serve.control.is_empty() {
+            println!(
+                "control socket: {} (drain timeout {} ms)",
+                cfg.serve.control, cfg.fleet.drain_timeout_ms
+            );
+        }
         let report = coordinator::run_serve(&cfg, backend, metrics)?;
         println!(
             "drained in {:.1}s: learner {} steps (loss {:.4} -> {:.4}), \
@@ -481,6 +510,12 @@ fn cmd_serve(args: &[String]) -> i32 {
             println!(
                 "checkpointing: generation {} ({} snapshot(s), resumed from step {})",
                 report.generation, report.checkpoints, report.resumed_steps
+            );
+        }
+        if report.reloads > 0 {
+            println!(
+                "serving: {} hot-reload(s), final generation {}",
+                report.reloads, report.generation
             );
         }
         if let Some(inj) = &report.injected {
@@ -634,6 +669,53 @@ fn cmd_actor(args: &[String]) -> i32 {
     };
     match run() {
         Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+/// `rlarch ctl` — one-shot control client: send one command line to a
+/// serving coordinator's control socket and print the reply. Exit 0 on
+/// an `ok` reply, 1 on `err` (so shell scripts and CI can branch).
+fn cmd_ctl(args: &[String]) -> i32 {
+    let cli = Cli::new(
+        "rlarch ctl",
+        "drive a serving coordinator's control socket (health/ready/stats/reload/shutdown)",
+    )
+    .flag(
+        "connect",
+        "",
+        "control socket address (tcp:host:port or uds:/path; the server's --control)",
+    )
+    .flag(
+        "cmd",
+        "health",
+        "command line to send: health | ready | stats | reload <dir> | shutdown",
+    );
+    let parsed = match cli.parse(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let run = || -> anyhow::Result<String> {
+        let addr = parsed.get("connect");
+        anyhow::ensure!(!addr.is_empty(), "--connect is required (the server's --control)");
+        let addr = rlarch::transport::Addr::parse(addr)?;
+        rlarch::serve::control::send_command(&addr, parsed.get("cmd"))
+    };
+    match run() {
+        Ok(reply) => {
+            println!("{reply}");
+            if reply.starts_with("ok") {
+                0
+            } else {
+                1
+            }
+        }
         Err(e) => {
             eprintln!("error: {e}");
             1

@@ -1,0 +1,314 @@
+//! Deadline-aware admission control with priority classes
+//! (DESIGN.md §16).
+//!
+//! Every fleet connection declares a [`PriorityClass`] in its `Hello`
+//! (one pad byte of the PR 8 wire format, so generation-0 workers are
+//! `actor` class unchanged). The server consults one global
+//! [`AdmissionPolicy`] per `Submit` frame; a shed decision is returned
+//! through the existing `shed:` reply flow, so client resubmit logic
+//! is untouched. The ladder degrades gracefully under overload: `bulk`
+//! is shed first, then `eval`, never `actor` — the training fleet's
+//! critical path keeps flowing while best-effort traffic backs off.
+//!
+//! Like the liveness and breaker machines, everything here is pure and
+//! clock-free (`now: Instant` comes from the caller) and allocation-free
+//! in steady state (`micro_transport` gate): the sliding window is a
+//! fixed 8-bucket ring, and shed reasons are `&'static str`.
+
+use std::time::{Duration, Instant};
+
+/// Connection priority, highest first. The wire byte is the
+/// discriminant; unknown bytes are refused at the handshake.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum PriorityClass {
+    /// Training actors: the critical path, never shed by policy.
+    Actor = 0,
+    /// Evaluation workers: shed only under severe overload.
+    Eval = 1,
+    /// Best-effort traffic (bulk scoring, A/B probes): shed first.
+    Bulk = 2,
+}
+
+impl PriorityClass {
+    pub fn from_u8(v: u8) -> Option<Self> {
+        match v {
+            0 => Some(Self::Actor),
+            1 => Some(Self::Eval),
+            2 => Some(Self::Bulk),
+            _ => None,
+        }
+    }
+
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Actor => "actor",
+            Self::Eval => "eval",
+            Self::Bulk => "bulk",
+        }
+    }
+}
+
+/// Sliding-window overload level: how far down the priority ladder the
+/// server is currently shedding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Overload {
+    Clear,
+    /// Window at or past `overload_rows`: shed `bulk`.
+    ShedBulk,
+    /// Window at or past 1.5x `overload_rows`: shed `eval` too.
+    /// `actor` is never shed by the detector.
+    ShedEvalAndBulk,
+}
+
+/// Admitted-rows sliding window over a fixed 8-bucket ring. Buckets
+/// cover `window / 8` each; advancing past a bucket zeroes it, so the
+/// sum always approximates the trailing window without allocating.
+#[derive(Clone, Copy, Debug)]
+pub struct OverloadDetector {
+    bucket: Duration,
+    origin: Instant,
+    /// Absolute index of the bucket `now` falls in.
+    cur: u64,
+    ring: [u64; 8],
+    limit_rows: u64,
+}
+
+impl OverloadDetector {
+    /// `limit_rows` 0 disables the detector (`level` is always
+    /// `Clear`); rows are still recorded so the deadline estimate
+    /// below has a throughput signal.
+    pub fn new(window: Duration, limit_rows: u64, now: Instant) -> Self {
+        Self {
+            bucket: (window / 8).max(Duration::from_millis(1)),
+            origin: now,
+            cur: 0,
+            ring: [0; 8],
+            limit_rows,
+        }
+    }
+
+    fn advance(&mut self, now: Instant) {
+        let idx =
+            (now.duration_since(self.origin).as_nanos() / self.bucket.as_nanos()) as u64;
+        if idx > self.cur {
+            let steps = (idx - self.cur).min(8);
+            for i in 1..=steps {
+                self.ring[((self.cur + i) % 8) as usize] = 0;
+            }
+            self.cur = idx;
+        }
+    }
+
+    /// Count `rows` admitted at `now`.
+    pub fn record(&mut self, rows: u64, now: Instant) {
+        self.advance(now);
+        self.ring[(self.cur % 8) as usize] += rows;
+    }
+
+    /// Rows admitted over the trailing window.
+    pub fn window_rows(&mut self, now: Instant) -> u64 {
+        self.advance(now);
+        self.ring.iter().sum()
+    }
+
+    /// The nominal window span (8 buckets).
+    pub fn window(&self) -> Duration {
+        self.bucket * 8
+    }
+
+    pub fn level(&mut self, now: Instant) -> Overload {
+        if self.limit_rows == 0 {
+            return Overload::Clear;
+        }
+        let sum = self.window_rows(now);
+        // 1.5x the limit, in integer math.
+        if sum * 2 >= self.limit_rows * 3 {
+            Overload::ShedEvalAndBulk
+        } else if sum >= self.limit_rows {
+            Overload::ShedBulk
+        } else {
+            Overload::Clear
+        }
+    }
+}
+
+/// Why a submission was shed (static so the hot path never formats).
+pub const SHED_OVERLOAD: &str = "overload: bulk traffic shed";
+pub const SHED_OVERLOAD_SEVERE: &str = "overload: only actor traffic admitted";
+pub const SHED_QUEUE_FULL: &str = "admission queue full";
+pub const SHED_DEADLINE: &str = "deadline unmeetable at current backlog";
+
+/// One admission verdict.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    Admit,
+    Shed(&'static str),
+}
+
+/// The global admission policy: overload ladder, bounded admission
+/// queue, and a deadline estimate from the window's own throughput.
+/// `actor`-class traffic is exempt from every shed rule; the
+/// per-connection in-flight row budget (PR 8) still applies to it.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionPolicy {
+    overload: OverloadDetector,
+    /// Global queued-row bound (0 = unbounded).
+    max_queue_rows: u64,
+    /// Target time-to-service (0 = no deadline shedding).
+    deadline: Duration,
+}
+
+impl AdmissionPolicy {
+    pub fn new(
+        window: Duration,
+        overload_rows: u64,
+        max_queue_rows: u64,
+        deadline: Duration,
+        now: Instant,
+    ) -> Self {
+        Self {
+            overload: OverloadDetector::new(window, overload_rows, now),
+            max_queue_rows,
+            deadline,
+        }
+    }
+
+    /// Decide one submission of `rows` rows from a `class` connection,
+    /// with `queued_rows` already admitted and not yet replied to.
+    /// Admitted rows are recorded into the overload window.
+    pub fn decide(
+        &mut self,
+        class: PriorityClass,
+        rows: u64,
+        queued_rows: u64,
+        now: Instant,
+    ) -> AdmissionDecision {
+        match self.overload.level(now) {
+            Overload::ShedEvalAndBulk if class != PriorityClass::Actor => {
+                return AdmissionDecision::Shed(SHED_OVERLOAD_SEVERE);
+            }
+            Overload::ShedBulk if class == PriorityClass::Bulk => {
+                return AdmissionDecision::Shed(SHED_OVERLOAD);
+            }
+            _ => {}
+        }
+        if class != PriorityClass::Actor {
+            if self.max_queue_rows > 0 && queued_rows + rows > self.max_queue_rows {
+                return AdmissionDecision::Shed(SHED_QUEUE_FULL);
+            }
+            if !self.deadline.is_zero() {
+                // Estimated wait = backlog / observed window throughput.
+                // A backlog with zero observed throughput cannot meet
+                // any deadline.
+                let served = self.overload.window_rows(now);
+                let unmeetable = if served == 0 {
+                    queued_rows > 0
+                } else {
+                    self.overload
+                        .window()
+                        .mul_f64(queued_rows as f64 / served as f64)
+                        > self.deadline
+                };
+                if unmeetable {
+                    return AdmissionDecision::Shed(SHED_DEADLINE);
+                }
+            }
+        }
+        self.overload.record(rows, now);
+        AdmissionDecision::Admit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    #[test]
+    fn priority_class_wire_byte_roundtrip() {
+        for c in [PriorityClass::Actor, PriorityClass::Eval, PriorityClass::Bulk] {
+            assert_eq!(PriorityClass::from_u8(c.as_u8()), Some(c));
+        }
+        assert_eq!(PriorityClass::from_u8(0), Some(PriorityClass::Actor));
+        assert_eq!(PriorityClass::from_u8(3), None);
+        assert_eq!(PriorityClass::from_u8(255), None);
+        assert!(PriorityClass::Actor < PriorityClass::Eval);
+        assert!(PriorityClass::Eval < PriorityClass::Bulk);
+        assert_eq!(PriorityClass::Bulk.name(), "bulk");
+    }
+
+    #[test]
+    fn overload_ladder_sheds_bulk_then_eval_never_actor() {
+        let t0 = Instant::now();
+        let mut p = AdmissionPolicy::new(ms(8000), 100, 0, ms(0), t0);
+        // Below the limit: everyone is admitted.
+        for _ in 0..9 {
+            assert_eq!(p.decide(PriorityClass::Bulk, 10, 0, t0), AdmissionDecision::Admit);
+        }
+        // Window hits 100: bulk shed, eval and actor still admitted.
+        assert_eq!(p.decide(PriorityClass::Eval, 10, 0, t0), AdmissionDecision::Admit);
+        assert_eq!(
+            p.decide(PriorityClass::Bulk, 10, 0, t0),
+            AdmissionDecision::Shed(SHED_OVERLOAD)
+        );
+        // Push to 1.5x: eval shed too; actor never.
+        for _ in 0..5 {
+            assert_eq!(p.decide(PriorityClass::Eval, 10, 0, t0), AdmissionDecision::Admit);
+        }
+        assert_eq!(
+            p.decide(PriorityClass::Eval, 10, 0, t0),
+            AdmissionDecision::Shed(SHED_OVERLOAD_SEVERE)
+        );
+        assert_eq!(
+            p.decide(PriorityClass::Bulk, 10, 0, t0),
+            AdmissionDecision::Shed(SHED_OVERLOAD_SEVERE)
+        );
+        assert_eq!(p.decide(PriorityClass::Actor, 10, 0, t0), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn window_decays_as_time_passes() {
+        let t0 = Instant::now();
+        let mut d = OverloadDetector::new(ms(800), 100, t0);
+        d.record(200, t0);
+        assert_eq!(d.level(t0), Overload::ShedEvalAndBulk);
+        // A full window later, the burst has aged out.
+        assert_eq!(d.level(t0 + ms(900)), Overload::Clear);
+        assert_eq!(d.window_rows(t0 + ms(900)), 0);
+    }
+
+    #[test]
+    fn queue_bound_and_deadline_exempt_actor_class() {
+        let t0 = Instant::now();
+        let mut p = AdmissionPolicy::new(ms(800), 0, 64, ms(0), t0);
+        assert_eq!(
+            p.decide(PriorityClass::Eval, 8, 60, t0),
+            AdmissionDecision::Shed(SHED_QUEUE_FULL)
+        );
+        assert_eq!(p.decide(PriorityClass::Eval, 8, 56, t0), AdmissionDecision::Admit);
+        assert_eq!(p.decide(PriorityClass::Actor, 8, 1000, t0), AdmissionDecision::Admit);
+
+        // Deadline: backlog with zero window throughput is unmeetable.
+        let mut p = AdmissionPolicy::new(ms(800), 0, 0, ms(50), t0);
+        assert_eq!(
+            p.decide(PriorityClass::Bulk, 8, 32, t0),
+            AdmissionDecision::Shed(SHED_DEADLINE)
+        );
+        assert_eq!(p.decide(PriorityClass::Actor, 8, 32, t0), AdmissionDecision::Admit);
+        // 8 rows now in the window; est. wait for 32 queued rows is
+        // 800ms * 32/8 = 3.2s > 50ms: still unmeetable for bulk...
+        assert_eq!(
+            p.decide(PriorityClass::Bulk, 8, 32, t0),
+            AdmissionDecision::Shed(SHED_DEADLINE)
+        );
+        // ...but an empty backlog always meets the deadline.
+        assert_eq!(p.decide(PriorityClass::Bulk, 8, 0, t0), AdmissionDecision::Admit);
+    }
+}

@@ -1,0 +1,167 @@
+//! Circuit breaker for the serving backend (DESIGN.md §16).
+//!
+//! A pure, clock-free state machine in the `transport::liveness` idiom:
+//! every transition takes `now: Instant` from the caller, so unit tests
+//! drive it with a synthetic clock and the steady-state path allocates
+//! nothing (`micro_transport` gate). The breaker watches *backend*
+//! results only — shed replies are flow control, not failures —
+//! tripping open after `serve.backend_failure_threshold` consecutive
+//! errors. While open, submissions are failed fast with a `shed:` reply
+//! (the client's normal resubmit path); after
+//! `serve.breaker_cooloff_ms` exactly one half-open probe reaches the
+//! backend and its outcome decides between closing and re-opening.
+
+use std::time::{Duration, Instant};
+
+/// Breaker position. `Closed` = healthy (traffic flows), `Open` =
+/// tripped (fail-fast sheds), `HalfOpen` = one probe in flight.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+/// Consecutive-failure circuit breaker. A `threshold` of 0 disables
+/// it: `allow` is always true and results are not tracked (the
+/// control-plane-off identity).
+#[derive(Clone, Copy, Debug)]
+pub struct CircuitBreaker {
+    threshold: u32,
+    cooloff: Duration,
+    state: BreakerState,
+    failures: u32,
+    opened_at: Instant,
+}
+
+impl CircuitBreaker {
+    pub fn new(threshold: u32, cooloff: Duration, now: Instant) -> Self {
+        Self {
+            threshold,
+            cooloff,
+            state: BreakerState::Closed,
+            failures: 0,
+            opened_at: now,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// Whether a new submission may reach the backend at `now`. An
+    /// `Open` breaker past its cooloff admits exactly one probe (and
+    /// moves to `HalfOpen`); further calls return false until the
+    /// probe resolves via [`Self::on_success`] / [`Self::on_failure`].
+    pub fn allow(&mut self, now: Instant) -> bool {
+        if self.threshold == 0 {
+            return true;
+        }
+        match self.state {
+            BreakerState::Closed => true,
+            BreakerState::Open => {
+                if now.duration_since(self.opened_at) >= self.cooloff {
+                    self.state = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => false,
+        }
+    }
+
+    /// A backend call completed cleanly: close and reset the count
+    /// (one success heals a half-open breaker).
+    pub fn on_success(&mut self) {
+        if self.threshold == 0 {
+            return;
+        }
+        self.failures = 0;
+        self.state = BreakerState::Closed;
+    }
+
+    /// A backend call failed at `now`: count it (tripping `Closed` at
+    /// the threshold) or re-open around a failed half-open probe.
+    pub fn on_failure(&mut self, now: Instant) {
+        if self.threshold == 0 {
+            return;
+        }
+        match self.state {
+            BreakerState::Closed => {
+                self.failures += 1;
+                if self.failures >= self.threshold {
+                    self.state = BreakerState::Open;
+                    self.opened_at = now;
+                }
+            }
+            BreakerState::HalfOpen | BreakerState::Open => {
+                self.failures = self.threshold;
+                self.state = BreakerState::Open;
+                self.opened_at = now;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    #[test]
+    fn trips_after_threshold_consecutive_failures() {
+        let t0 = Instant::now();
+        let mut b = CircuitBreaker::new(3, ms(100), t0);
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.on_failure(t0);
+        b.on_failure(t0);
+        assert!(b.allow(t0), "below threshold: still closed");
+        // A success resets the consecutive count.
+        b.on_success();
+        b.on_failure(t0);
+        b.on_failure(t0);
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.on_failure(t0);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.allow(t0), "open: fail fast");
+        assert!(!b.allow(t0 + ms(99)), "cooloff not elapsed");
+    }
+
+    #[test]
+    fn half_open_probe_recovers_or_reopens() {
+        let t0 = Instant::now();
+        let mut b = CircuitBreaker::new(1, ms(50), t0);
+        b.on_failure(t0);
+        assert_eq!(b.state(), BreakerState::Open);
+        // Past the cooloff: exactly one probe is admitted.
+        assert!(b.allow(t0 + ms(50)));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(!b.allow(t0 + ms(60)), "one probe at a time");
+        // Probe succeeds: closed again, traffic flows.
+        b.on_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allow(t0 + ms(61)));
+        // Trip again; this time the probe fails: re-open, new cooloff.
+        b.on_failure(t0 + ms(70));
+        assert!(b.allow(t0 + ms(120)));
+        b.on_failure(t0 + ms(121));
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.allow(t0 + ms(150)), "cooloff restarts at the reopen");
+        assert!(b.allow(t0 + ms(171)));
+    }
+
+    #[test]
+    fn zero_threshold_disables_the_breaker() {
+        let t0 = Instant::now();
+        let mut b = CircuitBreaker::new(0, ms(1), t0);
+        for _ in 0..100 {
+            b.on_failure(t0);
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allow(t0));
+    }
+}

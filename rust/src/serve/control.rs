@@ -1,0 +1,263 @@
+//! Line-delimited text control plane for `rlarch serve`
+//! (DESIGN.md §16).
+//!
+//! The data plane speaks slab frames; operations speak one-line text
+//! over a second listener (`rlarch serve --control <addr>`), so `nc`,
+//! a shell script, or `rlarch ctl` can drive it. Requests are one line
+//! (`health`, `ready`, `stats`, `reload <dir>`, `shutdown`); replies
+//! are one line starting `ok ` or `err `. The parser never panics on
+//! garbage (property-tested) and unknown commands name the offending
+//! token in the error reply.
+//!
+//! [`ControlServer`] owns one polling accept loop + line-reader thread;
+//! commands are handed to a single handler closure (the coordinator's
+//! reload/drain/shutdown logic in `coordinator::fleet`), so command
+//! execution is serialized by construction — there is never more than
+//! one reload or drain in flight.
+
+use crate::exec::ShutdownToken;
+use crate::transport::{Addr, Listener, Stream};
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::thread;
+use std::time::Duration;
+
+/// One parsed control command.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Command {
+    /// Liveness probe: replies `ok` while the process is up.
+    Health,
+    /// Readiness probe: `ok` only when admitting traffic.
+    Ready,
+    /// One-line counters snapshot (generation, steps, reloads, sheds).
+    Stats,
+    /// Hot-reload a checkpoint directory under traffic.
+    Reload(String),
+    /// Graceful shutdown: stop admitting, drain, checkpoint, goodbye.
+    Shutdown,
+}
+
+/// Parse one control line. Never panics; unknown commands, missing or
+/// trailing arguments all return an error naming the offending token.
+pub fn parse_line(line: &str) -> Result<Command, String> {
+    let mut words = line.split_whitespace();
+    let head = words.next().ok_or_else(|| "empty command".to_string())?;
+    let cmd = match head {
+        "health" => Command::Health,
+        "ready" => Command::Ready,
+        "stats" => Command::Stats,
+        "shutdown" => Command::Shutdown,
+        "reload" => {
+            let dir = words
+                .next()
+                .ok_or_else(|| "reload: want `reload <dir>`".to_string())?;
+            Command::Reload(dir.to_string())
+        }
+        other => return Err(format!("unknown command `{other}`")),
+    };
+    if let Some(extra) = words.next() {
+        return Err(format!("trailing token `{extra}` after `{head}`"));
+    }
+    Ok(cmd)
+}
+
+/// The control listener thread. Accepts one client at a time (commands
+/// are rare and serialized anyway), reads newline-delimited commands,
+/// and replies `ok <detail>` / `err <detail>` per line.
+pub struct ControlServer {
+    thread: Option<thread::JoinHandle<()>>,
+    uds_path: Option<PathBuf>,
+}
+
+/// The command executor the server thread calls per parsed line; the
+/// `Ok`/`Err` string becomes the `ok ...` / `err ...` reply line.
+pub type Handler = Box<dyn FnMut(Command) -> Result<String, String> + Send>;
+
+impl ControlServer {
+    /// Bind `addr` and serve until `shutdown` is signalled. The
+    /// handler runs on the control thread; its `Ok`/`Err` string
+    /// becomes the reply line.
+    pub fn spawn(
+        addr: &Addr,
+        shutdown: ShutdownToken,
+        mut handler: Handler,
+    ) -> anyhow::Result<ControlServer> {
+        let listener = Listener::bind(addr)?;
+        let uds_path = match addr {
+            Addr::Unix(p) => Some(p.clone()),
+            Addr::Tcp(_) => None,
+        };
+        let thread = thread::Builder::new()
+            .name("rlarch-control".into())
+            .spawn(move || {
+                while !shutdown.is_signalled() {
+                    match listener.poll_accept() {
+                        Ok(Some(stream)) => {
+                            serve_client(stream, &shutdown, &mut handler)
+                        }
+                        Ok(None) => {
+                            if shutdown.sleep_interruptible(Duration::from_millis(20))
+                            {
+                                break;
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(ControlServer {
+            thread: Some(thread),
+            uds_path,
+        })
+    }
+
+    /// Join the control thread (the shutdown token must already be
+    /// signalled) and remove a UDS socket file.
+    pub fn join(mut self) {
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+        if let Some(p) = &self.uds_path {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// Serve one control client: accumulate bytes, split on `\n`, handle
+/// each line, write the reply. Returns on EOF, I/O error, or shutdown.
+fn serve_client(mut stream: Stream, shutdown: &ShutdownToken, handler: &mut Handler) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut pending: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 512];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => return,
+            Ok(n) => {
+                pending.extend_from_slice(&chunk[..n]);
+                while let Some(pos) = pending.iter().position(|&b| b == b'\n') {
+                    let line: Vec<u8> = pending.drain(..=pos).collect();
+                    let text = String::from_utf8_lossy(&line);
+                    let text = text.trim();
+                    if text.is_empty() {
+                        continue;
+                    }
+                    let reply = match parse_line(text) {
+                        Ok(cmd) => handler(cmd),
+                        Err(e) => Err(e),
+                    };
+                    let out = match &reply {
+                        Ok(msg) => format!("ok {msg}\n"),
+                        Err(msg) => format!("err {msg}\n"),
+                    };
+                    if stream.write_all(out.as_bytes()).is_err() {
+                        return;
+                    }
+                    let _ = stream.flush();
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if shutdown.is_signalled() {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// One-shot control client (`rlarch ctl`): send `line`, return the
+/// reply line (without the trailing newline).
+pub fn send_command(addr: &Addr, line: &str) -> anyhow::Result<String> {
+    let mut stream = crate::transport::dial(addr, 0, 1, None)?;
+    stream.write_all(line.trim().as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let mut reply = Vec::new();
+    let mut byte = [0u8; 64];
+    loop {
+        match stream.read(&mut byte) {
+            Ok(0) => break,
+            Ok(n) => {
+                reply.extend_from_slice(&byte[..n]);
+                if reply.contains(&b'\n') {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(anyhow::anyhow!("control read: {e}")),
+        }
+    }
+    let text = String::from_utf8_lossy(&reply);
+    let line = text.lines().next().unwrap_or("").to_string();
+    anyhow::ensure!(!line.is_empty(), "control connection closed without a reply");
+    Ok(line)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_command() {
+        assert_eq!(parse_line("health"), Ok(Command::Health));
+        assert_eq!(parse_line("  ready  "), Ok(Command::Ready));
+        assert_eq!(parse_line("stats"), Ok(Command::Stats));
+        assert_eq!(parse_line("shutdown"), Ok(Command::Shutdown));
+        assert_eq!(
+            parse_line("reload /tmp/ckpt"),
+            Ok(Command::Reload("/tmp/ckpt".into()))
+        );
+    }
+
+    #[test]
+    fn rejects_garbage_naming_the_token() {
+        let err = parse_line("explode").unwrap_err();
+        assert!(err.contains("`explode`"), "{err}");
+        let err = parse_line("reload").unwrap_err();
+        assert!(err.contains("reload <dir>"), "{err}");
+        let err = parse_line("health now please").unwrap_err();
+        assert!(err.contains("`now`"), "{err}");
+        let err = parse_line("reload /a /b").unwrap_err();
+        assert!(err.contains("`/b`"), "{err}");
+        assert!(parse_line("").is_err());
+        assert!(parse_line("   \t ").is_err());
+    }
+
+    #[test]
+    fn control_server_round_trips_over_uds() {
+        let dir = std::env::temp_dir().join("rlarch_control_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("ctl_{}.sock", std::process::id()));
+        let addr = Addr::Unix(path.clone());
+        let shutdown = ShutdownToken::new();
+        let server = ControlServer::spawn(
+            &addr,
+            shutdown.clone(),
+            Box::new(|cmd| match cmd {
+                Command::Health => Ok("healthy".into()),
+                Command::Reload(dir) => Err(format!("no checkpoint at {dir}")),
+                _ => Ok("noop".into()),
+            }),
+        )
+        .unwrap();
+        assert_eq!(send_command(&addr, "health").unwrap(), "ok healthy");
+        assert_eq!(
+            send_command(&addr, "reload /nope").unwrap(),
+            "err no checkpoint at /nope"
+        );
+        assert_eq!(
+            send_command(&addr, "bogus").unwrap(),
+            "err unknown command `bogus`"
+        );
+        shutdown.signal();
+        server.join();
+        assert!(!path.exists(), "uds socket file removed on join");
+    }
+}

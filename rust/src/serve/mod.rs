@@ -1,0 +1,241 @@
+//! Resilient policy serving (DESIGN.md §16).
+//!
+//! ROADMAP open item 4's robustness core: the pooled central batcher
+//! wrapped as a long-lived *service*. The data plane is unchanged —
+//! PR 8 slab frames into `transport::FleetServer` — and this module
+//! adds the serving envelope around it:
+//!
+//! * [`control`] — a minimal line-delimited text control socket
+//!   (`rlarch serve --control <addr>`): `health` / `ready` / `stats` /
+//!   `reload <dir>` / `shutdown`, driven by `rlarch ctl` or anything
+//!   that can write a line to a socket.
+//! * [`admission`] — per-connection [`PriorityClass`]es (`actor` >
+//!   `eval` > `bulk`, one `Hello` pad byte), a bounded global
+//!   admission queue, deadline-aware shedding, and a sliding-window
+//!   overload detector that degrades down the ladder (`bulk` first,
+//!   then `eval`, never `actor`).
+//! * [`breaker`] — a consecutive-failure [`CircuitBreaker`] in front
+//!   of the backend: fail-fast shed replies while open, one half-open
+//!   probe to recover.
+//!
+//! All shedding reuses the transport's `shed:` reply flow, so
+//! `RemoteClient` resubmission is untouched; checkpoint hot-reload
+//! (drain → swap → generation bump → resync) lives in
+//! `coordinator::fleet` where the model and checkpoint machinery are.
+//! [`ServeGate`] below is the shared state the data plane consults per
+//! submission; with the control plane off it is never constructed and
+//! every path is bit-for-bit PR 9 (`serve_defaults_off` equivalence).
+
+pub mod admission;
+pub mod breaker;
+pub mod control;
+
+pub use admission::{AdmissionDecision, AdmissionPolicy, OverloadDetector, PriorityClass};
+pub use breaker::{BreakerState, CircuitBreaker};
+pub use control::{parse_line, Command, ControlServer};
+
+use crate::config::ServeConfig;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Shed reason while a reload drain has admission paused.
+pub const SHED_PAUSED: &str = "serving paused (reload drain)";
+/// Shed reason while the circuit breaker is open.
+pub const SHED_BREAKER: &str = "circuit open: backend failing";
+
+/// Shared serving state consulted by every `Submit` on the data plane
+/// and flipped by the control plane: the admission switch (reload
+/// drains and graceful shutdown pause it), the global in-flight row
+/// count (the drain barrier), and the optional admission policy and
+/// circuit breaker. All hot-path operations are lock-free or a single
+/// uncontended mutex, and allocation-free (`micro_transport` gate).
+pub struct ServeGate {
+    admitting: AtomicBool,
+    inflight_rows: AtomicU64,
+    admission: Mutex<Option<AdmissionPolicy>>,
+    breaker: Mutex<Option<CircuitBreaker>>,
+    breaker_enabled: bool,
+}
+
+impl ServeGate {
+    pub fn new(
+        admission: Option<AdmissionPolicy>,
+        breaker: Option<CircuitBreaker>,
+    ) -> ServeGate {
+        ServeGate {
+            admitting: AtomicBool::new(true),
+            inflight_rows: AtomicU64::new(0),
+            breaker_enabled: breaker.is_some(),
+            admission: Mutex::new(admission),
+            breaker: Mutex::new(breaker),
+        }
+    }
+
+    /// Build from config; `None` when every serving feature is off
+    /// (the gate is then never consulted — the PR 9 identity path).
+    pub fn from_config(cfg: &ServeConfig, now: Instant) -> Option<Arc<ServeGate>> {
+        if !cfg.enabled() {
+            return None;
+        }
+        let admission = (cfg.admission_rows > 0
+            || cfg.overload_rows > 0
+            || cfg.deadline_ms > 0)
+            .then(|| {
+                AdmissionPolicy::new(
+                    Duration::from_millis(cfg.overload_window_ms),
+                    cfg.overload_rows as u64,
+                    cfg.admission_rows as u64,
+                    Duration::from_millis(cfg.deadline_ms),
+                    now,
+                )
+            });
+        let breaker = (cfg.backend_failure_threshold > 0).then(|| {
+            CircuitBreaker::new(
+                cfg.backend_failure_threshold as u32,
+                Duration::from_millis(cfg.breaker_cooloff_ms),
+                now,
+            )
+        });
+        Some(Arc::new(ServeGate::new(admission, breaker)))
+    }
+
+    pub fn is_admitting(&self) -> bool {
+        self.admitting.load(Ordering::Acquire)
+    }
+
+    pub fn set_admitting(&self, on: bool) {
+        self.admitting.store(on, Ordering::Release);
+    }
+
+    /// Rows admitted and not yet replied to, fleet-wide.
+    pub fn inflight_rows(&self) -> u64 {
+        self.inflight_rows.load(Ordering::Acquire)
+    }
+
+    /// Count `rows` toward the in-flight total (at the same point the
+    /// per-connection budget counts them); returns the prior total.
+    pub fn begin_rows(&self, rows: u64) -> u64 {
+        self.inflight_rows.fetch_add(rows, Ordering::AcqRel)
+    }
+
+    /// A reply chunk of `rows` left through a connection writer.
+    pub fn end_rows(&self, rows: u64) {
+        self.inflight_rows.fetch_sub(rows, Ordering::AcqRel);
+    }
+
+    /// Admission verdict for one submission (admit when no policy is
+    /// configured). `queued_rows` is the caller's pre-`begin_rows`
+    /// in-flight snapshot.
+    pub fn decide(
+        &self,
+        class: PriorityClass,
+        rows: u64,
+        queued_rows: u64,
+        now: Instant,
+    ) -> AdmissionDecision {
+        match self.admission.lock().unwrap().as_mut() {
+            Some(p) => p.decide(class, rows, queued_rows, now),
+            None => AdmissionDecision::Admit,
+        }
+    }
+
+    /// Whether the breaker admits a submission at `now`.
+    pub fn breaker_allow(&self, now: Instant) -> bool {
+        if !self.breaker_enabled {
+            return true;
+        }
+        match self.breaker.lock().unwrap().as_mut() {
+            Some(b) => b.allow(now),
+            None => true,
+        }
+    }
+
+    pub fn breaker_on_success(&self) {
+        if !self.breaker_enabled {
+            return;
+        }
+        if let Some(b) = self.breaker.lock().unwrap().as_mut() {
+            b.on_success();
+        }
+    }
+
+    pub fn breaker_on_failure(&self, now: Instant) {
+        if !self.breaker_enabled {
+            return;
+        }
+        if let Some(b) = self.breaker.lock().unwrap().as_mut() {
+            b.on_failure(now);
+        }
+    }
+
+    /// Breaker position for `stats` (None = breaker not configured).
+    pub fn breaker_state(&self) -> Option<BreakerState> {
+        self.breaker.lock().unwrap().as_ref().map(|b| b.state())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_defaults_admit_everything() {
+        let g = ServeGate::new(None, None);
+        let now = Instant::now();
+        assert!(g.is_admitting());
+        assert!(g.breaker_allow(now));
+        assert_eq!(
+            g.decide(PriorityClass::Bulk, 64, 0, now),
+            AdmissionDecision::Admit
+        );
+        assert_eq!(g.begin_rows(8), 0);
+        assert_eq!(g.begin_rows(4), 8);
+        g.end_rows(12);
+        assert_eq!(g.inflight_rows(), 0);
+        assert_eq!(g.breaker_state(), None);
+        g.breaker_on_success();
+        g.breaker_on_failure(now);
+    }
+
+    #[test]
+    fn from_config_is_none_unless_a_feature_is_on() {
+        let now = Instant::now();
+        let off = ServeConfig::default();
+        assert!(ServeGate::from_config(&off, now).is_none());
+        let on = ServeConfig {
+            backend_failure_threshold: 3,
+            ..ServeConfig::default()
+        };
+        let g = ServeGate::from_config(&on, now).unwrap();
+        assert_eq!(g.breaker_state(), Some(BreakerState::Closed));
+        let on = ServeConfig {
+            control: "uds:/tmp/x.sock".into(),
+            ..ServeConfig::default()
+        };
+        assert!(ServeGate::from_config(&on, now).is_some());
+        let on = ServeConfig {
+            overload_rows: 100,
+            ..ServeConfig::default()
+        };
+        let g = ServeGate::from_config(&on, now).unwrap();
+        // Overload configured: bulk past the limit is shed.
+        assert_eq!(
+            g.decide(PriorityClass::Bulk, 200, 0, now),
+            AdmissionDecision::Admit
+        );
+        assert_eq!(
+            g.decide(PriorityClass::Bulk, 1, 0, now),
+            AdmissionDecision::Shed(admission::SHED_OVERLOAD)
+        );
+    }
+
+    #[test]
+    fn pause_resume_flips_admitting() {
+        let g = ServeGate::new(None, None);
+        g.set_admitting(false);
+        assert!(!g.is_admitting());
+        g.set_admitting(true);
+        assert!(g.is_admitting());
+    }
+}

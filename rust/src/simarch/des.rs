@@ -96,6 +96,21 @@ pub fn simulate(model: &SystemModel, n: usize, sim_seconds: f64, dt: f64) -> Des
     let mut next_fault: Vec<f64> = (0..n)
         .map(|t| fault_period * (t as f64 + 1.0) / n.max(1) as f64)
         .collect();
+    // Reload clock (DESIGN.md §16): unlike faults, a hot-reload is one
+    // GLOBAL event — the serving gate pauses admission fleet-wide while
+    // the checkpoint swaps, so every thread's env stepping stalls at
+    // once, while work already in the batcher or on the GPU keeps
+    // draining (the drain phase completes in-flight tickets). At the
+    // default rate 0 no clock exists and the simulation is bit-for-bit
+    // the reload-free path.
+    let reload_period = if model.reload_rate > 0.0 {
+        1.0 / model.reload_rate
+    } else {
+        f64::INFINITY
+    };
+    let t_reload = model.reload_stall_s.max(0.0);
+    let mut next_reload = reload_period;
+    let mut reload_until = f64::NEG_INFINITY;
     let t_train_cycle = model.train_cycle().max(t_train);
     let train_busy_frac = if t_train_cycle > 0.0 {
         (t_train / t_train_cycle).min(1.0)
@@ -181,15 +196,24 @@ pub fn simulate(model: &SystemModel, n: usize, sim_seconds: f64, dt: f64) -> Des
             }
         }
 
+        // 0c) Reloads: the global clock pauses every thread at once.
+        if reload_period.is_finite() && now >= next_reload {
+            next_reload += reload_period;
+            reload_until = now + t_reload;
+        }
+        let reload_paused = now < reload_until;
+
         // 1) CPU: distribute capacity among env-working agents. The
         // hardware sees *threads* busy, not groups: a thread's working
-        // groups serialize on it and split its share.
+        // groups serialize on it and split its share. A reload pause
+        // freezes this stage fleet-wide (no env progress) while the
+        // stages below keep draining.
         let working: Vec<usize> = agents
             .iter()
             .enumerate()
             .filter_map(|(i, s)| matches!(s, ActorState::EnvWork(_)).then_some(i))
             .collect();
-        if !working.is_empty() {
+        if !working.is_empty() && !reload_paused {
             thread_groups_working.fill(0);
             for &i in &working {
                 thread_groups_working[i / d] += 1;
@@ -606,6 +630,40 @@ mod tests {
             a.env_rate
         );
         let ana = flaky.steady_state(4);
+        let ratio = stalled.env_rate / ana.env_rate;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "DES {} vs analytic {} (ratio {ratio})",
+            stalled.env_rate,
+            ana.env_rate
+        );
+    }
+
+    #[test]
+    fn des_reload_identity_at_zero_and_stall_costs_rate() {
+        // Zero reload rate (the default): no global clock exists and
+        // the deterministic simulation must agree exactly with the
+        // reload-free path. A real reload cadence must cost simulated
+        // rate — every thread pauses at once while the checkpoint
+        // swaps — and stay structurally close to the analytic model
+        // carrying the same fleet-wide availability term.
+        let base = model().with_envs_per_actor(8);
+        let a = simulate(&base, 4, 0.25, 20e-6);
+        let b = simulate(&base.with_reloads(0.0, 0.0), 4, 0.25, 20e-6);
+        assert_eq!(a.env_rate, b.env_rate);
+        assert_eq!(a.gpu_util, b.gpu_util);
+        assert_eq!(a.mean_batch, b.mean_batch);
+
+        // 8 reloads/s x 25ms stall: a 20% availability dilation.
+        let reloading = base.with_reloads(8.0, 0.025);
+        let stalled = simulate(&reloading, 4, 0.25, 20e-6);
+        assert!(
+            stalled.env_rate < a.env_rate,
+            "8 reloads/s x 25ms stall must cost DES rate: {} vs {}",
+            stalled.env_rate,
+            a.env_rate
+        );
+        let ana = reloading.steady_state(4);
         let ratio = stalled.env_rate / ana.env_rate;
         assert!(
             (0.5..2.0).contains(&ratio),

@@ -142,6 +142,17 @@ pub struct SystemModel {
     /// handshake, and resubmission of the lost round. Only meaningful
     /// with a non-zero `fault_rate`.
     pub fault_recovery_s: f64,
+    /// Checkpoint hot-reloads per second of wall-clock — the serving
+    /// layer's availability term (DESIGN.md §16). Unlike faults, a
+    /// reload pauses admission *fleet-wide* (drain + swap + resync), so
+    /// the stall hits every actor thread at once. 0 (the default)
+    /// models a reload-free run — the identity, bit-for-bit.
+    pub reload_rate: f64,
+    /// Wall-clock seconds one hot-reload stalls admission: the bounded
+    /// drain, snapshot load + verify, and the worker resync behind the
+    /// bumped generation fence. Only meaningful with a non-zero
+    /// `reload_rate`.
+    pub reload_stall_s: f64,
 }
 
 /// One steady-state operating point.
@@ -297,6 +308,16 @@ impl SystemModel {
         1.0 + self.fault_rate.max(0.0) * self.fault_recovery_s.max(0.0)
     }
 
+    /// Availability dilation of serving hot-reloads: each reload pauses
+    /// admission fleet-wide for `reload_stall_s`, so every thread loses
+    /// `reload_rate * reload_stall_s` seconds of progress per second of
+    /// wall-clock (renewal-reward, same shape as
+    /// [`Self::fault_slowdown`] but global rather than per-thread).
+    /// Exactly 1 at the default zero rate — the identity.
+    pub fn reload_slowdown(&self) -> f64 {
+        1.0 + self.reload_rate.max(0.0) * self.reload_stall_s.max(0.0)
+    }
+
     /// Solve the steady state for `n` actor threads (damped fixed
     /// point). Each thread drives `envs_per_actor` environments in
     /// lockstep: a thread's cycle is E serial env steps plus one
@@ -315,7 +336,8 @@ impl SystemModel {
         let t_env = (self.cpu.step_cost_us() * 1e-6
             + self.insert_overhead_s()
             + self.env_dispatch_term())
-            * self.fault_slowdown();
+            * self.fault_slowdown()
+            * self.reload_slowdown();
         let t_train = self.train_time();
         // Learner-side cap: train steps complete one per train cycle
         // (GPU step + CPU sample/assemble, overlapped when prefetching),
@@ -553,6 +575,16 @@ impl SystemModel {
         m
     }
 
+    /// Clone with serving hot-reload availability terms (reloads per
+    /// second of wall-clock, admission-stall seconds per reload; both
+    /// 0 = the reload-free identity).
+    pub fn with_reloads(&self, rate: f64, stall_s: f64) -> Self {
+        let mut m = self.clone();
+        m.reload_rate = rate.max(0.0);
+        m.reload_stall_s = stall_s.max(0.0);
+        m
+    }
+
     /// CPU/GPU ratio of this configuration (the paper's design metric).
     pub fn cpu_gpu_ratio(&self) -> f64 {
         self.cpu.cfg.hw_threads as f64 / self.gpu.cfg.num_sms as f64
@@ -624,6 +656,12 @@ pub fn default_system(infer_trace: Trace, train_trace: Trace) -> SystemModel {
         // per-second rates, so no automatic mapping is attempted.
         fault_rate: 0.0,
         fault_recovery_s: 0.0,
+        // 0 until a measured reload profile exists (drain + swap +
+        // resync from a serving soak on a toolchain-equipped host;
+        // provenance rule: no invented numbers) — at 0 the model is
+        // the reload-free run, keeping every baseline untouched.
+        reload_rate: 0.0,
+        reload_stall_s: 0.0,
     }
 }
 
@@ -1101,6 +1139,58 @@ mod tests {
             "a 2x dilation cannot collapse the system: {} vs clean {}",
             broken.env_rate,
             clean.env_rate
+        );
+    }
+
+    #[test]
+    fn reloads_zero_is_the_identity() {
+        // The defaults model a reload-free run: the explicit zero-reload
+        // clone must be bit-identical, and the availability factor must
+        // be exactly 1.
+        let m = model().with_envs_per_actor(8);
+        assert_eq!(m.reload_slowdown(), 1.0);
+        let a = m.steady_state(16);
+        let b = m.with_reloads(0.0, 0.0).steady_state(16);
+        assert_eq!(a.env_rate, b.env_rate);
+        assert_eq!(a.batch_size, b.batch_size);
+        assert_eq!(a.rtt_s, b.rtt_s);
+        // A reload rate with a zero stall cost is still free.
+        let c = m.with_reloads(0.1, 0.0).steady_state(16);
+        assert_eq!(a.env_rate, c.env_rate);
+    }
+
+    #[test]
+    fn reload_stalls_lower_rate_and_compose_with_faults() {
+        // Admission pauses fleet-wide per reload: useful rate must fall
+        // monotonically in the rate x stall product, and the reload and
+        // fault terms compose multiplicatively (independent renewals).
+        let m = model().with_envs_per_actor(8);
+        let clean = m.steady_state(4);
+        let light = m.with_reloads(0.01, 2.0).steady_state(4); // 2% lost
+        let heavy = m.with_reloads(0.05, 4.0).steady_state(4); // 20% lost
+        assert!(
+            light.env_rate < clean.env_rate,
+            "reload stalls must cost rate: {} vs {}",
+            light.env_rate,
+            clean.env_rate
+        );
+        assert!(
+            heavy.env_rate < light.env_rate,
+            "more reload stall must cost more: {} vs {}",
+            heavy.env_rate,
+            light.env_rate
+        );
+        let both = m.with_faults(0.5, 0.2).with_reloads(0.05, 4.0);
+        assert!(
+            (both.fault_slowdown() * both.reload_slowdown() - 1.1 * 1.2).abs() < 1e-12,
+            "terms must compose multiplicatively"
+        );
+        let composed = both.steady_state(4);
+        assert!(
+            composed.env_rate < heavy.env_rate,
+            "faults on top of reloads must cost more: {} vs {}",
+            composed.env_rate,
+            heavy.env_rate
         );
     }
 

@@ -70,6 +70,10 @@ pub struct RemoteClientOpts {
     /// a lapsed deadline reconnects and resubmits rather than erroring
     /// (at-least-once, same as any broken-socket recovery).
     pub liveness_ms: u64,
+    /// Priority class declared in the hello (a `serve::PriorityClass`
+    /// wire byte: 0 = actor, 1 = eval, 2 = bulk). Training workers are
+    /// 0; the serving admission ladder sheds higher bytes first.
+    pub class: u8,
 }
 
 impl Default for RemoteClientOpts {
@@ -79,11 +83,12 @@ impl Default for RemoteClientOpts {
             backoff_ms: 50,
             heartbeat_ms: 0,
             liveness_ms: 0,
+            class: 0,
         }
     }
 }
 
-fn hello_for(role: Role, actor_id: usize, d: &ModelDims) -> frame::Hello {
+fn hello_for(role: Role, actor_id: usize, d: &ModelDims, class: u8) -> frame::Hello {
     frame::Hello {
         role,
         actor_id: actor_id as u32,
@@ -94,6 +99,7 @@ fn hello_for(role: Role, actor_id: usize, d: &ModelDims) -> frame::Hello {
         // Fresh connections always sync from scratch; `establish`
         // adopts the server's generation from the ack for reconnects.
         generation: 0,
+        class,
     }
 }
 
@@ -217,7 +223,7 @@ impl RemoteClient {
         metrics: &Registry,
         shutdown: ShutdownToken,
     ) -> anyhow::Result<Self> {
-        let mut hello = hello_for(Role::Infer, actor, &dims);
+        let mut hello = hello_for(Role::Infer, actor, &dims, opts.class);
         let (writer, reader) = establish(addr, &mut hello, &opts, &shutdown)?;
         Ok(Self {
             addr: addr.clone(),
@@ -634,12 +640,15 @@ impl PolicyClient for RemoteClient {
 /// (`fleet.ingest_errors` + `fleet.client_reconnects`): sequences that
 /// were in flight on the dead socket are dropped — the replay is a
 /// distribution, not a ledger — and only an unrecoverable link signals
-/// worker shutdown.
+/// worker shutdown. Every sequence dropped this way is counted in
+/// `fleet.ingest_lost_sequences`, so a run can attribute exactly how
+/// much experience a dead link cost.
 pub struct RemoteIngest {
     state: Mutex<IngestState>,
     pool: Arc<SequencePool>,
     shutdown: ShutdownToken,
     errors: Counter,
+    lost: Counter,
 }
 
 struct IngestState {
@@ -662,7 +671,7 @@ impl RemoteIngest {
         metrics: &Registry,
         shutdown: ShutdownToken,
     ) -> anyhow::Result<Self> {
-        let mut hello = hello_for(Role::Ingest, 0, &dims);
+        let mut hello = hello_for(Role::Ingest, 0, &dims, 0);
         let (writer, _reader) = establish(addr, &mut hello, opts, &shutdown)?;
         Ok(Self {
             state: Mutex::new(IngestState {
@@ -679,6 +688,7 @@ impl RemoteIngest {
             pool: Arc::new(SequencePool::new()),
             shutdown,
             errors: metrics.counter("fleet.ingest_errors"),
+            lost: metrics.counter("fleet.ingest_lost_sequences"),
         })
     }
 
@@ -728,8 +738,13 @@ impl SequenceSink for RemoteIngest {
                     // below still recycles every slab.
                     st.failed = true;
                     self.errors.inc();
+                    self.lost.inc();
                     self.shutdown.signal();
                 }
+            } else {
+                // Link already declared dead: the sequence is dropped
+                // by design, but the loss is ledgered.
+                self.lost.inc();
             }
             self.pool.put(seq);
         }

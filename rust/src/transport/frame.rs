@@ -123,6 +123,12 @@ pub struct Hello {
     /// worker resyncs by re-handshaking at 0. Server acks always carry
     /// the current generation.
     pub generation: u32,
+    /// Priority class of an infer connection (a
+    /// `serve::PriorityClass` wire byte: 0 = actor, 1 = eval, 2 =
+    /// bulk; the server refuses anything else at the handshake). Rides
+    /// what was a zero pad byte of the PR 8 format, so generation-0
+    /// streams are byte-identical and old workers are `actor` class.
+    pub class: u8,
 }
 
 // ---------------------------------------------------------------------
@@ -166,7 +172,8 @@ pub fn encode_hello(buf: &mut Vec<u8>, hello: &Hello) {
         Role::Infer => 1,
         Role::Ingest => 2,
     });
-    buf.extend_from_slice(&[0u8; 3]); // padding
+    buf.push(hello.class);
+    buf.extend_from_slice(&[0u8; 2]); // padding
     for v in [
         hello.actor_id,
         hello.obs_len,
@@ -330,6 +337,7 @@ pub fn decode_hello(pl: &[u8]) -> anyhow::Result<Hello> {
         num_actions: u(16),
         seq_len: u(20),
         generation: u(24),
+        class: pl[1],
     })
 }
 
@@ -491,6 +499,7 @@ mod tests {
             num_actions: 4,
             seq_len: 30,
             generation: 2,
+            class: 1,
         };
         let mut buf = Vec::new();
         encode_hello(&mut buf, &hello);

@@ -39,7 +39,7 @@ pub mod server;
 
 pub use client::{RemoteClient, RemoteClientOpts, RemoteIngest};
 pub use liveness::{DeadlineEwma, Heartbeat, Liveness};
-pub use server::{FleetServer, FleetServerOpts};
+pub use server::{ConnRegistry, FleetServer, FleetServerOpts};
 
 use crate::exec::ShutdownToken;
 use std::io::{Read, Write};

@@ -57,9 +57,10 @@ use crate::exec::ShutdownToken;
 use crate::fault::{ConnFaults, FaultPlan, FrameFault};
 use crate::metrics::Registry;
 use crate::replay::{IngestQueue, SequenceSink};
+use crate::serve::{AdmissionDecision, PriorityClass, ServeGate, SHED_BREAKER, SHED_PAUSED};
 use crate::transport::client::{SHED_PREFIX, STALE_GEN_PREFIX};
 use std::io::Write;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -83,11 +84,16 @@ pub struct FleetServerOpts {
     /// Server incarnation tag echoed in `Hello` acks; a worker whose
     /// hello carries a different non-zero generation is refused with a
     /// `stale generation` error until it resyncs at 0. Bumped by
-    /// checkpoint resume so restarted servers shed stale workers.
+    /// checkpoint resume so restarted servers shed stale workers. This
+    /// is the *initial* value: the live cell ([`FleetServer::generation`])
+    /// moves on when a hot-reload bumps the fence under traffic.
     pub generation: u32,
     /// The armed fault schedule, if any (`None` = the bit-for-bit
     /// fault-free wire path).
     pub faults: Option<Arc<FaultPlan>>,
+    /// The serving gate (admission / pause / breaker), if the `[serve]`
+    /// control plane is on (`None` = the bit-for-bit PR 9 data path).
+    pub gate: Option<Arc<ServeGate>>,
 }
 
 impl Default for FleetServerOpts {
@@ -98,8 +104,50 @@ impl Default for FleetServerOpts {
             liveness_timeout_ms: 0,
             generation: 0,
             faults: None,
+            gate: None,
         }
     }
+}
+
+/// Cloneable registry of live infer data sockets. Checkpoint hot-reload
+/// severs them all after the generation bump: each worker's client takes
+/// its proven broken-socket path — reconnect, get refused with `stale
+/// generation`, resync at 0, adopt the new fence — exactly as after a
+/// checkpoint restore. Ingest sockets are *not* registered: severing a
+/// one-way ingest stream would lose in-flight sequences for nothing.
+#[derive(Clone, Default)]
+pub struct ConnRegistry {
+    inner: Arc<Mutex<Vec<(u64, Stream)>>>,
+}
+
+impl ConnRegistry {
+    fn register(&self, id: u64, stream: Stream) {
+        self.inner.lock().unwrap().push((id, stream));
+    }
+
+    fn unregister(&self, id: u64) {
+        self.inner.lock().unwrap().retain(|(i, _)| *i != id);
+    }
+
+    /// Shut both halves of every registered socket; returns how many.
+    /// Readers see EOF, clients reconnect and resync the generation.
+    pub fn sever_all(&self) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        for (_, s) in g.iter() {
+            s.shutdown_both();
+        }
+        let n = g.len();
+        g.clear();
+        n
+    }
+}
+
+/// Live control-plane state shared by every connection thread: the
+/// current generation fence and the registry of severable infer conns.
+#[derive(Clone)]
+struct ServerShared {
+    generation: Arc<AtomicU32>,
+    registry: ConnRegistry,
 }
 
 /// Record the first attributed fleet error; later errors only show up
@@ -118,6 +166,7 @@ pub struct FleetServer {
     conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
     uds_path: Option<std::path::PathBuf>,
     errors: Arc<Mutex<Option<String>>>,
+    shared: ServerShared,
 }
 
 impl FleetServer {
@@ -135,13 +184,20 @@ impl FleetServer {
         };
         let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let errors: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        let shared = ServerShared {
+            generation: Arc::new(AtomicU32::new(opts.generation)),
+            registry: ConnRegistry::default(),
+        };
         let conns2 = conns.clone();
         let errors2 = errors.clone();
+        let shared2 = shared.clone();
         let spawn_failures = metrics.counter("fleet.spawn_failures");
         let accept = match std::thread::Builder::new()
             .name("rlarch-fleet-accept".into())
             .spawn(move || {
-                accept_loop(listener, handle, sink, opts, metrics, shutdown, conns2, errors2)
+                accept_loop(
+                    listener, handle, sink, opts, metrics, shutdown, conns2, errors2, shared2,
+                )
             }) {
             Ok(h) => Some(h),
             Err(e) => {
@@ -157,6 +213,7 @@ impl FleetServer {
             conns,
             uds_path,
             errors,
+            shared,
         }
     }
 
@@ -164,6 +221,19 @@ impl FleetServer {
     /// before [`Self::join`] consumes the server; read it after).
     pub fn error_slot(&self) -> Arc<Mutex<Option<String>>> {
         self.errors.clone()
+    }
+
+    /// The live generation fence. Handshakes read it per connection;
+    /// hot-reload bumps it, then severs the data conns so every worker
+    /// resyncs behind the new fence. Clone before [`Self::join`].
+    pub fn generation_cell(&self) -> Arc<AtomicU32> {
+        self.shared.generation.clone()
+    }
+
+    /// The live infer-connection registry (hot-reload severs through
+    /// it). Clone before [`Self::join`] consumes the server.
+    pub fn conn_registry(&self) -> ConnRegistry {
+        self.shared.registry.clone()
     }
 
     /// Wait for the accept loop and every connection thread to finish
@@ -192,6 +262,7 @@ fn accept_loop(
     shutdown: ShutdownToken,
     conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
     errors: Arc<Mutex<Option<String>>>,
+    shared: ServerShared,
 ) {
     let accepts = metrics.counter("fleet.accepts");
     let disconnects = metrics.counter("fleet.disconnects");
@@ -219,10 +290,13 @@ fn accept_loop(
                 let metrics = metrics.clone();
                 let shutdown = shutdown.clone();
                 let errors2 = errors.clone();
+                let shared2 = shared.clone();
                 let spawned = std::thread::Builder::new()
                     .name("rlarch-fleet-conn".into())
                     .spawn(move || {
-                        serve_conn(stream, id, handle, sink, opts, metrics, shutdown, errors2)
+                        serve_conn(
+                            stream, id, handle, sink, opts, metrics, shutdown, errors2, shared2,
+                        )
                     });
                 match spawned {
                     Ok(h) => conns.lock().unwrap().push(h),
@@ -256,10 +330,13 @@ fn serve_conn(
     metrics: Registry,
     shutdown: ShutdownToken,
     errors: Arc<Mutex<Option<String>>>,
+    shared: ServerShared,
 ) {
     let connections = metrics.gauge("fleet.connections");
     connections.add(1.0);
-    let clean = serve_conn_inner(stream, conn_id, handle, sink, opts, &metrics, shutdown, &errors);
+    let clean = serve_conn_inner(
+        stream, conn_id, handle, sink, opts, &metrics, shutdown, &errors, &shared,
+    );
     connections.add(-1.0);
     if !clean {
         metrics.counter("fleet.disconnects").inc();
@@ -278,6 +355,7 @@ fn serve_conn_inner(
     metrics: &Registry,
     shutdown: ShutdownToken,
     errors: &Mutex<Option<String>>,
+    shared: &ServerShared,
 ) -> bool {
     let peer = stream.peer_desc();
     if stream.set_read_timeout(Some(READ_SLICE)).is_err()
@@ -345,11 +423,13 @@ fn serve_conn_inner(
     // Generation fence: a worker synced to a previous server
     // incarnation is refused until it re-handshakes fresh (generation
     // 0), so a restored checkpoint never mixes in stale in-flight work.
-    if hello.generation != 0 && hello.generation != opts.generation {
+    // Read the *live* cell: a hot-reload moves it under traffic.
+    let generation = shared.generation.load(Ordering::Acquire);
+    if hello.generation != 0 && hello.generation != generation {
         note_first(errors, || {
             format!(
                 "conn {conn_id} ({peer}): stale generation {} (server at {})",
-                hello.generation, opts.generation
+                hello.generation, generation
             )
         });
         frame::encode_reply_err(
@@ -359,12 +439,34 @@ fn serve_conn_inner(
             0,
             &format!(
                 "{STALE_GEN_PREFIX}: server is at generation {}, worker synced to {}",
-                opts.generation, hello.generation
+                generation, hello.generation
             ),
         );
         let _ = writer.write_all(&buf);
         return true; // refused up front: clean
     }
+    // Priority class rides a hello pad byte; an unknown byte is a
+    // protocol mismatch, refused up front like a dims mismatch.
+    let class = match PriorityClass::from_u8(hello.class) {
+        Some(c) => c,
+        None => {
+            note_first(errors, || {
+                format!(
+                    "conn {conn_id} ({peer}): unknown priority class byte {}",
+                    hello.class
+                )
+            });
+            frame::encode_reply_err(
+                &mut buf,
+                0,
+                0,
+                0,
+                &format!("unknown priority class byte {}", hello.class),
+            );
+            let _ = writer.write_all(&buf);
+            return true; // refused up front: clean
+        }
+    };
     // Ack with the server's dims and generation (echoing the worker's
     // actor id); the worker adopts the generation for reconnects.
     let ack = frame::Hello {
@@ -374,25 +476,37 @@ fn serve_conn_inner(
         hidden: d.hidden as u32,
         num_actions: d.num_actions as u32,
         seq_len: d.seq_len as u32,
-        generation: opts.generation,
+        generation,
+        class: hello.class,
     };
     frame::encode_hello(&mut buf, &ack);
     if writer.write_all(&buf).is_err() {
         return false;
     }
     match hello.role {
-        Role::Infer => serve_infer(InferConn {
-            reader,
-            writer,
-            conn_id,
-            peer,
-            actor: hello.actor_id as usize,
-            handle,
-            opts,
-            metrics,
-            shutdown,
-            errors,
-        }),
+        Role::Infer => {
+            // Register a severable handle so a hot-reload can force
+            // this worker through reconnect → resync; best-effort (a
+            // failed clone just means this conn rides out the reload).
+            if let Ok(s) = writer.try_clone() {
+                shared.registry.register(conn_id, s);
+            }
+            let clean = serve_infer(InferConn {
+                reader,
+                writer,
+                conn_id,
+                peer,
+                actor: hello.actor_id as usize,
+                class,
+                handle,
+                opts,
+                metrics,
+                shutdown,
+                errors,
+            });
+            shared.registry.unregister(conn_id);
+            clean
+        }
         Role::Ingest => serve_ingest(reader, conn_id, peer, sink, d, opts, metrics, shutdown, errors),
     }
 }
@@ -405,6 +519,7 @@ struct InferConn<'a> {
     conn_id: u64,
     peer: String,
     actor: usize,
+    class: PriorityClass,
     handle: BatcherHandle,
     opts: FleetServerOpts,
     metrics: &'a Registry,
@@ -421,6 +536,7 @@ fn serve_infer(conn: InferConn<'_>) -> bool {
         conn_id,
         peer,
         actor,
+        class,
         handle,
         opts,
         metrics,
@@ -435,6 +551,23 @@ fn serve_infer(conn: InferConn<'_>) -> bool {
     let bad_frames = metrics.counter("fleet.bad_frames");
     let reaped = metrics.counter("fleet.reaped");
     let decode_time = metrics.timer("fleet.decode_seconds");
+    let gate = opts.gate.clone();
+    // Gate shed taxonomy: admission-policy decisions per class, the
+    // reload-drain pause, and the open breaker each get their own
+    // counter, so "zero actor-class admission sheds" stays assertable
+    // even when a reload pause sheds uniformly. No gate, no `serve.*`
+    // metrics: the PR 9 registry is untouched.
+    let gate_counters = gate.as_ref().map(|_| {
+        (
+            metrics.counter("serve.breaker_sheds"),
+            metrics.counter("serve.paused_sheds"),
+            [
+                metrics.counter("serve.admission_sheds_actor"),
+                metrics.counter("serve.admission_sheds_eval"),
+                metrics.counter("serve.admission_sheds_bulk"),
+            ],
+        )
+    });
     // The reply route: the reader holds the root sender and clones it
     // into every queued item; the writer drains the receiver until all
     // senders are gone — i.e. the reader exited AND every outstanding
@@ -453,6 +586,7 @@ fn serve_infer(conn: InferConn<'_>) -> bool {
     let writer2 = writer.clone();
     let goodbye_ok2 = goodbye_ok.clone();
     let writer_rows_inflight = rows_inflight.clone();
+    let writer_gate = gate.clone();
     let tx_frames = metrics.counter("fleet.tx_frames");
     let tx_bytes = metrics.counter("fleet.tx_bytes");
     let shed_inflight = metrics.counter("fleet.shed_inflight_rows");
@@ -497,6 +631,20 @@ fn serve_infer(conn: InferConn<'_>) -> bool {
                     tx_bytes.add(wbuf.len() as u64);
                 }
                 writer_rows_inflight.fetch_sub(chunk.rows, Ordering::AcqRel);
+                if let Some(g) = writer_gate.as_ref() {
+                    // Every chunk releases its rows (shed chunks were
+                    // counted too, so the balance holds), and genuine
+                    // backend outcomes — never our own synthetic sheds
+                    // — feed the circuit breaker.
+                    g.end_rows(chunk.rows as u64);
+                    match &chunk.result {
+                        Ok(_) => g.breaker_on_success(),
+                        Err(msg) if !msg.starts_with(SHED_PREFIX) => {
+                            g.breaker_on_failure(Instant::now())
+                        }
+                        Err(_) => {}
+                    }
+                }
             }
             // Drain complete. Best-effort goodbye on a *clean* end only
             // (server shutdown or peer goodbye): it is the clean-drain
@@ -659,10 +807,46 @@ fn serve_infer(conn: InferConn<'_>) -> bool {
             });
             break; // garbage payload: kill the connection
         }
-        // Budget check. The count is incremented for shed submissions
-        // too — their synthetic error chunk flows through the writer,
-        // which decrements uniformly per chunk.
+        // Budget and gate checks. Both counts are incremented for shed
+        // submissions too — their synthetic error chunk flows through
+        // the writer, which decrements uniformly per chunk.
         let before = rows_inflight.fetch_add(rows, Ordering::AcqRel);
+        let queued = gate.as_ref().map_or(0, |g| g.begin_rows(rows as u64));
+        // Serving gate: breaker first (fail fast while the backend is
+        // down), then the reload-drain pause, then the admission
+        // policy's overload/queue/deadline ladder. Every refusal is a
+        // `shed:` reply the client already knows how to retry.
+        let gate_shed: Option<String> = match (gate.as_ref(), gate_counters.as_ref()) {
+            (Some(g), Some((breaker_sheds, paused_sheds, admission_sheds))) => {
+                let now = Instant::now();
+                if !g.breaker_allow(now) {
+                    breaker_sheds.inc();
+                    Some(SHED_BREAKER.to_string())
+                } else if !g.is_admitting() {
+                    paused_sheds.inc();
+                    Some(SHED_PAUSED.to_string())
+                } else {
+                    match g.decide(class, rows as u64, queued, now) {
+                        AdmissionDecision::Admit => None,
+                        AdmissionDecision::Shed(reason) => {
+                            admission_sheds[class.as_u8() as usize].inc();
+                            Some(reason.to_string())
+                        }
+                    }
+                }
+            }
+            _ => None,
+        };
+        if let Some(reason) = gate_shed {
+            pool.release(slab);
+            let _ = tx.send(ReplyChunk {
+                ticket: hd.ticket as usize,
+                slot0: 0,
+                rows,
+                result: Err(format!("{SHED_PREFIX} {reason}")),
+            });
+            continue;
+        }
         if before + rows > opts.max_inflight_rows {
             shed_rows.add(rows as u64);
             pool.release(slab);

@@ -7,7 +7,7 @@ use rlarch::replay::{ReplayConfig, SequenceReplay, SumTree};
 use rlarch::rl::{Sequence, SequenceBuilder, SequencePool, Transition};
 use rlarch::simarch::CpuModel;
 use rlarch::util::prng::Pcg32;
-use rlarch::util::quickcheck::{forall, prop_assert, prop_close};
+use rlarch::util::quickcheck::{forall, prop_assert, prop_assert_eq, prop_close};
 use std::sync::Arc;
 
 /// Verbatim replica of the seed `SequenceBuilder` (pre-arena): a
@@ -489,6 +489,142 @@ fn prop_epsilon_greedy_distribution_bounds() {
         // Greedy action frequency = (1 - eps) + eps/|A|, within noise.
         let expect = (1.0 - eps) + eps / 3.0;
         prop_close(greedy_hits, expect, 0.1)
+    });
+}
+
+#[test]
+fn prop_faults_spec_roundtrips_and_rejects_malformed() {
+    // `--faults` spec parsing (DESIGN.md §15/§16): a generated spec
+    // over every key parses back to exactly the values it encodes
+    // (whitespace-tolerant), and malformed input is rejected with the
+    // offending token named — never a panic.
+    use rlarch::config::FaultsConfig;
+    forall(120, |g| {
+        let expect = FaultsConfig {
+            seed: g.u64(0..1 << 50), // f64-exact: the spec parses as f64
+            drop_rate: g.f64(0.0..1.0),
+            delay_rate: g.f64(0.0..1.0),
+            delay_ms: g.u64(0..10_000),
+            truncate_rate: g.f64(0.0..1.0),
+            corrupt_rate: g.f64(0.0..1.0),
+            kill_rate: g.f64(0.0..1.0),
+            stall_rate: g.f64(0.0..1.0),
+            stall_ms: g.u64(0..10_000),
+            panic_actor: g.i64(-1..8), // -1 = disabled
+            panic_at_step: g.u64(1..100),
+        };
+        let kvs = [
+            ("seed", expect.seed.to_string()),
+            ("drop_rate", expect.drop_rate.to_string()),
+            ("delay_rate", expect.delay_rate.to_string()),
+            ("delay_ms", expect.delay_ms.to_string()),
+            ("truncate_rate", expect.truncate_rate.to_string()),
+            ("corrupt_rate", expect.corrupt_rate.to_string()),
+            ("kill_rate", expect.kill_rate.to_string()),
+            ("stall_rate", expect.stall_rate.to_string()),
+            ("stall_ms", expect.stall_ms.to_string()),
+            ("panic_actor", expect.panic_actor.to_string()),
+            ("panic_at_step", expect.panic_at_step.to_string()),
+        ];
+        let pad = if g.chance(0.5) { " " } else { "" };
+        let spec = kvs
+            .iter()
+            .map(|(k, v)| format!("{pad}{k}{pad}={pad}{v}{pad}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        let cfg =
+            FaultsConfig::from_spec(&spec).map_err(|e| e.to_string())?;
+        prop_assert_eq(cfg, expect)?;
+
+        // Malformed specs name the offending token. The junk alphabet
+        // holds no `=`, no digits, and no valid key.
+        let junk: String = (0..g.usize(1..7))
+            .map(|_| *g.pick(&['x', 'q', 'Z', '#', '~', '@']))
+            .collect();
+        let e = FaultsConfig::from_spec(&junk).unwrap_err().to_string();
+        prop_assert(
+            e.contains("want key=value") && e.contains(&junk),
+            &format!("missing `=` diagnosed: {e}"),
+        )?;
+        let e = FaultsConfig::from_spec(&format!("drop_rate={junk}"))
+            .unwrap_err()
+            .to_string();
+        prop_assert(
+            e.contains("bad number"),
+            &format!("bad number diagnosed: {e}"),
+        )?;
+        let e = FaultsConfig::from_spec(&format!("{junk}=1"))
+            .unwrap_err()
+            .to_string();
+        prop_assert(
+            e.contains("unknown faults spec key") && e.contains(&junk),
+            &format!("unknown key named: {e}"),
+        )?;
+        let e = FaultsConfig::from_spec("drop_rate=1.5")
+            .unwrap_err()
+            .to_string();
+        prop_assert(e.contains("[0, 1]"), &format!("range enforced: {e}"))
+    });
+}
+
+#[test]
+fn prop_control_parse_line_never_panics_and_errors_name_tokens() {
+    // The serve control-socket parser (DESIGN.md §16): arbitrary junk
+    // lines never panic and always name the offending token; every
+    // well-formed command round-trips, tolerates padding, and rejects
+    // trailing tokens by name.
+    use rlarch::serve::control::{parse_line, Command};
+    const JUNK: &[char] = &[
+        'a', 'h', 'l', 't', 'x', '0', '7', '-', '_', '/', '.', '#', '!',
+    ];
+    const KNOWN: [&str; 5] = ["health", "ready", "stats", "shutdown", "reload"];
+    forall(250, |g| {
+        let words: Vec<String> = (0..g.usize(0..4))
+            .map(|_| (0..g.usize(1..9)).map(|_| *g.pick(JUNK)).collect())
+            .collect();
+        let line = words.join(" ");
+        match parse_line(&line) {
+            Err(e) => match words.first() {
+                None => prop_assert(e == "empty command", &e)?,
+                Some(head) if !KNOWN.contains(&head.as_str()) => {
+                    prop_assert(
+                        e.contains(head.as_str()),
+                        &format!("error `{e}` must name `{head}`"),
+                    )?;
+                }
+                Some(_) => {} // known head, argument error
+            },
+            Ok(_) => prop_assert(
+                KNOWN.contains(&words[0].as_str()),
+                &format!("garbage `{line}` must not parse"),
+            )?,
+        }
+
+        let dir = format!("/tmp/ck{}", g.usize(0..100));
+        let cases = [
+            ("health".to_string(), Command::Health),
+            ("ready".to_string(), Command::Ready),
+            ("stats".to_string(), Command::Stats),
+            ("shutdown".to_string(), Command::Shutdown),
+            (format!("reload {dir}"), Command::Reload(dir.clone())),
+        ];
+        for (line, want) in &cases {
+            prop_assert(
+                parse_line(line).as_ref() == Ok(want),
+                &format!("`{line}` must parse"),
+            )?;
+            prop_assert(
+                parse_line(&format!("  {line}  ")).as_ref() == Ok(want),
+                "whitespace-padded command must parse",
+            )?;
+            let e = parse_line(&format!("{line} bogus")).unwrap_err();
+            prop_assert(
+                e.contains("bogus"),
+                &format!("trailing-token error must name it: {e}"),
+            )?;
+        }
+        let e = parse_line("reload").unwrap_err();
+        prop_assert(e.contains("reload <dir>"), &e)
     });
 }
 
